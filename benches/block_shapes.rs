@@ -1,0 +1,50 @@
+//! Perf-pass A/B: L1 tiling variants of the same hashed config
+//! (emitted by `python -m compile.perf_variants`). Measures train-step
+//! and predict latency per BlockSpec choice.
+//!
+//!     cargo bench --bench block_shapes
+
+use hashednets::data::{generate, Kind, Split};
+use hashednets::runtime::{Graph, Hyper, ModelState, Runtime};
+use hashednets::util::bench::Bench;
+
+fn main() {
+    println!("== block_shapes: L1 tiling A/B (hashnet 3l h100 c1/8) ==");
+    let rt = match Runtime::open("artifacts") {
+        Ok(rt) => rt,
+        Err(_) => return println!("artifacts missing"),
+    };
+    let ds = generate(Kind::Basic, Split::Train, 64, 1);
+    let mut b = Bench::new(3, 20);
+    let mut any = false;
+    for name in [
+        "hashnet_3l_h100_o10_c1-8_b64x128",
+        "hashnet_3l_h100_o10_c1-8_b128x256",
+        "hashnet_3l_h100_o10_c1-8_b128x785",
+        "hashnet_3l_h100_o10_c1-8_b256x256",
+        // wide-layer variants (785->800 virtual) where tiling actually binds
+        "hashnet_3l_b50_o10_x16_b128x256",
+        "hashnet_3l_b50_o10_x16_b256x256",
+        "hashnet_3l_b50_o10_x16_b512x785",
+    ] {
+        let Some(spec) = rt.manifest.get(name).cloned() else { continue };
+        any = true;
+        let mut state = ModelState::init(&spec, 1);
+        let train = rt.load(name, Graph::Train).unwrap();
+        let predict = rt.load(name, Graph::Predict).unwrap();
+        let (x, y) = ds.gather_batch(&(0..50u32).collect::<Vec<_>>(), spec.batch);
+        let mut seed = 0u32;
+        b.run(&format!("train {name}"), || {
+            seed += 1;
+            std::hint::black_box(
+                train.train_step(&mut state, &x, &y, None, &Hyper::default(), seed).unwrap(),
+            );
+        });
+        b.run(&format!("pred  {name}"), || {
+            std::hint::black_box(predict.predict(&state, &x).unwrap());
+        });
+    }
+    if !any {
+        println!("variants missing — run `cd python && python -m compile.perf_variants`");
+    }
+}

@@ -1,0 +1,53 @@
+//! Systems-cost side of Figures 2–3: how train-step latency, inference
+//! throughput and storage scale across the compression sweep for
+//! HashNet vs. the equivalent-size NN (the two series whose *accuracy*
+//! crossover the figures show; regenerate that side with
+//! `hashednets repro --experiment fig2|fig3`).
+//!
+//!     cargo bench --bench fig_compression
+
+use hashednets::data::{generate, Kind, Split};
+use hashednets::runtime::{Graph, Hyper, ModelState, Runtime};
+use hashednets::util::bench::Bench;
+
+fn main() {
+    println!("== fig_compression: cost vs compression factor ==");
+    let rt = match Runtime::open("artifacts") {
+        Ok(rt) => rt,
+        Err(_) => {
+            println!("artifacts missing — run `make artifacts` first");
+            return;
+        }
+    };
+    let ds = generate(Kind::Basic, Split::Train, 64, 1);
+    let mut b = Bench::new(2, 10);
+    println!(
+        "{:<10} {:>14} {:>14} {:>12} {:>12}",
+        "compress", "hashnet step", "nn step", "hash B", "nn B"
+    );
+    for comp in ["1-1", "1-2", "1-4", "1-8", "1-16", "1-32", "1-64"] {
+        let mut cells: Vec<String> = vec![format!("{comp:<10}")];
+        let mut bytes = Vec::new();
+        for method in ["hashnet", "nn"] {
+            let name = format!("{method}_3l_h100_o10_c{comp}");
+            let Some(spec) = rt.manifest.get(&name).cloned() else { continue };
+            let mut state = ModelState::init(&spec, 1);
+            let train = rt.load(&name, Graph::Train).unwrap();
+            let (x, y) = ds.gather_batch(&(0..50u32).collect::<Vec<_>>(), spec.batch);
+            let mut seed = 0u32;
+            let hyper = Hyper::default();
+            let s = b.run(&format!("train_step {name}"), || {
+                seed += 1;
+                std::hint::black_box(
+                    train.train_step(&mut state, &x, &y, None, &hyper, seed).unwrap(),
+                );
+            });
+            cells.push(format!("{:>12.2}ms", s.mean_ns / 1e6));
+            bytes.push(4 * spec.stored_params);
+        }
+        for by in bytes {
+            cells.push(format!("{by:>12}"));
+        }
+        println!("{}", cells.join(" "));
+    }
+}

@@ -1,0 +1,54 @@
+//! Systems-cost side of Figure 4: compute cost of "virtual inflation".
+//! Storage is constant across the row — the whole point — while the
+//! FLOPs (and so train-step latency) grow with the virtual width.
+//! Accuracy side: `hashednets repro --experiment fig4`.
+//!
+//!     cargo bench --bench fig_expansion
+
+use hashednets::data::{generate, Kind, Split};
+use hashednets::runtime::{Graph, Hyper, ModelState, Runtime};
+use hashednets::util::bench::Bench;
+
+fn main() {
+    println!("== fig_expansion: cost vs expansion factor (storage fixed) ==");
+    let rt = match Runtime::open("artifacts") {
+        Ok(rt) => rt,
+        Err(_) => {
+            println!("artifacts missing — run `make artifacts` first");
+            return;
+        }
+    };
+    let ds = generate(Kind::Basic, Split::Train, 64, 1);
+    let mut b = Bench::new(2, 10);
+    println!(
+        "{:>5} {:>9} {:>9} {:>14} {:>14}",
+        "x", "virtual", "stored", "train_step", "predict"
+    );
+    for factor in [1usize, 2, 4, 8, 16] {
+        let name = format!("hashnet_3l_b50_o10_x{factor}");
+        let Some(spec) = rt.manifest.get(&name).cloned() else { continue };
+        let mut state = ModelState::init(&spec, 1);
+        let train = rt.load(&name, Graph::Train).unwrap();
+        let predict = rt.load(&name, Graph::Predict).unwrap();
+        let (x, y) = ds.gather_batch(&(0..50u32).collect::<Vec<_>>(), spec.batch);
+        let mut seed = 0u32;
+        let hyper = Hyper::default();
+        let st = b.run(&format!("train_step {name}"), || {
+            seed += 1;
+            std::hint::black_box(
+                train.train_step(&mut state, &x, &y, None, &hyper, seed).unwrap(),
+            );
+        });
+        let sp = b.run(&format!("predict    {name}"), || {
+            std::hint::black_box(predict.predict(&state, &x).unwrap());
+        });
+        println!(
+            "{:>5} {:>9} {:>9} {:>12.2}ms {:>12.2}ms",
+            factor,
+            spec.virtual_params,
+            spec.stored_params,
+            st.mean_ns / 1e6,
+            sp.mean_ns / 1e6
+        );
+    }
+}

@@ -1,0 +1,48 @@
+//! Microbench: xxh32 and virtual-matrix decompression throughput — the
+//! scalar cost floor under every hashed layer (L3 native path).
+//!
+//!     cargo bench --bench hash_throughput
+
+use hashednets::hash::{bucket_sign, layer_seeds, xxh32_bytes, xxh32_u32, DEFAULT_SEED_BASE};
+use hashednets::util::bench::Bench;
+
+fn main() {
+    println!("== hash_throughput ==");
+    let mut b = Bench::new(3, 30);
+
+    // 4-byte key path (the virtual-matrix hot path)
+    let n_keys = 1_000_000u32;
+    b.items_per_iter = Some(n_keys as f64);
+    b.run("xxh32_u32 x 1M keys", || {
+        let mut acc = 0u32;
+        for k in 0..n_keys {
+            acc = acc.wrapping_add(xxh32_u32(k, 0x9E37_79B9));
+        }
+        std::hint::black_box(acc);
+    });
+
+    // bucket + sign (two hashes + mod)
+    let (s_h, s_xi) = layer_seeds(0, DEFAULT_SEED_BASE);
+    b.items_per_iter = Some(n_keys as f64);
+    b.run("bucket_sign x 1M cells (K=9813)", || {
+        let mut acc = 0u32;
+        let mut sgn = 0.0f32;
+        for c in 0..n_keys {
+            let (bkt, sg) = bucket_sign(c / 785, c % 785, 785, 9813, s_h, s_xi);
+            acc = acc.wrapping_add(bkt);
+            sgn += sg;
+        }
+        std::hint::black_box((acc, sgn));
+    });
+
+    // long-input path (spec-complete stripes)
+    let blob = vec![0xA5u8; 1 << 20];
+    b.items_per_iter = Some((1 << 20) as f64);
+    let s = b.run("xxh32 bytes x 1MiB", || {
+        std::hint::black_box(xxh32_bytes(&blob, 7));
+    });
+    println!(
+        "   -> {:.2} GB/s on the byte path",
+        s.throughput.unwrap_or(0.0) / 1e9
+    );
+}

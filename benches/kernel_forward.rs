@@ -1,0 +1,64 @@
+//! L1 hot-path bench: the hashed forward pass at the paper's layer
+//! shape (784→1000 virtual, varying budget), three implementations:
+//!
+//!   * AOT artifact (Pallas decompress-on-the-fly matmul via PJRT)
+//!   * native Rust engine (id-cache gather loop)
+//!   * dense matmul of the materialized V (the memory-unconstrained
+//!     roofline reference)
+//!
+//!     cargo bench --bench kernel_forward
+
+use hashednets::coordinator::native;
+use hashednets::data::{generate, Kind, Split};
+use hashednets::nn::{Layer, LayerKind};
+use hashednets::runtime::{Graph, ModelState, Runtime};
+use hashednets::util::bench::Bench;
+use hashednets::util::rng::Pcg32;
+
+fn main() {
+    println!("== kernel_forward (batch 50) ==");
+    let mut b = Bench::new(2, 15);
+    let ds = generate(Kind::Basic, Split::Test, 50, 1);
+
+    // --- artifact path at two budgets --------------------------------
+    if let Ok(rt) = Runtime::open("artifacts") {
+        for name in ["hashnet_3l_h100_o10_c1-8", "hashnet_3l_h100_o10_c1-64"] {
+            if rt.manifest.get(name).is_none() {
+                continue;
+            }
+            let spec = rt.manifest.get(name).unwrap().clone();
+            let state = ModelState::init(&spec, 1);
+            let exe = rt.load(name, Graph::Predict).unwrap();
+            b.items_per_iter = Some(50.0);
+            b.run(&format!("artifact predict {name}"), || {
+                std::hint::black_box(exe.predict(&state, &ds.images).unwrap());
+            });
+            // native twin on identical params
+            let mut net = native::network_from_spec(&spec);
+            native::load_params(&mut net, &spec, &state);
+            net.predict(&ds.images); // build id caches outside the timer
+            b.run(&format!("native  predict {name}"), || {
+                std::hint::black_box(net.predict(&ds.images));
+            });
+        }
+    } else {
+        println!("(artifacts missing — run `make artifacts` for the PJRT rows)");
+    }
+
+    // --- single hashed layer vs dense roofline at paper width ---------
+    let (m, n) = (784usize, 1000usize);
+    let k = (m + 1) * n / 8;
+    let mut rng = Pcg32::new(3, 3);
+    let mut layer = Layer::new(m, n, LayerKind::Hashed { k }, 0, hashednets::hash::DEFAULT_SEED_BASE);
+    layer.init(&mut rng);
+    let x = hashednets::tensor::Matrix::from_fn(50, m, |_, _| rng.normal());
+    layer.forward(&x); // warm the id cache
+    b.items_per_iter = Some(50.0);
+    b.run("native hashed layer 784->1000 (K=98k)", || {
+        std::hint::black_box(layer.forward(&x));
+    });
+    let v = layer.virtual_matrix();
+    b.run("dense  matmul same shape (roofline ref)", || {
+        std::hint::black_box(x.augment_ones().matmul_nt(&v));
+    });
+}

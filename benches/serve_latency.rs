@@ -1,0 +1,60 @@
+//! Serving bench: request latency and throughput through the dynamic
+//! batcher + PJRT predict path, at several concurrency levels — the
+//! deployment cost story behind the paper's mobile-inference motivation.
+//!
+//!     cargo bench --bench serve_latency
+
+use hashednets::data::{generate, Kind, Split};
+use hashednets::serve::{serve, Client, ServeOptions};
+use std::time::{Duration, Instant};
+
+fn main() {
+    println!("== serve_latency (hashnet_3l_h100_o10_c1-8) ==");
+    if hashednets::runtime::Runtime::open("artifacts").is_err() {
+        println!("artifacts missing — run `make artifacts` first");
+        return;
+    }
+    let addr = "127.0.0.1:47955";
+    let opts = ServeOptions {
+        artifacts_dir: "artifacts".into(),
+        artifact: "hashnet_3l_h100_o10_c1-8".into(),
+        addr: addr.into(),
+        max_wait: Duration::from_micros(500),
+        ..Default::default()
+    };
+    let server = std::thread::spawn(move || serve(opts));
+    std::thread::sleep(Duration::from_millis(1500));
+    let ds = generate(Kind::Basic, Split::Test, 64, 2);
+
+    for n_clients in [1usize, 4, 16] {
+        let reqs_per_client = 40;
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for c in 0..n_clients {
+            let addr = addr.to_string();
+            let rows: Vec<Vec<f32>> =
+                (0..reqs_per_client).map(|i| ds.images.row((c + i) % 64).to_vec()).collect();
+            handles.push(std::thread::spawn(move || -> Vec<u64> {
+                let mut client = Client::connect(&addr).expect("connect");
+                rows.iter()
+                    .map(|r| client.classify(r).expect("classify").2)
+                    .collect()
+            }));
+        }
+        let mut lat: Vec<u64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+        lat.sort_unstable();
+        let total = (n_clients * reqs_per_client) as f64;
+        let wall = t0.elapsed().as_secs_f64();
+        println!(
+            "{:>3} clients: {:>7.0} req/s   p50 {:>6} µs   p95 {:>6} µs   p99 {:>6} µs",
+            n_clients,
+            total / wall,
+            lat[lat.len() / 2],
+            lat[lat.len() * 95 / 100],
+            lat[(lat.len() * 99 / 100).min(lat.len() - 1)],
+        );
+    }
+    let mut c = Client::connect(addr).unwrap();
+    c.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}

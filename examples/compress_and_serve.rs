@@ -1,0 +1,125 @@
+//! Deployment workflow the paper's introduction motivates: a full dense
+//! model is trained server-side, compressed to a memory budget with the
+//! hashing trick, fine-tuned briefly, then served on a batched TCP
+//! endpoint whose resident model is the *compressed* parameter vector.
+//!
+//!     make artifacts && cargo run --release --example compress_and_serve
+//!
+//! Steps:
+//!   1. train dense 784-100-10 (`nn` at compression 1) — the "cloud" model
+//!   2. bucket-average its weights into the hashnet 1/8 layout (post-hoc
+//!      compression, `compress::compress_dense`)
+//!   3. measure error: dense / compressed / compressed+fine-tuned
+//!   4. serve the fine-tuned compressed model; classify live requests
+
+use anyhow::Result;
+use hashednets::compress;
+use hashednets::coordinator::{native, trainer};
+use hashednets::data::{generate, Kind, Split};
+use hashednets::nn::TrainHyper;
+use hashednets::runtime::{ModelState, Runtime};
+use hashednets::serve::{serve, Client, ServeOptions};
+use hashednets::tensor::Matrix;
+use hashednets::util::rng::Pcg32;
+
+const DENSE: &str = "nn_3l_h100_o10_c1-1";
+const HASHED: &str = "hashnet_3l_h100_o10_c1-8";
+
+fn main() -> Result<()> {
+    let rt = Runtime::open("artifacts")?;
+    let train = generate(Kind::Basic, Split::Train, 3000, 7);
+    let test = generate(Kind::Basic, Split::Test, 2000, 7);
+
+    // 1. dense teacher ---------------------------------------------------
+    println!("[1/4] training dense model ({DENSE})...");
+    let cfg = trainer::TrainConfig {
+        artifact: DENSE.into(),
+        dataset: Kind::Basic,
+        n_train: 3000,
+        n_test: 2000,
+        epochs: 10,
+        seed: 7,
+        ..Default::default()
+    };
+    let dense = trainer::run_with_data(&rt, &cfg, &train, Some(&test), None)?;
+    println!(
+        "      dense test error {:.2}% ({} params)",
+        dense.test_error * 100.0,
+        dense.stored_params
+    );
+
+    // 2. post-hoc compression -------------------------------------------
+    println!("[2/4] compressing 8x with the hashing trick...");
+    let dspec = rt.manifest.get(DENSE).unwrap().clone();
+    let hspec = rt.manifest.get(HASHED).unwrap().clone();
+    let mut dnet = native::network_from_spec(&dspec);
+    native::load_params(&mut dnet, &dspec, &dense.state);
+    let mut hstate = ModelState::init(&hspec, 0);
+    for (l, layer) in dnet.layers.iter_mut().enumerate() {
+        let v = layer.virtual_matrix(); // dense W (n×m)
+        let nm = layer.n * layer.m;
+        let bias = layer.params[nm..].to_vec();
+        let mut vb = Matrix::zeros(layer.n, layer.m + 1);
+        for i in 0..layer.n {
+            vb.row_mut(i)[..layer.m].copy_from_slice(v.row(i));
+            vb.row_mut(i)[layer.m] = bias[i];
+        }
+        let k = hspec.budgets[l];
+        let err = compress::reconstruction_error(&vb, k, l as u32, hspec.seed_base);
+        hstate.params[l] = compress::compress_dense(&vb, k, l as u32, hspec.seed_base);
+        println!("      layer {l}: {} → {k} weights (recon err {err:.3})", vb.data.len());
+    }
+    let e_comp = trainer::evaluate(&rt, HASHED, &hstate, &test)?;
+    println!("      compressed (no fine-tune) test error {:.2}%", e_comp * 100.0);
+
+    // 3. brief fine-tune in the native engine ----------------------------
+    println!("[3/4] fine-tuning the compressed model (3 epochs, native engine)...");
+    let mut hnet = native::network_from_spec(&hspec);
+    native::load_params(&mut hnet, &hspec, &hstate);
+    let hyper = TrainHyper { lr: 0.02, keep_prob: 1.0, ..Default::default() };
+    let mut rng = Pcg32::new(17, 0);
+    hnet.fit(&train.images, &train.labels, 50, 3, &hyper, None, &mut rng);
+    native::store_params(&hnet, &hspec, &mut hstate);
+    let e_ft = trainer::evaluate(&rt, HASHED, &hstate, &test)?;
+    println!("      fine-tuned test error {:.2}%", e_ft * 100.0);
+    println!(
+        "      summary: dense {:.2}% | 8x-compressed {:.2}% | +fine-tune {:.2}%",
+        dense.test_error * 100.0,
+        e_comp * 100.0,
+        e_ft * 100.0
+    );
+
+    // 4. serve it ---------------------------------------------------------
+    println!("[4/4] serving the compressed model on 127.0.0.1:47912...");
+    let ckpt = std::env::temp_dir().join("hn_compressed.ckpt");
+    hstate.save(&ckpt)?;
+    let opts = ServeOptions {
+        artifacts_dir: "artifacts".into(),
+        artifact: HASHED.into(),
+        checkpoint: Some(ckpt.clone()),
+        addr: "127.0.0.1:47912".into(),
+        ..Default::default()
+    };
+    let server = std::thread::spawn(move || serve(opts));
+    std::thread::sleep(std::time::Duration::from_millis(1500));
+    let mut client = Client::connect("127.0.0.1:47912")?;
+    let mut correct = 0;
+    let n_req = 64;
+    for i in 0..n_req {
+        let (class, _probs, latency_us) = client.classify(test.images.row(i))?;
+        if class == test.labels[i] as usize {
+            correct += 1;
+        }
+        if i < 3 {
+            println!(
+                "      request {i}: true {}, predicted {class} ({latency_us} µs)",
+                test.labels[i]
+            );
+        }
+    }
+    println!("      live accuracy {}/{} over TCP", correct, n_req);
+    client.shutdown()?;
+    server.join().unwrap()?;
+    std::fs::remove_file(&ckpt).ok();
+    Ok(())
+}

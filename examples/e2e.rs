@@ -1,0 +1,94 @@
+//! End-to-end driver: exercises the full three-layer system on a real
+//! small workload and logs the loss curves (recorded in EXPERIMENTS.md).
+//!
+//!     make artifacts && cargo run --release --example e2e
+//!
+//! Pipeline per method (HashNet, HashNet_DK, NN, DK, RER, LRD):
+//!   synthetic ROT corpus → AOT train_step artifact (Pallas hashed
+//!   matmul inside) driven by the Rust coordinator → validation-selected
+//!   checkpoint → test error + throughput. A teacher is trained first
+//!   for the dark-knowledge runs. Loss curves land in
+//!   `results/e2e_loss.csv`, the summary table in `results/e2e.md`.
+
+use anyhow::Result;
+use hashednets::coordinator::metrics::Table;
+use hashednets::coordinator::repro::default_hyper;
+use hashednets::coordinator::trainer::{self, TrainConfig};
+use hashednets::data::{generate, Kind, Split};
+use hashednets::runtime::Runtime;
+
+const DATASET: Kind = Kind::Rot;
+const N_TRAIN: usize = 4000;
+const N_TEST: usize = 3000;
+const EPOCHS: usize = 15;
+const COMPRESSION: &str = "1-8";
+
+fn main() -> Result<()> {
+    let t0 = std::time::Instant::now();
+    let rt = Runtime::open("artifacts")?;
+    let train = generate(DATASET, Split::Train, N_TRAIN, 0x5EED);
+    println!(
+        "workload: {} ({} train / {} test), 3-layer nets, budget {COMPRESSION}",
+        DATASET.name(),
+        N_TRAIN,
+        N_TEST
+    );
+
+    // teacher for the DK runs
+    println!("[teacher] nn_3l_h100_o10_c1-1 ...");
+    let teacher = "nn_3l_h100_o10_c1-1";
+    let tstate = trainer::train_teacher(&rt, teacher, &train, EPOCHS, 0x5EED)?;
+
+    let mut table = Table::new(
+        &format!("e2e: {} @ {} (3-layer)", DATASET.name(), COMPRESSION),
+        "method",
+        &["test error %", "stored", "virtual", "steps/s", "wall s"],
+    );
+    let mut loss_csv = String::from("method,epoch,loss\n");
+
+    for method in ["rer", "lrd", "nn", "dk", "hashnet", "hashnet_dk"] {
+        let artifact = format!("{method}_3l_h100_o10_c{COMPRESSION}");
+        let hyper = default_hyper(method);
+        let needs_teacher = matches!(method, "dk" | "hashnet_dk");
+        let soft = if needs_teacher {
+            Some(trainer::soft_targets(&rt, teacher, &tstate, &train.images, hyper.temp)?)
+        } else {
+            None
+        };
+        let cfg = TrainConfig {
+            artifact: artifact.clone(),
+            dataset: DATASET,
+            n_train: N_TRAIN,
+            n_test: N_TEST,
+            epochs: EPOCHS,
+            hyper,
+            seed: 0x5EED,
+            teacher: needs_teacher.then(|| teacher.to_string()),
+            patience: 0,
+        };
+        let res = trainer::run(&rt, &cfg, soft.as_ref())?;
+        println!(
+            "[{method:<10}] test {:.2}%  ({} stored, {:.0} steps/s, {:.1}s)",
+            res.test_error * 100.0,
+            res.stored_params,
+            res.steps_per_s,
+            res.wall_s
+        );
+        table.set_err(method, "test error %", res.test_error);
+        table.set(method, "stored", res.stored_params.to_string());
+        table.set(method, "virtual", res.virtual_params.to_string());
+        table.set(method, "steps/s", format!("{:.0}", res.steps_per_s));
+        table.set(method, "wall s", format!("{:.1}", res.wall_s));
+        for (e, l) in res.train_losses.iter().enumerate() {
+            loss_csv.push_str(&format!("{method},{e},{l}\n"));
+        }
+    }
+
+    std::fs::create_dir_all("results")?;
+    std::fs::write("results/e2e_loss.csv", loss_csv)?;
+    table.save(std::path::Path::new("results"), "e2e")?;
+    println!("\n{}", table.to_markdown());
+    println!("loss curves -> results/e2e_loss.csv");
+    println!("total wall time {:.1}s", t0.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,5 @@
+"""Build-time compile path: JAX/Pallas → HLO text artifacts.
+
+Never imported at runtime — the Rust coordinator consumes only
+``artifacts/*.hlo.txt`` + ``artifacts/manifest.json``.
+"""

@@ -1,0 +1,250 @@
+"""AOT pipeline: lower every experiment configuration to HLO text.
+
+Emits ``artifacts/<name>.<train|predict>.hlo.txt`` plus
+``artifacts/manifest.json`` describing each artifact's I/O signature, so
+the Rust coordinator can initialize parameters, marshal literals and run
+training/inference without ever importing Python.
+
+HLO **text** (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which xla_extension
+0.5.1 (the version the published ``xla`` crate binds) rejects; the text
+parser reassigns ids and round-trips cleanly.
+
+Config sets
+-----------
+* ``core``   — a handful of small configs for tests/quickstart/serving.
+* ``repro``  — the full experiment grid behind Figures 2–4 and Tables 1–2
+  (6 methods x {3,5} layers x 7 compression factors x {10,2} classes,
+  plus the Fig. 4 expansion sweep).  Scaled to this CPU testbed by
+  ``--hidden`` (default 100; pass 1000 for paper scale).
+
+Usage: ``python -m compile.aot --out-dir ../artifacts --set core,repro``
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from concurrent.futures import ProcessPoolExecutor
+from dataclasses import asdict
+from fractions import Fraction
+
+import jax
+
+from . import sizing
+from .model import NetSpec, example_args, make_predict, make_train_step
+
+METHODS = ["hashnet", "hashnet_dk", "nn", "dk", "rer", "lrd"]
+COMPRESSIONS = [
+    Fraction(1, 1), Fraction(1, 2), Fraction(1, 4), Fraction(1, 8),
+    Fraction(1, 16), Fraction(1, 32), Fraction(1, 64),
+]
+TABLE_COMPRESSIONS = [Fraction(1, 8), Fraction(1, 64)]
+EXPANSION_FACTORS = [1, 2, 4, 8, 16]
+N_IN = 784
+BATCH = 50
+EVAL_BATCH = 200
+
+
+def to_hlo_text(lowered) -> str:
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _cname(c: Fraction) -> str:
+    return f"{c.numerator}-{c.denominator}"
+
+
+def spec_for(method: str, depth: int, hidden: int, out: int, c: Fraction,
+             batch: int = BATCH) -> tuple[str, NetSpec, dict]:
+    """Resolve a (method, arch, budget) cell to a named NetSpec + metadata."""
+    full = sizing.layer_dims(depth, N_IN, hidden, out)
+    budgets = sizing.hashed_budgets(full, float(c))
+    meta = {
+        "depth": depth, "hidden": hidden, "out": out,
+        "compression": float(c), "compression_name": _cname(c),
+        "virtual_params": sizing.dense_params(full),
+    }
+    if method in ("nn", "dk"):
+        # equivalent-size dense baseline: shrink hidden width to budget
+        h_eq = (hidden if c == 1 else
+                sizing.equivalent_hidden_width(full, sum(budgets)))
+        dims = sizing.layer_dims(depth, N_IN, h_eq, out)
+        budgets_used = [(dims[l] + 1) * dims[l + 1] for l in range(len(dims) - 1)]
+        meta["hidden_equivalent"] = h_eq
+        spec = NetSpec(method=method, dims=tuple(dims), budgets=tuple(budgets_used),
+                       batch=batch)
+    else:
+        spec = NetSpec(method=method, dims=tuple(full), budgets=tuple(budgets),
+                       batch=batch)
+    name = f"{method}_{depth}l_h{hidden}_o{out}_c{_cname(c)}"
+    return name, spec, meta
+
+
+def expansion_spec_for(method: str, depth: int, base_hidden: int, out: int,
+                       factor: int, batch: int = BATCH):
+    """Fig. 4 cell: storage fixed to a base_hidden dense net, virtual
+    architecture inflated by `factor`."""
+    virt, ks = sizing.expansion_dims(depth, N_IN, base_hidden, out, factor)
+    if method in ("nn", "dk"):
+        dims = sizing.layer_dims(depth, N_IN, base_hidden, out)
+        spec = NetSpec(method=method, dims=tuple(dims),
+                       budgets=tuple((dims[l] + 1) * dims[l + 1]
+                                     for l in range(len(dims) - 1)),
+                       batch=batch)
+    else:
+        spec = NetSpec(method=method, dims=tuple(virt), budgets=tuple(ks), batch=batch)
+    meta = {
+        "depth": depth, "hidden": base_hidden * factor, "out": out,
+        "expansion": factor, "virtual_params": sizing.dense_params(virt),
+    }
+    name = f"{method}_{depth}l_b{base_hidden}_o{out}_x{factor}"
+    return name, spec, meta
+
+
+def config_sets(hidden: int, exp_base: int) -> dict[str, list]:
+    """All named configurations, grouped into artifact sets."""
+    core = []
+    for method in ("hashnet", "nn"):
+        core.append(spec_for(method, 3, hidden, 10, Fraction(1, 8)))
+    core.append(spec_for("hashnet", 3, 32, 10, Fraction(1, 4)))  # tiny, tests
+    core.append(spec_for("hashnet_dk", 3, 32, 10, Fraction(1, 4)))
+    core.append(spec_for("nn", 3, 32, 10, Fraction(1, 1)))  # tiny teacher
+
+    repro = []
+    for depth in (3, 5):
+        for method in METHODS:
+            for c in COMPRESSIONS:
+                repro.append(spec_for(method, depth, hidden, 10, c))
+            for c in TABLE_COMPRESSIONS:
+                repro.append(spec_for(method, depth, hidden, 2, c))
+        # teachers for DK (compression 1 dense) — nn_c1-1 already in grid
+        # for out=10; add the out=2 teacher:
+        repro.append(spec_for("nn", depth, hidden, 2, Fraction(1, 1)))
+        # Fig. 4 expansion sweep
+        for method in ("hashnet", "rer", "lrd"):
+            for f in EXPANSION_FACTORS:
+                repro.append(expansion_spec_for(method, depth, exp_base, 10, f))
+        repro.append(expansion_spec_for("nn", depth, exp_base, 10, 1))
+    return {"core": core, "repro": repro}
+
+
+def _input_names(spec: NetSpec, pspecs, kind: str) -> list[str]:
+    names = [p.name for p in pspecs]
+    if kind == "predict":
+        return names + ["x"]
+    names = names + [f"m_{p.name}" for p in pspecs] + ["x", "y"]
+    if spec.uses_soft_targets:
+        names.append("soft_targets")
+    names += ["seed", "lr", "momentum", "keep_prob"]
+    if spec.uses_soft_targets:
+        names += ["lam", "temp"]
+    return names
+
+
+def lower_one(task) -> dict:
+    """Lower one (name, spec, meta) config to its two HLO files.
+
+    Runs in a worker process; returns the manifest entry.
+    """
+    name, spec, meta, out_dir, force = task
+    entry = {
+        "name": name,
+        "method": spec.method,
+        "dims": list(spec.dims),
+        "budgets": list(spec.budgets),
+        "batch": spec.batch,
+        "seed_base": spec.seed_base,
+        "uses_soft_targets": spec.uses_soft_targets,
+        **meta,
+    }
+    pspecs, predict = make_predict(spec)
+    _, train = make_train_step(spec)
+    entry["params"] = [
+        {"name": p.name, "shape": list(p.shape), "init_std": p.init_std}
+        for p in pspecs
+    ]
+    # RER's tensor is dense-but-masked: its logical storage (kept edges,
+    # what the paper's size accounting counts) is the budget, not the
+    # raw tensor size.
+    entry["stored_params"] = (sum(spec.budgets) if spec.method == "rer"
+                              else sum(p.count for p in pspecs))
+    entry["raw_params"] = sum(p.count for p in pspecs)
+    entry["train_inputs"] = _input_names(spec, pspecs, "train")
+    entry["predict_inputs"] = _input_names(spec, pspecs, "predict")
+    entry["graphs"] = {}
+    for kind, fn in (("train", train), ("predict", predict)):
+        fname = f"{name}.{kind}.hlo.txt"
+        path = os.path.join(out_dir, fname)
+        entry["graphs"][kind] = fname
+        if not force and os.path.exists(path):
+            continue
+        args = example_args(spec, pspecs, kind)
+        text = to_hlo_text(jax.jit(fn).lower(*args))
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(text)
+        os.replace(tmp, path)
+    return entry
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--set", default="core", help="comma list: core,repro")
+    ap.add_argument("--hidden", type=int, default=100,
+                    help="hidden width for the repro grid (paper: 1000)")
+    ap.add_argument("--exp-base", type=int, default=50,
+                    help="Fig. 4 base hidden width (paper: 50)")
+    ap.add_argument("--jobs", type=int, default=max(1, (os.cpu_count() or 2) - 1))
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args(argv)
+
+    sets = config_sets(args.hidden, args.exp_base)
+    chosen: dict[str, tuple] = {}
+    for s in args.set.split(","):
+        for cfg in sets[s.strip()]:
+            chosen[cfg[0]] = cfg  # dedup by name
+    if args.list:
+        for n in sorted(chosen):
+            print(n)
+        return 0
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    tasks = [(n, spec, meta, args.out_dir, args.force)
+             for n, spec, meta in (chosen[k] for k in sorted(chosen))]
+
+    if args.jobs > 1 and len(tasks) > 1:
+        with ProcessPoolExecutor(max_workers=args.jobs) as ex:
+            entries = list(ex.map(lower_one, tasks))
+    else:
+        entries = [lower_one(t) for t in tasks]
+
+    # merge with any existing manifest (other sets emitted earlier)
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    merged: dict[str, dict] = {}
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            for e in json.load(f)["artifacts"]:
+                merged[e["name"]] = e
+    for e in entries:
+        merged[e["name"]] = e
+    with open(mpath, "w") as f:
+        json.dump(
+            {"version": 1, "n_in": N_IN, "eval_batch": EVAL_BATCH,
+             "artifacts": [merged[k] for k in sorted(merged)]},
+            f, indent=1)
+    print(f"wrote {len(entries)} configs -> {mpath} ({len(merged)} total)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

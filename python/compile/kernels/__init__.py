@@ -1,0 +1,3 @@
+"""Layer-1 Pallas kernels and their pure-jnp oracles."""
+
+from .hashed_matmul import make_hashed_matmul  # noqa: F401

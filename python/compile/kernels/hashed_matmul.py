@@ -1,0 +1,205 @@
+"""Layer-1 Pallas kernel: decompress-on-the-fly hashed matmul.
+
+The HashedNets hot-spot is ``z = a @ V.T`` where the virtual matrix
+``V_ij = xi(i,j) * w_{h(i,j)}`` (paper Eq. 7) is never materialized in
+HBM.  Each grid step
+
+  1. hashes a ``(bn, bm)`` tile of the global index grid with xxh32
+     (vector-unit integer ops),
+  2. gathers the shared weights ``w`` — which live wholly in VMEM —
+     and applies the sign hash, producing the tile of ``V`` in VMEM,
+  3. feeds an MXU-shaped ``a_tile @ V_tile.T`` accumulation.
+
+HBM traffic is therefore ``a + z + w`` — the *compressed* footprint.
+This is the TPU re-think of the paper's GPU "non-coalesced gather"
+worry (§7): the gather is VMEM-local and the contraction stays a plain
+matmul (DESIGN.md §Hardware-Adaptation).
+
+Backward is a ``jax.custom_vjp``:
+
+  * ``da = delta @ V``    — second Pallas kernel regenerating the same
+    tiles with the transposed contraction,
+  * ``dw_k = sum_{ij: h(i,j)=k} xi(i,j) a_j delta_i``  (paper Eq. 12)
+    — an XLA ``segment_sum`` over the hash buckets (scatter-add); the
+    MXU-friendly one-hot-matmul variant is discussed in DESIGN.md.
+
+Kernels are lowered with ``interpret=True``: CPU PJRT cannot execute
+Mosaic custom-calls, and interpret mode traces to plain HLO that XLA
+compiles like any other op.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..hashing import hash_grid, xxh32_u32
+
+
+def _cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclass(frozen=True)
+class HashedLayerSpec:
+    """Static configuration of one hashed layer (shapes + hash seeds)."""
+
+    M: int  # fan-in  (incl. bias column if the caller augments)
+    N: int  # fan-out
+    K: int  # number of real (shared) weights — the memory budget
+    seed_h: int  # bucket hash seed  (h^l)
+    seed_xi: int  # sign hash seed   (xi^l)
+    block_n: int = 128
+    block_m: int = 256
+    # ablation switch: drop the collision-debiasing sign factor xi(i,j)
+    # (paper 4.3) so V_ij = w_{h(i,j)} only
+    use_sign: bool = True
+
+    @property
+    def compression(self) -> float:
+        return self.K / float(self.M * self.N)
+
+
+def _tile_virtual(spec: HashedLayerSpec, w, n_idx, m_idx, bn: int, bm: int):
+    """Generate one (bn, bm) tile of V = sign * w[h] inside the kernel.
+
+    ``w`` is the full weight vector value (already loaded from VMEM).
+    Out-of-range (i >= N or j >= M) entries are zeroed so padded tiles
+    contribute nothing to the contraction.
+    """
+    i = (n_idx * bn + jax.lax.broadcasted_iota(jnp.uint32, (bn, bm), 0))
+    j = (m_idx * bm + jax.lax.broadcasted_iota(jnp.uint32, (bn, bm), 1))
+    keys = i * jnp.uint32(spec.M) + j
+    h = xxh32_u32(keys, spec.seed_h, xp=jnp)
+    ids = h % jnp.uint32(spec.K)
+    valid = (i < jnp.uint32(spec.N)) & (j < jnp.uint32(spec.M))
+    if spec.use_sign:
+        sign = jnp.float32(1.0) - jnp.float32(2.0) * (
+            xxh32_u32(keys, spec.seed_xi, xp=jnp) & jnp.uint32(1)
+        ).astype(jnp.float32)
+        tile = w[ids] * sign
+    else:
+        tile = w[ids]
+    return jnp.where(valid, tile, jnp.float32(0.0))
+
+
+def _fwd_kernel(a_ref, w_ref, o_ref, *, spec: HashedLayerSpec, bn: int, bm: int):
+    """o[B, bn] += a[B, bm] @ V_tile[bn, bm].T  (grid = (nN, nM))."""
+    m_idx = pl.program_id(1)
+
+    @pl.when(m_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    tile = _tile_virtual(spec, w_ref[...], pl.program_id(0), m_idx, bn, bm)
+    # Padded tail blocks contain uninitialized data; 0 * garbage (or NaN)
+    # would poison the accumulation, so mask the activation columns too.
+    j = m_idx * bm + jax.lax.broadcasted_iota(jnp.uint32, (1, bm), 1)
+    a = jnp.where(j < jnp.uint32(spec.M), a_ref[...].astype(jnp.float32), 0.0)
+    o_ref[...] += jax.lax.dot_general(
+        a, tile, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def _bwd_da_kernel(g_ref, w_ref, o_ref, *, spec: HashedLayerSpec, bn: int, bm: int):
+    """da[B, bm] += g[B, bn] @ V_tile[bn, bm]  (grid = (nM, nN))."""
+    n_idx = pl.program_id(1)
+
+    @pl.when(n_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    tile = _tile_virtual(spec, w_ref[...], n_idx, pl.program_id(0), bn, bm)
+    i = n_idx * bn + jax.lax.broadcasted_iota(jnp.uint32, (1, bn), 1)
+    g = jnp.where(i < jnp.uint32(spec.N), g_ref[...].astype(jnp.float32), 0.0)
+    o_ref[...] += jax.lax.dot_general(
+        g, tile, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def _pallas_fwd(spec: HashedLayerSpec, a, w, interpret: bool):
+    B, M = a.shape
+    assert M == spec.M, f"fan-in mismatch: a has {M}, spec has {spec.M}"
+    bn = min(spec.block_n, spec.N)
+    bm = min(spec.block_m, spec.M)
+    grid = (_cdiv(spec.N, bn), _cdiv(spec.M, bm))
+    return pl.pallas_call(
+        functools.partial(_fwd_kernel, spec=spec, bn=bn, bm=bm),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((B, bm), lambda n, m: (0, m)),
+            pl.BlockSpec((spec.K,), lambda n, m: (0,)),
+        ],
+        out_specs=pl.BlockSpec((B, bn), lambda n, m: (0, n)),
+        out_shape=jax.ShapeDtypeStruct((B, spec.N), jnp.float32),
+        interpret=interpret,
+    )(a, w)
+
+
+def _pallas_bwd_da(spec: HashedLayerSpec, g, w, interpret: bool):
+    B, N = g.shape
+    assert N == spec.N
+    bn = min(spec.block_n, spec.N)
+    bm = min(spec.block_m, spec.M)
+    grid = (_cdiv(spec.M, bm), _cdiv(spec.N, bn))
+    return pl.pallas_call(
+        functools.partial(_bwd_da_kernel, spec=spec, bn=bn, bm=bm),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((B, bn), lambda m, n: (0, n)),
+            pl.BlockSpec((spec.K,), lambda m, n: (0,)),
+        ],
+        out_specs=pl.BlockSpec((B, bm), lambda m, n: (0, m)),
+        out_shape=jax.ShapeDtypeStruct((B, spec.M), jnp.float32),
+        interpret=interpret,
+    )(g, w)
+
+
+def _dw_segment_sum(spec: HashedLayerSpec, a, g):
+    """dw via Eq. 12: bucket scatter-add of the (signed) outer product.
+
+    ``G = g.T @ a`` is the dense gradient of the virtual matrix
+    (dL/dV_ij = a_j * delta_i); dw_k sums G * xi over each hash bucket.
+    """
+    ids, signs = hash_grid(spec.M, spec.N, spec.K, spec.seed_h, spec.seed_xi, xp=jnp)
+    if not spec.use_sign:
+        signs = jnp.ones_like(signs)
+    G = jax.lax.dot_general(
+        g.astype(jnp.float32),
+        a.astype(jnp.float32),
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (N, M)
+    return jax.ops.segment_sum(
+        (G * signs).reshape(-1), ids.reshape(-1).astype(jnp.int32), num_segments=spec.K
+    )
+
+
+def make_hashed_matmul(spec: HashedLayerSpec, interpret: bool = True):
+    """Build the differentiable hashed matmul ``f(a[B,M], w[K]) -> z[B,N]``.
+
+    Forward and ``da`` run as Pallas kernels; ``dw`` is an XLA
+    segment-sum (see module docstring).  The returned function is
+    traceable/jittable and AOT-lowers into the same HLO module as the
+    surrounding model.
+    """
+
+    @jax.custom_vjp
+    def hashed_matmul(a, w):
+        return _pallas_fwd(spec, a, w, interpret)
+
+    def fwd(a, w):
+        return _pallas_fwd(spec, a, w, interpret), (a, w)
+
+    def bwd(res, g):
+        a, w = res
+        da = _pallas_bwd_da(spec, g, w, interpret)
+        dw = _dw_segment_sum(spec, a, g)
+        return da.astype(a.dtype), dw.astype(w.dtype)
+
+    hashed_matmul.defvjp(fwd, bwd)
+    return hashed_matmul

@@ -1,0 +1,46 @@
+"""Pure-jnp correctness oracle for the hashed layer (Eqs. 3–7 of the paper).
+
+The oracle materializes the full virtual matrix
+
+    V_ij = xi(i, j) * w_{h(i, j)}            (Eq. 7)
+
+and computes ``z = a @ V.T`` (Eq. 4).  It is differentiable by plain JAX
+autodiff, which gives us reference gradients for the custom-VJP Pallas
+path *and* doubles as the feature-hashing interpretation check (Eq. 5):
+``z_i = w^T phi_i(a)`` where ``[phi_i(a)]_k = sum_{j: h(i,j)=k} xi(i,j) a_j``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..hashing import hash_grid
+
+
+def virtual_matrix(w, M: int, N: int, K: int, seed_h: int, seed_xi: int):
+    """Decompress the virtual weight matrix V in R^{N x M} from w in R^K."""
+    ids, signs = hash_grid(M, N, K, seed_h, seed_xi, xp=jnp)
+    return w[ids] * signs
+
+
+def hashed_matmul_ref(a, w, N: int, K: int, seed_h: int, seed_xi: int):
+    """z[B, N] = a[B, M] @ V[N, M].T with hash-decompressed V (Eq. 4)."""
+    M = a.shape[-1]
+    V = virtual_matrix(w, M, N, K, seed_h, seed_xi)
+    return jnp.dot(a, V.T)
+
+
+def feature_hash_ref(a, w, N: int, K: int, seed_h: int, seed_xi: int):
+    """The feature-hashing interpretation (Eq. 5–6): z_i = w^T phi_i(a).
+
+    Mathematically identical to :func:`hashed_matmul_ref` (§4.3); kept as
+    an independent code path for the equivalence test.
+    """
+    M = a.shape[-1]
+    ids, signs = hash_grid(M, N, K, seed_h, seed_xi, xp=jnp)
+    onehot = (ids[..., None] == jnp.arange(K, dtype=jnp.uint32)[None, None, :]).astype(
+        a.dtype
+    )
+    # [phi_i(a)]_k = sum_j xi(i,j) a_j [h(i,j) = k]
+    phi = jnp.einsum("bj,ijk->bik", a, onehot * signs[..., None])
+    return jnp.einsum("bik,k->bi", phi, w)

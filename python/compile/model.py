@@ -1,0 +1,342 @@
+"""Layer-2: the paper's model family as build-time JAX.
+
+A small functional framework: a :class:`NetSpec` describes one
+(method × architecture × budget) configuration; :func:`build` turns it
+into ``(param_specs, apply_fn)``; :func:`make_train_step` /
+:func:`make_predict` wrap those into the exact functions that
+``aot.py`` lowers to HLO artifacts.
+
+Everything the training loop needs lives *inside* the artifact:
+
+  * forward pass (hashed / dense / masked / low-rank layers, ReLU),
+  * inverted dropout driven by a scalar step seed (threefry, stateless),
+  * softmax cross-entropy, optionally blended with dark-knowledge soft
+    targets (Hinton et al. 2014; Ba & Caruana 2014),
+  * backprop (JAX autodiff through the custom-VJP Pallas kernel),
+  * SGD-with-momentum parameter update.
+
+The Rust coordinator only marshals buffers and scalars.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .hashing import layer_seeds, xxh32_u32
+from .kernels.hashed_matmul import HashedLayerSpec, make_hashed_matmul
+from . import sizing
+
+Params = list[jax.Array]
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    """One stored parameter tensor: name, shape and init scale (He/Glorot
+    std the Rust side draws from its own PRNG)."""
+
+    name: str
+    shape: tuple[int, ...]
+    init_std: float
+
+    @property
+    def count(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= s
+        return n
+
+
+@dataclass(frozen=True)
+class NetSpec:
+    """Static description of one network configuration."""
+
+    method: str  # hashnet | hashnet_dk | nn | dk | rer | lrd
+    dims: tuple[int, ...]  # virtual dims [n_in, h..., n_out]
+    budgets: tuple[int, ...]  # per-layer stored-parameter budget K^l
+    batch: int = 50
+    seed_base: int = 0x9E3779B9
+    # Tiling defaults (see EXPERIMENTS.md §Perf): on CPU the interpret-
+    # lowered grid is re-fused by XLA so BlockSpec is perf-neutral; the
+    # choice targets real-TPU VMEM scheduling (DESIGN.md §8) — full-row
+    # m-tiles minimize reduction revisits and fit VMEM comfortably.
+    block_n: int = 128
+    block_m: int = 1024
+    interpret: bool = True
+    # ablation: disable the sign hash xi (paper 4.3) in hashed layers
+    use_sign: bool = True
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.dims) - 1
+
+    @property
+    def uses_soft_targets(self) -> bool:
+        return self.method in ("hashnet_dk", "dk")
+
+
+def _relu(x):
+    return jax.nn.relu(x)
+
+
+def _augment(a):
+    """Append the bias column (the paper hashes biases with the weights)."""
+    return jnp.concatenate([a, jnp.ones((a.shape[0], 1), a.dtype)], axis=1)
+
+
+def _dropout(a, keep_prob, seed, salt: int):
+    """Inverted dropout with stateless threefry noise.
+
+    ``seed`` is a traced uint32 scalar (one per train step, supplied by
+    the coordinator); ``salt`` distinguishes layers.  ``keep_prob`` is a
+    traced f32 scalar so one artifact serves any dropout setting.
+    """
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), salt)
+    mask = jax.random.uniform(key, a.shape) < keep_prob
+    return jnp.where(mask, a / keep_prob, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# In-graph generation of fixed (storage-free) auxiliary matrices.
+# RER's edge mask and LRD's fixed Gaussian factor are derived from xxh32
+# like the HashedNets weights themselves: they cost no artifact constants
+# (HLO stays small) and no stored parameters, matching how §6 counts size.
+# ---------------------------------------------------------------------------
+
+
+def _hash_uniform(shape, seed):
+    """u32 hash of the index grid -> U(0,1) f32, in-graph."""
+    n = 1
+    for s in shape:
+        n *= s
+    keys = jnp.arange(n, dtype=jnp.uint32).reshape(shape)
+    h = xxh32_u32(keys, seed, xp=jnp)
+    return h.astype(jnp.float32) * jnp.float32(1.0 / 4294967296.0)
+
+
+def _hash_mask(shape, keep_frac: float, seed):
+    """Fixed binary mask keeping ~keep_frac of entries (RER)."""
+    return (_hash_uniform(shape, seed) < jnp.float32(keep_frac)).astype(jnp.float32)
+
+
+def _hash_gaussian(shape, std: float, seed):
+    """Fixed Gaussian matrix via Box–Muller over two hash streams (LRD)."""
+    u1 = jnp.maximum(_hash_uniform(shape, seed), jnp.float32(1e-7))
+    u2 = _hash_uniform(shape, seed ^ 0x5BD1E995)
+    z = jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(2.0 * jnp.pi * u2)
+    return jnp.float32(std) * z
+
+
+# ---------------------------------------------------------------------------
+# Layer builders: each returns (param_specs, forward) where
+# forward(params_slice, a) -> z, with a NOT yet bias-augmented.
+# ---------------------------------------------------------------------------
+
+
+def _hashed_layer(l: int, m: int, n: int, k: int, spec: NetSpec):
+    s_h, s_xi = layer_seeds(l, spec.seed_base)
+    kspec = HashedLayerSpec(
+        M=m + 1, N=n, K=k, seed_h=s_h, seed_xi=s_xi,
+        block_n=spec.block_n, block_m=spec.block_m, use_sign=spec.use_sign,
+    )
+    f = make_hashed_matmul(kspec, interpret=spec.interpret)
+    pspecs = [ParamSpec(f"w{l}", (k,), (2.0 / (m + 1)) ** 0.5)]
+
+    def fwd(params: Params, a):
+        return f(_augment(a), params[0])
+
+    return pspecs, fwd
+
+
+def _dense_layer(l: int, m: int, n: int):
+    pspecs = [
+        ParamSpec(f"W{l}", (n, m), (2.0 / m) ** 0.5),
+        ParamSpec(f"b{l}", (n,), 0.0),
+    ]
+
+    def fwd(params: Params, a):
+        return a @ params[0].T + params[1]
+
+    return pspecs, fwd
+
+
+def _rer_layer(l: int, m: int, n: int, k: int, spec: NetSpec):
+    """Random Edge Removal (Cireşan et al. 2011): full-width dense with a
+    fixed random mask keeping k of the (m+1)*n connections."""
+    keep = k / float((m + 1) * n)
+    s_mask, _ = layer_seeds(1000 + l, spec.seed_base)
+    pspecs = [ParamSpec(f"Wm{l}", (n, m + 1), (2.0 / max(keep * (m + 1), 1.0)) ** 0.5)]
+
+    def fwd(params: Params, a):
+        mask = _hash_mask((n, m + 1), keep, s_mask)
+        return _augment(a) @ (params[0] * mask).T
+
+    return pspecs, fwd
+
+
+def _lrd_layer(l: int, m: int, n: int, k: int, spec: NetSpec):
+    """Low-Rank Decomposition (Denil et al. 2013): V = W @ U.
+
+    The *input-side* factor ``U (r × (m+1))`` is the fixed Gaussian
+    (std 1/sqrt(n^l) with n^l inputs, hash-generated, not stored) — a
+    random feature projection of the layer input; the *output-side*
+    factor ``W (n × r)`` is learned, so the budget gives rank
+    ``r = K / n`` (cf. §6: "the low-rank method still randomly projects
+    each layer to a random feature space").
+    """
+    r = max(1, int(round(k / n)))
+    s_u, _ = layer_seeds(2000 + l, spec.seed_base)
+    pspecs = [ParamSpec(f"Wl{l}", (n, r), (2.0 / r) ** 0.5)]
+
+    def fwd(params: Params, a):
+        U = _hash_gaussian((r, m + 1), (m + 1) ** -0.5, s_u)
+        return (_augment(a) @ U.T) @ params[0].T
+
+    return pspecs, fwd
+
+
+# ---------------------------------------------------------------------------
+
+
+def build(spec: NetSpec) -> tuple[list[ParamSpec], Callable]:
+    """Compose the network: returns (param_specs, apply).
+
+    ``apply(params, x, *, train, seed, keep_prob) -> logits`` with dropout
+    applied to the *hidden* activations when ``train`` (paper §6 trains
+    all models with dropout).
+    """
+    assert spec.n_layers == len(spec.budgets), (spec.dims, spec.budgets)
+    layers = []
+    pspecs: list[ParamSpec] = []
+    slices = []
+    for l in range(spec.n_layers):
+        m, n = spec.dims[l], spec.dims[l + 1]
+        k = spec.budgets[l]
+        if spec.method in ("hashnet", "hashnet_dk"):
+            ps, fwd = _hashed_layer(l, m, n, k, spec)
+        elif spec.method in ("nn", "dk"):
+            ps, fwd = _dense_layer(l, m, n)
+        elif spec.method == "rer":
+            ps, fwd = _rer_layer(l, m, n, k, spec)
+        elif spec.method == "lrd":
+            ps, fwd = _lrd_layer(l, m, n, k, spec)
+        else:
+            raise ValueError(f"unknown method {spec.method}")
+        slices.append((len(pspecs), len(pspecs) + len(ps)))
+        pspecs.extend(ps)
+        layers.append(fwd)
+
+    def apply(params: Params, x, *, train: bool, seed=None, keep_prob=None):
+        a = x
+        for l, fwd in enumerate(layers):
+            z = fwd(params[slices[l][0] : slices[l][1]], a)
+            if l < spec.n_layers - 1:
+                a = _relu(z)
+                if train:
+                    a = _dropout(a, keep_prob, seed, salt=l)
+            else:
+                a = z
+        return a
+
+    return pspecs, apply
+
+
+def softmax_xent(logits, labels):
+    """Mean softmax cross-entropy against integer labels."""
+    logp = jax.nn.log_softmax(logits)
+    ll = jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=1)
+    return -jnp.mean(ll)
+
+
+def dark_knowledge_loss(logits, labels, soft_targets, lam, temp):
+    """Blended DK objective (Hinton et al. 2014):
+
+    ``lam * CE(labels) + (1 - lam) * T^2 * CE(teacher_probs_T, student_T)``.
+
+    ``soft_targets`` are the teacher's *temperature-softened probabilities*
+    (computed once by the coordinator with the teacher artifact); lam and
+    temp arrive as traced scalars so artifacts stay hyperparameter-free.
+    """
+    hard = softmax_xent(logits, labels)
+    logp_t = jax.nn.log_softmax(logits / temp)
+    soft = -jnp.mean(jnp.sum(soft_targets * logp_t, axis=1))
+    return lam * hard + (1.0 - lam) * temp * temp * soft
+
+
+def make_predict(spec: NetSpec):
+    """predict(params..., x) -> (logits,)"""
+    pspecs, apply = build(spec)
+
+    def predict(*args):
+        params = list(args[: len(pspecs)])
+        x = args[len(pspecs)]
+        return (apply(params, x, train=False),)
+
+    return pspecs, predict
+
+
+def make_train_step(spec: NetSpec):
+    """One SGD-with-momentum step, fully in-graph.
+
+    Signature (flat, in manifest order)::
+
+        train_step(*params, *momenta, x[B,n_in] f32, y[B] i32,
+                   [soft_targets[B,n_out] f32,]   # DK methods only
+                   seed[] u32, lr[] f32, mom[] f32, keep_prob[] f32,
+                   [lam[] f32, temp[] f32])       # DK methods only
+          -> (*params', *momenta', loss[])
+
+    Momentum: v' = mom*v - lr*g ; p' = p + v'.
+    """
+    pspecs, apply = build(spec)
+    n_p = len(pspecs)
+    dk = spec.uses_soft_targets
+
+    def train_step(*args):
+        i = 0
+        params = list(args[i : i + n_p]); i += n_p
+        momenta = list(args[i : i + n_p]); i += n_p
+        x = args[i]; i += 1
+        y = args[i]; i += 1
+        soft = None
+        if dk:
+            soft = args[i]; i += 1
+        seed = args[i]; i += 1
+        lr = args[i]; i += 1
+        mom = args[i]; i += 1
+        keep_prob = args[i]; i += 1
+        if dk:
+            lam = args[i]; i += 1
+            temp = args[i]; i += 1
+
+        def loss_fn(params):
+            logits = apply(params, x, train=True, seed=seed, keep_prob=keep_prob)
+            if dk:
+                return dark_knowledge_loss(logits, y, soft, lam, temp)
+            return softmax_xent(logits, y)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        new_m = [mom * v - lr * g for v, g in zip(momenta, grads)]
+        new_p = [p + v for p, v in zip(params, new_m)]
+        return (*new_p, *new_m, loss)
+
+    return pspecs, train_step
+
+
+def example_args(spec: NetSpec, pspecs: list[ParamSpec], kind: str):
+    """ShapeDtypeStructs matching the artifact signature, for lowering."""
+    f32 = jnp.float32
+    sd = jax.ShapeDtypeStruct
+    params = [sd(p.shape, f32) for p in pspecs]
+    x = sd((spec.batch, spec.dims[0]), f32)
+    if kind == "predict":
+        return [*params, x]
+    y = sd((spec.batch,), jnp.int32)
+    scalars = [sd((), jnp.uint32), sd((), f32), sd((), f32), sd((), f32)]
+    if spec.uses_soft_targets:
+        soft = sd((spec.batch, spec.dims[-1]), f32)
+        return [*params, *params, x, y, soft, *scalars, sd((), f32), sd((), f32)]
+    return [*params, *params, x, y, *scalars]

@@ -1,0 +1,46 @@
+"""Perf-pass tool: emit block-shape variants of one hashed config so the
+Rust bench can A/B the L1 tiling (EXPERIMENTS.md §Perf).
+
+Usage: cd python && python -m compile.perf_variants --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+from dataclasses import replace
+from fractions import Fraction
+
+from . import aot
+
+BLOCKS = [(64, 128), (128, 256), (128, 785), (256, 256)]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--hidden", type=int, default=100)
+    args = ap.parse_args()
+    entries = []
+    for bn, bm in BLOCKS:
+        name, spec, meta = aot.spec_for("hashnet", 3, args.hidden, 10, Fraction(1, 8))
+        spec = replace(spec, block_n=bn, block_m=bm)
+        name = f"{name}_b{bn}x{bm}"
+        entries.append(aot.lower_one((name, spec, meta, args.out_dir, False)))
+    # merge into the manifest like aot.main does
+    import json
+    import os
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath) as f:
+        manifest = json.load(f)
+    by_name = {e["name"]: e for e in manifest["artifacts"]}
+    for e in entries:
+        by_name[e["name"]] = e
+    manifest["artifacts"] = [by_name[k] for k in sorted(by_name)]
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"emitted {len(entries)} block variants")
+
+
+if __name__ == "__main__":
+    main()

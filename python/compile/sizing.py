@@ -1,0 +1,97 @@
+"""Memory accounting and size-equivalence solvers (paper §6, Baselines).
+
+All methods are compared at an identical number of *stored* parameters.
+Given a full architecture ``[n0, h, ..., h, n_out]`` and a compression
+factor ``c``:
+
+* **HashNet**:  per-layer budget ``K^l = max(1, round(c * (n^l + 1) * n^{l+1}))``
+  (bias column is hashed with the weights, §4.1).
+* **NN / DK** (equivalent-size dense): all hidden layers are shrunk at the
+  same rate until the stored parameter count equals the budget.
+* **RER**: full widths, keep exactly ``K^l`` random edges per layer.
+* **LRD**: per-layer rank ``r^l = max(1, round(K^l / (n^l + 1)))`` so the
+  *learned* factor ``W in R^{r x (n^l+1)}`` matches the budget (the fixed
+  Gaussian factor is hash-generated and counts as free, §6 — "we count the
+  fixed low rank matrix ... as taking no memory").
+"""
+
+from __future__ import annotations
+
+import math
+
+
+def layer_dims(depth: int, n_in: int, hidden: int, n_out: int) -> list[int]:
+    """Paper nomenclature: a '3-layer' net has 1 hidden layer, '5-layer' has 3."""
+    n_hidden = {3: 1, 5: 3}.get(depth)
+    if n_hidden is None:
+        n_hidden = depth - 2
+    return [n_in] + [hidden] * n_hidden + [n_out]
+
+
+def dense_params(dims: list[int]) -> int:
+    """Stored parameters of a fully-connected net (weights + biases)."""
+    return sum((dims[l] + 1) * dims[l + 1] for l in range(len(dims) - 1))
+
+
+def hashed_budgets(dims: list[int], c: float) -> list[int]:
+    """Per-layer K^l under compression factor c."""
+    return [
+        max(1, int(round(c * (dims[l] + 1) * dims[l + 1])))
+        for l in range(len(dims) - 1)
+    ]
+
+
+def equivalent_hidden_width(dims: list[int], budget: int) -> int:
+    """Largest uniform hidden width whose dense net stores <= budget params.
+
+    Mirrors the paper's 'Neural Network (Equivalent-Size)' baseline: "all
+    hidden layers are shrunk at the same rate until the number of stored
+    parameters equals the target size".  Solved in closed form (the count
+    is quadratic in h for >=2 hidden layers), then adjusted by scan.
+    """
+    n_in, n_out = dims[0], dims[-1]
+    n_hidden = len(dims) - 2
+    assert n_hidden >= 1
+
+    def count(h: int) -> int:
+        return dense_params([n_in] + [h] * n_hidden + [n_out])
+
+    # closed-form seed: a h^2 + b h + c0 = budget
+    a = max(n_hidden - 1, 0)
+    b = (n_in + 1) + (n_hidden - 1) + n_out
+    c0 = n_out
+    if a == 0:
+        h = (budget - c0) / b
+    else:
+        disc = b * b - 4 * a * (c0 - budget)
+        h = (-b + math.sqrt(max(disc, 0.0))) / (2 * a)
+    h = max(1, int(h))
+    while count(h + 1) <= budget:
+        h += 1
+    while h > 1 and count(h) > budget:
+        h -= 1
+    return h
+
+
+def lrd_ranks(dims: list[int], c: float) -> list[int]:
+    """Per-layer rank of the learned factor under compression c.
+
+    The learned factor is output-side (`n × r`), so `r = K / n`.
+    """
+    ks = hashed_budgets(dims, c)
+    return [max(1, int(round(k / dims[l + 1]))) for l, k in enumerate(ks)]
+
+
+def expansion_dims(depth: int, n_in: int, base_hidden: int, n_out: int,
+                   factor: int) -> tuple[list[int], list[int]]:
+    """Fig. 4 setup: budget fixed to a `base_hidden`-unit dense net; the
+    virtual architecture is inflated by `factor`.
+
+    Returns (virtual dims, per-layer K^l). K^l is the dense parameter
+    count of layer l at base width — the 'real' weights — while the
+    virtual width is ``base_hidden * factor``.
+    """
+    base = layer_dims(depth, n_in, base_hidden, n_out)
+    ks = [(base[l] + 1) * base[l + 1] for l in range(len(base) - 1)]
+    virt = layer_dims(depth, n_in, base_hidden * factor, n_out)
+    return virt, ks

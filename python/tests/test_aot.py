@@ -1,0 +1,125 @@
+"""AOT pipeline: config grid, manifest contract, HLO text emission."""
+
+import json
+import os
+import tempfile
+from fractions import Fraction
+
+import pytest
+
+from compile import aot, sizing
+from compile.model import NetSpec, example_args, make_predict, make_train_step
+
+
+class TestConfigGrid:
+    def test_repro_set_covers_experiments(self):
+        sets = aot.config_sets(hidden=100, exp_base=50)
+        names = {c[0] for c in sets["repro"]}
+        # figures: all methods x 7 compressions x 2 depths (out=10)
+        for method in aot.METHODS:
+            for c in aot.COMPRESSIONS:
+                for depth in (3, 5):
+                    assert f"{method}_{depth}l_h100_o10_c{c.numerator}-{c.denominator}" in names
+        # tables: out=2 at 1/8 and 1/64
+        assert "hashnet_3l_h100_o2_c1-8" in names
+        assert "lrd_5l_h100_o2_c1-64" in names
+        # fig4 expansion
+        assert "hashnet_3l_b50_o10_x16" in names
+        assert "nn_5l_b50_o10_x1" in names
+        # out=2 teacher
+        assert "nn_3l_h100_o2_c1-1" in names
+
+    def test_core_set_is_small(self):
+        sets = aot.config_sets(hidden=100, exp_base=50)
+        assert 3 <= len(sets["core"]) <= 8
+
+    def test_spec_for_nn_equivalent_size(self):
+        name, spec, meta = aot.spec_for("nn", 3, 1000, 10, Fraction(1, 8))
+        # paper: h=1000, 1/8 -> equivalent dense width ~123
+        assert 100 < meta["hidden_equivalent"] < 150
+        assert spec.dims[1] == meta["hidden_equivalent"]
+
+    def test_spec_for_hashnet_budgets(self):
+        _, spec, _ = aot.spec_for("hashnet", 5, 100, 10, Fraction(1, 4))
+        dims = sizing.layer_dims(5, 784, 100, 10)
+        assert list(spec.budgets) == sizing.hashed_budgets(dims, 0.25)
+
+    def test_expansion_fixes_storage(self):
+        for f in (1, 2, 8):
+            _, spec, meta = aot.expansion_spec_for("hashnet", 3, 50, 10, f)
+            assert sum(spec.budgets) == 785 * 50 + 51 * 10
+            assert meta["virtual_params"] == sizing.dense_params([784, 50 * f, 10])
+
+
+class TestManifestContract:
+    def test_input_names_order(self):
+        _, spec, _ = aot.spec_for("hashnet_dk", 3, 16, 10, Fraction(1, 2))
+        pspecs, _ = make_train_step(spec)
+        names = aot._input_names(spec, pspecs, "train")
+        assert names == [
+            "w0", "w1", "m_w0", "m_w1", "x", "y", "soft_targets",
+            "seed", "lr", "momentum", "keep_prob", "lam", "temp",
+        ]
+        assert aot._input_names(spec, pspecs, "predict") == ["w0", "w1", "x"]
+
+    def test_input_names_match_example_args_arity(self):
+        for method in aot.METHODS:
+            _, spec, _ = aot.spec_for(method, 3, 12, 10, Fraction(1, 2))
+            pspecs, _ = make_predict(spec)
+            for kind in ("train", "predict"):
+                names = aot._input_names(spec, pspecs, kind)
+                args = example_args(spec, pspecs, kind)
+                assert len(names) == len(args), (method, kind)
+
+
+class TestLowering:
+    def test_lower_one_emits_hlo_text_and_entry(self):
+        name, spec, meta = aot.spec_for("hashnet", 3, 8, 4, Fraction(1, 2), batch=2)
+        with tempfile.TemporaryDirectory() as d:
+            entry = aot.lower_one((name, spec, meta, d, True))
+            for kind in ("train", "predict"):
+                path = os.path.join(d, entry["graphs"][kind])
+                text = open(path).read()
+                assert text.startswith("HloModule"), text[:50]
+                assert "ROOT" in text
+            assert entry["stored_params"] == sum(spec.budgets)
+            assert entry["params"][0]["name"] == "w0"
+
+    def test_lower_one_skips_existing_without_force(self):
+        name, spec, meta = aot.spec_for("nn", 3, 6, 4, Fraction(1, 1), batch=2)
+        with tempfile.TemporaryDirectory() as d:
+            aot.lower_one((name, spec, meta, d, True))
+            path = os.path.join(d, f"{name}.train.hlo.txt")
+            mtime = os.path.getmtime(path)
+            aot.lower_one((name, spec, meta, d, False))
+            assert os.path.getmtime(path) == mtime
+
+
+class TestRealManifest:
+    """Invariants over the actually-emitted artifacts/ (if present)."""
+
+    @pytest.fixture
+    def manifest(self):
+        path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts",
+                            "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built")
+        with open(path) as f:
+            return json.load(f)
+
+    def test_every_entry_has_graph_files(self, manifest):
+        base = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+        for a in manifest["artifacts"]:
+            for kind in ("train", "predict"):
+                assert os.path.exists(os.path.join(base, a["graphs"][kind])), a["name"]
+
+    def test_hashnet_budget_equals_stored(self, manifest):
+        for a in manifest["artifacts"]:
+            if a["method"] == "hashnet":
+                assert a["stored_params"] == sum(a["budgets"]), a["name"]
+
+    def test_compression_accounting(self, manifest):
+        for a in manifest["artifacts"]:
+            if a["method"] in ("hashnet", "hashnet_dk") and "expansion" not in a:
+                ratio = a["stored_params"] / a["virtual_params"]
+                assert abs(ratio - a["compression"]) < 0.02, a["name"]

@@ -1,0 +1,115 @@
+"""xxh32 correctness: spec goldens, scalar-vs-vectorized bit identity,
+bucket uniformity, and the golden vectors shared with the Rust suite."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.hashing import (
+    golden_vectors,
+    hash_grid,
+    layer_seeds,
+    xxh32,
+    xxh32_u32,
+    xxh32_u32_scalar,
+)
+
+
+class TestSpecGoldens:
+    def test_empty_seed0(self):
+        # The one universally published xxh32 sanity value.
+        assert xxh32(b"", 0) == 0x02CC5D05
+
+    def test_length_paths(self):
+        # exercise <16, ==16, >16 and trailing-byte paths; values are
+        # self-consistency checks pinned so regressions are loud.
+        data = bytes(range(40))
+        h0 = xxh32(data, 0)
+        h1 = xxh32(data, 1)
+        assert h0 != h1
+        assert xxh32(data[:15], 0) != xxh32(data[:16], 0)
+        assert xxh32(data[:17], 0) != xxh32(data[:16], 0)
+
+
+class TestVectorizedAgreesWithScalar:
+    @settings(max_examples=200, deadline=None)
+    @given(key=st.integers(0, 2**32 - 1), seed=st.integers(0, 2**32 - 1))
+    def test_bit_identity(self, key, seed):
+        v = int(xxh32_u32(np.array([key], np.uint32), seed)[0])
+        assert v == xxh32_u32_scalar(key, seed)
+
+    def test_jnp_matches_numpy(self):
+        import jax.numpy as jnp
+
+        keys = np.arange(4096, dtype=np.uint32) * np.uint32(2654435761)  # wraps
+        h_np = xxh32_u32(keys, 0x1234)
+        h_jnp = np.asarray(xxh32_u32(jnp.asarray(keys), 0x1234, xp=jnp))
+        np.testing.assert_array_equal(h_np, h_jnp.astype(np.uint32))
+
+
+class TestBucketStatistics:
+    def test_uniformity_chi_square(self):
+        """h(i,j) mod K should be approximately uniform (paper §4.2)."""
+        M, N, K = 200, 100, 64
+        s_h, s_xi = layer_seeds(3)
+        ids, signs = hash_grid(M, N, K, s_h, s_xi)
+        counts = np.bincount(ids.reshape(-1), minlength=K)
+        expected = M * N / K
+        chi2 = float(((counts - expected) ** 2 / expected).sum())
+        # df = 63; mean 63, sd ~11. 5-sigma bound.
+        assert chi2 < 63 + 5 * np.sqrt(2 * 63), f"chi2={chi2}"
+
+    def test_sign_balance(self):
+        M, N = 150, 150
+        s_h, s_xi = layer_seeds(1)
+        _, signs = hash_grid(M, N, 10, s_h, s_xi)
+        frac_pos = float((signs > 0).mean())
+        assert 0.48 < frac_pos < 0.52
+        assert set(np.unique(signs)) == {-1.0, 1.0}
+
+    def test_layer_seeds_independent(self):
+        """Dedicated per-layer hash functions (paper §4.4)."""
+        ids0, _ = hash_grid(50, 50, 16, *layer_seeds(0))
+        ids1, _ = hash_grid(50, 50, 16, *layer_seeds(1))
+        assert (ids0 != ids1).mean() > 0.8
+
+    def test_inner_product_unbiased(self):
+        """Eq. 1: E[phi(x)^T phi(x')] = x^T x' over random sign hashes.
+
+        We average the hashed inner product over many independent hash
+        seeds and check it approaches the true inner product.
+        """
+        rng = np.random.RandomState(0)
+        m, K, trials = 32, 16, 600
+        x = rng.randn(m).astype(np.float32)
+        y = rng.randn(m).astype(np.float32)
+        acc = 0.0
+        for t in range(trials):
+            ids, signs = hash_grid(m, 1, K, seed_h=1000 + t, seed_xi=2000 + t)
+            ids, signs = ids[0], signs[0]
+            phi_x = np.zeros(K, np.float32)
+            phi_y = np.zeros(K, np.float32)
+            np.add.at(phi_x, ids, signs * x)
+            np.add.at(phi_y, ids, signs * y)
+            acc += float(phi_x @ phi_y)
+        est = acc / trials
+        true = float(x @ y)
+        # var of single estimate is O(||x||^2 ||y||^2 / K)
+        tol = 4 * np.sqrt((x @ x) * (y @ y) / K / trials)
+        assert abs(est - true) < tol, f"est={est} true={true} tol={tol}"
+
+
+class TestGoldenExport:
+    def test_golden_vectors_stable_and_exported(self):
+        """Write the cross-language golden file consumed by the Rust tests."""
+        gv = golden_vectors()
+        assert len(gv) == 36
+        for key, seed, h in gv:
+            assert h == xxh32_u32_scalar(key, seed)
+        out = os.path.join(os.path.dirname(__file__), "golden", "xxh32_u32.json")
+        os.makedirs(os.path.dirname(out), exist_ok=True)
+        with open(out, "w") as f:
+            json.dump([{"key": k, "seed": s, "hash": h} for k, s, h in gv], f, indent=1)

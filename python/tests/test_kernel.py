@@ -1,0 +1,188 @@
+"""Pallas hashed-matmul kernel vs. pure-jnp oracle — the core L1 signal.
+
+Covers: forward numerics, custom-VJP gradients vs. autodiff-through-the-
+oracle, the feature-hashing equivalence (paper §4.3), block-shape
+robustness (padded tiles), dtype handling, and hypothesis sweeps over
+shapes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.hashing import layer_seeds
+from compile.kernels.hashed_matmul import HashedLayerSpec, make_hashed_matmul
+from compile.kernels.ref import feature_hash_ref, hashed_matmul_ref, virtual_matrix
+
+SEED_H, SEED_XI = layer_seeds(0)
+
+
+def _mk(M, N, K, bn=128, bm=256):
+    return HashedLayerSpec(M=M, N=N, K=K, seed_h=SEED_H, seed_xi=SEED_XI,
+                           block_n=bn, block_m=bm)
+
+
+def _rand(shape, key, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+class TestForward:
+    @pytest.mark.parametrize(
+        "B,M,N,K",
+        [
+            (4, 16, 8, 7),
+            (2, 785, 100, 981),          # MNIST-ish layer at 1/8
+            (50, 64, 32, 2048),          # K > M*N/one tile
+            (1, 3, 5, 2),                # tiny, K=2 heavy collisions
+            (8, 130, 129, 100),          # non-multiple of block sizes
+        ],
+    )
+    def test_matches_oracle(self, B, M, N, K):
+        spec = _mk(M, N, K)
+        f = jax.jit(make_hashed_matmul(spec))
+        a = _rand((B, M), key=B * 31 + M)
+        w = _rand((K,), key=K)
+        got = f(a, w)
+        want = hashed_matmul_ref(a, w, N, K, SEED_H, SEED_XI)
+        # accumulation order differs between the tiled kernel and the
+        # dense oracle; bound is ~eps * sqrt(M) * |a||w| scale
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    def test_block_shapes_equivalent(self):
+        """Different tilings must give the same answer (padding masked)."""
+        B, M, N, K = 6, 100, 70, 333
+        a = _rand((B, M), key=1)
+        w = _rand((K,), key=2)
+        outs = []
+        for bn, bm in [(8, 16), (32, 64), (128, 256), (70, 100), (64, 128)]:
+            f = jax.jit(make_hashed_matmul(_mk(M, N, K, bn=bn, bm=bm)))
+            outs.append(np.asarray(f(a, w)))
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], rtol=1e-4, atol=1e-5)
+
+    def test_jit_compiles(self):
+        spec = _mk(32, 16, 64)
+        f = jax.jit(make_hashed_matmul(spec))
+        a = _rand((4, 32), key=3)
+        w = _rand((64,), key=4)
+        np.testing.assert_allclose(
+            f(a, w), hashed_matmul_ref(a, w, 16, 64, SEED_H, SEED_XI),
+            rtol=1e-5, atol=1e-6,
+        )
+
+    def test_compression_one_still_collides_rarely(self):
+        """At K = M*N the hash is not a bijection but collisions are few;
+        the virtual matrix must still be decompressed consistently."""
+        M, N = 24, 16
+        K = M * N
+        V = np.asarray(virtual_matrix(_rand((K,), key=5), M, N, K, SEED_H, SEED_XI))
+        assert V.shape == (N, M)
+        # number of distinct buckets used should be close to (1-1/e)*K
+        from compile.hashing import hash_grid
+
+        ids, _ = hash_grid(M, N, K, SEED_H, SEED_XI)
+        used = len(np.unique(ids))
+        assert 0.5 * K < used <= K
+
+
+class TestFeatureHashEquivalence:
+    """Paper §4.3: weight sharing (Eq. 4) == feature hashing (Eq. 5)."""
+
+    @pytest.mark.parametrize("B,M,N,K", [(3, 10, 6, 8), (2, 17, 5, 4)])
+    def test_equivalence(self, B, M, N, K):
+        a = _rand((B, M), key=11)
+        w = _rand((K,), key=12)
+        z_ws = hashed_matmul_ref(a, w, N, K, SEED_H, SEED_XI)
+        z_fh = feature_hash_ref(a, w, N, K, SEED_H, SEED_XI)
+        np.testing.assert_allclose(z_ws, z_fh, rtol=1e-5, atol=1e-5)
+
+
+class TestGradients:
+    @pytest.mark.parametrize("B,M,N,K", [(4, 16, 8, 7), (2, 33, 20, 64), (5, 7, 9, 3)])
+    def test_grads_match_oracle(self, B, M, N, K):
+        spec = _mk(M, N, K, bn=16, bm=16)
+        f = make_hashed_matmul(spec)
+        a = _rand((B, M), key=21)
+        w = _rand((K,), key=22)
+        co = _rand((B, N), key=23)  # cotangent
+
+        def loss_pallas(a, w):
+            return jnp.sum(f(a, w) * co)
+
+        def loss_ref(a, w):
+            return jnp.sum(hashed_matmul_ref(a, w, N, K, SEED_H, SEED_XI) * co)
+
+        ga_p, gw_p = jax.jit(jax.grad(loss_pallas, argnums=(0, 1)))(a, w)
+        ga_r, gw_r = jax.grad(loss_ref, argnums=(0, 1))(a, w)
+        np.testing.assert_allclose(ga_p, ga_r, rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(gw_p, gw_r, rtol=1e-4, atol=1e-5)
+
+    def test_grad_w_finite_differences(self):
+        """Numerical gradient checking, as the paper does (§6)."""
+        B, M, N, K = 3, 12, 6, 5
+        f = make_hashed_matmul(_mk(M, N, K, bn=8, bm=8))
+        a = _rand((B, M), key=31)
+        w = _rand((K,), key=32)
+
+        @jax.jit
+        def loss(w):
+            return jnp.sum(jnp.tanh(f(a, w)))
+
+        g = np.asarray(jax.grad(loss)(w))
+        eps = 1e-3
+        for k in range(K):
+            e = np.zeros(K, np.float32)
+            e[k] = eps
+            num = (loss(w + e) - loss(w - e)) / (2 * eps)
+            assert abs(num - g[k]) < 5e-3, f"dw[{k}]: fd={num:.5f} ad={g[k]:.5f}"
+
+
+class TestHypothesisSweep:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        B=st.integers(1, 9),
+        M=st.integers(1, 70),
+        N=st.integers(1, 50),
+        K=st.integers(1, 300),
+        bn=st.sampled_from([8, 16, 32, 128]),
+        bm=st.sampled_from([8, 16, 64, 256]),
+    )
+    def test_forward_any_shape(self, B, M, N, K, bn, bm):
+        spec = _mk(M, N, K, bn=bn, bm=bm)
+        f = jax.jit(make_hashed_matmul(spec))
+        a = _rand((B, M), key=B + M * 7)
+        w = _rand((K,), key=K)
+        got = f(a, w)
+        want = hashed_matmul_ref(a, w, N, K, SEED_H, SEED_XI)
+        assert got.shape == (B, N)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        B=st.integers(1, 5),
+        M=st.integers(2, 30),
+        N=st.integers(2, 20),
+        K=st.integers(2, 64),
+    )
+    def test_grads_any_shape(self, B, M, N, K):
+        spec = _mk(M, N, K, bn=16, bm=16)
+        f = make_hashed_matmul(spec)
+        a = _rand((B, M), key=41)
+        w = _rand((K,), key=42)
+        gw_p = jax.jit(jax.grad(lambda w: jnp.sum(f(a, w) ** 2)))(w)
+        gw_r = jax.grad(
+            lambda w: jnp.sum(hashed_matmul_ref(a, w, N, K, SEED_H, SEED_XI) ** 2)
+        )(w)
+        np.testing.assert_allclose(gw_p, gw_r, rtol=1e-3, atol=1e-4)
+
+    def test_bf16_inputs_accumulate_f32(self):
+        B, M, N, K = 4, 32, 16, 24
+        f = make_hashed_matmul(_mk(M, N, K))
+        a = _rand((B, M), key=51).astype(jnp.bfloat16)
+        w = _rand((K,), key=52)
+        got = f(a, w)
+        assert got.dtype == jnp.float32
+        want = hashed_matmul_ref(a.astype(jnp.float32), w, N, K, SEED_H, SEED_XI)
+        np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)

@@ -1,0 +1,150 @@
+//! Compression toolkit: post-hoc conversion of trained dense networks
+//! into HashedNets, plus measurements behind the paper's analysis.
+//!
+//! The paper trains HashedNets from scratch; this module additionally
+//! supports the deployment workflow its introduction motivates — take
+//! an existing dense model, compress it to a target budget, optionally
+//! fine-tune — and implements the feature-hashing inner-product
+//! preservation check (Eq. 1) used by tests and benches.
+
+use crate::hash::{bucket_sign, layer_seeds};
+use crate::nn::{Layer, LayerKind};
+use crate::tensor::Matrix;
+
+/// Least-squares projection of a dense weight matrix onto the hashed
+/// parameterization: each bucket takes the ξ-weighted mean of its
+/// members (the minimizer of ‖V − V̂‖²_F under Eq. 7).
+///
+/// `dense` is `(n × (m+1))` (bias column included, like hashed layers).
+pub fn compress_dense(dense: &Matrix, k: usize, layer_index: u32, seed_base: u32) -> Vec<f32> {
+    let (n, m1) = (dense.rows, dense.cols);
+    let (s_h, s_xi) = layer_seeds(layer_index, seed_base);
+    let mut sums = vec![0.0f64; k];
+    let mut counts = vec![0u32; k];
+    for i in 0..n {
+        for j in 0..m1 {
+            let (b, sg) = bucket_sign(i as u32, j as u32, m1 as u32, k as u32, s_h, s_xi);
+            // V_ij = ξ w_b  ⇒  contribution to w_b is ξ V_ij
+            sums[b as usize] += (sg * dense.at(i, j)) as f64;
+            counts[b as usize] += 1;
+        }
+    }
+    sums.iter()
+        .zip(&counts)
+        .map(|(&s, &c)| if c == 0 { 0.0 } else { (s / c as f64) as f32 })
+        .collect()
+}
+
+/// Build a hashed layer whose virtual matrix approximates `dense`.
+pub fn hashed_layer_from_dense(
+    dense: &Matrix,
+    k: usize,
+    layer_index: usize,
+    seed_base: u32,
+) -> Layer {
+    let (n, m1) = (dense.rows, dense.cols);
+    let mut layer = Layer::new(m1 - 1, n, LayerKind::Hashed { k }, layer_index, seed_base);
+    layer.params = compress_dense(dense, k, layer_index as u32, seed_base);
+    layer
+}
+
+/// Relative Frobenius reconstruction error ‖V − V̂‖ / ‖V‖ of compressing
+/// `dense` to `k` buckets (the redundancy measurement of Denil et al.
+/// that motivates the paper).
+pub fn reconstruction_error(dense: &Matrix, k: usize, layer_index: u32, seed_base: u32) -> f64 {
+    let w = compress_dense(dense, k, layer_index, seed_base);
+    let (n, m1) = (dense.rows, dense.cols);
+    let (s_h, s_xi) = layer_seeds(layer_index, seed_base);
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for i in 0..n {
+        for j in 0..m1 {
+            let (b, sg) = bucket_sign(i as u32, j as u32, m1 as u32, k as u32, s_h, s_xi);
+            let v = dense.at(i, j) as f64;
+            let vhat = (sg * w[b as usize]) as f64;
+            num += (v - vhat) * (v - vhat);
+            den += v * v;
+        }
+    }
+    (num / den.max(1e-30)).sqrt()
+}
+
+/// Hashed inner product ⟨φ(x), φ(x')⟩ under one hash-pair seed — the
+/// quantity Eq. 1 says is unbiased for ⟨x, x'⟩.
+pub fn hashed_inner_product(x: &[f32], y: &[f32], k: usize, seed_h: u32, seed_xi: u32) -> f64 {
+    let m = x.len() as u32;
+    let mut phi_x = vec![0.0f64; k];
+    let mut phi_y = vec![0.0f64; k];
+    for j in 0..x.len() {
+        let (b, sg) = bucket_sign(0, j as u32, m, k as u32, seed_h, seed_xi);
+        phi_x[b as usize] += (sg * x[j]) as f64;
+        phi_y[b as usize] += (sg * y[j]) as f64;
+    }
+    phi_x.iter().zip(&phi_y).map(|(a, b)| a * b).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn compression_is_exact_when_k_large_and_injective() {
+        // with k >> n*m most buckets have one member: near-exact recon
+        let mut rng = Pcg32::new(1, 1);
+        let dense = Matrix::from_fn(6, 8, |_, _| rng.normal());
+        let err = reconstruction_error(&dense, 4096, 0, crate::hash::DEFAULT_SEED_BASE);
+        assert!(err < 0.35, "err {err}"); // birthday collisions only
+    }
+
+    #[test]
+    fn reconstruction_error_decreases_with_k() {
+        let mut rng = Pcg32::new(2, 1);
+        let dense = Matrix::from_fn(20, 21, |_, _| rng.normal());
+        let seed = crate::hash::DEFAULT_SEED_BASE;
+        let e8 = reconstruction_error(&dense, 420 / 8, 0, seed);
+        let e2 = reconstruction_error(&dense, 420 / 2, 0, seed);
+        let e1 = reconstruction_error(&dense, 4200, 0, seed);
+        assert!(e1 < e2 && e2 < e8, "{e1} {e2} {e8}");
+    }
+
+    #[test]
+    fn compressed_layer_approximates_dense_forward() {
+        let mut rng = Pcg32::new(3, 1);
+        // low-complexity dense matrix (smooth) compresses well
+        let dense = Matrix::from_fn(10, 13, |i, j| ((i as f32 * 0.3).sin() + (j as f32 * 0.2).cos()) * 0.3);
+        let mut layer = hashed_layer_from_dense(&dense, 60, 0, crate::hash::DEFAULT_SEED_BASE);
+        let a = Matrix::from_fn(4, 12, |_, _| rng.normal());
+        let z_dense = a.augment_ones().matmul_nt(&dense);
+        let z_hash = layer.forward(&a);
+        let rel = {
+            let mut num = 0.0f32;
+            let mut den = 0.0f32;
+            for (zd, zh) in z_dense.data.iter().zip(&z_hash.data) {
+                num += (zd - zh) * (zd - zh);
+                den += zd * zd;
+            }
+            (num / den).sqrt()
+        };
+        assert!(rel < 0.9, "relative error {rel}");
+    }
+
+    #[test]
+    fn inner_product_unbiased_over_seeds() {
+        // Eq. 1: averaging over independent hash functions approaches x·y
+        let mut rng = Pcg32::new(4, 1);
+        let x: Vec<f32> = (0..32).map(|_| rng.normal()).collect();
+        let y: Vec<f32> = (0..32).map(|_| rng.normal()).collect();
+        let true_ip: f64 = x.iter().zip(&y).map(|(a, b)| (a * b) as f64).sum();
+        let trials = 800;
+        let mean: f64 = (0..trials)
+            .map(|t| hashed_inner_product(&x, &y, 16, 900 + t, 7700 + t))
+            .sum::<f64>()
+            / trials as f64;
+        let norm = (x.iter().map(|v| (v * v) as f64).sum::<f64>()
+            * y.iter().map(|v| (v * v) as f64).sum::<f64>())
+        .sqrt();
+        let tol = 4.0 * norm / (16.0f64 * trials as f64).sqrt();
+        assert!((mean - true_ip).abs() < tol, "mean {mean} true {true_ip} tol {tol}");
+    }
+}

@@ -1,0 +1,124 @@
+//! Hyperparameter search: deterministic random search with successive
+//! halving on the 20% validation split.
+//!
+//! The paper tunes hyperparameters with Bayesian optimization
+//! (Snoek et al. 2012 via `bayesopt.m`) plus hand-tuning; offline we
+//! substitute random search (Bergstra & Bengio 2012) with a halving
+//! schedule, which matches the budget at these scales (DESIGN.md §3).
+
+use super::trainer::{run_with_data, TrainConfig};
+use crate::data::Dataset;
+use crate::runtime::{Hyper, Runtime};
+use crate::util::rng::Pcg32;
+use anyhow::Result;
+
+/// Search space: log-uniform lr, categorical momentum / keep_prob,
+/// (DK) lam and temp.
+pub fn sample_hyper(rng: &mut Pcg32, dk: bool) -> Hyper {
+    let lr = 10f32.powf(rng.range_f32(-2.0, -0.3)); // 0.01 .. 0.5
+    let momentum = *pick(rng, &[0.5, 0.9, 0.95]);
+    let keep_prob = *pick(rng, &[0.8, 0.9, 1.0]);
+    let (lam, temp) = if dk {
+        (*pick(rng, &[0.3, 0.5, 0.7, 0.9]), *pick(rng, &[1.0, 2.0, 4.0, 8.0]))
+    } else {
+        (1.0, 4.0)
+    };
+    Hyper { lr, momentum, keep_prob, lam, temp }
+}
+
+fn pick<'a, T>(rng: &mut Pcg32, xs: &'a [T]) -> &'a T {
+    &xs[rng.below(xs.len() as u32) as usize]
+}
+
+/// Result of one search.
+#[derive(Debug, Clone)]
+pub struct HpoResult {
+    pub best: Hyper,
+    pub best_val_error: f64,
+    pub trials: Vec<(Hyper, f64)>,
+}
+
+/// Random search + successive halving: `n_trials` configs at
+/// `epochs/4`, the top half re-run at `epochs/2`, the top quarter at
+/// full `epochs`. Deterministic in `seed`.
+pub fn search(
+    rt: &Runtime,
+    artifact: &str,
+    train: &Dataset,
+    epochs: usize,
+    n_trials: usize,
+    seed: u64,
+) -> Result<HpoResult> {
+    let dk = rt
+        .manifest
+        .get(artifact)
+        .map(|s| s.uses_soft_targets)
+        .unwrap_or(false);
+    let mut rng = Pcg32::new(seed, 0x4270);
+    let mut pool: Vec<Hyper> = (0..n_trials).map(|_| sample_hyper(&mut rng, dk)).collect();
+    let mut all: Vec<(Hyper, f64)> = Vec::new();
+    let stages = [epochs.div_ceil(4).max(1), epochs.div_ceil(2).max(1), epochs.max(1)];
+    for (si, &ep) in stages.iter().enumerate() {
+        let mut scored: Vec<(Hyper, f64)> = Vec::with_capacity(pool.len());
+        for (ti, h) in pool.iter().enumerate() {
+            let cfg = TrainConfig {
+                artifact: artifact.to_string(),
+                dataset: train.kind,
+                epochs: ep,
+                hyper: *h,
+                seed: seed ^ (ti as u64) << 8,
+                ..Default::default()
+            };
+            // NOTE: DK search would need soft targets; HPO is exposed for
+            // non-DK methods (the DK scalars are part of the space only
+            // when the caller provides targets).
+            let res = run_with_data(rt, &cfg, train, None, None)?;
+            scored.push((*h, res.val_error));
+        }
+        scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        all.extend(scored.iter().cloned());
+        let keep = (scored.len() / 2).max(1);
+        pool = scored.into_iter().take(keep).map(|(h, _)| h).collect();
+        if si == stages.len() - 1 || pool.len() == 1 {
+            break;
+        }
+    }
+    let (best, best_val_error) = all
+        .iter()
+        .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+        .cloned()
+        .unwrap();
+    Ok(HpoResult { best, best_val_error, trials: all })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampled_hypers_in_bounds() {
+        let mut rng = Pcg32::new(1, 1);
+        for _ in 0..200 {
+            let h = sample_hyper(&mut rng, true);
+            assert!((0.01..=0.51).contains(&h.lr), "lr {}", h.lr);
+            assert!([0.5, 0.9, 0.95].contains(&h.momentum));
+            assert!([0.8, 0.9, 1.0].contains(&h.keep_prob));
+            assert!([0.3, 0.5, 0.7, 0.9].contains(&h.lam));
+        }
+        let h = sample_hyper(&mut rng, false);
+        assert_eq!(h.lam, 1.0);
+    }
+
+    #[test]
+    fn sampling_is_deterministic() {
+        let a: Vec<f32> = {
+            let mut r = Pcg32::new(3, 0x4270);
+            (0..5).map(|_| sample_hyper(&mut r, false).lr).collect()
+        };
+        let b: Vec<f32> = {
+            let mut r = Pcg32::new(3, 0x4270);
+            (0..5).map(|_| sample_hyper(&mut r, false).lr).collect()
+        };
+        assert_eq!(a, b);
+    }
+}

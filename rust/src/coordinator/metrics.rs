@@ -1,0 +1,193 @@
+//! Metrics sinks: JSONL run records and markdown/CSV tables in the
+//! shape of the paper's Tables 1–2 and Figures 2–4.
+
+use crate::util::json::{num, obj, s, Json};
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::Path;
+
+/// Append-only JSONL metrics writer.
+pub struct JsonlWriter {
+    file: std::fs::File,
+}
+
+impl JsonlWriter {
+    pub fn create(path: &Path) -> std::io::Result<JsonlWriter> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        Ok(JsonlWriter { file: std::fs::File::create(path)? })
+    }
+
+    pub fn write(&mut self, record: &Json) -> std::io::Result<()> {
+        writeln!(self.file, "{}", record.to_string())
+    }
+}
+
+/// One run record for the JSONL log.
+pub fn run_record(
+    experiment: &str,
+    dataset: &str,
+    method: &str,
+    artifact: &str,
+    compression: f64,
+    expansion: Option<usize>,
+    test_error: f64,
+    val_error: f64,
+    stored_params: usize,
+    wall_s: f64,
+    steps_per_s: f64,
+) -> Json {
+    let mut pairs = vec![
+        ("experiment", s(experiment)),
+        ("dataset", s(dataset)),
+        ("method", s(method)),
+        ("artifact", s(artifact)),
+        ("compression", num(compression)),
+        ("test_error", num(crate::util::round_to(test_error * 100.0, 3))),
+        ("val_error", num(crate::util::round_to(val_error * 100.0, 3))),
+        ("stored_params", num(stored_params as f64)),
+        ("wall_s", num(crate::util::round_to(wall_s, 2))),
+        ("steps_per_s", num(crate::util::round_to(steps_per_s, 1))),
+    ];
+    if let Some(x) = expansion {
+        pairs.push(("expansion", num(x as f64)));
+    }
+    obj(pairs)
+}
+
+/// A 2-D results table keyed by (row, column) → cell string, rendered
+/// as markdown or CSV with a fixed column order.
+pub struct Table {
+    pub title: String,
+    pub row_label: String,
+    columns: Vec<String>,
+    rows: BTreeMap<String, BTreeMap<String, String>>,
+    row_order: Vec<String>,
+}
+
+impl Table {
+    pub fn new(title: &str, row_label: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            row_label: row_label.to_string(),
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+            rows: BTreeMap::new(),
+            row_order: Vec::new(),
+        }
+    }
+
+    pub fn set(&mut self, row: &str, col: &str, value: String) {
+        if !self.rows.contains_key(row) {
+            self.row_order.push(row.to_string());
+        }
+        self.rows.entry(row.to_string()).or_default().insert(col.to_string(), value);
+    }
+
+    pub fn set_err(&mut self, row: &str, col: &str, err: f64) {
+        self.set(row, col, format!("{:.2}", err * 100.0));
+    }
+
+    /// Bold (markdown) the minimum numeric cell per row — the paper
+    /// prints best results in blue; we use bold.
+    pub fn bold_row_minima(&mut self) {
+        for row in self.rows.values_mut() {
+            let min = row
+                .values()
+                .filter_map(|v| v.parse::<f64>().ok())
+                .fold(f64::INFINITY, f64::min);
+            if min.is_finite() {
+                for v in row.values_mut() {
+                    if v.parse::<f64>().map(|x| (x - min).abs() < 5e-3).unwrap_or(false) {
+                        *v = format!("**{v}**");
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("### {}\n\n", self.title);
+        out.push_str(&format!("| {} |", self.row_label));
+        for c in &self.columns {
+            out.push_str(&format!(" {c} |"));
+        }
+        out.push('\n');
+        out.push_str(&format!("|{}", "---|".repeat(self.columns.len() + 1)));
+        out.push('\n');
+        for r in &self.row_order {
+            out.push_str(&format!("| {r} |"));
+            let cells = &self.rows[r];
+            for c in &self.columns {
+                out.push_str(&format!(" {} |", cells.get(c).map(String::as_str).unwrap_or("—")));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = format!("{}", self.row_label);
+        for c in &self.columns {
+            out.push_str(&format!(",{c}"));
+        }
+        out.push('\n');
+        for r in &self.row_order {
+            out.push_str(r);
+            let cells = &self.rows[r];
+            for c in &self.columns {
+                let raw = cells.get(c).cloned().unwrap_or_default();
+                out.push_str(&format!(",{}", raw.replace("**", "")));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn save(&self, dir: &Path, stem: &str) -> std::io::Result<()> {
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(dir.join(format!("{stem}.md")), self.to_markdown())?;
+        std::fs::write(dir.join(format!("{stem}.csv")), self.to_csv())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_markdown_and_csv() {
+        let mut t = Table::new("Test error (%)", "dataset", &["RER", "NN", "HashNet"]);
+        t.set_err("mnist", "RER", 0.0219);
+        t.set_err("mnist", "NN", 0.0169);
+        t.set_err("mnist", "HashNet", 0.0145);
+        t.bold_row_minima();
+        let md = t.to_markdown();
+        assert!(md.contains("| mnist | 2.19 | 1.69 | **1.45** |"), "{md}");
+        let csv = t.to_csv();
+        assert!(csv.contains("mnist,2.19,1.69,1.45"), "{csv}");
+    }
+
+    #[test]
+    fn missing_cells_render_dash() {
+        let mut t = Table::new("t", "r", &["a", "b"]);
+        t.set("x", "a", "1.0".into());
+        assert!(t.to_markdown().contains("| x | 1.0 | — |"));
+    }
+
+    #[test]
+    fn jsonl_writer_appends_lines() {
+        let path = std::env::temp_dir().join(format!("hn_jsonl_{}.log", std::process::id()));
+        {
+            let mut w = JsonlWriter::create(&path).unwrap();
+            w.write(&run_record("fig2", "mnist", "hashnet", "a", 0.125, None,
+                                0.0145, 0.015, 1000, 1.5, 100.0)).unwrap();
+            w.write(&obj(vec![("x", num(1.0))])).unwrap();
+        }
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        let first = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(first.req_f64("test_error").unwrap(), 1.45);
+        std::fs::remove_file(&path).ok();
+    }
+}

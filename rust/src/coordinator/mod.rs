@@ -1,0 +1,17 @@
+//! Layer-3 coordinator: the experiment engine.
+//!
+//! * [`trainer`] — one training job: minibatch loop over the artifact's
+//!   in-graph `train_step`, validation-based model selection, test eval.
+//! * [`repro`] — the paper's full experiment grid (Figures 2–4, Tables
+//!   1–2) on a worker pool, with JSONL + markdown/CSV emission.
+//! * [`hpo`] — random-search + successive-halving hyperparameter tuning
+//!   (substitute for the paper's Bayesian optimization).
+//! * [`metrics`] — JSONL records and paper-shaped pivot tables.
+//! * [`native`] — artifact ↔ native-engine parameter bridging for
+//!   cross-validation.
+
+pub mod hpo;
+pub mod metrics;
+pub mod native;
+pub mod repro;
+pub mod trainer;

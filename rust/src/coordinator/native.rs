@@ -1,0 +1,147 @@
+//! Bridge between artifact specs and the native engine: build a
+//! [`Network`] that computes *exactly* what an artifact computes, from
+//! the same [`ModelState`] parameters.
+//!
+//! Because `crate::hash` is bit-identical to the Python hashing, the
+//! native HashedNet and the Pallas kernel inside the artifact
+//! decompress the same virtual matrices; integration tests assert the
+//! logits agree to float tolerance.
+
+use crate::nn::{Layer, LayerKind, Network};
+use crate::runtime::{ArtifactSpec, ModelState};
+
+/// Instantiate the native twin of an artifact.
+pub fn network_from_spec(spec: &ArtifactSpec) -> Network {
+    let dims = &spec.dims;
+    let n_layers = dims.len() - 1;
+    let mut layers = Vec::with_capacity(n_layers);
+    for l in 0..n_layers {
+        let (m, n) = (dims[l], dims[l + 1]);
+        let kind = match spec.method.as_str() {
+            "hashnet" | "hashnet_dk" => LayerKind::Hashed { k: spec.budgets[l] },
+            "nn" | "dk" => LayerKind::Dense,
+            "rer" => LayerKind::Masked { k: spec.budgets[l] },
+            "lrd" => {
+                let r = (spec.budgets[l] as f64 / n as f64).round().max(1.0) as usize;
+                LayerKind::LowRank { r }
+            }
+            other => panic!("unknown method '{other}'"),
+        };
+        layers.push(Layer::new(m, n, kind, l, spec.seed_base));
+    }
+    Network::new(layers)
+}
+
+/// Copy artifact parameters into the native network.
+///
+/// Layouts match by construction (manifest order is layer order, and
+/// dense layers store `[W, b]` as two manifest params that concatenate
+/// into the native layer's single buffer).
+pub fn load_params(net: &mut Network, _spec: &ArtifactSpec, state: &ModelState) {
+    let mut it = state.params.iter();
+    for layer in &mut net.layers {
+        match layer.kind {
+            LayerKind::Dense => {
+                let w = it.next().expect("missing W");
+                let b = it.next().expect("missing b");
+                layer.params[..w.len()].copy_from_slice(w);
+                layer.params[w.len()..].copy_from_slice(b);
+            }
+            _ => {
+                let p = it.next().expect("missing param");
+                layer.params.copy_from_slice(p);
+            }
+        }
+    }
+    assert!(it.next().is_none(), "leftover artifact params");
+}
+
+/// Extract native network parameters back into artifact layout.
+pub fn store_params(net: &Network, spec: &ArtifactSpec, state: &mut ModelState) {
+    let mut idx = 0;
+    for layer in &net.layers {
+        match layer.kind {
+            LayerKind::Dense => {
+                let nm = layer.n * layer.m;
+                state.params[idx].copy_from_slice(&layer.params[..nm]);
+                state.params[idx + 1].copy_from_slice(&layer.params[nm..]);
+                idx += 2;
+            }
+            _ => {
+                state.params[idx].copy_from_slice(&layer.params);
+                idx += 1;
+            }
+        }
+    }
+    assert_eq!(idx, spec.params.len(), "param count mismatch");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn toy_manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+          "n_in": 8,
+          "artifacts": [
+            {"name":"h","method":"hashnet","dims":[8,6,3],"budgets":[27,11],
+             "batch":2,"seed_base":2654435769,"uses_soft_targets":false,
+             "compression":0.5,"virtual_params":75,"stored_params":38,
+             "params":[{"name":"w0","shape":[27],"init_std":0.47},
+                        {"name":"w1","shape":[11],"init_std":0.53}],
+             "graphs":{"train":"x","predict":"y"}},
+            {"name":"d","method":"nn","dims":[8,6,3],"budgets":[54,21],
+             "batch":2,"seed_base":2654435769,"uses_soft_targets":false,
+             "compression":1.0,"virtual_params":75,"stored_params":75,
+             "params":[{"name":"W0","shape":[6,8],"init_std":0.5},
+                        {"name":"b0","shape":[6],"init_std":0.0},
+                        {"name":"W1","shape":[3,6],"init_std":0.57},
+                        {"name":"b1","shape":[3],"init_std":0.0}],
+             "graphs":{"train":"x","predict":"y"}}
+          ]}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn roundtrip_hashed_params() {
+        let m = toy_manifest();
+        let spec = m.get("h").unwrap();
+        let state = ModelState::init(spec, 5);
+        let mut net = network_from_spec(spec);
+        load_params(&mut net, spec, &state);
+        assert_eq!(net.layers[0].params, state.params[0]);
+        let mut state2 = ModelState::init(spec, 99);
+        store_params(&net, spec, &mut state2);
+        assert_eq!(state2.params, state.params);
+    }
+
+    #[test]
+    fn roundtrip_dense_params_concat() {
+        let m = toy_manifest();
+        let spec = m.get("d").unwrap();
+        let state = ModelState::init(spec, 5);
+        let mut net = network_from_spec(spec);
+        load_params(&mut net, spec, &state);
+        assert_eq!(&net.layers[0].params[..48], state.params[0].as_slice());
+        assert_eq!(&net.layers[0].params[48..], state.params[1].as_slice());
+        let mut state2 = ModelState::init(spec, 99);
+        store_params(&net, spec, &mut state2);
+        assert_eq!(state2.params, state.params);
+    }
+
+    #[test]
+    fn stored_params_match_manifest() {
+        let m = toy_manifest();
+        for name in ["h", "d"] {
+            let spec = m.get(name).unwrap();
+            let net = network_from_spec(spec);
+            assert_eq!(
+                net.stored_params(),
+                spec.params.iter().map(|p| p.count()).sum::<usize>()
+            );
+        }
+    }
+}

@@ -1,0 +1,494 @@
+//! Experiment definitions and the parallel grid runner that regenerate
+//! every table and figure of the paper's evaluation (§6):
+//!
+//! * `fig2` — test error vs. compression, 3-layer, MNIST & ROT
+//! * `fig3` — same, 5-layer
+//! * `table1` — all 8 datasets at compression 1/8, 3- & 5-layer
+//! * `table2` — same at 1/64
+//! * `fig4` — fixed storage, virtual expansion ×{1..16}, MNIST
+//!
+//! Teachers (dense compression-1 nets) are trained first — once per
+//! (dataset, depth, out) — then all runs execute on a worker pool; each
+//! worker owns its own PJRT runtime. Results stream to JSONL and are
+//! pivoted into markdown/CSV tables mirroring the paper's layout.
+
+use super::metrics::{run_record, JsonlWriter, Table};
+use super::trainer::{self, SoftTargets, TrainConfig};
+use crate::data::{generate, Kind, Split};
+use crate::runtime::{Graph, Hyper, ModelState, Runtime};
+use crate::tensor::Matrix;
+use anyhow::{anyhow, Result};
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::path::PathBuf;
+use std::sync::{mpsc, Arc, Mutex};
+
+pub const METHODS: [&str; 6] = ["rer", "lrd", "nn", "dk", "hashnet", "hashnet_dk"];
+pub const COMPRESSIONS: [(u32, u32); 7] =
+    [(1, 1), (1, 2), (1, 4), (1, 8), (1, 16), (1, 32), (1, 64)];
+pub const EXPANSIONS: [usize; 5] = [1, 2, 4, 8, 16];
+
+/// Scale knobs for the whole grid (defaults match the CPU testbed;
+/// `--scale paper` in the CLI raises them to the paper's sizes).
+#[derive(Debug, Clone)]
+pub struct ReproOptions {
+    pub artifacts_dir: PathBuf,
+    pub results_dir: PathBuf,
+    pub hidden: usize,
+    pub exp_base: usize,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub epochs: usize,
+    pub teacher_epochs: usize,
+    pub workers: usize,
+    pub seed: u64,
+}
+
+impl Default for ReproOptions {
+    fn default() -> Self {
+        ReproOptions {
+            artifacts_dir: "artifacts".into(),
+            results_dir: "results".into(),
+            hidden: 100,
+            exp_base: 50,
+            n_train: 3000,
+            n_test: 2000,
+            epochs: 12,
+            teacher_epochs: 12,
+            workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            seed: 0x5EED,
+        }
+    }
+}
+
+/// One grid cell to run.
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub experiment: String,
+    pub dataset: Kind,
+    pub method: &'static str,
+    pub artifact: String,
+    pub compression: f64,
+    pub expansion: Option<usize>,
+    pub teacher: Option<String>,
+}
+
+/// Per-method default hyperparameters (stand-in for the paper's
+/// Bayesian optimization; see `hpo` for the search tool).
+pub fn default_hyper(method: &str) -> Hyper {
+    match method {
+        "dk" | "hashnet_dk" => Hyper { lam: 0.7, temp: 4.0, ..Hyper::default() },
+        _ => Hyper::default(),
+    }
+}
+
+fn artifact_name(method: &str, depth: usize, hidden: usize, out: usize, c: (u32, u32)) -> String {
+    format!("{method}_{depth}l_h{hidden}_o{out}_c{}-{}", c.0, c.1)
+}
+
+fn expansion_artifact(method: &str, depth: usize, base: usize, factor: usize) -> String {
+    format!("{method}_{depth}l_b{base}_o10_x{factor}")
+}
+
+fn teacher_name(depth: usize, hidden: usize, out: usize) -> String {
+    artifact_name("nn", depth, hidden, out, (1, 1))
+}
+
+/// Build the job list for one experiment id.
+pub fn jobs_for(experiment: &str, opt: &ReproOptions) -> Result<Vec<Job>> {
+    let mut jobs = Vec::new();
+    let mut push_grid = |datasets: &[Kind], depths: &[usize], comps: &[(u32, u32)], exp: &str| {
+        for &ds in datasets {
+            let out = ds.n_classes();
+            for &depth in depths {
+                for &c in comps {
+                    for method in METHODS {
+                        let teacher = matches!(method, "dk" | "hashnet_dk")
+                            .then(|| teacher_name(depth, opt.hidden, out));
+                        jobs.push(Job {
+                            experiment: exp.to_string(),
+                            dataset: ds,
+                            method,
+                            artifact: artifact_name(method, depth, opt.hidden, out, c),
+                            compression: c.0 as f64 / c.1 as f64,
+                            expansion: None,
+                            teacher,
+                        });
+                    }
+                }
+            }
+        }
+    };
+    match experiment {
+        "fig2" => push_grid(&[Kind::Mnist, Kind::Rot], &[3], &COMPRESSIONS, "fig2"),
+        "fig3" => push_grid(&[Kind::Mnist, Kind::Rot], &[5], &COMPRESSIONS, "fig3"),
+        "table1" => push_grid(&Kind::all(), &[3, 5], &[(1, 8)], "table1"),
+        "table2" => push_grid(&Kind::all(), &[3, 5], &[(1, 64)], "table2"),
+        "fig4" => {
+            for &depth in &[3usize, 5] {
+                for &factor in &EXPANSIONS {
+                    for method in ["hashnet", "rer", "lrd"] {
+                        jobs.push(Job {
+                            experiment: "fig4".into(),
+                            dataset: Kind::Mnist,
+                            method: match method {
+                                "hashnet" => "hashnet",
+                                "rer" => "rer",
+                                _ => "lrd",
+                            },
+                            artifact: expansion_artifact(method, depth, opt.exp_base, factor),
+                            compression: 1.0 / factor as f64,
+                            expansion: Some(factor),
+                            teacher: None,
+                        });
+                    }
+                }
+                // the fixed-size dense reference (dashed line in Fig. 4)
+                jobs.push(Job {
+                    experiment: "fig4".into(),
+                    dataset: Kind::Mnist,
+                    method: "nn",
+                    artifact: expansion_artifact("nn", depth, opt.exp_base, 1),
+                    compression: 1.0,
+                    expansion: Some(1),
+                    teacher: None,
+                });
+            }
+        }
+        other => return Err(anyhow!("unknown experiment '{other}' (fig2|fig3|table1|table2|fig4)")),
+    }
+    Ok(jobs)
+}
+
+/// Result row streamed back from workers.
+#[derive(Debug, Clone)]
+pub struct RunRow {
+    pub job: Job,
+    pub test_error: f64,
+    pub val_error: f64,
+    pub stored_params: usize,
+    pub wall_s: f64,
+    pub steps_per_s: f64,
+}
+
+type TeacherMap = HashMap<(Kind, String), (ModelState, Matrix)>; // state + train logits
+
+/// Train all unique teachers needed by `jobs` (single runtime, serial —
+/// teachers are few and each is the most expensive config).
+fn train_teachers(jobs: &[Job], opt: &ReproOptions) -> Result<TeacherMap> {
+    let mut needed: BTreeMap<(Kind, String), ()> = BTreeMap::new();
+    for j in jobs {
+        if let Some(t) = &j.teacher {
+            needed.insert((j.dataset, t.clone()), ());
+        }
+    }
+    let mut map = TeacherMap::new();
+    if needed.is_empty() {
+        return Ok(map);
+    }
+    let rt = Runtime::open(&opt.artifacts_dir)?;
+    for (ds, teacher) in needed.keys() {
+        eprintln!("[teacher] {} on {}", teacher, ds.name());
+        let train = generate(*ds, Split::Train, opt.n_train, opt.seed);
+        // teachers get the same lr screen as the grid cells
+        let mut best: Option<(f64, crate::runtime::ModelState)> = None;
+        for &lr in &LR_SCREEN {
+            let cfg = TrainConfig {
+                artifact: teacher.clone(),
+                dataset: *ds,
+                n_train: opt.n_train,
+                n_test: opt.n_test,
+                epochs: opt.teacher_epochs,
+                hyper: crate::runtime::Hyper { lr, ..Default::default() },
+                seed: opt.seed,
+                teacher: None,
+                patience: 0,
+            };
+            let res = trainer::run_with_data(&rt, &cfg, &train, None, None)?;
+            if best.as_ref().map(|(v, _)| res.val_error < *v).unwrap_or(true) {
+                best = Some((res.val_error, res.state));
+            }
+        }
+        let (_, state) = best.unwrap();
+        let exe = rt.load(teacher, Graph::Predict)?;
+        let logits = exe.predict_all(&state, &train.images)?;
+        map.insert((*ds, teacher.clone()), (state, logits));
+    }
+    Ok(map)
+}
+
+/// Run a job list on a worker pool; stream rows back in completion order.
+pub fn run_jobs(jobs: Vec<Job>, opt: &ReproOptions) -> Result<Vec<RunRow>> {
+    let teachers = Arc::new(train_teachers(&jobs, opt)?);
+    let total = jobs.len();
+    let queue = Arc::new(Mutex::new(VecDeque::from(jobs)));
+    let (tx, rx) = mpsc::channel::<Result<RunRow>>();
+    let n_workers = opt.workers.clamp(1, total.max(1));
+    let mut handles = Vec::new();
+    for _ in 0..n_workers {
+        let queue = queue.clone();
+        let tx = tx.clone();
+        let teachers = teachers.clone();
+        let opt = opt.clone();
+        handles.push(std::thread::spawn(move || {
+            let rt = match Runtime::open(&opt.artifacts_dir) {
+                Ok(rt) => rt,
+                Err(e) => {
+                    let _ = tx.send(Err(e));
+                    return;
+                }
+            };
+            loop {
+                let job = match queue.lock().unwrap().pop_front() {
+                    Some(j) => j,
+                    None => break,
+                };
+                let _ = tx.send(run_one(&rt, &job, &teachers, &opt));
+            }
+        }));
+    }
+    drop(tx);
+    let mut rows = Vec::with_capacity(total);
+    for (i, res) in rx.iter().enumerate() {
+        match res {
+            Ok(row) => {
+                eprintln!(
+                    "[{}/{}] {} {} {}: test {:.2}% ({:.1}s, {:.0} steps/s)",
+                    i + 1, total, row.job.experiment, row.job.dataset.name(),
+                    row.job.artifact, row.test_error * 100.0, row.wall_s, row.steps_per_s
+                );
+                rows.push(row);
+            }
+            Err(e) => eprintln!("[{}/{}] FAILED: {e:#}", i + 1, total),
+        }
+    }
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(rows)
+}
+
+/// Learning-rate candidates screened per (method × dataset) cell — the
+/// paper tunes hyperparameters per configuration with Bayesian opt; a
+/// short validation screen over a log grid plays that role here (the
+/// full random-search tool lives in [`super::hpo`]).
+pub const LR_SCREEN: [f32; 2] = [0.1, 0.01];
+
+fn run_one(
+    rt: &Runtime,
+    job: &Job,
+    teachers: &TeacherMap,
+    opt: &ReproOptions,
+) -> Result<RunRow> {
+    let hyper = default_hyper(job.method);
+    let mut cfg = TrainConfig {
+        artifact: job.artifact.clone(),
+        dataset: job.dataset,
+        n_train: opt.n_train,
+        n_test: opt.n_test,
+        epochs: opt.epochs,
+        hyper,
+        seed: opt.seed,
+        teacher: job.teacher.clone(),
+        patience: 0,
+    };
+    let soft = match &job.teacher {
+        Some(t) => {
+            let (_, logits) = teachers
+                .get(&(job.dataset, t.clone()))
+                .ok_or_else(|| anyhow!("missing teacher {t} for {}", job.dataset.name()))?;
+            let mut scaled = logits.clone();
+            scaled.scale(1.0 / hyper.temp);
+            Some(SoftTargets { probs: scaled.softmax_rows(), temp: hyper.temp })
+        }
+        None => None,
+    };
+    // short validation screen over the lr grid, then the full run
+    let mut best_lr = LR_SCREEN[0];
+    let mut best_val = f64::INFINITY;
+    for &lr in &LR_SCREEN {
+        let mut probe = cfg.clone();
+        probe.hyper.lr = lr;
+        probe.epochs = (opt.epochs / 4).clamp(2, 3);
+        let v = trainer::run(rt, &probe, soft.as_ref())?.val_error;
+        if v < best_val {
+            best_val = v;
+            best_lr = lr;
+        }
+    }
+    cfg.hyper.lr = best_lr;
+    let res = trainer::run(rt, &cfg, soft.as_ref())?;
+    Ok(RunRow {
+        job: job.clone(),
+        test_error: res.test_error,
+        val_error: res.val_error,
+        stored_params: res.stored_params,
+        wall_s: res.wall_s,
+        steps_per_s: res.steps_per_s,
+    })
+}
+
+/// Run one experiment end-to-end and emit JSONL + tables.
+pub fn run_experiment(experiment: &str, opt: &ReproOptions) -> Result<()> {
+    let jobs = jobs_for(experiment, opt)?;
+    eprintln!("experiment {experiment}: {} runs on {} workers", jobs.len(), opt.workers);
+    let rows = run_jobs(jobs, opt)?;
+
+    std::fs::create_dir_all(&opt.results_dir)?;
+    let mut log = JsonlWriter::create(&opt.results_dir.join(format!("{experiment}.jsonl")))?;
+    for r in &rows {
+        log.write(&run_record(
+            &r.job.experiment, r.job.dataset.name(), r.job.method, &r.job.artifact,
+            r.job.compression, r.job.expansion, r.test_error, r.val_error,
+            r.stored_params, r.wall_s, r.steps_per_s,
+        ))?;
+    }
+    for table in pivot_tables(experiment, &rows) {
+        let stem = table.title.split_whitespace().next().unwrap_or("table").to_lowercase();
+        table.save(&opt.results_dir, &stem)?;
+        println!("{}", table.to_markdown());
+    }
+    Ok(())
+}
+
+/// Pivot result rows into the paper's table/figure layouts.
+pub fn pivot_tables(experiment: &str, rows: &[RunRow]) -> Vec<Table> {
+    let method_cols = ["RER", "LRD", "NN", "DK", "HashNet", "HashNetDK"];
+    let pretty = |m: &str| -> &'static str {
+        match m {
+            "rer" => "RER",
+            "lrd" => "LRD",
+            "nn" => "NN",
+            "dk" => "DK",
+            "hashnet" => "HashNet",
+            _ => "HashNetDK",
+        }
+    };
+    match experiment {
+        "fig2" | "fig3" => {
+            let mut tables = Vec::new();
+            for ds in [Kind::Mnist, Kind::Rot] {
+                let mut t = Table::new(
+                    &format!("{experiment}_{} test error (%) vs compression", ds.name()),
+                    "compression",
+                    &method_cols,
+                );
+                for r in rows.iter().filter(|r| r.job.dataset == ds) {
+                    t.set_err(&format!("{:.5}", r.job.compression), pretty(r.job.method), r.test_error);
+                }
+                t.bold_row_minima();
+                tables.push(t);
+            }
+            tables
+        }
+        "table1" | "table2" => {
+            let cols: Vec<String> = [3, 5]
+                .iter()
+                .flat_map(|d| method_cols.iter().map(move |m| format!("{m}({d}L)")))
+                .collect();
+            let cols_ref: Vec<&str> = cols.iter().map(String::as_str).collect();
+            let mut t = Table::new(
+                &format!("{experiment} test error (%), compression {}",
+                         if experiment == "table1" { "1/8" } else { "1/64" }),
+                "dataset",
+                &cols_ref,
+            );
+            for r in rows {
+                let depth = if r.job.artifact.contains("_3l_") { 3 } else { 5 };
+                t.set_err(
+                    r.job.dataset.name(),
+                    &format!("{}({}L)", pretty(r.job.method), depth),
+                    r.test_error,
+                );
+            }
+            t.bold_row_minima();
+            vec![t]
+        }
+        "fig4" => {
+            let mut tables = Vec::new();
+            for depth in [3usize, 5] {
+                let mut t = Table::new(
+                    &format!("fig4_{depth}l test error (%) vs expansion (fixed storage)"),
+                    "expansion",
+                    &["NN", "RER", "LRD", "HashNet"],
+                );
+                for r in rows.iter().filter(|r| {
+                    r.job.artifact.contains(&format!("_{depth}l_"))
+                }) {
+                    let x = r.job.expansion.unwrap_or(1);
+                    t.set_err(&format!("{x}"), pretty(r.job.method), r.test_error);
+                }
+                tables.push(t);
+            }
+            tables
+        }
+        _ => Vec::new(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn job_lists_have_expected_sizes() {
+        let opt = ReproOptions::default();
+        assert_eq!(jobs_for("fig2", &opt).unwrap().len(), 2 * 7 * 6);
+        assert_eq!(jobs_for("fig3", &opt).unwrap().len(), 2 * 7 * 6);
+        assert_eq!(jobs_for("table1", &opt).unwrap().len(), 8 * 2 * 6);
+        assert_eq!(jobs_for("table2", &opt).unwrap().len(), 8 * 2 * 6);
+        assert_eq!(jobs_for("fig4", &opt).unwrap().len(), 2 * (5 * 3 + 1));
+        assert!(jobs_for("nope", &opt).is_err());
+    }
+
+    #[test]
+    fn artifact_names_match_aot_convention() {
+        let opt = ReproOptions::default();
+        let jobs = jobs_for("table1", &opt).unwrap();
+        assert!(jobs.iter().any(|j| j.artifact == "hashnet_3l_h100_o10_c1-8"));
+        assert!(jobs.iter().any(|j| j.artifact == "lrd_5l_h100_o2_c1-8"));
+        // binary datasets target the o2 artifacts
+        for j in &jobs {
+            if matches!(j.dataset, Kind::Rect | Kind::Convex) {
+                assert!(j.artifact.contains("_o2_"), "{}", j.artifact);
+            }
+        }
+    }
+
+    #[test]
+    fn dk_jobs_reference_teachers() {
+        let opt = ReproOptions::default();
+        let jobs = jobs_for("fig2", &opt).unwrap();
+        for j in &jobs {
+            match j.method {
+                "dk" | "hashnet_dk" => {
+                    assert_eq!(j.teacher.as_deref(), Some("nn_3l_h100_o10_c1-1"));
+                }
+                _ => assert!(j.teacher.is_none()),
+            }
+        }
+    }
+
+    #[test]
+    fn pivot_fig_table_shapes() {
+        let job = Job {
+            experiment: "fig2".into(),
+            dataset: Kind::Mnist,
+            method: "hashnet",
+            artifact: "hashnet_3l_h100_o10_c1-8".into(),
+            compression: 0.125,
+            expansion: None,
+            teacher: None,
+        };
+        let rows = vec![RunRow {
+            job,
+            test_error: 0.0145,
+            val_error: 0.015,
+            stored_params: 1,
+            wall_s: 1.0,
+            steps_per_s: 10.0,
+        }];
+        let tables = pivot_tables("fig2", &rows);
+        assert_eq!(tables.len(), 2);
+        assert!(tables[0].to_csv().contains("0.12500,,,,,1.45,"));
+    }
+}

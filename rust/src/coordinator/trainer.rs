@@ -1,0 +1,222 @@
+//! The per-run training loop: drives one artifact's `train_step` over
+//! shuffled minibatches, tracks validation error for model selection,
+//! and evaluates on the test split.
+//!
+//! This is the paper's experimental protocol (§6): SGD + momentum +
+//! dropout, minibatch 50, hyperparameters selected on a 20% validation
+//! split, test error reported for the best validation epoch.
+
+use crate::data::{Dataset, Kind, Split};
+use crate::runtime::{Graph, Hyper, ModelState, Runtime};
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg32;
+use anyhow::{anyhow, Result};
+use std::time::Instant;
+
+/// Everything needed to run one training job.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub artifact: String,
+    pub dataset: Kind,
+    pub n_train: usize,
+    pub n_test: usize,
+    pub epochs: usize,
+    pub hyper: Hyper,
+    pub seed: u64,
+    /// Teacher artifact name for DK methods (trained on the fly and
+    /// cached by the caller via [`TeacherCache`]).
+    pub teacher: Option<String>,
+    /// Early-stop patience in epochs without val improvement (0 = off).
+    pub patience: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            artifact: String::new(),
+            dataset: Kind::Basic,
+            n_train: 3000,
+            n_test: 2000,
+            epochs: 12,
+            hyper: Hyper::default(),
+            seed: 0x5EED,
+            teacher: None,
+            patience: 0,
+        }
+    }
+}
+
+/// Outcome of one training job.
+#[derive(Debug, Clone)]
+pub struct TrainResult {
+    pub artifact: String,
+    pub dataset: &'static str,
+    pub test_error: f64,
+    pub val_error: f64,
+    pub train_losses: Vec<f32>,
+    pub stored_params: usize,
+    pub virtual_params: usize,
+    pub wall_s: f64,
+    pub steps_per_s: f64,
+    pub state: ModelState,
+}
+
+/// Temperature-softened teacher probabilities for the train split.
+pub struct SoftTargets {
+    pub probs: Matrix,
+    pub temp: f32,
+}
+
+/// Compute soft targets from a trained teacher on given inputs.
+pub fn soft_targets(
+    rt: &Runtime,
+    teacher: &str,
+    teacher_state: &ModelState,
+    x: &Matrix,
+    temp: f32,
+) -> Result<SoftTargets> {
+    let exe = rt.load(teacher, Graph::Predict)?;
+    let logits = exe.predict_all(teacher_state, x)?;
+    let mut scaled = logits;
+    scaled.scale(1.0 / temp);
+    Ok(SoftTargets { probs: scaled.softmax_rows(), temp })
+}
+
+/// Train the `nn` compression-1 teacher for a dataset (used by DK).
+pub fn train_teacher(
+    rt: &Runtime,
+    teacher: &str,
+    train: &Dataset,
+    epochs: usize,
+    seed: u64,
+) -> Result<ModelState> {
+    let cfg = TrainConfig {
+        artifact: teacher.to_string(),
+        dataset: train.kind,
+        epochs,
+        seed,
+        hyper: Hyper { keep_prob: 0.9, ..Hyper::default() },
+        ..Default::default()
+    };
+    let res = run_with_data(rt, &cfg, train, None, None)?;
+    Ok(res.state)
+}
+
+/// Evaluate classification error of an artifact state on a dataset.
+pub fn evaluate(
+    rt: &Runtime,
+    artifact: &str,
+    state: &ModelState,
+    ds: &Dataset,
+) -> Result<f64> {
+    let exe = rt.load(artifact, Graph::Predict)?;
+    let logits = exe.predict_all(state, &ds.images)?;
+    let pred = logits.argmax_rows();
+    let wrong = pred
+        .iter()
+        .zip(&ds.labels)
+        .filter(|(p, l)| **p != **l as usize)
+        .count();
+    Ok(wrong as f64 / ds.labels.len() as f64)
+}
+
+/// Full job: synthesize data, train, select on validation, test.
+pub fn run(rt: &Runtime, cfg: &TrainConfig, soft: Option<&SoftTargets>) -> Result<TrainResult> {
+    let train = crate::data::generate(cfg.dataset, Split::Train, cfg.n_train, cfg.seed);
+    let test = crate::data::generate(cfg.dataset, Split::Test, cfg.n_test, cfg.seed);
+    run_with_data(rt, cfg, &train, Some(&test), soft)
+}
+
+/// Training loop over caller-provided data (test split optional).
+pub fn run_with_data(
+    rt: &Runtime,
+    cfg: &TrainConfig,
+    train_full: &Dataset,
+    test: Option<&Dataset>,
+    soft: Option<&SoftTargets>,
+) -> Result<TrainResult> {
+    let spec = rt
+        .manifest
+        .get(&cfg.artifact)
+        .ok_or_else(|| anyhow!("unknown artifact '{}'", cfg.artifact))?
+        .clone();
+    let out_dim = *spec.dims.last().unwrap();
+    if train_full.n_classes > out_dim {
+        return Err(anyhow!(
+            "dataset {} has {} classes but artifact {} outputs {}",
+            train_full.kind.name(), train_full.n_classes, spec.name, out_dim
+        ));
+    }
+    if spec.uses_soft_targets && soft.is_none() {
+        return Err(anyhow!("artifact {} needs soft targets", spec.name));
+    }
+
+    let (train, val) = train_full.split_validation(0.2);
+    let exe = rt.load(&cfg.artifact, Graph::Train)?;
+    let mut state = ModelState::init(&spec, cfg.seed);
+    let mut rng = Pcg32::new(cfg.seed, 0xB0B);
+
+    let t0 = Instant::now();
+    let mut losses = Vec::with_capacity(cfg.epochs);
+    let mut best: Option<(f64, ModelState)> = None;
+    let mut stale = 0usize;
+    let mut steps = 0u64;
+    let batch = spec.batch;
+    // reused minibatch buffers — the step loop is allocation-free
+    let mut x = Matrix::zeros(batch, train.images.cols);
+    let mut y = vec![0i32; batch];
+    let mut soft_buf = soft.map(|_| Matrix::zeros(batch, out_dim));
+    for epoch in 0..cfg.epochs {
+        let perm = rng.permutation(train.len());
+        let mut total = 0.0f32;
+        let mut count = 0u32;
+        for chunk in perm.chunks(batch) {
+            train.gather_batch_into(chunk, &mut x, &mut y);
+            let soft_batch = soft.map(|s| {
+                let m = soft_buf.as_mut().unwrap();
+                for (b, &i) in chunk.iter().cycle().take(batch).enumerate() {
+                    m.row_mut(b).copy_from_slice(s.probs.row(i as usize));
+                }
+                &*m
+            });
+            let step_seed = (cfg.seed as u32)
+                .wrapping_mul(2654435761)
+                .wrapping_add(steps as u32);
+            let loss = exe.train_step(&mut state, &x, &y, soft_batch, &cfg.hyper, step_seed)?;
+            total += loss;
+            count += 1;
+            steps += 1;
+        }
+        losses.push(total / count as f32);
+        // validation-based model selection
+        let v_err = evaluate(rt, &cfg.artifact, &state, &val)?;
+        let improved = best.as_ref().map(|(b, _)| v_err < *b).unwrap_or(true);
+        if improved {
+            best = Some((v_err, state.clone()));
+            stale = 0;
+        } else {
+            stale += 1;
+            if cfg.patience > 0 && stale >= cfg.patience && epoch + 1 < cfg.epochs {
+                break;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let (val_error, best_state) = best.unwrap_or((1.0, state));
+    let test_error = match test {
+        Some(t) => evaluate(rt, &cfg.artifact, &best_state, t)?,
+        None => val_error,
+    };
+    Ok(TrainResult {
+        artifact: cfg.artifact.clone(),
+        dataset: train_full.kind.name(),
+        test_error,
+        val_error,
+        train_losses: losses,
+        stored_params: spec.stored_params,
+        virtual_params: spec.virtual_params,
+        wall_s: wall,
+        steps_per_s: steps as f64 / wall.max(1e-9),
+        state: best_state,
+    })
+}

@@ -1,0 +1,241 @@
+//! Procedural digit renderer: MNIST-like 28×28 grayscale digits from
+//! per-class stroke skeletons with per-sample jitter.
+//!
+//! Each class 0–9 is a set of polylines in normalized [0,1]² coordinates.
+//! A sample applies a random affine transform (translation, anisotropic
+//! scale, shear, small rotation), draws the strokes with a random
+//! thickness using a distance-field (anti-aliased), then adds weak pixel
+//! noise. The result is a deterministic, learnable 10-class problem with
+//! the same interface and intra-class variability profile as MNIST
+//! (DESIGN.md §3 documents the substitution).
+
+use super::{Dataset, Kind, IMG_SIDE, N_PIXELS};
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg32;
+
+type Poly = &'static [(f32, f32)];
+
+/// Stroke skeletons per digit class (polylines, normalized coords).
+fn skeleton(class: u8) -> Vec<Vec<(f32, f32)>> {
+    fn ellipse(cx: f32, cy: f32, rx: f32, ry: f32, n: usize) -> Vec<(f32, f32)> {
+        (0..=n)
+            .map(|i| {
+                let t = i as f32 / n as f32 * std::f32::consts::TAU;
+                (cx + rx * t.cos(), cy + ry * t.sin())
+            })
+            .collect()
+    }
+    const P2: fn(Poly) -> Vec<(f32, f32)> = |p| p.to_vec();
+    match class {
+        0 => vec![ellipse(0.5, 0.5, 0.24, 0.36, 24)],
+        1 => vec![
+            P2(&[(0.38, 0.28), (0.56, 0.13), (0.56, 0.87)]),
+            P2(&[(0.38, 0.87), (0.72, 0.87)]),
+        ],
+        2 => vec![P2(&[
+            (0.28, 0.30), (0.32, 0.17), (0.50, 0.12), (0.66, 0.19), (0.70, 0.33),
+            (0.58, 0.50), (0.42, 0.64), (0.28, 0.86), (0.74, 0.86),
+        ])],
+        3 => vec![P2(&[
+            (0.28, 0.19), (0.46, 0.12), (0.64, 0.19), (0.67, 0.32), (0.55, 0.45),
+            (0.46, 0.48), (0.58, 0.52), (0.69, 0.63), (0.66, 0.78), (0.48, 0.88),
+            (0.28, 0.81),
+        ])],
+        4 => vec![
+            P2(&[(0.64, 0.13), (0.30, 0.62), (0.78, 0.62)]),
+            P2(&[(0.64, 0.13), (0.64, 0.88)]),
+        ],
+        5 => vec![P2(&[
+            (0.70, 0.13), (0.32, 0.13), (0.30, 0.45), (0.50, 0.40), (0.66, 0.50),
+            (0.69, 0.67), (0.58, 0.83), (0.38, 0.87), (0.27, 0.78),
+        ])],
+        6 => vec![P2(&[
+            (0.62, 0.14), (0.46, 0.12), (0.33, 0.28), (0.28, 0.52), (0.31, 0.74),
+            (0.46, 0.88), (0.62, 0.80), (0.67, 0.63), (0.55, 0.51), (0.38, 0.55),
+            (0.30, 0.66),
+        ])],
+        7 => vec![
+            P2(&[(0.26, 0.14), (0.73, 0.14), (0.42, 0.87)]),
+            P2(&[(0.36, 0.50), (0.62, 0.50)]),
+        ],
+        8 => vec![
+            ellipse(0.50, 0.31, 0.17, 0.18, 18),
+            ellipse(0.50, 0.67, 0.21, 0.20, 18),
+        ],
+        9 => vec![
+            ellipse(0.52, 0.33, 0.18, 0.19, 18),
+            P2(&[(0.69, 0.35), (0.64, 0.88)]),
+        ],
+        _ => unreachable!("digit class out of range"),
+    }
+}
+
+/// Affine jitter parameters for one sample.
+struct Jitter {
+    dx: f32,
+    dy: f32,
+    sx: f32,
+    sy: f32,
+    rot: f32,
+    shear: f32,
+    thickness: f32,
+    intensity: f32,
+}
+
+impl Jitter {
+    fn sample(rng: &mut Pcg32) -> Jitter {
+        Jitter {
+            dx: rng.range_f32(-0.09, 0.09),
+            dy: rng.range_f32(-0.09, 0.09),
+            sx: rng.range_f32(0.72, 1.15),
+            sy: rng.range_f32(0.72, 1.15),
+            rot: rng.range_f32(-0.35, 0.35),
+            shear: rng.range_f32(-0.25, 0.25),
+            thickness: rng.range_f32(0.035, 0.095),
+            intensity: rng.range_f32(0.7, 1.0),
+        }
+    }
+
+    fn apply(&self, (x, y): (f32, f32)) -> (f32, f32) {
+        let (cx, cy) = (x - 0.5, y - 0.5);
+        let (sx, sy) = (cx * self.sx + cy * self.shear, cy * self.sy);
+        let (c, s) = (self.rot.cos(), self.rot.sin());
+        (0.5 + c * sx - s * sy + self.dx, 0.5 + s * sx + c * sy + self.dy)
+    }
+}
+
+/// Distance from point `p` to segment `ab`.
+fn seg_dist(p: (f32, f32), a: (f32, f32), b: (f32, f32)) -> f32 {
+    let (vx, vy) = (b.0 - a.0, b.1 - a.1);
+    let (wx, wy) = (p.0 - a.0, p.1 - a.1);
+    let len2 = vx * vx + vy * vy;
+    let t = if len2 <= 1e-12 { 0.0 } else { ((wx * vx + wy * vy) / len2).clamp(0.0, 1.0) };
+    let (dx, dy) = (wx - t * vx, wy - t * vy);
+    (dx * dx + dy * dy).sqrt()
+}
+
+/// Render one digit image into a 784-length buffer.
+pub fn render_one(class: u8, rng: &mut Pcg32, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), N_PIXELS);
+    let jit = Jitter::sample(rng);
+    // affine jitter + per-point "hand wobble" so strokes bend sample to
+    // sample (the intra-class variability that makes the task MNIST-hard)
+    let strokes: Vec<Vec<(f32, f32)>> = skeleton(class)
+        .into_iter()
+        .map(|poly| {
+            poly.into_iter()
+                .map(|p| {
+                    let (x, y) = jit.apply(p);
+                    (x + 0.02 * rng.normal(), y + 0.02 * rng.normal())
+                })
+                .collect()
+        })
+        .collect();
+
+    // bounding box of strokes, padded by thickness, to skip empty pixels
+    let (mut min_x, mut min_y, mut max_x, mut max_y) = (1f32, 1f32, 0f32, 0f32);
+    for poly in &strokes {
+        for &(x, y) in poly {
+            min_x = min_x.min(x);
+            min_y = min_y.min(y);
+            max_x = max_x.max(x);
+            max_y = max_y.max(y);
+        }
+    }
+    let pad = jit.thickness + 2.0 / IMG_SIDE as f32;
+
+    let aa = 1.2 / IMG_SIDE as f32; // anti-alias falloff width
+    for py in 0..IMG_SIDE {
+        let y = (py as f32 + 0.5) / IMG_SIDE as f32;
+        for px in 0..IMG_SIDE {
+            let x = (px as f32 + 0.5) / IMG_SIDE as f32;
+            let idx = py * IMG_SIDE + px;
+            if x < min_x - pad || x > max_x + pad || y < min_y - pad || y > max_y + pad {
+                out[idx] = 0.0;
+                continue;
+            }
+            let mut d = f32::MAX;
+            for poly in &strokes {
+                for w in poly.windows(2) {
+                    d = d.min(seg_dist((x, y), w[0], w[1]));
+                }
+            }
+            let v = 1.0 - ((d - jit.thickness * 0.5) / aa).clamp(0.0, 1.0);
+            out[idx] = (v * jit.intensity).clamp(0.0, 1.0);
+        }
+    }
+    // sensor noise everywhere (stronger on ink)
+    for v in out.iter_mut() {
+        let amp = if *v > 0.0 { 0.10 } else { 0.03 };
+        *v = (*v + amp * (rng.next_f32() - 0.5)).clamp(0.0, 1.0);
+    }
+}
+
+/// Render `n` digits with balanced classes in shuffled order (class
+/// counts differ by at most one, like the curated originals).
+pub fn render_digits(n: usize, rng: &mut Pcg32) -> Dataset {
+    let mut images = Matrix::zeros(n, N_PIXELS);
+    let order = rng.permutation(n);
+    let mut labels = vec![0u8; n];
+    for (pos, &slot) in order.iter().enumerate() {
+        let class = (pos % 10) as u8;
+        render_one(class, rng, images.row_mut(slot as usize));
+        labels[slot as usize] = class;
+    }
+    Dataset { kind: Kind::Basic, images, labels, n_classes: 10 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn digits_have_ink_and_background() {
+        let mut rng = Pcg32::new(1, 1);
+        let mut buf = vec![0.0; N_PIXELS];
+        for class in 0..10 {
+            render_one(class, &mut rng, &mut buf);
+            let ink: usize = buf.iter().filter(|&&v| v > 0.5).count();
+            let blank: usize = buf.iter().filter(|&&v| v < 0.1).count();
+            assert!(ink > 20, "class {class}: too little ink ({ink})");
+            assert!(blank > 300, "class {class}: too little background");
+        }
+    }
+
+    #[test]
+    fn classes_are_visually_distinct() {
+        // average images of different classes should differ substantially
+        let mut rng = Pcg32::new(2, 2);
+        let mut means = vec![vec![0.0f32; N_PIXELS]; 10];
+        let reps = 20;
+        let mut buf = vec![0.0; N_PIXELS];
+        for class in 0..10u8 {
+            for _ in 0..reps {
+                render_one(class, &mut rng, &mut buf);
+                for (m, &v) in means[class as usize].iter_mut().zip(&buf) {
+                    *m += v / reps as f32;
+                }
+            }
+        }
+        for a in 0..10 {
+            for b in (a + 1)..10 {
+                let d: f32 = means[a]
+                    .iter()
+                    .zip(&means[b])
+                    .map(|(x, y)| (x - y).abs())
+                    .sum();
+                assert!(d > 10.0, "classes {a} and {b} too similar: {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn jitter_varies_within_class() {
+        let mut rng = Pcg32::new(3, 3);
+        let mut a = vec![0.0; N_PIXELS];
+        let mut b = vec![0.0; N_PIXELS];
+        render_one(5, &mut rng, &mut a);
+        render_one(5, &mut rng, &mut b);
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,107 @@
+//! IDX (MNIST) file loader: if the real MNIST files are placed under
+//! `data/mnist/` (`train-images-idx3-ubyte`, `train-labels-idx1-ubyte`,
+//! `t10k-images-idx3-ubyte`, `t10k-labels-idx1-ubyte`), the MNIST
+//! dataset uses them instead of the synthetic digits.
+
+use super::{Dataset, Kind, Split, N_PIXELS};
+use crate::tensor::Matrix;
+use std::path::Path;
+
+/// Attempt to load real MNIST; `None` if files are absent or malformed.
+pub fn try_load_mnist(split: Split, n: usize) -> Option<Dataset> {
+    let dir = std::env::var("HASHEDNETS_MNIST_DIR").unwrap_or_else(|_| "data/mnist".into());
+    let (img_name, lbl_name) = match split {
+        Split::Train => ("train-images-idx3-ubyte", "train-labels-idx1-ubyte"),
+        Split::Test => ("t10k-images-idx3-ubyte", "t10k-labels-idx1-ubyte"),
+    };
+    let images = read_idx_images(&Path::new(&dir).join(img_name))?;
+    let labels = read_idx_labels(&Path::new(&dir).join(lbl_name))?;
+    if images.len() != labels.len() {
+        return None;
+    }
+    let n = n.min(labels.len());
+    let mut m = Matrix::zeros(n, N_PIXELS);
+    for i in 0..n {
+        for (dst, &b) in m.row_mut(i).iter_mut().zip(&images[i]) {
+            *dst = b as f32 / 255.0;
+        }
+    }
+    Some(Dataset { kind: Kind::Mnist, images: m, labels: labels[..n].to_vec(), n_classes: 10 })
+}
+
+fn read_u32_be(b: &[u8], off: usize) -> Option<u32> {
+    b.get(off..off + 4).map(|s| u32::from_be_bytes(s.try_into().unwrap()))
+}
+
+fn read_idx_images(path: &Path) -> Option<Vec<Vec<u8>>> {
+    let bytes = std::fs::read(path).ok()?;
+    if read_u32_be(&bytes, 0)? != 0x0000_0803 {
+        return None;
+    }
+    let n = read_u32_be(&bytes, 4)? as usize;
+    let rows = read_u32_be(&bytes, 8)? as usize;
+    let cols = read_u32_be(&bytes, 12)? as usize;
+    if rows * cols != N_PIXELS || bytes.len() < 16 + n * N_PIXELS {
+        return None;
+    }
+    Some((0..n).map(|i| bytes[16 + i * N_PIXELS..16 + (i + 1) * N_PIXELS].to_vec()).collect())
+}
+
+fn read_idx_labels(path: &Path) -> Option<Vec<u8>> {
+    let bytes = std::fs::read(path).ok()?;
+    if read_u32_be(&bytes, 0)? != 0x0000_0801 {
+        return None;
+    }
+    let n = read_u32_be(&bytes, 4)? as usize;
+    if bytes.len() < 8 + n {
+        return None;
+    }
+    Some(bytes[8..8 + n].to_vec())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn loads_wellformed_idx() {
+        let dir = std::env::temp_dir().join(format!("hn_idx_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        // two 28x28 images
+        let mut img = vec![];
+        img.extend_from_slice(&0x0803u32.to_be_bytes());
+        img.extend_from_slice(&2u32.to_be_bytes());
+        img.extend_from_slice(&28u32.to_be_bytes());
+        img.extend_from_slice(&28u32.to_be_bytes());
+        img.extend(std::iter::repeat(128u8).take(2 * N_PIXELS));
+        std::fs::File::create(dir.join("train-images-idx3-ubyte"))
+            .unwrap().write_all(&img).unwrap();
+        let mut lbl = vec![];
+        lbl.extend_from_slice(&0x0801u32.to_be_bytes());
+        lbl.extend_from_slice(&2u32.to_be_bytes());
+        lbl.extend_from_slice(&[3u8, 7u8]);
+        std::fs::File::create(dir.join("train-labels-idx1-ubyte"))
+            .unwrap().write_all(&lbl).unwrap();
+
+        std::env::set_var("HASHEDNETS_MNIST_DIR", &dir);
+        let ds = try_load_mnist(Split::Train, 10).expect("should load");
+        std::env::remove_var("HASHEDNETS_MNIST_DIR");
+        assert_eq!(ds.len(), 2);
+        assert_eq!(ds.labels, vec![3, 7]);
+        assert!((ds.images.at(0, 0) - 128.0 / 255.0).abs() < 1e-6);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join(format!("hn_idx_bad_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("train-images-idx3-ubyte"), [0u8; 32]).unwrap();
+        std::fs::write(dir.join("train-labels-idx1-ubyte"), [0u8; 32]).unwrap();
+        std::env::set_var("HASHEDNETS_MNIST_DIR", &dir);
+        assert!(try_load_mnist(Split::Train, 10).is_none());
+        std::env::remove_var("HASHEDNETS_MNIST_DIR");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,280 @@
+//! Dataset substrate: procedural equivalents of the paper's eight
+//! benchmark datasets (§6).
+//!
+//! The paper evaluates on MNIST, four Larochelle-2007 MNIST variants
+//! (ROT, BG-RAND, BG-IMG, BG-IMG-ROT) and two binary shape datasets
+//! (RECT, CONVEX). The originals are not downloadable in this offline
+//! environment, so we synthesize them (DESIGN.md §3):
+//!
+//! * digits are rendered procedurally from per-class stroke skeletons
+//!   with affine/thickness jitter ([`digits`]),
+//! * the variants apply the *same transformations* the original datasets
+//!   applied — rotation, uniform-noise backgrounds, textured image
+//!   backgrounds ([`variants`]),
+//! * RECT and CONVEX follow their published constructions exactly
+//!   ([`shapes`]).
+//!
+//! If real MNIST IDX files are present under `data/mnist/`, [`loader`]
+//! uses them instead of the synthetic digits.
+//!
+//! Everything is deterministic in `(kind, split, seed)`.
+
+pub mod digits;
+pub mod loader;
+pub mod shapes;
+pub mod variants;
+
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg32;
+
+pub const IMG_SIDE: usize = 28;
+pub const N_PIXELS: usize = IMG_SIDE * IMG_SIDE;
+
+/// The eight benchmark datasets.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Kind {
+    /// Original MNIST (larger train split in the paper).
+    Mnist,
+    /// MNIST-BASIC: the Larochelle variant protocol with plain digits.
+    Basic,
+    /// Digits rotated uniformly in [0, 2π).
+    Rot,
+    /// Uniform random-noise background behind the digit.
+    BgRand,
+    /// Textured (image-patch) background behind the digit.
+    BgImg,
+    /// Rotation + textured background.
+    BgImgRot,
+    /// Wide-vs-tall rectangle outlines (binary).
+    Rect,
+    /// Convex vs. non-convex white region (binary).
+    Convex,
+}
+
+impl Kind {
+    pub fn parse(s: &str) -> Option<Kind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "mnist" => Kind::Mnist,
+            "basic" => Kind::Basic,
+            "rot" => Kind::Rot,
+            "bg-rand" | "bg_rand" | "bgrand" => Kind::BgRand,
+            "bg-img" | "bg_img" | "bgimg" => Kind::BgImg,
+            "bg-img-rot" | "bg_img_rot" | "bgimgrot" => Kind::BgImgRot,
+            "rect" => Kind::Rect,
+            "convex" => Kind::Convex,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Kind::Mnist => "mnist",
+            Kind::Basic => "basic",
+            Kind::Rot => "rot",
+            Kind::BgRand => "bg-rand",
+            Kind::BgImg => "bg-img",
+            Kind::BgImgRot => "bg-img-rot",
+            Kind::Rect => "rect",
+            Kind::Convex => "convex",
+        }
+    }
+
+    pub fn all() -> [Kind; 8] {
+        [
+            Kind::Mnist, Kind::Basic, Kind::Rot, Kind::BgRand,
+            Kind::BgImg, Kind::BgImgRot, Kind::Rect, Kind::Convex,
+        ]
+    }
+
+    pub fn n_classes(&self) -> usize {
+        match self {
+            Kind::Rect | Kind::Convex => 2,
+            _ => 10,
+        }
+    }
+}
+
+/// An in-memory labeled image dataset, flattened to `n × 784`.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub kind: Kind,
+    pub images: Matrix,
+    pub labels: Vec<u8>,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.labels.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.labels.is_empty()
+    }
+
+    /// Copy minibatch `indices` into `(x, y)` buffers (padding with
+    /// wrap-around so fixed-batch artifacts always get full batches).
+    pub fn gather_batch(&self, indices: &[u32], batch: usize) -> (Matrix, Vec<i32>) {
+        let mut x = Matrix::zeros(batch, self.images.cols);
+        let mut y = vec![0i32; batch];
+        self.gather_batch_into(indices, &mut x, &mut y);
+        (x, y)
+    }
+
+    /// Allocation-free variant for hot loops: fill caller-owned buffers.
+    pub fn gather_batch_into(&self, indices: &[u32], x: &mut Matrix, y: &mut [i32]) {
+        let batch = y.len();
+        debug_assert_eq!(x.rows, batch);
+        for b in 0..batch {
+            let idx = indices[b % indices.len()] as usize;
+            x.row_mut(b).copy_from_slice(self.images.row(idx));
+            y[b] = self.labels[idx] as i32;
+        }
+    }
+
+    /// Split off the last `frac` of the data as a validation set
+    /// (paper: 20% validation splits for hyperparameter selection).
+    pub fn split_validation(&self, frac: f32) -> (Dataset, Dataset) {
+        let n_val = ((self.len() as f32) * frac) as usize;
+        let n_tr = self.len() - n_val;
+        let take = |lo: usize, hi: usize| -> Dataset {
+            let mut images = Matrix::zeros(hi - lo, self.images.cols);
+            for (r, i) in (lo..hi).enumerate() {
+                images.row_mut(r).copy_from_slice(self.images.row(i));
+            }
+            Dataset {
+                kind: self.kind,
+                images,
+                labels: self.labels[lo..hi].to_vec(),
+                n_classes: self.n_classes,
+            }
+        };
+        (take(0, n_tr), take(n_tr, self.len()))
+    }
+}
+
+/// Which split to synthesize — splits use disjoint PRNG streams.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    Train,
+    Test,
+}
+
+/// Generate (or load, for MNIST with local IDX files) a dataset split.
+///
+/// `n` is the number of examples; the paper uses 12000/50000 for the
+/// variant datasets and 60000/10000 for MNIST. The benchmark harness
+/// scales these down by default (see DESIGN.md §3).
+pub fn generate(kind: Kind, split: Split, n: usize, seed: u64) -> Dataset {
+    if kind == Kind::Mnist {
+        if let Some(ds) = loader::try_load_mnist(split, n) {
+            return ds;
+        }
+    }
+    let stream = match split {
+        Split::Train => 0x7261_7400,
+        Split::Test => 0x7465_7300,
+    } + kind_stream(kind);
+    let mut rng = Pcg32::new(seed, stream);
+    match kind {
+        Kind::Rect => shapes::rectangles(n, &mut rng),
+        Kind::Convex => shapes::convex(n, &mut rng),
+        _ => {
+            let mut ds = digits::render_digits(n, &mut rng);
+            match kind {
+                Kind::Mnist | Kind::Basic => {}
+                Kind::Rot => variants::rotate_all(&mut ds, &mut rng),
+                Kind::BgRand => variants::background_random(&mut ds, &mut rng),
+                Kind::BgImg => variants::background_image(&mut ds, &mut rng),
+                Kind::BgImgRot => {
+                    variants::rotate_all(&mut ds, &mut rng);
+                    variants::background_image(&mut ds, &mut rng);
+                }
+                Kind::Rect | Kind::Convex => unreachable!(),
+            }
+            ds.kind = kind;
+            ds
+        }
+    }
+}
+
+fn kind_stream(kind: Kind) -> u64 {
+    match kind {
+        Kind::Mnist => 1,
+        Kind::Basic => 2,
+        Kind::Rot => 3,
+        Kind::BgRand => 4,
+        Kind::BgImg => 5,
+        Kind::BgImgRot => 6,
+        Kind::Rect => 7,
+        Kind::Convex => 8,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_kinds_generate() {
+        for kind in Kind::all() {
+            let ds = generate(kind, Split::Train, 40, 7);
+            assert_eq!(ds.len(), 40);
+            assert_eq!(ds.images.cols, N_PIXELS);
+            assert_eq!(ds.n_classes, kind.n_classes());
+            assert!(ds.images.data.iter().all(|&p| (0.0..=1.0).contains(&p)));
+            assert!(ds.labels.iter().all(|&l| (l as usize) < ds.n_classes));
+            // every class present in a reasonable sample
+            let mut seen = vec![false; ds.n_classes];
+            for &l in &ds.labels {
+                seen[l as usize] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "{kind:?}: missing class");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = generate(Kind::Rot, Split::Train, 16, 3);
+        let b = generate(Kind::Rot, Split::Train, 16, 3);
+        assert_eq!(a.images.data, b.images.data);
+        assert_eq!(a.labels, b.labels);
+    }
+
+    #[test]
+    fn train_test_differ() {
+        let a = generate(Kind::Basic, Split::Train, 32, 3);
+        let b = generate(Kind::Basic, Split::Test, 32, 3);
+        assert_ne!(a.images.data, b.images.data);
+    }
+
+    #[test]
+    fn gather_batch_pads_with_wraparound() {
+        let ds = generate(Kind::Basic, Split::Train, 10, 1);
+        let (x, y) = ds.gather_batch(&[0, 1, 2], 5);
+        assert_eq!(x.rows, 5);
+        assert_eq!(y.len(), 5);
+        assert_eq!(x.row(3), x.row(0));
+        assert_eq!(y[4], y[1]);
+    }
+
+    #[test]
+    fn validation_split_sizes() {
+        let ds = generate(Kind::Basic, Split::Train, 50, 1);
+        let (tr, val) = ds.split_validation(0.2);
+        assert_eq!(tr.len(), 40);
+        assert_eq!(val.len(), 10);
+    }
+
+    #[test]
+    fn difficulty_ordering_backgrounds_add_energy() {
+        // BG variants should have strictly more non-zero pixels than BASIC
+        let basic = generate(Kind::Basic, Split::Train, 30, 5);
+        let bg = generate(Kind::BgRand, Split::Train, 30, 5);
+        let nz = |ds: &Dataset| {
+            ds.images.data.iter().filter(|&&p| p > 0.05).count() as f64
+                / ds.images.data.len() as f64
+        };
+        assert!(nz(&bg) > nz(&basic) * 2.0);
+    }
+}

@@ -1,0 +1,269 @@
+//! RECT and CONVEX: the two binary 28×28 shape-discrimination datasets
+//! (Larochelle et al. 2007). Both are procedurally *defined* tasks, so
+//! our generators follow the published constructions directly.
+
+use super::{Dataset, Kind, IMG_SIDE, N_PIXELS};
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg32;
+
+/// RECT: a single white rectangle *outline* on black; label 0 if the
+/// rectangle is wider than tall, 1 if taller than wide.
+pub fn rectangles(n: usize, rng: &mut Pcg32) -> Dataset {
+    let mut images = Matrix::zeros(n, N_PIXELS);
+    let mut labels = Vec::with_capacity(n);
+    for i in 0..n {
+        // draw dimensions; re-draw until clearly wide or tall
+        let (w, h) = loop {
+            let w = 4 + rng.below(20) as usize;
+            let h = 4 + rng.below(20) as usize;
+            if w.abs_diff(h) >= 2 {
+                break (w, h);
+            }
+        };
+        let x0 = rng.below((IMG_SIDE - w) as u32) as usize;
+        let y0 = rng.below((IMG_SIDE - h) as u32) as usize;
+        let img = images.row_mut(i);
+        for x in x0..x0 + w {
+            img[y0 * IMG_SIDE + x] = 1.0;
+            img[(y0 + h - 1) * IMG_SIDE + x] = 1.0;
+        }
+        for y in y0..y0 + h {
+            img[y * IMG_SIDE + x0] = 1.0;
+            img[y * IMG_SIDE + x0 + w - 1] = 1.0;
+        }
+        labels.push(if h > w { 1 } else { 0 });
+    }
+    Dataset { kind: Kind::Rect, images, labels, n_classes: 2 }
+}
+
+/// CONVEX: a filled white region on black; label 1 if the region is
+/// convex, 0 otherwise.
+///
+/// Convex samples are filled convex polygons (hull of random points).
+/// Non-convex samples are unions of two overlapping convex polygons
+/// whose union has a concavity (verified by the row-interval test: a
+/// filled set is convex iff every row and every column of lit pixels is
+/// a single interval — we additionally require the violation to be
+/// present so labels are never ambiguous).
+pub fn convex(n: usize, rng: &mut Pcg32) -> Dataset {
+    let mut images = Matrix::zeros(n, N_PIXELS);
+    let mut labels = Vec::with_capacity(n);
+    let mut buf = vec![0.0f32; N_PIXELS];
+    for i in 0..n {
+        let make_convex = rng.below(2) == 0;
+        loop {
+            buf.iter_mut().for_each(|v| *v = 0.0);
+            if make_convex {
+                let poly = random_convex_poly(rng, (14.0, 14.0), 11.0);
+                fill_poly(&poly, &mut buf);
+            } else {
+                // two offset convex blobs — union generally non-convex
+                let c1 = (8.0 + rng.next_f32() * 5.0, 8.0 + rng.next_f32() * 5.0);
+                let c2 = (15.0 + rng.next_f32() * 5.0, 15.0 + rng.next_f32() * 5.0);
+                let p1 = random_convex_poly(rng, c1, 5.5);
+                let p2 = random_convex_poly(rng, c2, 5.5);
+                fill_poly(&p1, &mut buf);
+                fill_poly(&p2, &mut buf);
+            }
+            let lit = buf.iter().filter(|&&v| v > 0.5).count();
+            if lit < 30 {
+                continue; // too small, resample
+            }
+            let convex_now = is_convex_raster(&buf);
+            if convex_now == make_convex {
+                break;
+            }
+        }
+        images.row_mut(i).copy_from_slice(&buf);
+        labels.push(if make_convex { 1 } else { 0 });
+    }
+    Dataset { kind: Kind::Convex, images, labels, n_classes: 2 }
+}
+
+/// Random convex polygon: hull of points on a jittered circle.
+fn random_convex_poly(rng: &mut Pcg32, center: (f32, f32), max_r: f32) -> Vec<(f32, f32)> {
+    let k = 5 + rng.below(5) as usize;
+    let base_r = max_r * rng.range_f32(0.55, 1.0);
+    let mut pts: Vec<(f32, f32)> = (0..k)
+        .map(|j| {
+            let t = (j as f32 + rng.next_f32() * 0.6) / k as f32 * std::f32::consts::TAU;
+            let r = base_r * rng.range_f32(0.7, 1.0);
+            (center.0 + r * t.cos(), center.1 + r * t.sin())
+        })
+        .collect();
+    // convex hull (gift wrapping on few points)
+    pts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    convex_hull(&pts)
+}
+
+fn cross(o: (f32, f32), a: (f32, f32), b: (f32, f32)) -> f32 {
+    (a.0 - o.0) * (b.1 - o.1) - (a.1 - o.1) * (b.0 - o.0)
+}
+
+/// Andrew's monotone chain convex hull.
+fn convex_hull(pts: &[(f32, f32)]) -> Vec<(f32, f32)> {
+    let n = pts.len();
+    if n < 3 {
+        return pts.to_vec();
+    }
+    let mut hull: Vec<(f32, f32)> = Vec::with_capacity(2 * n);
+    for &p in pts {
+        while hull.len() >= 2 && cross(hull[hull.len() - 2], hull[hull.len() - 1], p) <= 0.0 {
+            hull.pop();
+        }
+        hull.push(p);
+    }
+    let lower = hull.len() + 1;
+    for &p in pts.iter().rev() {
+        while hull.len() >= lower && cross(hull[hull.len() - 2], hull[hull.len() - 1], p) <= 0.0 {
+            hull.pop();
+        }
+        hull.push(p);
+    }
+    hull.pop();
+    hull
+}
+
+/// Scanline polygon fill (even-odd) into a 28×28 buffer.
+fn fill_poly(poly: &[(f32, f32)], out: &mut [f32]) {
+    if poly.len() < 3 {
+        return;
+    }
+    for py in 0..IMG_SIDE {
+        let y = py as f32 + 0.5;
+        let mut xs: Vec<f32> = Vec::new();
+        for i in 0..poly.len() {
+            let (x1, y1) = poly[i];
+            let (x2, y2) = poly[(i + 1) % poly.len()];
+            if (y1 <= y && y2 > y) || (y2 <= y && y1 > y) {
+                xs.push(x1 + (y - y1) / (y2 - y1) * (x2 - x1));
+            }
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for pair in xs.chunks(2) {
+            if pair.len() == 2 {
+                let lo = pair[0].max(0.0).ceil() as usize;
+                let hi = (pair[1].min((IMG_SIDE - 1) as f32)).floor() as usize;
+                for px in lo..=hi.min(IMG_SIDE - 1) {
+                    out[py * IMG_SIDE + px] = 1.0;
+                }
+            }
+        }
+    }
+}
+
+/// Raster convexity test: a lit set is convex iff every row *and* every
+/// column of lit pixels forms one contiguous interval, and the region is
+/// connected row-to-row. (Necessary-and-sufficient on axis directions;
+/// strict enough to keep labels unambiguous for learning.)
+fn is_convex_raster(img: &[f32]) -> bool {
+    let lit = |x: usize, y: usize| img[y * IMG_SIDE + x] > 0.5;
+    for y in 0..IMG_SIDE {
+        let mut runs = 0;
+        let mut prev = false;
+        for x in 0..IMG_SIDE {
+            let v = lit(x, y);
+            if v && !prev {
+                runs += 1;
+            }
+            prev = v;
+        }
+        if runs > 1 {
+            return false;
+        }
+    }
+    for x in 0..IMG_SIDE {
+        let mut runs = 0;
+        let mut prev = false;
+        for y in 0..IMG_SIDE {
+            let v = lit(x, y);
+            if v && !prev {
+                runs += 1;
+            }
+            prev = v;
+        }
+        if runs > 1 {
+            return false;
+        }
+    }
+    // diagonal direction checks (45°) to reject L-shapes aligned to axes
+    for s in 0..(2 * IMG_SIDE - 1) {
+        let mut runs = 0;
+        let mut prev = false;
+        for x in 0..IMG_SIDE {
+            let y = s as isize - x as isize;
+            if y < 0 || y >= IMG_SIDE as isize {
+                continue;
+            }
+            let v = lit(x, y as usize);
+            if v && !prev {
+                runs += 1;
+            }
+            prev = v;
+        }
+        if runs > 1 {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rect_labels_match_geometry() {
+        let mut rng = Pcg32::new(1, 1);
+        let ds = rectangles(50, &mut rng);
+        for i in 0..ds.len() {
+            // recompute bounding box of lit pixels
+            let img = ds.images.row(i);
+            let (mut x0, mut x1, mut y0, mut y1) = (IMG_SIDE, 0, IMG_SIDE, 0);
+            for y in 0..IMG_SIDE {
+                for x in 0..IMG_SIDE {
+                    if img[y * IMG_SIDE + x] > 0.5 {
+                        x0 = x0.min(x);
+                        x1 = x1.max(x);
+                        y0 = y0.min(y);
+                        y1 = y1.max(y);
+                    }
+                }
+            }
+            let (w, h) = (x1 - x0 + 1, y1 - y0 + 1);
+            assert_eq!(ds.labels[i] == 1, h > w, "sample {i}: {w}x{h}");
+        }
+    }
+
+    #[test]
+    fn rect_is_outline_not_filled() {
+        let mut rng = Pcg32::new(2, 1);
+        let ds = rectangles(10, &mut rng);
+        for i in 0..ds.len() {
+            let lit = ds.images.row(i).iter().filter(|&&v| v > 0.5).count();
+            assert!(lit < 120, "sample {i} looks filled: {lit} px");
+        }
+    }
+
+    #[test]
+    fn convex_labels_verified_by_independent_test() {
+        let mut rng = Pcg32::new(3, 1);
+        let ds = convex(40, &mut rng);
+        for i in 0..ds.len() {
+            let got = is_convex_raster(ds.images.row(i));
+            assert_eq!(got, ds.labels[i] == 1, "sample {i}");
+        }
+        // both labels occur
+        assert!(ds.labels.iter().any(|&l| l == 0));
+        assert!(ds.labels.iter().any(|&l| l == 1));
+    }
+
+    #[test]
+    fn hull_of_square_is_square() {
+        let pts = vec![(0.0, 0.0), (0.0, 1.0), (1.0, 0.0), (1.0, 1.0), (0.5, 0.5)];
+        let mut sorted = pts.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let hull = convex_hull(&sorted);
+        assert_eq!(hull.len(), 4);
+    }
+}

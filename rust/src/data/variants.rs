@@ -1,0 +1,160 @@
+//! The Larochelle-2007 MNIST variant transformations: rotation and
+//! background superimposition, applied to our procedural digits exactly
+//! as the originals applied them to MNIST digits.
+
+use super::{Dataset, IMG_SIDE};
+use crate::util::rng::Pcg32;
+
+/// Rotate every image by an independent uniform angle in [0, 2π)
+/// (ROT / BG-IMG-ROT construction), bilinear resampling around center.
+pub fn rotate_all(ds: &mut Dataset, rng: &mut Pcg32) {
+    let mut buf = vec![0.0f32; IMG_SIDE * IMG_SIDE];
+    for i in 0..ds.len() {
+        let angle = rng.range_f32(0.0, std::f32::consts::TAU);
+        rotate_into(ds.images.row(i), angle, &mut buf);
+        ds.images.row_mut(i).copy_from_slice(&buf);
+    }
+}
+
+/// Rotate one 28×28 image by `angle` into `out` (bilinear, zero-fill).
+pub fn rotate_into(src: &[f32], angle: f32, out: &mut [f32]) {
+    let c = (IMG_SIDE as f32 - 1.0) / 2.0;
+    let (cs, sn) = (angle.cos(), angle.sin());
+    for py in 0..IMG_SIDE {
+        for px in 0..IMG_SIDE {
+            // inverse-map output pixel to source coordinates
+            let (dx, dy) = (px as f32 - c, py as f32 - c);
+            let sx = c + cs * dx + sn * dy;
+            let sy = c - sn * dx + cs * dy;
+            out[py * IMG_SIDE + px] = bilinear(src, sx, sy);
+        }
+    }
+}
+
+fn bilinear(src: &[f32], x: f32, y: f32) -> f32 {
+    if x < 0.0 || y < 0.0 || x > (IMG_SIDE - 1) as f32 || y > (IMG_SIDE - 1) as f32 {
+        return 0.0;
+    }
+    let (x0, y0) = (x.floor() as usize, y.floor() as usize);
+    let (x1, y1) = ((x0 + 1).min(IMG_SIDE - 1), (y0 + 1).min(IMG_SIDE - 1));
+    let (fx, fy) = (x - x0 as f32, y - y0 as f32);
+    let at = |xx: usize, yy: usize| src[yy * IMG_SIDE + xx];
+    at(x0, y0) * (1.0 - fx) * (1.0 - fy)
+        + at(x1, y0) * fx * (1.0 - fy)
+        + at(x0, y1) * (1.0 - fx) * fy
+        + at(x1, y1) * fx * fy
+}
+
+/// BG-RAND: uniform random noise behind the digit. Original protocol:
+/// background pixels get U(0,1) noise; digit pixels keep their value
+/// (digit occludes background).
+pub fn background_random(ds: &mut Dataset, rng: &mut Pcg32) {
+    for i in 0..ds.len() {
+        let row = ds.images.row_mut(i);
+        for v in row.iter_mut() {
+            let noise = rng.next_f32();
+            *v = v.max(noise * 0.95 * (1.0 - *v) + *v * *v);
+            // digit (v≈1) dominates; background (v≈0) becomes noise
+        }
+    }
+}
+
+/// BG-IMG: textured background patches (the originals cut patches from
+/// 20 natural images; we synthesize multi-octave value noise, which has
+/// the same smooth-structured statistics).
+pub fn background_image(ds: &mut Dataset, rng: &mut Pcg32) {
+    let mut tex = vec![0.0f32; IMG_SIDE * IMG_SIDE];
+    for i in 0..ds.len() {
+        value_noise(&mut tex, rng);
+        let row = ds.images.row_mut(i);
+        for (v, &t) in row.iter_mut().zip(&tex) {
+            // digit occludes texture; elsewhere texture shows through
+            *v = *v + (1.0 - *v) * t;
+        }
+    }
+}
+
+/// Multi-octave value noise in [0, ~0.8] — smooth "natural image" patch.
+fn value_noise(out: &mut [f32], rng: &mut Pcg32) {
+    out.iter_mut().for_each(|v| *v = 0.0);
+    let mut amp = 0.45;
+    for octave in 0..3 {
+        let cells = 3usize << octave; // 3, 6, 12 grid cells
+        let mut grid = vec![0.0f32; (cells + 1) * (cells + 1)];
+        for g in grid.iter_mut() {
+            *g = rng.next_f32();
+        }
+        for py in 0..IMG_SIDE {
+            let gy = py as f32 / (IMG_SIDE - 1) as f32 * cells as f32;
+            let (y0, fy) = (gy.floor() as usize, gy.fract());
+            let y1 = (y0 + 1).min(cells);
+            for px in 0..IMG_SIDE {
+                let gx = px as f32 / (IMG_SIDE - 1) as f32 * cells as f32;
+                let (x0, fx) = (gx.floor() as usize, gx.fract());
+                let x1 = (x0 + 1).min(cells);
+                let at = |xx: usize, yy: usize| grid[yy * (cells + 1) + xx];
+                // smoothstep interpolation
+                let (ux, uy) = (fx * fx * (3.0 - 2.0 * fx), fy * fy * (3.0 - 2.0 * fy));
+                let v = at(x0, y0) * (1.0 - ux) * (1.0 - uy)
+                    + at(x1, y0) * ux * (1.0 - uy)
+                    + at(x0, y1) * (1.0 - ux) * uy
+                    + at(x1, y1) * ux * uy;
+                out[py * IMG_SIDE + px] += amp * v;
+            }
+        }
+        amp *= 0.5;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{digits, Kind, Split};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn rotation_preserves_ink_roughly() {
+        let mut rng = Pcg32::new(1, 1);
+        let mut ds = digits::render_digits(10, &mut rng);
+        let before: f32 = ds.images.data.iter().sum();
+        rotate_all(&mut ds, &mut rng);
+        let after: f32 = ds.images.data.iter().sum();
+        // bilinear + clipping loses a little mass at corners only
+        assert!(after > before * 0.6 && after < before * 1.2, "{before} -> {after}");
+    }
+
+    #[test]
+    fn rotate_zero_is_near_identity() {
+        let mut rng = Pcg32::new(2, 1);
+        let ds = digits::render_digits(1, &mut rng);
+        let mut out = vec![0.0; ds.images.cols];
+        rotate_into(ds.images.row(0), 0.0, &mut out);
+        let max_d = ds.images.row(0).iter().zip(&out)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_d < 1e-4, "max_d {max_d}");
+    }
+
+    #[test]
+    fn backgrounds_fill_empty_space() {
+        let mut rng = Pcg32::new(3, 1);
+        let mut ds = digits::render_digits(5, &mut rng);
+        let zeros_before = ds.images.data.iter().filter(|&&v| v < 0.01).count();
+        background_image(&mut ds, &mut rng);
+        let zeros_after = ds.images.data.iter().filter(|&&v| v < 0.01).count();
+        assert!(zeros_after < zeros_before / 3);
+        assert!(ds.images.data.iter().all(|&v| (0.0..=1.0).contains(&v)));
+    }
+
+    #[test]
+    fn bg_variants_keep_digit_visible() {
+        // the brightest pixels should still correlate with the clean digit
+        let gen = |kind| crate::data::generate(kind, Split::Train, 8, 11);
+        let clean = gen(Kind::Basic);
+        let noisy = gen(Kind::BgRand);
+        // same seed/stream family isn't shared across kinds, so just check
+        // noisy images retain high-intensity structure
+        assert!(noisy.images.data.iter().filter(|&&v| v > 0.9).count() > 0);
+        assert!(clean.images.data.iter().filter(|&&v| v > 0.9).count() > 0);
+    }
+}

@@ -1,0 +1,119 @@
+//! xxh32 (Yann Collet's xxHash, 32-bit variant) — spec-complete, plus the
+//! 4-byte-key specialization used on the hot path.
+
+const PRIME32_1: u32 = 0x9E37_79B1;
+const PRIME32_2: u32 = 0x85EB_CA77;
+const PRIME32_3: u32 = 0xC2B2_AE3D;
+const PRIME32_4: u32 = 0x27D4_EB2F;
+const PRIME32_5: u32 = 0x1656_67B1;
+
+#[inline]
+fn round(acc: u32, lane: u32) -> u32 {
+    acc.wrapping_add(lane.wrapping_mul(PRIME32_2))
+        .rotate_left(13)
+        .wrapping_mul(PRIME32_1)
+}
+
+#[inline]
+fn avalanche(mut acc: u32) -> u32 {
+    acc ^= acc >> 15;
+    acc = acc.wrapping_mul(PRIME32_2);
+    acc ^= acc >> 13;
+    acc = acc.wrapping_mul(PRIME32_3);
+    acc ^= acc >> 16;
+    acc
+}
+
+/// xxh32 over an arbitrary byte slice.
+pub fn xxh32(data: &[u8], seed: u32) -> u32 {
+    let n = data.len();
+    let mut pos = 0usize;
+    let mut acc: u32;
+    if n >= 16 {
+        let mut v1 = seed.wrapping_add(PRIME32_1).wrapping_add(PRIME32_2);
+        let mut v2 = seed.wrapping_add(PRIME32_2);
+        let mut v3 = seed;
+        let mut v4 = seed.wrapping_sub(PRIME32_1);
+        while pos + 16 <= n {
+            let w = |o: usize| u32::from_le_bytes(data[pos + o..pos + o + 4].try_into().unwrap());
+            v1 = round(v1, w(0));
+            v2 = round(v2, w(4));
+            v3 = round(v3, w(8));
+            v4 = round(v4, w(12));
+            pos += 16;
+        }
+        acc = v1
+            .rotate_left(1)
+            .wrapping_add(v2.rotate_left(7))
+            .wrapping_add(v3.rotate_left(12))
+            .wrapping_add(v4.rotate_left(18));
+    } else {
+        acc = seed.wrapping_add(PRIME32_5);
+    }
+    acc = acc.wrapping_add(n as u32);
+    while pos + 4 <= n {
+        let lane = u32::from_le_bytes(data[pos..pos + 4].try_into().unwrap());
+        acc = acc
+            .wrapping_add(lane.wrapping_mul(PRIME32_3))
+            .rotate_left(17)
+            .wrapping_mul(PRIME32_4);
+        pos += 4;
+    }
+    while pos < n {
+        acc = acc
+            .wrapping_add((data[pos] as u32).wrapping_mul(PRIME32_5))
+            .rotate_left(11)
+            .wrapping_mul(PRIME32_1);
+        pos += 1;
+    }
+    avalanche(acc)
+}
+
+/// xxh32 of one little-endian u32 key — the `len == 4` fast path, fully
+/// inlined and branch-free. This is the hash on the virtual-matrix hot
+/// path; the Pallas kernel computes exactly this expression in SIMD.
+#[inline(always)]
+pub fn xxh32_u32(key: u32, seed: u32) -> u32 {
+    let acc = seed
+        .wrapping_add(PRIME32_5)
+        .wrapping_add(4)
+        .wrapping_add(key.wrapping_mul(PRIME32_3))
+        .rotate_left(17)
+        .wrapping_mul(PRIME32_4);
+    avalanche(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_bytes_across_lengths() {
+        // exercise the 16-byte stripe loop, the 4-byte tail and byte tail
+        let data: Vec<u8> = (0u8..64).collect();
+        let mut distinct = std::collections::HashSet::new();
+        for len in 0..=64 {
+            distinct.insert(xxh32(&data[..len], 0));
+        }
+        assert_eq!(distinct.len(), 65, "lengths must hash distinctly");
+    }
+
+    #[test]
+    fn seed_changes_hash() {
+        assert_ne!(xxh32(b"hashednets", 0), xxh32(b"hashednets", 1));
+        assert_ne!(xxh32_u32(7, 0), xxh32_u32(7, 1));
+    }
+
+    #[test]
+    fn avalanche_flips_many_bits() {
+        // single-bit input changes should flip ~16 of 32 output bits
+        let mut total = 0u32;
+        for bit in 0..32 {
+            let a = xxh32_u32(0, 0);
+            let b = xxh32_u32(1 << bit, 0);
+            total += (a ^ b).count_ones();
+        }
+        let avg = total as f64 / 32.0;
+        assert!((12.0..20.0).contains(&avg), "weak avalanche: {avg}");
+    }
+}

@@ -1,0 +1,37 @@
+//! # HashedNets — Compressing Neural Networks with the Hashing Trick
+//!
+//! A full-system reproduction of Chen et al., ICML 2015, as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** (build-time Python): a Pallas kernel that decompresses
+//!   the virtual weight matrix `V_ij = ξ(i,j) · w_{h(i,j)}` on the fly
+//!   inside the matmul (`python/compile/kernels/`).
+//! * **Layer 2** (build-time Python): the paper's model family — HashNet,
+//!   HashNet_DK and the four baselines — lowered once to HLO text
+//!   (`python/compile/model.py`, `aot.py`).
+//! * **Layer 3** (this crate): the runtime coordinator. Loads the AOT
+//!   artifacts through PJRT ([`runtime`]), drives training experiments
+//!   ([`coordinator`]), generates the paper's eight datasets
+//!   procedurally ([`data`]), re-implements the exact same math natively
+//!   for cross-validation ([`nn`]), and serves compressed models with a
+//!   dynamic batcher ([`serve`]).
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! binary is self-contained.
+//!
+//! ## Quickstart
+//!
+//! ```bash
+//! make artifacts && cargo build --release
+//! ./target/release/hashednets train --config hashnet_3l_h100_o10_c1-8 --dataset mnist
+//! ```
+
+pub mod compress;
+pub mod coordinator;
+pub mod data;
+pub mod hash;
+pub mod nn;
+pub mod runtime;
+pub mod serve;
+pub mod tensor;
+pub mod util;

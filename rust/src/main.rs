@@ -1,0 +1,254 @@
+//! `hashednets` CLI — the Layer-3 entry point.
+//!
+//! Subcommands:
+//!   train    — train one artifact on one dataset, report test error
+//!   eval     — evaluate a checkpoint on a dataset split
+//!   repro    — regenerate a paper experiment (fig2|fig3|table1|table2|fig4)
+//!   hpo      — random-search hyperparameters for an artifact
+//!   serve    — run the batched inference server on a checkpoint
+//!   compress — compress a trained dense checkpoint into a HashedNet
+//!   list     — list artifacts in the manifest
+//!   selftest — artifact ↔ native engine cross-validation
+//!
+//! Run `hashednets <cmd> --help-args` for per-command options.
+
+use anyhow::{anyhow, Result};
+use hashednets::coordinator::{hpo, native, repro, trainer};
+use hashednets::data::{generate, Kind, Split};
+use hashednets::runtime::{Graph, Hyper, ModelState, Runtime};
+use hashednets::serve::{serve, ServeOptions};
+use hashednets::util::args::Args;
+use std::path::PathBuf;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1));
+    match args.subcommand.as_deref() {
+        Some("train") => cmd_train(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("repro") => cmd_repro(&args),
+        Some("hpo") => cmd_hpo(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("compress") => cmd_compress(&args),
+        Some("list") => cmd_list(&args),
+        Some("selftest") => cmd_selftest(&args),
+        _ => {
+            eprintln!("usage: hashednets <train|eval|repro|hpo|serve|compress|list|selftest> [--options]");
+            eprintln!("see rust/src/main.rs docs for the full flag list");
+            Ok(())
+        }
+    }
+}
+
+fn artifacts_dir(args: &Args) -> PathBuf {
+    PathBuf::from(args.get_or("artifacts", "artifacts"))
+}
+
+fn dataset_kind(args: &Args) -> Result<Kind> {
+    let name = args.get_or("dataset", "basic");
+    Kind::parse(name).ok_or_else(|| anyhow!("unknown dataset '{name}'"))
+}
+
+fn hyper_from(args: &Args, base: Hyper) -> Hyper {
+    Hyper {
+        lr: args.get_f32("lr", base.lr),
+        momentum: args.get_f32("momentum", base.momentum),
+        keep_prob: args.get_f32("keep-prob", base.keep_prob),
+        lam: args.get_f32("lam", base.lam),
+        temp: args.get_f32("temp", base.temp),
+    }
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let artifact = args.get("config").ok_or_else(|| anyhow!("--config <artifact> required"))?;
+    let rt = Runtime::open(artifacts_dir(args))?;
+    let spec = rt.manifest.get(artifact).ok_or_else(|| anyhow!("unknown artifact"))?.clone();
+    let method_default = repro::default_hyper(&spec.method);
+    let dataset = dataset_kind(args)?;
+    let cfg = trainer::TrainConfig {
+        artifact: artifact.to_string(),
+        dataset,
+        n_train: args.get_usize("n-train", 3000),
+        n_test: args.get_usize("n-test", 2000),
+        epochs: args.get_usize("epochs", 12),
+        hyper: hyper_from(args, method_default),
+        seed: args.get_u64("seed", 0x5EED),
+        teacher: args.get("teacher").map(String::from),
+        patience: args.get_usize("patience", 0),
+    };
+    // DK flow: train/load teacher, build soft targets
+    let soft = if spec.uses_soft_targets {
+        let teacher = cfg
+            .teacher
+            .clone()
+            .ok_or_else(|| anyhow!("--teacher <artifact> required for DK methods"))?;
+        let train = generate(dataset, Split::Train, cfg.n_train, cfg.seed);
+        eprintln!("training teacher {teacher}...");
+        let tstate = trainer::train_teacher(&rt, &teacher, &train, cfg.epochs, cfg.seed)?;
+        Some(trainer::soft_targets(&rt, &teacher, &tstate, &train.images, cfg.hyper.temp)?)
+    } else {
+        None
+    };
+    let res = trainer::run(&rt, &cfg, soft.as_ref())?;
+    println!(
+        "{artifact} on {}: test error {:.2}% (val {:.2}%), {} stored params, {:.1}s ({:.0} steps/s)",
+        dataset.name(), res.test_error * 100.0, res.val_error * 100.0,
+        res.stored_params, res.wall_s, res.steps_per_s
+    );
+    if let Some(out) = args.get("save") {
+        res.state.save(std::path::Path::new(out))?;
+        println!("checkpoint -> {out} ({} bytes)", res.state.storage_bytes());
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let artifact = args.get("config").ok_or_else(|| anyhow!("--config required"))?;
+    let ckpt = args.get("checkpoint").ok_or_else(|| anyhow!("--checkpoint required"))?;
+    let rt = Runtime::open(artifacts_dir(args))?;
+    let state = ModelState::load(std::path::Path::new(ckpt))?;
+    let ds = generate(dataset_kind(args)?, Split::Test, args.get_usize("n-test", 2000),
+                      args.get_u64("seed", 0x5EED));
+    let err = trainer::evaluate(&rt, artifact, &state, &ds)?;
+    println!("{artifact} on {}: test error {:.2}%", ds.kind.name(), err * 100.0);
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let experiment = args
+        .get("experiment")
+        .ok_or_else(|| anyhow!("--experiment fig2|fig3|table1|table2|fig4 required"))?;
+    let mut opt = repro::ReproOptions {
+        artifacts_dir: artifacts_dir(args),
+        results_dir: args.get_or("results", "results").into(),
+        hidden: args.get_usize("hidden", 100),
+        exp_base: args.get_usize("exp-base", 50),
+        n_train: args.get_usize("n-train", 3000),
+        n_test: args.get_usize("n-test", 2000),
+        epochs: args.get_usize("epochs", 12),
+        teacher_epochs: args.get_usize("teacher-epochs", 12),
+        workers: args.get_usize("workers", repro::ReproOptions::default().workers),
+        seed: args.get_u64("seed", 0x5EED),
+    };
+    if args.get_or("scale", "bench") == "paper" {
+        opt.hidden = 1000;
+        opt.n_train = 12000;
+        opt.n_test = 50000;
+        opt.epochs = 100;
+        opt.teacher_epochs = 100;
+    }
+    if experiment == "all" {
+        for e in ["fig2", "fig3", "table1", "table2", "fig4"] {
+            repro::run_experiment(e, &opt)?;
+        }
+        Ok(())
+    } else {
+        repro::run_experiment(experiment, &opt)
+    }
+}
+
+fn cmd_hpo(args: &Args) -> Result<()> {
+    let artifact = args.get("config").ok_or_else(|| anyhow!("--config required"))?;
+    let rt = Runtime::open(artifacts_dir(args))?;
+    let train = generate(dataset_kind(args)?, Split::Train,
+                         args.get_usize("n-train", 3000), args.get_u64("seed", 0x5EED));
+    let res = hpo::search(&rt, artifact, &train, args.get_usize("epochs", 12),
+                          args.get_usize("trials", 12), args.get_u64("seed", 0x5EED))?;
+    println!(
+        "best: lr={:.4} momentum={} keep_prob={} (val error {:.2}%) over {} scored trials",
+        res.best.lr, res.best.momentum, res.best.keep_prob,
+        res.best_val_error * 100.0, res.trials.len()
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let artifact = args.get("config").ok_or_else(|| anyhow!("--config required"))?;
+    serve(ServeOptions {
+        artifacts_dir: artifacts_dir(args),
+        artifact: artifact.to_string(),
+        checkpoint: args.get("checkpoint").map(PathBuf::from),
+        addr: args.get_or("addr", "127.0.0.1:7878").to_string(),
+        max_wait: std::time::Duration::from_micros(args.get_u64("max-wait-us", 2000)),
+        max_requests: args.get_u64("max-requests", 0),
+    })
+}
+
+fn cmd_compress(args: &Args) -> Result<()> {
+    // Compress a dense checkpoint (nn artifact) into a hashed artifact's
+    // parameter layout via bucket-averaging (compress/ module).
+    let from = args.get("from").ok_or_else(|| anyhow!("--from <dense artifact> required"))?;
+    let to = args.get("to").ok_or_else(|| anyhow!("--to <hashnet artifact> required"))?;
+    let ckpt = args.get("checkpoint").ok_or_else(|| anyhow!("--checkpoint required"))?;
+    let out = args.get_or("save", "compressed.ckpt");
+    let rt = Runtime::open(artifacts_dir(args))?;
+    let dspec = rt.manifest.get(from).ok_or_else(|| anyhow!("unknown artifact {from}"))?;
+    let hspec = rt.manifest.get(to).ok_or_else(|| anyhow!("unknown artifact {to}"))?;
+    if dspec.method != "nn" || !hspec.method.starts_with("hashnet") {
+        return Err(anyhow!("--from must be an nn artifact and --to a hashnet artifact"));
+    }
+    if dspec.dims != hspec.dims {
+        return Err(anyhow!("dims mismatch: {:?} vs {:?}", dspec.dims, hspec.dims));
+    }
+    let dstate = ModelState::load(std::path::Path::new(ckpt))?;
+    let mut dnet = native::network_from_spec(dspec);
+    native::load_params(&mut dnet, dspec, &dstate);
+    let mut hstate = ModelState::init(hspec, 0);
+    for (l, layer) in dnet.layers.iter_mut().enumerate() {
+        // dense V (n×m) + b -> (n×(m+1)) with bias column appended
+        let v = layer.virtual_matrix();
+        let nm = layer.n * layer.m;
+        let bias = layer.params[nm..].to_vec();
+        let mut vb = hashednets::tensor::Matrix::zeros(layer.n, layer.m + 1);
+        for i in 0..layer.n {
+            vb.row_mut(i)[..layer.m].copy_from_slice(v.row(i));
+            vb.row_mut(i)[layer.m] = bias[i];
+        }
+        let k = hspec.budgets[l];
+        hstate.params[l] =
+            hashednets::compress::compress_dense(&vb, k, l as u32, hspec.seed_base);
+        let err = hashednets::compress::reconstruction_error(&vb, k, l as u32, hspec.seed_base);
+        println!("layer {l}: {} -> {} weights, recon error {:.3}", vb.data.len(), k, err);
+    }
+    hstate.save(std::path::Path::new(out))?;
+    println!("compressed checkpoint -> {out} ({} bytes)", hstate.storage_bytes());
+    Ok(())
+}
+
+fn cmd_list(args: &Args) -> Result<()> {
+    let rt = Runtime::open(artifacts_dir(args))?;
+    println!("{:<40} {:>8} {:>10} {:>9}", "artifact", "stored", "virtual", "ratio");
+    for a in rt.manifest.iter() {
+        println!(
+            "{:<40} {:>8} {:>10} {:>9.4}",
+            a.name, a.stored_params, a.virtual_params,
+            a.stored_params as f64 / a.virtual_params as f64
+        );
+    }
+    Ok(())
+}
+
+fn cmd_selftest(args: &Args) -> Result<()> {
+    // artifact predict vs native engine on identical params — the
+    // cross-stack bit-compatibility check (hash must agree everywhere).
+    let rt = Runtime::open(artifacts_dir(args))?;
+    let name = args.get_or("config", "hashnet_3l_h32_o10_c1-4");
+    let spec = rt.manifest.get(name).ok_or_else(|| anyhow!("unknown artifact {name}"))?.clone();
+    let state = ModelState::init(&spec, 7);
+    let exe = rt.load(name, Graph::Predict)?;
+    let ds = generate(Kind::Basic, Split::Test, spec.batch, 3);
+    let artifact_logits = exe.predict(&state, &ds.images)?;
+    let mut net = native::network_from_spec(&spec);
+    native::load_params(&mut net, &spec, &state);
+    let native_logits = net.predict(&ds.images);
+    let mut max_d = 0f32;
+    for (a, b) in artifact_logits.data.iter().zip(&native_logits.data) {
+        max_d = max_d.max((a - b).abs());
+    }
+    println!("selftest {name}: max |artifact - native| = {max_d:.2e}");
+    if max_d < 1e-3 {
+        println!("OK — stacks agree");
+        Ok(())
+    } else {
+        Err(anyhow!("stacks disagree (max diff {max_d})"))
+    }
+}

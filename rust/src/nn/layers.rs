@@ -1,0 +1,438 @@
+//! Layer implementations: dense, hashed (the paper's contribution),
+//! masked-dense (RER) and low-rank (LRD).
+//!
+//! Each layer owns its stored parameters as a flat `Vec<f32>` whose
+//! layout matches the corresponding artifact parameter in
+//! `artifacts/manifest.json`, so parameters can be moved between the
+//! native engine and the PJRT runtime freely.
+
+use crate::hash::{bucket_sign, hash_gaussian, hash_uniform, layer_seeds};
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg32;
+
+/// What kind of weight structure a layer uses.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LayerKind {
+    /// Standard dense `W (n×m)` + bias `b (n)`.
+    Dense,
+    /// HashedNets: `K` real weights, virtual `V (n×(m+1))` decompressed
+    /// via `V_ij = ξ(i,j) · w_{h(i,j)}` (paper Eq. 7).
+    Hashed { k: usize },
+    /// Random Edge Removal: dense-but-masked `(n×(m+1))`, hash mask.
+    Masked { k: usize },
+    /// Low-Rank Decomposition: learned output-side `W (n×r)`, fixed
+    /// hash-Gaussian input projection `U (r×(m+1))` (V = W·U).
+    LowRank { r: usize },
+}
+
+/// One network layer: `m` inputs (excluding bias) → `n` outputs.
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub m: usize,
+    pub n: usize,
+    pub kind: LayerKind,
+    pub index: usize,     // layer number (selects hash seeds)
+    pub seed_base: u32,
+    /// Stored parameters, artifact layout:
+    /// Dense: `[W (n*m), b (n)]`; Hashed: `[w (k)]`;
+    /// Masked: `[Wm (n*(m+1))]`; LowRank: `[Wl (n*r)]`.
+    pub params: Vec<f32>,
+    /// Optional decompressed-id cache for the hashed hot path
+    /// (`(bucket, sign_bit)` per virtual cell). Built on demand.
+    cache: Option<(Vec<u32>, Vec<f32>)>,
+}
+
+impl Layer {
+    pub fn new(m: usize, n: usize, kind: LayerKind, index: usize, seed_base: u32) -> Layer {
+        let n_params = match kind {
+            LayerKind::Dense => n * m + n,
+            LayerKind::Hashed { k } => k,
+            LayerKind::Masked { .. } => n * (m + 1),
+            LayerKind::LowRank { r } => n * r,
+        };
+        Layer { m, n, kind, index, seed_base, params: vec![0.0; n_params], cache: None }
+    }
+
+    /// He-style init matching `model.py`'s `ParamSpec.init_std`.
+    pub fn init(&mut self, rng: &mut Pcg32) {
+        let m = self.m;
+        match self.kind {
+            LayerKind::Dense => {
+                let std = (2.0 / m as f32).sqrt();
+                let nm = self.n * m;
+                rng.fill_normal(&mut self.params[..nm], std);
+                self.params[nm..].iter_mut().for_each(|b| *b = 0.0);
+            }
+            LayerKind::Hashed { .. } => {
+                let std = (2.0 / (m + 1) as f32).sqrt();
+                rng.fill_normal(&mut self.params, std);
+            }
+            LayerKind::Masked { k } => {
+                let keep = k as f32 / ((m + 1) * self.n) as f32;
+                let std = (2.0 / (keep * (m + 1) as f32).max(1.0)).sqrt();
+                rng.fill_normal(&mut self.params, std);
+            }
+            LayerKind::LowRank { r } => {
+                let std = (2.0 / r as f32).sqrt();
+                rng.fill_normal(&mut self.params, std);
+            }
+        }
+    }
+
+    pub fn n_stored(&self) -> usize {
+        match self.kind {
+            LayerKind::Masked { k } => k, // logical storage (kept edges)
+            _ => self.params.len(),
+        }
+    }
+
+    /// Ensure the hashed-layer decompression cache is built.
+    fn build_hashed_cache(&mut self) {
+        let (m1, n) = (self.m + 1, self.n);
+        let LayerKind::Hashed { k } = self.kind else { unreachable!() };
+        if self.cache.is_none() {
+            let (s_h, s_xi) = layer_seeds(self.index as u32, self.seed_base);
+            let mut ids = Vec::with_capacity(n * m1);
+            let mut signs = Vec::with_capacity(n * m1);
+            for i in 0..n as u32 {
+                for j in 0..m1 as u32 {
+                    let (b, sg) = bucket_sign(i, j, m1 as u32, k as u32, s_h, s_xi);
+                    ids.push(b);
+                    signs.push(sg);
+                }
+            }
+            self.cache = Some((ids, signs));
+        }
+    }
+
+    /// Borrow the decompression cache (build first).
+    fn hashed_cache(&mut self) -> (&[u32], &[f32]) {
+        self.build_hashed_cache();
+        let (ids, signs) = self.cache.as_ref().unwrap();
+        (ids, signs)
+    }
+
+    /// LRD's fixed random input projection `U (r × (m+1))`,
+    /// hash-generated with std `1/sqrt(m+1)` (mirrors `model._lrd_layer`).
+    fn lrd_fixed_u(&self, r: usize) -> Matrix {
+        let m1 = self.m + 1;
+        let (s_u, _) = layer_seeds(2000 + self.index as u32, self.seed_base);
+        let std = (m1 as f32).powf(-0.5);
+        let mut u = Matrix::zeros(r, m1);
+        for (idx, out) in u.data.iter_mut().enumerate() {
+            *out = hash_gaussian(idx as u32, std, s_u);
+        }
+        u
+    }
+
+    /// Materialize the effective weight matrix `V (n × m_eff)` where
+    /// `m_eff = m` for Dense and `m+1` (bias column) otherwise.
+    /// Used by tests, the compressor, and the simple backward path.
+    pub fn virtual_matrix(&mut self) -> Matrix {
+        let (m1, n) = (self.m + 1, self.n);
+        match self.kind {
+            LayerKind::Dense => {
+                let mut v = Matrix::zeros(n, self.m);
+                v.data.copy_from_slice(&self.params[..n * self.m]);
+                v
+            }
+            LayerKind::Hashed { .. } => {
+                let params = self.params.clone();
+                self.build_hashed_cache();
+                let (ids, signs) = self.cache.as_ref().unwrap();
+                let mut v = Matrix::zeros(n, m1);
+                for (out, (&id, &sg)) in v.data.iter_mut().zip(ids.iter().zip(signs)) {
+                    *out = params[id as usize] * sg;
+                }
+                v
+            }
+            LayerKind::Masked { k } => {
+                let keep = k as f32 / (m1 * n) as f32;
+                let (s_mask, _) = layer_seeds(1000 + self.index as u32, self.seed_base);
+                let mut v = Matrix::zeros(n, m1);
+                for (idx, (out, &p)) in v.data.iter_mut().zip(&self.params).enumerate() {
+                    let u = hash_uniform(idx as u32, s_mask);
+                    *out = if u < keep { p } else { 0.0 };
+                }
+                v
+            }
+            LayerKind::LowRank { r } => {
+                // V (n×(m+1)) = W (n×r) · U (r×(m+1)), U fixed
+                let u = self.lrd_fixed_u(r);
+                let w = Matrix::from_vec(n, r, self.params.clone());
+                w.matmul(&u)
+            }
+        }
+    }
+
+    /// Forward: `z = a·Vᵀ (+ b)`; `a` is `(B × m)` un-augmented.
+    pub fn forward(&mut self, a: &Matrix) -> Matrix {
+        assert_eq!(a.cols, self.m);
+        match self.kind {
+            LayerKind::Dense => {
+                let n = self.n;
+                let w = Matrix::from_vec(n, self.m, self.params[..n * self.m].to_vec());
+                let b = &self.params[n * self.m..];
+                let mut z = a.matmul_nt(&w);
+                for r in 0..z.rows {
+                    for (zv, &bv) in z.row_mut(r).iter_mut().zip(b) {
+                        *zv += bv;
+                    }
+                }
+                z
+            }
+            LayerKind::Hashed { .. } => self.forward_hashed(a),
+            _ => {
+                let v = self.virtual_matrix();
+                a.augment_ones().matmul_nt(&v)
+            }
+        }
+    }
+
+    /// The native decompress-on-the-fly hot path (paper Eq. 8): never
+    /// materializes V; reads `w` through the id cache.
+    fn forward_hashed(&mut self, a: &Matrix) -> Matrix {
+        let (m1, n) = (self.m + 1, self.n);
+        let params = std::mem::take(&mut self.params);
+        self.build_hashed_cache();
+        let (ids, signs) = self.cache.as_ref().unwrap();
+        let a_aug = a.augment_ones();
+        let mut z = Matrix::zeros(a.rows, n);
+        for b in 0..a.rows {
+            let arow = a_aug.row(b);
+            let zrow = z.row_mut(b);
+            for i in 0..n {
+                let ids_row = &ids[i * m1..(i + 1) * m1];
+                let signs_row = &signs[i * m1..(i + 1) * m1];
+                let mut acc = 0.0f32;
+                for j in 0..m1 {
+                    acc += params[ids_row[j] as usize] * signs_row[j] * arow[j];
+                }
+                zrow[i] = acc;
+            }
+        }
+        self.params = params;
+        z
+    }
+
+    /// Backward: given `delta (B×n)` (dL/dz) and input `a (B×m)`,
+    /// returns `da (B×m)` and accumulates the stored-parameter gradient
+    /// into `grad` (same layout as `params`).
+    pub fn backward(&mut self, a: &Matrix, delta: &Matrix, grad: &mut [f32]) -> Matrix {
+        assert_eq!(grad.len(), self.params.len());
+        match self.kind {
+            LayerKind::Dense => {
+                let n = self.n;
+                let m = self.m;
+                let w = Matrix::from_vec(n, m, self.params[..n * m].to_vec());
+                // dW = deltaᵀ·a ; db = Σ_b delta
+                let dw = delta.matmul_tn(a); // (n×m)
+                grad[..n * m].iter_mut().zip(&dw.data).for_each(|(g, &d)| *g += d);
+                for b in 0..delta.rows {
+                    for (g, &d) in grad[n * m..].iter_mut().zip(delta.row(b)) {
+                        *g += d;
+                    }
+                }
+                delta.matmul(&w)
+            }
+            LayerKind::Hashed { .. } => self.backward_hashed(a, delta, grad),
+            LayerKind::Masked { k } => {
+                let v = self.virtual_matrix();
+                let da_aug = delta.matmul(&v);
+                let g_dense = delta.matmul_tn(&a.augment_ones()); // (n×(m+1))
+                let m1 = self.m + 1;
+                let keep = k as f32 / (m1 * self.n) as f32;
+                let (s_mask, _) = layer_seeds(1000 + self.index as u32, self.seed_base);
+                for (idx, (g, &gd)) in grad.iter_mut().zip(&g_dense.data).enumerate() {
+                    if hash_uniform(idx as u32, s_mask) < keep {
+                        *g += gd;
+                    }
+                }
+                da_aug.drop_last_col()
+            }
+            LayerKind::LowRank { r } => {
+                let v = self.virtual_matrix();
+                let da_aug = delta.matmul(&v);
+                // h = a_aug·Uᵀ (B×r); dW = deltaᵀ·h (n×r)
+                let u = self.lrd_fixed_u(r);
+                let h = a.augment_ones().matmul_nt(&u);
+                let dw = delta.matmul_tn(&h); // (n×r)
+                grad.iter_mut().zip(&dw.data).for_each(|(g, &d)| *g += d);
+                da_aug.drop_last_col()
+            }
+        }
+    }
+
+    /// Hashed backward (paper Eqs. 9 & 12), fused over the id cache.
+    fn backward_hashed(&mut self, a: &Matrix, delta: &Matrix, grad: &mut [f32]) -> Matrix {
+        let (m1, n, m) = (self.m + 1, self.n, self.m);
+        let params = std::mem::take(&mut self.params);
+        self.build_hashed_cache();
+        let (ids, signs) = self.cache.as_ref().unwrap();
+        let a_aug = a.augment_ones();
+        let mut da = Matrix::zeros(a.rows, m);
+        for b in 0..a.rows {
+            let arow = a_aug.row(b);
+            let drow = delta.row(b);
+            let darow = da.row_mut(b);
+            for i in 0..n {
+                let d = drow[i];
+                if d == 0.0 {
+                    continue;
+                }
+                let ids_row = &ids[i * m1..(i + 1) * m1];
+                let signs_row = &signs[i * m1..(i + 1) * m1];
+                for j in 0..m1 {
+                    let v = params[ids_row[j] as usize] * signs_row[j];
+                    if j < m {
+                        darow[j] += d * v;
+                    }
+                    // Eq. 12: dw_{h(i,j)} += ξ(i,j) a_j δ_i
+                    grad[ids_row[j] as usize] += signs_row[j] * arow[j] * d;
+                }
+            }
+        }
+        self.params = params;
+        da
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rand_matrix(rows: usize, cols: usize, rng: &mut Pcg32) -> Matrix {
+        Matrix::from_fn(rows, cols, |_, _| rng.normal())
+    }
+
+    fn mk(kind: LayerKind, m: usize, n: usize) -> Layer {
+        let mut l = Layer::new(m, n, kind, 0, crate::hash::DEFAULT_SEED_BASE);
+        let mut rng = Pcg32::new(9, 9);
+        l.init(&mut rng);
+        l
+    }
+
+    #[test]
+    fn hashed_forward_matches_virtual_matrix() {
+        let mut l = mk(LayerKind::Hashed { k: 13 }, 10, 6);
+        let mut rng = Pcg32::new(1, 1);
+        let a = rand_matrix(4, 10, &mut rng);
+        let z_fast = l.forward(&a);
+        let v = l.virtual_matrix();
+        let z_ref = a.augment_ones().matmul_nt(&v);
+        for (x, y) in z_fast.data.iter().zip(&z_ref.data) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn hashed_weight_sharing_actually_shares() {
+        let mut l = mk(LayerKind::Hashed { k: 3 }, 8, 8);
+        let v = l.virtual_matrix();
+        // only 3 distinct |values| may occur
+        let mut mags: Vec<u32> = v.data.iter().map(|x| x.abs().to_bits()).collect();
+        mags.sort_unstable();
+        mags.dedup();
+        assert!(mags.len() <= 3, "found {} distinct magnitudes", mags.len());
+    }
+
+    fn finite_diff_check(mut layer: Layer) {
+        let mut rng = Pcg32::new(2, 2);
+        let a = rand_matrix(3, layer.m, &mut rng);
+        let co = rand_matrix(3, layer.n, &mut rng); // cotangent
+
+        let loss = |l: &mut Layer| -> f32 {
+            let z = l.forward(&a);
+            z.data.iter().zip(&co.data).map(|(z, c)| z * c).sum()
+        };
+        let mut grad = vec![0.0f32; layer.params.len()];
+        let _da = layer.backward(&a, &co, &mut grad);
+        let eps = 1e-2f32;
+        // spot-check a handful of parameters
+        let step = (layer.params.len() / 7).max(1);
+        for p in (0..layer.params.len()).step_by(step) {
+            let orig = layer.params[p];
+            layer.params[p] = orig + eps;
+            let lp = loss(&mut layer);
+            layer.params[p] = orig - eps;
+            let lm = loss(&mut layer);
+            layer.params[p] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - grad[p]).abs() < 2e-2 * (1.0 + fd.abs()),
+                "param {p}: fd {fd} vs ad {}",
+                grad[p]
+            );
+        }
+    }
+
+    #[test]
+    fn gradients_dense() {
+        finite_diff_check(mk(LayerKind::Dense, 7, 5));
+    }
+
+    #[test]
+    fn gradients_hashed() {
+        finite_diff_check(mk(LayerKind::Hashed { k: 11 }, 7, 5));
+    }
+
+    #[test]
+    fn gradients_masked() {
+        finite_diff_check(mk(LayerKind::Masked { k: 20 }, 7, 5));
+    }
+
+    #[test]
+    fn gradients_lowrank() {
+        finite_diff_check(mk(LayerKind::LowRank { r: 3 }, 7, 5));
+    }
+
+    #[test]
+    fn input_gradient_matches_fd() {
+        let mut layer = mk(LayerKind::Hashed { k: 9 }, 6, 4);
+        let mut rng = Pcg32::new(3, 3);
+        let mut a = rand_matrix(2, 6, &mut rng);
+        let co = rand_matrix(2, 4, &mut rng);
+        let mut grad = vec![0.0f32; layer.params.len()];
+        let da = layer.backward(&a.clone(), &co, &mut grad);
+        let eps = 1e-2f32;
+        for probe in [(0usize, 0usize), (1, 3), (0, 5)] {
+            let orig = a.at(probe.0, probe.1);
+            *a.at_mut(probe.0, probe.1) = orig + eps;
+            let zp: f32 = layer.forward(&a).data.iter().zip(&co.data).map(|(z, c)| z * c).sum();
+            *a.at_mut(probe.0, probe.1) = orig - eps;
+            let zm: f32 = layer.forward(&a).data.iter().zip(&co.data).map(|(z, c)| z * c).sum();
+            *a.at_mut(probe.0, probe.1) = orig;
+            let fd = (zp - zm) / (2.0 * eps);
+            let ad = da.at(probe.0, probe.1);
+            assert!((fd - ad).abs() < 2e-2 * (1.0 + fd.abs()), "{fd} vs {ad}");
+        }
+    }
+
+    #[test]
+    fn masked_layer_keeps_roughly_k_edges() {
+        let (m, n, k) = (20usize, 15usize, 60usize);
+        let mut l = mk(LayerKind::Masked { k }, m, n);
+        let v = l.virtual_matrix();
+        let nz = v.data.iter().filter(|&&x| x != 0.0).count();
+        assert!((nz as f32 - k as f32).abs() < 0.35 * k as f32, "nz={nz}");
+        assert_eq!(l.n_stored(), k);
+    }
+
+    #[test]
+    fn lowrank_matrix_has_rank_r() {
+        let mut l = mk(LayerKind::LowRank { r: 2 }, 9, 7);
+        let v = l.virtual_matrix(); // 7×10, rank ≤ 2
+        // crude rank check: any 3 rows are linearly dependent → the
+        // 3rd singular-ish direction vanishes. Use Gram determinant.
+        let rows = [v.row(0), v.row(2), v.row(5)];
+        let gram: Vec<f32> = (0..3)
+            .flat_map(|i| (0..3).map(move |j| (i, j)))
+            .map(|(i, j)| rows[i].iter().zip(rows[j]).map(|(a, b)| a * b).sum())
+            .collect();
+        let det = gram[0] * (gram[4] * gram[8] - gram[5] * gram[7])
+            - gram[1] * (gram[3] * gram[8] - gram[5] * gram[6])
+            + gram[2] * (gram[3] * gram[7] - gram[4] * gram[6]);
+        let scale = gram[0] * gram[4] * gram[8] + 1e-6;
+        assert!((det / scale).abs() < 1e-3, "rank>2? det/scale={}", det / scale);
+    }
+}

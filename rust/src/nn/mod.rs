@@ -1,0 +1,24 @@
+//! Native neural-network engine: the same math as the L2 JAX models,
+//! re-implemented in Rust.
+//!
+//! Purpose (DESIGN.md §1):
+//! 1. **Cross-validation** — because [`crate::hash`] is bit-identical to
+//!    the Python hashing, a native HashedNet and the AOT artifact
+//!    decompress *exactly* the same virtual matrices; integration tests
+//!    compare logits between the two stacks.
+//! 2. **No-XLA fallback** — train/evaluate anywhere the PJRT runtime
+//!    isn't available.
+//! 3. **Native baseline** for the performance benches (hand-written
+//!    decompress-on-the-fly matmul vs. the XLA-compiled kernel).
+//!
+//! Mirrors `python/compile/model.py`: bias columns are hashed with the
+//! weights (input augmented with a constant-1 column), hidden
+//! activations are ReLU with inverted dropout, the loss is softmax
+//! cross-entropy (optionally blended with dark-knowledge soft targets),
+//! and updates are SGD with momentum.
+
+pub mod layers;
+pub mod network;
+
+pub use layers::{Layer, LayerKind};
+pub use network::{DkTargets, Network, TrainHyper};

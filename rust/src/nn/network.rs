@@ -1,0 +1,322 @@
+//! Multi-layer network: forward/backward with ReLU + inverted dropout,
+//! softmax cross-entropy (± dark-knowledge soft targets), SGD+momentum.
+
+use super::layers::{Layer, LayerKind};
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg32;
+
+/// Training hyperparameters (paper §6: SGD, minibatch 50, dropout,
+/// momentum; tuned per method).
+#[derive(Debug, Clone, Copy)]
+pub struct TrainHyper {
+    pub lr: f32,
+    pub momentum: f32,
+    pub keep_prob: f32,
+    /// DK blend weight on the hard-label term (1.0 = no soft targets).
+    pub lam: f32,
+    /// DK temperature.
+    pub temp: f32,
+}
+
+impl Default for TrainHyper {
+    fn default() -> Self {
+        TrainHyper { lr: 0.1, momentum: 0.9, keep_prob: 0.9, lam: 1.0, temp: 4.0 }
+    }
+}
+
+/// Teacher soft targets for dark-knowledge training (temperature-softened
+/// probabilities, one row per training example).
+pub struct DkTargets {
+    pub probs: Matrix,
+}
+
+/// A feed-forward network of [`Layer`]s with momentum buffers.
+pub struct Network {
+    pub layers: Vec<Layer>,
+    momenta: Vec<Vec<f32>>,
+}
+
+impl Network {
+    pub fn new(layers: Vec<Layer>) -> Network {
+        let momenta = layers.iter().map(|l| vec![0.0; l.params.len()]).collect();
+        Network { layers, momenta }
+    }
+
+    /// Build from virtual dims + per-layer kinds.
+    pub fn from_dims(dims: &[usize], kinds: Vec<LayerKind>, seed_base: u32) -> Network {
+        assert_eq!(dims.len() - 1, kinds.len());
+        let layers = kinds
+            .into_iter()
+            .enumerate()
+            .map(|(l, kind)| Layer::new(dims[l], dims[l + 1], kind, l, seed_base))
+            .collect();
+        Network::new(layers)
+    }
+
+    pub fn init(&mut self, rng: &mut Pcg32) {
+        for l in &mut self.layers {
+            l.init(rng);
+        }
+    }
+
+    pub fn stored_params(&self) -> usize {
+        self.layers.iter().map(Layer::n_stored).sum()
+    }
+
+    /// Inference forward pass (no dropout).
+    pub fn predict(&mut self, x: &Matrix) -> Matrix {
+        let mut a = x.clone();
+        let n_layers = self.layers.len();
+        for l in 0..n_layers {
+            let z = self.layers[l].forward(&a);
+            a = if l < n_layers - 1 { z.map(|v| v.max(0.0)) } else { z };
+        }
+        a
+    }
+
+    /// Classification error rate in [0,1] on labeled data.
+    pub fn error_rate(&mut self, x: &Matrix, labels: &[u8]) -> f64 {
+        let logits = self.predict(x);
+        let pred = logits.argmax_rows();
+        let wrong = pred.iter().zip(labels).filter(|(p, l)| **p != **l as usize).count();
+        wrong as f64 / labels.len() as f64
+    }
+
+    /// One SGD-with-momentum step on a minibatch. Returns the loss.
+    ///
+    /// Matches the artifact `train_step` semantics: inverted dropout on
+    /// hidden activations, mean CE loss, `v' = mom·v − lr·g, p += v'`.
+    pub fn train_step(
+        &mut self,
+        x: &Matrix,
+        y: &[i32],
+        soft: Option<(&DkTargets, &[u32])>, // (targets, row indices into probs)
+        hyper: &TrainHyper,
+        rng: &mut Pcg32,
+    ) -> f32 {
+        let batch = x.rows;
+        let n_layers = self.layers.len();
+
+        // ---- forward, stashing inputs & dropout masks -----------------
+        let mut inputs: Vec<Matrix> = Vec::with_capacity(n_layers);
+        let mut masks: Vec<Vec<f32>> = Vec::with_capacity(n_layers - 1);
+        let mut a = x.clone();
+        for l in 0..n_layers {
+            inputs.push(a.clone());
+            let z = self.layers[l].forward(&a);
+            if l < n_layers - 1 {
+                let mut act = z.map(|v| v.max(0.0));
+                let mut mask = vec![0.0f32; act.data.len()];
+                for (mv, av) in mask.iter_mut().zip(act.data.iter_mut()) {
+                    if rng.next_f32() < hyper.keep_prob {
+                        *mv = 1.0 / hyper.keep_prob;
+                        *av *= *mv;
+                    } else {
+                        *av = 0.0;
+                    }
+                }
+                masks.push(mask);
+                a = act;
+            } else {
+                a = z;
+            }
+        }
+        let logits = a;
+
+        // ---- loss & output delta --------------------------------------
+        let probs = logits.softmax_rows();
+        let mut loss = 0.0f32;
+        for b in 0..batch {
+            loss -= (probs.at(b, y[b] as usize)).max(1e-12).ln();
+        }
+        loss /= batch as f32;
+        // delta = (softmax − onehot)/B
+        let mut delta = probs.clone();
+        for b in 0..batch {
+            *delta.at_mut(b, y[b] as usize) -= 1.0;
+        }
+        delta.scale(1.0 / batch as f32);
+
+        if let Some((dk, rows)) = soft {
+            if hyper.lam < 1.0 {
+                // blended objective: lam·CE(y) + (1−lam)·T²·CE(teacher_T, student_T)
+                let t = hyper.temp;
+                let logits_t = logits.map(|v| v); // copy
+                let mut lt = logits_t;
+                lt.scale(1.0 / t);
+                let probs_t = lt.softmax_rows();
+                let mut soft_loss = 0.0f32;
+                let mut soft_delta = Matrix::zeros(batch, delta.cols);
+                for b in 0..batch {
+                    let target = dk.probs.row(rows[b % rows.len()] as usize);
+                    for c in 0..delta.cols {
+                        soft_loss -= target[c] * probs_t.at(b, c).max(1e-12).ln();
+                        // d/dlogits of T²·CE(target, softmax(z/T)) = T·(p_T − target)
+                        *soft_delta.at_mut(b, c) += t * (probs_t.at(b, c) - target[c]);
+                    }
+                }
+                soft_loss /= batch as f32;
+                soft_delta.scale(1.0 / batch as f32);
+                loss = hyper.lam * loss + (1.0 - hyper.lam) * t * t * soft_loss;
+                delta.scale(hyper.lam);
+                soft_delta.scale(1.0 - hyper.lam);
+                delta.add_assign(&soft_delta);
+            }
+        }
+
+        // ---- backward ---------------------------------------------------
+        let mut d = delta;
+        for l in (0..n_layers).rev() {
+            let mut grad = vec![0.0f32; self.layers[l].params.len()];
+            let mut da = self.layers[l].backward(&inputs[l], &d, &mut grad);
+            // momentum update
+            let (layer, mom) = (&mut self.layers[l], &mut self.momenta[l]);
+            for ((p, v), g) in layer.params.iter_mut().zip(mom.iter_mut()).zip(&grad) {
+                *v = hyper.momentum * *v - hyper.lr * g;
+                *p += *v;
+            }
+            if l > 0 {
+                // through dropout mask and ReLU of the previous layer
+                let mask = &masks[l - 1];
+                let prev_in = &inputs[l]; // activations after relu+dropout
+                for (idx, dv) in da.data.iter_mut().enumerate() {
+                    // relu' is 1 where the post-dropout activation > 0
+                    *dv *= if prev_in.data[idx] > 0.0 { mask[idx] } else { 0.0 };
+                }
+                d = da;
+            }
+        }
+        loss
+    }
+
+    /// Train for `epochs` over `(x, labels)` with shuffled minibatches.
+    /// Returns per-epoch mean losses.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fit(
+        &mut self,
+        x: &Matrix,
+        labels: &[u8],
+        batch: usize,
+        epochs: usize,
+        hyper: &TrainHyper,
+        dk: Option<&DkTargets>,
+        rng: &mut Pcg32,
+    ) -> Vec<f32> {
+        let n = labels.len();
+        let mut epoch_losses = Vec::with_capacity(epochs);
+        for _ in 0..epochs {
+            let perm = rng.permutation(n);
+            let mut total = 0.0f32;
+            let mut count = 0;
+            for chunk in perm.chunks(batch) {
+                let (bx, by) = gather(x, labels, chunk, batch);
+                let soft = dk.map(|t| (t, chunk));
+                total += self.train_step(&bx, &by, soft, hyper, rng);
+                count += 1;
+            }
+            epoch_losses.push(total / count as f32);
+        }
+        epoch_losses
+    }
+}
+
+fn gather(x: &Matrix, labels: &[u8], idx: &[u32], batch: usize) -> (Matrix, Vec<i32>) {
+    let mut bx = Matrix::zeros(batch, x.cols);
+    let mut by = vec![0i32; batch];
+    for b in 0..batch {
+        let i = idx[b % idx.len()] as usize;
+        bx.row_mut(b).copy_from_slice(x.row(i));
+        by[b] = labels[i] as i32;
+    }
+    (bx, by)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{generate, Kind, Split};
+
+    fn toy_net(kinds: Vec<LayerKind>, dims: &[usize]) -> Network {
+        let mut net = Network::from_dims(dims, kinds, crate::hash::DEFAULT_SEED_BASE);
+        let mut rng = Pcg32::new(42, 0);
+        net.init(&mut rng);
+        net
+    }
+
+    #[test]
+    fn loss_decreases_all_kinds() {
+        let ds = generate(Kind::Basic, Split::Train, 200, 5);
+        for kinds in [
+            vec![LayerKind::Dense, LayerKind::Dense],
+            vec![LayerKind::Hashed { k: 3000 }, LayerKind::Hashed { k: 120 }],
+            vec![LayerKind::Masked { k: 6000 }, LayerKind::Masked { k: 150 }],
+            vec![LayerKind::LowRank { r: 6 }, LayerKind::LowRank { r: 4 }],
+        ] {
+            let mut net = toy_net(kinds.clone(), &[784, 24, 10]);
+            let mut rng = Pcg32::new(1, 2);
+            // LRD learns slowly through its fixed random projection —
+            // it needs a hotter lr to make visible progress in 10 epochs
+            let lr = if matches!(kinds[0], LayerKind::LowRank { .. }) { 0.3 } else { 0.05 };
+            let hyper = TrainHyper { lr, keep_prob: 1.0, ..Default::default() };
+            let losses = net.fit(&ds.images, &ds.labels, 50, 10, &hyper, None, &mut rng);
+            assert!(
+                losses.last().unwrap() < &(losses[0] * 0.85),
+                "{kinds:?}: {losses:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn trained_hashnet_beats_chance() {
+        let tr = generate(Kind::Basic, Split::Train, 600, 5);
+        let te = generate(Kind::Basic, Split::Test, 300, 5);
+        let mut net = toy_net(
+            vec![LayerKind::Hashed { k: 6000 }, LayerKind::Hashed { k: 300 }],
+            &[784, 32, 10],
+        );
+        let mut rng = Pcg32::new(2, 3);
+        let hyper = TrainHyper { lr: 0.08, keep_prob: 0.95, ..Default::default() };
+        net.fit(&tr.images, &tr.labels, 50, 15, &hyper, None, &mut rng);
+        let err = net.error_rate(&te.images, &te.labels);
+        assert!(err < 0.5, "test error {err} vs chance 0.9");
+    }
+
+    #[test]
+    fn dropout_keep1_is_deterministic_in_eval() {
+        let mut net = toy_net(vec![LayerKind::Dense, LayerKind::Dense], &[10, 8, 3]);
+        let x = Matrix::from_fn(4, 10, |i, j| (i + j) as f32 * 0.1);
+        let a = net.predict(&x);
+        let b = net.predict(&x);
+        assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn dk_soft_targets_pull_towards_teacher() {
+        // teacher says class 2 always; student trained with lam=0 should
+        // drift toward predicting class 2 regardless of labels
+        let mut net = toy_net(vec![LayerKind::Dense, LayerKind::Dense], &[6, 8, 3]);
+        let n = 64;
+        let x = Matrix::from_fn(n, 6, |i, j| ((i * 7 + j) % 5) as f32 * 0.2);
+        let labels: Vec<u8> = (0..n).map(|i| (i % 3) as u8).collect();
+        let mut probs = Matrix::zeros(n, 3);
+        for i in 0..n {
+            probs.row_mut(i).copy_from_slice(&[0.05, 0.05, 0.9]);
+        }
+        let dk = DkTargets { probs };
+        let hyper = TrainHyper { lr: 0.2, keep_prob: 1.0, lam: 0.0, temp: 1.0, ..Default::default() };
+        let mut rng = Pcg32::new(3, 4);
+        net.fit(&x, &labels, 16, 30, &hyper, Some(&dk), &mut rng);
+        let pred = net.predict(&x).argmax_rows();
+        let frac2 = pred.iter().filter(|&&p| p == 2).count() as f64 / n as f64;
+        assert!(frac2 > 0.9, "teacher not followed: {frac2}");
+    }
+
+    #[test]
+    fn stored_params_accounting() {
+        let net = toy_net(
+            vec![LayerKind::Hashed { k: 100 }, LayerKind::Hashed { k: 20 }],
+            &[784, 16, 10],
+        );
+        assert_eq!(net.stored_params(), 120);
+    }
+}

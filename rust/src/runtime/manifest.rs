@@ -1,0 +1,185 @@
+//! `artifacts/manifest.json` parsing — the contract between `aot.py`
+//! and the Rust coordinator.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// One stored parameter tensor of an artifact.
+#[derive(Debug, Clone)]
+pub struct ParamInfo {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init_std: f32,
+}
+
+impl ParamInfo {
+    pub fn count(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One lowered configuration (a `NetSpec` on the Python side).
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub method: String,
+    pub dims: Vec<usize>,
+    pub budgets: Vec<usize>,
+    pub batch: usize,
+    pub seed_base: u32,
+    pub uses_soft_targets: bool,
+    pub params: Vec<ParamInfo>,
+    pub stored_params: usize,
+    pub virtual_params: usize,
+    /// (train file, predict file) relative to the artifact dir.
+    pub graphs: (String, String),
+    /// Nominal compression factor (1.0 for expansion configs).
+    pub compression: f64,
+    /// Fig. 4 expansion factor, when applicable.
+    pub expansion: Option<usize>,
+    /// Equivalent hidden width (NN/DK baselines).
+    pub hidden_equivalent: Option<usize>,
+}
+
+/// The full artifact registry.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub n_in: usize,
+    by_name: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = Json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let n_in = v.req_f64("n_in").map_err(|e| anyhow!(e))? as usize;
+        let mut by_name = BTreeMap::new();
+        for a in v.req_arr("artifacts").map_err(|e| anyhow!(e))? {
+            let spec = Self::parse_artifact(a).map_err(|e| anyhow!("artifact: {e}"))?;
+            by_name.insert(spec.name.clone(), spec);
+        }
+        Ok(Manifest { n_in, by_name })
+    }
+
+    fn parse_artifact(a: &Json) -> Result<ArtifactSpec, String> {
+        let usize_arr = |key: &str| -> Result<Vec<usize>, String> {
+            Ok(a.req_arr(key)?.iter().filter_map(Json::as_usize).collect())
+        };
+        let params = a
+            .req_arr("params")?
+            .iter()
+            .map(|p| {
+                Ok(ParamInfo {
+                    name: p.req_str("name")?.to_string(),
+                    shape: p.req_arr("shape")?.iter().filter_map(Json::as_usize).collect(),
+                    init_std: p.req_f64("init_std")? as f32,
+                })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        let graphs = a.get("graphs").ok_or("missing graphs")?;
+        Ok(ArtifactSpec {
+            name: a.req_str("name")?.to_string(),
+            method: a.req_str("method")?.to_string(),
+            dims: usize_arr("dims")?,
+            budgets: usize_arr("budgets")?,
+            batch: a.req_f64("batch")? as usize,
+            seed_base: a.req_f64("seed_base")? as u32,
+            uses_soft_targets: a
+                .get("uses_soft_targets")
+                .and_then(Json::as_bool)
+                .unwrap_or(false),
+            stored_params: a.req_f64("stored_params")? as usize,
+            virtual_params: a.req_f64("virtual_params")? as usize,
+            params,
+            graphs: (
+                graphs.req_str("train")?.to_string(),
+                graphs.req_str("predict")?.to_string(),
+            ),
+            compression: a.get("compression").and_then(Json::as_f64).unwrap_or(1.0),
+            expansion: a.get("expansion").and_then(Json::as_usize),
+            hidden_equivalent: a.get("hidden_equivalent").and_then(Json::as_usize),
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.by_name.get(name)
+    }
+
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.by_name.keys().map(String::as_str)
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ArtifactSpec> {
+        self.by_name.values()
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_name.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_name.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1, "n_in": 784, "eval_batch": 200,
+      "artifacts": [{
+        "name": "hashnet_3l_h32_o10_c1-4", "method": "hashnet",
+        "dims": [784, 32, 10], "budgets": [6280, 83], "batch": 50,
+        "seed_base": 2654435769, "uses_soft_targets": false,
+        "depth": 3, "hidden": 32, "out": 10, "compression": 0.25,
+        "compression_name": "1-4", "virtual_params": 25450,
+        "params": [
+          {"name": "w0", "shape": [6280], "init_std": 0.0504},
+          {"name": "w1", "shape": [83], "init_std": 0.246}
+        ],
+        "stored_params": 6363, "raw_params": 6363,
+        "train_inputs": ["w0","w1","m_w0","m_w1","x","y","seed","lr","momentum","keep_prob"],
+        "predict_inputs": ["w0","w1","x"],
+        "graphs": {"train": "a.train.hlo.txt", "predict": "a.predict.hlo.txt"}
+      }]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.n_in, 784);
+        assert_eq!(m.len(), 1);
+        let a = m.get("hashnet_3l_h32_o10_c1-4").unwrap();
+        assert_eq!(a.dims, vec![784, 32, 10]);
+        assert_eq!(a.params.len(), 2);
+        assert_eq!(a.params[0].count(), 6280);
+        assert_eq!(a.graphs.0, "a.train.hlo.txt");
+        assert!(!a.uses_soft_targets);
+        assert_eq!(a.compression, 0.25);
+        assert_eq!(a.expansion, None);
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        if let Ok(text) = std::fs::read_to_string(path) {
+            let m = Manifest::parse(&text).unwrap();
+            assert!(!m.is_empty());
+            for a in m.iter() {
+                assert_eq!(a.dims.len() - 1, a.budgets.len(), "{}", a.name);
+                assert!(!a.params.is_empty(), "{}", a.name);
+                if a.method == "hashnet" {
+                    let stored: usize = a.params.iter().map(ParamInfo::count).sum();
+                    assert_eq!(stored, a.stored_params, "{}", a.name);
+                }
+            }
+        }
+    }
+}

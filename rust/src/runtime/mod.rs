@@ -1,0 +1,239 @@
+//! PJRT runtime: loads the AOT artifacts (HLO text) produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! * [`Manifest`] — parsed `artifacts/manifest.json`: every lowered
+//!   configuration with its parameter shapes and I/O signature.
+//! * [`Runtime`] — a PJRT CPU client plus a compile cache; hands out
+//!   [`Executable`]s.
+//! * [`Executable`] — a compiled `train` or `predict` graph with typed
+//!   `train_step` / `predict` entry points that marshal [`ModelState`]
+//!   and minibatch data into XLA literals.
+//!
+//! Python is never involved: the HLO text was emitted at build time and
+//! `xla::HloModuleProto::from_text_file` re-parses it here (text, not
+//! serialized proto — see DESIGN.md and aot.py for the version story).
+
+pub mod manifest;
+pub mod state;
+
+pub use manifest::{ArtifactSpec, Manifest, ParamInfo};
+pub use state::ModelState;
+
+use crate::tensor::Matrix;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Which graph of an artifact to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Graph {
+    Train,
+    Predict,
+}
+
+/// Scalar hyperparameters fed to `train_step` (traced scalars in L2, so
+/// one artifact serves any setting).
+#[derive(Debug, Clone, Copy)]
+pub struct Hyper {
+    pub lr: f32,
+    pub momentum: f32,
+    pub keep_prob: f32,
+    pub lam: f32,
+    pub temp: f32,
+}
+
+impl Default for Hyper {
+    fn default() -> Self {
+        Hyper { lr: 0.1, momentum: 0.9, keep_prob: 0.9, lam: 0.7, temp: 4.0 }
+    }
+}
+
+/// PJRT client + artifact registry + compile cache.
+///
+/// Not `Send`: each coordinator worker thread owns its own `Runtime`
+/// (client creation is ~100 ms; compilation is cached per-runtime).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: std::cell::RefCell<HashMap<(String, Graph), std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (expects `manifest.json` inside).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, dir, manifest, cache: Default::default() })
+    }
+
+    /// Compile (or fetch from cache) one graph of one artifact.
+    pub fn load(&self, name: &str, graph: Graph) -> Result<Executable> {
+        let spec = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?
+            .clone();
+        let key = (name.to_string(), graph);
+        let exe = {
+            let mut cache = self.cache.borrow_mut();
+            if let Some(e) = cache.get(&key) {
+                e.clone()
+            } else {
+                let file = match graph {
+                    Graph::Train => &spec.graphs.0,
+                    Graph::Predict => &spec.graphs.1,
+                };
+                let path = self.dir.join(file);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                )
+                .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = std::rc::Rc::new(
+                    self.client
+                        .compile(&comp)
+                        .map_err(|e| anyhow!("compile {}: {e:?}", path.display()))?,
+                );
+                cache.insert(key, exe.clone());
+                exe
+            }
+        };
+        Ok(Executable { exe, spec, graph })
+    }
+}
+
+/// A compiled graph with typed entry points. Holds an `Rc` to the
+/// compiled executable (shared with the runtime's cache).
+pub struct Executable {
+    exe: std::rc::Rc<xla::PjRtLoadedExecutable>,
+    pub spec: ArtifactSpec,
+    graph: Graph,
+}
+
+impl Executable {
+    fn mat_literal(m: &Matrix) -> Result<xla::Literal> {
+        xla::Literal::vec1(&m.data)
+            .reshape(&[m.rows as i64, m.cols as i64])
+            .map_err(|e| anyhow!("reshape literal: {e:?}"))
+    }
+
+    fn param_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(data);
+        if shape.len() == 1 {
+            Ok(lit)
+        } else {
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            lit.reshape(&dims).map_err(|e| anyhow!("reshape param: {e:?}"))
+        }
+    }
+
+    /// Run one SGD step *in the artifact*; updates `state` in place and
+    /// returns the minibatch loss.
+    pub fn train_step(
+        &self,
+        state: &mut ModelState,
+        x: &Matrix,
+        y: &[i32],
+        soft: Option<&Matrix>,
+        hyper: &Hyper,
+        seed: u32,
+    ) -> Result<f32> {
+        assert_eq!(self.graph, Graph::Train, "not a train graph");
+        let spec = &self.spec;
+        assert_eq!(x.rows, spec.batch, "batch mismatch");
+        let n_p = spec.params.len();
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(2 * n_p + 8);
+        for (p, info) in state.params.iter().zip(&spec.params) {
+            args.push(Self::param_literal(p, &info.shape)?);
+        }
+        for (m, info) in state.momenta.iter().zip(&spec.params) {
+            args.push(Self::param_literal(m, &info.shape)?);
+        }
+        args.push(Self::mat_literal(x)?);
+        args.push(xla::Literal::vec1(y));
+        if spec.uses_soft_targets {
+            let s = soft.ok_or_else(|| anyhow!("artifact expects soft targets"))?;
+            args.push(Self::mat_literal(s)?);
+        }
+        args.push(xla::Literal::scalar(seed));
+        args.push(xla::Literal::scalar(hyper.lr));
+        args.push(xla::Literal::scalar(hyper.momentum));
+        args.push(xla::Literal::scalar(hyper.keep_prob));
+        if spec.uses_soft_targets {
+            args.push(xla::Literal::scalar(hyper.lam));
+            args.push(xla::Literal::scalar(hyper.temp));
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("execute train_step: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let mut outs = result.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        if outs.len() != 2 * n_p + 1 {
+            return Err(anyhow!("expected {} outputs, got {}", 2 * n_p + 1, outs.len()));
+        }
+        let loss: f32 = outs
+            .pop()
+            .unwrap()
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("loss: {e:?}"))?[0];
+        for (i, lit) in outs.drain(..).enumerate() {
+            let v = lit.to_vec::<f32>().map_err(|e| anyhow!("param out {i}: {e:?}"))?;
+            if i < n_p {
+                state.params[i].copy_from_slice(&v);
+            } else {
+                state.momenta[i - n_p].copy_from_slice(&v);
+            }
+        }
+        Ok(loss)
+    }
+
+    /// Run the forward pass; `x` must have `spec.batch` rows (use
+    /// [`Executable::predict_all`] for arbitrary row counts).
+    pub fn predict(&self, state: &ModelState, x: &Matrix) -> Result<Matrix> {
+        assert_eq!(self.graph, Graph::Predict, "not a predict graph");
+        let spec = &self.spec;
+        assert_eq!(x.rows, spec.batch);
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(spec.params.len() + 1);
+        for (p, info) in state.params.iter().zip(&spec.params) {
+            args.push(Self::param_literal(p, &info.shape)?);
+        }
+        args.push(Self::mat_literal(x)?);
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&args)
+            .map_err(|e| anyhow!("execute predict: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let logits = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let out = spec.dims[spec.dims.len() - 1];
+        let v = logits.to_vec::<f32>().map_err(|e| anyhow!("logits: {e:?}"))?;
+        Ok(Matrix::from_vec(spec.batch, out, v))
+    }
+
+    /// Batched prediction over any number of rows (pads the tail batch).
+    pub fn predict_all(&self, state: &ModelState, x: &Matrix) -> Result<Matrix> {
+        let b = self.spec.batch;
+        let out_dim = self.spec.dims[self.spec.dims.len() - 1];
+        let mut out = Matrix::zeros(x.rows, out_dim);
+        let mut chunk = Matrix::zeros(b, x.cols);
+        let mut r = 0;
+        while r < x.rows {
+            let take = b.min(x.rows - r);
+            for i in 0..b {
+                let src = if i < take { r + i } else { r + take - 1 }; // pad w/ last row
+                chunk.row_mut(i).copy_from_slice(x.row(src));
+            }
+            let logits = self.predict(state, &chunk)?;
+            for i in 0..take {
+                out.row_mut(r + i).copy_from_slice(logits.row(i));
+            }
+            r += take;
+        }
+        Ok(out)
+    }
+}

@@ -1,0 +1,200 @@
+//! Dynamic batcher: groups concurrent inference requests into one
+//! fixed-shape artifact call.
+
+use crate::tensor::Matrix;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// One inference request: input row + reply channel.
+pub struct Request {
+    pub pixels: Vec<f32>,
+    pub reply: mpsc::Sender<Response>,
+}
+
+/// Classification reply.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub class: usize,
+    pub probs: Vec<f32>,
+    /// Time spent queued + in the model, microseconds.
+    pub latency_us: u64,
+}
+
+/// Counters exposed by the batcher.
+#[derive(Debug, Default, Clone)]
+pub struct BatchStats {
+    pub requests: u64,
+    pub batches: u64,
+    pub batch_fill_sum: u64,
+}
+
+impl BatchStats {
+    pub fn mean_fill(&self, batch: usize) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.batch_fill_sum as f64 / (self.batches as f64 * batch as f64)
+        }
+    }
+}
+
+/// Collects requests and forms padded batches.
+///
+/// The executor closure runs the model on a `(batch × n_in)` matrix and
+/// returns `(batch × n_out)` logits; the batcher owns queuing, padding,
+/// softmax and scatter.
+pub struct DynamicBatcher {
+    queue: Arc<Mutex<Vec<(Request, Instant)>>>,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub stats: BatchStats,
+}
+
+impl DynamicBatcher {
+    pub fn new(max_batch: usize, max_wait: Duration) -> DynamicBatcher {
+        DynamicBatcher {
+            queue: Arc::new(Mutex::new(Vec::new())),
+            max_batch,
+            max_wait,
+            stats: BatchStats::default(),
+        }
+    }
+
+    /// Handle used by producer threads to enqueue requests.
+    pub fn handle(&self) -> BatcherHandle {
+        BatcherHandle { queue: self.queue.clone() }
+    }
+
+    /// Form the next batch: returns when `max_batch` requests are
+    /// waiting or `max_wait` passed since the oldest arrival (None on
+    /// `deadline` with an empty queue).
+    pub fn next_batch(&mut self, idle_poll: Duration) -> Option<Vec<(Request, Instant)>> {
+        let t0 = Instant::now();
+        loop {
+            {
+                let mut q = self.queue.lock().unwrap();
+                let oldest_wait = q.first().map(|(_, t)| t.elapsed());
+                if q.len() >= self.max_batch
+                    || oldest_wait.map(|w| w >= self.max_wait).unwrap_or(false)
+                {
+                    let take = q.len().min(self.max_batch);
+                    let batch: Vec<_> = q.drain(..take).collect();
+                    self.stats.requests += batch.len() as u64;
+                    self.stats.batches += 1;
+                    self.stats.batch_fill_sum += batch.len() as u64;
+                    return Some(batch);
+                }
+            }
+            if t0.elapsed() >= idle_poll {
+                return None;
+            }
+            std::thread::sleep(Duration::from_micros(200));
+        }
+    }
+
+    /// Run one batch through `exec` and scatter responses.
+    pub fn dispatch<F>(&mut self, batch: Vec<(Request, Instant)>, n_in: usize, exec: F)
+    where
+        F: FnOnce(&Matrix) -> anyhow::Result<Matrix>,
+    {
+        let n = batch.len();
+        let model_batch = self.max_batch;
+        let mut x = Matrix::zeros(model_batch, n_in);
+        for (b, (req, _)) in batch.iter().enumerate() {
+            let len = req.pixels.len().min(n_in);
+            x.row_mut(b)[..len].copy_from_slice(&req.pixels[..len]);
+        }
+        match exec(&x) {
+            Ok(logits) => {
+                let probs = logits.softmax_rows();
+                let classes = logits.argmax_rows();
+                for (b, (req, t_in)) in batch.into_iter().enumerate() {
+                    let _ = req.reply.send(Response {
+                        class: classes[b],
+                        probs: probs.row(b).to_vec(),
+                        latency_us: t_in.elapsed().as_micros() as u64,
+                    });
+                }
+            }
+            Err(e) => {
+                eprintln!("batch of {n} failed: {e:#}");
+                // drop reply senders -> receivers observe disconnect
+            }
+        }
+    }
+}
+
+/// Cloneable enqueue handle.
+#[derive(Clone)]
+pub struct BatcherHandle {
+    queue: Arc<Mutex<Vec<(Request, Instant)>>>,
+}
+
+impl BatcherHandle {
+    /// Enqueue a request; returns the receiver for the reply.
+    pub fn submit(&self, pixels: Vec<f32>) -> mpsc::Receiver<Response> {
+        let (tx, rx) = mpsc::channel();
+        self.queue
+            .lock()
+            .unwrap()
+            .push((Request { pixels, reply: tx }, Instant::now()));
+        rx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn echo_exec(x: &Matrix) -> anyhow::Result<Matrix> {
+        // "logits" = first 3 pixels
+        Ok(Matrix::from_fn(x.rows, 3, |i, j| x.at(i, j)))
+    }
+
+    #[test]
+    fn batches_fill_up_to_max() {
+        let mut b = DynamicBatcher::new(4, Duration::from_millis(50));
+        let h = b.handle();
+        let rxs: Vec<_> = (0..6).map(|i| h.submit(vec![i as f32, 0.0, 0.0])).collect();
+        let batch = b.next_batch(Duration::from_millis(100)).expect("batch");
+        assert_eq!(batch.len(), 4);
+        b.dispatch(batch, 3, echo_exec);
+        let batch2 = b.next_batch(Duration::from_millis(100)).expect("batch2");
+        assert_eq!(batch2.len(), 2); // flushed by max_wait
+        b.dispatch(batch2, 3, echo_exec);
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv().unwrap();
+            // pixels were [i, 0, 0] -> argmax is col 0 (ties prefer first)
+            assert_eq!(r.class, 0, "req {i}");
+            assert!(r.latency_us > 0);
+        }
+        assert_eq!(b.stats.requests, 6);
+        assert_eq!(b.stats.batches, 2);
+    }
+
+    #[test]
+    fn waits_then_flushes_partial_batch() {
+        let mut b = DynamicBatcher::new(8, Duration::from_millis(5));
+        let h = b.handle();
+        let rx = h.submit(vec![9.0, 1.0, 0.0]);
+        let batch = b.next_batch(Duration::from_millis(200)).expect("flush");
+        assert_eq!(batch.len(), 1);
+        b.dispatch(batch, 3, echo_exec);
+        let r = rx.recv().unwrap();
+        assert_eq!(r.class, 0);
+        assert_eq!(r.probs.len(), 3);
+    }
+
+    #[test]
+    fn idle_poll_returns_none() {
+        let mut b = DynamicBatcher::new(4, Duration::from_millis(1));
+        assert!(b.next_batch(Duration::from_millis(5)).is_none());
+    }
+
+    #[test]
+    fn mean_fill_math() {
+        let stats = BatchStats { requests: 6, batches: 2, batch_fill_sum: 6 };
+        assert!((stats.mean_fill(4) - 0.75).abs() < 1e-9);
+    }
+}

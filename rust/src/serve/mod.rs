@@ -1,0 +1,22 @@
+//! Inference serving: the deployment story the paper's introduction
+//! motivates (compressed models on memory-constrained devices).
+//!
+//! Architecture (vLLM-router-style, scaled to this system):
+//!
+//! * [`batcher::DynamicBatcher`] — request queue + batch former: collects
+//!   requests until `max_batch` or `max_wait` elapses, pads to the
+//!   artifact's static batch, runs one `predict` call, scatters replies.
+//! * [`server`] — a std-net TCP front end speaking newline-delimited
+//!   JSON (`{"pixels": [...784 floats...]}` → `{"class": c, "probs": [...]}`),
+//!   with a worker thread owning the PJRT executable (tokio is not
+//!   vendored offline; blocking I/O + threads serve the same purpose).
+//!
+//! The model is a trained checkpoint (`ModelState::save`) plus an
+//! artifact name — total server memory for the model is the *compressed*
+//! parameter count, which is the paper's point.
+
+pub mod batcher;
+pub mod server;
+
+pub use batcher::{BatchStats, DynamicBatcher, Request, Response};
+pub use server::{serve, Client, ServeOptions};

@@ -1,0 +1,234 @@
+//! TCP front end: newline-delimited JSON over std::net.
+//!
+//! Protocol (one JSON object per line):
+//!   request:  {"pixels": [f32; n_in]}            → classify
+//!             {"cmd": "stats"}                   → server counters
+//!             {"cmd": "shutdown"}                → stop accepting
+//!   response: {"class": u, "probs": [...], "latency_us": u}
+//!             {"error": "..."}
+//!
+//! One model thread owns the PJRT executable and drains the dynamic
+//! batcher; connection threads parse requests and block on replies.
+
+use super::batcher::{BatcherHandle, DynamicBatcher};
+use crate::runtime::{Graph, ModelState, Runtime};
+use crate::util::json::{num, obj, Json};
+use anyhow::{anyhow, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Server configuration.
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    pub artifacts_dir: PathBuf,
+    pub artifact: String,
+    pub checkpoint: Option<PathBuf>,
+    pub addr: String,
+    pub max_wait: Duration,
+    /// Stop after serving this many classify requests (0 = run forever).
+    /// Used by tests and the examples.
+    pub max_requests: u64,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            artifacts_dir: "artifacts".into(),
+            artifact: String::new(),
+            checkpoint: None,
+            addr: "127.0.0.1:7878".into(),
+            max_wait: Duration::from_millis(2),
+            max_requests: 0,
+        }
+    }
+}
+
+/// Run the server; returns once shut down (via `{"cmd":"shutdown"}` or
+/// `max_requests`). Prints the bound address — pass port 0 to pick one.
+pub fn serve(opt: ServeOptions) -> Result<()> {
+    let listener = TcpListener::bind(&opt.addr)?;
+    let local = listener.local_addr()?;
+    println!("serving {} on {local}", opt.artifact);
+    listener.set_nonblocking(true)?;
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let served = Arc::new(AtomicU64::new(0));
+
+    // ---- model thread -------------------------------------------------
+    // PJRT handles are not Send, so the model thread owns its own
+    // Runtime; the manifest is read here only for shapes.
+    let manifest = crate::runtime::Manifest::load(&opt.artifacts_dir.join("manifest.json"))?;
+    let spec = manifest
+        .get(&opt.artifact)
+        .ok_or_else(|| anyhow!("unknown artifact '{}'", opt.artifact))?
+        .clone();
+    let n_in = spec.dims[0];
+    let mut batcher = DynamicBatcher::new(spec.batch, opt.max_wait);
+    let handle = batcher.handle();
+    let stop_model = stop.clone();
+    let opt_model = opt.clone();
+    let spec_model = spec.clone();
+    let model = std::thread::spawn(move || -> Result<super::batcher::BatchStats> {
+        let rt = Runtime::open(&opt_model.artifacts_dir)?;
+        let exe = rt.load(&opt_model.artifact, Graph::Predict)?;
+        let state = match &opt_model.checkpoint {
+            Some(p) => ModelState::load(p)?,
+            None => ModelState::init(&spec_model, 0x5EED),
+        };
+        if state.params.len() != spec_model.params.len() {
+            return Err(anyhow!("checkpoint does not match artifact"));
+        }
+        while !stop_model.load(Ordering::Relaxed) {
+            if let Some(batch) = batcher.next_batch(Duration::from_millis(20)) {
+                batcher.dispatch(batch, n_in, |x| exe.predict(&state, x));
+            }
+        }
+        Ok(batcher.stats)
+    });
+
+    // ---- accept loop --------------------------------------------------
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let h = handle.clone();
+                let stop_c = stop.clone();
+                let served_c = served.clone();
+                let max_req = opt.max_requests;
+                conns.push(std::thread::spawn(move || {
+                    let _ = handle_conn(stream, h, &stop_c, &served_c, max_req);
+                }));
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+                if opt.max_requests > 0 && served.load(Ordering::Relaxed) >= opt.max_requests {
+                    stop.store(true, Ordering::Relaxed);
+                }
+            }
+            Err(e) => return Err(e.into()),
+        }
+    }
+    for c in conns {
+        let _ = c.join();
+    }
+    let stats = model.join().expect("model thread")?;
+    println!(
+        "served {} requests in {} batches (mean fill {:.0}%)",
+        stats.requests,
+        stats.batches,
+        100.0 * stats.mean_fill(spec.batch)
+    );
+    Ok(())
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    batcher: BatcherHandle,
+    stop: &AtomicBool,
+    served: &AtomicU64,
+    max_requests: u64,
+) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply = match Json::parse(&line) {
+            Ok(req) => {
+                if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
+                    match cmd {
+                        "shutdown" => {
+                            stop.store(true, Ordering::Relaxed);
+                            obj(vec![("ok", Json::Bool(true))])
+                        }
+                        "stats" => obj(vec![(
+                            "served",
+                            num(served.load(Ordering::Relaxed) as f64),
+                        )]),
+                        other => obj(vec![("error", Json::Str(format!("unknown cmd {other}")))]),
+                    }
+                } else if let Some(pixels) = req.get("pixels").and_then(Json::as_arr) {
+                    let pixels: Vec<f32> =
+                        pixels.iter().filter_map(|v| v.as_f64()).map(|v| v as f32).collect();
+                    let rx = batcher.submit(pixels);
+                    match rx.recv_timeout(Duration::from_secs(10)) {
+                        Ok(resp) => {
+                            let n = served.fetch_add(1, Ordering::Relaxed) + 1;
+                            if max_requests > 0 && n >= max_requests {
+                                stop.store(true, Ordering::Relaxed);
+                            }
+                            obj(vec![
+                                ("class", num(resp.class as f64)),
+                                (
+                                    "probs",
+                                    Json::Arr(
+                                        resp.probs.iter().map(|&p| num(p as f64)).collect(),
+                                    ),
+                                ),
+                                ("latency_us", num(resp.latency_us as f64)),
+                            ])
+                        }
+                        Err(_) => obj(vec![("error", Json::Str("model timeout".into()))]),
+                    }
+                } else {
+                    obj(vec![("error", Json::Str("need pixels or cmd".into()))])
+                }
+            }
+            Err(e) => obj(vec![("error", Json::Str(format!("bad json: {e}")))]),
+        };
+        writeln!(writer, "{}", reply.to_string())?;
+        if stop.load(Ordering::Relaxed) {
+            break;
+        }
+    }
+    Ok(())
+}
+
+/// Minimal blocking client for tests, benches and examples.
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        Ok(Client { writer: stream.try_clone()?, reader: BufReader::new(stream) })
+    }
+
+    pub fn classify(&mut self, pixels: &[f32]) -> Result<(usize, Vec<f32>, u64)> {
+        let arr = Json::Arr(pixels.iter().map(|&p| num(p as f64)).collect());
+        writeln!(self.writer, "{}", obj(vec![("pixels", arr)]).to_string())?;
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        let v = Json::parse(&line).map_err(|e| anyhow!("reply: {e}"))?;
+        if let Some(err) = v.get("error").and_then(Json::as_str) {
+            return Err(anyhow!("server error: {err}"));
+        }
+        Ok((
+            v.req_f64("class").map_err(|e| anyhow!(e))? as usize,
+            v.req_arr("probs")
+                .map_err(|e| anyhow!(e))?
+                .iter()
+                .filter_map(|p| p.as_f64())
+                .map(|p| p as f32)
+                .collect(),
+            v.req_f64("latency_us").map_err(|e| anyhow!(e))? as u64,
+        ))
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        writeln!(self.writer, "{}", obj(vec![("cmd", Json::Str("shutdown".into()))]).to_string())?;
+        let mut line = String::new();
+        let _ = self.reader.read_line(&mut line);
+        Ok(())
+    }
+}

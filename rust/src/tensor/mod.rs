@@ -1,0 +1,250 @@
+//! Host-side f32 tensors: a small row-major matrix type with the ops the
+//! native engine and the coordinator need (no ndarray offline).
+
+/// Row-major 2-D f32 matrix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Matrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Matrix {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Matrix { rows, cols, data }
+    }
+
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn at_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        &mut self.data[i * self.cols + j]
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// `self (r×k) @ other (k×c) -> (r×c)`, blocked i-k-j loop order
+    /// (cache-friendly: inner loop is contiguous in both `other` and out).
+    pub fn matmul(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (r, k, c) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(r, c);
+        for i in 0..r {
+            let arow = self.row(i);
+            let orow = out.row_mut(i);
+            for (p, &a) in arow.iter().enumerate().take(k) {
+                if a == 0.0 {
+                    continue; // ReLU activations are sparse — worth the branch
+                }
+                let brow = &other.data[p * c..(p + 1) * c];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    /// `self (r×k) @ other.T (c×k) -> (r×c)` — dot-product form.
+    pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
+        let (r, k, c) = (self.rows, self.cols, other.rows);
+        let mut out = Matrix::zeros(r, c);
+        for i in 0..r {
+            let arow = self.row(i);
+            for j in 0..c {
+                let brow = other.row(j);
+                let mut acc = 0.0f32;
+                for p in 0..k {
+                    acc += arow[p] * brow[p];
+                }
+                *out.at_mut(i, j) = acc;
+            }
+        }
+        out
+    }
+
+    /// `self.T (k×r) @ other (k×c) -> (r×c)`.
+    pub fn matmul_tn(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.rows, other.rows, "matmul_tn shape mismatch");
+        let (k, r, c) = (self.rows, self.cols, other.cols);
+        let mut out = Matrix::zeros(r, c);
+        for p in 0..k {
+            let arow = self.row(p);
+            let brow = other.row(p);
+            for (i, &a) in arow.iter().enumerate().take(r) {
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out.data[i * c..(i + 1) * c];
+                for (o, &b) in orow.iter_mut().zip(brow) {
+                    *o += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn transpose(&self) -> Matrix {
+        Matrix::from_fn(self.cols, self.rows, |i, j| self.at(j, i))
+    }
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    /// Append a constant-1 column (bias augmentation, mirrors L2).
+    pub fn augment_ones(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols + 1);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+            out.row_mut(i)[self.cols] = 1.0;
+        }
+        out
+    }
+
+    /// Drop the last column (inverse of `augment_ones` for gradients).
+    pub fn drop_last_col(&self) -> Matrix {
+        Matrix::from_fn(self.rows, self.cols - 1, |i, j| self.at(i, j))
+    }
+
+    /// Row-wise softmax, numerically stable.
+    pub fn softmax_rows(&self) -> Matrix {
+        let mut out = self.clone();
+        for i in 0..self.rows {
+            let row = out.row_mut(i);
+            let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0;
+            for v in row.iter_mut() {
+                *v = (*v - mx).exp();
+                sum += *v;
+            }
+            for v in row.iter_mut() {
+                *v /= sum;
+            }
+        }
+        out
+    }
+
+    pub fn argmax_rows(&self) -> Vec<usize> {
+        (0..self.rows)
+            .map(|i| {
+                let row = self.row(i);
+                let mut best = 0;
+                for j in 1..self.cols {
+                    if row[j] > row[best] {
+                        best = j;
+                    }
+                }
+                best
+            })
+            .collect()
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.data {
+            *v *= s;
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Matrix) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    pub fn frob_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small_known() {
+        let a = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let b = Matrix::from_vec(2, 2, vec![1., 1., 1., 1.]);
+        assert_eq!(a.matmul(&b).data, vec![3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_variants_agree() {
+        let mut rng = crate::util::rng::Pcg32::new(1, 1);
+        let a = Matrix::from_fn(5, 7, |_, _| rng.normal());
+        let b = Matrix::from_fn(7, 4, |_, _| rng.normal());
+        let c1 = a.matmul(&b);
+        let c2 = a.matmul_nt(&b.transpose());
+        let c3 = a.transpose().matmul_tn(&b);
+        for (x, y) in c1.data.iter().zip(&c2.data) {
+            assert!((x - y).abs() < 1e-4);
+        }
+        for (x, y) in c1.data.iter().zip(&c3.data) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sums_to_one() {
+        let m = Matrix::from_vec(2, 3, vec![1., 2., 3., 1000., 1000., 1000.]);
+        let s = m.softmax_rows();
+        for i in 0..2 {
+            let sum: f32 = s.row(i).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+            assert!(s.row(i).iter().all(|&p| p.is_finite()));
+        }
+    }
+
+    #[test]
+    fn augment_and_drop_roundtrip() {
+        let m = Matrix::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let a = m.augment_ones();
+        assert_eq!(a.cols, 3);
+        assert_eq!(a.at(0, 2), 1.0);
+        assert_eq!(a.drop_last_col(), m);
+    }
+
+    #[test]
+    fn argmax_rows_ties_prefer_first() {
+        let m = Matrix::from_vec(2, 3, vec![0., 5., 5., 9., 1., 2.]);
+        assert_eq!(m.argmax_rows(), vec![1, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul shape mismatch")]
+    fn shape_mismatch_panics() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

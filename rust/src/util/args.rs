@@ -1,0 +1,115 @@
+//! Tiny CLI argument parser (clap is not available offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand, options, flags, positionals.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (usually `std::env::args().skip(1)`).
+    pub fn parse<I: IntoIterator<Item = String>>(items: I) -> Args {
+        let mut a = Args::default();
+        let mut it = items.into_iter().peekable();
+        if let Some(first) = it.peek() {
+            if !first.starts_with('-') {
+                a.subcommand = it.next();
+            }
+        }
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    a.opts.insert(stripped.to_string(), v);
+                } else {
+                    a.flags.push(stripped.to_string());
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        a
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(String::as_str)
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> f32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("train --config foo --epochs 10 pos1 --fast");
+        assert_eq!(a.subcommand.as_deref(), Some("train"));
+        assert_eq!(a.get("config"), Some("foo"));
+        assert_eq!(a.get_usize("epochs", 1), 10);
+        assert!(!a.has_flag("config"));
+        assert!(a.has_flag("fast"));
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn bare_token_after_flagish_key_is_its_value() {
+        // documented ambiguity: `--fast pos1` parses as fast=pos1; put
+        // flags last or use `=` when mixing with positionals
+        let a = parse("x --fast pos1");
+        assert_eq!(a.get("fast"), Some("pos1"));
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let a = parse("repro --experiment=fig2 --force");
+        assert_eq!(a.get("experiment"), Some("fig2"));
+        assert!(a.has_flag("force"));
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_next_flag() {
+        let a = parse("x --dry-run --seed 7");
+        assert!(a.has_flag("dry-run"));
+        assert_eq!(a.get_u64("seed", 0), 7);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("serve");
+        assert_eq!(a.get_f32("lr", 0.1), 0.1);
+        assert_eq!(a.get_or("host", "127.0.0.1"), "127.0.0.1");
+    }
+}

@@ -1,0 +1,125 @@
+//! Benchmark harness (criterion is not available offline).
+//!
+//! Provides warmup + repeated timed runs with mean/stddev/percentiles,
+//! used by every `benches/*.rs` target (declared `harness = false`).
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub throughput: Option<f64>, // items/sec when items_per_iter set
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        let fmt = |ns: f64| -> String {
+            if ns >= 1e9 {
+                format!("{:.3} s", ns / 1e9)
+            } else if ns >= 1e6 {
+                format!("{:.3} ms", ns / 1e6)
+            } else if ns >= 1e3 {
+                format!("{:.3} µs", ns / 1e3)
+            } else {
+                format!("{ns:.0} ns")
+            }
+        };
+        let mut line = format!(
+            "{:<44} {:>12} ± {:>10}  (p50 {:>10}, p95 {:>10}, n={})",
+            self.name,
+            fmt(self.mean_ns),
+            fmt(self.stddev_ns),
+            fmt(self.p50_ns),
+            fmt(self.p95_ns),
+            self.iters
+        );
+        if let Some(tp) = self.throughput {
+            line.push_str(&format!("  [{tp:.1}/s]"));
+        }
+        line
+    }
+}
+
+/// Bench runner with fixed warmup/measure counts (deterministic wall time).
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+    pub items_per_iter: Option<f64>,
+    results: Vec<BenchStats>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 3, iters: 20, items_per_iter: None, results: Vec::new() }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bench { warmup, iters, ..Default::default() }
+    }
+
+    /// Time `f` and record stats under `name`. Returns the stats.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> BenchStats {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_nanos() as f64);
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = crate::util::mean(&samples);
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_ns: mean,
+            stddev_ns: crate::util::stddev(&samples),
+            p50_ns: samples[samples.len() / 2],
+            p95_ns: samples[(samples.len() as f64 * 0.95) as usize % samples.len()],
+            throughput: self.items_per_iter.map(|n| n / (mean / 1e9)),
+        };
+        println!("{}", stats.report());
+        self.results.push(stats.clone());
+        stats
+    }
+
+    pub fn results(&self) -> &[BenchStats] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bench::new(1, 5);
+        let stats = b.run("spin", || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        assert!(stats.mean_ns > 0.0);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let mut b = Bench::new(0, 3);
+        b.items_per_iter = Some(100.0);
+        let s = b.run("tp", || std::thread::sleep(std::time::Duration::from_micros(50)));
+        assert!(s.throughput.unwrap() > 0.0);
+    }
+}

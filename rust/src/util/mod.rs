@@ -1,0 +1,54 @@
+//! Offline-friendly utility substrates.
+//!
+//! The build environment vendors only the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (serde, clap, rand, criterion)
+//! are unavailable; these modules provide the small subsets we need,
+//! with tests.
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod rng;
+
+/// Round `x` to `d` decimal digits (for stable metric output).
+pub fn round_to(x: f64, d: u32) -> f64 {
+    let p = 10f64.powi(d as i32);
+    (x * p).round() / p
+}
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Sample standard deviation (0.0 for len < 2).
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_to_digits() {
+        assert_eq!(round_to(1.23456, 2), 1.23);
+        assert_eq!(round_to(-1.005, 1), -1.0);
+    }
+
+    #[test]
+    fn mean_and_stddev() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(mean(&[2.0, 4.0]), 3.0);
+        assert!((stddev(&[2.0, 4.0]) - std::f64::consts::SQRT_2).abs() < 1e-12);
+        assert_eq!(stddev(&[1.0]), 0.0);
+    }
+}

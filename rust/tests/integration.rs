@@ -1,0 +1,225 @@
+//! Integration tests over the full stack: AOT artifacts (Pallas/JAX →
+//! HLO text) executed through the PJRT runtime, cross-validated against
+//! the native engine, driven by the coordinator.
+//!
+//! These tests require `make artifacts` (the `core` set) to have run;
+//! they skip gracefully when artifacts are absent so `cargo test` works
+//! on a fresh checkout.
+
+use hashednets::coordinator::{native, trainer};
+use hashednets::data::{generate, Kind, Split};
+use hashednets::runtime::{Graph, Hyper, ModelState, Runtime};
+use hashednets::tensor::Matrix;
+
+const TINY_HASHNET: &str = "hashnet_3l_h32_o10_c1-4";
+const TINY_HASHNET_DK: &str = "hashnet_dk_3l_h32_o10_c1-4";
+const TINY_TEACHER: &str = "nn_3l_h32_o10_c1-1";
+
+fn runtime() -> Option<Runtime> {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    match Runtime::open(dir) {
+        Ok(rt) if rt.manifest.get(TINY_HASHNET).is_some() => Some(rt),
+        _ => {
+            eprintln!("artifacts missing — run `make artifacts`; skipping");
+            None
+        }
+    }
+}
+
+#[test]
+fn artifact_predict_matches_native_engine() {
+    let Some(rt) = runtime() else { return };
+    for name in [TINY_HASHNET, TINY_TEACHER] {
+        let spec = rt.manifest.get(name).unwrap().clone();
+        let state = ModelState::init(&spec, 11);
+        let exe = rt.load(name, Graph::Predict).unwrap();
+        let ds = generate(Kind::Basic, Split::Test, spec.batch, 5);
+        let got = exe.predict(&state, &ds.images).unwrap();
+        let mut net = native::network_from_spec(&spec);
+        native::load_params(&mut net, &spec, &state);
+        let want = net.predict(&ds.images);
+        let max_d = got
+            .data
+            .iter()
+            .zip(&want.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0f32, f32::max);
+        assert!(max_d < 1e-3, "{name}: artifact vs native max diff {max_d}");
+    }
+}
+
+#[test]
+fn artifact_train_step_reduces_loss_and_matches_native_math() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.manifest.get(TINY_HASHNET).unwrap().clone();
+    let exe = rt.load(TINY_HASHNET, Graph::Train).unwrap();
+    let mut state = ModelState::init(&spec, 3);
+    let ds = generate(Kind::Basic, Split::Train, 400, 3);
+    let hyper = Hyper { lr: 0.1, momentum: 0.9, keep_prob: 1.0, ..Hyper::default() };
+    let mut losses = Vec::new();
+    let mut rng = hashednets::util::rng::Pcg32::new(1, 1);
+    for step in 0..40 {
+        let idx: Vec<u32> = (0..spec.batch).map(|_| rng.below(400)).collect();
+        let (x, y) = ds.gather_batch(&idx, spec.batch);
+        let loss = exe.train_step(&mut state, &x, &y, None, &hyper, step).unwrap();
+        losses.push(loss);
+        assert!(loss.is_finite(), "step {step}: loss {loss}");
+    }
+    let head: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+    let tail: f32 = losses[35..].iter().sum::<f32>() / 5.0;
+    assert!(tail < head * 0.8, "loss did not decrease: {head} -> {tail}");
+}
+
+#[test]
+fn momentum_buffers_change_during_training() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.manifest.get(TINY_HASHNET).unwrap().clone();
+    let exe = rt.load(TINY_HASHNET, Graph::Train).unwrap();
+    let mut state = ModelState::init(&spec, 3);
+    let ds = generate(Kind::Basic, Split::Train, 100, 3);
+    let (x, y) = ds.gather_batch(&(0..spec.batch as u32).collect::<Vec<_>>(), spec.batch);
+    let before = state.momenta.clone();
+    exe.train_step(&mut state, &x, &y, None, &Hyper::default(), 0).unwrap();
+    assert_ne!(before, state.momenta);
+}
+
+#[test]
+fn dropout_seed_changes_training_noise() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.manifest.get(TINY_HASHNET).unwrap().clone();
+    let exe = rt.load(TINY_HASHNET, Graph::Train).unwrap();
+    let ds = generate(Kind::Basic, Split::Train, 100, 3);
+    let (x, y) = ds.gather_batch(&(0..spec.batch as u32).collect::<Vec<_>>(), spec.batch);
+    let hyper = Hyper { keep_prob: 0.5, ..Hyper::default() };
+    let run = |seed: u32| {
+        let mut st = ModelState::init(&spec, 9);
+        exe.train_step(&mut st, &x, &y, None, &hyper, seed).unwrap();
+        st.params[0].clone()
+    };
+    // same seed -> identical update; different seed -> different update
+    assert_eq!(run(7), run(7));
+    assert_ne!(run(7), run(8));
+}
+
+#[test]
+fn predict_all_pads_tail_batches_correctly() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.manifest.get(TINY_HASHNET).unwrap().clone();
+    let exe = rt.load(TINY_HASHNET, Graph::Predict).unwrap();
+    let state = ModelState::init(&spec, 2);
+    let n = spec.batch + 7; // forces a padded tail
+    let ds = generate(Kind::Basic, Split::Test, n, 8);
+    let all = exe.predict_all(&state, &ds.images).unwrap();
+    assert_eq!(all.rows, n);
+    // row i must equal a fresh single-batch prediction of the same row
+    let mut one = Matrix::zeros(spec.batch, ds.images.cols);
+    for b in 0..spec.batch {
+        one.row_mut(b).copy_from_slice(ds.images.row(n - 1));
+    }
+    let single = exe.predict(&state, &one).unwrap();
+    for (a, b) in all.row(n - 1).iter().zip(single.row(0)) {
+        assert!((a - b).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn dk_training_runs_with_teacher_soft_targets() {
+    let Some(rt) = runtime() else { return };
+    let train = generate(Kind::Basic, Split::Train, 300, 5);
+    let tstate = trainer::train_teacher(&rt, TINY_TEACHER, &train, 2, 5).unwrap();
+    let soft =
+        trainer::soft_targets(&rt, TINY_TEACHER, &tstate, &train.images, 4.0).unwrap();
+    // rows are probability distributions
+    for r in 0..soft.probs.rows {
+        let s: f32 = soft.probs.row(r).iter().sum();
+        assert!((s - 1.0).abs() < 1e-4);
+    }
+    let cfg = trainer::TrainConfig {
+        artifact: TINY_HASHNET_DK.into(),
+        dataset: Kind::Basic,
+        n_train: 300,
+        n_test: 200,
+        epochs: 2,
+        hyper: Hyper { lam: 0.7, temp: 4.0, ..Hyper::default() },
+        seed: 5,
+        teacher: Some(TINY_TEACHER.into()),
+        patience: 0,
+    };
+    let res = trainer::run_with_data(&rt, &cfg, &train, None, Some(&soft)).unwrap();
+    assert!(res.train_losses.iter().all(|l| l.is_finite()));
+    assert!(res.val_error < 0.95);
+}
+
+#[test]
+fn trained_state_roundtrips_through_checkpoint() {
+    let Some(rt) = runtime() else { return };
+    let cfg = trainer::TrainConfig {
+        artifact: TINY_HASHNET.into(),
+        dataset: Kind::Basic,
+        n_train: 400,
+        n_test: 300,
+        epochs: 3,
+        ..Default::default()
+    };
+    let res = trainer::run(&rt, &cfg, None).unwrap();
+    let path = std::env::temp_dir().join(format!("hn_int_{}.ckpt", std::process::id()));
+    res.state.save(&path).unwrap();
+    let loaded = ModelState::load(&path).unwrap();
+    let test = generate(Kind::Basic, Split::Test, 300, cfg.seed);
+    let e1 = trainer::evaluate(&rt, TINY_HASHNET, &res.state, &test).unwrap();
+    let e2 = trainer::evaluate(&rt, TINY_HASHNET, &loaded, &test).unwrap();
+    assert_eq!(e1, e2);
+    assert_eq!(e1, res.test_error);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn hashnet_beats_equivalent_nn_at_small_budget() {
+    // the paper's core claim, tiny-scale: same stored parameter count,
+    // HashNet generalizes better than the width-shrunk dense net
+    let Some(rt) = runtime() else { return };
+    let run = |artifact: &str| {
+        let cfg = trainer::TrainConfig {
+            artifact: artifact.into(),
+            dataset: Kind::Rot,
+            n_train: 1500,
+            n_test: 1000,
+            epochs: 8,
+            ..Default::default()
+        };
+        trainer::run(&rt, &cfg, None).unwrap().test_error
+    };
+    let hash_err = run("hashnet_3l_h100_o10_c1-64");
+    let nn_err = run("nn_3l_h100_o10_c1-64");
+    assert!(
+        hash_err < nn_err - 0.05,
+        "HashNet {hash_err} should clearly beat equivalent NN {nn_err} at 1/64"
+    );
+}
+
+#[test]
+fn serve_end_to_end_over_tcp() {
+    use hashednets::serve::{serve, Client, ServeOptions};
+    let Some(_) = runtime() else { return };
+    let addr = "127.0.0.1:47911";
+    let opts = ServeOptions {
+        artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into(),
+        artifact: TINY_HASHNET.into(),
+        addr: addr.into(),
+        max_requests: 0,
+        ..Default::default()
+    };
+    let server = std::thread::spawn(move || serve(opts));
+    std::thread::sleep(std::time::Duration::from_millis(1500));
+    let mut client = Client::connect(addr).expect("connect");
+    let ds = generate(Kind::Basic, Split::Test, 3, 1);
+    for i in 0..3 {
+        let (class, probs, latency) = client.classify(ds.images.row(i)).expect("classify");
+        assert!(class < 10);
+        assert_eq!(probs.len(), 10);
+        assert!((probs.iter().sum::<f32>() - 1.0).abs() < 1e-3);
+        assert!(latency > 0);
+    }
+    client.shutdown().unwrap();
+    server.join().unwrap().unwrap();
+}

@@ -1,0 +1,36 @@
+# HashedNets — build / test / bench entry points.
+#
+#   make check      build (release) + run the full Rust test suite.
+#                   Deterministic on a fresh checkout: artifact-dependent
+#                   tests skip gracefully when artifacts/ is absent.
+#   make bench      run every bench target; each writes BENCH_<name>.json
+#                   at the repo root so the perf trajectory is tracked
+#                   across PRs.
+#   make artifacts  lower the core config set to HLO artifacts (needs
+#                   the Python/JAX toolchain).
+#   make pytest     run the Python build-time test suite (also emits the
+#                   golden hash vectors the Rust tests cross-check).
+
+RUST_DIR := rust
+PY_DIR   := python
+
+.PHONY: check bench artifacts pytest clean-bench
+
+check:
+	cd $(RUST_DIR) && cargo build --release && cargo test -q
+
+# bench binaries anchor artifacts/ and BENCH_*.json at the repo root
+# via CARGO_MANIFEST_DIR, so they are CWD-independent
+bench:
+	cd $(RUST_DIR) && cargo bench
+	@echo "== collected bench reports =="
+	@ls -l BENCH_*.json 2>/dev/null || echo "no BENCH_*.json produced"
+
+artifacts:
+	cd $(PY_DIR) && python -m compile.aot --out-dir ../artifacts --set core
+
+pytest:
+	cd $(PY_DIR) && python -m pytest -q tests
+
+clean-bench:
+	rm -f BENCH_*.json

@@ -8,11 +8,17 @@ use hashednets::data::{generate, Kind, Split};
 use hashednets::runtime::{Graph, Hyper, ModelState, Runtime};
 use hashednets::util::bench::Bench;
 
+const OUT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_block_shapes.json");
+
 fn main() {
     println!("== block_shapes: L1 tiling A/B (hashnet 3l h100 c1/8) ==");
-    let rt = match Runtime::open("artifacts") {
+    let rt = match Runtime::open(concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts")) {
         Ok(rt) => rt,
-        Err(_) => return println!("artifacts missing"),
+        Err(_) => {
+            println!("artifacts missing");
+            Bench::default().write_json(OUT).expect("write bench json");
+            return;
+        }
     };
     let ds = generate(Kind::Basic, Split::Train, 64, 1);
     let mut b = Bench::new(3, 20);
@@ -47,4 +53,6 @@ fn main() {
     if !any {
         println!("variants missing — run `cd python && python -m compile.perf_variants`");
     }
+    b.write_json(OUT).expect("write bench json");
+    println!("wrote {OUT}");
 }

@@ -10,12 +10,15 @@ use hashednets::data::{generate, Kind, Split};
 use hashednets::runtime::{Graph, Hyper, ModelState, Runtime};
 use hashednets::util::bench::Bench;
 
+const OUT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fig_compression.json");
+
 fn main() {
     println!("== fig_compression: cost vs compression factor ==");
-    let rt = match Runtime::open("artifacts") {
+    let rt = match Runtime::open(concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts")) {
         Ok(rt) => rt,
         Err(_) => {
             println!("artifacts missing — run `make artifacts` first");
+            Bench::default().write_json(OUT).expect("write bench json");
             return;
         }
     };
@@ -50,4 +53,6 @@ fn main() {
         }
         println!("{}", cells.join(" "));
     }
+    b.write_json(OUT).expect("write bench json");
+    println!("wrote {OUT}");
 }

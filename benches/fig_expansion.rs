@@ -9,12 +9,15 @@ use hashednets::data::{generate, Kind, Split};
 use hashednets::runtime::{Graph, Hyper, ModelState, Runtime};
 use hashednets::util::bench::Bench;
 
+const OUT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fig_expansion.json");
+
 fn main() {
     println!("== fig_expansion: cost vs expansion factor (storage fixed) ==");
-    let rt = match Runtime::open("artifacts") {
+    let rt = match Runtime::open(concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts")) {
         Ok(rt) => rt,
         Err(_) => {
             println!("artifacts missing — run `make artifacts` first");
+            Bench::default().write_json(OUT).expect("write bench json");
             return;
         }
     };
@@ -51,4 +54,6 @@ fn main() {
             sp.mean_ns / 1e6
         );
     }
+    b.write_json(OUT).expect("write bench json");
+    println!("wrote {OUT}");
 }

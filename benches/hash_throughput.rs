@@ -45,4 +45,8 @@ fn main() {
         "   -> {:.2} GB/s on the byte path",
         s.throughput.unwrap_or(0.0) / 1e9
     );
+
+    let out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_hash_throughput.json");
+    b.write_json(out).expect("write bench json");
+    println!("wrote {out}");
 }

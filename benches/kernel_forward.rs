@@ -1,10 +1,14 @@
 //! L1 hot-path bench: the hashed forward pass at the paper's layer
-//! shape (784→1000 virtual, varying budget), three implementations:
+//! shape (784→1000 virtual), every kernel variant at batch 1 and 50:
 //!
 //!   * AOT artifact (Pallas decompress-on-the-fly matmul via PJRT)
-//!   * native Rust engine (id-cache gather loop)
-//!   * dense matmul of the materialized V (the memory-unconstrained
-//!     roofline reference)
+//!   * `gather`  — legacy per-row gather through the HashPlan
+//!   * `scratch` — decompress each virtual row once, dense dot across
+//!     the batch (the batch-amortized kernel, threaded on big layers)
+//!   * `bucket`  — bucket-major accumulation (paper Eq. 10, B=1 small-K)
+//!   * `dense`   — matmul of the materialized V (the roofline reference)
+//!
+//! Results land in `BENCH_kernel_forward.json` at the repo root.
 //!
 //!     cargo bench --bench kernel_forward
 
@@ -12,16 +16,19 @@ use hashednets::coordinator::native;
 use hashednets::data::{generate, Kind, Split};
 use hashednets::nn::{Layer, LayerKind};
 use hashednets::runtime::{Graph, ModelState, Runtime};
+use hashednets::tensor::Matrix;
 use hashednets::util::bench::Bench;
 use hashednets::util::rng::Pcg32;
 
+const OUT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernel_forward.json");
+
 fn main() {
-    println!("== kernel_forward (batch 50) ==");
+    println!("== kernel_forward: hashed kernel variants at batch 1 / 50 ==");
     let mut b = Bench::new(2, 15);
     let ds = generate(Kind::Basic, Split::Test, 50, 1);
 
-    // --- artifact path at two budgets --------------------------------
-    if let Ok(rt) = Runtime::open("artifacts") {
+    // --- artifact path at two budgets (skipped without artifacts) -----
+    if let Ok(rt) = Runtime::open(concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts")) {
         for name in ["hashnet_3l_h100_o10_c1-8", "hashnet_3l_h100_o10_c1-64"] {
             if rt.manifest.get(name).is_none() {
                 continue;
@@ -33,10 +40,9 @@ fn main() {
             b.run(&format!("artifact predict {name}"), || {
                 std::hint::black_box(exe.predict(&state, &ds.images).unwrap());
             });
-            // native twin on identical params
+            // native twin on identical params (plans built at load time)
             let mut net = native::network_from_spec(&spec);
             native::load_params(&mut net, &spec, &state);
-            net.predict(&ds.images); // build id caches outside the timer
             b.run(&format!("native  predict {name}"), || {
                 std::hint::black_box(net.predict(&ds.images));
             });
@@ -45,20 +51,50 @@ fn main() {
         println!("(artifacts missing — run `make artifacts` for the PJRT rows)");
     }
 
-    // --- single hashed layer vs dense roofline at paper width ---------
+    // --- kernel grid at the paper width (K = virtual/8 ≈ 98k) ---------
     let (m, n) = (784usize, 1000usize);
     let k = (m + 1) * n / 8;
     let mut rng = Pcg32::new(3, 3);
     let mut layer = Layer::new(m, n, LayerKind::Hashed { k }, 0, hashednets::hash::DEFAULT_SEED_BASE);
     layer.init(&mut rng);
-    let x = hashednets::tensor::Matrix::from_fn(50, m, |_, _| rng.normal());
-    layer.forward(&x); // warm the id cache
-    b.items_per_iter = Some(50.0);
-    b.run("native hashed layer 784->1000 (K=98k)", || {
-        std::hint::black_box(layer.forward(&x));
-    });
     let v = layer.virtual_matrix();
-    b.run("dense  matmul same shape (roofline ref)", || {
-        std::hint::black_box(x.augment_ones().matmul_nt(&v));
+    for batch in [1usize, 50] {
+        let x = Matrix::from_fn(batch, m, |_, _| rng.normal());
+        b.items_per_iter = Some(batch as f64);
+        b.run(&format!("gather  b{batch} 784->1000 K=98k"), || {
+            std::hint::black_box(layer.forward_hashed_gather(&x));
+        });
+        b.run(&format!("scratch b{batch} 784->1000 K=98k"), || {
+            std::hint::black_box(layer.forward_hashed_scratch(&x));
+        });
+        b.run(&format!("dense   b{batch} 784->1000 (roofline)"), || {
+            std::hint::black_box(x.augment_ones().matmul_nt(&v));
+        });
+    }
+
+    // --- bucket-major regime: B=1 serving with K ≤ m+1 ----------------
+    let k_small = m + 1;
+    let mut small = Layer::new(m, n, LayerKind::Hashed { k: k_small }, 0, hashednets::hash::DEFAULT_SEED_BASE);
+    small.init(&mut rng);
+    let x1 = Matrix::from_fn(1, m, |_, _| rng.normal());
+    b.items_per_iter = Some(1.0);
+    b.run("gather  b1 784->1000 K=785", || {
+        std::hint::black_box(small.forward_hashed_gather(&x1));
     });
+    b.run("bucket  b1 784->1000 K=785", || {
+        std::hint::black_box(small.forward_hashed_bucket(&x1));
+    });
+
+    // --- speedup summary + JSON ---------------------------------------
+    let find = |needle: &str| {
+        b.results()
+            .iter()
+            .find(|s| s.name.contains(needle))
+            .map(|s| s.mean_ns)
+    };
+    if let (Some(g), Some(s)) = (find("gather  b50"), find("scratch b50")) {
+        println!("\nscratch-row speedup over legacy gather at batch 50: {:.2}x", g / s);
+    }
+    b.write_json(OUT).expect("write bench json");
+    println!("wrote {OUT}");
 }

@@ -6,17 +6,22 @@
 
 use hashednets::data::{generate, Kind, Split};
 use hashednets::serve::{serve, Client, ServeOptions};
+use hashednets::util::bench::{Bench, BenchStats};
 use std::time::{Duration, Instant};
+
+const OUT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve_latency.json");
 
 fn main() {
     println!("== serve_latency (hashnet_3l_h100_o10_c1-8) ==");
-    if hashednets::runtime::Runtime::open("artifacts").is_err() {
+    let mut b = Bench::default();
+    if hashednets::runtime::Runtime::open(concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts")).is_err() {
         println!("artifacts missing — run `make artifacts` first");
+        b.write_json(OUT).expect("write bench json");
         return;
     }
     let addr = "127.0.0.1:47955";
     let opts = ServeOptions {
-        artifacts_dir: "artifacts".into(),
+        artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts").into(),
         artifact: "hashnet_3l_h100_o10_c1-8".into(),
         addr: addr.into(),
         max_wait: Duration::from_micros(500),
@@ -53,8 +58,25 @@ fn main() {
             lat[lat.len() * 95 / 100],
             lat[(lat.len() * 99 / 100).min(lat.len() - 1)],
         );
+        let mean_us = lat.iter().sum::<u64>() as f64 / lat.len() as f64;
+        let var_us = lat
+            .iter()
+            .map(|&l| (l as f64 - mean_us) * (l as f64 - mean_us))
+            .sum::<f64>()
+            / (lat.len().saturating_sub(1).max(1)) as f64;
+        b.push(BenchStats {
+            name: format!("serve {n_clients} clients"),
+            iters: lat.len(),
+            mean_ns: mean_us * 1e3,
+            stddev_ns: var_us.sqrt() * 1e3,
+            p50_ns: lat[lat.len() / 2] as f64 * 1e3,
+            p95_ns: lat[lat.len() * 95 / 100] as f64 * 1e3,
+            throughput: Some(total / wall),
+        });
     }
     let mut c = Client::connect(addr).unwrap();
     c.shutdown().unwrap();
     server.join().unwrap().unwrap();
+    b.write_json(OUT).expect("write bench json");
+    println!("wrote {OUT}");
 }

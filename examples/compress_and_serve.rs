@@ -55,7 +55,7 @@ fn main() -> Result<()> {
     let mut dnet = native::network_from_spec(&dspec);
     native::load_params(&mut dnet, &dspec, &dense.state);
     let mut hstate = ModelState::init(&hspec, 0);
-    for (l, layer) in dnet.layers.iter_mut().enumerate() {
+    for (l, layer) in dnet.layers.iter().enumerate() {
         let v = layer.virtual_matrix(); // dense W (n×m)
         let nm = layer.n * layer.m;
         let bias = layer.params[nm..].to_vec();

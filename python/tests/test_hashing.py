@@ -6,7 +6,10 @@ import os
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline environment — deterministic fallback sweep
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from compile.hashing import (
     golden_vectors,

@@ -10,7 +10,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # offline environment — deterministic fallback sweep
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from compile.hashing import layer_seeds
 from compile.kernels.hashed_matmul import HashedLayerSpec, make_hashed_matmul

@@ -113,7 +113,7 @@ mod tests {
         let mut rng = Pcg32::new(3, 1);
         // low-complexity dense matrix (smooth) compresses well
         let dense = Matrix::from_fn(10, 13, |i, j| ((i as f32 * 0.3).sin() + (j as f32 * 0.2).cos()) * 0.3);
-        let mut layer = hashed_layer_from_dense(&dense, 60, 0, crate::hash::DEFAULT_SEED_BASE);
+        let layer = hashed_layer_from_dense(&dense, 60, 0, crate::hash::DEFAULT_SEED_BASE);
         let a = Matrix::from_fn(4, 12, |_, _| rng.normal());
         let z_dense = a.augment_ones().matmul_nt(&dense);
         let z_hash = layer.forward(&a);

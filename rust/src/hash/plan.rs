@@ -1,0 +1,194 @@
+//! `HashPlan` — the precomputed, sign-packed hash mapping of one hashed
+//! layer, shared immutably across threads.
+//!
+//! # Memory layout
+//!
+//! The plan stores **one `u32` per virtual cell**, row-major over the
+//! virtual matrix `V (n × (m+1))`:
+//!
+//! ```text
+//!   bit 31      bits 30..0
+//!   ┌────┐      ┌─────────────────────────┐
+//!   │ ξ<0 │     │ bucket id  h(i,j) ∈ [0,K) │
+//!   └────┘      └─────────────────────────┘
+//! ```
+//!
+//! The sign factor ξ(i,j) ∈ {+1, −1} occupies the top bit (`1` = negative),
+//! which is exactly the IEEE-754 sign-bit position of an `f32`; applying
+//! the sign to a weight is therefore a single XOR of the payload bits
+//! ([`HashPlan::apply_sign`]) — no multiply, no second array.
+//!
+//! This halves plan memory versus the previous id cache (`u32` bucket +
+//! `f32` sign = 8 bytes/cell) to **4 bytes/cell**, and halves hot-loop
+//! memory traffic. Versus the paper's storage claim: the *model* is still
+//! the `K` real weights (4·K bytes — Eq. 7's point); the plan is a
+//! runtime acceleration structure that can always be rebuilt from the
+//! two per-layer seeds, so it never needs to be shipped or checkpointed.
+//! Packing requires `K < 2^31`, asserted at build time (the largest
+//! paper configuration is K ≈ 2.4 M).
+//!
+//! # Kernel-variant selection (see `nn::layers`)
+//!
+//! Three forward kernels read the plan; [`crate::nn::Layer::forward`]
+//! picks one per call:
+//!
+//! * **scratch-row** (`forward_hashed_scratch`) — decompress each
+//!   virtual row once into a scratch buffer, then run a dense unrolled
+//!   dot across the whole batch; the K-gather is amortized over B rows.
+//!   Chosen for B ≥ 2; parallelized over output-row blocks with
+//!   `std::thread::scope` when the layer is large enough.
+//! * **bucket-major** (`forward_hashed_bucket`, paper Eq. 10) —
+//!   scatter-accumulate ξ·aⱼ into a K-sized accumulator, then one dense
+//!   dot with `w`. Chosen for B = 1 when `K ≤ m+1` (streaming beats
+//!   gathering once the accumulator is smaller than the row).
+//! * **gather** (`forward_hashed_gather`) — the legacy per-cell gather
+//!   `w[h(i,j)]`, kept as the B = 1 large-K fallback and as the bench
+//!   baseline.
+//!
+//! Plans are built eagerly at layer construction/load time and shared
+//! via `Arc<HashPlan>`, which is what lets `Layer::forward` /
+//! `Network::predict` take `&self` and many serving threads share one
+//! model without locks or clones.
+
+use super::{bucket_sign, layer_seeds};
+
+/// Immutable, sign-packed decompression plan for one hashed layer.
+#[derive(Clone, PartialEq)]
+pub struct HashPlan {
+    /// Output rows of the virtual matrix (layer fan-out `n`).
+    pub n: usize,
+    /// Columns of the virtual matrix (`m + 1`, bias column included).
+    pub m1: usize,
+    /// Number of real (stored) weights the plan indexes into.
+    pub k: usize,
+    /// `n * m1` packed entries, row-major: `bucket | (ξ<0) << 31`.
+    packed: Vec<u32>,
+}
+
+impl HashPlan {
+    /// IEEE-754 / plan sign-bit position.
+    pub const SIGN_BIT: u32 = 1 << 31;
+    /// Mask selecting the bucket id.
+    pub const BUCKET_MASK: u32 = !Self::SIGN_BIT;
+
+    /// Build the plan for layer `layer_index` of a network seeded with
+    /// `seed_base` (bit-identical to `bucket_sign` over every cell).
+    pub fn build(n: usize, m1: usize, k: usize, layer_index: u32, seed_base: u32) -> HashPlan {
+        assert!(k >= 1, "hashed layer needs at least one real weight");
+        assert!(
+            (k as u64) < (1u64 << 31),
+            "bucket id must fit in 31 bits to leave room for the sign (k = {k})"
+        );
+        let (s_h, s_xi) = layer_seeds(layer_index, seed_base);
+        let mut packed = Vec::with_capacity(n * m1);
+        for i in 0..n as u32 {
+            for j in 0..m1 as u32 {
+                let (b, sg) = bucket_sign(i, j, m1 as u32, k as u32, s_h, s_xi);
+                packed.push(b | if sg < 0.0 { Self::SIGN_BIT } else { 0 });
+            }
+        }
+        HashPlan { n, m1, k, packed }
+    }
+
+    /// Packed entries of virtual row `i` (length `m1`).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[u32] {
+        &self.packed[i * self.m1..(i + 1) * self.m1]
+    }
+
+    /// Bucket id of a packed entry.
+    #[inline(always)]
+    pub fn bucket(entry: u32) -> usize {
+        (entry & Self::BUCKET_MASK) as usize
+    }
+
+    /// Apply the entry's ξ sign to an f32 by XOR-ing the packed sign bit
+    /// into the payload's IEEE-754 sign bit.
+    #[inline(always)]
+    pub fn apply_sign(entry: u32, value: f32) -> f32 {
+        f32::from_bits(value.to_bits() ^ (entry & Self::SIGN_BIT))
+    }
+
+    /// Decompress virtual row `i` into `out` (`out.len() == m1`):
+    /// `out[j] = ξ(i,j) · w[h(i,j)]` (paper Eq. 7).
+    #[inline]
+    pub fn decompress_row_into(&self, i: usize, params: &[f32], out: &mut [f32]) {
+        for (o, &e) in out.iter_mut().zip(self.row(i)) {
+            *o = Self::apply_sign(e, params[Self::bucket(e)]);
+        }
+    }
+
+    /// Plan memory footprint in bytes (4 per virtual cell).
+    pub fn bytes(&self) -> usize {
+        self.packed.len() * std::mem::size_of::<u32>()
+    }
+}
+
+impl std::fmt::Debug for HashPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("HashPlan")
+            .field("n", &self.n)
+            .field("m1", &self.m1)
+            .field("k", &self.k)
+            .field("bytes", &self.bytes())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hash::DEFAULT_SEED_BASE;
+
+    #[test]
+    fn packing_matches_bucket_sign() {
+        let (n, m1, k) = (9usize, 13usize, 17usize);
+        let plan = HashPlan::build(n, m1, k, 3, DEFAULT_SEED_BASE);
+        let (s_h, s_xi) = layer_seeds(3, DEFAULT_SEED_BASE);
+        for i in 0..n {
+            for (j, &e) in plan.row(i).iter().enumerate() {
+                let (b, sg) = bucket_sign(i as u32, j as u32, m1 as u32, k as u32, s_h, s_xi);
+                assert_eq!(HashPlan::bucket(e), b as usize, "bucket at ({i},{j})");
+                let applied = HashPlan::apply_sign(e, 2.5);
+                assert_eq!(applied, 2.5 * sg, "sign at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn sign_xor_equals_multiply() {
+        for &v in &[0.0f32, -0.0, 1.5, -3.25, f32::MIN_POSITIVE] {
+            assert_eq!(HashPlan::apply_sign(0, v), v);
+            assert_eq!(HashPlan::apply_sign(HashPlan::SIGN_BIT, v), -v);
+            assert_eq!(HashPlan::apply_sign(HashPlan::SIGN_BIT | 42, v), -v);
+        }
+    }
+
+    #[test]
+    fn decompress_row_matches_eq7() {
+        let (n, m1, k) = (4usize, 6usize, 5usize);
+        let plan = HashPlan::build(n, m1, k, 0, DEFAULT_SEED_BASE);
+        let params: Vec<f32> = (0..k).map(|i| 0.5 + i as f32).collect();
+        let mut out = vec![0.0f32; m1];
+        for i in 0..n {
+            plan.decompress_row_into(i, &params, &mut out);
+            for (j, &e) in plan.row(i).iter().enumerate() {
+                let want = params[HashPlan::bucket(e)]
+                    * if e & HashPlan::SIGN_BIT != 0 { -1.0 } else { 1.0 };
+                assert_eq!(out[j], want);
+            }
+        }
+    }
+
+    #[test]
+    fn four_bytes_per_cell() {
+        let plan = HashPlan::build(10, 21, 7, 0, DEFAULT_SEED_BASE);
+        assert_eq!(plan.bytes(), 4 * 10 * 21);
+    }
+
+    #[test]
+    #[should_panic(expected = "31 bits")]
+    fn oversized_k_panics() {
+        let _ = HashPlan::build(1, 1, 1usize << 31, 0, DEFAULT_SEED_BASE);
+    }
+}

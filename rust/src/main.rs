@@ -193,7 +193,7 @@ fn cmd_compress(args: &Args) -> Result<()> {
     let mut dnet = native::network_from_spec(dspec);
     native::load_params(&mut dnet, dspec, &dstate);
     let mut hstate = ModelState::init(hspec, 0);
-    for (l, layer) in dnet.layers.iter_mut().enumerate() {
+    for (l, layer) in dnet.layers.iter().enumerate() {
         // dense V (n×m) + b -> (n×(m+1)) with bias column appended
         let v = layer.virtual_matrix();
         let nm = layer.n * layer.m;

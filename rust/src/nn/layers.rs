@@ -5,10 +5,37 @@
 //! layout matches the corresponding artifact parameter in
 //! `artifacts/manifest.json`, so parameters can be moved between the
 //! native engine and the PJRT runtime freely.
+//!
+//! Hashed layers build an immutable [`HashPlan`] eagerly at construction
+//! and share it via `Arc`, so every entry point here takes `&self`:
+//! one layer (and so one [`super::Network`]) can serve forward passes
+//! from many threads concurrently without locks or cloning. See
+//! `hash::plan` for the plan's memory layout and the kernel-variant
+//! selection heuristic implemented in [`Layer::forward`].
 
-use crate::hash::{bucket_sign, hash_gaussian, hash_uniform, layer_seeds};
-use crate::tensor::Matrix;
+use crate::hash::{hash_gaussian, hash_uniform, layer_seeds, HashPlan};
+use crate::tensor::{dot_unrolled, Matrix};
 use crate::util::rng::Pcg32;
+use std::sync::Arc;
+
+/// Below this many multiply-adds a hashed forward stays single-threaded
+/// (thread spawn/join overhead would dominate).
+const PAR_WORK_THRESHOLD: usize = 1 << 21;
+
+/// Worker count for a parallel hashed forward: capped by the machine,
+/// by 8 (diminishing returns on a memory-bound kernel) and by the
+/// number of output rows.
+fn par_threads(work: usize, rows: usize) -> usize {
+    if work < PAR_WORK_THRESHOLD {
+        return 1;
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(8)
+        .min(rows)
+        .max(1)
+}
 
 /// What kind of weight structure a layer uses.
 #[derive(Debug, Clone, PartialEq)]
@@ -37,9 +64,9 @@ pub struct Layer {
     /// Dense: `[W (n*m), b (n)]`; Hashed: `[w (k)]`;
     /// Masked: `[Wm (n*(m+1))]`; LowRank: `[Wl (n*r)]`.
     pub params: Vec<f32>,
-    /// Optional decompressed-id cache for the hashed hot path
-    /// (`(bucket, sign_bit)` per virtual cell). Built on demand.
-    cache: Option<(Vec<u32>, Vec<f32>)>,
+    /// Sign-packed decompression plan (hashed layers only), built
+    /// eagerly and shared immutably across threads/clones.
+    plan: Option<Arc<HashPlan>>,
 }
 
 impl Layer {
@@ -50,7 +77,13 @@ impl Layer {
             LayerKind::Masked { .. } => n * (m + 1),
             LayerKind::LowRank { r } => n * r,
         };
-        Layer { m, n, kind, index, seed_base, params: vec![0.0; n_params], cache: None }
+        let plan = match kind {
+            LayerKind::Hashed { k } => {
+                Some(Arc::new(HashPlan::build(n, m + 1, k, index as u32, seed_base)))
+            }
+            _ => None,
+        };
+        Layer { m, n, kind, index, seed_base, params: vec![0.0; n_params], plan }
     }
 
     /// He-style init matching `model.py`'s `ParamSpec.init_std`.
@@ -86,30 +119,13 @@ impl Layer {
         }
     }
 
-    /// Ensure the hashed-layer decompression cache is built.
-    fn build_hashed_cache(&mut self) {
-        let (m1, n) = (self.m + 1, self.n);
-        let LayerKind::Hashed { k } = self.kind else { unreachable!() };
-        if self.cache.is_none() {
-            let (s_h, s_xi) = layer_seeds(self.index as u32, self.seed_base);
-            let mut ids = Vec::with_capacity(n * m1);
-            let mut signs = Vec::with_capacity(n * m1);
-            for i in 0..n as u32 {
-                for j in 0..m1 as u32 {
-                    let (b, sg) = bucket_sign(i, j, m1 as u32, k as u32, s_h, s_xi);
-                    ids.push(b);
-                    signs.push(sg);
-                }
-            }
-            self.cache = Some((ids, signs));
-        }
+    /// The shared decompression plan (hashed layers only).
+    pub fn plan(&self) -> Option<&Arc<HashPlan>> {
+        self.plan.as_ref()
     }
 
-    /// Borrow the decompression cache (build first).
-    fn hashed_cache(&mut self) -> (&[u32], &[f32]) {
-        self.build_hashed_cache();
-        let (ids, signs) = self.cache.as_ref().unwrap();
-        (ids, signs)
+    fn plan_ref(&self) -> &HashPlan {
+        self.plan.as_deref().expect("hashed layer without a HashPlan")
     }
 
     /// LRD's fixed random input projection `U (r × (m+1))`,
@@ -128,7 +144,7 @@ impl Layer {
     /// Materialize the effective weight matrix `V (n × m_eff)` where
     /// `m_eff = m` for Dense and `m+1` (bias column) otherwise.
     /// Used by tests, the compressor, and the simple backward path.
-    pub fn virtual_matrix(&mut self) -> Matrix {
+    pub fn virtual_matrix(&self) -> Matrix {
         let (m1, n) = (self.m + 1, self.n);
         match self.kind {
             LayerKind::Dense => {
@@ -137,12 +153,10 @@ impl Layer {
                 v
             }
             LayerKind::Hashed { .. } => {
-                let params = self.params.clone();
-                self.build_hashed_cache();
-                let (ids, signs) = self.cache.as_ref().unwrap();
+                let plan = self.plan_ref();
                 let mut v = Matrix::zeros(n, m1);
-                for (out, (&id, &sg)) in v.data.iter_mut().zip(ids.iter().zip(signs)) {
-                    *out = params[id as usize] * sg;
+                for i in 0..n {
+                    plan.decompress_row_into(i, &self.params, v.row_mut(i));
                 }
                 v
             }
@@ -166,7 +180,12 @@ impl Layer {
     }
 
     /// Forward: `z = a·Vᵀ (+ b)`; `a` is `(B × m)` un-augmented.
-    pub fn forward(&mut self, a: &Matrix) -> Matrix {
+    ///
+    /// Hashed layers dispatch on the heuristic documented in
+    /// `hash::plan`: bucket-major for B = 1 with `K ≤ m+1`, the legacy
+    /// gather for B = 1 with large K, scratch-row (batch-amortized,
+    /// possibly multi-threaded) for B ≥ 2.
+    pub fn forward(&self, a: &Matrix) -> Matrix {
         assert_eq!(a.cols, self.m);
         match self.kind {
             LayerKind::Dense => {
@@ -181,7 +200,15 @@ impl Layer {
                 }
                 z
             }
-            LayerKind::Hashed { .. } => self.forward_hashed(a),
+            LayerKind::Hashed { k } => {
+                if a.rows == 1 && k <= self.m + 1 {
+                    self.forward_hashed_bucket(a)
+                } else if a.rows == 1 {
+                    self.forward_hashed_gather(a)
+                } else {
+                    self.forward_hashed_scratch(a)
+                }
+            }
             _ => {
                 let v = self.virtual_matrix();
                 a.augment_ones().matmul_nt(&v)
@@ -189,36 +216,115 @@ impl Layer {
         }
     }
 
-    /// The native decompress-on-the-fly hot path (paper Eq. 8): never
-    /// materializes V; reads `w` through the id cache.
-    fn forward_hashed(&mut self, a: &Matrix) -> Matrix {
-        let (m1, n) = (self.m + 1, self.n);
-        let params = std::mem::take(&mut self.params);
-        self.build_hashed_cache();
-        let (ids, signs) = self.cache.as_ref().unwrap();
+    /// Legacy decompress-on-the-fly kernel (paper Eq. 8): per batch row,
+    /// per virtual cell, gather `w[h(i,j)]` through the plan. One random
+    /// read per cell per batch row — the bench baseline, and the B = 1
+    /// fallback when K is too large for the bucket-major accumulator.
+    pub fn forward_hashed_gather(&self, a: &Matrix) -> Matrix {
+        let n = self.n;
+        let plan = self.plan_ref();
+        let params: &[f32] = &self.params;
         let a_aug = a.augment_ones();
         let mut z = Matrix::zeros(a.rows, n);
         for b in 0..a.rows {
             let arow = a_aug.row(b);
             let zrow = z.row_mut(b);
             for i in 0..n {
-                let ids_row = &ids[i * m1..(i + 1) * m1];
-                let signs_row = &signs[i * m1..(i + 1) * m1];
                 let mut acc = 0.0f32;
-                for j in 0..m1 {
-                    acc += params[ids_row[j] as usize] * signs_row[j] * arow[j];
+                for (&e, &av) in plan.row(i).iter().zip(arow) {
+                    acc += HashPlan::apply_sign(e, params[HashPlan::bucket(e)]) * av;
                 }
                 zrow[i] = acc;
             }
         }
-        self.params = params;
+        z
+    }
+
+    /// Scratch-row kernel: decompress each virtual row **once** into a
+    /// per-thread scratch buffer, then run a dense unrolled dot against
+    /// every batch row — the K-gather is amortized over B rows instead
+    /// of repeated B times. Output rows are computed transposed
+    /// (`n × B`) so row blocks are contiguous and can be split across
+    /// a `std::thread::scope` without locks.
+    pub fn forward_hashed_scratch(&self, a: &Matrix) -> Matrix {
+        let (m1, n) = (self.m + 1, self.n);
+        let plan = self.plan_ref();
+        let params: &[f32] = &self.params;
+        let a_aug = a.augment_ones();
+        let rows_b = a.rows;
+        if rows_b == 0 {
+            return Matrix::zeros(0, n);
+        }
+        let mut zt = Matrix::zeros(n, rows_b);
+        let threads = par_threads(n * m1 * (rows_b + 1), n);
+        if threads == 1 {
+            let mut scratch = vec![0.0f32; m1];
+            for i in 0..n {
+                plan.decompress_row_into(i, params, &mut scratch);
+                let zrow = zt.row_mut(i);
+                for (b, zv) in zrow.iter_mut().enumerate() {
+                    *zv = dot_unrolled(a_aug.row(b), &scratch);
+                }
+            }
+        } else {
+            let rows_per = (n + threads - 1) / threads;
+            let a_ref = &a_aug;
+            std::thread::scope(|s| {
+                for (blk, chunk) in zt.data.chunks_mut(rows_per * rows_b).enumerate() {
+                    let i0 = blk * rows_per;
+                    s.spawn(move || {
+                        let mut scratch = vec![0.0f32; m1];
+                        for (r, zrow) in chunk.chunks_mut(rows_b).enumerate() {
+                            plan.decompress_row_into(i0 + r, params, &mut scratch);
+                            for (b, zv) in zrow.iter_mut().enumerate() {
+                                *zv = dot_unrolled(a_ref.row(b), &scratch);
+                            }
+                        }
+                    });
+                }
+            });
+        }
+        let mut z = Matrix::zeros(rows_b, n);
+        for i in 0..n {
+            for b in 0..rows_b {
+                *z.at_mut(b, i) = zt.at(i, b);
+            }
+        }
+        z
+    }
+
+    /// Bucket-major kernel (paper Eq. 10): per output row, scatter
+    /// ξ(i,j)·aⱼ into a K-sized accumulator, then one streaming dot with
+    /// the stored weights — `z_i = Σ_k w_k · Σ_{j: h(i,j)=k} ξ(i,j) a_j`.
+    /// Wins for B = 1 serving when `K ≤ m+1` (the accumulator is smaller
+    /// than the row, and both passes stream).
+    pub fn forward_hashed_bucket(&self, a: &Matrix) -> Matrix {
+        let LayerKind::Hashed { k } = self.kind else {
+            unreachable!("bucket kernel on a non-hashed layer")
+        };
+        let n = self.n;
+        let plan = self.plan_ref();
+        let a_aug = a.augment_ones();
+        let mut z = Matrix::zeros(a.rows, n);
+        let mut acc = vec![0.0f32; k];
+        for b in 0..a.rows {
+            let arow = a_aug.row(b);
+            let zrow = z.row_mut(b);
+            for i in 0..n {
+                acc.iter_mut().for_each(|x| *x = 0.0);
+                for (&e, &av) in plan.row(i).iter().zip(arow) {
+                    acc[HashPlan::bucket(e)] += HashPlan::apply_sign(e, av);
+                }
+                zrow[i] = dot_unrolled(&acc, &self.params);
+            }
+        }
         z
     }
 
     /// Backward: given `delta (B×n)` (dL/dz) and input `a (B×m)`,
     /// returns `da (B×m)` and accumulates the stored-parameter gradient
     /// into `grad` (same layout as `params`).
-    pub fn backward(&mut self, a: &Matrix, delta: &Matrix, grad: &mut [f32]) -> Matrix {
+    pub fn backward(&self, a: &Matrix, delta: &Matrix, grad: &mut [f32]) -> Matrix {
         assert_eq!(grad.len(), self.params.len());
         match self.kind {
             LayerKind::Dense => {
@@ -263,36 +369,44 @@ impl Layer {
         }
     }
 
-    /// Hashed backward (paper Eqs. 9 & 12), fused over the id cache.
-    fn backward_hashed(&mut self, a: &Matrix, delta: &Matrix, grad: &mut [f32]) -> Matrix {
+    /// Hashed backward (paper Eqs. 9 & 12), batch-amortized over the
+    /// plan: per virtual row, decompress once (for `da`), reduce the
+    /// batch into `s_j = Σ_b δ_bi a_bj`, then a **single** gather pass
+    /// scatters `ξ(i,j)·s_j` into the weight gradient — K random writes
+    /// per row instead of K·B.
+    fn backward_hashed(&self, a: &Matrix, delta: &Matrix, grad: &mut [f32]) -> Matrix {
         let (m1, n, m) = (self.m + 1, self.n, self.m);
-        let params = std::mem::take(&mut self.params);
-        self.build_hashed_cache();
-        let (ids, signs) = self.cache.as_ref().unwrap();
+        let plan = self.plan_ref();
+        let params: &[f32] = &self.params;
         let a_aug = a.augment_ones();
-        let mut da = Matrix::zeros(a.rows, m);
-        for b in 0..a.rows {
-            let arow = a_aug.row(b);
-            let drow = delta.row(b);
-            let darow = da.row_mut(b);
-            for i in 0..n {
-                let d = drow[i];
+        let rows_b = a.rows;
+        let mut da = Matrix::zeros(rows_b, m);
+        let mut vrow = vec![0.0f32; m1];
+        let mut srow = vec![0.0f32; m1];
+        for i in 0..n {
+            if (0..rows_b).all(|b| delta.at(b, i) == 0.0) {
+                continue;
+            }
+            plan.decompress_row_into(i, params, &mut vrow);
+            srow.iter_mut().for_each(|x| *x = 0.0);
+            for b in 0..rows_b {
+                let d = delta.at(b, i);
                 if d == 0.0 {
                     continue;
                 }
-                let ids_row = &ids[i * m1..(i + 1) * m1];
-                let signs_row = &signs[i * m1..(i + 1) * m1];
-                for j in 0..m1 {
-                    let v = params[ids_row[j] as usize] * signs_row[j];
-                    if j < m {
-                        darow[j] += d * v;
-                    }
-                    // Eq. 12: dw_{h(i,j)} += ξ(i,j) a_j δ_i
-                    grad[ids_row[j] as usize] += signs_row[j] * arow[j] * d;
+                let arow = a_aug.row(b);
+                for (dv, &vv) in da.row_mut(b).iter_mut().zip(&vrow[..m]) {
+                    *dv += d * vv;
+                }
+                for (sv, &av) in srow.iter_mut().zip(arow) {
+                    *sv += d * av;
                 }
             }
+            // Eq. 12: dw_{h(i,j)} += ξ(i,j) Σ_b a_bj δ_bi
+            for (&e, &sv) in plan.row(i).iter().zip(&srow) {
+                grad[HashPlan::bucket(e)] += HashPlan::apply_sign(e, sv);
+            }
         }
-        self.params = params;
         da
     }
 }
@@ -314,7 +428,7 @@ mod tests {
 
     #[test]
     fn hashed_forward_matches_virtual_matrix() {
-        let mut l = mk(LayerKind::Hashed { k: 13 }, 10, 6);
+        let l = mk(LayerKind::Hashed { k: 13 }, 10, 6);
         let mut rng = Pcg32::new(1, 1);
         let a = rand_matrix(4, 10, &mut rng);
         let z_fast = l.forward(&a);
@@ -326,8 +440,27 @@ mod tests {
     }
 
     #[test]
+    fn all_hashed_kernels_agree() {
+        let l = mk(LayerKind::Hashed { k: 9 }, 12, 7);
+        let mut rng = Pcg32::new(5, 5);
+        for batch in [1usize, 2, 6] {
+            let a = rand_matrix(batch, 12, &mut rng);
+            let z_ref = a.augment_ones().matmul_nt(&l.virtual_matrix());
+            for (name, z) in [
+                ("gather", l.forward_hashed_gather(&a)),
+                ("scratch", l.forward_hashed_scratch(&a)),
+                ("bucket", l.forward_hashed_bucket(&a)),
+            ] {
+                for (x, y) in z.data.iter().zip(&z_ref.data) {
+                    assert!((x - y).abs() < 1e-5, "{name} b={batch}: {x} vs {y}");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn hashed_weight_sharing_actually_shares() {
-        let mut l = mk(LayerKind::Hashed { k: 3 }, 8, 8);
+        let l = mk(LayerKind::Hashed { k: 3 }, 8, 8);
         let v = l.virtual_matrix();
         // only 3 distinct |values| may occur
         let mut mags: Vec<u32> = v.data.iter().map(|x| x.abs().to_bits()).collect();
@@ -336,12 +469,20 @@ mod tests {
         assert!(mags.len() <= 3, "found {} distinct magnitudes", mags.len());
     }
 
+    #[test]
+    fn plan_is_shared_across_clones() {
+        let l = mk(LayerKind::Hashed { k: 5 }, 6, 4);
+        let l2 = l.clone();
+        assert!(Arc::ptr_eq(l.plan().unwrap(), l2.plan().unwrap()));
+        assert_eq!(l.plan().unwrap().bytes(), 4 * 4 * 7);
+    }
+
     fn finite_diff_check(mut layer: Layer) {
         let mut rng = Pcg32::new(2, 2);
         let a = rand_matrix(3, layer.m, &mut rng);
         let co = rand_matrix(3, layer.n, &mut rng); // cotangent
 
-        let loss = |l: &mut Layer| -> f32 {
+        let loss = |l: &Layer| -> f32 {
             let z = l.forward(&a);
             z.data.iter().zip(&co.data).map(|(z, c)| z * c).sum()
         };
@@ -353,9 +494,9 @@ mod tests {
         for p in (0..layer.params.len()).step_by(step) {
             let orig = layer.params[p];
             layer.params[p] = orig + eps;
-            let lp = loss(&mut layer);
+            let lp = loss(&layer);
             layer.params[p] = orig - eps;
-            let lm = loss(&mut layer);
+            let lm = loss(&layer);
             layer.params[p] = orig;
             let fd = (lp - lm) / (2.0 * eps);
             assert!(
@@ -388,7 +529,7 @@ mod tests {
 
     #[test]
     fn input_gradient_matches_fd() {
-        let mut layer = mk(LayerKind::Hashed { k: 9 }, 6, 4);
+        let layer = mk(LayerKind::Hashed { k: 9 }, 6, 4);
         let mut rng = Pcg32::new(3, 3);
         let mut a = rand_matrix(2, 6, &mut rng);
         let co = rand_matrix(2, 4, &mut rng);
@@ -411,7 +552,7 @@ mod tests {
     #[test]
     fn masked_layer_keeps_roughly_k_edges() {
         let (m, n, k) = (20usize, 15usize, 60usize);
-        let mut l = mk(LayerKind::Masked { k }, m, n);
+        let l = mk(LayerKind::Masked { k }, m, n);
         let v = l.virtual_matrix();
         let nz = v.data.iter().filter(|&&x| x != 0.0).count();
         assert!((nz as f32 - k as f32).abs() < 0.35 * k as f32, "nz={nz}");
@@ -420,7 +561,7 @@ mod tests {
 
     #[test]
     fn lowrank_matrix_has_rank_r() {
-        let mut l = mk(LayerKind::LowRank { r: 2 }, 9, 7);
+        let l = mk(LayerKind::LowRank { r: 2 }, 9, 7);
         let v = l.virtual_matrix(); // 7×10, rank ≤ 2
         // crude rank check: any 3 rows are linearly dependent → the
         // 3rd singular-ish direction vanishes. Use Gram determinant.

@@ -64,18 +64,22 @@ impl Network {
     }
 
     /// Inference forward pass (no dropout).
-    pub fn predict(&mut self, x: &Matrix) -> Matrix {
+    ///
+    /// Takes `&self`: hashed layers read their shared `Arc<HashPlan>`,
+    /// so one network can serve predictions from many threads
+    /// concurrently without locks or cloning the parameters.
+    pub fn predict(&self, x: &Matrix) -> Matrix {
         let mut a = x.clone();
         let n_layers = self.layers.len();
-        for l in 0..n_layers {
-            let z = self.layers[l].forward(&a);
+        for (l, layer) in self.layers.iter().enumerate() {
+            let z = layer.forward(&a);
             a = if l < n_layers - 1 { z.map(|v| v.max(0.0)) } else { z };
         }
         a
     }
 
     /// Classification error rate in [0,1] on labeled data.
-    pub fn error_rate(&mut self, x: &Matrix, labels: &[u8]) -> f64 {
+    pub fn error_rate(&self, x: &Matrix, labels: &[u8]) -> f64 {
         let logits = self.predict(x);
         let pred = logits.argmax_rows();
         let wrong = pred.iter().zip(labels).filter(|(p, l)| **p != **l as usize).count();
@@ -283,11 +287,32 @@ mod tests {
 
     #[test]
     fn dropout_keep1_is_deterministic_in_eval() {
-        let mut net = toy_net(vec![LayerKind::Dense, LayerKind::Dense], &[10, 8, 3]);
+        let net = toy_net(vec![LayerKind::Dense, LayerKind::Dense], &[10, 8, 3]);
         let x = Matrix::from_fn(4, 10, |i, j| (i + j) as f32 * 0.1);
         let a = net.predict(&x);
         let b = net.predict(&x);
         assert_eq!(a.data, b.data);
+    }
+
+    #[test]
+    fn concurrent_predict_shares_one_network() {
+        // &self predict + Arc<HashPlan> lets N threads serve one model
+        // with no locks and no parameter clones — results must be
+        // bit-identical to the serial path.
+        let net = toy_net(
+            vec![LayerKind::Hashed { k: 500 }, LayerKind::Hashed { k: 60 }],
+            &[784, 16, 10],
+        );
+        let x = Matrix::from_fn(8, 784, |i, j| ((i * 31 + j) % 17) as f32 * 0.05);
+        let serial = net.predict(&x);
+        let results: Vec<Matrix> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..4).map(|_| s.spawn(|| net.predict(&x))).collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(results.len(), 4);
+        for r in results {
+            assert_eq!(r.data, serial.data);
+        }
     }
 
     #[test]

@@ -168,7 +168,7 @@ mod tests {
 
     #[test]
     fn real_manifest_if_present() {
-        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/manifest.json");
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts/manifest.json");
         if let Ok(text) = std::fs::read_to_string(path) {
             let m = Manifest::parse(&text).unwrap();
             assert!(!m.is_empty());

@@ -1,9 +1,15 @@
 //! Dynamic batcher: groups concurrent inference requests into one
 //! fixed-shape artifact call.
+//!
+//! The queue is a `Mutex<Vec<…>>` paired with a `Condvar` signaled by
+//! [`BatcherHandle::submit`]: the batch-forming thread sleeps until a
+//! request arrives (or a flush deadline passes) instead of the old
+//! 200 µs sleep-poll loop, so an idle server burns no CPU and a new
+//! request is picked up immediately.
 
 use crate::tensor::Matrix;
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 /// One inference request: input row + reply channel.
@@ -39,13 +45,19 @@ impl BatchStats {
     }
 }
 
+/// Shared queue state: pending requests + arrival notification.
+struct BatchQueue {
+    queue: Mutex<Vec<(Request, Instant)>>,
+    arrived: Condvar,
+}
+
 /// Collects requests and forms padded batches.
 ///
 /// The executor closure runs the model on a `(batch × n_in)` matrix and
 /// returns `(batch × n_out)` logits; the batcher owns queuing, padding,
 /// softmax and scatter.
 pub struct DynamicBatcher {
-    queue: Arc<Mutex<Vec<(Request, Instant)>>>,
+    shared: Arc<BatchQueue>,
     pub max_batch: usize,
     pub max_wait: Duration,
     pub stats: BatchStats,
@@ -54,7 +66,10 @@ pub struct DynamicBatcher {
 impl DynamicBatcher {
     pub fn new(max_batch: usize, max_wait: Duration) -> DynamicBatcher {
         DynamicBatcher {
-            queue: Arc::new(Mutex::new(Vec::new())),
+            shared: Arc::new(BatchQueue {
+                queue: Mutex::new(Vec::new()),
+                arrived: Condvar::new(),
+            }),
             max_batch,
             max_wait,
             stats: BatchStats::default(),
@@ -63,33 +78,43 @@ impl DynamicBatcher {
 
     /// Handle used by producer threads to enqueue requests.
     pub fn handle(&self) -> BatcherHandle {
-        BatcherHandle { queue: self.queue.clone() }
+        BatcherHandle { shared: self.shared.clone() }
     }
 
     /// Form the next batch: returns when `max_batch` requests are
-    /// waiting or `max_wait` passed since the oldest arrival (None on
-    /// `deadline` with an empty queue).
+    /// waiting or `max_wait` passed since the oldest arrival (None
+    /// after `idle_poll` with no batch formed). Blocks on the condvar
+    /// between arrivals — no busy-waiting.
     pub fn next_batch(&mut self, idle_poll: Duration) -> Option<Vec<(Request, Instant)>> {
-        let t0 = Instant::now();
+        let deadline = Instant::now() + idle_poll;
+        let mut q = self.shared.queue.lock().unwrap();
         loop {
-            {
-                let mut q = self.queue.lock().unwrap();
-                let oldest_wait = q.first().map(|(_, t)| t.elapsed());
-                if q.len() >= self.max_batch
-                    || oldest_wait.map(|w| w >= self.max_wait).unwrap_or(false)
-                {
-                    let take = q.len().min(self.max_batch);
-                    let batch: Vec<_> = q.drain(..take).collect();
-                    self.stats.requests += batch.len() as u64;
-                    self.stats.batches += 1;
-                    self.stats.batch_fill_sum += batch.len() as u64;
-                    return Some(batch);
-                }
+            let now = Instant::now();
+            let oldest = q.first().map(|(_, t)| *t);
+            let flush = oldest
+                .map(|t| now.duration_since(t) >= self.max_wait)
+                .unwrap_or(false);
+            if q.len() >= self.max_batch || flush {
+                let take = q.len().min(self.max_batch);
+                let batch: Vec<_> = q.drain(..take).collect();
+                self.stats.requests += batch.len() as u64;
+                self.stats.batches += 1;
+                self.stats.batch_fill_sum += batch.len() as u64;
+                return Some(batch);
             }
-            if t0.elapsed() >= idle_poll {
+            if now >= deadline {
                 return None;
             }
-            std::thread::sleep(Duration::from_micros(200));
+            // Sleep until whichever comes first: the oldest request's
+            // flush deadline or the idle deadline; submit() wakes us
+            // early when a request lands.
+            let wake_at = match oldest {
+                Some(t) => (t + self.max_wait).min(deadline),
+                None => deadline,
+            };
+            let wait = wake_at.saturating_duration_since(now);
+            let (guard, _res) = self.shared.arrived.wait_timeout(q, wait).unwrap();
+            q = guard;
         }
     }
 
@@ -128,17 +153,19 @@ impl DynamicBatcher {
 /// Cloneable enqueue handle.
 #[derive(Clone)]
 pub struct BatcherHandle {
-    queue: Arc<Mutex<Vec<(Request, Instant)>>>,
+    shared: Arc<BatchQueue>,
 }
 
 impl BatcherHandle {
-    /// Enqueue a request; returns the receiver for the reply.
+    /// Enqueue a request and wake the batch former; returns the
+    /// receiver for the reply.
     pub fn submit(&self, pixels: Vec<f32>) -> mpsc::Receiver<Response> {
         let (tx, rx) = mpsc::channel();
-        self.queue
-            .lock()
-            .unwrap()
-            .push((Request { pixels, reply: tx }, Instant::now()));
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push((Request { pixels, reply: tx }, Instant::now()));
+        }
+        self.shared.arrived.notify_one();
         rx
     }
 }
@@ -167,7 +194,9 @@ mod tests {
             let r = rx.recv().unwrap();
             // pixels were [i, 0, 0] -> argmax is col 0 (ties prefer first)
             assert_eq!(r.class, 0, "req {i}");
-            assert!(r.latency_us > 0);
+            // condvar wakeups can round to 0 µs, so only an upper bound
+            // is meaningful here
+            assert!(r.latency_us < 1_000_000, "absurd latency {}", r.latency_us);
         }
         assert_eq!(b.stats.requests, 6);
         assert_eq!(b.stats.batches, 2);
@@ -190,6 +219,30 @@ mod tests {
     fn idle_poll_returns_none() {
         let mut b = DynamicBatcher::new(4, Duration::from_millis(1));
         assert!(b.next_batch(Duration::from_millis(5)).is_none());
+    }
+
+    #[test]
+    fn submit_wakes_blocked_next_batch() {
+        // a blocked next_batch must be woken by submit(), not by a poll
+        // tick: with max_batch=1 the batch forms as soon as the request
+        // lands, far before the 2 s idle deadline.
+        let mut b = DynamicBatcher::new(1, Duration::from_millis(500));
+        let h = b.handle();
+        let producer = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(50));
+            h.submit(vec![1.0, 0.0, 0.0])
+        });
+        let t0 = Instant::now();
+        let batch = b.next_batch(Duration::from_secs(2)).expect("woken by submit");
+        assert_eq!(batch.len(), 1);
+        assert!(
+            t0.elapsed() < Duration::from_millis(1500),
+            "next_batch was not woken promptly: {:?}",
+            t0.elapsed()
+        );
+        b.dispatch(batch, 3, echo_exec);
+        let rx = producer.join().unwrap();
+        assert_eq!(rx.recv().unwrap().class, 0);
     }
 
     #[test]

@@ -1,6 +1,32 @@
 //! Host-side f32 tensors: a small row-major matrix type with the ops the
 //! native engine and the coordinator need (no ndarray offline).
 
+/// Dot product over 4 independent accumulators: breaks the FP-add
+/// dependency chain that serializes a single-accumulator loop, so the
+/// CPU can keep several fused multiply-adds in flight. Shared by
+/// [`Matrix::matmul_nt`] (the dense roofline / Dense-layer forward) and
+/// the hashed scratch-row kernel in `nn::layers`.
+#[inline]
+pub fn dot_unrolled(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len(), "dot_unrolled length mismatch");
+    let n = a.len().min(b.len());
+    let (a, b) = (&a[..n], &b[..n]);
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    let mut ca = a.chunks_exact(4);
+    let mut cb = b.chunks_exact(4);
+    for (x, y) in (&mut ca).zip(&mut cb) {
+        s0 += x[0] * y[0];
+        s1 += x[1] * y[1];
+        s2 += x[2] * y[2];
+        s3 += x[3] * y[3];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s += x * y;
+    }
+    s
+}
+
 /// Row-major 2-D f32 matrix.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Matrix {
@@ -69,20 +95,17 @@ impl Matrix {
         out
     }
 
-    /// `self (r×k) @ other.T (c×k) -> (r×c)` — dot-product form.
+    /// `self (r×k) @ other.T (c×k) -> (r×c)` — dot-product form, inner
+    /// loop unrolled into 4 independent accumulators ([`dot_unrolled`]).
     pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
         assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
-        let (r, k, c) = (self.rows, self.cols, other.rows);
+        let (r, c) = (self.rows, other.rows);
         let mut out = Matrix::zeros(r, c);
         for i in 0..r {
             let arow = self.row(i);
-            for j in 0..c {
-                let brow = other.row(j);
-                let mut acc = 0.0f32;
-                for p in 0..k {
-                    acc += arow[p] * brow[p];
-                }
-                *out.at_mut(i, j) = acc;
+            let orow = out.row_mut(i);
+            for (j, ov) in orow.iter_mut().enumerate() {
+                *ov = dot_unrolled(arow, other.row(j));
             }
         }
         out
@@ -190,6 +213,18 @@ impl Matrix {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn dot_unrolled_matches_naive() {
+        let mut rng = crate::util::rng::Pcg32::new(7, 7);
+        for len in [0usize, 1, 3, 4, 5, 8, 17, 64, 101] {
+            let a: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.normal()).collect();
+            let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            let fast = dot_unrolled(&a, &b);
+            assert!((naive - fast).abs() < 1e-4 * (1.0 + naive.abs()), "len {len}");
+        }
+    }
 
     #[test]
     fn matmul_small_known() {

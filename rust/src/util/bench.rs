@@ -95,6 +95,37 @@ impl Bench {
     pub fn results(&self) -> &[BenchStats] {
         &self.results
     }
+
+    /// Record externally measured stats (for targets that time whole
+    /// request flows rather than a closure, e.g. the serving bench).
+    pub fn push(&mut self, stats: BenchStats) {
+        self.results.push(stats);
+    }
+
+    /// Write all recorded results as a JSON array (one object per case:
+    /// name, iters, mean_ns, stddev_ns, p50_ns, p95_ns, throughput).
+    /// Bench targets write `BENCH_<name>.json` at the repo root so the
+    /// perf trajectory is tracked across PRs.
+    pub fn write_json(&self, path: impl AsRef<std::path::Path>) -> std::io::Result<()> {
+        use crate::util::json::{num, obj, Json};
+        let arr = Json::Arr(
+            self.results
+                .iter()
+                .map(|s| {
+                    obj(vec![
+                        ("name", Json::Str(s.name.clone())),
+                        ("iters", num(s.iters as f64)),
+                        ("mean_ns", num(s.mean_ns)),
+                        ("stddev_ns", num(s.stddev_ns)),
+                        ("p50_ns", num(s.p50_ns)),
+                        ("p95_ns", num(s.p95_ns)),
+                        ("throughput", s.throughput.map(num).unwrap_or(Json::Null)),
+                    ])
+                })
+                .collect(),
+        );
+        std::fs::write(path, arr.to_string())
+    }
 }
 
 #[cfg(test)]
@@ -121,5 +152,24 @@ mod tests {
         b.items_per_iter = Some(100.0);
         let s = b.run("tp", || std::thread::sleep(std::time::Duration::from_micros(50)));
         assert!(s.throughput.unwrap() > 0.0);
+    }
+
+    #[test]
+    fn write_json_roundtrips() {
+        let mut b = Bench::new(0, 2);
+        b.run("case_a", || std::hint::black_box(1 + 1));
+        b.items_per_iter = Some(10.0);
+        b.run("case_b", || std::hint::black_box(2 + 2));
+        let path = std::env::temp_dir().join(format!("bench_{}.json", std::process::id()));
+        b.write_json(&path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let v = crate::util::json::Json::parse(&text).unwrap();
+        let cases = v.as_arr().unwrap();
+        assert_eq!(cases.len(), 2);
+        assert_eq!(cases[0].req_str("name").unwrap(), "case_a");
+        assert!(cases[0].req_f64("mean_ns").unwrap() >= 0.0);
+        assert!(cases[0].get("throughput").unwrap().as_f64().is_none());
+        assert!(cases[1].get("throughput").unwrap().as_f64().unwrap() > 0.0);
     }
 }

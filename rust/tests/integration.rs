@@ -16,7 +16,7 @@ const TINY_HASHNET_DK: &str = "hashnet_dk_3l_h32_o10_c1-4";
 const TINY_TEACHER: &str = "nn_3l_h32_o10_c1-1";
 
 fn runtime() -> Option<Runtime> {
-    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts");
     match Runtime::open(dir) {
         Ok(rt) if rt.manifest.get(TINY_HASHNET).is_some() => Some(rt),
         _ => {
@@ -203,7 +203,7 @@ fn serve_end_to_end_over_tcp() {
     let Some(_) = runtime() else { return };
     let addr = "127.0.0.1:47911";
     let opts = ServeOptions {
-        artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts").into(),
+        artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts").into(),
         artifact: TINY_HASHNET.into(),
         addr: addr.into(),
         max_requests: 0,
@@ -218,7 +218,9 @@ fn serve_end_to_end_over_tcp() {
         assert!(class < 10);
         assert_eq!(probs.len(), 10);
         assert!((probs.iter().sum::<f32>() - 1.0).abs() < 1e-3);
-        assert!(latency > 0);
+        // latency can legitimately round to 0 µs with condvar wakeups;
+        // only sanity-bound it from above
+        assert!(latency < 10_000_000, "absurd latency {latency}");
     }
     client.shutdown().unwrap();
     server.join().unwrap().unwrap();

@@ -1,0 +1,131 @@
+//! Property-style coverage of the hashed-layer kernel variants: every
+//! kernel (legacy gather, scratch-row, bucket-major, and the dispatch
+//! heuristic in `forward`) must match the materialized virtual-matrix
+//! reference over a sweep of shapes, including the degenerate corners
+//! `k = 1`, `k ≥ n·(m+1)` and batch 1; plus a finite-difference check
+//! on the batch-amortized hashed backward. These tests need no
+//! artifacts — they run on a fresh checkout.
+
+use hashednets::hash::DEFAULT_SEED_BASE;
+use hashednets::nn::{Layer, LayerKind};
+use hashednets::tensor::Matrix;
+use hashednets::util::rng::Pcg32;
+
+fn hashed_layer(m: usize, n: usize, k: usize, seed: u64) -> Layer {
+    let mut layer = Layer::new(m, n, LayerKind::Hashed { k }, 0, DEFAULT_SEED_BASE);
+    let mut rng = Pcg32::new(seed, seed ^ 0xA5A5);
+    layer.init(&mut rng);
+    layer
+}
+
+fn reference_forward(layer: &Layer, a: &Matrix) -> Matrix {
+    a.augment_ones().matmul_nt(&layer.virtual_matrix())
+}
+
+fn assert_close(name: &str, shape: (usize, usize, usize, usize), got: &Matrix, want: &Matrix) {
+    assert_eq!((got.rows, got.cols), (want.rows, want.cols), "{name} {shape:?}: shape");
+    for (idx, (g, w)) in got.data.iter().zip(&want.data).enumerate() {
+        assert!(
+            (g - w).abs() < 1e-5 * (1.0 + w.abs()),
+            "{name} (m,n,k,b)={shape:?} cell {idx}: {g} vs {w}"
+        );
+    }
+}
+
+#[test]
+fn every_kernel_matches_reference_across_shapes() {
+    // (m, n, k, batch) — corners: k=1 (all cells share one weight),
+    // k = n·(m+1) and k > n·(m+1) (near-injective plan), batch 1
+    // (serving), batch 50 (the paper's minibatch).
+    let shapes: &[(usize, usize, usize, usize)] = &[
+        (1, 1, 1, 1),
+        (5, 3, 1, 4),
+        (7, 5, 11, 1),
+        (10, 6, 13, 4),
+        (6, 4, 40, 3),    // k > n·(m+1) = 28
+        (17, 9, 162, 2),  // k = n·(m+1) exactly
+        (12, 8, 6, 50),
+        (3, 16, 25, 2),
+    ];
+    for &(m, n, k, batch) in shapes {
+        let layer = hashed_layer(m, n, k, (m * 131 + n * 17 + k) as u64);
+        let mut rng = Pcg32::new(batch as u64 + 1, k as u64);
+        let a = Matrix::from_fn(batch, m, |_, _| rng.normal());
+        let want = reference_forward(&layer, &a);
+        let shape = (m, n, k, batch);
+        assert_close("gather", shape, &layer.forward_hashed_gather(&a), &want);
+        assert_close("scratch", shape, &layer.forward_hashed_scratch(&a), &want);
+        assert_close("bucket", shape, &layer.forward_hashed_bucket(&a), &want);
+        assert_close("dispatch", shape, &layer.forward(&a), &want);
+    }
+}
+
+#[test]
+fn scratch_kernel_parallel_path_matches_reference() {
+    // large enough that forward_hashed_scratch crosses its
+    // multi-threading threshold (n·(m+1)·(B+1) > 2^21)
+    let (m, n, k, batch) = (300usize, 128usize, 4800usize, 64usize);
+    let layer = hashed_layer(m, n, k, 99);
+    let mut rng = Pcg32::new(4, 4);
+    let a = Matrix::from_fn(batch, m, |_, _| rng.normal());
+    let want = reference_forward(&layer, &a);
+    assert_close("scratch-par", (m, n, k, batch), &layer.forward_hashed_scratch(&a), &want);
+}
+
+#[test]
+fn hashed_backward_matches_finite_difference() {
+    for &(m, n, k, batch) in &[(9usize, 7usize, 12usize, 3usize), (6, 5, 4, 1), (5, 3, 1, 2)] {
+        let mut layer = hashed_layer(m, n, k, (k * 7 + batch) as u64);
+        let mut rng = Pcg32::new(batch as u64, 2);
+        let a = Matrix::from_fn(batch, m, |_, _| rng.normal());
+        let co = Matrix::from_fn(batch, n, |_, _| rng.normal()); // cotangent
+        let loss = |l: &Layer| -> f32 {
+            let z = l.forward(&a);
+            z.data.iter().zip(&co.data).map(|(z, c)| z * c).sum()
+        };
+        let mut grad = vec![0.0f32; layer.params.len()];
+        let da = layer.backward(&a, &co, &mut grad);
+        let eps = 1e-2f32;
+        for p in 0..layer.params.len() {
+            let orig = layer.params[p];
+            layer.params[p] = orig + eps;
+            let lp = loss(&layer);
+            layer.params[p] = orig - eps;
+            let lm = loss(&layer);
+            layer.params[p] = orig;
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (fd - grad[p]).abs() < 2e-2 * (1.0 + fd.abs()),
+                "(m,n,k,b)=({m},{n},{k},{batch}) param {p}: fd {fd} vs ad {}",
+                grad[p]
+            );
+        }
+        // spot-check the input gradient against the reference chain rule
+        let v = layer.virtual_matrix();
+        let da_ref = co.matmul(&v).drop_last_col();
+        for (x, y) in da.data.iter().zip(&da_ref.data) {
+            assert!((x - y).abs() < 1e-4 * (1.0 + y.abs()), "da {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn backward_skips_zero_delta_columns_correctly() {
+    // delta with entire zero columns exercises the early-skip path
+    let layer = hashed_layer(8, 6, 10, 77);
+    let mut rng = Pcg32::new(6, 6);
+    let a = Matrix::from_fn(4, 8, |_, _| rng.normal());
+    let mut delta = Matrix::zeros(4, 6);
+    for b in 0..4 {
+        delta.row_mut(b)[1] = rng.normal();
+        delta.row_mut(b)[4] = rng.normal();
+    }
+    let mut grad = vec![0.0f32; layer.params.len()];
+    let da = layer.backward(&a, &delta, &mut grad);
+    let v = layer.virtual_matrix();
+    let da_ref = delta.matmul(&v).drop_last_col();
+    for (x, y) in da.data.iter().zip(&da_ref.data) {
+        assert!((x - y).abs() < 1e-5 * (1.0 + y.abs()));
+    }
+    assert!(grad.iter().any(|&g| g != 0.0), "gradient should be nonzero");
+}

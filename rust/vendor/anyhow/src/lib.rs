@@ -1,0 +1,123 @@
+//! Minimal offline stand-in for the `anyhow` crate, covering exactly
+//! the subset `hashednets` uses: [`Error`], [`Result`], the [`anyhow!`]
+//! macro, the [`Context`] extension trait, and `?`-conversion from any
+//! `std::error::Error`. Error messages render the context chain the
+//! same way for `{}`, `{:#}` and `{:?}`.
+
+use std::fmt;
+
+/// A string-backed error with an optional chain of context lines.
+pub struct Error {
+    msg: String,
+    context: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string(), context: Vec::new() }
+    }
+
+    fn push_context(mut self, c: impl fmt::Display) -> Error {
+        self.context.push(c.to_string());
+        self
+    }
+
+    fn render(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        // outermost context first, root cause last — like anyhow's `{:#}`
+        for c in self.context.iter().rev() {
+            write!(f, "{c}: ")?;
+        }
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.render(f)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.render(f)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `anyhow::Result<T>` — `std::result::Result` with [`Error`] default.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string, a displayable value, or
+/// a format string with arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Attach context to an error result.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    Error: From<E>,
+{
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).push_context(c))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).push_context(f()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read_to_string("/definitely/not/a/real/path")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        assert!(io_fail().is_err());
+    }
+
+    #[test]
+    fn macro_forms() {
+        let a: Error = anyhow!("plain");
+        let b: Error = anyhow!(String::from("from expr"));
+        let c: Error = anyhow!("x = {}", 7);
+        let name = "y";
+        let d: Error = anyhow!("inline {name}");
+        assert_eq!(a.to_string(), "plain");
+        assert_eq!(b.to_string(), "from expr");
+        assert_eq!(c.to_string(), "x = 7");
+        assert_eq!(d.to_string(), "inline y");
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let e = io_fail().with_context(|| "loading config").unwrap_err();
+        let text = format!("{e:#}");
+        assert!(text.starts_with("loading config: "), "{text}");
+    }
+}

@@ -1,0 +1,118 @@
+//! API-compatible stub of the `xla` (xla-rs) PJRT binding.
+//!
+//! The real binding needs the vendored XLA dependency closure, which
+//! this environment does not ship. This stub exposes the same type and
+//! method surface the `hashednets::runtime` module uses, with every
+//! entry point that would touch PJRT returning an "unavailable" error.
+//! `Runtime::open` therefore fails cleanly, and everything
+//! artifact-dependent (integration tests, benches, examples) already
+//! skips gracefully on that failure — the native engine, trainer tests
+//! and serving unit tests are unaffected.
+//!
+//! To enable the PJRT path, replace this crate with the real vendored
+//! `xla` crate; no source change in `hashednets` is needed.
+
+/// Error reported for every stubbed PJRT operation (printed with `{:?}`).
+#[derive(Debug, Clone)]
+pub struct XlaError(pub String);
+
+fn unavailable<T>() -> Result<T, XlaError> {
+    Err(XlaError(
+        "PJRT backend unavailable: the offline xla stub is linked (vendor the real xla crate to enable artifacts)"
+            .to_string(),
+    ))
+}
+
+/// PJRT client handle (stub: construction always fails).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, XlaError> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable, XlaError> {
+        unavailable()
+    }
+}
+
+/// Compiled executable handle (stub: unreachable without a client).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>, XlaError> {
+        unavailable()
+    }
+}
+
+/// Device buffer handle.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, XlaError> {
+        unavailable()
+    }
+}
+
+/// Host literal (stub: constructors exist so marshaling code compiles;
+/// readbacks fail).
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn scalar<T: Copy>(_value: T) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, XlaError> {
+        Ok(Literal)
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, XlaError> {
+        unavailable()
+    }
+
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, XlaError> {
+        unavailable()
+    }
+
+    pub fn to_tuple1(&self) -> Result<Literal, XlaError> {
+        unavailable()
+    }
+}
+
+/// Parsed HLO module (stub: parsing always fails — nothing downstream
+/// could execute it anyway).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, XlaError> {
+        unavailable()
+    }
+}
+
+/// XLA computation wrapper.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+        let lit = Literal::vec1(&[1.0f32, 2.0]);
+        assert!(lit.reshape(&[2, 1]).is_ok());
+        assert!(lit.to_vec::<f32>().is_err());
+    }
+}

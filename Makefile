@@ -1,11 +1,14 @@
 # HashedNets — build / test / bench entry points.
 #
-#   make check      build (release) + run the full Rust test suite.
-#                   Deterministic on a fresh checkout: artifact-dependent
-#                   tests skip gracefully when artifacts/ is absent.
+#   make check      build (release) + clippy (-D warnings) + the full
+#                   Rust test suite. Deterministic on a fresh checkout:
+#                   artifact-dependent tests skip gracefully when
+#                   artifacts/ is absent.
 #   make bench      run every bench target; each writes BENCH_<name>.json
 #                   at the repo root so the perf trajectory is tracked
 #                   across PRs.
+#   make serve-bench  run only the serving latency sweep (native 1/2/4
+#                   workers vs runtime) and collect BENCH_serve_latency.json.
 #   make artifacts  lower the core config set to HLO artifacts (needs
 #                   the Python/JAX toolchain).
 #   make pytest     run the Python build-time test suite (also emits the
@@ -14,10 +17,10 @@
 RUST_DIR := rust
 PY_DIR   := python
 
-.PHONY: check bench artifacts pytest clean-bench
+.PHONY: check bench serve-bench artifacts pytest clean-bench
 
 check:
-	cd $(RUST_DIR) && cargo build --release && cargo test -q
+	cd $(RUST_DIR) && cargo build --release && cargo clippy -q --all-targets -- -D warnings && cargo test -q
 
 # bench binaries anchor artifacts/ and BENCH_*.json at the repo root
 # via CARGO_MANIFEST_DIR, so they are CWD-independent
@@ -25,6 +28,11 @@ bench:
 	cd $(RUST_DIR) && cargo bench
 	@echo "== collected bench reports =="
 	@ls -l BENCH_*.json 2>/dev/null || echo "no BENCH_*.json produced"
+
+serve-bench:
+	cd $(RUST_DIR) && cargo bench --bench serve_latency
+	@echo "== serve latency report =="
+	@ls -l BENCH_serve_latency.json 2>/dev/null || echo "no BENCH_serve_latency.json produced"
 
 artifacts:
 	cd $(PY_DIR) && python -m compile.aot --out-dir ../artifacts --set core

@@ -1,82 +1,160 @@
 //! Serving bench: request latency and throughput through the dynamic
-//! batcher + PJRT predict path, at several concurrency levels — the
-//! deployment cost story behind the paper's mobile-inference motivation.
+//! batcher, sweeping the two backends and the native worker count —
+//! the scaling evidence for the shared-batcher multi-worker design
+//! (N threads × one model), not an assertion.
 //!
-//!     cargo bench --bench serve_latency
+//!     cargo bench --bench serve_latency     (or `make serve-bench`)
+//!
+//! Cases: native backend at 1/2/4 workers, runtime (PJRT) backend at
+//! its pinned 1 worker when artifacts are available. The native engine
+//! needs only `manifest.json` — when `make artifacts` has not run, a
+//! manifest for the paper's 784-100-10 HashNet at 1/8 compression is
+//! synthesized so the native sweep always measures something.
 
-use hashednets::data::{generate, Kind, Split};
-use hashednets::serve::{serve, Client, ServeOptions};
+use hashednets::data::{generate, Dataset, Kind, Split};
+use hashednets::serve::{Backend, Client, ModelConfig, ServeOptions, Server};
 use hashednets::util::bench::{Bench, BenchStats};
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
 const OUT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve_latency.json");
+const ARTIFACTS: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts");
+const ARTIFACT: &str = "hashnet_3l_h100_o10_c1-8";
 
-fn main() {
-    println!("== serve_latency (hashnet_3l_h100_o10_c1-8) ==");
-    let mut b = Bench::default();
-    if hashednets::runtime::Runtime::open(concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts")).is_err() {
-        println!("artifacts missing — run `make artifacts` first");
-        b.write_json(OUT).expect("write bench json");
-        return;
-    }
-    let addr = "127.0.0.1:47955";
+/// Write a minimal manifest for the 784-100-10 HashNet at 1/8
+/// compression: enough for the native backend (which never touches the
+/// HLO graph files).
+fn synth_manifest_dir() -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hn_serve_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create temp manifest dir");
+    let manifest = format!(
+        r#"{{
+  "n_in": 784,
+  "artifacts": [{{
+    "name": "{ARTIFACT}", "method": "hashnet",
+    "dims": [784, 100, 10], "budgets": [9812, 126], "batch": 32,
+    "seed_base": 2654435769, "uses_soft_targets": false,
+    "compression": 0.125, "virtual_params": 79510, "stored_params": 9938,
+    "params": [
+      {{"name": "w0", "shape": [9812], "init_std": 0.0504}},
+      {{"name": "w1", "shape": [126], "init_std": 0.1405}}
+    ],
+    "graphs": {{"train": "absent.train.hlo.txt", "predict": "absent.predict.hlo.txt"}}
+  }}]
+}}"#
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).expect("write manifest");
+    dir
+}
+
+fn run_case(
+    b: &mut Bench,
+    dir: &std::path::Path,
+    backend: Backend,
+    workers: usize,
+    ds: &Dataset,
+    label: &str,
+) -> bool {
     let opts = ServeOptions {
-        artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts").into(),
-        artifact: "hashnet_3l_h100_o10_c1-8".into(),
-        addr: addr.into(),
+        artifacts_dir: dir.to_path_buf(),
+        models: vec![ModelConfig::new(ARTIFACT)],
+        addr: "127.0.0.1:0".into(),
+        backend,
+        workers,
         max_wait: Duration::from_micros(500),
         ..Default::default()
     };
-    let server = std::thread::spawn(move || serve(opts));
-    std::thread::sleep(Duration::from_millis(1500));
+    let srv = match Server::bind(opts) {
+        Ok(s) => s,
+        Err(e) => {
+            println!("{label}: skipped ({e:#})");
+            return false;
+        }
+    };
+    let addr = srv.local_addr().to_string();
+    let server = std::thread::spawn(move || srv.run());
+
+    let n_clients = 8usize;
+    let reqs_per_client = 40usize;
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..n_clients {
+        let addr = addr.clone();
+        let rows: Vec<Vec<f32>> =
+            (0..reqs_per_client).map(|i| ds.images.row((c + i) % 64).to_vec()).collect();
+        handles.push(std::thread::spawn(move || -> Vec<u64> {
+            let mut client = Client::connect(&addr).expect("connect");
+            rows.iter().map(|r| client.classify(r).expect("classify").2).collect()
+        }));
+    }
+    let mut lat: Vec<u64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
+    lat.sort_unstable();
+    let total = (n_clients * reqs_per_client) as f64;
+    let wall = t0.elapsed().as_secs_f64();
+    println!(
+        "{label:<14} {:>7.0} req/s   p50 {:>6} µs   p95 {:>6} µs   p99 {:>6} µs",
+        total / wall,
+        lat[lat.len() / 2],
+        lat[lat.len() * 95 / 100],
+        lat[(lat.len() * 99 / 100).min(lat.len() - 1)],
+    );
+    let mean_us = lat.iter().sum::<u64>() as f64 / lat.len() as f64;
+    let var_us = lat
+        .iter()
+        .map(|&l| (l as f64 - mean_us) * (l as f64 - mean_us))
+        .sum::<f64>()
+        / (lat.len().saturating_sub(1).max(1)) as f64;
+    b.push(BenchStats {
+        name: label.to_string(),
+        iters: lat.len(),
+        mean_ns: mean_us * 1e3,
+        stddev_ns: var_us.sqrt() * 1e3,
+        p50_ns: lat[lat.len() / 2] as f64 * 1e3,
+        p95_ns: lat[lat.len() * 95 / 100] as f64 * 1e3,
+        throughput: Some(total / wall),
+    });
+
+    let mut c = Client::connect(&addr).expect("connect for shutdown");
+    c.shutdown().expect("shutdown");
+    server.join().unwrap().expect("server run");
+    true
+}
+
+fn main() {
+    println!("== serve_latency ({ARTIFACT}, 8 clients x 40 reqs) ==");
+    let mut b = Bench::default();
+
+    // Prefer the real manifest; synthesize one for the native sweep
+    // when `make artifacts` has not run.
+    let real = PathBuf::from(ARTIFACTS);
+    let have_real = hashednets::runtime::Manifest::load(&real.join("manifest.json"))
+        .map(|m| m.get(ARTIFACT).is_some())
+        .unwrap_or(false);
+    let native_dir = if have_real { real.clone() } else { synth_manifest_dir() };
+
     let ds = generate(Kind::Basic, Split::Test, 64, 2);
 
-    for n_clients in [1usize, 4, 16] {
-        let reqs_per_client = 40;
-        let t0 = Instant::now();
-        let mut handles = Vec::new();
-        for c in 0..n_clients {
-            let addr = addr.to_string();
-            let rows: Vec<Vec<f32>> =
-                (0..reqs_per_client).map(|i| ds.images.row((c + i) % 64).to_vec()).collect();
-            handles.push(std::thread::spawn(move || -> Vec<u64> {
-                let mut client = Client::connect(&addr).expect("connect");
-                rows.iter()
-                    .map(|r| client.classify(r).expect("classify").2)
-                    .collect()
-            }));
-        }
-        let mut lat: Vec<u64> = handles.into_iter().flat_map(|h| h.join().unwrap()).collect();
-        lat.sort_unstable();
-        let total = (n_clients * reqs_per_client) as f64;
-        let wall = t0.elapsed().as_secs_f64();
-        println!(
-            "{:>3} clients: {:>7.0} req/s   p50 {:>6} µs   p95 {:>6} µs   p99 {:>6} µs",
-            n_clients,
-            total / wall,
-            lat[lat.len() / 2],
-            lat[lat.len() * 95 / 100],
-            lat[(lat.len() * 99 / 100).min(lat.len() - 1)],
+    for workers in [1usize, 2, 4] {
+        run_case(
+            &mut b,
+            &native_dir,
+            Backend::Native,
+            workers,
+            &ds,
+            &format!("native w{workers}"),
         );
-        let mean_us = lat.iter().sum::<u64>() as f64 / lat.len() as f64;
-        let var_us = lat
-            .iter()
-            .map(|&l| (l as f64 - mean_us) * (l as f64 - mean_us))
-            .sum::<f64>()
-            / (lat.len().saturating_sub(1).max(1)) as f64;
-        b.push(BenchStats {
-            name: format!("serve {n_clients} clients"),
-            iters: lat.len(),
-            mean_ns: mean_us * 1e3,
-            stddev_ns: var_us.sqrt() * 1e3,
-            p50_ns: lat[lat.len() / 2] as f64 * 1e3,
-            p95_ns: lat[lat.len() * 95 / 100] as f64 * 1e3,
-            throughput: Some(total / wall),
-        });
     }
-    let mut c = Client::connect(addr).unwrap();
-    c.shutdown().unwrap();
-    server.join().unwrap().unwrap();
+    // The runtime backend is pinned to one worker (PJRT handles are not
+    // Send); Server::bind reports why when PJRT is unavailable.
+    if have_real {
+        run_case(&mut b, &real, Backend::Runtime, 1, &ds, "runtime w1");
+    } else {
+        println!("runtime w1    : skipped (no artifacts/manifest.json — run `make artifacts`)");
+    }
+
+    if !have_real {
+        std::fs::remove_dir_all(&native_dir).ok();
+    }
     b.write_json(OUT).expect("write bench json");
     println!("wrote {OUT}");
 }

@@ -18,7 +18,7 @@ use hashednets::coordinator::{native, trainer};
 use hashednets::data::{generate, Kind, Split};
 use hashednets::nn::TrainHyper;
 use hashednets::runtime::{ModelState, Runtime};
-use hashednets::serve::{serve, Client, ServeOptions};
+use hashednets::serve::{serve, Backend, Client, ModelConfig, ServeOptions};
 use hashednets::tensor::Matrix;
 use hashednets::util::rng::Pcg32;
 
@@ -90,14 +90,17 @@ fn main() -> Result<()> {
     );
 
     // 4. serve it ---------------------------------------------------------
+    // `auto` picks the PJRT artifact runtime when it loads, otherwise
+    // the native HashPlan engine — where two workers share the model.
     println!("[4/4] serving the compressed model on 127.0.0.1:47912...");
     let ckpt = std::env::temp_dir().join("hn_compressed.ckpt");
     hstate.save(&ckpt)?;
     let opts = ServeOptions {
         artifacts_dir: "artifacts".into(),
-        artifact: HASHED.into(),
-        checkpoint: Some(ckpt.clone()),
+        models: vec![ModelConfig::new(HASHED).with_checkpoint(ckpt.clone())],
         addr: "127.0.0.1:47912".into(),
+        backend: Backend::Auto,
+        workers: 2,
         ..Default::default()
     };
     let server = std::thread::spawn(move || serve(opts));

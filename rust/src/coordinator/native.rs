@@ -32,6 +32,35 @@ pub fn network_from_spec(spec: &ArtifactSpec) -> Network {
     Network::new(layers)
 }
 
+/// Fallible [`network_from_spec`] + [`load_params`]: validates that the
+/// state's tensor lengths match the spec's layer layout before copying,
+/// so a wrong checkpoint is a clean error instead of a slice panic.
+/// This is how `serve::engine::NativeEngine` builds its model.
+pub fn try_build(spec: &ArtifactSpec, state: &ModelState) -> anyhow::Result<Network> {
+    let mut net = network_from_spec(spec);
+    let mut expect: Vec<usize> = Vec::new();
+    for layer in &net.layers {
+        match layer.kind {
+            LayerKind::Dense => {
+                expect.push(layer.n * layer.m);
+                expect.push(layer.n);
+            }
+            _ => expect.push(layer.params.len()),
+        }
+    }
+    let got: Vec<usize> = state.params.iter().map(Vec::len).collect();
+    if got != expect {
+        return Err(anyhow::anyhow!(
+            "state does not match artifact '{}': tensor lengths {:?}, expected {:?}",
+            spec.name,
+            got,
+            expect
+        ));
+    }
+    load_params(&mut net, spec, state);
+    Ok(net)
+}
+
 /// Copy artifact parameters into the native network.
 ///
 /// Layouts match by construction (manifest order is layer order, and

@@ -5,7 +5,9 @@
 //!   eval     — evaluate a checkpoint on a dataset split
 //!   repro    — regenerate a paper experiment (fig2|fig3|table1|table2|fig4)
 //!   hpo      — random-search hyperparameters for an artifact
-//!   serve    — run the batched inference server on a checkpoint
+//!   serve    — run the batched inference server on one or more
+//!              checkpoints (--config a,b --backend native|runtime|auto
+//!              --workers N)
 //!   compress — compress a trained dense checkpoint into a HashedNet
 //!   list     — list artifacts in the manifest
 //!   selftest — artifact ↔ native engine cross-validation
@@ -16,7 +18,7 @@ use anyhow::{anyhow, Result};
 use hashednets::coordinator::{hpo, native, repro, trainer};
 use hashednets::data::{generate, Kind, Split};
 use hashednets::runtime::{Graph, Hyper, ModelState, Runtime};
-use hashednets::serve::{serve, ServeOptions};
+use hashednets::serve::{serve, Backend, ModelConfig, ServeOptions};
 use hashednets::util::args::Args;
 use std::path::PathBuf;
 
@@ -162,12 +164,42 @@ fn cmd_hpo(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let artifact = args.get("config").ok_or_else(|| anyhow!("--config required"))?;
+    // --config takes a comma-separated artifact list (one process, many
+    // models); --checkpoint matches positionally ("-" = seed init).
+    let configs = args.get("config").ok_or_else(|| anyhow!("--config <artifact[,artifact…]> required"))?;
+    let ckpts: Vec<&str> = args.get("checkpoint").map(|c| c.split(',').collect()).unwrap_or_default();
+    let n_models = configs.split(',').count();
+    // positional matching is silent-failure-prone: demand one entry per
+    // model (seed-init a model explicitly with "-") so nobody serves
+    // random weights because a list was one short
+    if !ckpts.is_empty() && ckpts.len() != n_models {
+        return Err(anyhow!(
+            "--checkpoint lists {} entries for {} models; give one per model (use '-' for seed init)",
+            ckpts.len(),
+            n_models
+        ));
+    }
+    let models: Vec<ModelConfig> = configs
+        .split(',')
+        .enumerate()
+        .map(|(i, artifact)| {
+            let mut mc = ModelConfig::new(artifact.trim());
+            let ck = ckpts.get(i).copied().unwrap_or("");
+            if !ck.is_empty() && ck != "-" {
+                mc = mc.with_checkpoint(PathBuf::from(ck));
+            }
+            mc
+        })
+        .collect();
+    let backend_name = args.get_or("backend", "auto");
+    let backend = Backend::parse(backend_name)
+        .ok_or_else(|| anyhow!("--backend must be native|runtime|auto, got '{backend_name}'"))?;
     serve(ServeOptions {
         artifacts_dir: artifacts_dir(args),
-        artifact: artifact.to_string(),
-        checkpoint: args.get("checkpoint").map(PathBuf::from),
+        models,
         addr: args.get_or("addr", "127.0.0.1:7878").to_string(),
+        backend,
+        workers: args.get_usize("workers", 2),
         max_wait: std::time::Duration::from_micros(args.get_u64("max-wait-us", 2000)),
         max_requests: args.get_u64("max-requests", 0),
     })

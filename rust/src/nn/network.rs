@@ -63,6 +63,16 @@ impl Network {
         self.layers.iter().map(Layer::n_stored).sum()
     }
 
+    /// Input width (virtual columns of the first layer).
+    pub fn n_in(&self) -> usize {
+        self.layers.first().map(|l| l.m).unwrap_or(0)
+    }
+
+    /// Output width (rows of the last layer — the logit count).
+    pub fn n_out(&self) -> usize {
+        self.layers.last().map(|l| l.n).unwrap_or(0)
+    }
+
     /// Inference forward pass (no dropout).
     ///
     /// Takes `&self`: hashed layers read their shared `Arc<HashPlan>`,

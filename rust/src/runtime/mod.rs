@@ -114,6 +114,22 @@ pub struct Executable {
 }
 
 impl Executable {
+    /// Input width of the lowered graph.
+    pub fn n_in(&self) -> usize {
+        self.spec.dims[0]
+    }
+
+    /// Logit width of the lowered graph.
+    pub fn n_out(&self) -> usize {
+        *self.spec.dims.last().expect("artifact with no dims")
+    }
+
+    /// The static batch size the graph was lowered with — `predict`
+    /// requires exactly this many rows.
+    pub fn batch(&self) -> usize {
+        self.spec.batch
+    }
+
     fn mat_literal(m: &Matrix) -> Result<xla::Literal> {
         xla::Literal::vec1(&m.data)
             .reshape(&[m.rows as i64, m.cols as i64])

@@ -1,13 +1,19 @@
 //! Dynamic batcher: groups concurrent inference requests into one
-//! fixed-shape artifact call.
+//! batched engine call.
 //!
 //! The queue is a `Mutex<Vec<…>>` paired with a `Condvar` signaled by
-//! [`BatcherHandle::submit`]: the batch-forming thread sleeps until a
-//! request arrives (or a flush deadline passes) instead of the old
-//! 200 µs sleep-poll loop, so an idle server burns no CPU and a new
-//! request is picked up immediately.
+//! [`BatcherHandle::submit`]: a batch-forming thread sleeps until a
+//! request arrives (or a flush deadline passes) instead of a sleep-poll
+//! loop, so an idle server burns no CPU and a new request is picked up
+//! immediately.
+//!
+//! All methods take `&self` and counters are atomic, so one batcher can
+//! be drained by **several worker threads at once** (the native engine
+//! path runs N workers × one shared model): the queue mutex serializes
+//! batch formation, and each worker runs its batch independently.
 
 use crate::tensor::Matrix;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -18,16 +24,26 @@ pub struct Request {
     pub reply: mpsc::Sender<Response>,
 }
 
-/// Classification reply.
+/// Classification reply. `error` is set (and the other fields are
+/// meaningless) when the request could not be served — executor
+/// failure or wrong input length — so clients fail fast instead of
+/// waiting out a receive timeout on a dropped sender.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub class: usize,
     pub probs: Vec<f32>,
     /// Time spent queued + in the model, microseconds.
     pub latency_us: u64,
+    pub error: Option<String>,
 }
 
-/// Counters exposed by the batcher.
+impl Response {
+    fn failed(error: String, latency_us: u64) -> Response {
+        Response { class: 0, probs: Vec::new(), latency_us, error: Some(error) }
+    }
+}
+
+/// Snapshot of the batcher's counters.
 #[derive(Debug, Default, Clone)]
 pub struct BatchStats {
     pub requests: u64,
@@ -45,22 +61,32 @@ impl BatchStats {
     }
 }
 
-/// Shared queue state: pending requests + arrival notification.
+/// Shared queue state: pending requests + arrival notification +
+/// atomic counters (shared by all worker threads).
 struct BatchQueue {
     queue: Mutex<Vec<(Request, Instant)>>,
     arrived: Condvar,
+    requests: AtomicU64,
+    batches: AtomicU64,
+    batch_fill_sum: AtomicU64,
 }
 
-/// Collects requests and forms padded batches.
+/// Collects requests and forms batches.
 ///
-/// The executor closure runs the model on a `(batch × n_in)` matrix and
-/// returns `(batch × n_out)` logits; the batcher owns queuing, padding,
-/// softmax and scatter.
+/// The executor closure runs the model on a `(rows × n_in)` matrix and
+/// returns `(rows × n_out)` logits; the batcher owns queuing, padding,
+/// softmax and scatter. Cloning is cheap (all state lives behind one
+/// `Arc`), so worker threads hold their own clone.
+#[derive(Clone)]
 pub struct DynamicBatcher {
     shared: Arc<BatchQueue>,
     pub max_batch: usize,
     pub max_wait: Duration,
-    pub stats: BatchStats,
+    /// When true, [`DynamicBatcher::dispatch`] zero-pads the input to
+    /// exactly `max_batch` rows — required by fixed-shape executors
+    /// (the PJRT artifacts). The native engine takes any row count, so
+    /// it skips the padding and the wasted rows.
+    pad_batches: bool,
 }
 
 impl DynamicBatcher {
@@ -69,11 +95,20 @@ impl DynamicBatcher {
             shared: Arc::new(BatchQueue {
                 queue: Mutex::new(Vec::new()),
                 arrived: Condvar::new(),
+                requests: AtomicU64::new(0),
+                batches: AtomicU64::new(0),
+                batch_fill_sum: AtomicU64::new(0),
             }),
             max_batch,
             max_wait,
-            stats: BatchStats::default(),
+            pad_batches: false,
         }
+    }
+
+    /// Switch on fixed-shape padding (see `pad_batches`).
+    pub fn padded(mut self) -> DynamicBatcher {
+        self.pad_batches = true;
+        self
     }
 
     /// Handle used by producer threads to enqueue requests.
@@ -81,11 +116,21 @@ impl DynamicBatcher {
         BatcherHandle { shared: self.shared.clone() }
     }
 
+    /// Counter snapshot (consistent enough for reporting).
+    pub fn stats(&self) -> BatchStats {
+        BatchStats {
+            requests: self.shared.requests.load(Ordering::Relaxed),
+            batches: self.shared.batches.load(Ordering::Relaxed),
+            batch_fill_sum: self.shared.batch_fill_sum.load(Ordering::Relaxed),
+        }
+    }
+
     /// Form the next batch: returns when `max_batch` requests are
     /// waiting or `max_wait` passed since the oldest arrival (None
     /// after `idle_poll` with no batch formed). Blocks on the condvar
-    /// between arrivals — no busy-waiting.
-    pub fn next_batch(&mut self, idle_poll: Duration) -> Option<Vec<(Request, Instant)>> {
+    /// between arrivals — no busy-waiting. Safe to call from several
+    /// worker threads; each pending request lands in exactly one batch.
+    pub fn next_batch(&self, idle_poll: Duration) -> Option<Vec<(Request, Instant)>> {
         let deadline = Instant::now() + idle_poll;
         let mut q = self.shared.queue.lock().unwrap();
         loop {
@@ -97,9 +142,9 @@ impl DynamicBatcher {
             if q.len() >= self.max_batch || flush {
                 let take = q.len().min(self.max_batch);
                 let batch: Vec<_> = q.drain(..take).collect();
-                self.stats.requests += batch.len() as u64;
-                self.stats.batches += 1;
-                self.stats.batch_fill_sum += batch.len() as u64;
+                self.shared.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
+                self.shared.batches.fetch_add(1, Ordering::Relaxed);
+                self.shared.batch_fill_sum.fetch_add(batch.len() as u64, Ordering::Relaxed);
                 return Some(batch);
             }
             if now >= deadline {
@@ -118,33 +163,60 @@ impl DynamicBatcher {
         }
     }
 
-    /// Run one batch through `exec` and scatter responses.
-    pub fn dispatch<F>(&mut self, batch: Vec<(Request, Instant)>, n_in: usize, exec: F)
+    /// Take every pending request regardless of batch/flush rules —
+    /// the server's shutdown path, so queued clients can be failed
+    /// fast instead of waiting out their receive timeout.
+    pub fn drain_pending(&self) -> Vec<(Request, Instant)> {
+        let mut q = self.shared.queue.lock().unwrap();
+        q.drain(..).collect()
+    }
+
+    /// Run one batch through `exec` and scatter responses. Every
+    /// request receives a reply: a classification, or an explicit
+    /// error `Response` when its row length is wrong or the executor
+    /// fails — reply senders are never silently dropped.
+    pub fn dispatch<F>(&self, batch: Vec<(Request, Instant)>, n_in: usize, exec: F)
     where
         F: FnOnce(&Matrix) -> anyhow::Result<Matrix>,
     {
-        let n = batch.len();
-        let model_batch = self.max_batch;
-        let mut x = Matrix::zeros(model_batch, n_in);
+        let rows = if self.pad_batches { self.max_batch } else { batch.len() };
+        let mut x = Matrix::zeros(rows, n_in);
         for (b, (req, _)) in batch.iter().enumerate() {
-            let len = req.pixels.len().min(n_in);
-            x.row_mut(b)[..len].copy_from_slice(&req.pixels[..len]);
+            // wrong-length rows stay zero and get an error reply after
+            // exec — never a silently zero-padded classification
+            if req.pixels.len() == n_in {
+                x.row_mut(b).copy_from_slice(&req.pixels);
+            }
         }
         match exec(&x) {
             Ok(logits) => {
                 let probs = logits.softmax_rows();
                 let classes = logits.argmax_rows();
                 for (b, (req, t_in)) in batch.into_iter().enumerate() {
-                    let _ = req.reply.send(Response {
-                        class: classes[b],
-                        probs: probs.row(b).to_vec(),
-                        latency_us: t_in.elapsed().as_micros() as u64,
-                    });
+                    let latency_us = t_in.elapsed().as_micros() as u64;
+                    let resp = if req.pixels.len() != n_in {
+                        Response::failed(
+                            format!("expected {n_in} pixels, got {}", req.pixels.len()),
+                            latency_us,
+                        )
+                    } else {
+                        Response {
+                            class: classes[b],
+                            probs: probs.row(b).to_vec(),
+                            latency_us,
+                            error: None,
+                        }
+                    };
+                    let _ = req.reply.send(resp);
                 }
             }
             Err(e) => {
-                eprintln!("batch of {n} failed: {e:#}");
-                // drop reply senders -> receivers observe disconnect
+                let msg = format!("inference failed: {e:#}");
+                for (req, t_in) in batch {
+                    let _ = req
+                        .reply
+                        .send(Response::failed(msg.clone(), t_in.elapsed().as_micros() as u64));
+                }
             }
         }
     }
@@ -157,8 +229,8 @@ pub struct BatcherHandle {
 }
 
 impl BatcherHandle {
-    /// Enqueue a request and wake the batch former; returns the
-    /// receiver for the reply.
+    /// Enqueue a request and wake a batch former; returns the receiver
+    /// for the reply.
     pub fn submit(&self, pixels: Vec<f32>) -> mpsc::Receiver<Response> {
         let (tx, rx) = mpsc::channel();
         {
@@ -181,7 +253,7 @@ mod tests {
 
     #[test]
     fn batches_fill_up_to_max() {
-        let mut b = DynamicBatcher::new(4, Duration::from_millis(50));
+        let b = DynamicBatcher::new(4, Duration::from_millis(50));
         let h = b.handle();
         let rxs: Vec<_> = (0..6).map(|i| h.submit(vec![i as f32, 0.0, 0.0])).collect();
         let batch = b.next_batch(Duration::from_millis(100)).expect("batch");
@@ -192,19 +264,20 @@ mod tests {
         b.dispatch(batch2, 3, echo_exec);
         for (i, rx) in rxs.into_iter().enumerate() {
             let r = rx.recv().unwrap();
+            assert!(r.error.is_none(), "req {i}: {:?}", r.error);
             // pixels were [i, 0, 0] -> argmax is col 0 (ties prefer first)
             assert_eq!(r.class, 0, "req {i}");
             // condvar wakeups can round to 0 µs, so only an upper bound
             // is meaningful here
             assert!(r.latency_us < 1_000_000, "absurd latency {}", r.latency_us);
         }
-        assert_eq!(b.stats.requests, 6);
-        assert_eq!(b.stats.batches, 2);
+        assert_eq!(b.stats().requests, 6);
+        assert_eq!(b.stats().batches, 2);
     }
 
     #[test]
     fn waits_then_flushes_partial_batch() {
-        let mut b = DynamicBatcher::new(8, Duration::from_millis(5));
+        let b = DynamicBatcher::new(8, Duration::from_millis(5));
         let h = b.handle();
         let rx = h.submit(vec![9.0, 1.0, 0.0]);
         let batch = b.next_batch(Duration::from_millis(200)).expect("flush");
@@ -217,7 +290,7 @@ mod tests {
 
     #[test]
     fn idle_poll_returns_none() {
-        let mut b = DynamicBatcher::new(4, Duration::from_millis(1));
+        let b = DynamicBatcher::new(4, Duration::from_millis(1));
         assert!(b.next_batch(Duration::from_millis(5)).is_none());
     }
 
@@ -226,7 +299,7 @@ mod tests {
         // a blocked next_batch must be woken by submit(), not by a poll
         // tick: with max_batch=1 the batch forms as soon as the request
         // lands, far before the 2 s idle deadline.
-        let mut b = DynamicBatcher::new(1, Duration::from_millis(500));
+        let b = DynamicBatcher::new(1, Duration::from_millis(500));
         let h = b.handle();
         let producer = std::thread::spawn(move || {
             std::thread::sleep(Duration::from_millis(50));
@@ -243,6 +316,82 @@ mod tests {
         b.dispatch(batch, 3, echo_exec);
         let rx = producer.join().unwrap();
         assert_eq!(rx.recv().unwrap().class, 0);
+    }
+
+    #[test]
+    fn executor_error_sends_explicit_error_response() {
+        // a failing executor must fail the clients fast with the error
+        // string, not drop the senders and leave them to recv_timeout
+        let b = DynamicBatcher::new(4, Duration::from_millis(5));
+        let h = b.handle();
+        let rxs: Vec<_> = (0..2).map(|_| h.submit(vec![1.0, 2.0, 3.0])).collect();
+        let batch = b.next_batch(Duration::from_millis(200)).expect("batch");
+        b.dispatch(batch, 3, |_| Err(anyhow::anyhow!("backend exploded")));
+        for rx in rxs {
+            let r = rx.recv().expect("explicit error response, not a disconnect");
+            let err = r.error.expect("error field set");
+            assert!(err.contains("backend exploded"), "{err}");
+        }
+    }
+
+    #[test]
+    fn wrong_length_row_gets_error_not_zero_padding() {
+        let b = DynamicBatcher::new(4, Duration::from_millis(5));
+        let h = b.handle();
+        let rx_bad = h.submit(vec![7.0]); // too short for n_in = 3
+        let rx_ok = h.submit(vec![0.0, 5.0, 0.0]);
+        let batch = b.next_batch(Duration::from_millis(200)).expect("batch");
+        b.dispatch(batch, 3, echo_exec);
+        let bad = rx_bad.recv().unwrap();
+        assert!(bad.error.as_deref().unwrap().contains("expected 3 pixels"), "{:?}", bad.error);
+        let ok = rx_ok.recv().unwrap();
+        assert!(ok.error.is_none());
+        assert_eq!(ok.class, 1); // argmax of [0, 5, 0]
+    }
+
+    #[test]
+    fn two_workers_drain_one_queue_without_losing_requests() {
+        // N workers × one queue: every request gets exactly one reply
+        let b = DynamicBatcher::new(2, Duration::from_millis(1));
+        let h = b.handle();
+        let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let workers: Vec<_> = (0..2)
+            .map(|_| {
+                let b = b.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        if let Some(batch) = b.next_batch(Duration::from_millis(5)) {
+                            b.dispatch(batch, 3, echo_exec);
+                        }
+                    }
+                })
+            })
+            .collect();
+        let rxs: Vec<_> = (0..40).map(|i| h.submit(vec![i as f32, 0.0, 0.0])).collect();
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let r = rx.recv_timeout(Duration::from_secs(5)).expect("reply");
+            assert!(r.error.is_none(), "req {i}");
+        }
+        stop.store(true, Ordering::Relaxed);
+        for w in workers {
+            w.join().unwrap();
+        }
+        assert_eq!(b.stats().requests, 40);
+    }
+
+    #[test]
+    fn padded_mode_keeps_fixed_rows() {
+        let b = DynamicBatcher::new(4, Duration::from_millis(5)).padded();
+        let h = b.handle();
+        let rx = h.submit(vec![1.0, 2.0, 0.0]);
+        let batch = b.next_batch(Duration::from_millis(200)).expect("batch");
+        assert_eq!(batch.len(), 1);
+        b.dispatch(batch, 3, |x| {
+            assert_eq!(x.rows, 4, "fixed-shape executor sees max_batch rows");
+            echo_exec(x)
+        });
+        assert_eq!(rx.recv().unwrap().class, 1);
     }
 
     #[test]

@@ -1,0 +1,343 @@
+//! Backend abstraction for serving: the [`InferenceEngine`] trait and
+//! its two implementations.
+//!
+//! The paper's deployment story (a HashedNet is small enough to serve
+//! anywhere) should not depend on *how* the forward pass executes, so
+//! the server talks to engines, not runtimes:
+//!
+//! * [`NativeEngine`] — wraps an [`Arc<Network>`] built from the same
+//!   `ArtifactSpec` + `ModelState` an artifact uses (see
+//!   `coordinator::native`). It is `Send + Sync` — hashed layers read a
+//!   shared immutable `HashPlan` — so the server runs **N worker
+//!   threads draining one batcher against one model**, no locks, no
+//!   parameter clones.
+//! * [`RuntimeEngine`] — the PJRT artifact path. PJRT handles are not
+//!   `Send`, so a runtime engine is constructed *inside* its single
+//!   worker thread and never crosses threads; its executor requires
+//!   fixed-shape batches ([`InferenceEngine::fixed_batch`]).
+//!
+//! Backend selection is a [`Backend`] value threaded through
+//! `ServeOptions`: `native`, `runtime`, or `auto` (prefer the artifact
+//! runtime, fall back to native when artifact loading fails — e.g. the
+//! offline `xla` stub is linked or the HLO files are absent).
+
+use crate::coordinator::native;
+use crate::nn::Network;
+use crate::runtime::{ArtifactSpec, Graph, ModelState, Runtime};
+use crate::tensor::Matrix;
+use anyhow::{anyhow, Context, Result};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Which execution backend serves a model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// In-process `nn::Network` (HashPlan kernels), multi-worker.
+    Native,
+    /// PJRT artifact executable, single worker.
+    Runtime,
+    /// Prefer `Runtime`, fall back to `Native` if artifact loading fails.
+    Auto,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Option<Backend> {
+        match s {
+            "native" => Some(Backend::Native),
+            "runtime" => Some(Backend::Runtime),
+            "auto" => Some(Backend::Auto),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Backend::Native => "native",
+            Backend::Runtime => "runtime",
+            Backend::Auto => "auto",
+        }
+    }
+}
+
+/// A model that can classify batches: the contract between the serving
+/// front end and any execution backend.
+pub trait InferenceEngine {
+    /// Forward pass: `(rows × n_in)` → `(rows × n_out)` logits.
+    fn predict(&self, x: &Matrix) -> Result<Matrix>;
+    /// Input width the engine expects.
+    fn n_in(&self) -> usize;
+    /// Logit width the engine produces.
+    fn n_out(&self) -> usize;
+    /// Largest (or, for fixed-shape engines, the exact) batch size.
+    fn max_batch(&self) -> usize;
+    /// Backend name for stats/logs (e.g. "native", "runtime").
+    fn name(&self) -> &'static str;
+    /// True when `predict` requires exactly `max_batch` rows (the
+    /// batcher then zero-pads partial batches).
+    fn fixed_batch(&self) -> bool {
+        false
+    }
+}
+
+/// The native in-process engine: one shared [`Network`].
+///
+/// `Network::predict` takes `&self` and hashed layers share immutable
+/// `Arc<HashPlan>`s, so one `NativeEngine` serves any number of worker
+/// threads concurrently.
+pub struct NativeEngine {
+    net: Arc<Network>,
+    n_in: usize,
+    n_out: usize,
+    max_batch: usize,
+}
+
+impl NativeEngine {
+    /// Build from an artifact spec + parameter state (checkpoint or
+    /// init). Fails — rather than panicking deep in `copy_from_slice` —
+    /// when the state's tensor shapes do not match the spec.
+    pub fn from_spec(spec: &ArtifactSpec, state: &ModelState) -> Result<NativeEngine> {
+        let net = native::try_build(spec, state)
+            .with_context(|| format!("building native engine for '{}'", spec.name))?;
+        Ok(NativeEngine {
+            n_in: net.n_in(),
+            n_out: net.n_out(),
+            max_batch: spec.batch.max(1),
+            net: Arc::new(net),
+        })
+    }
+
+    /// Wrap an existing network (tests, embedding).
+    pub fn from_network(net: Network, max_batch: usize) -> NativeEngine {
+        NativeEngine {
+            n_in: net.n_in(),
+            n_out: net.n_out(),
+            max_batch: max_batch.max(1),
+            net: Arc::new(net),
+        }
+    }
+
+    /// The shared model (e.g. for asserting server replies in tests).
+    pub fn network(&self) -> &Arc<Network> {
+        &self.net
+    }
+}
+
+impl InferenceEngine for NativeEngine {
+    fn predict(&self, x: &Matrix) -> Result<Matrix> {
+        if x.cols != self.n_in {
+            return Err(anyhow!("expected {} input cols, got {}", self.n_in, x.cols));
+        }
+        Ok(self.net.predict(x))
+    }
+
+    fn n_in(&self) -> usize {
+        self.n_in
+    }
+
+    fn n_out(&self) -> usize {
+        self.n_out
+    }
+
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// The PJRT artifact engine. Owns its `Runtime` (not `Send` — construct
+/// and use it on one worker thread only).
+pub struct RuntimeEngine {
+    _rt: Runtime,
+    exe: crate::runtime::Executable,
+    state: ModelState,
+}
+
+impl RuntimeEngine {
+    /// Open the artifact runtime and load one predict graph. `state`
+    /// comes from `checkpoint` when given, otherwise seed-initialized —
+    /// identical to what [`NativeEngine::from_spec`] would serve.
+    pub fn open(
+        artifacts_dir: &Path,
+        artifact: &str,
+        checkpoint: Option<&Path>,
+    ) -> Result<RuntimeEngine> {
+        let rt = Runtime::open(artifacts_dir)?;
+        let exe = rt.load(artifact, Graph::Predict)?;
+        let state = load_state(&exe.spec, checkpoint)?;
+        Ok(RuntimeEngine { _rt: rt, exe, state })
+    }
+}
+
+impl InferenceEngine for RuntimeEngine {
+    fn predict(&self, x: &Matrix) -> Result<Matrix> {
+        self.exe.predict(&self.state, x)
+    }
+
+    fn n_in(&self) -> usize {
+        self.exe.n_in()
+    }
+
+    fn n_out(&self) -> usize {
+        self.exe.n_out()
+    }
+
+    fn max_batch(&self) -> usize {
+        self.exe.batch()
+    }
+
+    fn name(&self) -> &'static str {
+        "runtime"
+    }
+
+    fn fixed_batch(&self) -> bool {
+        true
+    }
+}
+
+/// Resolve a model's parameters: load the checkpoint if given (and
+/// check it matches the spec), else deterministic seed init.
+pub fn load_state(spec: &ArtifactSpec, checkpoint: Option<&Path>) -> Result<ModelState> {
+    let state = match checkpoint {
+        Some(p) => ModelState::load(p)
+            .with_context(|| format!("loading checkpoint {}", p.display()))?,
+        None => ModelState::init(spec, 0x5EED),
+    };
+    if state.params.len() != spec.params.len() {
+        return Err(anyhow!(
+            "checkpoint has {} tensors, artifact '{}' expects {}",
+            state.params.len(),
+            spec.name,
+            spec.params.len()
+        ));
+    }
+    Ok(state)
+}
+
+/// Drain `batcher` through `engine` until `stop` is set — the body of
+/// every serving worker thread, shared by all backends.
+pub fn worker_loop(
+    engine: &dyn InferenceEngine,
+    batcher: &super::batcher::DynamicBatcher,
+    stop: &AtomicBool,
+) {
+    let n_in = engine.n_in();
+    while !stop.load(Ordering::Relaxed) {
+        if let Some(batch) = batcher.next_batch(Duration::from_millis(20)) {
+            batcher.dispatch(batch, n_in, |x| engine.predict(x));
+        }
+    }
+}
+
+/// Drain `batcher` replying `error` to everything — used when a worker's
+/// engine failed to construct, so queued clients fail fast instead of
+/// timing out.
+pub fn error_loop(
+    error: &str,
+    n_in: usize,
+    batcher: &super::batcher::DynamicBatcher,
+    stop: &AtomicBool,
+) {
+    while !stop.load(Ordering::Relaxed) {
+        if let Some(batch) = batcher.next_batch(Duration::from_millis(20)) {
+            batcher.dispatch(batch, n_in, |_| Err(anyhow!("{error}")));
+        }
+    }
+}
+
+/// How one model should be served (name + parameters + worker count
+/// are resolved by the server from `ServeOptions`).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub artifact: String,
+    pub checkpoint: Option<PathBuf>,
+}
+
+impl ModelConfig {
+    pub fn new(artifact: impl Into<String>) -> ModelConfig {
+        ModelConfig { artifact: artifact.into(), checkpoint: None }
+    }
+
+    pub fn with_checkpoint(mut self, ckpt: impl Into<PathBuf>) -> ModelConfig {
+        self.checkpoint = Some(ckpt.into());
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::LayerKind;
+    use crate::util::rng::Pcg32;
+
+    fn assert_send_sync<T: Send + Sync>() {}
+
+    #[test]
+    fn native_engine_is_send_sync() {
+        // the whole multi-worker design rests on this bound
+        assert_send_sync::<NativeEngine>();
+    }
+
+    fn tiny_net() -> Network {
+        let mut net = Network::from_dims(
+            &[6, 5, 3],
+            vec![LayerKind::Hashed { k: 12 }, LayerKind::Dense],
+            crate::hash::DEFAULT_SEED_BASE,
+        );
+        net.init(&mut Pcg32::new(9, 9));
+        net
+    }
+
+    #[test]
+    fn native_engine_matches_direct_predict() {
+        let net = tiny_net();
+        let x = Matrix::from_fn(4, 6, |i, j| (i * 6 + j) as f32 * 0.1);
+        let want = net.predict(&x);
+        let eng = NativeEngine::from_network(net, 8);
+        assert_eq!(eng.n_in(), 6);
+        assert_eq!(eng.n_out(), 3);
+        assert_eq!(eng.max_batch(), 8);
+        assert_eq!(eng.name(), "native");
+        assert!(!eng.fixed_batch());
+        let got = eng.predict(&x).unwrap();
+        assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn native_engine_rejects_wrong_width() {
+        let eng = NativeEngine::from_network(tiny_net(), 8);
+        let x = Matrix::zeros(2, 5); // n_in is 6
+        assert!(eng.predict(&x).is_err());
+    }
+
+    #[test]
+    fn backend_parse_roundtrip() {
+        for b in [Backend::Native, Backend::Runtime, Backend::Auto] {
+            assert_eq!(Backend::parse(b.name()), Some(b));
+        }
+        assert_eq!(Backend::parse("gpu"), None);
+    }
+
+    #[test]
+    fn worker_loop_serves_until_stopped() {
+        let eng = NativeEngine::from_network(tiny_net(), 8);
+        let batcher = super::super::batcher::DynamicBatcher::new(4, Duration::from_millis(1));
+        let handle = batcher.handle();
+        let stop = Arc::new(AtomicBool::new(false));
+        let worker = {
+            let b = batcher.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || worker_loop(&eng, &b, &stop))
+        };
+        let rx = handle.submit(vec![0.1; 6]);
+        let r = rx.recv_timeout(Duration::from_secs(5)).expect("reply");
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.probs.len(), 3);
+        stop.store(true, Ordering::Relaxed);
+        worker.join().unwrap();
+    }
+}

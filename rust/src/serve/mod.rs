@@ -3,20 +3,32 @@
 //!
 //! Architecture (vLLM-router-style, scaled to this system):
 //!
-//! * [`batcher::DynamicBatcher`] — request queue + batch former: collects
-//!   requests until `max_batch` or `max_wait` elapses, pads to the
-//!   artifact's static batch, runs one `predict` call, scatters replies.
+//! * [`engine::InferenceEngine`] — the backend abstraction: `predict`
+//!   plus shape metadata. [`engine::NativeEngine`] wraps the in-process
+//!   `nn::Network` (HashPlan kernels, `Send + Sync`, multi-worker);
+//!   [`engine::RuntimeEngine`] wraps a PJRT artifact executable
+//!   (single worker — PJRT handles are not `Send`). Selection is a
+//!   [`engine::Backend`]: `native`, `runtime`, or `auto` (runtime when
+//!   artifact loading works, native otherwise).
+//! * [`batcher::DynamicBatcher`] — request queue + batch former:
+//!   collects requests until `max_batch` or `max_wait` elapses, runs
+//!   one `predict` call, scatters replies. Shareable by several worker
+//!   threads, which is how one native model serves N workers without
+//!   locks around the parameters.
 //! * [`server`] — a std-net TCP front end speaking newline-delimited
-//!   JSON (`{"pixels": [...784 floats...]}` → `{"class": c, "probs": [...]}`),
-//!   with a worker thread owning the PJRT executable (tokio is not
-//!   vendored offline; blocking I/O + threads serve the same purpose).
+//!   JSON (`{"model": "...", "pixels": [...]}` → `{"class": c, ...}`),
+//!   routing per-request to an engine registry so one process serves
+//!   multiple named models (tokio is not vendored offline; blocking
+//!   I/O + threads serve the same purpose).
 //!
 //! The model is a trained checkpoint (`ModelState::save`) plus an
-//! artifact name — total server memory for the model is the *compressed*
+//! artifact name — total server memory per model is the *compressed*
 //! parameter count, which is the paper's point.
 
 pub mod batcher;
+pub mod engine;
 pub mod server;
 
 pub use batcher::{BatchStats, DynamicBatcher, Request, Response};
-pub use server::{serve, Client, ServeOptions};
+pub use engine::{Backend, InferenceEngine, ModelConfig, NativeEngine, RuntimeEngine};
+pub use server::{serve, Client, ServeOptions, Server};

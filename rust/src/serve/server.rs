@@ -1,21 +1,36 @@
 //! TCP front end: newline-delimited JSON over std::net.
 //!
 //! Protocol (one JSON object per line):
-//!   request:  {"pixels": [f32; n_in]}            → classify
-//!             {"cmd": "stats"}                   → server counters
-//!             {"cmd": "shutdown"}                → stop accepting
-//!   response: {"class": u, "probs": [...], "latency_us": u}
-//!             {"error": "..."}
+//!   request:  {"pixels": [f32; n_in]}              → classify (default model)
+//!             {"model": "name", "pixels": [...]}   → classify a named model
+//!             {"cmd": "stats"}                     → server + per-model counters
+//!             {"cmd": "shutdown"}                  → stop accepting
+//!   response: {"class": u, "probs": [...], "latency_us": u, "model": "name"}
+//!             {"error": "..."}                     → bad request, wrong pixel
+//!                                                    count, or engine failure
 //!
-//! One model thread owns the PJRT executable and drains the dynamic
-//! batcher; connection threads parse requests and block on replies.
+//! One process serves **multiple named models** through an engine
+//! registry (see [`super::engine`]): each model gets its own
+//! [`DynamicBatcher`] plus worker threads — N threads sharing one
+//! `NativeEngine`, or a single thread owning a PJRT `RuntimeEngine`.
+//! Connection threads parse requests, validate the pixel count against
+//! the routed model, and block on replies.
+//!
+//! [`Server::bind`] / [`Server::run`] split binding from serving so
+//! callers can bind port 0 and read [`Server::local_addr`] before the
+//! accept loop starts; [`serve`] is the one-call wrapper.
 
-use super::batcher::{BatcherHandle, DynamicBatcher};
-use crate::runtime::{Graph, ModelState, Runtime};
+use super::batcher::DynamicBatcher;
+use super::engine::{
+    error_loop, load_state, worker_loop, Backend, InferenceEngine, ModelConfig, NativeEngine,
+    RuntimeEngine,
+};
+use crate::runtime::{Manifest, Runtime};
 use crate::util::json::{num, obj, Json};
 use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
@@ -25,9 +40,16 @@ use std::time::Duration;
 #[derive(Debug, Clone)]
 pub struct ServeOptions {
     pub artifacts_dir: PathBuf,
-    pub artifact: String,
-    pub checkpoint: Option<PathBuf>,
+    /// Models to serve; the first is the default for requests that
+    /// carry no `"model"` field.
+    pub models: Vec<ModelConfig>,
     pub addr: String,
+    /// Execution backend; `Auto` prefers the PJRT runtime and falls
+    /// back to native when artifact loading fails.
+    pub backend: Backend,
+    /// Worker threads per natively-served model (the runtime backend
+    /// is always pinned to one worker — PJRT handles are not `Send`).
+    pub workers: usize,
     pub max_wait: Duration,
     /// Stop after serving this many classify requests (0 = run forever).
     /// Used by tests and the examples.
@@ -38,157 +60,516 @@ impl Default for ServeOptions {
     fn default() -> Self {
         ServeOptions {
             artifacts_dir: "artifacts".into(),
-            artifact: String::new(),
-            checkpoint: None,
+            models: Vec::new(),
             addr: "127.0.0.1:7878".into(),
+            backend: Backend::Auto,
+            workers: 2,
             max_wait: Duration::from_millis(2),
             max_requests: 0,
         }
     }
 }
 
-/// Run the server; returns once shut down (via `{"cmd":"shutdown"}` or
-/// `max_requests`). Prints the bound address — pass port 0 to pick one.
-pub fn serve(opt: ServeOptions) -> Result<()> {
-    let listener = TcpListener::bind(&opt.addr)?;
-    let local = listener.local_addr()?;
-    println!("serving {} on {local}", opt.artifact);
-    listener.set_nonblocking(true)?;
+impl ServeOptions {
+    /// One model, default everything else.
+    pub fn single(artifact: impl Into<String>) -> ServeOptions {
+        ServeOptions { models: vec![ModelConfig::new(artifact)], ..Default::default() }
+    }
+}
 
-    let stop = Arc::new(AtomicBool::new(false));
-    let served = Arc::new(AtomicU64::new(0));
+/// One served model: its batcher (shared with the worker threads) and
+/// request counters, looked up by name on every classify request.
+struct ModelHandle {
+    name: String,
+    backend: &'static str,
+    workers: usize,
+    n_in: usize,
+    max_batch: usize,
+    batcher: DynamicBatcher,
+    served: AtomicU64,
+    errors: AtomicU64,
+}
 
-    // ---- model thread -------------------------------------------------
-    // PJRT handles are not Send, so the model thread owns its own
-    // Runtime; the manifest is read here only for shapes.
-    let manifest = crate::runtime::Manifest::load(&opt.artifacts_dir.join("manifest.json"))?;
-    let spec = manifest
-        .get(&opt.artifact)
-        .ok_or_else(|| anyhow!("unknown artifact '{}'", opt.artifact))?
-        .clone();
-    let n_in = spec.dims[0];
-    let mut batcher = DynamicBatcher::new(spec.batch, opt.max_wait);
-    let handle = batcher.handle();
-    let stop_model = stop.clone();
-    let opt_model = opt.clone();
-    let spec_model = spec.clone();
-    let model = std::thread::spawn(move || -> Result<super::batcher::BatchStats> {
-        let rt = Runtime::open(&opt_model.artifacts_dir)?;
-        let exe = rt.load(&opt_model.artifact, Graph::Predict)?;
-        let state = match &opt_model.checkpoint {
-            Some(p) => ModelState::load(p)?,
-            None => ModelState::init(&spec_model, 0x5EED),
-        };
-        if state.params.len() != spec_model.params.len() {
-            return Err(anyhow!("checkpoint does not match artifact"));
-        }
-        while !stop_model.load(Ordering::Relaxed) {
-            if let Some(batch) = batcher.next_batch(Duration::from_millis(20)) {
-                batcher.dispatch(batch, n_in, |x| exe.predict(&state, x));
+/// Immutable model registry shared by all connection threads.
+struct Registry {
+    models: BTreeMap<String, Arc<ModelHandle>>,
+    default_model: String,
+}
+
+/// A bound server: workers are already running; [`Server::run`] enters
+/// the accept loop. Returned by [`Server::bind`] so callers (tests,
+/// benches) can bind port 0 and read the chosen address.
+pub struct Server {
+    listener: TcpListener,
+    local: SocketAddr,
+    registry: Arc<Registry>,
+    stop: Arc<AtomicBool>,
+    served: Arc<AtomicU64>,
+    max_requests: u64,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind the listener, build one engine per configured model, and
+    /// spawn the worker threads. Fails eagerly on a bad address, an
+    /// unknown artifact, a checkpoint/spec mismatch, or (with
+    /// `--backend runtime`) an unavailable PJRT runtime.
+    pub fn bind(opt: ServeOptions) -> Result<Server> {
+        Server::bind_with_engines(opt, Vec::new())
+    }
+
+    /// [`Server::bind`] plus pre-built engines (tests and benches
+    /// inject custom [`InferenceEngine`]s — e.g. a failing one to
+    /// exercise the error path). Custom engines are registered under
+    /// their paired name and served like native models.
+    pub fn bind_with_engines(
+        opt: ServeOptions,
+        custom: Vec<(String, Arc<dyn InferenceEngine + Send + Sync>)>,
+    ) -> Result<Server> {
+        let listener = TcpListener::bind(&opt.addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        let mut models: BTreeMap<String, Arc<ModelHandle>> = BTreeMap::new();
+        match Server::build_registry(&opt, custom, &stop, &mut workers, &mut models) {
+            Ok(default_model) => Ok(Server {
+                listener,
+                local,
+                registry: Arc::new(Registry { models, default_model }),
+                stop,
+                served: Arc::new(AtomicU64::new(0)),
+                max_requests: opt.max_requests,
+                workers,
+            }),
+            Err(e) => {
+                // don't leak worker threads spawned for earlier models
+                stop.store(true, Ordering::Relaxed);
+                for w in workers {
+                    let _ = w.join();
+                }
+                Err(e)
             }
         }
-        Ok(batcher.stats)
-    });
+    }
 
-    // ---- accept loop --------------------------------------------------
-    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
-    while !stop.load(Ordering::Relaxed) {
-        match listener.accept() {
-            Ok((stream, _)) => {
-                let h = handle.clone();
-                let stop_c = stop.clone();
-                let served_c = served.clone();
-                let max_req = opt.max_requests;
-                conns.push(std::thread::spawn(move || {
-                    let _ = handle_conn(stream, h, &stop_c, &served_c, max_req);
-                }));
+    /// Build every model's engine + batcher + workers; returns the
+    /// default model name.
+    fn build_registry(
+        opt: &ServeOptions,
+        custom: Vec<(String, Arc<dyn InferenceEngine + Send + Sync>)>,
+        stop: &Arc<AtomicBool>,
+        workers: &mut Vec<std::thread::JoinHandle<()>>,
+        models: &mut BTreeMap<String, Arc<ModelHandle>>,
+    ) -> Result<String> {
+        let mut default_model = opt.models.first().map(|m| m.artifact.clone());
+
+        for (name, eng) in custom {
+            default_model.get_or_insert_with(|| name.clone());
+            let handle =
+                spawn_engine_workers(name.clone(), eng, opt.workers, opt.max_wait, stop, workers);
+            if models.insert(name.clone(), handle).is_some() {
+                return Err(anyhow!("duplicate model name '{name}'"));
             }
-            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                std::thread::sleep(Duration::from_millis(2));
-                if opt.max_requests > 0 && served.load(Ordering::Relaxed) >= opt.max_requests {
-                    stop.store(true, Ordering::Relaxed);
+        }
+
+        if !opt.models.is_empty() {
+            let manifest = Manifest::load(&opt.artifacts_dir.join("manifest.json"))?;
+            // Probe the PJRT runtime once for all models that may want
+            // it: can the client open, and do the predict graphs exist?
+            // (Compile errors surface later, in the worker, as explicit
+            // error replies.)
+            let runtime_err = if matches!(opt.backend, Backend::Runtime | Backend::Auto) {
+                probe_runtime(opt, &manifest)
+            } else {
+                None
+            };
+
+            for mc in &opt.models {
+                let spec = manifest
+                    .get(&mc.artifact)
+                    .ok_or_else(|| anyhow!("unknown artifact '{}'", mc.artifact))?
+                    .clone();
+                let use_runtime = match (opt.backend, &runtime_err) {
+                    (Backend::Native, _) => false,
+                    (Backend::Runtime, Some(e)) => {
+                        return Err(anyhow!("--backend runtime unavailable: {e}"))
+                    }
+                    (Backend::Runtime, None) => true,
+                    (Backend::Auto, Some(e)) => {
+                        eprintln!(
+                            "backend auto: runtime unavailable ({e}); serving '{}' natively",
+                            mc.artifact
+                        );
+                        false
+                    }
+                    (Backend::Auto, None) => true,
+                };
+                let handle = if use_runtime {
+                    // PJRT handles are not Send: the engine is built
+                    // inside its (single) worker thread.
+                    let batcher = DynamicBatcher::new(spec.batch.max(1), opt.max_wait).padded();
+                    let handle = Arc::new(ModelHandle {
+                        name: mc.artifact.clone(),
+                        backend: "runtime",
+                        workers: 1,
+                        n_in: spec.dims[0],
+                        max_batch: spec.batch.max(1),
+                        batcher: batcher.clone(),
+                        served: AtomicU64::new(0),
+                        errors: AtomicU64::new(0),
+                    });
+                    let stop_w = stop.clone();
+                    let dir = opt.artifacts_dir.clone();
+                    let artifact = mc.artifact.clone();
+                    let ckpt = mc.checkpoint.clone();
+                    let n_in = spec.dims[0];
+                    workers.push(std::thread::spawn(move || {
+                        match RuntimeEngine::open(&dir, &artifact, ckpt.as_deref()) {
+                            Ok(eng) => worker_loop(&eng, &batcher, &stop_w),
+                            Err(e) => {
+                                let msg =
+                                    format!("runtime backend for '{artifact}' failed: {e:#}");
+                                eprintln!("{msg}");
+                                error_loop(&msg, n_in, &batcher, &stop_w);
+                            }
+                        }
+                    }));
+                    handle
+                } else {
+                    let state = load_state(&spec, mc.checkpoint.as_deref())?;
+                    let eng: Arc<dyn InferenceEngine + Send + Sync> =
+                        Arc::new(NativeEngine::from_spec(&spec, &state)?);
+                    spawn_engine_workers(
+                        mc.artifact.clone(),
+                        eng,
+                        opt.workers,
+                        opt.max_wait,
+                        stop,
+                        workers,
+                    )
+                };
+                // a duplicate would orphan the first entry's workers
+                // and batcher while stats silently showed only one
+                if models.insert(mc.artifact.clone(), handle).is_some() {
+                    return Err(anyhow!("duplicate model name '{}'", mc.artifact));
                 }
             }
-            Err(e) => return Err(e.into()),
+        }
+
+        default_model.ok_or_else(|| anyhow!("no models configured"))
+    }
+
+    /// The bound address — pass port 0 to `ServeOptions::addr` and read
+    /// the picked port here.
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local
+    }
+
+    /// Accept loop; returns once shut down (via `{"cmd":"shutdown"}` or
+    /// `max_requests`). Finished connection threads are reaped every
+    /// iteration so a long-running server holds one handle per *live*
+    /// connection, not per connection ever accepted.
+    pub fn run(mut self) -> Result<()> {
+        let names: Vec<&str> = self.registry.models.keys().map(String::as_str).collect();
+        println!("serving [{}] on {}", names.join(", "), self.local);
+        let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        let mut result = Ok(());
+        while !self.stop.load(Ordering::Relaxed) {
+            match self.listener.accept() {
+                Ok((stream, _)) => {
+                    let reg = self.registry.clone();
+                    let stop_c = self.stop.clone();
+                    let served_c = self.served.clone();
+                    let max_req = self.max_requests;
+                    conns.push(std::thread::spawn(move || {
+                        let _ = handle_conn(stream, &reg, &stop_c, &served_c, max_req);
+                    }));
+                }
+                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(2));
+                    if self.max_requests > 0
+                        && self.served.load(Ordering::Relaxed) >= self.max_requests
+                    {
+                        self.stop.store(true, Ordering::Relaxed);
+                    }
+                }
+                // fall through to the shutdown sequence below so worker
+                // and connection threads are never leaked
+                Err(e) => {
+                    result = Err(e.into());
+                    break;
+                }
+            }
+            let mut i = 0;
+            while i < conns.len() {
+                if conns[i].is_finished() {
+                    let _ = conns.swap_remove(i).join();
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        // Shutdown: stop the workers first (they exit within one idle
+        // poll), then fail queued requests fast until every connection
+        // thread has exited — a request can still slip into a queue
+        // after a drain pass, so drain and reap in a loop.
+        self.stop.store(true, Ordering::Relaxed);
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        while !conns.is_empty() {
+            for h in self.registry.models.values() {
+                let pending = h.batcher.drain_pending();
+                if !pending.is_empty() {
+                    h.batcher.dispatch(pending, h.n_in, |_| Err(anyhow!("server shutting down")));
+                }
+            }
+            let mut i = 0;
+            while i < conns.len() {
+                if conns[i].is_finished() {
+                    let _ = conns.swap_remove(i).join();
+                } else {
+                    i += 1;
+                }
+            }
+            if !conns.is_empty() {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+        for (name, h) in &self.registry.models {
+            let s = h.batcher.stats();
+            println!(
+                "{name} [{} x{}]: {} served / {} errors in {} batches (mean fill {:.0}%)",
+                h.backend,
+                h.workers,
+                h.served.load(Ordering::Relaxed),
+                h.errors.load(Ordering::Relaxed),
+                s.batches,
+                100.0 * s.mean_fill(h.max_batch)
+            );
+        }
+        result
+    }
+}
+
+/// Run the server; returns once shut down. Prints the bound address —
+/// pass port 0 to pick one (or use [`Server::bind`] to read it back).
+pub fn serve(opt: ServeOptions) -> Result<()> {
+    Server::bind(opt)?.run()
+}
+
+/// Register a model handle and start `n_workers` threads sharing one
+/// engine and one batcher — the native multi-worker path (also used
+/// for injected custom engines).
+fn spawn_engine_workers(
+    name: String,
+    eng: Arc<dyn InferenceEngine + Send + Sync>,
+    n_workers: usize,
+    max_wait: Duration,
+    stop: &Arc<AtomicBool>,
+    workers: &mut Vec<std::thread::JoinHandle<()>>,
+) -> Arc<ModelHandle> {
+    let n_workers = n_workers.max(1);
+    let mut batcher = DynamicBatcher::new(eng.max_batch(), max_wait);
+    if eng.fixed_batch() {
+        batcher = batcher.padded();
+    }
+    let handle = Arc::new(ModelHandle {
+        name,
+        backend: eng.name(),
+        workers: n_workers,
+        n_in: eng.n_in(),
+        max_batch: eng.max_batch(),
+        batcher: batcher.clone(),
+        served: AtomicU64::new(0),
+        errors: AtomicU64::new(0),
+    });
+    for _ in 0..n_workers {
+        let eng = eng.clone();
+        let b = batcher.clone();
+        let stop = stop.clone();
+        workers.push(std::thread::spawn(move || worker_loop(&*eng, &b, &stop)));
+    }
+    handle
+}
+
+/// PJRT availability probe for `Backend::Runtime` / `Backend::Auto`:
+/// returns `Some(reason)` when the runtime cannot serve `opt.models`.
+fn probe_runtime(opt: &ServeOptions, manifest: &Manifest) -> Option<String> {
+    if let Err(e) = Runtime::open(&opt.artifacts_dir) {
+        return Some(format!("{e:#}"));
+    }
+    for mc in &opt.models {
+        let spec = manifest.get(&mc.artifact)?; // unknown artifact: reported later
+        let hlo = opt.artifacts_dir.join(&spec.graphs.1);
+        if !hlo.exists() {
+            return Some(format!("missing predict graph {}", hlo.display()));
         }
     }
-    for c in conns {
-        let _ = c.join();
-    }
-    let stats = model.join().expect("model thread")?;
-    println!(
-        "served {} requests in {} batches (mean fill {:.0}%)",
-        stats.requests,
-        stats.batches,
-        100.0 * stats.mean_fill(spec.batch)
-    );
-    Ok(())
+    None
 }
 
 fn handle_conn(
     stream: TcpStream,
-    batcher: BatcherHandle,
+    reg: &Registry,
     stop: &AtomicBool,
     served: &AtomicU64,
     max_requests: u64,
 ) -> Result<()> {
     stream.set_nodelay(true).ok();
+    // Bounded reads so an idle connection re-checks the stop flag a few
+    // times a second — otherwise a silent client would block this
+    // thread in read() forever and stall the server's shutdown.
+    stream.set_read_timeout(Some(Duration::from_millis(250))).ok();
     let mut writer = stream.try_clone()?;
-    let reader = BufReader::new(stream);
-    for line in reader.lines() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        let reply = match Json::parse(&line) {
-            Ok(req) => {
-                if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
-                    match cmd {
-                        "shutdown" => {
-                            stop.store(true, Ordering::Relaxed);
-                            obj(vec![("ok", Json::Bool(true))])
-                        }
-                        "stats" => obj(vec![(
-                            "served",
-                            num(served.load(Ordering::Relaxed) as f64),
-                        )]),
-                        other => obj(vec![("error", Json::Str(format!("unknown cmd {other}")))]),
-                    }
-                } else if let Some(pixels) = req.get("pixels").and_then(Json::as_arr) {
-                    let pixels: Vec<f32> =
-                        pixels.iter().filter_map(|v| v.as_f64()).map(|v| v as f32).collect();
-                    let rx = batcher.submit(pixels);
-                    match rx.recv_timeout(Duration::from_secs(10)) {
-                        Ok(resp) => {
-                            let n = served.fetch_add(1, Ordering::Relaxed) + 1;
-                            if max_requests > 0 && n >= max_requests {
-                                stop.store(true, Ordering::Relaxed);
-                            }
-                            obj(vec![
-                                ("class", num(resp.class as f64)),
-                                (
-                                    "probs",
-                                    Json::Arr(
-                                        resp.probs.iter().map(|&p| num(p as f64)).collect(),
-                                    ),
-                                ),
-                                ("latency_us", num(resp.latency_us as f64)),
-                            ])
-                        }
-                        Err(_) => obj(vec![("error", Json::Str("model timeout".into()))]),
-                    }
-                } else {
-                    obj(vec![("error", Json::Str("need pixels or cmd".into()))])
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        match reader.read_line(&mut line) {
+            Ok(0) => break, // EOF: client disconnected
+            Ok(_) => {
+                if !line.trim().is_empty() {
+                    let reply = match Json::parse(&line) {
+                        Ok(req) => handle_request(&req, reg, stop, served, max_requests),
+                        Err(e) => obj(vec![("error", Json::Str(format!("bad json: {e}")))]),
+                    };
+                    writeln!(writer, "{}", reply.to_string())?;
+                }
+                line.clear();
+                if stop.load(Ordering::Relaxed) {
+                    break;
                 }
             }
-            Err(e) => obj(vec![("error", Json::Str(format!("bad json: {e}")))]),
-        };
-        writeln!(writer, "{}", reply.to_string())?;
-        if stop.load(Ordering::Relaxed) {
-            break;
+            // read timeout: partially-read bytes stay appended to `line`
+            // (read_line's documented behavior), so a slow writer still
+            // gets its whole line on a later pass
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                if stop.load(Ordering::Relaxed) {
+                    break;
+                }
+            }
+            Err(e) => return Err(e.into()),
         }
     }
     Ok(())
+}
+
+/// One parsed request → one JSON reply.
+fn handle_request(
+    req: &Json,
+    reg: &Registry,
+    stop: &AtomicBool,
+    served: &AtomicU64,
+    max_requests: u64,
+) -> Json {
+    if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
+        return match cmd {
+            "shutdown" => {
+                stop.store(true, Ordering::Relaxed);
+                obj(vec![("ok", Json::Bool(true))])
+            }
+            "stats" => stats_json(reg, served),
+            other => obj(vec![("error", Json::Str(format!("unknown cmd {other}")))]),
+        };
+    }
+    let Some(pixels) = req.get("pixels").and_then(Json::as_arr) else {
+        return obj(vec![("error", Json::Str("need pixels or cmd".into()))]);
+    };
+    let model_name = req
+        .get("model")
+        .and_then(Json::as_str)
+        .unwrap_or(&reg.default_model);
+    let Some(handle) = reg.models.get(model_name) else {
+        return obj(vec![(
+            "error",
+            Json::Str(format!("unknown model '{model_name}'")),
+        )]);
+    };
+    let pixels: Vec<f32> = pixels.iter().filter_map(|v| v.as_f64()).map(|v| v as f32).collect();
+    // Validate here, not in the batcher: a truncated input must fail
+    // loudly instead of being zero-padded into a wrong classification.
+    if pixels.len() != handle.n_in {
+        handle.errors.fetch_add(1, Ordering::Relaxed);
+        return obj(vec![
+            (
+                "error",
+                Json::Str(format!(
+                    "model '{}' expects {} pixels, got {}",
+                    handle.name,
+                    handle.n_in,
+                    pixels.len()
+                )),
+            ),
+            ("model", Json::Str(handle.name.clone())),
+        ]);
+    }
+    let rx = handle.batcher.handle().submit(pixels);
+    match rx.recv_timeout(Duration::from_secs(10)) {
+        Ok(resp) => {
+            if let Some(err) = resp.error {
+                handle.errors.fetch_add(1, Ordering::Relaxed);
+                obj(vec![
+                    ("error", Json::Str(err)),
+                    ("model", Json::Str(handle.name.clone())),
+                ])
+            } else {
+                handle.served.fetch_add(1, Ordering::Relaxed);
+                // the global counter (and the max_requests stop trigger)
+                // tracks successful classifications only, matching the
+                // per-model counters
+                let n = served.fetch_add(1, Ordering::Relaxed) + 1;
+                if max_requests > 0 && n >= max_requests {
+                    stop.store(true, Ordering::Relaxed);
+                }
+                obj(vec![
+                    ("class", num(resp.class as f64)),
+                    (
+                        "probs",
+                        Json::Arr(resp.probs.iter().map(|&p| num(p as f64)).collect()),
+                    ),
+                    ("latency_us", num(resp.latency_us as f64)),
+                    ("model", Json::Str(handle.name.clone())),
+                ])
+            }
+        }
+        Err(_) => {
+            handle.errors.fetch_add(1, Ordering::Relaxed);
+            obj(vec![("error", Json::Str("model timeout".into()))])
+        }
+    }
+}
+
+/// `{"cmd":"stats"}` reply: total successful classifications plus
+/// per-model backend, worker count, served/error counters and batch
+/// fill (top-level `served` == sum of per-model `served`).
+fn stats_json(reg: &Registry, served: &AtomicU64) -> Json {
+    let per: Vec<(&str, Json)> = reg
+        .models
+        .iter()
+        .map(|(name, h)| {
+            let s = h.batcher.stats();
+            (
+                name.as_str(),
+                obj(vec![
+                    ("backend", Json::Str(h.backend.to_string())),
+                    ("workers", num(h.workers as f64)),
+                    ("served", num(h.served.load(Ordering::Relaxed) as f64)),
+                    ("errors", num(h.errors.load(Ordering::Relaxed) as f64)),
+                    ("batches", num(s.batches as f64)),
+                    ("mean_fill", num(s.mean_fill(h.max_batch))),
+                ]),
+            )
+        })
+        .collect();
+    obj(vec![
+        ("served", num(served.load(Ordering::Relaxed) as f64)),
+        ("models", obj(per)),
+    ])
 }
 
 /// Minimal blocking client for tests, benches and examples.
@@ -204,12 +585,24 @@ impl Client {
         Ok(Client { writer: stream.try_clone()?, reader: BufReader::new(stream) })
     }
 
+    /// Classify against the server's default model.
     pub fn classify(&mut self, pixels: &[f32]) -> Result<(usize, Vec<f32>, u64)> {
+        self.classify_model(None, pixels)
+    }
+
+    /// Classify against a named model (None = server default).
+    pub fn classify_model(
+        &mut self,
+        model: Option<&str>,
+        pixels: &[f32],
+    ) -> Result<(usize, Vec<f32>, u64)> {
         let arr = Json::Arr(pixels.iter().map(|&p| num(p as f64)).collect());
-        writeln!(self.writer, "{}", obj(vec![("pixels", arr)]).to_string())?;
-        let mut line = String::new();
-        self.reader.read_line(&mut line)?;
-        let v = Json::parse(&line).map_err(|e| anyhow!("reply: {e}"))?;
+        let mut pairs = vec![("pixels", arr)];
+        if let Some(m) = model {
+            pairs.push(("model", Json::Str(m.to_string())));
+        }
+        writeln!(self.writer, "{}", obj(pairs).to_string())?;
+        let v = self.read_reply()?;
         if let Some(err) = v.get("error").and_then(Json::as_str) {
             return Err(anyhow!("server error: {err}"));
         }
@@ -225,10 +618,33 @@ impl Client {
         ))
     }
 
+    /// Fetch the server's `stats` object.
+    pub fn stats(&mut self) -> Result<Json> {
+        writeln!(
+            self.writer,
+            "{}",
+            obj(vec![("cmd", Json::Str("stats".into()))]).to_string()
+        )?;
+        self.read_reply()
+    }
+
     pub fn shutdown(&mut self) -> Result<()> {
-        writeln!(self.writer, "{}", obj(vec![("cmd", Json::Str("shutdown".into()))]).to_string())?;
+        writeln!(
+            self.writer,
+            "{}",
+            obj(vec![("cmd", Json::Str("shutdown".into()))]).to_string()
+        )?;
         let mut line = String::new();
         let _ = self.reader.read_line(&mut line);
         Ok(())
+    }
+
+    fn read_reply(&mut self) -> Result<Json> {
+        let mut line = String::new();
+        self.reader.read_line(&mut line)?;
+        if line.is_empty() {
+            return Err(anyhow!("server closed the connection"));
+        }
+        Json::parse(&line).map_err(|e| anyhow!("reply: {e}"))
     }
 }

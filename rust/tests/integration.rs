@@ -199,19 +199,21 @@ fn hashnet_beats_equivalent_nn_at_small_budget() {
 
 #[test]
 fn serve_end_to_end_over_tcp() {
-    use hashednets::serve::{serve, Client, ServeOptions};
+    use hashednets::serve::{Client, ModelConfig, ServeOptions, Server};
     let Some(_) = runtime() else { return };
-    let addr = "127.0.0.1:47911";
+    // backend auto: runtime when the artifacts load, native otherwise —
+    // either way this exercises the full TCP → batcher → engine path
     let opts = ServeOptions {
         artifacts_dir: concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts").into(),
-        artifact: TINY_HASHNET.into(),
-        addr: addr.into(),
+        models: vec![ModelConfig::new(TINY_HASHNET)],
+        addr: "127.0.0.1:0".into(),
         max_requests: 0,
         ..Default::default()
     };
-    let server = std::thread::spawn(move || serve(opts));
-    std::thread::sleep(std::time::Duration::from_millis(1500));
-    let mut client = Client::connect(addr).expect("connect");
+    let srv = Server::bind(opts).expect("bind");
+    let addr = srv.local_addr().to_string();
+    let server = std::thread::spawn(move || srv.run());
+    let mut client = Client::connect(&addr).expect("connect");
     let ds = generate(Kind::Basic, Split::Test, 3, 1);
     for i in 0..3 {
         let (class, probs, latency) = client.classify(ds.images.row(i)).expect("classify");

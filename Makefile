@@ -9,6 +9,9 @@
 #                   across PRs.
 #   make serve-bench  run only the serving latency sweep (native 1/2/4
 #                   workers vs runtime) and collect BENCH_serve_latency.json.
+#   make smoke      tiny end-to-end train→bundle→serve→hot-load loop on
+#                   the native stack (no artifacts needed); also runs
+#                   as the last step of `make check`.
 #   make artifacts  lower the core config set to HLO artifacts (needs
 #                   the Python/JAX toolchain).
 #   make pytest     run the Python build-time test suite (also emits the
@@ -17,10 +20,18 @@
 RUST_DIR := rust
 PY_DIR   := python
 
-.PHONY: check bench serve-bench artifacts pytest clean-bench
+.PHONY: check bench serve-bench artifacts pytest smoke clean-bench
 
 check:
 	cd $(RUST_DIR) && cargo build --release && cargo clippy -q --all-targets -- -D warnings && cargo test -q
+	$(MAKE) smoke
+
+# tiny end-to-end loop on the native stack: train from a pure spec →
+# save a ModelBundle → serve it → classify over TCP → hot-load a second
+# bundle into the running server → reload/unload → shutdown.
+# Needs no artifacts, no Python — deterministic on a fresh checkout.
+smoke:
+	cd $(RUST_DIR) && cargo run --release --quiet -- smoke
 
 # bench binaries anchor artifacts/ and BENCH_*.json at the repo root
 # via CARGO_MANIFEST_DIR, so they are CWD-independent

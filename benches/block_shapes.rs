@@ -5,7 +5,7 @@
 //!     cargo bench --bench block_shapes
 
 use hashednets::data::{generate, Kind, Split};
-use hashednets::runtime::{Graph, Hyper, ModelState, Runtime};
+use hashednets::runtime::{Graph, Hyper, Runtime};
 use hashednets::util::bench::Bench;
 
 const OUT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_block_shapes.json");
@@ -35,7 +35,7 @@ fn main() {
     ] {
         let Some(spec) = rt.manifest.get(name).cloned() else { continue };
         any = true;
-        let mut state = ModelState::init(&spec, 1);
+        let mut state = spec.init_state(1);
         let train = rt.load(name, Graph::Train).unwrap();
         let predict = rt.load(name, Graph::Predict).unwrap();
         let (x, y) = ds.gather_batch(&(0..50u32).collect::<Vec<_>>(), spec.batch);

@@ -7,7 +7,7 @@
 //!     cargo bench --bench fig_compression
 
 use hashednets::data::{generate, Kind, Split};
-use hashednets::runtime::{Graph, Hyper, ModelState, Runtime};
+use hashednets::runtime::{Graph, Hyper, Runtime};
 use hashednets::util::bench::Bench;
 
 const OUT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fig_compression.json");
@@ -34,7 +34,7 @@ fn main() {
         for method in ["hashnet", "nn"] {
             let name = format!("{method}_3l_h100_o10_c{comp}");
             let Some(spec) = rt.manifest.get(&name).cloned() else { continue };
-            let mut state = ModelState::init(&spec, 1);
+            let mut state = spec.init_state(1);
             let train = rt.load(&name, Graph::Train).unwrap();
             let (x, y) = ds.gather_batch(&(0..50u32).collect::<Vec<_>>(), spec.batch);
             let mut seed = 0u32;

@@ -6,7 +6,7 @@
 //!     cargo bench --bench fig_expansion
 
 use hashednets::data::{generate, Kind, Split};
-use hashednets::runtime::{Graph, Hyper, ModelState, Runtime};
+use hashednets::runtime::{Graph, Hyper, Runtime};
 use hashednets::util::bench::Bench;
 
 const OUT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_fig_expansion.json");
@@ -30,7 +30,7 @@ fn main() {
     for factor in [1usize, 2, 4, 8, 16] {
         let name = format!("hashnet_3l_b50_o10_x{factor}");
         let Some(spec) = rt.manifest.get(&name).cloned() else { continue };
-        let mut state = ModelState::init(&spec, 1);
+        let mut state = spec.init_state(1);
         let train = rt.load(&name, Graph::Train).unwrap();
         let predict = rt.load(&name, Graph::Predict).unwrap();
         let (x, y) = ds.gather_batch(&(0..50u32).collect::<Vec<_>>(), spec.batch);

@@ -12,10 +12,9 @@
 //!
 //!     cargo bench --bench kernel_forward
 
-use hashednets::coordinator::native;
 use hashednets::data::{generate, Kind, Split};
-use hashednets::nn::{Layer, LayerKind};
-use hashednets::runtime::{Graph, ModelState, Runtime};
+use hashednets::nn::{Layer, LayerKind, Network};
+use hashednets::runtime::{Graph, Runtime};
 use hashednets::tensor::Matrix;
 use hashednets::util::bench::Bench;
 use hashednets::util::rng::Pcg32;
@@ -34,15 +33,15 @@ fn main() {
                 continue;
             }
             let spec = rt.manifest.get(name).unwrap().clone();
-            let state = ModelState::init(&spec, 1);
+            let state = spec.init_state(1);
             let exe = rt.load(name, Graph::Predict).unwrap();
             b.items_per_iter = Some(50.0);
             b.run(&format!("artifact predict {name}"), || {
                 std::hint::black_box(exe.predict(&state, &ds.images).unwrap());
             });
-            // native twin on identical params (plans built at load time)
-            let mut net = native::network_from_spec(&spec);
-            native::load_params(&mut net, &spec, &state);
+            // native twin on identical params, built through the bundle
+            // path (plans built at load time)
+            let net = Network::from_bundle(&state.to_bundle(&spec).unwrap()).unwrap();
             b.run(&format!("native  predict {name}"), || {
                 std::hint::black_box(net.predict(&ds.images));
             });

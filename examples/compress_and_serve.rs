@@ -1,25 +1,25 @@
 //! Deployment workflow the paper's introduction motivates: a full dense
 //! model is trained server-side, compressed to a memory budget with the
-//! hashing trick, fine-tuned briefly, then served on a batched TCP
-//! endpoint whose resident model is the *compressed* parameter vector.
+//! hashing trick **in one call** (`compress::compress_network`),
+//! fine-tuned briefly, packaged as a self-describing `ModelBundle`,
+//! then served on a batched TCP endpoint whose resident model is the
+//! *compressed* parameter vector.
 //!
 //!     make artifacts && cargo run --release --example compress_and_serve
 //!
 //! Steps:
 //!   1. train dense 784-100-10 (`nn` at compression 1) — the "cloud" model
-//!   2. bucket-average its weights into the hashnet 1/8 layout (post-hoc
-//!      compression, `compress::compress_dense`)
+//!   2. `compress_network(dense, budgets)` → hashed `ModelBundle` (1/8)
 //!   3. measure error: dense / compressed / compressed+fine-tuned
-//!   4. serve the fine-tuned compressed model; classify live requests
+//!   4. save the bundle and serve it; classify live requests
 
 use anyhow::Result;
 use hashednets::compress;
-use hashednets::coordinator::{native, trainer};
+use hashednets::coordinator::trainer;
 use hashednets::data::{generate, Kind, Split};
-use hashednets::nn::TrainHyper;
+use hashednets::nn::{Network, TrainHyper};
 use hashednets::runtime::{ModelState, Runtime};
 use hashednets::serve::{serve, Backend, Client, ModelConfig, ServeOptions};
-use hashednets::tensor::Matrix;
 use hashednets::util::rng::Pcg32;
 
 const DENSE: &str = "nn_3l_h100_o10_c1-1";
@@ -48,39 +48,26 @@ fn main() -> Result<()> {
         dense.stored_params
     );
 
-    // 2. post-hoc compression -------------------------------------------
+    // 2. post-hoc compression: dense → hashed bundle, one call -----------
     println!("[2/4] compressing 8x with the hashing trick...");
-    let dspec = rt.manifest.get(DENSE).unwrap().clone();
     let hspec = rt.manifest.get(HASHED).unwrap().clone();
-    let mut dnet = native::network_from_spec(&dspec);
-    native::load_params(&mut dnet, &dspec, &dense.state);
-    let mut hstate = ModelState::init(&hspec, 0);
-    for (l, layer) in dnet.layers.iter().enumerate() {
-        let v = layer.virtual_matrix(); // dense W (n×m)
-        let nm = layer.n * layer.m;
-        let bias = layer.params[nm..].to_vec();
-        let mut vb = Matrix::zeros(layer.n, layer.m + 1);
-        for i in 0..layer.n {
-            vb.row_mut(i)[..layer.m].copy_from_slice(v.row(i));
-            vb.row_mut(i)[layer.m] = bias[i];
-        }
-        let k = hspec.budgets[l];
-        let err = compress::reconstruction_error(&vb, k, l as u32, hspec.seed_base);
-        hstate.params[l] = compress::compress_dense(&vb, k, l as u32, hspec.seed_base);
-        println!("      layer {l}: {} → {k} weights (recon err {err:.3})", vb.data.len());
+    let dnet = Network::from_bundle(&dense.bundle()?)?;
+    let mut bundle = compress::compress_network(&dnet, &hspec.budgets, hspec.name.clone())?;
+    bundle.spec.batch = hspec.batch.max(1);
+    for (l, err) in compress::reconstruction_report(&dnet, &bundle)?.iter().enumerate() {
+        println!("      layer {l}: -> {} weights (recon err {err:.3})", hspec.budgets[l]);
     }
-    let e_comp = trainer::evaluate(&rt, HASHED, &hstate, &test)?;
+    let e_comp = trainer::evaluate(&rt, HASHED, &ModelState::from_bundle(&bundle), &test)?;
     println!("      compressed (no fine-tune) test error {:.2}%", e_comp * 100.0);
 
     // 3. brief fine-tune in the native engine ----------------------------
     println!("[3/4] fine-tuning the compressed model (3 epochs, native engine)...");
-    let mut hnet = native::network_from_spec(&hspec);
-    native::load_params(&mut hnet, &hspec, &hstate);
+    let mut hnet = Network::from_bundle(&bundle)?;
     let hyper = TrainHyper { lr: 0.02, keep_prob: 1.0, ..Default::default() };
     let mut rng = Pcg32::new(17, 0);
     hnet.fit(&train.images, &train.labels, 50, 3, &hyper, None, &mut rng);
-    native::store_params(&hnet, &hspec, &mut hstate);
-    let e_ft = trainer::evaluate(&rt, HASHED, &hstate, &test)?;
+    bundle = hnet.to_bundle(&bundle.spec.clone())?;
+    let e_ft = trainer::evaluate(&rt, HASHED, &ModelState::from_bundle(&bundle), &test)?;
     println!("      fine-tuned test error {:.2}%", e_ft * 100.0);
     println!(
         "      summary: dense {:.2}% | 8x-compressed {:.2}% | +fine-tune {:.2}%",
@@ -90,16 +77,16 @@ fn main() -> Result<()> {
     );
 
     // 4. serve it ---------------------------------------------------------
-    // `auto` picks the PJRT artifact runtime when it loads, otherwise
-    // the native HashPlan engine — where two workers share the model.
-    println!("[4/4] serving the compressed model on 127.0.0.1:47912...");
-    let ckpt = std::env::temp_dir().join("hn_compressed.ckpt");
-    hstate.save(&ckpt)?;
+    // The bundle is the entire deployable model: spec + compressed
+    // params, one file. Serving needs nothing else — two native
+    // workers share the decompression plan.
+    println!("[4/4] serving the compressed bundle on 127.0.0.1:47912...");
+    let hnb = std::env::temp_dir().join("hn_compressed.hnb");
+    bundle.save(&hnb)?;
     let opts = ServeOptions {
-        artifacts_dir: "artifacts".into(),
-        models: vec![ModelConfig::new(HASHED).with_checkpoint(ckpt.clone())],
+        models: vec![ModelConfig::bundle(&hnb)],
         addr: "127.0.0.1:47912".into(),
-        backend: Backend::Auto,
+        backend: Backend::Native,
         workers: 2,
         ..Default::default()
     };
@@ -123,6 +110,6 @@ fn main() -> Result<()> {
     println!("      live accuracy {}/{} over TCP", correct, n_req);
     client.shutdown()?;
     server.join().unwrap()?;
-    std::fs::remove_file(&ckpt).ok();
+    std::fs::remove_file(&hnb).ok();
     Ok(())
 }

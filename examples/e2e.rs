@@ -46,10 +46,10 @@ fn main() -> Result<()> {
     );
     let mut loss_csv = String::from("method,epoch,loss\n");
 
-    for method in ["rer", "lrd", "nn", "dk", "hashnet", "hashnet_dk"] {
+    for method in hashednets::coordinator::repro::METHODS {
         let artifact = format!("{method}_3l_h100_o10_c{COMPRESSION}");
         let hyper = default_hyper(method);
-        let needs_teacher = matches!(method, "dk" | "hashnet_dk");
+        let needs_teacher = method.uses_soft_targets();
         let soft = if needs_teacher {
             Some(trainer::soft_targets(&rt, teacher, &tstate, &train.images, hyper.temp)?)
         } else {
@@ -74,11 +74,11 @@ fn main() -> Result<()> {
             res.steps_per_s,
             res.wall_s
         );
-        table.set_err(method, "test error %", res.test_error);
-        table.set(method, "stored", res.stored_params.to_string());
-        table.set(method, "virtual", res.virtual_params.to_string());
-        table.set(method, "steps/s", format!("{:.0}", res.steps_per_s));
-        table.set(method, "wall s", format!("{:.1}", res.wall_s));
+        table.set_err(method.as_str(), "test error %", res.test_error);
+        table.set(method.as_str(), "stored", res.stored_params.to_string());
+        table.set(method.as_str(), "virtual", res.virtual_params.to_string());
+        table.set(method.as_str(), "steps/s", format!("{:.0}", res.steps_per_s));
+        table.set(method.as_str(), "wall s", format!("{:.1}", res.wall_s));
         for (e, l) in res.train_losses.iter().enumerate() {
             loss_csv.push_str(&format!("{method},{e},{l}\n"));
         }

@@ -50,12 +50,13 @@ fn main() -> Result<()> {
         dense.test_error * 100.0
     );
 
-    let path = std::path::Path::new("quickstart_hashnet.ckpt");
-    hashed.state.save(path)?;
+    let path = std::path::Path::new("quickstart_hashnet.hnb");
+    let bundle = hashed.bundle()?;
+    bundle.save(path)?;
     println!(
-        "checkpoint saved to {} ({} bytes — the entire model)",
+        "model bundle saved to {} ({} param bytes — the entire model, spec included)",
         path.display(),
-        hashed.state.storage_bytes()
+        bundle.param_bytes()
     );
     Ok(())
 }

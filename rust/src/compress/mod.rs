@@ -8,8 +8,106 @@
 //! preservation check (Eq. 1) used by tests and benches.
 
 use crate::hash::{bucket_sign, layer_seeds};
-use crate::nn::{Layer, LayerKind};
+use crate::model::{Method, ModelBundle, ModelError, ModelSpec};
+use crate::nn::{Layer, LayerKind, Network};
 use crate::tensor::Matrix;
+
+/// Compress a trained **dense** network into a HashedNet bundle in one
+/// call: every layer's `(n × (m+1))` weight+bias matrix is
+/// least-squares-projected onto `budgets[l]` hash buckets
+/// ([`compress_dense`]), and the result is packaged as a
+/// self-describing [`ModelBundle`] ready to save or serve.
+///
+/// The returned spec is named `{name}` with the source network's
+/// dims and seed base; rename via `bundle.spec.name` if needed.
+pub fn compress_network(
+    net: &Network,
+    budgets: &[usize],
+    name: impl Into<String>,
+) -> Result<ModelBundle, ModelError> {
+    if net.layers.is_empty() {
+        return Err(ModelError::InvalidSpec("network has no layers".into()));
+    }
+    if let Some((l, kind)) = net
+        .layers
+        .iter()
+        .enumerate()
+        .find_map(|(l, lay)| (lay.kind != LayerKind::Dense).then(|| (l, lay.kind.clone())))
+    {
+        return Err(ModelError::InvalidSpec(format!(
+            "layer {l} is {kind:?}; compress_network takes a fully dense network"
+        )));
+    }
+    if budgets.len() != net.layers.len() {
+        return Err(ModelError::InvalidSpec(format!(
+            "{} budgets for {} layers",
+            budgets.len(),
+            net.layers.len()
+        )));
+    }
+    let seed_base = net.layers[0].seed_base;
+    let mut dims: Vec<usize> = vec![net.n_in()];
+    dims.extend(net.layers.iter().map(|l| l.n));
+    let spec = ModelSpec::new(
+        name,
+        Method::Hashnet,
+        dims,
+        budgets.to_vec(),
+        seed_base,
+        50,
+    )?;
+    let mut hashed = Network::from_spec(&spec)?;
+    for (l, (dense_layer, hashed_layer)) in
+        net.layers.iter().zip(hashed.layers.iter_mut()).enumerate()
+    {
+        let vb = dense_with_bias(dense_layer);
+        hashed_layer.params = compress_dense(&vb, budgets[l], l as u32, seed_base);
+    }
+    hashed.to_bundle(&spec)
+}
+
+/// A dense layer's `(n × (m+1))` weight matrix with the bias folded in
+/// as the last column — the shape the hashed parameterization virtualizes.
+/// Panics if the layer is not dense (callers validate first).
+pub fn dense_with_bias(layer: &Layer) -> Matrix {
+    assert_eq!(layer.kind, LayerKind::Dense, "dense_with_bias on {:?}", layer.kind);
+    let (m, n) = (layer.m, layer.n);
+    let w = layer.virtual_matrix(); // (n × m), no bias
+    let bias = &layer.params[n * m..];
+    let mut vb = Matrix::zeros(n, m + 1);
+    for i in 0..n {
+        vb.row_mut(i)[..m].copy_from_slice(w.row(i));
+        vb.row_mut(i)[m] = bias[i];
+    }
+    vb
+}
+
+/// Per-layer relative reconstruction error of a hashed bundle (as
+/// produced by [`compress_network`]) against the dense `net` it came
+/// from — the diagnostic `hashednets compress` prints. Reuses the
+/// bundle's bucket values instead of recompressing each layer.
+pub fn reconstruction_report(net: &Network, hashed: &ModelBundle) -> Result<Vec<f64>, ModelError> {
+    if hashed.params.len() != net.layers.len() {
+        return Err(ModelError::InvalidSpec(format!(
+            "{} hashed tensors for {} dense layers",
+            hashed.params.len(),
+            net.layers.len()
+        )));
+    }
+    if let Some(l) = net.layers.iter().position(|lay| lay.kind != LayerKind::Dense) {
+        return Err(ModelError::InvalidSpec(format!("layer {l} is not dense")));
+    }
+    let seed_base = hashed.spec.seed_base;
+    Ok(net
+        .layers
+        .iter()
+        .zip(&hashed.params)
+        .enumerate()
+        .map(|(l, (layer, w))| {
+            reconstruction_error_of(&dense_with_bias(layer), w, l as u32, seed_base)
+        })
+        .collect())
+}
 
 /// Least-squares projection of a dense weight matrix onto the hashed
 /// parameterization: each bucket takes the ξ-weighted mean of its
@@ -53,7 +151,15 @@ pub fn hashed_layer_from_dense(
 /// that motivates the paper).
 pub fn reconstruction_error(dense: &Matrix, k: usize, layer_index: u32, seed_base: u32) -> f64 {
     let w = compress_dense(dense, k, layer_index, seed_base);
+    reconstruction_error_of(dense, &w, layer_index, seed_base)
+}
+
+/// [`reconstruction_error`] against **already-computed** bucket values
+/// `w` — so callers that just compressed a layer don't pay the
+/// bucket-averaging pass a second time for the diagnostic.
+pub fn reconstruction_error_of(dense: &Matrix, w: &[f32], layer_index: u32, seed_base: u32) -> f64 {
     let (n, m1) = (dense.rows, dense.cols);
+    let k = w.len();
     let (s_h, s_xi) = layer_seeds(layer_index, seed_base);
     let mut num = 0.0f64;
     let mut den = 0.0f64;
@@ -127,6 +233,53 @@ mod tests {
             (num / den).sqrt()
         };
         assert!(rel < 0.9, "relative error {rel}");
+    }
+
+    #[test]
+    fn compress_network_one_call_roundtrip() {
+        // dense → hashed in one call; the bundle reconstructs a network
+        // whose layer params equal the per-layer bucket averages
+        let mut rng = Pcg32::new(7, 1);
+        let mut dense = Network::from_dims(
+            &[10, 8, 4],
+            vec![LayerKind::Dense, LayerKind::Dense],
+            crate::hash::DEFAULT_SEED_BASE,
+        );
+        dense.init(&mut rng);
+        let bundle = compress_network(&dense, &[30, 12], "toy_hashed").unwrap();
+        assert_eq!(bundle.spec.method, Method::Hashnet);
+        assert_eq!(bundle.spec.dims, vec![10, 8, 4]);
+        assert_eq!(bundle.spec.stored_params(), 42);
+        let net = Network::from_bundle(&bundle).unwrap();
+        // layer 0 params match a direct compress_dense of W|b
+        let l0 = &dense.layers[0];
+        let w = l0.virtual_matrix();
+        let mut vb = Matrix::zeros(8, 11);
+        for i in 0..8 {
+            vb.row_mut(i)[..10].copy_from_slice(w.row(i));
+            vb.row_mut(i)[10] = l0.params[80 + i];
+        }
+        let want = compress_dense(&vb, 30, 0, crate::hash::DEFAULT_SEED_BASE);
+        assert_eq!(net.layers[0].params, want);
+    }
+
+    #[test]
+    fn compress_network_rejects_non_dense_and_bad_budgets() {
+        let mut rng = Pcg32::new(8, 1);
+        let mut hashed = Network::from_dims(
+            &[6, 4, 2],
+            vec![LayerKind::Hashed { k: 9 }, LayerKind::Hashed { k: 4 }],
+            crate::hash::DEFAULT_SEED_BASE,
+        );
+        hashed.init(&mut rng);
+        assert!(compress_network(&hashed, &[9, 4], "x").is_err());
+        let mut dense = Network::from_dims(
+            &[6, 4, 2],
+            vec![LayerKind::Dense, LayerKind::Dense],
+            crate::hash::DEFAULT_SEED_BASE,
+        );
+        dense.init(&mut rng);
+        assert!(compress_network(&dense, &[9], "x").is_err());
     }
 
     #[test]

@@ -1,108 +1,51 @@
-//! Bridge between artifact specs and the native engine: build a
+//! Bridge between artifact state and the native engine: build a
 //! [`Network`] that computes *exactly* what an artifact computes, from
 //! the same [`ModelState`] parameters.
+//!
+//! Since the model subsystem landed, this is one function deep: the
+//! artifact's identity converts to a [`crate::model::ModelSpec`], the
+//! state's tensors to a [`crate::model::ModelBundle`], and
+//! [`Network::from_bundle`] does the rest — the method match that used
+//! to live (and `panic!`) here is now the typed
+//! [`crate::model::Method`] enum, so an unknown method fails at
+//! manifest parse time and a mismatched checkpoint fails here with a
+//! clean shape error.
 //!
 //! Because `crate::hash` is bit-identical to the Python hashing, the
 //! native HashedNet and the Pallas kernel inside the artifact
 //! decompress the same virtual matrices; integration tests assert the
 //! logits agree to float tolerance.
 
-use crate::nn::{Layer, LayerKind, Network};
+use crate::nn::Network;
 use crate::runtime::{ArtifactSpec, ModelState};
 
-/// Instantiate the native twin of an artifact.
-pub fn network_from_spec(spec: &ArtifactSpec) -> Network {
-    let dims = &spec.dims;
-    let n_layers = dims.len() - 1;
-    let mut layers = Vec::with_capacity(n_layers);
-    for l in 0..n_layers {
-        let (m, n) = (dims[l], dims[l + 1]);
-        let kind = match spec.method.as_str() {
-            "hashnet" | "hashnet_dk" => LayerKind::Hashed { k: spec.budgets[l] },
-            "nn" | "dk" => LayerKind::Dense,
-            "rer" => LayerKind::Masked { k: spec.budgets[l] },
-            "lrd" => {
-                let r = (spec.budgets[l] as f64 / n as f64).round().max(1.0) as usize;
-                LayerKind::LowRank { r }
-            }
-            other => panic!("unknown method '{other}'"),
-        };
-        layers.push(Layer::new(m, n, kind, l, spec.seed_base));
-    }
-    Network::new(layers)
+/// Instantiate the native twin of an artifact on `state`'s parameters.
+/// Validates the state against the spec's layer layout before copying,
+/// so a wrong checkpoint is a clean error instead of a slice panic.
+pub fn try_build(spec: &ArtifactSpec, state: &ModelState) -> anyhow::Result<Network> {
+    let bundle = state.to_bundle(spec)?;
+    Ok(Network::from_bundle(&bundle)?)
 }
 
-/// Fallible [`network_from_spec`] + [`load_params`]: validates that the
-/// state's tensor lengths match the spec's layer layout before copying,
-/// so a wrong checkpoint is a clean error instead of a slice panic.
-/// This is how `serve::engine::NativeEngine` builds its model.
-pub fn try_build(spec: &ArtifactSpec, state: &ModelState) -> anyhow::Result<Network> {
-    let mut net = network_from_spec(spec);
-    let mut expect: Vec<usize> = Vec::new();
-    for layer in &net.layers {
-        match layer.kind {
-            LayerKind::Dense => {
-                expect.push(layer.n * layer.m);
-                expect.push(layer.n);
-            }
-            _ => expect.push(layer.params.len()),
-        }
-    }
-    let got: Vec<usize> = state.params.iter().map(Vec::len).collect();
+/// Extract native network parameters back into artifact layout — the
+/// inverse of [`try_build`] (used after native fine-tuning to hand
+/// parameters back to the PJRT runtime).
+pub fn store_params(net: &Network, spec: &ArtifactSpec, state: &mut ModelState) -> anyhow::Result<()> {
+    let bundle = net.to_bundle(&spec.to_model_spec())?;
+    let expect: Vec<usize> = state.params.iter().map(Vec::len).collect();
+    let got: Vec<usize> = bundle.params.iter().map(Vec::len).collect();
     if got != expect {
         return Err(anyhow::anyhow!(
-            "state does not match artifact '{}': tensor lengths {:?}, expected {:?}",
+            "state for '{}' has tensor lengths {:?}, network produced {:?}",
             spec.name,
-            got,
-            expect
+            expect,
+            got
         ));
     }
-    load_params(&mut net, spec, state);
-    Ok(net)
-}
-
-/// Copy artifact parameters into the native network.
-///
-/// Layouts match by construction (manifest order is layer order, and
-/// dense layers store `[W, b]` as two manifest params that concatenate
-/// into the native layer's single buffer).
-pub fn load_params(net: &mut Network, _spec: &ArtifactSpec, state: &ModelState) {
-    let mut it = state.params.iter();
-    for layer in &mut net.layers {
-        match layer.kind {
-            LayerKind::Dense => {
-                let w = it.next().expect("missing W");
-                let b = it.next().expect("missing b");
-                layer.params[..w.len()].copy_from_slice(w);
-                layer.params[w.len()..].copy_from_slice(b);
-            }
-            _ => {
-                let p = it.next().expect("missing param");
-                layer.params.copy_from_slice(p);
-            }
-        }
+    for (dst, src) in state.params.iter_mut().zip(bundle.params) {
+        dst.copy_from_slice(&src);
     }
-    assert!(it.next().is_none(), "leftover artifact params");
-}
-
-/// Extract native network parameters back into artifact layout.
-pub fn store_params(net: &Network, spec: &ArtifactSpec, state: &mut ModelState) {
-    let mut idx = 0;
-    for layer in &net.layers {
-        match layer.kind {
-            LayerKind::Dense => {
-                let nm = layer.n * layer.m;
-                state.params[idx].copy_from_slice(&layer.params[..nm]);
-                state.params[idx + 1].copy_from_slice(&layer.params[nm..]);
-                idx += 2;
-            }
-            _ => {
-                state.params[idx].copy_from_slice(&layer.params);
-                idx += 1;
-            }
-        }
-    }
-    assert_eq!(idx, spec.params.len(), "param count mismatch");
+    Ok(())
 }
 
 #[cfg(test)]
@@ -138,12 +81,11 @@ mod tests {
     fn roundtrip_hashed_params() {
         let m = toy_manifest();
         let spec = m.get("h").unwrap();
-        let state = ModelState::init(spec, 5);
-        let mut net = network_from_spec(spec);
-        load_params(&mut net, spec, &state);
+        let state = spec.init_state(5);
+        let net = try_build(spec, &state).unwrap();
         assert_eq!(net.layers[0].params, state.params[0]);
-        let mut state2 = ModelState::init(spec, 99);
-        store_params(&net, spec, &mut state2);
+        let mut state2 = spec.init_state(99);
+        store_params(&net, spec, &mut state2).unwrap();
         assert_eq!(state2.params, state.params);
     }
 
@@ -151,13 +93,12 @@ mod tests {
     fn roundtrip_dense_params_concat() {
         let m = toy_manifest();
         let spec = m.get("d").unwrap();
-        let state = ModelState::init(spec, 5);
-        let mut net = network_from_spec(spec);
-        load_params(&mut net, spec, &state);
+        let state = spec.init_state(5);
+        let net = try_build(spec, &state).unwrap();
         assert_eq!(&net.layers[0].params[..48], state.params[0].as_slice());
         assert_eq!(&net.layers[0].params[48..], state.params[1].as_slice());
-        let mut state2 = ModelState::init(spec, 99);
-        store_params(&net, spec, &mut state2);
+        let mut state2 = spec.init_state(99);
+        store_params(&net, spec, &mut state2).unwrap();
         assert_eq!(state2.params, state.params);
     }
 
@@ -166,11 +107,20 @@ mod tests {
         let m = toy_manifest();
         for name in ["h", "d"] {
             let spec = m.get(name).unwrap();
-            let net = network_from_spec(spec);
+            let net = try_build(spec, &spec.init_state(1)).unwrap();
             assert_eq!(
                 net.stored_params(),
                 spec.params.iter().map(|p| p.count()).sum::<usize>()
             );
         }
+    }
+
+    #[test]
+    fn mismatched_state_is_a_clean_error() {
+        let m = toy_manifest();
+        let hstate = m.get("h").unwrap().init_state(1);
+        let err = try_build(m.get("d").unwrap(), &hstate).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("shape mismatch"), "{msg}");
     }
 }

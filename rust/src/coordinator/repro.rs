@@ -15,6 +15,7 @@
 use super::metrics::{run_record, JsonlWriter, Table};
 use super::trainer::{self, SoftTargets, TrainConfig};
 use crate::data::{generate, Kind, Split};
+use crate::model::Method;
 use crate::runtime::{Graph, Hyper, ModelState, Runtime};
 use crate::tensor::Matrix;
 use anyhow::{anyhow, Result};
@@ -22,7 +23,8 @@ use std::collections::{BTreeMap, HashMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::{mpsc, Arc, Mutex};
 
-pub const METHODS: [&str; 6] = ["rer", "lrd", "nn", "dk", "hashnet", "hashnet_dk"];
+/// Every method of the evaluation grid, in the paper's table order.
+pub const METHODS: [Method; 6] = Method::ALL;
 pub const COMPRESSIONS: [(u32, u32); 7] =
     [(1, 1), (1, 2), (1, 4), (1, 8), (1, 16), (1, 32), (1, 64)];
 pub const EXPANSIONS: [usize; 5] = [1, 2, 4, 8, 16];
@@ -65,7 +67,7 @@ impl Default for ReproOptions {
 pub struct Job {
     pub experiment: String,
     pub dataset: Kind,
-    pub method: &'static str,
+    pub method: Method,
     pub artifact: String,
     pub compression: f64,
     pub expansion: Option<usize>,
@@ -74,10 +76,11 @@ pub struct Job {
 
 /// Per-method default hyperparameters (stand-in for the paper's
 /// Bayesian optimization; see `hpo` for the search tool).
-pub fn default_hyper(method: &str) -> Hyper {
-    match method {
-        "dk" | "hashnet_dk" => Hyper { lam: 0.7, temp: 4.0, ..Hyper::default() },
-        _ => Hyper::default(),
+pub fn default_hyper(method: Method) -> Hyper {
+    if method.uses_soft_targets() {
+        Hyper { lam: 0.7, temp: 4.0, ..Hyper::default() }
+    } else {
+        Hyper::default()
     }
 }
 
@@ -102,13 +105,14 @@ pub fn jobs_for(experiment: &str, opt: &ReproOptions) -> Result<Vec<Job>> {
             for &depth in depths {
                 for &c in comps {
                     for method in METHODS {
-                        let teacher = matches!(method, "dk" | "hashnet_dk")
+                        let teacher = method
+                            .uses_soft_targets()
                             .then(|| teacher_name(depth, opt.hidden, out));
                         jobs.push(Job {
                             experiment: exp.to_string(),
                             dataset: ds,
                             method,
-                            artifact: artifact_name(method, depth, opt.hidden, out, c),
+                            artifact: artifact_name(method.as_str(), depth, opt.hidden, out, c),
                             compression: c.0 as f64 / c.1 as f64,
                             expansion: None,
                             teacher,
@@ -126,16 +130,17 @@ pub fn jobs_for(experiment: &str, opt: &ReproOptions) -> Result<Vec<Job>> {
         "fig4" => {
             for &depth in &[3usize, 5] {
                 for &factor in &EXPANSIONS {
-                    for method in ["hashnet", "rer", "lrd"] {
+                    for method in [Method::Hashnet, Method::Rer, Method::Lrd] {
                         jobs.push(Job {
                             experiment: "fig4".into(),
                             dataset: Kind::Mnist,
-                            method: match method {
-                                "hashnet" => "hashnet",
-                                "rer" => "rer",
-                                _ => "lrd",
-                            },
-                            artifact: expansion_artifact(method, depth, opt.exp_base, factor),
+                            method,
+                            artifact: expansion_artifact(
+                                method.as_str(),
+                                depth,
+                                opt.exp_base,
+                                factor,
+                            ),
                             compression: 1.0 / factor as f64,
                             expansion: Some(factor),
                             teacher: None,
@@ -146,7 +151,7 @@ pub fn jobs_for(experiment: &str, opt: &ReproOptions) -> Result<Vec<Job>> {
                 jobs.push(Job {
                     experiment: "fig4".into(),
                     dataset: Kind::Mnist,
-                    method: "nn",
+                    method: Method::Nn,
                     artifact: expansion_artifact("nn", depth, opt.exp_base, 1),
                     compression: 1.0,
                     expansion: Some(1),
@@ -337,7 +342,7 @@ pub fn run_experiment(experiment: &str, opt: &ReproOptions) -> Result<()> {
     let mut log = JsonlWriter::create(&opt.results_dir.join(format!("{experiment}.jsonl")))?;
     for r in &rows {
         log.write(&run_record(
-            &r.job.experiment, r.job.dataset.name(), r.job.method, &r.job.artifact,
+            &r.job.experiment, r.job.dataset.name(), r.job.method.as_str(), &r.job.artifact,
             r.job.compression, r.job.expansion, r.test_error, r.val_error,
             r.stored_params, r.wall_s, r.steps_per_s,
         ))?;
@@ -353,14 +358,14 @@ pub fn run_experiment(experiment: &str, opt: &ReproOptions) -> Result<()> {
 /// Pivot result rows into the paper's table/figure layouts.
 pub fn pivot_tables(experiment: &str, rows: &[RunRow]) -> Vec<Table> {
     let method_cols = ["RER", "LRD", "NN", "DK", "HashNet", "HashNetDK"];
-    let pretty = |m: &str| -> &'static str {
+    let pretty = |m: Method| -> &'static str {
         match m {
-            "rer" => "RER",
-            "lrd" => "LRD",
-            "nn" => "NN",
-            "dk" => "DK",
-            "hashnet" => "HashNet",
-            _ => "HashNetDK",
+            Method::Rer => "RER",
+            Method::Lrd => "LRD",
+            Method::Nn => "NN",
+            Method::Dk => "DK",
+            Method::Hashnet => "HashNet",
+            Method::HashnetDk => "HashNetDK",
         }
     };
     match experiment {
@@ -459,11 +464,10 @@ mod tests {
         let opt = ReproOptions::default();
         let jobs = jobs_for("fig2", &opt).unwrap();
         for j in &jobs {
-            match j.method {
-                "dk" | "hashnet_dk" => {
-                    assert_eq!(j.teacher.as_deref(), Some("nn_3l_h100_o10_c1-1"));
-                }
-                _ => assert!(j.teacher.is_none()),
+            if j.method.uses_soft_targets() {
+                assert_eq!(j.teacher.as_deref(), Some("nn_3l_h100_o10_c1-1"));
+            } else {
+                assert!(j.teacher.is_none());
             }
         }
     }
@@ -473,7 +477,7 @@ mod tests {
         let job = Job {
             experiment: "fig2".into(),
             dataset: Kind::Mnist,
-            method: "hashnet",
+            method: Method::Hashnet,
             artifact: "hashnet_3l_h100_o10_c1-8".into(),
             compression: 0.125,
             expansion: None,

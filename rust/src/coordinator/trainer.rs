@@ -7,6 +7,8 @@
 //! split, test error reported for the best validation epoch.
 
 use crate::data::{Dataset, Kind, Split};
+use crate::model::{ModelBundle, ModelError, ModelSpec};
+use crate::nn::{Network, TrainHyper};
 use crate::runtime::{Graph, Hyper, ModelState, Runtime};
 use crate::tensor::Matrix;
 use crate::util::rng::Pcg32;
@@ -59,6 +61,17 @@ pub struct TrainResult {
     pub wall_s: f64,
     pub steps_per_s: f64,
     pub state: ModelState,
+    /// The model identity trained — with [`TrainResult::bundle`] this
+    /// makes every training run's output a self-describing artifact.
+    pub spec: ModelSpec,
+}
+
+impl TrainResult {
+    /// Package the trained parameters as a [`ModelBundle`] — the one
+    /// thing `--save` writes and `serve` loads.
+    pub fn bundle(&self) -> Result<ModelBundle, ModelError> {
+        ModelBundle::new(self.spec.clone(), self.state.params.clone())
+    }
 }
 
 /// Temperature-softened teacher probabilities for the train split.
@@ -153,7 +166,7 @@ pub fn run_with_data(
 
     let (train, val) = train_full.split_validation(0.2);
     let exe = rt.load(&cfg.artifact, Graph::Train)?;
-    let mut state = ModelState::init(&spec, cfg.seed);
+    let mut state = spec.init_state(cfg.seed);
     let mut rng = Pcg32::new(cfg.seed, 0xB0B);
 
     let t0 = Instant::now();
@@ -218,5 +231,103 @@ pub fn run_with_data(
         wall_s: wall,
         steps_per_s: steps as f64 / wall.max(1e-9),
         state: best_state,
+        spec: spec.to_model_spec(),
+    })
+}
+
+/// Train a [`ModelSpec`] with the **native** engine — no manifest, no
+/// PJRT, no HLO artifacts: the spec alone names the model, which is the
+/// point of the model subsystem. Same protocol as [`run_with_data`]
+/// (80/20 validation split, best-validation-epoch selection, optional
+/// early-stop patience); `cfg.artifact` is ignored in favor of
+/// `spec.name`. Dark-knowledge methods need the artifact path (the
+/// teacher pipeline), so they are rejected here.
+pub fn run_native(spec: &ModelSpec, cfg: &TrainConfig) -> Result<TrainResult> {
+    spec.validate()?;
+    if cfg.epochs == 0 {
+        return Err(anyhow!("need at least one epoch"));
+    }
+    if spec.method.uses_soft_targets() {
+        return Err(anyhow!(
+            "method '{}' needs teacher soft targets — train it through the artifact path",
+            spec.method
+        ));
+    }
+    let train_full = crate::data::generate(cfg.dataset, Split::Train, cfg.n_train, cfg.seed);
+    let test = crate::data::generate(cfg.dataset, Split::Test, cfg.n_test, cfg.seed);
+    if train_full.n_classes > spec.n_out() {
+        return Err(anyhow!(
+            "dataset {} has {} classes but spec '{}' outputs {}",
+            train_full.kind.name(),
+            train_full.n_classes,
+            spec.name,
+            spec.n_out()
+        ));
+    }
+    if spec.n_in() != train_full.images.cols {
+        return Err(anyhow!(
+            "dataset {} has {} features but spec '{}' takes {}",
+            train_full.kind.name(),
+            train_full.images.cols,
+            spec.name,
+            spec.n_in()
+        ));
+    }
+    let (train, val) = train_full.split_validation(0.2);
+
+    let mut net = Network::from_spec(spec)?;
+    let mut rng = Pcg32::new(cfg.seed, 0xB0B);
+    net.init(&mut rng);
+    let hyper = TrainHyper {
+        lr: cfg.hyper.lr,
+        momentum: cfg.hyper.momentum,
+        keep_prob: cfg.hyper.keep_prob,
+        lam: 1.0,
+        temp: cfg.hyper.temp,
+    };
+
+    let t0 = Instant::now();
+    let mut losses = Vec::with_capacity(cfg.epochs);
+    let mut best: Option<(f64, Vec<Vec<f32>>)> = None;
+    let mut stale = 0usize;
+    let steps_per_epoch = train.len().div_ceil(spec.batch.max(1)) as u64;
+    let mut steps = 0u64;
+    for epoch in 0..cfg.epochs {
+        let epoch_loss =
+            net.fit(&train.images, &train.labels, spec.batch.max(1), 1, &hyper, None, &mut rng);
+        losses.extend(epoch_loss);
+        steps += steps_per_epoch;
+        let v_err = net.error_rate(&val.images, &val.labels);
+        let improved = best.as_ref().map(|(b, _)| v_err < *b).unwrap_or(true);
+        if improved {
+            best = Some((v_err, net.layers.iter().map(|l| l.params.clone()).collect()));
+            stale = 0;
+        } else {
+            stale += 1;
+            if cfg.patience > 0 && stale >= cfg.patience && epoch + 1 < cfg.epochs {
+                break;
+            }
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let (val_error, best_params) = best.expect("at least one epoch");
+    for (layer, p) in net.layers.iter_mut().zip(best_params) {
+        layer.params = p;
+    }
+    let test_error = net.error_rate(&test.images, &test.labels);
+
+    let bundle = net.to_bundle(spec)?;
+    Ok(TrainResult {
+        artifact: spec.name.clone(),
+        dataset: train_full.kind.name(),
+        test_error,
+        val_error,
+        train_losses: losses,
+        stored_params: spec.stored_params(),
+        virtual_params: spec.virtual_params(),
+        wall_s: wall,
+        steps_per_s: steps as f64 / wall.max(1e-9),
+        state: ModelState::from_bundle(&bundle),
+        spec: spec.clone(),
     })
 }

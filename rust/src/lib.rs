@@ -16,6 +16,11 @@
 //!   for cross-validation ([`nn`]), and serves compressed models with a
 //!   dynamic batcher ([`serve`]).
 //!
+//! One model identity spans all of it: the [`model`] subsystem's typed
+//! `ModelSpec` plus the versioned single-file `ModelBundle` — what
+//! `train` saves, `compress` produces and `serve` (hot-)loads; the
+//! manifest/checkpoint pair in [`runtime`] remains as compat shims.
+//!
 //! Python never runs on the request path: after `make artifacts` the
 //! binary is self-contained.
 //!
@@ -30,6 +35,7 @@ pub mod compress;
 pub mod coordinator;
 pub mod data;
 pub mod hash;
+pub mod model;
 pub mod nn;
 pub mod runtime;
 pub mod serve;

@@ -1,44 +1,101 @@
 //! `hashednets` CLI — the Layer-3 entry point.
 //!
 //! Subcommands:
-//!   train    — train one artifact on one dataset, report test error
-//!   eval     — evaluate a checkpoint on a dataset split
+//!   train    — train a model and save it as a self-describing bundle.
+//!              Two sources for the model identity:
+//!                --config <artifact>        (manifest + PJRT artifact path)
+//!                --method/--dims/--budgets  (pure ModelSpec, native engine,
+//!                                            no artifacts required)
+//!   eval     — evaluate a bundle (--bundle m.hnb, native) or an
+//!              artifact + checkpoint (--config/--checkpoint, PJRT)
 //!   repro    — regenerate a paper experiment (fig2|fig3|table1|table2|fig4)
 //!   hpo      — random-search hyperparameters for an artifact
-//!   serve    — run the batched inference server on one or more
-//!              checkpoints (--config a,b --backend native|runtime|auto
-//!              --workers N)
-//!   compress — compress a trained dense checkpoint into a HashedNet
-//!   list     — list artifacts in the manifest
+//!   serve    — batched inference server over bundles (--bundle a.hnb,b.hnb)
+//!              and/or manifest artifacts (--config a,b); hot-(re)load
+//!              models at runtime via {"cmd":"load"|"unload"|"reload"}
+//!   compress — dense → HashedNet in one call (compress_network):
+//!              --bundle dense.hnb --budgets k0,k1 (or the manifest pair
+//!              --from nn_… --to hashnet_… --checkpoint ck)
+//!   list     — manifest artifacts + *.hnb bundles with method, storage,
+//!              compression ratio and bundle version
 //!   selftest — artifact ↔ native engine cross-validation
+//!   smoke    — tiny end-to-end train → bundle → serve → hot-load loop
 //!
-//! Run `hashednets <cmd> --help-args` for per-command options.
+//! Unknown `--options` warn on stderr; add `--strict` to make them
+//! errors.
 
 use anyhow::{anyhow, Result};
-use hashednets::coordinator::{hpo, native, repro, trainer};
+use hashednets::coordinator::{hpo, repro, trainer};
 use hashednets::data::{generate, Kind, Split};
-use hashednets::runtime::{Graph, Hyper, ModelState, Runtime};
-use hashednets::serve::{serve, Backend, ModelConfig, ServeOptions};
+use hashednets::model::{Method, ModelBundle, ModelSpec, BUNDLE_VERSION};
+use hashednets::nn::Network;
+use hashednets::runtime::{Graph, Hyper, Manifest, ModelState, Runtime};
+use hashednets::serve::{serve, Backend, Client, ModelConfig, ServeOptions, Server};
 use hashednets::util::args::Args;
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+
+const KNOWN_TRAIN: &[&str] = &[
+    "config", "artifacts", "dataset", "n-train", "n-test", "epochs", "lr", "momentum",
+    "keep-prob", "lam", "temp", "seed", "teacher", "patience", "save", "method", "dims",
+    "budgets", "compression", "name", "seed-base", "batch", "spec-json", "strict",
+];
+const KNOWN_EVAL: &[&str] =
+    &["config", "artifacts", "checkpoint", "bundle", "dataset", "n-test", "seed", "strict"];
+const KNOWN_REPRO: &[&str] = &[
+    "experiment", "artifacts", "results", "hidden", "exp-base", "n-train", "n-test", "epochs",
+    "teacher-epochs", "workers", "seed", "scale", "strict",
+];
+const KNOWN_HPO: &[&str] =
+    &["config", "artifacts", "dataset", "n-train", "epochs", "trials", "seed", "strict"];
+const KNOWN_SERVE: &[&str] = &[
+    "config", "bundle", "checkpoint", "artifacts", "addr", "backend", "workers",
+    "max-wait-us", "max-requests", "strict",
+];
+const KNOWN_COMPRESS: &[&str] =
+    &["from", "to", "checkpoint", "artifacts", "save", "bundle", "budgets", "name", "strict"];
+const KNOWN_LIST: &[&str] = &["artifacts", "strict"];
+const KNOWN_SELFTEST: &[&str] = &["config", "artifacts", "strict"];
+const KNOWN_SMOKE: &[&str] = &["dir", "keep", "strict"];
 
 fn main() -> Result<()> {
     let args = Args::parse(std::env::args().skip(1));
-    match args.subcommand.as_deref() {
-        Some("train") => cmd_train(&args),
-        Some("eval") => cmd_eval(&args),
-        Some("repro") => cmd_repro(&args),
-        Some("hpo") => cmd_hpo(&args),
-        Some("serve") => cmd_serve(&args),
-        Some("compress") => cmd_compress(&args),
-        Some("list") => cmd_list(&args),
-        Some("selftest") => cmd_selftest(&args),
+    type Cmd = fn(&Args) -> Result<()>;
+    let (cmd, known): (Cmd, &[&str]) = match args.subcommand.as_deref() {
+        Some("train") => (cmd_train, KNOWN_TRAIN),
+        Some("eval") => (cmd_eval, KNOWN_EVAL),
+        Some("repro") => (cmd_repro, KNOWN_REPRO),
+        Some("hpo") => (cmd_hpo, KNOWN_HPO),
+        Some("serve") => (cmd_serve, KNOWN_SERVE),
+        Some("compress") => (cmd_compress, KNOWN_COMPRESS),
+        Some("list") => (cmd_list, KNOWN_LIST),
+        Some("selftest") => (cmd_selftest, KNOWN_SELFTEST),
+        Some("smoke") => (cmd_smoke, KNOWN_SMOKE),
         _ => {
-            eprintln!("usage: hashednets <train|eval|repro|hpo|serve|compress|list|selftest> [--options]");
+            eprintln!(
+                "usage: hashednets <train|eval|repro|hpo|serve|compress|list|selftest|smoke> [--options]"
+            );
             eprintln!("see rust/src/main.rs docs for the full flag list");
-            Ok(())
+            return Ok(());
         }
+    };
+    check_flags(&args, known)?;
+    cmd(&args)
+}
+
+/// Warn (or, with `--strict`, error) on options no subcommand handler
+/// will ever read — `Args::parse` itself accepts anything.
+fn check_flags(args: &Args, known: &[&str]) -> Result<()> {
+    let unknown = args.unknown_keys(known);
+    if unknown.is_empty() {
+        return Ok(());
     }
+    if args.has_flag("strict") {
+        return Err(anyhow!("unknown option(s): --{}", unknown.join(", --")));
+    }
+    for k in &unknown {
+        eprintln!("warning: ignoring unknown option --{k} (use --strict to make this an error)");
+    }
+    Ok(())
 }
 
 fn artifacts_dir(args: &Args) -> PathBuf {
@@ -60,11 +117,79 @@ fn hyper_from(args: &Args, base: Hyper) -> Hyper {
     }
 }
 
+fn parse_usize_list(s: &str) -> Result<Vec<usize>> {
+    s.split(',')
+        .map(|t| {
+            t.trim()
+                .parse::<usize>()
+                .map_err(|e| anyhow!("bad number '{}': {e}", t.trim()))
+        })
+        .collect()
+}
+
+/// Build a [`ModelSpec`] straight from CLI options — the manifest-free
+/// path: `--spec-json '{…}'`, or `--method --dims [--budgets]`
+/// (budgets default to `--compression` × the virtual size per layer).
+fn spec_from_args(args: &Args) -> Result<ModelSpec> {
+    if let Some(text) = args.get("spec-json") {
+        return Ok(ModelSpec::from_json_str(text)?);
+    }
+    let method = Method::parse(args.get_or("method", "hashnet"))?;
+    let dims = parse_usize_list(args.get("dims").ok_or_else(|| {
+        anyhow!("--dims 784,100,10 required (or --config <artifact> / --spec-json)")
+    })?)?;
+    if dims.len() < 2 {
+        return Err(anyhow!("--dims needs at least input and output widths"));
+    }
+    let budgets = match args.get("budgets") {
+        Some(b) => parse_usize_list(b)?,
+        None => {
+            let c = args.get_f32("compression", 0.125) as f64;
+            (0..dims.len() - 1)
+                .map(|l| {
+                    let (m, n) = (dims[l], dims[l + 1]);
+                    match method {
+                        Method::Nn | Method::Dk => n * m + n,
+                        _ => ((c * (n * (m + 1)) as f64).round() as usize).max(1),
+                    }
+                })
+                .collect()
+        }
+    };
+    let name = match args.get("name") {
+        Some(n) => n.to_string(),
+        None => format!(
+            "{method}_{}",
+            dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x")
+        ),
+    };
+    Ok(ModelSpec::new(
+        name,
+        method,
+        dims,
+        budgets,
+        args.get_u64("seed-base", hashednets::hash::DEFAULT_SEED_BASE as u64) as u32,
+        args.get_usize("batch", 50),
+    )?)
+}
+
+fn save_bundle(bundle: &ModelBundle, out: &str) -> Result<()> {
+    bundle.save(Path::new(out))?;
+    println!(
+        "model bundle -> {out} ({} stored params, {} B payload, format v{BUNDLE_VERSION})",
+        bundle.n_params(),
+        bundle.param_bytes()
+    );
+    Ok(())
+}
+
 fn cmd_train(args: &Args) -> Result<()> {
-    let artifact = args.get("config").ok_or_else(|| anyhow!("--config <artifact> required"))?;
+    let Some(artifact) = args.get("config") else {
+        return cmd_train_native(args);
+    };
     let rt = Runtime::open(artifacts_dir(args))?;
     let spec = rt.manifest.get(artifact).ok_or_else(|| anyhow!("unknown artifact"))?.clone();
-    let method_default = repro::default_hyper(&spec.method);
+    let method_default = repro::default_hyper(spec.method);
     let dataset = dataset_kind(args)?;
     let cfg = trainer::TrainConfig {
         artifact: artifact.to_string(),
@@ -97,17 +222,77 @@ fn cmd_train(args: &Args) -> Result<()> {
         res.stored_params, res.wall_s, res.steps_per_s
     );
     if let Some(out) = args.get("save") {
-        res.state.save(std::path::Path::new(out))?;
-        println!("checkpoint -> {out} ({} bytes)", res.state.storage_bytes());
+        save_bundle(&res.bundle()?, out)?;
+    }
+    Ok(())
+}
+
+/// `train` without `--config`: the model identity comes entirely from
+/// the CLI spec and training runs on the native engine — spec to
+/// checkpointed bundle with zero artifacts.
+fn cmd_train_native(args: &Args) -> Result<()> {
+    let spec = spec_from_args(args)?;
+    let dataset = dataset_kind(args)?;
+    let cfg = trainer::TrainConfig {
+        artifact: spec.name.clone(),
+        dataset,
+        n_train: args.get_usize("n-train", 3000),
+        n_test: args.get_usize("n-test", 2000),
+        epochs: args.get_usize("epochs", 12),
+        hyper: hyper_from(args, Hyper { lam: 1.0, ..Hyper::default() }),
+        seed: args.get_u64("seed", 0x5EED),
+        teacher: None,
+        patience: args.get_usize("patience", 0),
+    };
+    let res = trainer::run_native(&spec, &cfg)?;
+    println!(
+        "{} [native] on {}: test error {:.2}% (val {:.2}%), {} stored / {} virtual params, {:.1}s",
+        spec.name,
+        dataset.name(),
+        res.test_error * 100.0,
+        res.val_error * 100.0,
+        res.stored_params,
+        res.virtual_params,
+        res.wall_s
+    );
+    if let Some(out) = args.get("save") {
+        save_bundle(&res.bundle()?, out)?;
     }
     Ok(())
 }
 
 fn cmd_eval(args: &Args) -> Result<()> {
-    let artifact = args.get("config").ok_or_else(|| anyhow!("--config required"))?;
+    if let Some(bpath) = args.get("bundle") {
+        let bundle = ModelBundle::load(Path::new(bpath))?;
+        let net = Network::from_bundle(&bundle)?;
+        let ds = generate(
+            dataset_kind(args)?,
+            Split::Test,
+            args.get_usize("n-test", 2000),
+            args.get_u64("seed", 0x5EED),
+        );
+        if net.n_in() != ds.images.cols {
+            return Err(anyhow!(
+                "bundle '{}' takes {} inputs, dataset rows have {}",
+                bundle.spec.name,
+                net.n_in(),
+                ds.images.cols
+            ));
+        }
+        let err = net.error_rate(&ds.images, &ds.labels);
+        println!(
+            "{} (bundle v{}) on {}: test error {:.2}% [native engine]",
+            bundle.spec.name,
+            bundle.version,
+            ds.kind.name(),
+            err * 100.0
+        );
+        return Ok(());
+    }
+    let artifact = args.get("config").ok_or_else(|| anyhow!("--bundle or --config required"))?;
     let ckpt = args.get("checkpoint").ok_or_else(|| anyhow!("--checkpoint required"))?;
     let rt = Runtime::open(artifacts_dir(args))?;
-    let state = ModelState::load(std::path::Path::new(ckpt))?;
+    let state = ModelState::load_any(Path::new(ckpt))?;
     let ds = generate(dataset_kind(args)?, Split::Test, args.get_usize("n-test", 2000),
                       args.get_u64("seed", 0x5EED));
     let err = trainer::evaluate(&rt, artifact, &state, &ds)?;
@@ -164,33 +349,44 @@ fn cmd_hpo(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    // --config takes a comma-separated artifact list (one process, many
-    // models); --checkpoint matches positionally ("-" = seed init).
-    let configs = args.get("config").ok_or_else(|| anyhow!("--config <artifact[,artifact…]> required"))?;
-    let ckpts: Vec<&str> = args.get("checkpoint").map(|c| c.split(',').collect()).unwrap_or_default();
-    let n_models = configs.split(',').count();
-    // positional matching is silent-failure-prone: demand one entry per
-    // model (seed-init a model explicitly with "-") so nobody serves
-    // random weights because a list was one short
-    if !ckpts.is_empty() && ckpts.len() != n_models {
-        return Err(anyhow!(
-            "--checkpoint lists {} entries for {} models; give one per model (use '-' for seed init)",
-            ckpts.len(),
-            n_models
-        ));
+    // Models come from bundle files (--bundle a.hnb,b.hnb — fully
+    // self-describing, no manifest) and/or manifest artifacts
+    // (--config a,b with --checkpoint matching positionally, "-" =
+    // seed init). More can be hot-loaded later via {"cmd":"load"}.
+    let mut models: Vec<ModelConfig> = Vec::new();
+    if let Some(bundles) = args.get("bundle") {
+        for p in bundles.split(',') {
+            models.push(ModelConfig::bundle(p.trim()));
+        }
     }
-    let models: Vec<ModelConfig> = configs
-        .split(',')
-        .enumerate()
-        .map(|(i, artifact)| {
+    if let Some(configs) = args.get("config") {
+        let ckpts: Vec<&str> =
+            args.get("checkpoint").map(|c| c.split(',').collect()).unwrap_or_default();
+        let n_models = configs.split(',').count();
+        // positional matching is silent-failure-prone: demand one entry per
+        // model (seed-init a model explicitly with "-") so nobody serves
+        // random weights because a list was one short
+        if !ckpts.is_empty() && ckpts.len() != n_models {
+            return Err(anyhow!(
+                "--checkpoint lists {} entries for {} models; give one per model (use '-' for seed init)",
+                ckpts.len(),
+                n_models
+            ));
+        }
+        for (i, artifact) in configs.split(',').enumerate() {
             let mut mc = ModelConfig::new(artifact.trim());
             let ck = ckpts.get(i).copied().unwrap_or("");
             if !ck.is_empty() && ck != "-" {
                 mc = mc.with_checkpoint(PathBuf::from(ck));
             }
-            mc
-        })
-        .collect();
+            models.push(mc);
+        }
+    }
+    if models.is_empty() {
+        return Err(anyhow!(
+            "--bundle <file.hnb[,…]> or --config <artifact[,…]> required"
+        ));
+    }
     let backend_name = args.get_or("backend", "auto");
     let backend = Backend::parse(backend_name)
         .ok_or_else(|| anyhow!("--backend must be native|runtime|auto, got '{backend_name}'"))?;
@@ -206,55 +402,127 @@ fn cmd_serve(args: &Args) -> Result<()> {
 }
 
 fn cmd_compress(args: &Args) -> Result<()> {
-    // Compress a dense checkpoint (nn artifact) into a hashed artifact's
-    // parameter layout via bucket-averaging (compress/ module).
-    let from = args.get("from").ok_or_else(|| anyhow!("--from <dense artifact> required"))?;
+    let out = args.get_or("save", "compressed.hnb");
+
+    // One-call path: a dense bundle + target budgets, nothing else.
+    if let Some(bpath) = args.get("bundle") {
+        let budgets = parse_usize_list(
+            args.get("budgets")
+                .ok_or_else(|| anyhow!("--budgets k0,k1,… required with --bundle"))?,
+        )?;
+        let bundle = ModelBundle::load(Path::new(bpath))?;
+        if bundle.spec.method != Method::Nn {
+            return Err(anyhow!(
+                "--bundle must be a dense (nn) model, got '{}'",
+                bundle.spec.method
+            ));
+        }
+        let dnet = Network::from_bundle(&bundle)?;
+        let name = args.get_or("name", "hashnet_compressed").to_string();
+        let hashed = hashednets::compress::compress_network(&dnet, &budgets, name)?;
+        for (l, err) in hashednets::compress::reconstruction_report(&dnet, &hashed)?
+            .iter()
+            .enumerate()
+        {
+            println!("layer {l}: -> {} weights, recon error {err:.3}", budgets[l]);
+        }
+        return save_bundle(&hashed, out);
+    }
+
+    // Manifest pair path (compat): dims + budgets come from the target
+    // hashnet artifact, parameters from a dense checkpoint/bundle.
+    let from = args.get("from").ok_or_else(|| {
+        anyhow!("--bundle <dense.hnb> --budgets k0,… — or --from <nn artifact> --to <hashnet artifact>")
+    })?;
     let to = args.get("to").ok_or_else(|| anyhow!("--to <hashnet artifact> required"))?;
     let ckpt = args.get("checkpoint").ok_or_else(|| anyhow!("--checkpoint required"))?;
-    let out = args.get_or("save", "compressed.ckpt");
-    let rt = Runtime::open(artifacts_dir(args))?;
-    let dspec = rt.manifest.get(from).ok_or_else(|| anyhow!("unknown artifact {from}"))?;
-    let hspec = rt.manifest.get(to).ok_or_else(|| anyhow!("unknown artifact {to}"))?;
-    if dspec.method != "nn" || !hspec.method.starts_with("hashnet") {
+    let manifest = Manifest::load(&artifacts_dir(args).join("manifest.json"))?;
+    let dspec = manifest.get(from).ok_or_else(|| anyhow!("unknown artifact {from}"))?;
+    let hspec = manifest.get(to).ok_or_else(|| anyhow!("unknown artifact {to}"))?;
+    if dspec.method != Method::Nn || !matches!(hspec.method, Method::Hashnet | Method::HashnetDk)
+    {
         return Err(anyhow!("--from must be an nn artifact and --to a hashnet artifact"));
     }
     if dspec.dims != hspec.dims {
         return Err(anyhow!("dims mismatch: {:?} vs {:?}", dspec.dims, hspec.dims));
     }
-    let dstate = ModelState::load(std::path::Path::new(ckpt))?;
-    let mut dnet = native::network_from_spec(dspec);
-    native::load_params(&mut dnet, dspec, &dstate);
-    let mut hstate = ModelState::init(hspec, 0);
-    for (l, layer) in dnet.layers.iter().enumerate() {
-        // dense V (n×m) + b -> (n×(m+1)) with bias column appended
-        let v = layer.virtual_matrix();
-        let nm = layer.n * layer.m;
-        let bias = layer.params[nm..].to_vec();
-        let mut vb = hashednets::tensor::Matrix::zeros(layer.n, layer.m + 1);
-        for i in 0..layer.n {
-            vb.row_mut(i)[..layer.m].copy_from_slice(v.row(i));
-            vb.row_mut(i)[layer.m] = bias[i];
-        }
-        let k = hspec.budgets[l];
-        hstate.params[l] =
-            hashednets::compress::compress_dense(&vb, k, l as u32, hspec.seed_base);
-        let err = hashednets::compress::reconstruction_error(&vb, k, l as u32, hspec.seed_base);
-        println!("layer {l}: {} -> {} weights, recon error {:.3}", vb.data.len(), k, err);
+    if dspec.seed_base != hspec.seed_base {
+        return Err(anyhow!(
+            "seed_base mismatch: {} vs {}",
+            dspec.seed_base,
+            hspec.seed_base
+        ));
     }
-    hstate.save(std::path::Path::new(out))?;
-    println!("compressed checkpoint -> {out} ({} bytes)", hstate.storage_bytes());
-    Ok(())
+    let state = ModelState::load_any(Path::new(ckpt))?;
+    let dnet = Network::from_bundle(&state.to_bundle(dspec)?)?;
+    let mut hashed =
+        hashednets::compress::compress_network(&dnet, &hspec.budgets, hspec.name.clone())?;
+    hashed.spec.batch = hspec.batch.max(1);
+    for (l, err) in hashednets::compress::reconstruction_report(&dnet, &hashed)?
+        .iter()
+        .enumerate()
+    {
+        println!("layer {l}: -> {} weights, recon error {err:.3}", hspec.budgets[l]);
+    }
+    save_bundle(&hashed, out)
 }
 
 fn cmd_list(args: &Args) -> Result<()> {
-    let rt = Runtime::open(artifacts_dir(args))?;
-    println!("{:<40} {:>8} {:>10} {:>9}", "artifact", "stored", "virtual", "ratio");
-    for a in rt.manifest.iter() {
-        println!(
-            "{:<40} {:>8} {:>10} {:>9.4}",
-            a.name, a.stored_params, a.virtual_params,
-            a.stored_params as f64 / a.virtual_params as f64
-        );
+    let dir = artifacts_dir(args);
+    let header = format!(
+        "{:<40} {:>10} {:>8} {:>10} {:>9} {:>7}",
+        "model", "method", "stored", "virtual", "ratio", "bundle"
+    );
+    let mut printed = false;
+    let manifest_path = dir.join("manifest.json");
+    if manifest_path.exists() {
+        let manifest = Manifest::load(&manifest_path)?;
+        println!("manifest artifacts in {}:", dir.display());
+        println!("{header}");
+        for a in manifest.iter() {
+            let spec = a.to_model_spec();
+            println!(
+                "{:<40} {:>10} {:>8} {:>10} {:>9.4} {:>7}",
+                spec.name,
+                spec.method.as_str(),
+                spec.stored_params(),
+                spec.virtual_params(),
+                spec.compression(),
+                format!("v{BUNDLE_VERSION}")
+            );
+        }
+        printed = true;
+    }
+    let mut bundles: Vec<PathBuf> = std::fs::read_dir(&dir)
+        .map(|rd| {
+            rd.flatten()
+                .map(|e| e.path())
+                .filter(|p| p.extension().map(|e| e == "hnb").unwrap_or(false))
+                .collect()
+        })
+        .unwrap_or_default();
+    bundles.sort();
+    if !bundles.is_empty() {
+        println!("model bundles in {}:", dir.display());
+        println!("{header}");
+        for path in bundles {
+            match ModelBundle::load(&path) {
+                Ok(b) => println!(
+                    "{:<40} {:>10} {:>8} {:>10} {:>9.4} {:>7}",
+                    format!("{} ({})", b.spec.name, path.file_name().unwrap().to_string_lossy()),
+                    b.spec.method.as_str(),
+                    b.spec.stored_params(),
+                    b.spec.virtual_params(),
+                    b.spec.compression(),
+                    format!("v{}", b.version)
+                ),
+                Err(e) => println!("{:<40} unreadable: {e}", path.display()),
+            }
+        }
+        printed = true;
+    }
+    if !printed {
+        println!("no manifest.json or *.hnb bundles in {}", dir.display());
     }
     Ok(())
 }
@@ -265,12 +533,11 @@ fn cmd_selftest(args: &Args) -> Result<()> {
     let rt = Runtime::open(artifacts_dir(args))?;
     let name = args.get_or("config", "hashnet_3l_h32_o10_c1-4");
     let spec = rt.manifest.get(name).ok_or_else(|| anyhow!("unknown artifact {name}"))?.clone();
-    let state = ModelState::init(&spec, 7);
+    let state = spec.init_state(7);
     let exe = rt.load(name, Graph::Predict)?;
     let ds = generate(Kind::Basic, Split::Test, spec.batch, 3);
     let artifact_logits = exe.predict(&state, &ds.images)?;
-    let mut net = native::network_from_spec(&spec);
-    native::load_params(&mut net, &spec, &state);
+    let net = Network::from_bundle(&state.to_bundle(&spec)?)?;
     let native_logits = net.predict(&ds.images);
     let mut max_d = 0f32;
     for (a, b) in artifact_logits.data.iter().zip(&native_logits.data) {
@@ -283,4 +550,110 @@ fn cmd_selftest(args: &Args) -> Result<()> {
     } else {
         Err(anyhow!("stacks disagree (max diff {max_d})"))
     }
+}
+
+/// Tiny end-to-end loop on the native stack, no artifacts required:
+/// train a HashedNet from a pure spec, bundle it, serve the bundle,
+/// classify over TCP, train a second model and hot-load it into the
+/// running server, reload, unload, shut down. `make smoke` runs this.
+fn cmd_smoke(args: &Args) -> Result<()> {
+    let dir = match args.get("dir") {
+        Some(d) => PathBuf::from(d),
+        None => std::env::temp_dir().join(format!("hn_smoke_{}", std::process::id())),
+    };
+    std::fs::create_dir_all(&dir)?;
+
+    println!("[1/5] train: hashnet 784-16-10 at ~1/32, native engine");
+    let spec_a = ModelSpec::new(
+        "smoke_hashnet",
+        Method::Hashnet,
+        vec![784, 16, 10],
+        vec![400, 60],
+        hashednets::hash::DEFAULT_SEED_BASE,
+        16,
+    )?;
+    let cfg = trainer::TrainConfig {
+        artifact: spec_a.name.clone(),
+        dataset: Kind::Basic,
+        n_train: 600,
+        n_test: 300,
+        epochs: 3,
+        hyper: Hyper { lr: 0.08, keep_prob: 1.0, lam: 1.0, ..Hyper::default() },
+        seed: 7,
+        teacher: None,
+        patience: 0,
+    };
+    let res = trainer::run_native(&spec_a, &cfg)?;
+    let path_a = dir.join("smoke_hashnet.hnb");
+    let bundle_a = res.bundle()?;
+    bundle_a.save(&path_a)?;
+    println!(
+        "      test error {:.2}%, bundle {} B -> {}",
+        res.test_error * 100.0,
+        bundle_a.param_bytes(),
+        path_a.display()
+    );
+
+    println!("[2/5] serve: bundle on an ephemeral port, 2 workers");
+    let srv = Server::bind(ServeOptions {
+        artifacts_dir: dir.clone(),
+        models: vec![ModelConfig::bundle(&path_a)],
+        addr: "127.0.0.1:0".into(),
+        backend: Backend::Native,
+        workers: 2,
+        ..Default::default()
+    })?;
+    let addr = srv.local_addr().to_string();
+    let server = std::thread::spawn(move || srv.run());
+
+    println!("[3/5] query: 32 live classifications over TCP");
+    let test = generate(Kind::Basic, Split::Test, 32, 9);
+    let mut client = Client::connect(&addr)?;
+    let mut correct = 0;
+    for i in 0..32 {
+        let (class, probs, _lat) = client.classify(test.images.row(i))?;
+        if probs.len() != 10 {
+            return Err(anyhow!("expected 10 probs, got {}", probs.len()));
+        }
+        if class == test.labels[i] as usize {
+            correct += 1;
+        }
+    }
+    println!("      live accuracy {correct}/32");
+
+    println!("[4/5] hot-load: train a dense model, {{\"cmd\":\"load\"}} it, reload, unload");
+    let spec_b = ModelSpec::new(
+        "smoke_dense",
+        Method::Nn,
+        vec![784, 8, 10],
+        vec![6280, 90],
+        hashednets::hash::DEFAULT_SEED_BASE,
+        16,
+    )?;
+    let res_b = trainer::run_native(&spec_b, &cfg)?;
+    let path_b = dir.join("smoke_dense.hnb");
+    res_b.bundle()?.save(&path_b)?;
+    client.load_model(path_b.to_str().unwrap())?;
+    let (_, probs_b, _) = client.classify_model(Some("smoke_dense"), test.images.row(0))?;
+    if probs_b.len() != 10 {
+        return Err(anyhow!("hot-loaded model returned {} probs", probs_b.len()));
+    }
+    // the original model keeps serving after the load
+    client.classify_model(Some("smoke_hashnet"), test.images.row(1))?;
+    client.reload()?;
+    client.classify_model(Some("smoke_dense"), test.images.row(2))?;
+    client.unload_model("smoke_dense")?;
+    if client.classify_model(Some("smoke_dense"), test.images.row(3)).is_ok() {
+        return Err(anyhow!("unloaded model still serving"));
+    }
+    client.classify_model(Some("smoke_hashnet"), test.images.row(4))?;
+
+    println!("[5/5] shutdown");
+    client.shutdown()?;
+    server.join().unwrap()?;
+    if !args.has_flag("keep") && args.get("dir").is_none() {
+        std::fs::remove_dir_all(&dir).ok();
+    }
+    println!("smoke OK");
+    Ok(())
 }

@@ -1,0 +1,329 @@
+//! [`ModelBundle`]: the versioned single-file model artifact, and the
+//! [`Network`] construction/persistence glue
+//! ([`Network::from_spec`] / [`Network::from_bundle`] /
+//! [`Network::to_bundle`]).
+//!
+//! ## File format (version 1)
+//!
+//! ```text
+//! magic    4 B   "HNMB"
+//! version  4 B   u32 LE (currently 1)
+//! spec_len 4 B   u32 LE
+//! spec     …     ModelSpec as UTF-8 JSON (deterministic key order)
+//! n_tens   4 B   u32 LE
+//! tensors  …     per tensor: u32 LE length + length × f32 LE
+//! checksum 4 B   u32 LE — xxh32 over every preceding byte
+//! ```
+//!
+//! Tensors use the artifact layout ([`ModelSpec::param_layout`]): dense
+//! layers store `[W, b]` as two tensors, everything else one tensor —
+//! bit-identical to what a `runtime::ModelState` checkpoint holds, so
+//! the legacy formats convert losslessly.
+//!
+//! [`ModelBundle::load`] is the trust boundary: it verifies magic,
+//! version, structure, checksum, spec validity and tensor shapes, and
+//! reports each failure as a distinct [`ModelError`]. `save` writes the
+//! struct as-is (fields are public so tests can construct corrupt
+//! bundles deliberately).
+
+use super::{ModelError, ModelSpec};
+use crate::hash::xxh32_bytes;
+use crate::nn::{LayerKind, Network};
+use std::path::Path;
+
+/// Current bundle format version. Readers accept any version `<=` this
+/// and reject newer files with [`ModelError::FutureVersion`].
+pub const BUNDLE_VERSION: u32 = 1;
+
+const MAGIC: &[u8; 4] = b"HNMB";
+const CHECKSUM_SEED: u32 = 0x4D42;
+
+/// One complete, self-describing model: spec + parameter tensors.
+#[derive(Debug, Clone)]
+pub struct ModelBundle {
+    pub spec: ModelSpec,
+    /// Parameter tensors in [`ModelSpec::param_layout`] order.
+    pub params: Vec<Vec<f32>>,
+    /// Format version this bundle was read as (== [`BUNDLE_VERSION`]
+    /// for freshly built bundles).
+    pub version: u32,
+}
+
+impl ModelBundle {
+    /// Build a bundle, validating that `params` matches the spec's
+    /// layout.
+    pub fn new(spec: ModelSpec, params: Vec<Vec<f32>>) -> Result<ModelBundle, ModelError> {
+        spec.validate()?;
+        let b = ModelBundle { spec, params, version: BUNDLE_VERSION };
+        b.check_shapes()?;
+        Ok(b)
+    }
+
+    /// Verify the tensors against the spec's layout.
+    pub fn check_shapes(&self) -> Result<(), ModelError> {
+        let expect = self.spec.param_layout();
+        let got: Vec<usize> = self.params.iter().map(Vec::len).collect();
+        if got != expect {
+            return Err(ModelError::ShapeMismatch(format!(
+                "model '{}' ({}, dims {:?}) expects tensor lengths {:?}, got {:?}",
+                self.spec.name, self.spec.method, self.spec.dims, expect, got
+            )));
+        }
+        Ok(())
+    }
+
+    /// Total stored f32 count across tensors.
+    pub fn n_params(&self) -> usize {
+        self.params.iter().map(Vec::len).sum()
+    }
+
+    /// On-disk payload size of the parameters alone.
+    pub fn param_bytes(&self) -> usize {
+        4 * self.n_params()
+    }
+
+    // -- serialization ---------------------------------------------------
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let spec_json = self.spec.to_json_string();
+        let mut out = Vec::with_capacity(24 + spec_json.len() + self.param_bytes());
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&BUNDLE_VERSION.to_le_bytes());
+        out.extend_from_slice(&(spec_json.len() as u32).to_le_bytes());
+        out.extend_from_slice(spec_json.as_bytes());
+        out.extend_from_slice(&(self.params.len() as u32).to_le_bytes());
+        for p in &self.params {
+            out.extend_from_slice(&(p.len() as u32).to_le_bytes());
+            for v in p {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        let sum = xxh32_bytes(&out, CHECKSUM_SEED);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    pub fn from_bytes(bytes: &[u8]) -> Result<ModelBundle, ModelError> {
+        let read_u32 = |off: usize, what: &'static str| -> Result<u32, ModelError> {
+            bytes
+                .get(off..off + 4)
+                .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+                .ok_or(ModelError::Truncated(what))
+        };
+        if bytes.len() < 4 {
+            return Err(ModelError::Truncated("magic"));
+        }
+        if &bytes[..4] != MAGIC {
+            return Err(ModelError::BadMagic);
+        }
+        let version = read_u32(4, "version")?;
+        if version > BUNDLE_VERSION {
+            return Err(ModelError::FutureVersion { found: version, supported: BUNDLE_VERSION });
+        }
+        let spec_len = read_u32(8, "spec length")? as usize;
+        // everything below the trailing checksum word is the body
+        let body_end = bytes
+            .len()
+            .checked_sub(4)
+            .filter(|&e| e >= 12)
+            .ok_or(ModelError::Truncated("checksum"))?;
+        let mut off = 12;
+        if off + spec_len > body_end {
+            return Err(ModelError::Truncated("spec json"));
+        }
+        let spec_bytes = &bytes[off..off + spec_len];
+        off += spec_len;
+        if off + 4 > body_end {
+            return Err(ModelError::Truncated("tensor count"));
+        }
+        let n_tensors = read_u32(off, "tensor count")? as usize;
+        off += 4;
+        // every tensor needs at least its 4-byte length word, so a
+        // count beyond this is lying — reject before trusting it with
+        // an allocation
+        if n_tensors > (body_end - off) / 4 {
+            return Err(ModelError::Truncated("tensor count"));
+        }
+        let mut params = Vec::with_capacity(n_tensors);
+        for _ in 0..n_tensors {
+            if off + 4 > body_end {
+                return Err(ModelError::Truncated("tensor length"));
+            }
+            let len = read_u32(off, "tensor length")? as usize;
+            off += 4;
+            let byte_len = len.checked_mul(4).ok_or(ModelError::Truncated("tensor data"))?;
+            if off + byte_len > body_end {
+                return Err(ModelError::Truncated("tensor data"));
+            }
+            let mut v = Vec::with_capacity(len);
+            for i in 0..len {
+                let at = off + 4 * i;
+                v.push(f32::from_le_bytes(bytes[at..at + 4].try_into().unwrap()));
+            }
+            off += byte_len;
+            params.push(v);
+        }
+        if off != body_end {
+            return Err(ModelError::InvalidSpec(format!(
+                "{} trailing bytes after tensors",
+                body_end - off
+            )));
+        }
+        let stored = read_u32(body_end, "checksum")?;
+        let computed = xxh32_bytes(&bytes[..body_end], CHECKSUM_SEED);
+        if stored != computed {
+            return Err(ModelError::BadChecksum { stored, computed });
+        }
+        let spec_text = std::str::from_utf8(spec_bytes)
+            .map_err(|_| ModelError::InvalidSpec("spec json is not utf-8".into()))?;
+        let spec = ModelSpec::from_json_str(spec_text)?;
+        let bundle = ModelBundle { spec, params, version };
+        bundle.check_shapes()?;
+        Ok(bundle)
+    }
+
+    /// Write the bundle to one file.
+    pub fn save(&self, path: &Path) -> Result<(), ModelError> {
+        std::fs::write(path, self.to_bytes())?;
+        Ok(())
+    }
+
+    /// Read and fully validate a bundle file.
+    pub fn load(path: &Path) -> Result<ModelBundle, ModelError> {
+        let bytes = std::fs::read(path)?;
+        ModelBundle::from_bytes(&bytes)
+    }
+}
+
+impl Network {
+    /// Build the network skeleton a spec describes (parameters zeroed;
+    /// call [`Network::init`] to He-initialize, or load a bundle).
+    pub fn from_spec(spec: &ModelSpec) -> Result<Network, ModelError> {
+        spec.validate()?;
+        Ok(Network::from_dims(&spec.dims, spec.layer_kinds(), spec.seed_base))
+    }
+
+    /// Reconstruct the full model a bundle stores: skeleton from the
+    /// spec, parameters copied bit-exactly from the tensors.
+    pub fn from_bundle(bundle: &ModelBundle) -> Result<Network, ModelError> {
+        bundle.check_shapes()?;
+        let mut net = Network::from_spec(&bundle.spec)?;
+        let mut it = bundle.params.iter();
+        for layer in &mut net.layers {
+            match layer.kind {
+                LayerKind::Dense => {
+                    let w = it.next().expect("layout checked");
+                    let b = it.next().expect("layout checked");
+                    layer.params[..w.len()].copy_from_slice(w);
+                    layer.params[w.len()..].copy_from_slice(b);
+                }
+                _ => {
+                    let p = it.next().expect("layout checked");
+                    layer.params.copy_from_slice(p);
+                }
+            }
+        }
+        Ok(net)
+    }
+
+    /// Package this network's parameters under `spec` — the inverse of
+    /// [`Network::from_bundle`]. Fails when the spec does not describe
+    /// this network (wrong dims or layer kinds).
+    pub fn to_bundle(&self, spec: &ModelSpec) -> Result<ModelBundle, ModelError> {
+        spec.validate()?;
+        let mut dims: Vec<usize> = vec![self.n_in()];
+        dims.extend(self.layers.iter().map(|l| l.n));
+        if dims != spec.dims {
+            return Err(ModelError::ShapeMismatch(format!(
+                "network dims {:?} do not match spec '{}' dims {:?}",
+                dims, spec.name, spec.dims
+            )));
+        }
+        for (l, (layer, kind)) in self.layers.iter().zip(spec.layer_kinds()).enumerate() {
+            if layer.kind != kind {
+                return Err(ModelError::ShapeMismatch(format!(
+                    "layer {l} is {:?} but spec '{}' describes {:?}",
+                    layer.kind, spec.name, kind
+                )));
+            }
+        }
+        let mut params = Vec::new();
+        for layer in &self.layers {
+            match layer.kind {
+                LayerKind::Dense => {
+                    let nm = layer.n * layer.m;
+                    params.push(layer.params[..nm].to_vec());
+                    params.push(layer.params[nm..].to_vec());
+                }
+                _ => params.push(layer.params.clone()),
+            }
+        }
+        ModelBundle::new(spec.clone(), params)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Method;
+    use crate::util::rng::Pcg32;
+
+    fn spec(method: Method) -> ModelSpec {
+        ModelSpec::new("unit", method, vec![6, 5, 3], vec![14, 7], 0x9E37_79B9, 4).unwrap()
+    }
+
+    #[test]
+    fn bytes_roundtrip_bit_exact() {
+        let mut net = Network::from_spec(&spec(Method::Hashnet)).unwrap();
+        net.init(&mut Pcg32::new(5, 5));
+        let bundle = net.to_bundle(&spec(Method::Hashnet)).unwrap();
+        let back = ModelBundle::from_bytes(&bundle.to_bytes()).unwrap();
+        assert_eq!(back.spec, bundle.spec);
+        assert_eq!(back.params, bundle.params);
+        assert_eq!(back.version, BUNDLE_VERSION);
+    }
+
+    #[test]
+    fn dense_split_layout_matches_state_convention() {
+        let s = spec(Method::Nn);
+        let mut net = Network::from_spec(&s).unwrap();
+        net.init(&mut Pcg32::new(7, 7));
+        let b = net.to_bundle(&s).unwrap();
+        // [W0 (5*6), b0 (5), W1 (3*5), b1 (3)]
+        assert_eq!(
+            b.params.iter().map(Vec::len).collect::<Vec<_>>(),
+            vec![30, 5, 15, 3]
+        );
+        let back = Network::from_bundle(&b).unwrap();
+        assert_eq!(back.layers[0].params, net.layers[0].params);
+        assert_eq!(back.layers[1].params, net.layers[1].params);
+    }
+
+    #[test]
+    fn to_bundle_rejects_wrong_spec() {
+        let mut net = Network::from_spec(&spec(Method::Hashnet)).unwrap();
+        net.init(&mut Pcg32::new(1, 1));
+        // wrong kind
+        assert!(matches!(
+            net.to_bundle(&spec(Method::Nn)),
+            Err(ModelError::ShapeMismatch(_))
+        ));
+        // wrong dims
+        let other =
+            ModelSpec::new("o", Method::Hashnet, vec![6, 4, 3], vec![14, 7], 1, 4).unwrap();
+        assert!(matches!(
+            net.to_bundle(&other),
+            Err(ModelError::ShapeMismatch(_))
+        ));
+    }
+
+    #[test]
+    fn new_validates_param_layout() {
+        let s = spec(Method::Hashnet);
+        assert!(ModelBundle::new(s.clone(), vec![vec![0.0; 14], vec![0.0; 7]]).is_ok());
+        assert!(matches!(
+            ModelBundle::new(s, vec![vec![0.0; 13], vec![0.0; 7]]),
+            Err(ModelError::ShapeMismatch(_))
+        ));
+    }
+}

@@ -1,0 +1,94 @@
+//! The model subsystem: **one** way to name, build, save and load a
+//! model, end to end.
+//!
+//! The paper's central observation is that a HashedNet is
+//! reconstructible from almost nothing: `(dims, K, seed)` pins the hash
+//! mapping, so the bucket values are the *entire* model. Deep
+//! Compression (Han et al., 2015) makes the matching systems argument —
+//! the deployable storage format is a first-class deliverable of a
+//! compression method — and this module is that deliverable:
+//!
+//! * [`Method`] — the typed model family (`hashnet`, `hashnet_dk`,
+//!   `nn`, `dk`, `rer`, `lrd`), replacing stringly-typed matches with a
+//!   fallible [`Method::parse`].
+//! * [`ModelSpec`] — the self-describing identity of one model:
+//!   method + virtual dims + per-layer budgets + seed. Validated on
+//!   construction, JSON round-trippable, and sufficient to rebuild the
+//!   network skeleton anywhere ([`crate::nn::Network::from_spec`]).
+//! * [`ModelBundle`] — the versioned single-file artifact: a header,
+//!   the spec as JSON, the parameter tensors, and a checksum. This is
+//!   what `train` saves, what `serve` loads (including hot-loading into
+//!   a running server via `{"cmd":"load"}`), and what `compress`
+//!   produces from a dense network.
+//! * [`ModelError`] — typed failures: unknown method, invalid spec,
+//!   truncation, checksum mismatch, future format version, parameter
+//!   shape mismatch.
+//!
+//! Everything above this module — trainer, compressor, server, CLI —
+//! speaks `ModelSpec`/`ModelBundle`. The legacy pair
+//! (`runtime::Manifest`'s `ArtifactSpec` + `runtime::ModelState`
+//! checkpoints) survives only as compat shims that convert into these
+//! types (`ArtifactSpec::to_model_spec`, `ModelState::to_bundle`).
+
+pub mod bundle;
+pub mod spec;
+
+pub use bundle::{ModelBundle, BUNDLE_VERSION};
+pub use spec::{Method, ModelSpec};
+
+use std::fmt;
+
+/// Typed failure modes of the model lifecycle: spec validation, bundle
+/// (de)serialization, and network (re)construction.
+#[derive(Debug)]
+pub enum ModelError {
+    /// Underlying file I/O failed.
+    Io(std::io::Error),
+    /// A method string matched none of [`Method`]'s variants.
+    UnknownMethod(String),
+    /// A spec failed validation (empty dims, budget/dims mismatch, …).
+    InvalidSpec(String),
+    /// The file does not start with the bundle magic.
+    BadMagic,
+    /// The bundle was written by a newer format version than this
+    /// binary supports.
+    FutureVersion { found: u32, supported: u32 },
+    /// The file ends before the structure it declares.
+    Truncated(&'static str),
+    /// The stored checksum does not match the recomputed one.
+    BadChecksum { stored: u32, computed: u32 },
+    /// Parameter tensors do not match the spec's layer layout.
+    ShapeMismatch(String),
+}
+
+impl fmt::Display for ModelError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ModelError::Io(e) => write!(f, "model i/o: {e}"),
+            ModelError::UnknownMethod(m) => write!(
+                f,
+                "unknown method '{m}' (expected one of hashnet, hashnet_dk, nn, dk, rer, lrd)"
+            ),
+            ModelError::InvalidSpec(why) => write!(f, "invalid model spec: {why}"),
+            ModelError::BadMagic => write!(f, "not a model bundle (bad magic)"),
+            ModelError::FutureVersion { found, supported } => write!(
+                f,
+                "bundle format version {found} is newer than supported version {supported}"
+            ),
+            ModelError::Truncated(what) => write!(f, "truncated bundle: {what}"),
+            ModelError::BadChecksum { stored, computed } => write!(
+                f,
+                "bundle checksum mismatch (stored {stored:#010x}, computed {computed:#010x}) — file corrupt"
+            ),
+            ModelError::ShapeMismatch(why) => write!(f, "parameter shape mismatch: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for ModelError {}
+
+impl From<std::io::Error> for ModelError {
+    fn from(e: std::io::Error) -> ModelError {
+        ModelError::Io(e)
+    }
+}

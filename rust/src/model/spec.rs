@@ -1,0 +1,355 @@
+//! [`Method`] and [`ModelSpec`]: the typed, validated, JSON
+//! round-trippable identity of one model.
+
+use super::ModelError;
+use crate::nn::LayerKind;
+use crate::util::json::{num, obj, Json};
+
+/// The model family — the paper's HashedNet variants plus the four
+/// baselines of §6. Replaces the stringly-typed `"hashnet" | "nn" | …`
+/// matches that used to be duplicated across the coordinator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Method {
+    /// HashedNet (paper Eq. 7): `K` real weights per layer, hash-shared.
+    Hashnet,
+    /// HashedNet trained with dark-knowledge soft targets.
+    HashnetDk,
+    /// Dense baseline (equivalent stored size).
+    Nn,
+    /// Dense baseline trained with dark knowledge.
+    Dk,
+    /// Random Edge Removal (Cireşan et al.): hash-masked dense.
+    Rer,
+    /// Low-Rank Decomposition (Denil et al.): learned `W`, fixed `U`.
+    Lrd,
+}
+
+impl Method {
+    /// Every method, in the paper's table order.
+    pub const ALL: [Method; 6] = [
+        Method::Rer,
+        Method::Lrd,
+        Method::Nn,
+        Method::Dk,
+        Method::Hashnet,
+        Method::HashnetDk,
+    ];
+
+    /// Fallible parse of the wire/manifest name. The one place in the
+    /// system where a method string is interpreted.
+    pub fn parse(s: &str) -> Result<Method, ModelError> {
+        match s {
+            "hashnet" => Ok(Method::Hashnet),
+            "hashnet_dk" => Ok(Method::HashnetDk),
+            "nn" => Ok(Method::Nn),
+            "dk" => Ok(Method::Dk),
+            "rer" => Ok(Method::Rer),
+            "lrd" => Ok(Method::Lrd),
+            other => Err(ModelError::UnknownMethod(other.to_string())),
+        }
+    }
+
+    /// The canonical name (inverse of [`Method::parse`]).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Method::Hashnet => "hashnet",
+            Method::HashnetDk => "hashnet_dk",
+            Method::Nn => "nn",
+            Method::Dk => "dk",
+            Method::Rer => "rer",
+            Method::Lrd => "lrd",
+        }
+    }
+
+    /// Whether training this method consumes teacher soft targets.
+    pub fn uses_soft_targets(&self) -> bool {
+        matches!(self, Method::Dk | Method::HashnetDk)
+    }
+
+    /// The layer structure this method uses for a `(m → n)` layer with
+    /// stored budget `budget` — the single source of the mapping that
+    /// `coordinator::native` used to hard-code (and `panic!` on).
+    pub fn layer_kind(&self, n: usize, budget: usize) -> LayerKind {
+        match self {
+            Method::Hashnet | Method::HashnetDk => LayerKind::Hashed { k: budget },
+            Method::Nn | Method::Dk => LayerKind::Dense,
+            Method::Rer => LayerKind::Masked { k: budget },
+            Method::Lrd => {
+                let r = (budget as f64 / n as f64).round().max(1.0) as usize;
+                LayerKind::LowRank { r }
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Method {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// The self-describing identity of one model: everything needed to
+/// rebuild its network skeleton (and so to interpret a parameter
+/// vector) anywhere.
+///
+/// Invariants enforced by [`ModelSpec::new`] / [`ModelSpec::validate`]:
+/// at least two dims, one budget per layer, no zero dims or budgets.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelSpec {
+    /// Human-readable model name (registry key when serving).
+    pub name: String,
+    pub method: Method,
+    /// Virtual layer widths, input first: `[n_in, h_1, …, n_out]`.
+    pub dims: Vec<usize>,
+    /// Per-layer stored-parameter budgets (`K` for hashed layers;
+    /// kept-edge count for RER; `r·n` for LRD; ignored by dense).
+    pub budgets: Vec<usize>,
+    /// Base seed of the layer hash functions (`hash::layer_seeds`).
+    pub seed_base: u32,
+    /// Preferred serving batch size (the dynamic batcher's max).
+    pub batch: usize,
+}
+
+impl ModelSpec {
+    /// Construct and validate.
+    pub fn new(
+        name: impl Into<String>,
+        method: Method,
+        dims: Vec<usize>,
+        budgets: Vec<usize>,
+        seed_base: u32,
+        batch: usize,
+    ) -> Result<ModelSpec, ModelError> {
+        let spec = ModelSpec { name: name.into(), method, dims, budgets, seed_base, batch };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Check the structural invariants.
+    pub fn validate(&self) -> Result<(), ModelError> {
+        if self.name.is_empty() {
+            return Err(ModelError::InvalidSpec("empty name".into()));
+        }
+        if self.dims.len() < 2 {
+            return Err(ModelError::InvalidSpec(format!(
+                "need at least 2 dims (input, output), got {:?}",
+                self.dims
+            )));
+        }
+        if self.budgets.len() != self.dims.len() - 1 {
+            return Err(ModelError::InvalidSpec(format!(
+                "{} dims imply {} layers but {} budgets given",
+                self.dims.len(),
+                self.dims.len() - 1,
+                self.budgets.len()
+            )));
+        }
+        if let Some(d) = self.dims.iter().find(|&&d| d == 0) {
+            return Err(ModelError::InvalidSpec(format!("zero dim {d} in {:?}", self.dims)));
+        }
+        if self.budgets.contains(&0) {
+            return Err(ModelError::InvalidSpec(format!("zero budget in {:?}", self.budgets)));
+        }
+        if self.batch == 0 {
+            return Err(ModelError::InvalidSpec("zero batch".into()));
+        }
+        Ok(())
+    }
+
+    /// Layer count.
+    pub fn n_layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    /// Input width.
+    pub fn n_in(&self) -> usize {
+        self.dims[0]
+    }
+
+    /// Output (logit) width.
+    pub fn n_out(&self) -> usize {
+        *self.dims.last().unwrap()
+    }
+
+    /// The per-layer [`LayerKind`]s this spec builds.
+    pub fn layer_kinds(&self) -> Vec<LayerKind> {
+        (0..self.n_layers())
+            .map(|l| self.method.layer_kind(self.dims[l + 1], self.budgets[l]))
+            .collect()
+    }
+
+    /// Lengths of the parameter tensors in bundle order — the artifact
+    /// layout: dense layers contribute `[W (n·m), b (n)]` as two
+    /// tensors, every other kind one tensor.
+    pub fn param_layout(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        for (l, kind) in self.layer_kinds().into_iter().enumerate() {
+            let (m, n) = (self.dims[l], self.dims[l + 1]);
+            match kind {
+                LayerKind::Dense => {
+                    out.push(n * m);
+                    out.push(n);
+                }
+                LayerKind::Hashed { k } => out.push(k),
+                LayerKind::Masked { .. } => out.push(n * (m + 1)),
+                LayerKind::LowRank { r } => out.push(n * r),
+            }
+        }
+        out
+    }
+
+    /// Logical stored-parameter count (RER counts kept edges, not the
+    /// dense mask buffer — matching `nn::Layer::n_stored`).
+    pub fn stored_params(&self) -> usize {
+        self.layer_kinds()
+            .into_iter()
+            .enumerate()
+            .map(|(l, kind)| {
+                let (m, n) = (self.dims[l], self.dims[l + 1]);
+                match kind {
+                    LayerKind::Dense => n * m + n,
+                    LayerKind::Hashed { k } | LayerKind::Masked { k } => k,
+                    LayerKind::LowRank { r } => n * r,
+                }
+            })
+            .sum()
+    }
+
+    /// Virtual (decompressed) parameter count: `n·(m+1)` per
+    /// non-dense layer (bias column folded in), `n·m + n` for dense.
+    pub fn virtual_params(&self) -> usize {
+        (0..self.n_layers())
+            .map(|l| {
+                let (m, n) = (self.dims[l], self.dims[l + 1]);
+                n * (m + 1)
+            })
+            .sum()
+    }
+
+    /// Stored / virtual — the compression the spec realizes.
+    pub fn compression(&self) -> f64 {
+        self.stored_params() as f64 / self.virtual_params() as f64
+    }
+
+    // -- JSON round trip -------------------------------------------------
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("method", Json::Str(self.method.as_str().to_string())),
+            ("dims", Json::Arr(self.dims.iter().map(|&d| num(d as f64)).collect())),
+            (
+                "budgets",
+                Json::Arr(self.budgets.iter().map(|&b| num(b as f64)).collect()),
+            ),
+            ("seed_base", num(self.seed_base as f64)),
+            ("batch", num(self.batch as f64)),
+        ])
+    }
+
+    pub fn from_json(v: &Json) -> Result<ModelSpec, ModelError> {
+        let inv = ModelError::InvalidSpec;
+        let usize_arr = |key: &str| -> Result<Vec<usize>, ModelError> {
+            let arr = v.req_arr(key).map_err(inv)?;
+            let vals: Vec<usize> = arr.iter().filter_map(Json::as_usize).collect();
+            if vals.len() != arr.len() {
+                return Err(ModelError::InvalidSpec(format!("non-integer entry in '{key}'")));
+            }
+            Ok(vals)
+        };
+        ModelSpec::new(
+            v.req_str("name").map_err(inv)?.to_string(),
+            Method::parse(v.req_str("method").map_err(inv)?)?,
+            usize_arr("dims")?,
+            usize_arr("budgets")?,
+            v.req_f64("seed_base").map_err(inv)? as u32,
+            v.req_f64("batch").map_err(inv)? as usize,
+        )
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    pub fn from_json_str(text: &str) -> Result<ModelSpec, ModelError> {
+        let v = Json::parse(text).map_err(ModelError::InvalidSpec)?;
+        ModelSpec::from_json(&v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ModelSpec {
+        ModelSpec::new("t", Method::Hashnet, vec![8, 6, 3], vec![27, 11], 0x9E37_79B9, 4)
+            .unwrap()
+    }
+
+    #[test]
+    fn parse_roundtrip_every_method() {
+        for m in Method::ALL {
+            assert_eq!(Method::parse(m.as_str()).unwrap(), m);
+        }
+        assert!(matches!(
+            Method::parse("convnet"),
+            Err(ModelError::UnknownMethod(s)) if s == "convnet"
+        ));
+    }
+
+    #[test]
+    fn soft_target_methods() {
+        assert!(Method::Dk.uses_soft_targets());
+        assert!(Method::HashnetDk.uses_soft_targets());
+        assert!(!Method::Hashnet.uses_soft_targets());
+        assert!(!Method::Nn.uses_soft_targets());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = spec();
+        let back = ModelSpec::from_json_str(&s.to_json_string()).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn validation_rejects_bad_specs() {
+        assert!(ModelSpec::new("t", Method::Nn, vec![8], vec![], 1, 4).is_err());
+        assert!(ModelSpec::new("t", Method::Nn, vec![8, 3], vec![1, 2], 1, 4).is_err());
+        assert!(ModelSpec::new("t", Method::Nn, vec![8, 0, 3], vec![1, 2], 1, 4).is_err());
+        assert!(ModelSpec::new("t", Method::Hashnet, vec![8, 3], vec![0], 1, 4).is_err());
+        assert!(ModelSpec::new("", Method::Nn, vec![8, 3], vec![9], 1, 4).is_err());
+        assert!(ModelSpec::new("t", Method::Nn, vec![8, 3], vec![9], 1, 0).is_err());
+    }
+
+    #[test]
+    fn layouts_and_accounting() {
+        let s = spec();
+        assert_eq!(s.param_layout(), vec![27, 11]);
+        assert_eq!(s.stored_params(), 38);
+        assert_eq!(s.virtual_params(), 6 * 9 + 3 * 7);
+        let d = ModelSpec::new("d", Method::Nn, vec![8, 6, 3], vec![54, 21], 1, 4).unwrap();
+        assert_eq!(d.param_layout(), vec![48, 6, 18, 3]);
+        assert_eq!(d.stored_params(), 75);
+        let r = ModelSpec::new("r", Method::Rer, vec![8, 6, 3], vec![27, 11], 1, 4).unwrap();
+        assert_eq!(r.param_layout(), vec![54, 21]); // physical mask buffers
+        assert_eq!(r.stored_params(), 38); // logical kept edges
+        let l = ModelSpec::new("l", Method::Lrd, vec![8, 6, 3], vec![12, 6], 1, 4).unwrap();
+        // r = round(12/6) = 2 → 6*2 = 12; r = round(6/3) = 2 → 3*2 = 6
+        assert_eq!(l.param_layout(), vec![12, 6]);
+    }
+
+    #[test]
+    fn from_json_rejects_unknown_method_and_bad_arrays() {
+        let bad_method = r#"{"name":"x","method":"blob","dims":[4,2],"budgets":[3],"seed_base":1,"batch":2}"#;
+        assert!(matches!(
+            ModelSpec::from_json_str(bad_method),
+            Err(ModelError::UnknownMethod(_))
+        ));
+        let bad_dim = r#"{"name":"x","method":"nn","dims":[4,"two"],"budgets":[3],"seed_base":1,"batch":2}"#;
+        assert!(matches!(
+            ModelSpec::from_json_str(bad_dim),
+            Err(ModelError::InvalidSpec(_))
+        ));
+    }
+}

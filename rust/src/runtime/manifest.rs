@@ -1,6 +1,14 @@
 //! `artifacts/manifest.json` parsing — the contract between `aot.py`
 //! and the Rust coordinator.
+//!
+//! This is a **compat shim** over the model subsystem: an
+//! [`ArtifactSpec`] carries the PJRT-specific extras (graph file names,
+//! per-tensor init stds, lowered batch size) and converts into the
+//! canonical [`ModelSpec`] via [`ArtifactSpec::to_model_spec`]. New
+//! code should take `ModelSpec`/`ModelBundle`; only the artifact
+//! runtime needs the manifest.
 
+use crate::model::{Method, ModelSpec};
 use crate::util::json::Json;
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
@@ -24,7 +32,7 @@ impl ParamInfo {
 #[derive(Debug, Clone)]
 pub struct ArtifactSpec {
     pub name: String,
-    pub method: String,
+    pub method: Method,
     pub dims: Vec<usize>,
     pub budgets: Vec<usize>,
     pub batch: usize,
@@ -41,6 +49,22 @@ pub struct ArtifactSpec {
     pub expansion: Option<usize>,
     /// Equivalent hidden width (NN/DK baselines).
     pub hidden_equivalent: Option<usize>,
+}
+
+impl ArtifactSpec {
+    /// The canonical model identity of this artifact — everything the
+    /// rest of the system needs; the manifest extras (graph files,
+    /// init stds) stay behind in the shim.
+    pub fn to_model_spec(&self) -> ModelSpec {
+        ModelSpec {
+            name: self.name.clone(),
+            method: self.method,
+            dims: self.dims.clone(),
+            budgets: self.budgets.clone(),
+            seed_base: self.seed_base,
+            batch: self.batch.max(1),
+        }
+    }
 }
 
 /// The full artifact registry.
@@ -85,7 +109,7 @@ impl Manifest {
         let graphs = a.get("graphs").ok_or("missing graphs")?;
         Ok(ArtifactSpec {
             name: a.req_str("name")?.to_string(),
-            method: a.req_str("method")?.to_string(),
+            method: Method::parse(a.req_str("method")?).map_err(|e| e.to_string())?,
             dims: usize_arr("dims")?,
             budgets: usize_arr("budgets")?,
             batch: a.req_f64("batch")? as usize,
@@ -157,6 +181,7 @@ mod tests {
         assert_eq!(m.n_in, 784);
         assert_eq!(m.len(), 1);
         let a = m.get("hashnet_3l_h32_o10_c1-4").unwrap();
+        assert_eq!(a.method, Method::Hashnet);
         assert_eq!(a.dims, vec![784, 32, 10]);
         assert_eq!(a.params.len(), 2);
         assert_eq!(a.params[0].count(), 6280);
@@ -164,6 +189,26 @@ mod tests {
         assert!(!a.uses_soft_targets);
         assert_eq!(a.compression, 0.25);
         assert_eq!(a.expansion, None);
+    }
+
+    #[test]
+    fn unknown_method_is_a_clean_parse_error() {
+        let text = SAMPLE.replace("\"hashnet\"", "\"blobnet\"");
+        let err = Manifest::parse(&text).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown method 'blobnet'"), "{err:#}");
+    }
+
+    #[test]
+    fn artifact_converts_to_model_spec() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let spec = m.get("hashnet_3l_h32_o10_c1-4").unwrap().to_model_spec();
+        spec.validate().unwrap();
+        assert_eq!(spec.method, Method::Hashnet);
+        assert_eq!(spec.dims, vec![784, 32, 10]);
+        assert_eq!(spec.budgets, vec![6280, 83]);
+        assert_eq!(spec.batch, 50);
+        // storage accounting agrees with the manifest's own numbers
+        assert_eq!(spec.stored_params(), 6363);
     }
 
     #[test]
@@ -175,7 +220,7 @@ mod tests {
             for a in m.iter() {
                 assert_eq!(a.dims.len() - 1, a.budgets.len(), "{}", a.name);
                 assert!(!a.params.is_empty(), "{}", a.name);
-                if a.method == "hashnet" {
+                if a.method == Method::Hashnet {
                     let stored: usize = a.params.iter().map(ParamInfo::count).sum();
                     assert_eq!(stored, a.stored_params, "{}", a.name);
                 }

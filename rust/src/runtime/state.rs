@@ -1,11 +1,46 @@
 //! Host-side model state: the stored parameter vectors + momentum
 //! buffers of one artifact, with init, checkpointing and accounting.
+//!
+//! Like the manifest, this is a **compat shim**: a `ModelState` is the
+//! PJRT-side view of the parameters (split tensors + momenta). The
+//! canonical persistence format is [`crate::model::ModelBundle`];
+//! [`ModelState::to_bundle`] / [`ModelState::from_bundle`] convert
+//! losslessly (momenta are training state and are not persisted).
 
 use super::manifest::ArtifactSpec;
+use crate::model::{ModelBundle, ModelError};
 use crate::util::rng::Pcg32;
 use anyhow::{anyhow, Result};
 use std::io::{Read, Write};
 use std::path::Path;
+
+impl ArtifactSpec {
+    /// He-init a state from this artifact's per-tensor `init_std`s —
+    /// the one sanctioned construction path outside checkpoint/bundle
+    /// loading (wraps [`ModelState::init`]).
+    pub fn init_state(&self, seed: u64) -> ModelState {
+        ModelState::init(self, seed)
+    }
+
+    /// Resolve this artifact's parameters as a [`ModelBundle`]: from a
+    /// checkpoint or bundle file when given, else seed-initialized.
+    /// The shape check happens in the bundle conversion, so a wrong
+    /// file is a clean [`ModelError`] instead of a late panic.
+    pub fn resolve_bundle(
+        &self,
+        params_file: Option<&Path>,
+        seed: u64,
+    ) -> Result<ModelBundle> {
+        match params_file {
+            Some(p) => {
+                let state = ModelState::load_any(p)
+                    .map_err(|e| anyhow!("loading params {}: {e:#}", p.display()))?;
+                Ok(state.to_bundle(self)?)
+            }
+            None => Ok(self.init_state(seed).to_bundle(self)?),
+        }
+    }
+}
 
 /// Parameters + momenta for one artifact (layouts match the manifest).
 #[derive(Debug, Clone)]
@@ -40,6 +75,39 @@ impl ModelState {
     /// are training state, not model storage).
     pub fn storage_bytes(&self) -> usize {
         4 * self.n_params()
+    }
+
+    /// Package the parameters as a validated [`ModelBundle`] under the
+    /// artifact's [`crate::model::ModelSpec`] — the conversion every
+    /// caller above the runtime shim uses.
+    pub fn to_bundle(&self, spec: &ArtifactSpec) -> Result<ModelBundle, ModelError> {
+        ModelBundle::new(spec.to_model_spec(), self.params.clone())
+    }
+
+    /// The inverse of [`ModelState::to_bundle`]: adopt a bundle's
+    /// tensors as artifact state (momenta reset to zero).
+    pub fn from_bundle(bundle: &ModelBundle) -> ModelState {
+        let params = bundle.params.clone();
+        let momenta = params.iter().map(|p| vec![0.0; p.len()]).collect();
+        ModelState { params, momenta }
+    }
+
+    /// Load parameters from either format: a legacy `HNCK` checkpoint
+    /// or a `HNMB` model bundle (whose spec is ignored here — shape
+    /// validation happens when the state meets a spec).
+    pub fn load_any(path: &Path) -> Result<ModelState> {
+        let mut magic = [0u8; 4];
+        {
+            let mut f = std::fs::File::open(path)?;
+            f.read_exact(&mut magic)
+                .map_err(|_| anyhow!("file too short for any model format"))?;
+        }
+        if &magic == b"HNMB" {
+            let bundle = ModelBundle::load(path)?;
+            Ok(ModelState::from_bundle(&bundle))
+        } else {
+            ModelState::load(path)
+        }
     }
 
     /// Save params (not momenta) in a simple binary format:
@@ -95,7 +163,7 @@ mod tests {
     fn spec() -> ArtifactSpec {
         ArtifactSpec {
             name: "t".into(),
-            method: "hashnet".into(),
+            method: crate::model::Method::Hashnet,
             dims: vec![8, 4, 2],
             budgets: vec![9, 3],
             batch: 2,
@@ -149,5 +217,35 @@ mod tests {
     fn keeps_unused_import_warning_away() {
         // touch Manifest so the import is used in tests
         assert!(Manifest::default().is_empty());
+    }
+
+    #[test]
+    fn bundle_conversion_roundtrips() {
+        let st = ModelState::init(&spec(), 4);
+        let bundle = st.to_bundle(&spec()).unwrap();
+        assert_eq!(bundle.spec.name, "t");
+        let back = ModelState::from_bundle(&bundle);
+        assert_eq!(back.params, st.params);
+        assert!(back.momenta.iter().all(|m| m.iter().all(|&v| v == 0.0)));
+    }
+
+    #[test]
+    fn load_any_reads_both_formats() {
+        let st = ModelState::init(&spec(), 6);
+        let dir = std::env::temp_dir();
+        let ckpt = dir.join(format!("hn_any_ck_{}.bin", std::process::id()));
+        let bnd = dir.join(format!("hn_any_mb_{}.hnb", std::process::id()));
+        st.save(&ckpt).unwrap();
+        st.to_bundle(&spec()).unwrap().save(&bnd).unwrap();
+        assert_eq!(ModelState::load_any(&ckpt).unwrap().params, st.params);
+        assert_eq!(ModelState::load_any(&bnd).unwrap().params, st.params);
+        std::fs::remove_file(&ckpt).ok();
+        std::fs::remove_file(&bnd).ok();
+    }
+
+    #[test]
+    fn resolve_bundle_seed_inits_without_file() {
+        let b = spec().resolve_bundle(None, 3).unwrap();
+        assert_eq!(b.params, ModelState::init(&spec(), 3).params);
     }
 }

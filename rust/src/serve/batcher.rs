@@ -13,7 +13,7 @@
 //! batch formation, and each worker runs its batch independently.
 
 use crate::tensor::Matrix;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -69,6 +69,10 @@ struct BatchQueue {
     requests: AtomicU64,
     batches: AtomicU64,
     batch_fill_sum: AtomicU64,
+    /// Set by [`DynamicBatcher::close`] once no worker will drain this
+    /// queue again; [`BatcherHandle::submit`] then fails fast instead
+    /// of stranding the request until its receive timeout.
+    closed: AtomicBool,
 }
 
 /// Collects requests and forms batches.
@@ -98,6 +102,7 @@ impl DynamicBatcher {
                 requests: AtomicU64::new(0),
                 batches: AtomicU64::new(0),
                 batch_fill_sum: AtomicU64::new(0),
+                closed: AtomicBool::new(false),
             }),
             max_batch,
             max_wait,
@@ -171,6 +176,19 @@ impl DynamicBatcher {
         q.drain(..).collect()
     }
 
+    /// Mark the queue closed: no worker will drain it again. Every
+    /// later [`BatcherHandle::submit`] fails fast with an explicit
+    /// error reply. Call after stopping the workers and before the
+    /// final [`DynamicBatcher::drain_pending`] pass — a submit that
+    /// races the close lands in the queue *before* that drain (both
+    /// sides serialize on the queue mutex), so no request is stranded.
+    pub fn close(&self) {
+        self.shared.closed.store(true, Ordering::Relaxed);
+        // touch the mutex so the store is ordered before any drain the
+        // caller performs next, even against a submit mid-flight
+        drop(self.shared.queue.lock().unwrap());
+    }
+
     /// Run one batch through `exec` and scatter responses. Every
     /// request receives a reply: a classification, or an explicit
     /// error `Response` when its row length is wrong or the executor
@@ -230,11 +248,18 @@ pub struct BatcherHandle {
 
 impl BatcherHandle {
     /// Enqueue a request and wake a batch former; returns the receiver
-    /// for the reply.
+    /// for the reply. On a closed queue (model unloaded) the reply is
+    /// an immediate error — the closed check happens under the queue
+    /// mutex, so a request is either rejected here or visible to the
+    /// closer's final drain, never stranded.
     pub fn submit(&self, pixels: Vec<f32>) -> mpsc::Receiver<Response> {
         let (tx, rx) = mpsc::channel();
         {
             let mut q = self.shared.queue.lock().unwrap();
+            if self.shared.closed.load(Ordering::Relaxed) {
+                let _ = tx.send(Response::failed("model unloaded".into(), 0));
+                return rx;
+            }
             q.push((Request { pixels, reply: tx }, Instant::now()));
         }
         self.shared.arrived.notify_one();
@@ -392,6 +417,24 @@ mod tests {
             echo_exec(x)
         });
         assert_eq!(rx.recv().unwrap().class, 1);
+    }
+
+    #[test]
+    fn submit_after_close_fails_fast() {
+        let b = DynamicBatcher::new(4, Duration::from_millis(5));
+        let h = b.handle();
+        // a request queued before the close is still drainable
+        let rx_before = h.submit(vec![1.0, 0.0, 0.0]);
+        b.close();
+        let t0 = Instant::now();
+        let rx_after = h.submit(vec![2.0, 0.0, 0.0]);
+        let r = rx_after.recv().expect("immediate error reply");
+        assert!(t0.elapsed() < Duration::from_millis(100), "not fast: {:?}", t0.elapsed());
+        assert!(r.error.as_deref().unwrap().contains("unloaded"), "{:?}", r.error);
+        let pending = b.drain_pending();
+        assert_eq!(pending.len(), 1);
+        b.dispatch(pending, 3, |_| Err(anyhow::anyhow!("closing")));
+        assert!(rx_before.recv().unwrap().error.is_some());
     }
 
     #[test]

@@ -21,9 +21,9 @@
 //! runtime, fall back to native when artifact loading fails — e.g. the
 //! offline `xla` stub is linked or the HLO files are absent).
 
-use crate::coordinator::native;
+use crate::model::ModelBundle;
 use crate::nn::Network;
-use crate::runtime::{ArtifactSpec, Graph, ModelState, Runtime};
+use crate::runtime::{Graph, ModelState, Runtime};
 use crate::tensor::Matrix;
 use anyhow::{anyhow, Context, Result};
 use std::path::{Path, PathBuf};
@@ -94,16 +94,18 @@ pub struct NativeEngine {
 }
 
 impl NativeEngine {
-    /// Build from an artifact spec + parameter state (checkpoint or
-    /// init). Fails — rather than panicking deep in `copy_from_slice` —
-    /// when the state's tensor shapes do not match the spec.
-    pub fn from_spec(spec: &ArtifactSpec, state: &ModelState) -> Result<NativeEngine> {
-        let net = native::try_build(spec, state)
-            .with_context(|| format!("building native engine for '{}'", spec.name))?;
+    /// Build from a self-describing [`ModelBundle`] — the one
+    /// construction path the server uses, whether the bundle came from
+    /// a file (`{"cmd":"load"}`, `--bundle`) or from converting a
+    /// manifest artifact + checkpoint. Shape validation happened when
+    /// the bundle was built/loaded, so this cannot panic on bad params.
+    pub fn from_bundle(bundle: &ModelBundle) -> Result<NativeEngine> {
+        let net = Network::from_bundle(bundle)
+            .with_context(|| format!("building native engine for '{}'", bundle.spec.name))?;
         Ok(NativeEngine {
             n_in: net.n_in(),
             n_out: net.n_out(),
-            max_batch: spec.batch.max(1),
+            max_batch: bundle.spec.batch.max(1),
             net: Arc::new(net),
         })
     }
@@ -158,9 +160,10 @@ pub struct RuntimeEngine {
 }
 
 impl RuntimeEngine {
-    /// Open the artifact runtime and load one predict graph. `state`
-    /// comes from `checkpoint` when given, otherwise seed-initialized —
-    /// identical to what [`NativeEngine::from_spec`] would serve.
+    /// Open the artifact runtime and load one predict graph. The
+    /// parameters resolve through the bundle path (`checkpoint` may be
+    /// a legacy `.ckpt` or a `.hnb` bundle; absent → seed init) —
+    /// identical to what [`NativeEngine::from_bundle`] would serve.
     pub fn open(
         artifacts_dir: &Path,
         artifact: &str,
@@ -168,7 +171,8 @@ impl RuntimeEngine {
     ) -> Result<RuntimeEngine> {
         let rt = Runtime::open(artifacts_dir)?;
         let exe = rt.load(artifact, Graph::Predict)?;
-        let state = load_state(&exe.spec, checkpoint)?;
+        let bundle = exe.spec.resolve_bundle(checkpoint, 0x5EED)?;
+        let state = ModelState::from_bundle(&bundle);
         Ok(RuntimeEngine { _rt: rt, exe, state })
     }
 }
@@ -197,25 +201,6 @@ impl InferenceEngine for RuntimeEngine {
     fn fixed_batch(&self) -> bool {
         true
     }
-}
-
-/// Resolve a model's parameters: load the checkpoint if given (and
-/// check it matches the spec), else deterministic seed init.
-pub fn load_state(spec: &ArtifactSpec, checkpoint: Option<&Path>) -> Result<ModelState> {
-    let state = match checkpoint {
-        Some(p) => ModelState::load(p)
-            .with_context(|| format!("loading checkpoint {}", p.display()))?,
-        None => ModelState::init(spec, 0x5EED),
-    };
-    if state.params.len() != spec.params.len() {
-        return Err(anyhow!(
-            "checkpoint has {} tensors, artifact '{}' expects {}",
-            state.params.len(),
-            spec.name,
-            spec.params.len()
-        ));
-    }
-    Ok(state)
 }
 
 /// Drain `batcher` through `engine` until `stop` is set — the body of
@@ -249,22 +234,40 @@ pub fn error_loop(
     }
 }
 
-/// How one model should be served (name + parameters + worker count
-/// are resolved by the server from `ServeOptions`).
+/// How one model should be served. Two sources:
+///
+/// * a **bundle file** ([`ModelConfig::bundle`]) — fully
+///   self-describing, served natively, no manifest required;
+/// * a **manifest artifact** ([`ModelConfig::new`]) with an optional
+///   checkpoint/bundle parameter file — the compat path, also the only
+///   way onto the PJRT runtime backend (which needs the HLO graphs).
 #[derive(Debug, Clone)]
 pub struct ModelConfig {
+    /// Manifest artifact name (empty for bundle-sourced models — the
+    /// registry name then comes from the bundle's spec).
     pub artifact: String,
+    /// Parameter file for a manifest artifact (legacy `.ckpt` or
+    /// `.hnb`); absent → deterministic seed init.
     pub checkpoint: Option<PathBuf>,
+    /// Bundle file to serve directly.
+    pub bundle: Option<PathBuf>,
 }
 
 impl ModelConfig {
+    /// Serve a manifest artifact (seed-initialized unless
+    /// [`ModelConfig::with_checkpoint`] adds parameters).
     pub fn new(artifact: impl Into<String>) -> ModelConfig {
-        ModelConfig { artifact: artifact.into(), checkpoint: None }
+        ModelConfig { artifact: artifact.into(), checkpoint: None, bundle: None }
     }
 
     pub fn with_checkpoint(mut self, ckpt: impl Into<PathBuf>) -> ModelConfig {
         self.checkpoint = Some(ckpt.into());
         self
+    }
+
+    /// Serve a self-describing bundle file.
+    pub fn bundle(path: impl Into<PathBuf>) -> ModelConfig {
+        ModelConfig { artifact: String::new(), checkpoint: None, bundle: Some(path.into()) }
     }
 }
 
@@ -305,6 +308,27 @@ mod tests {
         assert!(!eng.fixed_batch());
         let got = eng.predict(&x).unwrap();
         assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn native_engine_from_bundle_matches_network() {
+        let spec = crate::model::ModelSpec::new(
+            "tiny",
+            crate::model::Method::Hashnet,
+            vec![6, 5, 3],
+            vec![12, 18],
+            crate::hash::DEFAULT_SEED_BASE,
+            8,
+        )
+        .unwrap();
+        let mut hnet = Network::from_spec(&spec).unwrap();
+        hnet.init(&mut Pcg32::new(4, 4));
+        let x = Matrix::from_fn(3, 6, |i, j| (i + 2 * j) as f32 * 0.2);
+        let want = hnet.predict(&x);
+        let bundle = hnet.to_bundle(&spec).unwrap();
+        let eng = NativeEngine::from_bundle(&bundle).unwrap();
+        assert_eq!(eng.max_batch(), 8);
+        assert_eq!(eng.predict(&x).unwrap().data, want.data);
     }
 
     #[test]

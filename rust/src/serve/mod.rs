@@ -17,13 +17,16 @@
 //!   locks around the parameters.
 //! * [`server`] — a std-net TCP front end speaking newline-delimited
 //!   JSON (`{"model": "...", "pixels": [...]}` → `{"class": c, ...}`),
-//!   routing per-request to an engine registry so one process serves
-//!   multiple named models (tokio is not vendored offline; blocking
-//!   I/O + threads serve the same purpose).
+//!   routing per-request to a **mutable** engine registry so one
+//!   process serves multiple named models and can hot-(re)load them at
+//!   runtime: `{"cmd":"load","path":"m.hnb"}` swaps a freshly trained
+//!   bundle in without a restart, `unload`/`reload`/`models` manage
+//!   the rest (tokio is not vendored offline; blocking I/O + threads
+//!   serve the same purpose).
 //!
-//! The model is a trained checkpoint (`ModelState::save`) plus an
-//! artifact name — total server memory per model is the *compressed*
-//! parameter count, which is the paper's point.
+//! The model is one self-describing [`crate::model::ModelBundle`] —
+//! total server memory per model is the *compressed* parameter count,
+//! which is the paper's point.
 
 pub mod batcher;
 pub mod engine;

@@ -4,17 +4,27 @@
 //!   request:  {"pixels": [f32; n_in]}              → classify (default model)
 //!             {"model": "name", "pixels": [...]}   → classify a named model
 //!             {"cmd": "stats"}                     → server + per-model counters
+//!             {"cmd": "models"}                    → per-model metadata (spec,
+//!                                                    storage, bundle version)
+//!             {"cmd": "load", "path": "m.hnb"}     → hot-load a model bundle
+//!                                                    (optional "name", "workers")
+//!             {"cmd": "unload", "model": "name"}   → remove a served model
+//!             {"cmd": "reload"}                    → rebuild every model from
+//!                                                    its source file(s)
 //!             {"cmd": "shutdown"}                  → stop accepting
 //!   response: {"class": u, "probs": [...], "latency_us": u, "model": "name"}
 //!             {"error": "..."}                     → bad request, wrong pixel
 //!                                                    count, or engine failure
 //!
-//! One process serves **multiple named models** through an engine
-//! registry (see [`super::engine`]): each model gets its own
-//! [`DynamicBatcher`] plus worker threads — N threads sharing one
-//! `NativeEngine`, or a single thread owning a PJRT `RuntimeEngine`.
-//! Connection threads parse requests, validate the pixel count against
-//! the routed model, and block on replies.
+//! One process serves **multiple named models** through a mutable
+//! engine registry: each model gets its own [`DynamicBatcher`] plus
+//! worker threads — N threads sharing one `NativeEngine`, or a single
+//! thread owning a PJRT `RuntimeEngine`. The registry is `RwLock`'d so
+//! `{"cmd":"load"}` can register a bundle trained *after* startup
+//! without restarting: the new handle is swapped in, new requests route
+//! to it, and the displaced handle drains on its own `Arc` (its workers
+//! finish, queued requests get explicit replies) while other models
+//! keep serving uninterrupted.
 //!
 //! [`Server::bind`] / [`Server::run`] split binding from serving so
 //! callers can bind port 0 and read [`Server::local_addr`] before the
@@ -22,18 +32,18 @@
 
 use super::batcher::DynamicBatcher;
 use super::engine::{
-    error_loop, load_state, worker_loop, Backend, InferenceEngine, ModelConfig, NativeEngine,
-    RuntimeEngine,
+    error_loop, worker_loop, Backend, InferenceEngine, ModelConfig, NativeEngine, RuntimeEngine,
 };
-use crate::runtime::{Manifest, Runtime};
+use crate::model::{ModelBundle, ModelSpec};
+use crate::runtime::{ArtifactSpec, Manifest, Runtime};
 use crate::util::json::{num, obj, Json};
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
 /// Server configuration.
@@ -45,7 +55,8 @@ pub struct ServeOptions {
     pub models: Vec<ModelConfig>,
     pub addr: String,
     /// Execution backend; `Auto` prefers the PJRT runtime and falls
-    /// back to native when artifact loading fails.
+    /// back to native when artifact loading fails. Bundle-sourced
+    /// models are always native (a bundle carries no HLO graphs).
     pub backend: Backend,
     /// Worker threads per natively-served model (the runtime backend
     /// is always pinned to one worker — PJRT handles are not `Send`).
@@ -71,29 +82,279 @@ impl Default for ServeOptions {
 }
 
 impl ServeOptions {
-    /// One model, default everything else.
+    /// One manifest artifact, default everything else.
     pub fn single(artifact: impl Into<String>) -> ServeOptions {
         ServeOptions { models: vec![ModelConfig::new(artifact)], ..Default::default() }
     }
+
+    /// One bundle file, default everything else.
+    pub fn single_bundle(path: impl Into<PathBuf>) -> ServeOptions {
+        ServeOptions { models: vec![ModelConfig::bundle(path)], ..Default::default() }
+    }
 }
 
-/// One served model: its batcher (shared with the worker threads) and
-/// request counters, looked up by name on every classify request.
+/// Where a served model's engine came from — retained on the handle so
+/// `{"cmd":"reload"}` can rebuild it from disk.
+#[derive(Debug, Clone)]
+enum ModelSource {
+    /// A self-describing bundle file (native backend).
+    Bundle(PathBuf),
+    /// A manifest artifact + optional parameter file; `runtime` marks
+    /// the PJRT backend.
+    Artifact { artifact: String, checkpoint: Option<PathBuf>, runtime: bool },
+    /// Injected via [`Server::bind_with_engines`]; cannot be reloaded.
+    Injected,
+}
+
+impl ModelSource {
+    fn describe(&self) -> String {
+        match self {
+            ModelSource::Bundle(p) => format!("bundle:{}", p.display()),
+            ModelSource::Artifact { artifact, .. } => format!("artifact:{artifact}"),
+            ModelSource::Injected => "injected".into(),
+        }
+    }
+}
+
+/// One served model: its batcher (shared with the worker threads),
+/// request counters, worker lifecycle, and provenance. Connection
+/// threads hold an `Arc` per request, so a handle displaced from the
+/// registry stays fully functional until its last request drains.
 struct ModelHandle {
     name: String,
     backend: &'static str,
     workers: usize,
     n_in: usize,
+    n_out: usize,
     max_batch: usize,
     batcher: DynamicBatcher,
     served: AtomicU64,
     errors: AtomicU64,
+    /// Per-model stop flag — this model's worker threads watch it; set
+    /// by unload / hot-swap / server shutdown.
+    stop: Arc<AtomicBool>,
+    joins: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    source: ModelSource,
+    /// Model identity, when known (absent for injected engines).
+    spec: Option<ModelSpec>,
+    /// Bundle format version, when the model came from a bundle file.
+    bundle_version: Option<u32>,
 }
 
-/// Immutable model registry shared by all connection threads.
+/// Mutable model registry shared by all connection threads.
 struct Registry {
-    models: BTreeMap<String, Arc<ModelHandle>>,
-    default_model: String,
+    models: RwLock<BTreeMap<String, Arc<ModelHandle>>>,
+    default_model: RwLock<String>,
+}
+
+impl Registry {
+    fn get(&self, name: &str) -> Option<Arc<ModelHandle>> {
+        self.models.read().unwrap().get(name).cloned()
+    }
+
+    fn snapshot(&self) -> Vec<Arc<ModelHandle>> {
+        self.models.read().unwrap().values().cloned().collect()
+    }
+
+    fn names(&self) -> Vec<String> {
+        self.models.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Insert under the handle's name; returns the displaced handle.
+    fn insert(&self, handle: Arc<ModelHandle>) -> Option<Arc<ModelHandle>> {
+        self.models.write().unwrap().insert(handle.name.clone(), handle)
+    }
+
+    fn remove(&self, name: &str) -> Option<Arc<ModelHandle>> {
+        self.models.write().unwrap().remove(name)
+    }
+
+    fn default_name(&self) -> String {
+        self.default_model.read().unwrap().clone()
+    }
+
+    fn set_default(&self, name: &str) {
+        *self.default_model.write().unwrap() = name.to_string();
+    }
+}
+
+/// Everything a connection thread needs, shared behind one `Arc`.
+struct ServeCtx {
+    registry: Registry,
+    stop: AtomicBool,
+    served: AtomicU64,
+    max_requests: u64,
+    artifacts_dir: PathBuf,
+    backend: Backend,
+    default_workers: usize,
+    max_wait: Duration,
+}
+
+/// Stop a handle's workers, join them, and fail whatever was queued —
+/// the tail end of unload, hot-swap and shutdown. Never called with a
+/// registry lock held.
+fn retire(handle: &ModelHandle) {
+    handle.stop.store(true, Ordering::Relaxed);
+    let joins: Vec<_> = handle.joins.lock().unwrap().drain(..).collect();
+    for j in joins {
+        let _ = j.join();
+    }
+    // Close the queue so every later submit fails fast, then fail the
+    // requests that were already queued. The closed check and this
+    // drain serialize on the queue mutex, so a submit racing the
+    // unload is either rejected immediately or caught here — never
+    // stranded until its receive timeout.
+    handle.batcher.close();
+    let pending = handle.batcher.drain_pending();
+    if !pending.is_empty() {
+        handle.batcher.dispatch(pending, handle.n_in, |_| {
+            Err(anyhow!("model '{}' unloaded", handle.name))
+        });
+    }
+}
+
+impl ServeCtx {
+    /// Build a handle from a bind-time [`ModelConfig`].
+    fn open_from_config(&self, mc: &ModelConfig) -> Result<Arc<ModelHandle>> {
+        match &mc.bundle {
+            Some(path) => self.open_bundle(path, None, self.default_workers),
+            None => self.open_artifact(&mc.artifact, mc.checkpoint.as_deref()),
+        }
+    }
+
+    /// Native engine from a bundle file.
+    fn open_bundle(
+        &self,
+        path: &Path,
+        name_override: Option<&str>,
+        workers: usize,
+    ) -> Result<Arc<ModelHandle>> {
+        let bundle = ModelBundle::load(path)
+            .map_err(|e| anyhow!("loading bundle {}: {e}", path.display()))?;
+        let name = name_override.unwrap_or(&bundle.spec.name).to_string();
+        let spec = bundle.spec.clone();
+        let version = bundle.version;
+        let eng: Arc<dyn InferenceEngine + Send + Sync> =
+            Arc::new(NativeEngine::from_bundle(&bundle)?);
+        Ok(spawn_engine_workers(
+            name,
+            eng,
+            workers,
+            self.max_wait,
+            ModelSource::Bundle(path.to_path_buf()),
+            Some(spec),
+            Some(version),
+        ))
+    }
+
+    /// Engine for a manifest artifact, honoring the backend selection.
+    fn open_artifact(
+        &self,
+        artifact: &str,
+        checkpoint: Option<&Path>,
+    ) -> Result<Arc<ModelHandle>> {
+        let manifest = Manifest::load(&self.artifacts_dir.join("manifest.json"))?;
+        let spec = manifest
+            .get(artifact)
+            .ok_or_else(|| anyhow!("unknown artifact '{artifact}'"))?
+            .clone();
+        let use_runtime = match self.backend {
+            Backend::Native => false,
+            Backend::Runtime => match probe_runtime(&self.artifacts_dir, &spec) {
+                Some(e) => return Err(anyhow!("--backend runtime unavailable: {e}")),
+                None => true,
+            },
+            Backend::Auto => match probe_runtime(&self.artifacts_dir, &spec) {
+                Some(e) => {
+                    eprintln!(
+                        "backend auto: runtime unavailable ({e}); serving '{artifact}' natively"
+                    );
+                    false
+                }
+                None => true,
+            },
+        };
+        let source = ModelSource::Artifact {
+            artifact: artifact.to_string(),
+            checkpoint: checkpoint.map(Path::to_path_buf),
+            runtime: use_runtime,
+        };
+        if use_runtime {
+            Ok(self.spawn_runtime_model(&spec, checkpoint, source))
+        } else {
+            let bundle = spec.resolve_bundle(checkpoint, 0x5EED)?;
+            let model_spec = bundle.spec.clone();
+            let eng: Arc<dyn InferenceEngine + Send + Sync> =
+                Arc::new(NativeEngine::from_bundle(&bundle)?);
+            Ok(spawn_engine_workers(
+                artifact.to_string(),
+                eng,
+                self.default_workers,
+                self.max_wait,
+                source,
+                Some(model_spec),
+                None,
+            ))
+        }
+    }
+
+    /// PJRT handles are not `Send`: the engine is built inside its
+    /// (single) worker thread, which then owns it for life.
+    fn spawn_runtime_model(
+        &self,
+        spec: &ArtifactSpec,
+        checkpoint: Option<&Path>,
+        source: ModelSource,
+    ) -> Arc<ModelHandle> {
+        let batcher = DynamicBatcher::new(spec.batch.max(1), self.max_wait).padded();
+        let stop = Arc::new(AtomicBool::new(false));
+        let handle = Arc::new(ModelHandle {
+            name: spec.name.clone(),
+            backend: "runtime",
+            workers: 1,
+            n_in: spec.dims[0],
+            n_out: *spec.dims.last().unwrap_or(&0),
+            max_batch: spec.batch.max(1),
+            batcher: batcher.clone(),
+            served: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            stop: stop.clone(),
+            joins: Mutex::new(Vec::new()),
+            source,
+            spec: Some(spec.to_model_spec()),
+            bundle_version: None,
+        });
+        let dir = self.artifacts_dir.clone();
+        let artifact = spec.name.clone();
+        let ckpt = checkpoint.map(Path::to_path_buf);
+        let n_in = spec.dims[0];
+        let join = std::thread::spawn(move || {
+            match RuntimeEngine::open(&dir, &artifact, ckpt.as_deref()) {
+                Ok(eng) => worker_loop(&eng, &batcher, &stop),
+                Err(e) => {
+                    let msg = format!("runtime backend for '{artifact}' failed: {e:#}");
+                    eprintln!("{msg}");
+                    error_loop(&msg, n_in, &batcher, &stop);
+                }
+            }
+        });
+        handle.joins.lock().unwrap().push(join);
+        handle
+    }
+
+    /// Rebuild a model from its recorded source (`{"cmd":"reload"}`);
+    /// `None` means the source is not reloadable (injected engine).
+    fn rebuild(&self, handle: &ModelHandle) -> Result<Option<Arc<ModelHandle>>> {
+        match &handle.source {
+            ModelSource::Injected => Ok(None),
+            ModelSource::Bundle(path) => self
+                .open_bundle(path, Some(&handle.name), handle.workers)
+                .map(Some),
+            ModelSource::Artifact { artifact, checkpoint, .. } => {
+                self.open_artifact(artifact, checkpoint.as_deref()).map(Some)
+            }
+        }
+    }
 }
 
 /// A bound server: workers are already running; [`Server::run`] enters
@@ -102,18 +363,15 @@ struct Registry {
 pub struct Server {
     listener: TcpListener,
     local: SocketAddr,
-    registry: Arc<Registry>,
-    stop: Arc<AtomicBool>,
-    served: Arc<AtomicU64>,
-    max_requests: u64,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    ctx: Arc<ServeCtx>,
 }
 
 impl Server {
     /// Bind the listener, build one engine per configured model, and
     /// spawn the worker threads. Fails eagerly on a bad address, an
-    /// unknown artifact, a checkpoint/spec mismatch, or (with
-    /// `--backend runtime`) an unavailable PJRT runtime.
+    /// unknown artifact, an unreadable bundle, a checkpoint/spec
+    /// mismatch, or (with `--backend runtime`) an unavailable PJRT
+    /// runtime.
     pub fn bind(opt: ServeOptions) -> Result<Server> {
         Server::bind_with_engines(opt, Vec::new())
     }
@@ -130,135 +388,71 @@ impl Server {
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
 
-        let stop = Arc::new(AtomicBool::new(false));
-        let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
-        let mut models: BTreeMap<String, Arc<ModelHandle>> = BTreeMap::new();
-        match Server::build_registry(&opt, custom, &stop, &mut workers, &mut models) {
-            Ok(default_model) => Ok(Server {
-                listener,
-                local,
-                registry: Arc::new(Registry { models, default_model }),
-                stop,
-                served: Arc::new(AtomicU64::new(0)),
-                max_requests: opt.max_requests,
-                workers,
-            }),
-            Err(e) => {
-                // don't leak worker threads spawned for earlier models
-                stop.store(true, Ordering::Relaxed);
-                for w in workers {
-                    let _ = w.join();
+        let ctx = Arc::new(ServeCtx {
+            registry: Registry {
+                models: RwLock::new(BTreeMap::new()),
+                default_model: RwLock::new(String::new()),
+            },
+            stop: AtomicBool::new(false),
+            served: AtomicU64::new(0),
+            max_requests: opt.max_requests,
+            artifacts_dir: opt.artifacts_dir.clone(),
+            backend: opt.backend,
+            default_workers: opt.workers,
+            max_wait: opt.max_wait,
+        });
+
+        let mut first_custom: Option<String> = None;
+        let mut first_configured: Option<String> = None;
+        // FnOnce: consumes `custom`, mutates the `first_*` trackers.
+        let build = || -> Result<()> {
+            for (name, eng) in custom {
+                first_custom.get_or_insert_with(|| name.clone());
+                let handle = spawn_engine_workers(
+                    name,
+                    eng,
+                    ctx.default_workers,
+                    ctx.max_wait,
+                    ModelSource::Injected,
+                    None,
+                    None,
+                );
+                let name = handle.name.clone();
+                if let Some(displaced) = ctx.registry.insert(handle) {
+                    // stop the displaced handle's workers too — the
+                    // error path below only retires what's in the map
+                    retire(&displaced);
+                    return Err(anyhow!("duplicate model name '{name}'"));
                 }
-                Err(e)
             }
-        }
-    }
-
-    /// Build every model's engine + batcher + workers; returns the
-    /// default model name.
-    fn build_registry(
-        opt: &ServeOptions,
-        custom: Vec<(String, Arc<dyn InferenceEngine + Send + Sync>)>,
-        stop: &Arc<AtomicBool>,
-        workers: &mut Vec<std::thread::JoinHandle<()>>,
-        models: &mut BTreeMap<String, Arc<ModelHandle>>,
-    ) -> Result<String> {
-        let mut default_model = opt.models.first().map(|m| m.artifact.clone());
-
-        for (name, eng) in custom {
-            default_model.get_or_insert_with(|| name.clone());
-            let handle =
-                spawn_engine_workers(name.clone(), eng, opt.workers, opt.max_wait, stop, workers);
-            if models.insert(name.clone(), handle).is_some() {
-                return Err(anyhow!("duplicate model name '{name}'"));
-            }
-        }
-
-        if !opt.models.is_empty() {
-            let manifest = Manifest::load(&opt.artifacts_dir.join("manifest.json"))?;
-            // Probe the PJRT runtime once for all models that may want
-            // it: can the client open, and do the predict graphs exist?
-            // (Compile errors surface later, in the worker, as explicit
-            // error replies.)
-            let runtime_err = if matches!(opt.backend, Backend::Runtime | Backend::Auto) {
-                probe_runtime(opt, &manifest)
-            } else {
-                None
-            };
-
             for mc in &opt.models {
-                let spec = manifest
-                    .get(&mc.artifact)
-                    .ok_or_else(|| anyhow!("unknown artifact '{}'", mc.artifact))?
-                    .clone();
-                let use_runtime = match (opt.backend, &runtime_err) {
-                    (Backend::Native, _) => false,
-                    (Backend::Runtime, Some(e)) => {
-                        return Err(anyhow!("--backend runtime unavailable: {e}"))
-                    }
-                    (Backend::Runtime, None) => true,
-                    (Backend::Auto, Some(e)) => {
-                        eprintln!(
-                            "backend auto: runtime unavailable ({e}); serving '{}' natively",
-                            mc.artifact
-                        );
-                        false
-                    }
-                    (Backend::Auto, None) => true,
-                };
-                let handle = if use_runtime {
-                    // PJRT handles are not Send: the engine is built
-                    // inside its (single) worker thread.
-                    let batcher = DynamicBatcher::new(spec.batch.max(1), opt.max_wait).padded();
-                    let handle = Arc::new(ModelHandle {
-                        name: mc.artifact.clone(),
-                        backend: "runtime",
-                        workers: 1,
-                        n_in: spec.dims[0],
-                        max_batch: spec.batch.max(1),
-                        batcher: batcher.clone(),
-                        served: AtomicU64::new(0),
-                        errors: AtomicU64::new(0),
-                    });
-                    let stop_w = stop.clone();
-                    let dir = opt.artifacts_dir.clone();
-                    let artifact = mc.artifact.clone();
-                    let ckpt = mc.checkpoint.clone();
-                    let n_in = spec.dims[0];
-                    workers.push(std::thread::spawn(move || {
-                        match RuntimeEngine::open(&dir, &artifact, ckpt.as_deref()) {
-                            Ok(eng) => worker_loop(&eng, &batcher, &stop_w),
-                            Err(e) => {
-                                let msg =
-                                    format!("runtime backend for '{artifact}' failed: {e:#}");
-                                eprintln!("{msg}");
-                                error_loop(&msg, n_in, &batcher, &stop_w);
-                            }
-                        }
-                    }));
-                    handle
-                } else {
-                    let state = load_state(&spec, mc.checkpoint.as_deref())?;
-                    let eng: Arc<dyn InferenceEngine + Send + Sync> =
-                        Arc::new(NativeEngine::from_spec(&spec, &state)?);
-                    spawn_engine_workers(
-                        mc.artifact.clone(),
-                        eng,
-                        opt.workers,
-                        opt.max_wait,
-                        stop,
-                        workers,
-                    )
-                };
+                let handle = ctx.open_from_config(mc)?;
+                let name = handle.name.clone();
                 // a duplicate would orphan the first entry's workers
                 // and batcher while stats silently showed only one
-                if models.insert(mc.artifact.clone(), handle).is_some() {
-                    return Err(anyhow!("duplicate model name '{}'", mc.artifact));
+                if let Some(displaced) = ctx.registry.insert(handle) {
+                    retire(&displaced);
+                    return Err(anyhow!("duplicate model name '{name}'"));
                 }
+                first_configured.get_or_insert(name);
+            }
+            Ok(())
+        };
+        match build() {
+            Ok(()) => {}
+            Err(e) => {
+                // don't leak worker threads spawned for earlier models
+                for h in ctx.registry.snapshot() {
+                    retire(&h);
+                }
+                return Err(e);
             }
         }
-
-        default_model.ok_or_else(|| anyhow!("no models configured"))
+        let default = first_configured
+            .or(first_custom)
+            .ok_or_else(|| anyhow!("no models configured"))?;
+        ctx.registry.set_default(&default);
+        Ok(Server { listener, local, ctx })
     }
 
     /// The bound address — pass port 0 to `ServeOptions::addr` and read
@@ -271,28 +465,29 @@ impl Server {
     /// `max_requests`). Finished connection threads are reaped every
     /// iteration so a long-running server holds one handle per *live*
     /// connection, not per connection ever accepted.
-    pub fn run(mut self) -> Result<()> {
-        let names: Vec<&str> = self.registry.models.keys().map(String::as_str).collect();
-        println!("serving [{}] on {}", names.join(", "), self.local);
+    pub fn run(self) -> Result<()> {
+        let ctx = self.ctx;
+        println!(
+            "serving [{}] on {}",
+            ctx.registry.names().join(", "),
+            self.local
+        );
         let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
         let mut result = Ok(());
-        while !self.stop.load(Ordering::Relaxed) {
+        while !ctx.stop.load(Ordering::Relaxed) {
             match self.listener.accept() {
                 Ok((stream, _)) => {
-                    let reg = self.registry.clone();
-                    let stop_c = self.stop.clone();
-                    let served_c = self.served.clone();
-                    let max_req = self.max_requests;
+                    let ctx = ctx.clone();
                     conns.push(std::thread::spawn(move || {
-                        let _ = handle_conn(stream, &reg, &stop_c, &served_c, max_req);
+                        let _ = handle_conn(stream, &ctx);
                     }));
                 }
                 Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                     std::thread::sleep(Duration::from_millis(2));
-                    if self.max_requests > 0
-                        && self.served.load(Ordering::Relaxed) >= self.max_requests
+                    if ctx.max_requests > 0
+                        && ctx.served.load(Ordering::Relaxed) >= ctx.max_requests
                     {
-                        self.stop.store(true, Ordering::Relaxed);
+                        ctx.stop.store(true, Ordering::Relaxed);
                     }
                 }
                 // fall through to the shutdown sequence below so worker
@@ -311,16 +506,17 @@ impl Server {
                 }
             }
         }
-        // Shutdown: stop the workers first (they exit within one idle
-        // poll), then fail queued requests fast until every connection
-        // thread has exited — a request can still slip into a queue
-        // after a drain pass, so drain and reap in a loop.
-        self.stop.store(true, Ordering::Relaxed);
-        for w in self.workers.drain(..) {
-            let _ = w.join();
+        // Shutdown: retire every model (stops + joins its workers,
+        // fails queued requests fast), then keep failing stragglers
+        // until every connection thread has exited — a request can
+        // still slip into a queue after a drain pass, so drain and
+        // reap in a loop.
+        ctx.stop.store(true, Ordering::Relaxed);
+        for h in ctx.registry.snapshot() {
+            retire(&h);
         }
         while !conns.is_empty() {
-            for h in self.registry.models.values() {
+            for h in ctx.registry.snapshot() {
                 let pending = h.batcher.drain_pending();
                 if !pending.is_empty() {
                     h.batcher.dispatch(pending, h.n_in, |_| Err(anyhow!("server shutting down")));
@@ -338,10 +534,11 @@ impl Server {
                 std::thread::sleep(Duration::from_millis(5));
             }
         }
-        for (name, h) in &self.registry.models {
+        for h in ctx.registry.snapshot() {
             let s = h.batcher.stats();
             println!(
-                "{name} [{} x{}]: {} served / {} errors in {} batches (mean fill {:.0}%)",
+                "{} [{} x{}]: {} served / {} errors in {} batches (mean fill {:.0}%)",
+                h.name,
                 h.backend,
                 h.workers,
                 h.served.load(Ordering::Relaxed),
@@ -368,56 +565,57 @@ fn spawn_engine_workers(
     eng: Arc<dyn InferenceEngine + Send + Sync>,
     n_workers: usize,
     max_wait: Duration,
-    stop: &Arc<AtomicBool>,
-    workers: &mut Vec<std::thread::JoinHandle<()>>,
+    source: ModelSource,
+    spec: Option<ModelSpec>,
+    bundle_version: Option<u32>,
 ) -> Arc<ModelHandle> {
     let n_workers = n_workers.max(1);
     let mut batcher = DynamicBatcher::new(eng.max_batch(), max_wait);
     if eng.fixed_batch() {
         batcher = batcher.padded();
     }
+    let stop = Arc::new(AtomicBool::new(false));
     let handle = Arc::new(ModelHandle {
         name,
         backend: eng.name(),
         workers: n_workers,
         n_in: eng.n_in(),
+        n_out: eng.n_out(),
         max_batch: eng.max_batch(),
         batcher: batcher.clone(),
         served: AtomicU64::new(0),
         errors: AtomicU64::new(0),
+        stop: stop.clone(),
+        joins: Mutex::new(Vec::new()),
+        source,
+        spec,
+        bundle_version,
     });
+    let mut joins = handle.joins.lock().unwrap();
     for _ in 0..n_workers {
         let eng = eng.clone();
         let b = batcher.clone();
         let stop = stop.clone();
-        workers.push(std::thread::spawn(move || worker_loop(&*eng, &b, &stop)));
+        joins.push(std::thread::spawn(move || worker_loop(&*eng, &b, &stop)));
     }
+    drop(joins);
     handle
 }
 
 /// PJRT availability probe for `Backend::Runtime` / `Backend::Auto`:
-/// returns `Some(reason)` when the runtime cannot serve `opt.models`.
-fn probe_runtime(opt: &ServeOptions, manifest: &Manifest) -> Option<String> {
-    if let Err(e) = Runtime::open(&opt.artifacts_dir) {
+/// returns `Some(reason)` when the runtime cannot serve `spec`.
+fn probe_runtime(dir: &Path, spec: &ArtifactSpec) -> Option<String> {
+    if let Err(e) = Runtime::open(dir) {
         return Some(format!("{e:#}"));
     }
-    for mc in &opt.models {
-        let spec = manifest.get(&mc.artifact)?; // unknown artifact: reported later
-        let hlo = opt.artifacts_dir.join(&spec.graphs.1);
-        if !hlo.exists() {
-            return Some(format!("missing predict graph {}", hlo.display()));
-        }
+    let hlo = dir.join(&spec.graphs.1);
+    if !hlo.exists() {
+        return Some(format!("missing predict graph {}", hlo.display()));
     }
     None
 }
 
-fn handle_conn(
-    stream: TcpStream,
-    reg: &Registry,
-    stop: &AtomicBool,
-    served: &AtomicU64,
-    max_requests: u64,
-) -> Result<()> {
+fn handle_conn(stream: TcpStream, ctx: &ServeCtx) -> Result<()> {
     stream.set_nodelay(true).ok();
     // Bounded reads so an idle connection re-checks the stop flag a few
     // times a second — otherwise a silent client would block this
@@ -432,13 +630,13 @@ fn handle_conn(
             Ok(_) => {
                 if !line.trim().is_empty() {
                     let reply = match Json::parse(&line) {
-                        Ok(req) => handle_request(&req, reg, stop, served, max_requests),
+                        Ok(req) => handle_request(&req, ctx),
                         Err(e) => obj(vec![("error", Json::Str(format!("bad json: {e}")))]),
                     };
                     writeln!(writer, "{}", reply.to_string())?;
                 }
                 line.clear();
-                if stop.load(Ordering::Relaxed) {
+                if ctx.stop.load(Ordering::Relaxed) {
                     break;
                 }
             }
@@ -449,7 +647,7 @@ fn handle_conn(
                 if e.kind() == std::io::ErrorKind::WouldBlock
                     || e.kind() == std::io::ErrorKind::TimedOut =>
             {
-                if stop.load(Ordering::Relaxed) {
+                if ctx.stop.load(Ordering::Relaxed) {
                     break;
                 }
             }
@@ -460,31 +658,27 @@ fn handle_conn(
 }
 
 /// One parsed request → one JSON reply.
-fn handle_request(
-    req: &Json,
-    reg: &Registry,
-    stop: &AtomicBool,
-    served: &AtomicU64,
-    max_requests: u64,
-) -> Json {
+fn handle_request(req: &Json, ctx: &ServeCtx) -> Json {
     if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
         return match cmd {
             "shutdown" => {
-                stop.store(true, Ordering::Relaxed);
+                ctx.stop.store(true, Ordering::Relaxed);
                 obj(vec![("ok", Json::Bool(true))])
             }
-            "stats" => stats_json(reg, served),
+            "stats" => stats_json(ctx),
+            "models" => models_json(ctx),
+            "load" => cmd_load(req, ctx),
+            "unload" => cmd_unload(req, ctx),
+            "reload" => cmd_reload(ctx),
             other => obj(vec![("error", Json::Str(format!("unknown cmd {other}")))]),
         };
     }
     let Some(pixels) = req.get("pixels").and_then(Json::as_arr) else {
         return obj(vec![("error", Json::Str("need pixels or cmd".into()))]);
     };
-    let model_name = req
-        .get("model")
-        .and_then(Json::as_str)
-        .unwrap_or(&reg.default_model);
-    let Some(handle) = reg.models.get(model_name) else {
+    let default_name = ctx.registry.default_name();
+    let model_name = req.get("model").and_then(Json::as_str).unwrap_or(&default_name);
+    let Some(handle) = ctx.registry.get(model_name) else {
         return obj(vec![(
             "error",
             Json::Str(format!("unknown model '{model_name}'")),
@@ -508,6 +702,12 @@ fn handle_request(
             ("model", Json::Str(handle.name.clone())),
         ]);
     }
+    if handle.stop.load(Ordering::Relaxed) {
+        return obj(vec![(
+            "error",
+            Json::Str(format!("model '{}' unloaded", handle.name)),
+        )]);
+    }
     let rx = handle.batcher.handle().submit(pixels);
     match rx.recv_timeout(Duration::from_secs(10)) {
         Ok(resp) => {
@@ -522,9 +722,9 @@ fn handle_request(
                 // the global counter (and the max_requests stop trigger)
                 // tracks successful classifications only, matching the
                 // per-model counters
-                let n = served.fetch_add(1, Ordering::Relaxed) + 1;
-                if max_requests > 0 && n >= max_requests {
-                    stop.store(true, Ordering::Relaxed);
+                let n = ctx.served.fetch_add(1, Ordering::Relaxed) + 1;
+                if ctx.max_requests > 0 && n >= ctx.max_requests {
+                    ctx.stop.store(true, Ordering::Relaxed);
                 }
                 obj(vec![
                     ("class", num(resp.class as f64)),
@@ -544,17 +744,107 @@ fn handle_request(
     }
 }
 
+/// `{"cmd":"load","path":…}`: hot-load a bundle into the running
+/// registry. An existing model of the same name is swapped out — its
+/// in-flight requests drain on the displaced handle, new requests hit
+/// the fresh engine — and every other model is untouched.
+fn cmd_load(req: &Json, ctx: &ServeCtx) -> Json {
+    let Some(path) = req.get("path").and_then(Json::as_str) else {
+        return obj(vec![("error", Json::Str("load needs a bundle \"path\"".into()))]);
+    };
+    let name_override = req.get("name").and_then(Json::as_str);
+    let workers = req
+        .get("workers")
+        .and_then(Json::as_usize)
+        .unwrap_or(ctx.default_workers);
+    match ctx.open_bundle(Path::new(path), name_override, workers) {
+        Ok(handle) => {
+            let name = handle.name.clone();
+            let stored = handle.spec.as_ref().map(|s| s.stored_params()).unwrap_or(0);
+            let displaced = ctx.registry.insert(handle);
+            if ctx.registry.default_name().is_empty() {
+                ctx.registry.set_default(&name);
+            }
+            let swapped = displaced.is_some();
+            if let Some(old) = displaced {
+                retire(&old);
+            }
+            obj(vec![
+                ("ok", Json::Bool(true)),
+                ("model", Json::Str(name)),
+                ("swapped", Json::Bool(swapped)),
+                ("stored_params", num(stored as f64)),
+            ])
+        }
+        Err(e) => obj(vec![("error", Json::Str(format!("{e:#}")))]),
+    }
+}
+
+/// `{"cmd":"unload","model":…}`: remove a model. Its queued requests
+/// get explicit errors; other models keep serving.
+fn cmd_unload(req: &Json, ctx: &ServeCtx) -> Json {
+    let Some(name) = req.get("model").and_then(Json::as_str) else {
+        return obj(vec![("error", Json::Str("unload needs a \"model\" name".into()))]);
+    };
+    match ctx.registry.remove(name) {
+        None => obj(vec![("error", Json::Str(format!("unknown model '{name}'")))]),
+        Some(handle) => {
+            if ctx.registry.default_name() == name {
+                let next = ctx.registry.names().first().cloned().unwrap_or_default();
+                ctx.registry.set_default(&next);
+            }
+            retire(&handle);
+            obj(vec![
+                ("ok", Json::Bool(true)),
+                ("model", Json::Str(name.to_string())),
+                ("default", Json::Str(ctx.registry.default_name())),
+            ])
+        }
+    }
+}
+
+/// `{"cmd":"reload"}`: rebuild every model from its source file(s),
+/// swapping each in atomically. Injected engines (no file source) are
+/// skipped; per-model failures are reported without disturbing the
+/// running handle.
+fn cmd_reload(ctx: &ServeCtx) -> Json {
+    let mut reloaded = Vec::new();
+    let mut skipped = Vec::new();
+    let mut errors = Vec::new();
+    for handle in ctx.registry.snapshot() {
+        match ctx.rebuild(&handle) {
+            Ok(Some(fresh)) => {
+                let displaced = ctx.registry.insert(fresh);
+                if let Some(old) = displaced {
+                    retire(&old);
+                }
+                reloaded.push(handle.name.clone());
+            }
+            Ok(None) => skipped.push(handle.name.clone()),
+            Err(e) => errors.push(format!("{}: {e:#}", handle.name)),
+        }
+    }
+    let to_arr = |v: Vec<String>| Json::Arr(v.into_iter().map(Json::Str).collect());
+    obj(vec![
+        ("ok", Json::Bool(errors.is_empty())),
+        ("reloaded", to_arr(reloaded)),
+        ("skipped", to_arr(skipped)),
+        ("errors", to_arr(errors)),
+    ])
+}
+
 /// `{"cmd":"stats"}` reply: total successful classifications plus
 /// per-model backend, worker count, served/error counters and batch
 /// fill (top-level `served` == sum of per-model `served`).
-fn stats_json(reg: &Registry, served: &AtomicU64) -> Json {
-    let per: Vec<(&str, Json)> = reg
-        .models
-        .iter()
-        .map(|(name, h)| {
+fn stats_json(ctx: &ServeCtx) -> Json {
+    let per: Vec<(String, Json)> = ctx
+        .registry
+        .snapshot()
+        .into_iter()
+        .map(|h| {
             let s = h.batcher.stats();
             (
-                name.as_str(),
+                h.name.clone(),
                 obj(vec![
                     ("backend", Json::Str(h.backend.to_string())),
                     ("workers", num(h.workers as f64)),
@@ -567,8 +857,46 @@ fn stats_json(reg: &Registry, served: &AtomicU64) -> Json {
         })
         .collect();
     obj(vec![
-        ("served", num(served.load(Ordering::Relaxed) as f64)),
-        ("models", obj(per)),
+        ("served", num(ctx.served.load(Ordering::Relaxed) as f64)),
+        (
+            "models",
+            Json::Obj(per.into_iter().collect()),
+        ),
+    ])
+}
+
+/// `{"cmd":"models"}` reply: the registry's metadata — spec identity,
+/// storage accounting, compression, bundle version and source per
+/// model, plus the current default.
+fn models_json(ctx: &ServeCtx) -> Json {
+    let per: Vec<(String, Json)> = ctx
+        .registry
+        .snapshot()
+        .into_iter()
+        .map(|h| {
+            let mut pairs = vec![
+                ("backend", Json::Str(h.backend.to_string())),
+                ("workers", num(h.workers as f64)),
+                ("n_in", num(h.n_in as f64)),
+                ("n_out", num(h.n_out as f64)),
+                ("max_batch", num(h.max_batch as f64)),
+                ("source", Json::Str(h.source.describe())),
+            ];
+            if let Some(spec) = &h.spec {
+                pairs.push(("method", Json::Str(spec.method.as_str().to_string())));
+                pairs.push(("stored_params", num(spec.stored_params() as f64)));
+                pairs.push(("virtual_params", num(spec.virtual_params() as f64)));
+                pairs.push(("compression", num(spec.compression())));
+            }
+            if let Some(v) = h.bundle_version {
+                pairs.push(("bundle_version", num(v as f64)));
+            }
+            (h.name.clone(), obj(pairs))
+        })
+        .collect();
+    obj(vec![
+        ("default", Json::Str(ctx.registry.default_name())),
+        ("models", Json::Obj(per.into_iter().collect())),
     ])
 }
 
@@ -616,6 +944,43 @@ impl Client {
                 .collect(),
             v.req_f64("latency_us").map_err(|e| anyhow!(e))? as u64,
         ))
+    }
+
+    /// Send one admin command object and return the parsed reply
+    /// (turned into `Err` when the server reports `"error"`).
+    pub fn admin(&mut self, cmd: Json) -> Result<Json> {
+        writeln!(self.writer, "{}", cmd.to_string())?;
+        let v = self.read_reply()?;
+        if let Some(err) = v.get("error").and_then(Json::as_str) {
+            return Err(anyhow!("server error: {err}"));
+        }
+        Ok(v)
+    }
+
+    /// Hot-load a bundle file into the running server.
+    pub fn load_model(&mut self, path: &str) -> Result<Json> {
+        self.admin(obj(vec![
+            ("cmd", Json::Str("load".into())),
+            ("path", Json::Str(path.to_string())),
+        ]))
+    }
+
+    /// Remove a served model.
+    pub fn unload_model(&mut self, name: &str) -> Result<Json> {
+        self.admin(obj(vec![
+            ("cmd", Json::Str("unload".into())),
+            ("model", Json::Str(name.to_string())),
+        ]))
+    }
+
+    /// Rebuild every served model from its source file(s).
+    pub fn reload(&mut self) -> Result<Json> {
+        self.admin(obj(vec![("cmd", Json::Str("reload".into()))]))
+    }
+
+    /// Fetch the registry metadata (`{"cmd":"models"}`).
+    pub fn models(&mut self) -> Result<Json> {
+        self.admin(obj(vec![("cmd", Json::Str("models".into()))]))
     }
 
     /// Fetch the server's `stats` object.

@@ -63,6 +63,25 @@ impl Args {
     pub fn has_flag(&self, key: &str) -> bool {
         self.flags.iter().any(|f| f == key)
     }
+
+    /// Every `--key` present on the command line (options and flags).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.opts
+            .keys()
+            .map(String::as_str)
+            .chain(self.flags.iter().map(String::as_str))
+    }
+
+    /// Keys that are not in `known` — misspelled or unsupported
+    /// options, which `parse` itself accepts silently. Callers warn on
+    /// these (or error under `--strict`).
+    pub fn unknown_keys(&self, known: &[&str]) -> Vec<String> {
+        let mut out: Vec<String> =
+            self.keys().filter(|k| !known.contains(k)).map(String::from).collect();
+        out.sort();
+        out.dedup();
+        out
+    }
 }
 
 #[cfg(test)]
@@ -111,5 +130,17 @@ mod tests {
         let a = parse("serve");
         assert_eq!(a.get_f32("lr", 0.1), 0.1);
         assert_eq!(a.get_or("host", "127.0.0.1"), "127.0.0.1");
+    }
+
+    #[test]
+    fn unknown_keys_are_collected_not_swallowed() {
+        let a = parse("train --config foo --epochz 10 --fastt --epochs 3");
+        let unknown = a.unknown_keys(&["config", "epochs", "strict"]);
+        assert_eq!(unknown, vec!["epochz".to_string(), "fastt".to_string()]);
+        assert!(a.unknown_keys(&["config", "epochs", "epochz", "fastt"]).is_empty());
+        // --strict itself is an ordinary flag the caller whitelists
+        let s = parse("train --strict --config foo");
+        assert!(s.has_flag("strict"));
+        assert!(s.unknown_keys(&["config", "strict"]).is_empty());
     }
 }

@@ -1,0 +1,127 @@
+//! Bundle format acceptance: save→load→predict bit-equality for every
+//! [`Method`], plus the corruption error paths — truncation, checksum
+//! damage, future format versions and parameter-shape mismatches all
+//! fail with the right typed [`ModelError`].
+
+use hashednets::model::{Method, ModelBundle, ModelError, ModelSpec, BUNDLE_VERSION};
+use hashednets::nn::Network;
+use hashednets::tensor::Matrix;
+use hashednets::util::rng::Pcg32;
+use std::path::PathBuf;
+
+fn spec_for(method: Method) -> ModelSpec {
+    // budgets sized so every kind is exercised: hashed K, RER kept
+    // edges, LRD ranks 3 and 4 (budget/n rounded)
+    ModelSpec::new(
+        format!("rt_{method}"),
+        method,
+        vec![9, 7, 4],
+        vec![21, 14],
+        hashednets::hash::DEFAULT_SEED_BASE,
+        5,
+    )
+    .expect("valid spec")
+}
+
+fn trained_net(spec: &ModelSpec, seed: u64) -> Network {
+    let mut net = Network::from_spec(spec).expect("from_spec");
+    net.init(&mut Pcg32::new(seed, 31));
+    net
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("hn_bundle_{tag}_{}.hnb", std::process::id()))
+}
+
+#[test]
+fn save_load_predict_bit_equality_per_method() {
+    let x = Matrix::from_fn(6, 9, |i, j| ((i * 13 + j * 7) % 11) as f32 * 0.17 - 0.8);
+    for method in Method::ALL {
+        let spec = spec_for(method);
+        let net = trained_net(&spec, 42);
+        let want = net.predict(&x);
+
+        let path = tmp(method.as_str());
+        net.to_bundle(&spec).expect("to_bundle").save(&path).expect("save");
+        let loaded = ModelBundle::load(&path).expect("load");
+        std::fs::remove_file(&path).ok();
+
+        assert_eq!(loaded.spec, spec, "{method}: spec round-trip");
+        assert_eq!(loaded.version, BUNDLE_VERSION);
+        let back = Network::from_bundle(&loaded).expect("from_bundle");
+        let got = back.predict(&x);
+        // bit-exact: same params, same hash plans, same kernels
+        assert_eq!(got.data, want.data, "{method}: predict must be bit-identical");
+    }
+}
+
+#[test]
+fn truncated_file_is_a_clean_error() {
+    let spec = spec_for(Method::Hashnet);
+    let bytes = trained_net(&spec, 1).to_bundle(&spec).unwrap().to_bytes();
+    // cut at several depths: inside the header, the spec, the tensors
+    for cut in [2usize, 9, 20, bytes.len() / 2, bytes.len() - 5] {
+        let err = ModelBundle::from_bytes(&bytes[..cut]).expect_err("truncated must fail");
+        assert!(
+            matches!(err, ModelError::Truncated(_) | ModelError::BadChecksum { .. }),
+            "cut at {cut}: unexpected {err:?}"
+        );
+    }
+    // cutting the trailing checksum itself
+    let err = ModelBundle::from_bytes(&bytes[..bytes.len() - 4]).expect_err("no checksum");
+    assert!(
+        matches!(err, ModelError::Truncated(_) | ModelError::BadChecksum { .. }),
+        "{err:?}"
+    );
+}
+
+#[test]
+fn flipped_payload_byte_is_a_checksum_error() {
+    let spec = spec_for(Method::Hashnet);
+    let mut bytes = trained_net(&spec, 2).to_bundle(&spec).unwrap().to_bytes();
+    // flip one byte inside the f32 payload (well past the header+spec,
+    // before the checksum) — structure stays parseable, content lies
+    let at = bytes.len() - 12;
+    bytes[at] ^= 0xA5;
+    let err = ModelBundle::from_bytes(&bytes).expect_err("corrupt payload must fail");
+    assert!(matches!(err, ModelError::BadChecksum { .. }), "{err:?}");
+}
+
+#[test]
+fn future_version_is_rejected_before_anything_else() {
+    let spec = spec_for(Method::Nn);
+    let mut bytes = trained_net(&spec, 3).to_bundle(&spec).unwrap().to_bytes();
+    // version field lives at bytes 4..8; a future writer may change
+    // everything after it (including the checksum scheme), so the
+    // version check must fire without consulting the checksum
+    bytes[4..8].copy_from_slice(&(BUNDLE_VERSION + 7).to_le_bytes());
+    let err = ModelBundle::from_bytes(&bytes).expect_err("future version must fail");
+    match err {
+        ModelError::FutureVersion { found, supported } => {
+            assert_eq!(found, BUNDLE_VERSION + 7);
+            assert_eq!(supported, BUNDLE_VERSION);
+        }
+        other => panic!("expected FutureVersion, got {other:?}"),
+    }
+}
+
+#[test]
+fn wrong_shape_params_are_rejected_on_load() {
+    let spec = spec_for(Method::Hashnet);
+    let net = trained_net(&spec, 4);
+    let mut bundle = net.to_bundle(&spec).unwrap();
+    // doctor the bundle post-validation (fields are public; `load` is
+    // the trust boundary): claim a different budget than the tensors
+    bundle.spec.budgets = vec![22, 14];
+    let bytes = bundle.to_bytes();
+    let err = ModelBundle::from_bytes(&bytes).expect_err("shape lie must fail");
+    assert!(matches!(err, ModelError::ShapeMismatch(_)), "{err:?}");
+}
+
+#[test]
+fn garbage_magic_is_not_a_bundle() {
+    let err = ModelBundle::from_bytes(b"HNCKxxxxxxxxxxxxxxxx").expect_err("wrong magic");
+    assert!(matches!(err, ModelError::BadMagic), "{err:?}");
+    let err = ModelBundle::from_bytes(b"HN").expect_err("too short");
+    assert!(matches!(err, ModelError::Truncated(_)), "{err:?}");
+}

@@ -31,12 +31,11 @@ fn artifact_predict_matches_native_engine() {
     let Some(rt) = runtime() else { return };
     for name in [TINY_HASHNET, TINY_TEACHER] {
         let spec = rt.manifest.get(name).unwrap().clone();
-        let state = ModelState::init(&spec, 11);
+        let state = spec.init_state(11);
         let exe = rt.load(name, Graph::Predict).unwrap();
         let ds = generate(Kind::Basic, Split::Test, spec.batch, 5);
         let got = exe.predict(&state, &ds.images).unwrap();
-        let mut net = native::network_from_spec(&spec);
-        native::load_params(&mut net, &spec, &state);
+        let net = native::try_build(&spec, &state).unwrap();
         let want = net.predict(&ds.images);
         let max_d = got
             .data
@@ -53,7 +52,7 @@ fn artifact_train_step_reduces_loss_and_matches_native_math() {
     let Some(rt) = runtime() else { return };
     let spec = rt.manifest.get(TINY_HASHNET).unwrap().clone();
     let exe = rt.load(TINY_HASHNET, Graph::Train).unwrap();
-    let mut state = ModelState::init(&spec, 3);
+    let mut state = spec.init_state(3);
     let ds = generate(Kind::Basic, Split::Train, 400, 3);
     let hyper = Hyper { lr: 0.1, momentum: 0.9, keep_prob: 1.0, ..Hyper::default() };
     let mut losses = Vec::new();
@@ -75,7 +74,7 @@ fn momentum_buffers_change_during_training() {
     let Some(rt) = runtime() else { return };
     let spec = rt.manifest.get(TINY_HASHNET).unwrap().clone();
     let exe = rt.load(TINY_HASHNET, Graph::Train).unwrap();
-    let mut state = ModelState::init(&spec, 3);
+    let mut state = spec.init_state(3);
     let ds = generate(Kind::Basic, Split::Train, 100, 3);
     let (x, y) = ds.gather_batch(&(0..spec.batch as u32).collect::<Vec<_>>(), spec.batch);
     let before = state.momenta.clone();
@@ -92,7 +91,7 @@ fn dropout_seed_changes_training_noise() {
     let (x, y) = ds.gather_batch(&(0..spec.batch as u32).collect::<Vec<_>>(), spec.batch);
     let hyper = Hyper { keep_prob: 0.5, ..Hyper::default() };
     let run = |seed: u32| {
-        let mut st = ModelState::init(&spec, 9);
+        let mut st = spec.init_state(9);
         exe.train_step(&mut st, &x, &y, None, &hyper, seed).unwrap();
         st.params[0].clone()
     };
@@ -106,7 +105,7 @@ fn predict_all_pads_tail_batches_correctly() {
     let Some(rt) = runtime() else { return };
     let spec = rt.manifest.get(TINY_HASHNET).unwrap().clone();
     let exe = rt.load(TINY_HASHNET, Graph::Predict).unwrap();
-    let state = ModelState::init(&spec, 2);
+    let state = spec.init_state(2);
     let n = spec.batch + 7; // forces a padded tail
     let ds = generate(Kind::Basic, Split::Test, n, 8);
     let all = exe.predict_all(&state, &ds.images).unwrap();

@@ -5,13 +5,16 @@
 //! explicit JSON errors for bad input and failing executors.
 
 use hashednets::coordinator::native;
+use hashednets::model::{Method, ModelSpec, BUNDLE_VERSION};
 use hashednets::nn::Network;
-use hashednets::runtime::{Manifest, ModelState};
+use hashednets::runtime::Manifest;
 use hashednets::serve::{
     Backend, Client, InferenceEngine, ModelConfig, ServeOptions, Server,
 };
 use hashednets::tensor::Matrix;
+use hashednets::util::rng::Pcg32;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
 const N_IN: usize = 12;
@@ -56,7 +59,7 @@ impl Fixture {
         let mut nets = Vec::new();
         for (i, name) in ["hash_a", "dense_b"].iter().enumerate() {
             let spec = manifest.get(name).expect("spec");
-            let state = ModelState::init(spec, 21 + i as u64);
+            let state = spec.init_state(21 + i as u64);
             let ckpt = dir.join(format!("{name}.ckpt"));
             state.save(&ckpt).expect("save ckpt");
             models.push(ModelConfig::new(*name).with_checkpoint(ckpt));
@@ -210,6 +213,122 @@ fn unknown_model_is_explicit_json_error() {
     assert!(format!("{err:#}").contains("unknown model"), "{err:#}");
 
     client.shutdown().expect("shutdown");
+    server.join().unwrap().expect("server run");
+}
+
+/// The acceptance path for hot-(re)loadable serving: a bundle "trained"
+/// **after** the server is up is pushed into the running registry via
+/// `{"cmd":"load"}` and served correctly, while existing connections to
+/// the other models keep classifying uninterrupted. Then `reload`
+/// rebuilds every model from disk and `unload` removes one, without
+/// disturbing the rest.
+#[test]
+fn hot_load_serves_new_bundle_while_old_connections_continue() {
+    let fx = Fixture::new("hotload");
+    let srv = Server::bind(fx.options(2)).expect("bind");
+    let addr = srv.local_addr().to_string();
+    let server = std::thread::spawn(move || srv.run());
+
+    // A model the server has never heard of, created post-startup.
+    let spec_c = ModelSpec::new(
+        "hash_c",
+        Method::Hashnet,
+        vec![N_IN, 10, N_OUT],
+        vec![50, 11],
+        hashednets::hash::DEFAULT_SEED_BASE,
+        4,
+    )
+    .expect("spec_c");
+    let mut cnet = Network::from_spec(&spec_c).expect("net_c");
+    cnet.init(&mut Pcg32::new(77, 0));
+    let bundle_c = cnet.to_bundle(&spec_c).expect("bundle_c");
+    let path_c = fx.dir.join("hash_c.hnb");
+    bundle_c.save(&path_c).expect("save bundle_c");
+
+    let stop = AtomicBool::new(false);
+    std::thread::scope(|s| {
+        // Existing connections: hammer the pre-loaded models throughout
+        // the {"cmd":"load"} and verify every reply against the local
+        // reference network — any interruption fails the expect.
+        let checkers: Vec<_> = (0..2)
+            .map(|c| {
+                let addr = addr.clone();
+                let fx = &fx;
+                let stop = &stop;
+                s.spawn(move || {
+                    let mut client = Client::connect(&addr).expect("connect");
+                    let mut served = 0usize;
+                    while !stop.load(Ordering::Relaxed) {
+                        let model = if c == 0 { "hash_a" } else { "dense_b" };
+                        let pixels = input_row(c, served);
+                        let x = Matrix::from_vec(1, N_IN, pixels.clone());
+                        let want = fx.net(model).predict(&x).softmax_rows();
+                        let (_cl, probs, _) = client
+                            .classify_model(Some(model), &pixels)
+                            .expect("existing connection must stay uninterrupted");
+                        for (a, b) in probs.iter().zip(want.row(0)) {
+                            assert!((a - b).abs() < 1e-3, "{model} drifted during hot-load");
+                        }
+                        served += 1;
+                    }
+                    served
+                })
+            })
+            .collect();
+
+        let mut admin = Client::connect(&addr).expect("admin connect");
+        // give the checkers time to get traffic flowing first
+        std::thread::sleep(std::time::Duration::from_millis(100));
+
+        // load the new bundle into the running server…
+        let reply = admin.load_model(path_c.to_str().unwrap()).expect("load");
+        assert_eq!(reply.req_str("model").unwrap(), "hash_c");
+        // …and it serves correctly immediately
+        for r in 0..5 {
+            let pixels = input_row(9, r);
+            let x = Matrix::from_vec(1, N_IN, pixels.clone());
+            let want = cnet.predict(&x).softmax_rows();
+            let (_cl, probs, _) = admin
+                .classify_model(Some("hash_c"), &pixels)
+                .expect("hot-loaded model classify");
+            assert_eq!(probs.len(), N_OUT);
+            for (a, b) in probs.iter().zip(want.row(0)) {
+                assert!((a - b).abs() < 1e-3, "hash_c reply diverges from its bundle");
+            }
+        }
+        // registry metadata reflects the new model
+        let models = admin.models().expect("models cmd");
+        let mc = models.get("models").and_then(|m| m.get("hash_c")).expect("hash_c listed");
+        assert_eq!(mc.req_str("method").unwrap(), "hashnet");
+        assert_eq!(mc.req_f64("bundle_version").unwrap() as u32, BUNDLE_VERSION);
+        assert_eq!(mc.req_f64("stored_params").unwrap() as usize, 61);
+
+        // let the uninterrupted-traffic claim accumulate some evidence,
+        // then stop the checkers before reload (a swap may fail the
+        // handful of requests already queued on a displaced handle —
+        // that is the documented drain behavior, not an interruption
+        // of *other* models)
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        stop.store(true, Ordering::Relaxed);
+        let total: usize = checkers.into_iter().map(|h| h.join().unwrap()).sum();
+        assert!(total >= 10, "checkers only served {total} requests");
+
+        // reload: every model rebuilt from its source, still serving
+        let r = admin.reload().expect("reload");
+        assert_eq!(r.get("ok").and_then(|v| v.as_bool()), Some(true));
+        admin.classify_model(Some("hash_c"), &input_row(2, 1)).expect("hash_c after reload");
+        admin.classify_model(Some("hash_a"), &input_row(2, 2)).expect("hash_a after reload");
+
+        // unload: gone afterwards, the others unaffected
+        admin.unload_model("hash_c").expect("unload");
+        let err = admin
+            .classify_model(Some("hash_c"), &input_row(2, 3))
+            .expect_err("unloaded model must not serve");
+        assert!(format!("{err:#}").contains("unknown model"), "{err:#}");
+        admin.classify_model(Some("dense_b"), &input_row(2, 4)).expect("dense_b after unload");
+
+        admin.shutdown().expect("shutdown");
+    });
     server.join().unwrap().expect("server run");
 }
 

@@ -9,6 +9,10 @@
 #                   across PRs.
 #   make serve-bench  run only the serving latency sweep (native 1/2/4
 #                   workers vs runtime) and collect BENCH_serve_latency.json.
+#   make train-bench  run only the training throughput sweep (threaded
+#                   backward at 1/2/4 workers, batch 50, plus the
+#                   ordered-reduction overhead) and collect
+#                   BENCH_train_throughput.json.
 #   make smoke      tiny end-to-end train→bundle→serve→hot-load loop on
 #                   the native stack (no artifacts needed); also runs
 #                   as the last step of `make check`.
@@ -20,10 +24,15 @@
 RUST_DIR := rust
 PY_DIR   := python
 
-.PHONY: check bench serve-bench artifacts pytest smoke clean-bench
+.PHONY: check bench serve-bench train-bench artifacts pytest smoke clean-bench
 
+# docs are load-bearing: rustdoc runs with -D warnings (broken intra-doc
+# links fail the build) and the doc-examples on ModelSpec / ModelBundle /
+# TrainOptions execute under `cargo test --doc`, so the paper-mapping
+# documentation can never rot.
 check:
 	cd $(RUST_DIR) && cargo build --release && cargo clippy -q --all-targets -- -D warnings && cargo test -q
+	cd $(RUST_DIR) && RUSTDOCFLAGS="-D warnings" cargo doc -q --no-deps && cargo test -q --doc
 	$(MAKE) smoke
 
 # tiny end-to-end loop on the native stack: train from a pure spec →
@@ -44,6 +53,11 @@ serve-bench:
 	cd $(RUST_DIR) && cargo bench --bench serve_latency
 	@echo "== serve latency report =="
 	@ls -l BENCH_serve_latency.json 2>/dev/null || echo "no BENCH_serve_latency.json produced"
+
+train-bench:
+	cd $(RUST_DIR) && cargo bench --bench train_throughput
+	@echo "== train throughput report =="
+	@ls -l BENCH_train_throughput.json 2>/dev/null || echo "no BENCH_train_throughput.json produced"
 
 artifacts:
 	cd $(PY_DIR) && python -m compile.aot --out-dir ../artifacts --set core

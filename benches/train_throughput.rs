@@ -1,0 +1,110 @@
+//! Training-throughput bench: the threaded backward at the paper's
+//! layer shape (784→1000 virtual, K = virtual/8 ≈ 98k) and the full
+//! `Network::train_step`, swept over 1 / 2 / 4 backward workers at the
+//! paper's minibatch of 50 against the single-thread baseline:
+//!
+//!   * `hashed bwd`  — `Layer::backward` on the hashed layer alone
+//!     (block-partial accumulation + chunked reduction)
+//!   * `hashed bwd ordered` — the fixed-order deterministic reduction,
+//!     so the cost of the reproducibility contract is measured, not
+//!     guessed
+//!   * `dense bwd`   — the dense transpose-matmul backward
+//!     (row-parallel `matmul_tn_par` / `matmul_par`)
+//!   * `train step`  — forward + loss + backward + SGD update on a
+//!     784-1000-10 HashedNet (what `hashednets train --threads` runs)
+//!
+//! Results land in `BENCH_train_throughput.json` at the repo root.
+//!
+//!     cargo bench --bench train_throughput   (or `make train-bench`)
+
+use hashednets::data::{generate, Kind, Split};
+use hashednets::nn::{Layer, LayerKind, Network, TrainHyper, TrainOptions};
+use hashednets::tensor::Matrix;
+use hashednets::util::bench::Bench;
+use hashednets::util::rng::Pcg32;
+
+const OUT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_train_throughput.json");
+const BATCH: usize = 50;
+const THREAD_SWEEP: [usize; 3] = [1, 2, 4];
+
+fn main() {
+    println!("== train_throughput: threaded backward at batch {BATCH}, 784->1000 ==");
+    let mut b = Bench::new(2, 12);
+    b.items_per_iter = Some(BATCH as f64);
+    let mut rng = Pcg32::new(7, 7);
+
+    // --- hashed backward at the paper width (K = virtual/8 ≈ 98k) -----
+    let (m, n) = (784usize, 1000usize);
+    let k = (m + 1) * n / 8;
+    let mut hashed = Layer::new(m, n, LayerKind::Hashed { k }, 0, hashednets::hash::DEFAULT_SEED_BASE);
+    hashed.init(&mut rng);
+    let a = Matrix::from_fn(BATCH, m, |_, _| rng.normal());
+    let delta = Matrix::from_fn(BATCH, n, |_, _| rng.normal());
+    for threads in THREAD_SWEEP {
+        let opts = TrainOptions::with_threads(threads);
+        b.run(&format!("hashed bwd b{BATCH} 784->1000 K=98k t{threads}"), || {
+            let mut grad = vec![0.0f32; k];
+            std::hint::black_box(hashed.backward(&a, &delta, &mut grad, &opts));
+        });
+    }
+    let ordered = TrainOptions::with_threads(4).ordered();
+    b.run(&format!("hashed bwd ordered b{BATCH} 784->1000 K=98k t4"), || {
+        let mut grad = vec![0.0f32; k];
+        std::hint::black_box(hashed.backward(&a, &delta, &mut grad, &ordered));
+    });
+
+    // --- dense backward (the matmul transpose paths) ------------------
+    let mut dense = Layer::new(m, n, LayerKind::Dense, 0, hashednets::hash::DEFAULT_SEED_BASE);
+    dense.init(&mut rng);
+    for threads in THREAD_SWEEP {
+        let opts = TrainOptions::with_threads(threads);
+        b.run(&format!("dense bwd b{BATCH} 784->1000 t{threads}"), || {
+            let mut grad = vec![0.0f32; dense.params.len()];
+            std::hint::black_box(dense.backward(&a, &delta, &mut grad, &opts));
+        });
+    }
+
+    // --- end-to-end train_step on a 784-1000-10 HashedNet -------------
+    let ds = generate(Kind::Basic, Split::Train, BATCH, 3);
+    let x = ds.images.clone();
+    let y: Vec<i32> = ds.labels.iter().map(|&l| l as i32).collect();
+    let hyper = TrainHyper { lr: 0.01, keep_prob: 1.0, ..Default::default() };
+    for threads in THREAD_SWEEP {
+        let opts = TrainOptions::with_threads(threads);
+        let mut net = Network::from_dims(
+            &[784, 1000, 10],
+            vec![LayerKind::Hashed { k }, LayerKind::Hashed { k: 10 * 1001 / 8 }],
+            hashednets::hash::DEFAULT_SEED_BASE,
+        );
+        net.init(&mut Pcg32::new(1, 1));
+        let mut step_rng = Pcg32::new(2, 2);
+        b.run(&format!("train step b{BATCH} 784-1000-10 t{threads}"), || {
+            std::hint::black_box(net.train_step(&x, &y, None, &hyper, &opts, &mut step_rng));
+        });
+    }
+
+    // --- speedup summary + JSON ---------------------------------------
+    let find = |needle: &str| {
+        b.results().iter().find(|s| s.name.contains(needle)).map(|s| s.mean_ns)
+    };
+    for (label, t1, t4) in [
+        (
+            "hashed backward",
+            find("hashed bwd b50 784->1000 K=98k t1"),
+            find("hashed bwd b50 784->1000 K=98k t4"),
+        ),
+        ("dense backward", find("dense bwd b50 784->1000 t1"), find("dense bwd b50 784->1000 t4")),
+        ("train step", find("train step b50 784-1000-10 t1"), find("train step b50 784-1000-10 t4")),
+    ] {
+        if let (Some(t1), Some(t4)) = (t1, t4) {
+            println!("\n{label} speedup at 4 threads over 1: {:.2}x", t1 / t4);
+        }
+    }
+    if let (Some(fast), Some(ord)) =
+        (find("hashed bwd b50 784->1000 K=98k t4"), find("hashed bwd ordered b50"))
+    {
+        println!("ordered-mode overhead at 4 threads: {:.2}x", ord / fast);
+    }
+    b.write_json(OUT).expect("write bench json");
+    println!("wrote {OUT}");
+}

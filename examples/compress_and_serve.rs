@@ -17,7 +17,7 @@ use anyhow::Result;
 use hashednets::compress;
 use hashednets::coordinator::trainer;
 use hashednets::data::{generate, Kind, Split};
-use hashednets::nn::{Network, TrainHyper};
+use hashednets::nn::{Network, TrainHyper, TrainOptions};
 use hashednets::runtime::{ModelState, Runtime};
 use hashednets::serve::{serve, Backend, Client, ModelConfig, ServeOptions};
 use hashednets::util::rng::Pcg32;
@@ -65,7 +65,8 @@ fn main() -> Result<()> {
     let mut hnet = Network::from_bundle(&bundle)?;
     let hyper = TrainHyper { lr: 0.02, keep_prob: 1.0, ..Default::default() };
     let mut rng = Pcg32::new(17, 0);
-    hnet.fit(&train.images, &train.labels, 50, 3, &hyper, None, &mut rng);
+    // auto-threaded backward: the fine-tune uses every core
+    hnet.fit(&train.images, &train.labels, 50, 3, &hyper, &TrainOptions::with_threads(0), None, &mut rng);
     bundle = hnet.to_bundle(&bundle.spec.clone())?;
     let e_ft = trainer::evaluate(&rt, HASHED, &ModelState::from_bundle(&bundle), &test)?;
     println!("      fine-tuned test error {:.2}%", e_ft * 100.0);

@@ -37,7 +37,7 @@ fn main() -> Result<()> {
     // teacher for the DK runs
     println!("[teacher] nn_3l_h100_o10_c1-1 ...");
     let teacher = "nn_3l_h100_o10_c1-1";
-    let tstate = trainer::train_teacher(&rt, teacher, &train, EPOCHS, 0x5EED)?;
+    let tstate = trainer::train_teacher(&rt, teacher, &train, EPOCHS, 0x5EED, &Default::default())?;
 
     let mut table = Table::new(
         &format!("e2e: {} @ {} (3-layer)", DATASET.name(), COMPRESSION),
@@ -64,7 +64,7 @@ fn main() -> Result<()> {
             hyper,
             seed: 0x5EED,
             teacher: needs_teacher.then(|| teacher.to_string()),
-            patience: 0,
+            ..Default::default()
         };
         let res = trainer::run(&rt, &cfg, soft.as_ref())?;
         println!(

@@ -6,6 +6,24 @@
 //! an existing dense model, compress it to a target budget, optionally
 //! fine-tune — and implements the feature-hashing inner-product
 //! preservation check (Eq. 1) used by tests and benches.
+//!
+//! # Mapping to the paper
+//!
+//! * [`compress_dense`] — the least-squares projection onto Eq. 7's
+//!   parameterization: each bucket `k < K` takes the ξ-weighted mean of
+//!   its members, the minimizer of `‖V − V̂‖²_F` given the hash pair
+//!   `(h, ξ)` of §4.2. The `K` budgets are exactly the per-layer
+//!   `budgets` of a [`crate::model::ModelSpec`].
+//! * [`reconstruction_error`] — the relative Frobenius redundancy
+//!   measurement (Denil et al. 2013) that motivates §3: how well `K`
+//!   buckets can represent an `n × (m+1)` dense matrix.
+//! * [`hashed_inner_product`] — Eq. 1's hashed feature map
+//!   `⟨φ(x), φ(x′)⟩`, whose unbiasedness for `⟨x, x′⟩` is why hashing
+//!   with signs preserves the forward activations in expectation.
+//! * [`compress_network`] — the one-call dense → HashedNet pipeline,
+//!   emitting a self-describing [`crate::model::ModelBundle`]; after
+//!   compression, `hashednets train --threads N` fine-tunes the result
+//!   with the threaded backward (Eqs. 11–12).
 
 use crate::hash::{bucket_sign, layer_seeds};
 use crate::model::{Method, ModelBundle, ModelError, ModelSpec};

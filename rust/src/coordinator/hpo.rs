@@ -8,6 +8,7 @@
 
 use super::trainer::{run_with_data, TrainConfig};
 use crate::data::Dataset;
+use crate::nn::TrainOptions;
 use crate::runtime::{Hyper, Runtime};
 use crate::util::rng::Pcg32;
 use anyhow::Result;
@@ -40,7 +41,10 @@ pub struct HpoResult {
 
 /// Random search + successive halving: `n_trials` configs at
 /// `epochs/4`, the top half re-run at `epochs/2`, the top quarter at
-/// full `epochs`. Deterministic in `seed`.
+/// full `epochs`. Deterministic in `seed`; every trial trains under the
+/// same execution policy `opts` (worker count + reduction order), so
+/// the search no longer hard-codes single-threaded training.
+#[allow(clippy::too_many_arguments)]
 pub fn search(
     rt: &Runtime,
     artifact: &str,
@@ -48,6 +52,7 @@ pub fn search(
     epochs: usize,
     n_trials: usize,
     seed: u64,
+    opts: &TrainOptions,
 ) -> Result<HpoResult> {
     let dk = rt
         .manifest
@@ -67,6 +72,7 @@ pub fn search(
                 epochs: ep,
                 hyper: *h,
                 seed: seed ^ (ti as u64) << 8,
+                train: *opts,
                 ..Default::default()
             };
             // NOTE: DK search would need soft targets; HPO is exposed for

@@ -24,7 +24,10 @@ impl JsonlWriter {
     }
 }
 
-/// One run record for the JSONL log.
+/// One run record for the JSONL log. `threads` is the backward worker
+/// count the run was configured with, so throughput numbers in the log
+/// are attributable to an execution policy.
+#[allow(clippy::too_many_arguments)]
 pub fn run_record(
     experiment: &str,
     dataset: &str,
@@ -37,6 +40,7 @@ pub fn run_record(
     stored_params: usize,
     wall_s: f64,
     steps_per_s: f64,
+    threads: usize,
 ) -> Json {
     let mut pairs = vec![
         ("experiment", s(experiment)),
@@ -49,6 +53,7 @@ pub fn run_record(
         ("stored_params", num(stored_params as f64)),
         ("wall_s", num(crate::util::round_to(wall_s, 2))),
         ("steps_per_s", num(crate::util::round_to(steps_per_s, 1))),
+        ("threads", num(threads as f64)),
     ];
     if let Some(x) = expansion {
         pairs.push(("expansion", num(x as f64)));
@@ -181,13 +186,14 @@ mod tests {
         {
             let mut w = JsonlWriter::create(&path).unwrap();
             w.write(&run_record("fig2", "mnist", "hashnet", "a", 0.125, None,
-                                0.0145, 0.015, 1000, 1.5, 100.0)).unwrap();
+                                0.0145, 0.015, 1000, 1.5, 100.0, 4)).unwrap();
             w.write(&obj(vec![("x", num(1.0))])).unwrap();
         }
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text.lines().count(), 2);
         let first = Json::parse(text.lines().next().unwrap()).unwrap();
         assert_eq!(first.req_f64("test_error").unwrap(), 1.45);
+        assert_eq!(first.req_f64("threads").unwrap(), 4.0);
         std::fs::remove_file(&path).ok();
     }
 }

@@ -16,6 +16,7 @@ use super::metrics::{run_record, JsonlWriter, Table};
 use super::trainer::{self, SoftTargets, TrainConfig};
 use crate::data::{generate, Kind, Split};
 use crate::model::Method;
+use crate::nn::TrainOptions;
 use crate::runtime::{Graph, Hyper, ModelState, Runtime};
 use crate::tensor::Matrix;
 use anyhow::{anyhow, Result};
@@ -43,6 +44,12 @@ pub struct ReproOptions {
     pub teacher_epochs: usize,
     pub workers: usize,
     pub seed: u64,
+    /// Per-run training execution policy (backward worker count +
+    /// reduction order), recorded into every JSONL run record. Grid
+    /// `workers` and backward `train.threads` multiply — the default
+    /// keeps each run single-threaded so the worker pool owns the
+    /// machine.
+    pub train: TrainOptions,
 }
 
 impl Default for ReproOptions {
@@ -58,6 +65,7 @@ impl Default for ReproOptions {
             teacher_epochs: 12,
             workers: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             seed: 0x5EED,
+            train: TrainOptions::default(),
         }
     }
 }
@@ -173,6 +181,8 @@ pub struct RunRow {
     pub stored_params: usize,
     pub wall_s: f64,
     pub steps_per_s: f64,
+    /// Backward worker count the run was configured with.
+    pub threads: usize,
 }
 
 type TeacherMap = HashMap<(Kind, String), (ModelState, Matrix)>; // state + train logits
@@ -207,6 +217,7 @@ fn train_teachers(jobs: &[Job], opt: &ReproOptions) -> Result<TeacherMap> {
                 seed: opt.seed,
                 teacher: None,
                 patience: 0,
+                train: opt.train,
             };
             let res = trainer::run_with_data(&rt, &cfg, &train, None, None)?;
             if best.as_ref().map(|(v, _)| res.val_error < *v).unwrap_or(true) {
@@ -295,6 +306,7 @@ fn run_one(
         seed: opt.seed,
         teacher: job.teacher.clone(),
         patience: 0,
+        train: opt.train,
     };
     let soft = match &job.teacher {
         Some(t) => {
@@ -329,6 +341,7 @@ fn run_one(
         stored_params: res.stored_params,
         wall_s: res.wall_s,
         steps_per_s: res.steps_per_s,
+        threads: res.threads,
     })
 }
 
@@ -344,7 +357,7 @@ pub fn run_experiment(experiment: &str, opt: &ReproOptions) -> Result<()> {
         log.write(&run_record(
             &r.job.experiment, r.job.dataset.name(), r.job.method.as_str(), &r.job.artifact,
             r.job.compression, r.job.expansion, r.test_error, r.val_error,
-            r.stored_params, r.wall_s, r.steps_per_s,
+            r.stored_params, r.wall_s, r.steps_per_s, r.threads,
         ))?;
     }
     for table in pivot_tables(experiment, &rows) {
@@ -490,6 +503,7 @@ mod tests {
             stored_params: 1,
             wall_s: 1.0,
             steps_per_s: 10.0,
+            threads: 1,
         }];
         let tables = pivot_tables("fig2", &rows);
         assert_eq!(tables.len(), 2);

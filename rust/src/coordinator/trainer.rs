@@ -8,7 +8,7 @@
 
 use crate::data::{Dataset, Kind, Split};
 use crate::model::{ModelBundle, ModelError, ModelSpec};
-use crate::nn::{Network, TrainHyper};
+use crate::nn::{Network, TrainHyper, TrainOptions};
 use crate::runtime::{Graph, Hyper, ModelState, Runtime};
 use crate::tensor::Matrix;
 use crate::util::rng::Pcg32;
@@ -25,11 +25,15 @@ pub struct TrainConfig {
     pub epochs: usize,
     pub hyper: Hyper,
     pub seed: u64,
-    /// Teacher artifact name for DK methods (trained on the fly and
-    /// cached by the caller via [`TeacherCache`]).
+    /// Teacher artifact name for DK methods (trained on the fly by
+    /// [`train_teacher`] and cached by the caller).
     pub teacher: Option<String>,
     /// Early-stop patience in epochs without val improvement (0 = off).
     pub patience: usize,
+    /// Backward-pass execution policy (worker count + reduction order).
+    /// Applies to the native engine; the PJRT artifact path parallelizes
+    /// inside XLA and only records the configured value.
+    pub train: TrainOptions,
 }
 
 impl Default for TrainConfig {
@@ -44,6 +48,7 @@ impl Default for TrainConfig {
             seed: 0x5EED,
             teacher: None,
             patience: 0,
+            train: TrainOptions::default(),
         }
     }
 }
@@ -64,6 +69,10 @@ pub struct TrainResult {
     /// The model identity trained — with [`TrainResult::bundle`] this
     /// makes every training run's output a self-describing artifact.
     pub spec: ModelSpec,
+    /// Resolved backward worker count this run was configured with
+    /// (recorded into the repro JSONL; the PJRT path parallelizes
+    /// inside XLA and reports the configured native value).
+    pub threads: usize,
 }
 
 impl TrainResult {
@@ -96,12 +105,16 @@ pub fn soft_targets(
 }
 
 /// Train the `nn` compression-1 teacher for a dataset (used by DK).
+/// `opts` is the training execution policy, threaded through so
+/// teacher runs follow the same `--threads` configuration as the
+/// student runs they feed.
 pub fn train_teacher(
     rt: &Runtime,
     teacher: &str,
     train: &Dataset,
     epochs: usize,
     seed: u64,
+    opts: &TrainOptions,
 ) -> Result<ModelState> {
     let cfg = TrainConfig {
         artifact: teacher.to_string(),
@@ -109,6 +122,7 @@ pub fn train_teacher(
         epochs,
         seed,
         hyper: Hyper { keep_prob: 0.9, ..Hyper::default() },
+        train: *opts,
         ..Default::default()
     };
     let res = run_with_data(rt, &cfg, train, None, None)?;
@@ -232,6 +246,7 @@ pub fn run_with_data(
         steps_per_s: steps as f64 / wall.max(1e-9),
         state: best_state,
         spec: spec.to_model_spec(),
+        threads: cfg.train.resolved_threads(),
     })
 }
 
@@ -293,8 +308,16 @@ pub fn run_native(spec: &ModelSpec, cfg: &TrainConfig) -> Result<TrainResult> {
     let steps_per_epoch = train.len().div_ceil(spec.batch.max(1)) as u64;
     let mut steps = 0u64;
     for epoch in 0..cfg.epochs {
-        let epoch_loss =
-            net.fit(&train.images, &train.labels, spec.batch.max(1), 1, &hyper, None, &mut rng);
+        let epoch_loss = net.fit(
+            &train.images,
+            &train.labels,
+            spec.batch.max(1),
+            1,
+            &hyper,
+            &cfg.train,
+            None,
+            &mut rng,
+        );
         losses.extend(epoch_loss);
         steps += steps_per_epoch;
         let v_err = net.error_rate(&val.images, &val.labels);
@@ -329,5 +352,6 @@ pub fn run_native(spec: &ModelSpec, cfg: &TrainConfig) -> Result<TrainResult> {
         steps_per_s: steps as f64 / wall.max(1e-9),
         state: ModelState::from_bundle(&bundle),
         spec: spec.clone(),
+        threads: cfg.train.resolved_threads(),
     })
 }

@@ -42,13 +42,22 @@
 //!   dot with `w`. Chosen for B = 1 when `K ≤ m+1` (streaming beats
 //!   gathering once the accumulator is smaller than the row).
 //! * **gather** (`forward_hashed_gather`) — the legacy per-cell gather
-//!   `w[h(i,j)]`, kept as the B = 1 large-K fallback and as the bench
-//!   baseline.
+//!   `w[h(i,j)]` (paper Eq. 8 evaluated literally), kept as the B = 1
+//!   large-K fallback and as the bench baseline.
+//!
+//! The backward pass reads the same plan: Eq. 11's input gradient uses
+//! `decompress_row_into` (one row of Eq. 7 per output unit), and
+//! Eq. 12's weight gradient is one gather pass per row scattering
+//! `ξ(i,j) · Σ_b a_bj δ_bi` into the bucket gradient — batch-amortized
+//! and, since PR 4, parallelized over output-row blocks with
+//! per-block partials (`nn::layers` documents the reduction and its
+//! determinism contract).
 //!
 //! Plans are built eagerly at layer construction/load time and shared
 //! via `Arc<HashPlan>`, which is what lets `Layer::forward` /
-//! `Network::predict` take `&self` and many serving threads share one
-//! model without locks or clones.
+//! `Network::predict` take `&self`, many serving threads share one
+//! model, and all backward workers read one plan — without locks or
+//! clones in either direction.
 
 use super::{bucket_sign, layer_seeds};
 

@@ -6,6 +6,11 @@
 //!                --config <artifact>        (manifest + PJRT artifact path)
 //!                --method/--dims/--budgets  (pure ModelSpec, native engine,
 //!                                            no artifacts required)
+//!              `--threads N` parallelizes the native backward (0 = auto);
+//!              `--reduction ordered` makes the result bit-identical
+//!              across thread counts (default `fast`); `--block-rows`
+//!              tunes the ordered-mode block height. The same three
+//!              flags apply to `repro` and `hpo`.
 //!   eval     — evaluate a bundle (--bundle m.hnb, native) or an
 //!              artifact + checkpoint (--config/--checkpoint, PJRT)
 //!   repro    — regenerate a paper experiment (fig2|fig3|table1|table2|fig4)
@@ -28,7 +33,7 @@ use anyhow::{anyhow, Result};
 use hashednets::coordinator::{hpo, repro, trainer};
 use hashednets::data::{generate, Kind, Split};
 use hashednets::model::{Method, ModelBundle, ModelSpec, BUNDLE_VERSION};
-use hashednets::nn::Network;
+use hashednets::nn::{Network, TrainOptions};
 use hashednets::runtime::{Graph, Hyper, Manifest, ModelState, Runtime};
 use hashednets::serve::{serve, Backend, Client, ModelConfig, ServeOptions, Server};
 use hashednets::util::args::Args;
@@ -37,16 +42,19 @@ use std::path::{Path, PathBuf};
 const KNOWN_TRAIN: &[&str] = &[
     "config", "artifacts", "dataset", "n-train", "n-test", "epochs", "lr", "momentum",
     "keep-prob", "lam", "temp", "seed", "teacher", "patience", "save", "method", "dims",
-    "budgets", "compression", "name", "seed-base", "batch", "spec-json", "strict",
+    "budgets", "compression", "name", "seed-base", "batch", "spec-json", "threads",
+    "block-rows", "reduction", "strict",
 ];
 const KNOWN_EVAL: &[&str] =
     &["config", "artifacts", "checkpoint", "bundle", "dataset", "n-test", "seed", "strict"];
 const KNOWN_REPRO: &[&str] = &[
     "experiment", "artifacts", "results", "hidden", "exp-base", "n-train", "n-test", "epochs",
-    "teacher-epochs", "workers", "seed", "scale", "strict",
+    "teacher-epochs", "workers", "seed", "scale", "threads", "block-rows", "reduction", "strict",
 ];
-const KNOWN_HPO: &[&str] =
-    &["config", "artifacts", "dataset", "n-train", "epochs", "trials", "seed", "strict"];
+const KNOWN_HPO: &[&str] = &[
+    "config", "artifacts", "dataset", "n-train", "epochs", "trials", "seed", "threads",
+    "block-rows", "reduction", "strict",
+];
 const KNOWN_SERVE: &[&str] = &[
     "config", "bundle", "checkpoint", "artifacts", "addr", "backend", "workers",
     "max-wait-us", "max-requests", "strict",
@@ -115,6 +123,24 @@ fn hyper_from(args: &Args, base: Hyper) -> Hyper {
         lam: args.get_f32("lam", base.lam),
         temp: args.get_f32("temp", base.temp),
     }
+}
+
+/// Training execution policy from the shared `--threads N`
+/// (0 = auto), `--block-rows R` and `--reduction fast|ordered` flags —
+/// one knob set governing the whole training path (`train`, `repro`,
+/// `hpo`), resolved once here and threaded down to `Layer::backward`.
+fn train_options_from(args: &Args) -> Result<TrainOptions> {
+    let reduction = args.get_or("reduction", "fast");
+    let deterministic = match reduction {
+        "fast" => false,
+        "ordered" => true,
+        other => return Err(anyhow!("--reduction must be fast|ordered, got '{other}'")),
+    };
+    Ok(TrainOptions {
+        threads: args.get_usize("threads", 1),
+        block_rows: args.get_usize("block-rows", 0),
+        deterministic,
+    })
 }
 
 fn parse_usize_list(s: &str) -> Result<Vec<usize>> {
@@ -201,6 +227,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         seed: args.get_u64("seed", 0x5EED),
         teacher: args.get("teacher").map(String::from),
         patience: args.get_usize("patience", 0),
+        train: train_options_from(args)?,
     };
     // DK flow: train/load teacher, build soft targets
     let soft = if spec.uses_soft_targets {
@@ -210,7 +237,8 @@ fn cmd_train(args: &Args) -> Result<()> {
             .ok_or_else(|| anyhow!("--teacher <artifact> required for DK methods"))?;
         let train = generate(dataset, Split::Train, cfg.n_train, cfg.seed);
         eprintln!("training teacher {teacher}...");
-        let tstate = trainer::train_teacher(&rt, &teacher, &train, cfg.epochs, cfg.seed)?;
+        let tstate =
+            trainer::train_teacher(&rt, &teacher, &train, cfg.epochs, cfg.seed, &cfg.train)?;
         Some(trainer::soft_targets(&rt, &teacher, &tstate, &train.images, cfg.hyper.temp)?)
     } else {
         None
@@ -243,17 +271,21 @@ fn cmd_train_native(args: &Args) -> Result<()> {
         seed: args.get_u64("seed", 0x5EED),
         teacher: None,
         patience: args.get_usize("patience", 0),
+        train: train_options_from(args)?,
     };
     let res = trainer::run_native(&spec, &cfg)?;
     println!(
-        "{} [native] on {}: test error {:.2}% (val {:.2}%), {} stored / {} virtual params, {:.1}s",
+        "{} [native, {} thread{}] on {}: test error {:.2}% (val {:.2}%), {} stored / {} virtual params, {:.1}s ({:.0} steps/s)",
         spec.name,
+        res.threads,
+        if res.threads == 1 { "" } else { "s" },
         dataset.name(),
         res.test_error * 100.0,
         res.val_error * 100.0,
         res.stored_params,
         res.virtual_params,
-        res.wall_s
+        res.wall_s,
+        res.steps_per_s
     );
     if let Some(out) = args.get("save") {
         save_bundle(&res.bundle()?, out)?;
@@ -315,6 +347,7 @@ fn cmd_repro(args: &Args) -> Result<()> {
         teacher_epochs: args.get_usize("teacher-epochs", 12),
         workers: args.get_usize("workers", repro::ReproOptions::default().workers),
         seed: args.get_u64("seed", 0x5EED),
+        train: train_options_from(args)?,
     };
     if args.get_or("scale", "bench") == "paper" {
         opt.hidden = 1000;
@@ -339,7 +372,8 @@ fn cmd_hpo(args: &Args) -> Result<()> {
     let train = generate(dataset_kind(args)?, Split::Train,
                          args.get_usize("n-train", 3000), args.get_u64("seed", 0x5EED));
     let res = hpo::search(&rt, artifact, &train, args.get_usize("epochs", 12),
-                          args.get_usize("trials", 12), args.get_u64("seed", 0x5EED))?;
+                          args.get_usize("trials", 12), args.get_u64("seed", 0x5EED),
+                          &train_options_from(args)?)?;
     println!(
         "best: lr={:.4} momentum={} keep_prob={} (val error {:.2}%) over {} scored trials",
         res.best.lr, res.best.momentum, res.best.keep_prob,
@@ -580,8 +614,7 @@ fn cmd_smoke(args: &Args) -> Result<()> {
         epochs: 3,
         hyper: Hyper { lr: 0.08, keep_prob: 1.0, lam: 1.0, ..Hyper::default() },
         seed: 7,
-        teacher: None,
-        patience: 0,
+        ..Default::default()
     };
     let res = trainer::run_native(&spec_a, &cfg)?;
     let path_a = dir.join("smoke_hashnet.hnb");

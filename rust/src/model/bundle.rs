@@ -20,6 +20,14 @@
 //! bit-identical to what a `runtime::ModelState` checkpoint holds, so
 //! the legacy formats convert losslessly.
 //!
+//! Mapping to the paper: the spec JSON carries `(dims, K budgets,
+//! seed)` — everything §4.2's hash pair `(h, ξ)` needs to rebuild the
+//! virtual matrices — and for a hashed layer the single tensor is
+//! exactly the `K^ℓ` bucket values `w` of Eq. 7. Nothing about the
+//! `n × (m+1)` virtual matrix is stored; `HNMB` file size therefore
+//! scales with the *compressed* parameter count, which is the paper's
+//! deployment claim realized as a file format.
+//!
 //! [`ModelBundle::load`] is the trust boundary: it verifies magic,
 //! version, structure, checksum, spec validity and tensor shapes, and
 //! reports each failure as a distinct [`ModelError`]. `save` writes the
@@ -39,6 +47,33 @@ const MAGIC: &[u8; 4] = b"HNMB";
 const CHECKSUM_SEED: u32 = 0x4D42;
 
 /// One complete, self-describing model: spec + parameter tensors.
+///
+/// # Examples
+///
+/// Train-side packaging and serve-side reconstruction are exact
+/// inverses, byte- and bit-level:
+///
+/// ```
+/// use hashednets::model::{Method, ModelBundle, ModelSpec};
+/// use hashednets::nn::Network;
+/// use hashednets::util::rng::Pcg32;
+///
+/// let spec = ModelSpec::new(
+///     "demo", Method::Hashnet, vec![8, 6, 3], vec![14, 7], 0x9E37_79B9, 4,
+/// ).unwrap();
+/// let mut net = Network::from_spec(&spec).unwrap();
+/// net.init(&mut Pcg32::new(1, 1));
+///
+/// let bundle = net.to_bundle(&spec).unwrap();
+/// let bytes = bundle.to_bytes(); // "HNMB" | version | spec JSON | tensors | xxh32
+/// assert_eq!(&bytes[..4], b"HNMB");
+/// // a hashed layer ships only its K bucket values (Eq. 7): 14 and 7 here
+/// assert_eq!(bundle.n_params(), 21);
+///
+/// let back = ModelBundle::from_bytes(&bytes).unwrap();
+/// let served = Network::from_bundle(&back).unwrap();
+/// assert_eq!(served.layers[0].params, net.layers[0].params); // bit-exact
+/// ```
 #[derive(Debug, Clone)]
 pub struct ModelBundle {
     pub spec: ModelSpec,

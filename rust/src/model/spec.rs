@@ -92,8 +92,40 @@ impl std::fmt::Display for Method {
 /// rebuild its network skeleton (and so to interpret a parameter
 /// vector) anywhere.
 ///
+/// This is the paper's storage observation turned into an API: a
+/// HashedNet is fully determined by its virtual `dims`, the per-layer
+/// real-weight budgets `K^ℓ` and the hash seed — the `(h, ξ)` mappings
+/// of §4.2 are reconstructed from `seed_base` wherever the spec lands,
+/// so the spec plus a parameter vector *is* the model.
+///
 /// Invariants enforced by [`ModelSpec::new`] / [`ModelSpec::validate`]:
 /// at least two dims, one budget per layer, no zero dims or budgets.
+///
+/// # Examples
+///
+/// The paper's MNIST configuration at compression 1/8, round-tripped
+/// through JSON (the bundle's header encoding):
+///
+/// ```
+/// use hashednets::model::{Method, ModelSpec};
+///
+/// let spec = ModelSpec::new(
+///     "mnist_1-8",
+///     Method::Hashnet,
+///     vec![784, 100, 10], // virtual layer widths (Eq. 7's n × (m+1) per layer)
+///     vec![9_812, 126],   // per-layer budgets K^ℓ — the stored weights
+///     0x9E37_79B9,        // seed base for the h / ξ hash pairs (§4.2)
+///     50,                 // preferred batch (the paper's minibatch)
+/// ).unwrap();
+///
+/// // 785·100 + 101·10 virtual cells backed by 9 938 real weights ≈ 1/8
+/// assert_eq!(spec.virtual_params(), 79_510);
+/// assert_eq!(spec.stored_params(), 9_938);
+/// assert!((spec.compression() - 0.125).abs() < 1e-3);
+///
+/// let back = ModelSpec::from_json_str(&spec.to_json_string()).unwrap();
+/// assert_eq!(back, spec);
+/// ```
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelSpec {
     /// Human-readable model name (registry key when serving).

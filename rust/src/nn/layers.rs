@@ -1,28 +1,54 @@
 //! Layer implementations: dense, hashed (the paper's contribution),
 //! masked-dense (RER) and low-rank (LRD).
 //!
+//! # Mapping to the paper (Chen et al., ICML 2015)
+//!
+//! | code                                | paper |
+//! |-------------------------------------|-------|
+//! | [`Layer::forward_hashed_gather`]    | Eq. 8 — `z_i = Σ_j ξ(i,j)·w_{h(i,j)}·a_j`, one gathered read per virtual cell |
+//! | [`Layer::forward_hashed_bucket`]    | Eq. 10 — bucket-major: scatter `ξ(i,j)·a_j` into a K-sized accumulator, one streaming dot with `w` |
+//! | [`Layer::forward_hashed_scratch`]   | Eq. 7 made batch-amortized: decompress each virtual row `V_i` once, dense dot across the batch |
+//! | hashed backward ([`Layer::backward`]) | Eqs. 11 & 12 — `∂L/∂a_j = Σ_i ξ(i,j)·w_{h(i,j)}·δ_i` and `∂L/∂w_k = Σ_{(i,j): h(i,j)=k} ξ(i,j)·a_j·δ_i` |
+//! | `LayerKind::Hashed { k }`           | the per-layer real-weight budget `K^ℓ` (§4.1) |
+//! | the ξ sign bit                      | §4.2's sign factor, packed into bit 31 of each [`HashPlan`] entry |
+//!
 //! Each layer owns its stored parameters as a flat `Vec<f32>` whose
 //! layout matches the corresponding artifact parameter in
 //! `artifacts/manifest.json`, so parameters can be moved between the
 //! native engine and the PJRT runtime freely.
 //!
 //! Hashed layers build an immutable [`HashPlan`] eagerly at construction
-//! and share it via `Arc`, so every entry point here takes `&self`:
-//! one layer (and so one [`super::Network`]) can serve forward passes
-//! from many threads concurrently without locks or cloning. See
-//! `hash::plan` for the plan's memory layout and the kernel-variant
-//! selection heuristic implemented in [`Layer::forward`].
+//! and share it via `Arc`, so every entry point here takes `&self`
+//! (`backward` mutates only the caller's gradient buffer): one layer
+//! (and so one [`super::Network`]) can serve forward passes from many
+//! threads concurrently without locks or cloning. See `hash::plan` for
+//! the plan's memory layout and the kernel-variant selection heuristic
+//! implemented in [`Layer::forward`].
+//!
+//! # Threaded backward
+//!
+//! `Layer::backward` takes a [`TrainOptions`]: the hashed backward is
+//! parallelized over output-row *blocks*, each block accumulating into
+//! a private `(∂w, ∂a)` partial, followed by an order-preserving
+//! chunked reduction into the shared buffers; the dense backward runs
+//! its two transpose matmuls through the row-parallel
+//! [`Matrix::matmul_tn_par`] / [`Matrix::matmul_par`], which are
+//! bit-identical to their serial forms at any thread count. Ordered
+//! mode (`TrainOptions::deterministic`) fixes the block partition and
+//! reduction order independently of the thread count, so `--threads N`
+//! reproduces `--threads 1` bit for bit — see [`TrainOptions`] for the
+//! exact contract.
 
 use crate::hash::{hash_gaussian, hash_uniform, layer_seeds, HashPlan};
 use crate::tensor::{dot_unrolled, Matrix};
 use crate::util::rng::Pcg32;
 use std::sync::Arc;
 
-/// Below this many multiply-adds a hashed forward stays single-threaded
+/// Below this many multiply-adds a kernel stays single-threaded
 /// (thread spawn/join overhead would dominate).
 const PAR_WORK_THRESHOLD: usize = 1 << 21;
 
-/// Worker count for a parallel hashed forward: capped by the machine,
+/// Worker count for a parallel forward kernel: capped by the machine,
 /// by 8 (diminishing returns on a memory-bound kernel) and by the
 /// number of output rows.
 fn par_threads(work: usize, rows: usize) -> usize {
@@ -35,6 +61,114 @@ fn par_threads(work: usize, rows: usize) -> usize {
         .min(8)
         .min(rows)
         .max(1)
+}
+
+/// Execution policy for the training path — how [`Layer::backward`]
+/// (and everything above it, up to `hashednets train --threads`)
+/// schedules and reduces gradient work.
+///
+/// # Determinism contract
+///
+/// * **Fast mode** (`deterministic: false`, the default): the hashed
+///   backward splits output rows into one block per worker, so results
+///   are reproducible for a *fixed* `threads` value but the float
+///   summation order — and therefore the low bits — changes with the
+///   thread count.
+/// * **Ordered mode** (`deterministic: true`): rows are split into
+///   fixed-size blocks of `block_rows` regardless of the thread count,
+///   each block accumulates into its own partial, and partials are
+///   reduced in ascending block order (work may be *chunked* across
+///   threads by index range, which preserves the per-element order).
+///   Training with `threads = N` then produces **bit-identical**
+///   parameters — and so byte-identical [`crate::model::ModelBundle`]s
+///   — to `threads = 1`, at the cost of zeroing and reducing
+///   `⌈n / block_rows⌉` partial buffers.
+///
+/// The dense / masked / low-rank backward paths go through row-parallel
+/// matmuls that are bit-identical to their serial forms at any thread
+/// count, so both modes are deterministic there.
+///
+/// An explicit `threads` value is always honored; `threads = 0` (auto)
+/// uses the machine's parallelism but falls back to one worker when the
+/// layer is too small to amortize a spawn.
+///
+/// ```
+/// use hashednets::nn::TrainOptions;
+///
+/// let fast = TrainOptions::with_threads(4);            // fast unordered reduction
+/// let repro = TrainOptions::with_threads(4).ordered(); // bit-identical to threads = 1
+/// assert!(!fast.deterministic);
+/// assert!(repro.deterministic);
+/// assert_eq!(TrainOptions::default().threads, 1);      // single-thread by default
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TrainOptions {
+    /// Worker threads for the backward pass; `0` = auto (machine
+    /// parallelism, capped at 8, small layers stay serial). Default 1.
+    pub threads: usize,
+    /// Output rows per reduction block in ordered mode; `0` = auto
+    /// ([`TrainOptions::AUTO_BLOCK_ROWS`]). Ignored in fast mode, where
+    /// the block size is derived from the thread count.
+    pub block_rows: usize,
+    /// Fixed-order (thread-count-independent) gradient reduction.
+    pub deterministic: bool,
+}
+
+impl Default for TrainOptions {
+    fn default() -> Self {
+        TrainOptions { threads: 1, block_rows: 0, deterministic: false }
+    }
+}
+
+impl TrainOptions {
+    /// Default ordered-mode block height: small enough to expose
+    /// parallelism on the paper's 1000-row layers, large enough that
+    /// per-block buffer zeroing stays negligible.
+    pub const AUTO_BLOCK_ROWS: usize = 64;
+
+    /// Fast-mode options with an explicit worker count.
+    pub fn with_threads(threads: usize) -> TrainOptions {
+        TrainOptions { threads, ..TrainOptions::default() }
+    }
+
+    /// Switch to the fixed-order reduction (see the type-level docs).
+    pub fn ordered(mut self) -> TrainOptions {
+        self.deterministic = true;
+        self
+    }
+
+    /// `threads` with `0` resolved to the machine's parallelism
+    /// (capped at 8 — the backward is memory-bound past that).
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads != 0 {
+            return self.threads;
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(8)
+    }
+
+    /// `block_rows` with `0` resolved to [`Self::AUTO_BLOCK_ROWS`].
+    pub fn resolved_block_rows(&self) -> usize {
+        if self.block_rows == 0 {
+            Self::AUTO_BLOCK_ROWS
+        } else {
+            self.block_rows
+        }
+    }
+
+    /// Workers to use for `work` multiply-adds over `rows` output rows.
+    /// An explicit request is honored as-is (minus the row cap); only
+    /// auto mode applies the spawn-amortization threshold.
+    fn par_threads(&self, work: usize, rows: usize) -> usize {
+        let t = if self.threads == 0 && work < PAR_WORK_THRESHOLD {
+            1
+        } else {
+            self.resolved_threads()
+        };
+        t.min(rows).max(1)
+    }
 }
 
 /// What kind of weight structure a layer uses.
@@ -192,7 +326,10 @@ impl Layer {
                 let n = self.n;
                 let w = Matrix::from_vec(n, self.m, self.params[..n * self.m].to_vec());
                 let b = &self.params[n * self.m..];
-                let mut z = a.matmul_nt(&w);
+                // row-parallel on big batches (bit-identical to serial),
+                // mirroring the scratch kernel's auto-threading policy
+                let threads = par_threads(a.rows * n * self.m, a.rows);
+                let mut z = a.matmul_nt_par(&w, threads);
                 for r in 0..z.rows {
                     for (zv, &bv) in z.row_mut(r).iter_mut().zip(b) {
                         *zv += bv;
@@ -324,29 +461,41 @@ impl Layer {
     /// Backward: given `delta (B×n)` (dL/dz) and input `a (B×m)`,
     /// returns `da (B×m)` and accumulates the stored-parameter gradient
     /// into `grad` (same layout as `params`).
-    pub fn backward(&self, a: &Matrix, delta: &Matrix, grad: &mut [f32]) -> Matrix {
+    ///
+    /// `opts` controls the worker count and the reduction order — see
+    /// [`TrainOptions`] for the determinism contract. The default
+    /// options reproduce the historical single-thread behavior exactly.
+    pub fn backward(
+        &self,
+        a: &Matrix,
+        delta: &Matrix,
+        grad: &mut [f32],
+        opts: &TrainOptions,
+    ) -> Matrix {
         assert_eq!(grad.len(), self.params.len());
         match self.kind {
             LayerKind::Dense => {
                 let n = self.n;
                 let m = self.m;
+                let threads = opts.par_threads(2 * delta.rows * n * m, n);
                 let w = Matrix::from_vec(n, m, self.params[..n * m].to_vec());
                 // dW = deltaᵀ·a ; db = Σ_b delta
-                let dw = delta.matmul_tn(a); // (n×m)
+                let dw = delta.matmul_tn_par(a, threads); // (n×m)
                 grad[..n * m].iter_mut().zip(&dw.data).for_each(|(g, &d)| *g += d);
                 for b in 0..delta.rows {
                     for (g, &d) in grad[n * m..].iter_mut().zip(delta.row(b)) {
                         *g += d;
                     }
                 }
-                delta.matmul(&w)
+                delta.matmul_par(&w, threads)
             }
-            LayerKind::Hashed { .. } => self.backward_hashed(a, delta, grad),
+            LayerKind::Hashed { .. } => self.backward_hashed(a, delta, grad, opts),
             LayerKind::Masked { k } => {
-                let v = self.virtual_matrix();
-                let da_aug = delta.matmul(&v);
-                let g_dense = delta.matmul_tn(&a.augment_ones()); // (n×(m+1))
                 let m1 = self.m + 1;
+                let threads = opts.par_threads(2 * delta.rows * self.n * m1, self.n);
+                let v = self.virtual_matrix();
+                let da_aug = delta.matmul_par(&v, threads);
+                let g_dense = delta.matmul_tn_par(&a.augment_ones(), threads); // (n×(m+1))
                 let keep = k as f32 / (m1 * self.n) as f32;
                 let (s_mask, _) = layer_seeds(1000 + self.index as u32, self.seed_base);
                 for (idx, (g, &gd)) in grad.iter_mut().zip(&g_dense.data).enumerate() {
@@ -357,58 +506,181 @@ impl Layer {
                 da_aug.drop_last_col()
             }
             LayerKind::LowRank { r } => {
+                let m1 = self.m + 1;
+                let threads = opts.par_threads(delta.rows * self.n * m1, self.n);
                 let v = self.virtual_matrix();
-                let da_aug = delta.matmul(&v);
+                let da_aug = delta.matmul_par(&v, threads);
                 // h = a_aug·Uᵀ (B×r); dW = deltaᵀ·h (n×r)
                 let u = self.lrd_fixed_u(r);
                 let h = a.augment_ones().matmul_nt(&u);
-                let dw = delta.matmul_tn(&h); // (n×r)
+                let dw = delta.matmul_tn(&h); // (n×r) — r is small, stay serial
                 grad.iter_mut().zip(&dw.data).for_each(|(g, &d)| *g += d);
                 da_aug.drop_last_col()
             }
         }
     }
 
-    /// Hashed backward (paper Eqs. 9 & 12), batch-amortized over the
+    /// Hashed backward (paper Eqs. 11 & 12), batch-amortized over the
     /// plan: per virtual row, decompress once (for `da`), reduce the
     /// batch into `s_j = Σ_b δ_bi a_bj`, then a **single** gather pass
     /// scatters `ξ(i,j)·s_j` into the weight gradient — K random writes
     /// per row instead of K·B.
-    fn backward_hashed(&self, a: &Matrix, delta: &Matrix, grad: &mut [f32]) -> Matrix {
+    ///
+    /// Parallel path: output rows are split into blocks; each block
+    /// accumulates into a private `(∂w, ∂a)` partial on one of the
+    /// scoped worker threads (the same `std::thread::scope` structure
+    /// as the scratch-row forward), and the partials are then reduced
+    /// into the shared buffers in ascending block order, with the
+    /// reduction itself chunked across threads by index range — which
+    /// keeps the per-element summation order independent of the thread
+    /// count. In ordered mode the block partition is fixed by
+    /// `block_rows`, so the whole backward is thread-count-invariant;
+    /// in fast mode there is one block per worker (fewer partials to
+    /// zero and reduce) and `threads = 1` skips the partials entirely,
+    /// running the historical in-place loop.
+    fn backward_hashed(
+        &self,
+        a: &Matrix,
+        delta: &Matrix,
+        grad: &mut [f32],
+        opts: &TrainOptions,
+    ) -> Matrix {
         let (m1, n, m) = (self.m + 1, self.n, self.m);
         let plan = self.plan_ref();
         let params: &[f32] = &self.params;
         let a_aug = a.augment_ones();
         let rows_b = a.rows;
         let mut da = Matrix::zeros(rows_b, m);
-        let mut vrow = vec![0.0f32; m1];
-        let mut srow = vec![0.0f32; m1];
-        for i in 0..n {
-            if (0..rows_b).all(|b| delta.at(b, i) == 0.0) {
-                continue;
-            }
-            plan.decompress_row_into(i, params, &mut vrow);
-            srow.iter_mut().for_each(|x| *x = 0.0);
-            for b in 0..rows_b {
-                let d = delta.at(b, i);
-                if d == 0.0 {
-                    continue;
-                }
-                let arow = a_aug.row(b);
-                for (dv, &vv) in da.row_mut(b).iter_mut().zip(&vrow[..m]) {
-                    *dv += d * vv;
-                }
-                for (sv, &av) in srow.iter_mut().zip(arow) {
-                    *sv += d * av;
-                }
-            }
-            // Eq. 12: dw_{h(i,j)} += ξ(i,j) Σ_b a_bj δ_bi
-            for (&e, &sv) in plan.row(i).iter().zip(&srow) {
-                grad[HashPlan::bucket(e)] += HashPlan::apply_sign(e, sv);
-            }
+        let threads = opts.par_threads(n * m1 * (rows_b + 2), n);
+        if rows_b == 0 || (threads == 1 && !opts.deterministic) {
+            // serial fast path: accumulate straight into the shared buffers
+            let mut vrow = vec![0.0f32; m1];
+            let mut srow = vec![0.0f32; m1];
+            hashed_backward_rows(
+                plan, params, &a_aug, delta, 0..n, m, grad, &mut da.data, &mut vrow, &mut srow,
+            );
+            return da;
         }
+        // block partition: thread-count-independent in ordered mode,
+        // one block per worker in fast mode
+        let block_rows = if opts.deterministic {
+            opts.resolved_block_rows().min(n)
+        } else {
+            n.div_ceil(threads)
+        };
+        let n_blocks = n.div_ceil(block_rows);
+        let threads = threads.min(n_blocks);
+        let klen = grad.len();
+        let mut partials: Vec<(Vec<f32>, Vec<f32>)> = (0..n_blocks)
+            .map(|_| (vec![0.0f32; klen], vec![0.0f32; rows_b * m]))
+            .collect();
+        let blocks_per = n_blocks.div_ceil(threads);
+        let (a_ref, d_ref) = (&a_aug, delta);
+        std::thread::scope(|s| {
+            for (t, pchunk) in partials.chunks_mut(blocks_per).enumerate() {
+                let blk0 = t * blocks_per;
+                s.spawn(move || {
+                    let mut vrow = vec![0.0f32; m1];
+                    let mut srow = vec![0.0f32; m1];
+                    for (bi, (pg, pda)) in pchunk.iter_mut().enumerate() {
+                        let i0 = (blk0 + bi) * block_rows;
+                        let i1 = (i0 + block_rows).min(n);
+                        hashed_backward_rows(
+                            plan, params, a_ref, d_ref, i0..i1, m, pg, pda, &mut vrow, &mut srow,
+                        );
+                    }
+                });
+            }
+        });
+        let gparts: Vec<&[f32]> = partials.iter().map(|(g, _)| g.as_slice()).collect();
+        reduce_block_partials(grad, &gparts, threads);
+        let dparts: Vec<&[f32]> = partials.iter().map(|(_, d)| d.as_slice()).collect();
+        reduce_block_partials(&mut da.data, &dparts, threads);
         da
     }
+}
+
+/// Backward contribution of virtual rows `rows` (paper Eqs. 11 & 12):
+/// per row, decompress once into `vrow` (for `da += δ_i · V_i`), reduce
+/// the batch into `srow[j] = Σ_b δ_bi a_bj`, then one gather pass
+/// scatters `ξ(i,j)·srow[j]` into the bucket gradient. `grad` / `da`
+/// are either the shared output buffers (serial path) or a
+/// block-private partial (threaded path); `da` is the flattened
+/// `(B × m)` input gradient.
+#[allow(clippy::too_many_arguments)]
+fn hashed_backward_rows(
+    plan: &HashPlan,
+    params: &[f32],
+    a_aug: &Matrix,
+    delta: &Matrix,
+    rows: std::ops::Range<usize>,
+    m: usize,
+    grad: &mut [f32],
+    da: &mut [f32],
+    vrow: &mut [f32],
+    srow: &mut [f32],
+) {
+    let rows_b = delta.rows;
+    for i in rows {
+        if (0..rows_b).all(|b| delta.at(b, i) == 0.0) {
+            continue;
+        }
+        plan.decompress_row_into(i, params, vrow);
+        srow.iter_mut().for_each(|x| *x = 0.0);
+        for b in 0..rows_b {
+            let d = delta.at(b, i);
+            if d == 0.0 {
+                continue;
+            }
+            let arow = a_aug.row(b);
+            for (dv, &vv) in da[b * m..(b + 1) * m].iter_mut().zip(&vrow[..m]) {
+                *dv += d * vv;
+            }
+            for (sv, &av) in srow.iter_mut().zip(arow) {
+                *sv += d * av;
+            }
+        }
+        // Eq. 12: dw_{h(i,j)} += ξ(i,j) Σ_b a_bj δ_bi
+        for (&e, &sv) in plan.row(i).iter().zip(&*srow) {
+            grad[HashPlan::bucket(e)] += HashPlan::apply_sign(e, sv);
+        }
+    }
+}
+
+/// `dst[j] += Σ_blk parts[blk][j]`, always summing blocks in ascending
+/// order for every element. Large reductions are chunked across scoped
+/// threads by *index range*, never by block, so the float addition
+/// order — and therefore the result, bit for bit — is independent of
+/// the thread count ("tree" step of the backward's block reduction).
+fn reduce_block_partials(dst: &mut [f32], parts: &[&[f32]], threads: usize) {
+    /// Below this many output elements per thread, spawning costs more
+    /// than the adds.
+    const CHUNK_MIN: usize = 1 << 13;
+    if dst.is_empty() || parts.is_empty() {
+        return;
+    }
+    let threads = threads.clamp(1, dst.len().div_ceil(CHUNK_MIN));
+    if threads == 1 {
+        for part in parts {
+            for (d, &p) in dst.iter_mut().zip(*part) {
+                *d += p;
+            }
+        }
+        return;
+    }
+    let chunk = dst.len().div_ceil(threads);
+    std::thread::scope(|s| {
+        for (c, dchunk) in dst.chunks_mut(chunk).enumerate() {
+            let off = c * chunk;
+            s.spawn(move || {
+                for part in parts {
+                    for (d, &p) in dchunk.iter_mut().zip(&part[off..]) {
+                        *d += p;
+                    }
+                }
+            });
+        }
+    });
 }
 
 #[cfg(test)]
@@ -487,7 +759,7 @@ mod tests {
             z.data.iter().zip(&co.data).map(|(z, c)| z * c).sum()
         };
         let mut grad = vec![0.0f32; layer.params.len()];
-        let _da = layer.backward(&a, &co, &mut grad);
+        let _da = layer.backward(&a, &co, &mut grad, &TrainOptions::default());
         let eps = 1e-2f32;
         // spot-check a handful of parameters
         let step = (layer.params.len() / 7).max(1);
@@ -534,7 +806,7 @@ mod tests {
         let mut a = rand_matrix(2, 6, &mut rng);
         let co = rand_matrix(2, 4, &mut rng);
         let mut grad = vec![0.0f32; layer.params.len()];
-        let da = layer.backward(&a.clone(), &co, &mut grad);
+        let da = layer.backward(&a.clone(), &co, &mut grad, &TrainOptions::default());
         let eps = 1e-2f32;
         for probe in [(0usize, 0usize), (1, 3), (0, 5)] {
             let orig = a.at(probe.0, probe.1);
@@ -547,6 +819,38 @@ mod tests {
             let ad = da.at(probe.0, probe.1);
             assert!((fd - ad).abs() < 2e-2 * (1.0 + fd.abs()), "{fd} vs {ad}");
         }
+    }
+
+    #[test]
+    fn threaded_backward_modes_agree() {
+        let l = mk(LayerKind::Hashed { k: 40 }, 12, 30);
+        let mut rng = Pcg32::new(11, 11);
+        let a = rand_matrix(5, 12, &mut rng);
+        let co = rand_matrix(5, 30, &mut rng);
+        let run = |opts: &TrainOptions| {
+            let mut g = vec![0.0f32; l.params.len()];
+            let da = l.backward(&a, &co, &mut g, opts);
+            (g, da)
+        };
+        // fast mode: threaded within float tolerance of serial
+        let (g1, da1) = run(&TrainOptions::default());
+        let (g4, da4) = run(&TrainOptions::with_threads(4));
+        for (x, y) in g1.iter().zip(&g4).chain(da1.data.iter().zip(&da4.data)) {
+            assert!((x - y).abs() < 1e-5 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+        // ordered mode: bit-identical across thread counts (multi-block
+        // partition forced via a small block height)
+        let ordered = |t: usize| TrainOptions { threads: t, block_rows: 8, deterministic: true };
+        let (go1, dao1) = run(&ordered(1));
+        let (go4, dao4) = run(&ordered(4));
+        assert_eq!(
+            go1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            go4.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+        assert_eq!(
+            dao1.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            dao4.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
     }
 
     #[test]

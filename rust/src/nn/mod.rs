@@ -20,5 +20,5 @@
 pub mod layers;
 pub mod network;
 
-pub use layers::{Layer, LayerKind};
+pub use layers::{Layer, LayerKind, TrainOptions};
 pub use network::{DkTargets, Network, TrainHyper};

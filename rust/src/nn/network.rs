@@ -1,7 +1,13 @@
 //! Multi-layer network: forward/backward with ReLU + inverted dropout,
 //! softmax cross-entropy (± dark-knowledge soft targets), SGD+momentum.
+//!
+//! `train_step` / `fit` take a [`TrainOptions`] that controls the
+//! threaded backward (worker count + reduction order); the default is
+//! the historical single-thread behavior, and ordered mode makes the
+//! trained parameters bit-identical across thread counts — see
+//! `nn::layers::TrainOptions` for the contract.
 
-use super::layers::{Layer, LayerKind};
+use super::layers::{Layer, LayerKind, TrainOptions};
 use crate::tensor::Matrix;
 use crate::util::rng::Pcg32;
 
@@ -100,12 +106,15 @@ impl Network {
     ///
     /// Matches the artifact `train_step` semantics: inverted dropout on
     /// hidden activations, mean CE loss, `v' = mom·v − lr·g, p += v'`.
+    /// `opts` drives the threaded backward ([`Layer::backward`]).
+    #[allow(clippy::too_many_arguments)]
     pub fn train_step(
         &mut self,
         x: &Matrix,
         y: &[i32],
         soft: Option<(&DkTargets, &[u32])>, // (targets, row indices into probs)
         hyper: &TrainHyper,
+        opts: &TrainOptions,
         rng: &mut Pcg32,
     ) -> f32 {
         let batch = x.rows;
@@ -182,7 +191,7 @@ impl Network {
         let mut d = delta;
         for l in (0..n_layers).rev() {
             let mut grad = vec![0.0f32; self.layers[l].params.len()];
-            let mut da = self.layers[l].backward(&inputs[l], &d, &mut grad);
+            let mut da = self.layers[l].backward(&inputs[l], &d, &mut grad, opts);
             // momentum update
             let (layer, mom) = (&mut self.layers[l], &mut self.momenta[l]);
             for ((p, v), g) in layer.params.iter_mut().zip(mom.iter_mut()).zip(&grad) {
@@ -204,7 +213,8 @@ impl Network {
     }
 
     /// Train for `epochs` over `(x, labels)` with shuffled minibatches.
-    /// Returns per-epoch mean losses.
+    /// Returns per-epoch mean losses. `opts` drives the threaded
+    /// backward; ordered mode makes the result thread-count-invariant.
     #[allow(clippy::too_many_arguments)]
     pub fn fit(
         &mut self,
@@ -213,6 +223,7 @@ impl Network {
         batch: usize,
         epochs: usize,
         hyper: &TrainHyper,
+        opts: &TrainOptions,
         dk: Option<&DkTargets>,
         rng: &mut Pcg32,
     ) -> Vec<f32> {
@@ -225,7 +236,7 @@ impl Network {
             for chunk in perm.chunks(batch) {
                 let (bx, by) = gather(x, labels, chunk, batch);
                 let soft = dk.map(|t| (t, chunk));
-                total += self.train_step(&bx, &by, soft, hyper, rng);
+                total += self.train_step(&bx, &by, soft, hyper, opts, rng);
                 count += 1;
             }
             epoch_losses.push(total / count as f32);
@@ -272,7 +283,8 @@ mod tests {
             // it needs a hotter lr to make visible progress in 10 epochs
             let lr = if matches!(kinds[0], LayerKind::LowRank { .. }) { 0.3 } else { 0.05 };
             let hyper = TrainHyper { lr, keep_prob: 1.0, ..Default::default() };
-            let losses = net.fit(&ds.images, &ds.labels, 50, 10, &hyper, None, &mut rng);
+            let losses =
+                net.fit(&ds.images, &ds.labels, 50, 10, &hyper, &TrainOptions::default(), None, &mut rng);
             assert!(
                 losses.last().unwrap() < &(losses[0] * 0.85),
                 "{kinds:?}: {losses:?}"
@@ -290,7 +302,7 @@ mod tests {
         );
         let mut rng = Pcg32::new(2, 3);
         let hyper = TrainHyper { lr: 0.08, keep_prob: 0.95, ..Default::default() };
-        net.fit(&tr.images, &tr.labels, 50, 15, &hyper, None, &mut rng);
+        net.fit(&tr.images, &tr.labels, 50, 15, &hyper, &TrainOptions::default(), None, &mut rng);
         let err = net.error_rate(&te.images, &te.labels);
         assert!(err < 0.5, "test error {err} vs chance 0.9");
     }
@@ -340,10 +352,35 @@ mod tests {
         let dk = DkTargets { probs };
         let hyper = TrainHyper { lr: 0.2, keep_prob: 1.0, lam: 0.0, temp: 1.0, ..Default::default() };
         let mut rng = Pcg32::new(3, 4);
-        net.fit(&x, &labels, 16, 30, &hyper, Some(&dk), &mut rng);
+        net.fit(&x, &labels, 16, 30, &hyper, &TrainOptions::default(), Some(&dk), &mut rng);
         let pred = net.predict(&x).argmax_rows();
         let frac2 = pred.iter().filter(|&&p| p == 2).count() as f64 / n as f64;
         assert!(frac2 > 0.9, "teacher not followed: {frac2}");
+    }
+
+    #[test]
+    fn ordered_training_is_thread_count_invariant() {
+        // the determinism contract at network level: same seed, same
+        // data, ordered reduction — 1 thread and 4 threads must produce
+        // bit-identical parameters after a few epochs
+        let ds = generate(Kind::Basic, Split::Train, 120, 9);
+        let hyper = TrainHyper { lr: 0.05, keep_prob: 0.9, ..Default::default() };
+        let params_with = |threads: usize| -> Vec<Vec<u32>> {
+            let mut net = toy_net(
+                vec![LayerKind::Hashed { k: 900 }, LayerKind::Hashed { k: 70 }],
+                &[784, 12, 10],
+            );
+            let mut rng = Pcg32::new(5, 6);
+            // block_rows 4 < hidden width 12 forces a multi-block
+            // partition, so the ordered reduction is actually exercised
+            let opts = TrainOptions { threads, block_rows: 4, deterministic: true };
+            net.fit(&ds.images, &ds.labels, 20, 2, &hyper, &opts, None, &mut rng);
+            net.layers
+                .iter()
+                .map(|l| l.params.iter().map(|p| p.to_bits()).collect())
+                .collect()
+        };
+        assert_eq!(params_with(1), params_with(4));
     }
 
     #[test]

@@ -95,6 +95,43 @@ impl Matrix {
         out
     }
 
+    /// [`Matrix::matmul`] split over blocks of output rows on up to
+    /// `threads` scoped threads. Each output row is produced by exactly
+    /// one thread with the same accumulation order as the serial loop,
+    /// so the result is **bit-identical** to `matmul` for every thread
+    /// count — the backward pass relies on this for its determinism
+    /// contract.
+    pub fn matmul_par(&self, other: &Matrix, threads: usize) -> Matrix {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (r, k, c) = (self.rows, self.cols, other.cols);
+        let threads = threads.clamp(1, r.max(1));
+        if threads == 1 || c == 0 {
+            return self.matmul(other);
+        }
+        let mut out = Matrix::zeros(r, c);
+        let rows_per = r.div_ceil(threads);
+        std::thread::scope(|s| {
+            for (t, ochunk) in out.data.chunks_mut(rows_per * c).enumerate() {
+                let i0 = t * rows_per;
+                s.spawn(move || {
+                    for (ri, orow) in ochunk.chunks_mut(c).enumerate() {
+                        let arow = self.row(i0 + ri);
+                        for (p, &a) in arow.iter().enumerate().take(k) {
+                            if a == 0.0 {
+                                continue;
+                            }
+                            let brow = &other.data[p * c..(p + 1) * c];
+                            for (o, &b) in orow.iter_mut().zip(brow) {
+                                *o += a * b;
+                            }
+                        }
+                    }
+                });
+            }
+        });
+        out
+    }
+
     /// `self (r×k) @ other.T (c×k) -> (r×c)` — dot-product form, inner
     /// loop unrolled into 4 independent accumulators ([`dot_unrolled`]).
     pub fn matmul_nt(&self, other: &Matrix) -> Matrix {
@@ -108,6 +145,34 @@ impl Matrix {
                 *ov = dot_unrolled(arow, other.row(j));
             }
         }
+        out
+    }
+
+    /// [`Matrix::matmul_nt`] over blocks of output rows on up to
+    /// `threads` scoped threads; bit-identical to the serial version for
+    /// every thread count (each output cell is one `dot_unrolled` call).
+    pub fn matmul_nt_par(&self, other: &Matrix, threads: usize) -> Matrix {
+        assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
+        let (r, c) = (self.rows, other.rows);
+        let threads = threads.clamp(1, r.max(1));
+        if threads == 1 || c == 0 {
+            return self.matmul_nt(other);
+        }
+        let mut out = Matrix::zeros(r, c);
+        let rows_per = r.div_ceil(threads);
+        std::thread::scope(|s| {
+            for (t, ochunk) in out.data.chunks_mut(rows_per * c).enumerate() {
+                let i0 = t * rows_per;
+                s.spawn(move || {
+                    for (ri, orow) in ochunk.chunks_mut(c).enumerate() {
+                        let arow = self.row(i0 + ri);
+                        for (j, ov) in orow.iter_mut().enumerate() {
+                            *ov = dot_unrolled(arow, other.row(j));
+                        }
+                    }
+                });
+            }
+        });
         out
     }
 
@@ -129,6 +194,47 @@ impl Matrix {
                 }
             }
         }
+        out
+    }
+
+    /// [`Matrix::matmul_tn`] over blocks of output rows (columns of
+    /// `self`) on up to `threads` scoped threads. Every output cell is
+    /// `Σ_p self[p,i]·other[p,j]` summed over `p` in ascending order in
+    /// exactly one thread, so the result is **bit-identical** to the
+    /// serial version for any thread count — this is what makes the
+    /// dense backward (`dW = δᵀ·a`) deterministic without an ordered
+    /// reduction mode. Each thread re-streams `self` but touches only
+    /// its own output rows; `self` here is a `(B × n)` delta matrix, so
+    /// the duplicated traffic is small next to the `(n × m)` output.
+    pub fn matmul_tn_par(&self, other: &Matrix, threads: usize) -> Matrix {
+        assert_eq!(self.rows, other.rows, "matmul_tn shape mismatch");
+        let (k, r, c) = (self.rows, self.cols, other.cols);
+        let threads = threads.clamp(1, r.max(1));
+        if threads == 1 || c == 0 {
+            return self.matmul_tn(other);
+        }
+        let mut out = Matrix::zeros(r, c);
+        let rows_per = r.div_ceil(threads);
+        std::thread::scope(|s| {
+            for (t, ochunk) in out.data.chunks_mut(rows_per * c).enumerate() {
+                let i0 = t * rows_per;
+                s.spawn(move || {
+                    for p in 0..k {
+                        let arow = self.row(p);
+                        let brow = other.row(p);
+                        for (ri, orow) in ochunk.chunks_mut(c).enumerate() {
+                            let a = arow[i0 + ri];
+                            if a == 0.0 {
+                                continue;
+                            }
+                            for (o, &b) in orow.iter_mut().zip(brow) {
+                                *o += a * b;
+                            }
+                        }
+                    }
+                });
+            }
+        });
         out
     }
 
@@ -247,6 +353,40 @@ mod tests {
         for (x, y) in c1.data.iter().zip(&c3.data) {
             assert!((x - y).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn par_variants_bit_identical_to_serial() {
+        // the determinism contract of the threaded backward rests on
+        // these being exact, not approximate, matches
+        let mut rng = crate::util::rng::Pcg32::new(9, 9);
+        let a = Matrix::from_fn(13, 11, |_, _| rng.normal());
+        let b = Matrix::from_fn(11, 6, |_, _| rng.normal());
+        let bt = b.transpose();
+        let tall = Matrix::from_fn(13, 6, |_, _| rng.normal()); // same rows as `a` for tn
+        for threads in [1usize, 2, 3, 8, 64] {
+            assert_eq!(a.matmul(&b).data, a.matmul_par(&b, threads).data, "matmul t{threads}");
+            assert_eq!(
+                a.matmul_nt(&bt).data,
+                a.matmul_nt_par(&bt, threads).data,
+                "matmul_nt t{threads}"
+            );
+            assert_eq!(
+                a.matmul_tn(&tall).data,
+                a.matmul_tn_par(&tall, threads).data,
+                "matmul_tn t{threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn par_variants_handle_single_row_and_zero_rows() {
+        let a = Matrix::from_fn(1, 5, |_, j| j as f32);
+        let b = Matrix::from_fn(5, 3, |i, j| (i + j) as f32);
+        assert_eq!(a.matmul(&b).data, a.matmul_par(&b, 4).data);
+        let empty = Matrix::zeros(0, 5);
+        assert_eq!(empty.matmul_par(&b, 4).rows, 0);
+        assert_eq!(empty.matmul_nt_par(&b.transpose(), 4).rows, 0);
     }
 
     #[test]

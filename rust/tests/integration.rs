@@ -125,7 +125,7 @@ fn predict_all_pads_tail_batches_correctly() {
 fn dk_training_runs_with_teacher_soft_targets() {
     let Some(rt) = runtime() else { return };
     let train = generate(Kind::Basic, Split::Train, 300, 5);
-    let tstate = trainer::train_teacher(&rt, TINY_TEACHER, &train, 2, 5).unwrap();
+    let tstate = trainer::train_teacher(&rt, TINY_TEACHER, &train, 2, 5, &Default::default()).unwrap();
     let soft =
         trainer::soft_targets(&rt, TINY_TEACHER, &tstate, &train.images, 4.0).unwrap();
     // rows are probability distributions
@@ -142,7 +142,7 @@ fn dk_training_runs_with_teacher_soft_targets() {
         hyper: Hyper { lam: 0.7, temp: 4.0, ..Hyper::default() },
         seed: 5,
         teacher: Some(TINY_TEACHER.into()),
-        patience: 0,
+        ..Default::default()
     };
     let res = trainer::run_with_data(&rt, &cfg, &train, None, Some(&soft)).unwrap();
     assert!(res.train_losses.iter().all(|l| l.is_finite()));

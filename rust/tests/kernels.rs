@@ -7,7 +7,7 @@
 //! artifacts — they run on a fresh checkout.
 
 use hashednets::hash::DEFAULT_SEED_BASE;
-use hashednets::nn::{Layer, LayerKind};
+use hashednets::nn::{Layer, LayerKind, TrainOptions};
 use hashednets::tensor::Matrix;
 use hashednets::util::rng::Pcg32;
 
@@ -84,7 +84,7 @@ fn hashed_backward_matches_finite_difference() {
             z.data.iter().zip(&co.data).map(|(z, c)| z * c).sum()
         };
         let mut grad = vec![0.0f32; layer.params.len()];
-        let da = layer.backward(&a, &co, &mut grad);
+        let da = layer.backward(&a, &co, &mut grad, &TrainOptions::default());
         let eps = 1e-2f32;
         for p in 0..layer.params.len() {
             let orig = layer.params[p];
@@ -121,7 +121,7 @@ fn backward_skips_zero_delta_columns_correctly() {
         delta.row_mut(b)[4] = rng.normal();
     }
     let mut grad = vec![0.0f32; layer.params.len()];
-    let da = layer.backward(&a, &delta, &mut grad);
+    let da = layer.backward(&a, &delta, &mut grad, &TrainOptions::default());
     let v = layer.virtual_matrix();
     let da_ref = delta.matmul(&v).drop_last_col();
     for (x, y) in da.data.iter().zip(&da_ref.data) {

@@ -10,9 +10,13 @@
 #   make serve-bench  run only the serving latency sweep (native 1/2/4
 #                   workers vs runtime) and collect BENCH_serve_latency.json.
 #   make train-bench  run only the training throughput sweep (threaded
-#                   backward at 1/2/4 workers, batch 50, plus the
+#                   backward at 1/2/4 workers, batch 50, the legacy
+#                   scatter-vs-inverse-plan Eq. 12 baseline, plus the
 #                   ordered-reduction overhead) and collect
 #                   BENCH_train_throughput.json.
+#   make pool-bench run only the PoolExec dispatch-overhead comparison
+#                   (parked pool vs cold spawn/join) and collect
+#                   BENCH_pool_overhead.json.
 #   make smoke      tiny end-to-end train→bundle→serve→hot-load loop on
 #                   the native stack (no artifacts needed); also runs
 #                   as the last step of `make check`.
@@ -24,7 +28,7 @@
 RUST_DIR := rust
 PY_DIR   := python
 
-.PHONY: check bench serve-bench train-bench artifacts pytest smoke clean-bench
+.PHONY: check bench serve-bench train-bench pool-bench artifacts pytest smoke clean-bench
 
 # docs are load-bearing: rustdoc runs with -D warnings (broken intra-doc
 # links fail the build) and the doc-examples on ModelSpec / ModelBundle /
@@ -58,6 +62,11 @@ train-bench:
 	cd $(RUST_DIR) && cargo bench --bench train_throughput
 	@echo "== train throughput report =="
 	@ls -l BENCH_train_throughput.json 2>/dev/null || echo "no BENCH_train_throughput.json produced"
+
+pool-bench:
+	cd $(RUST_DIR) && cargo bench --bench pool_overhead
+	@echo "== pool overhead report =="
+	@ls -l BENCH_pool_overhead.json 2>/dev/null || echo "no BENCH_pool_overhead.json produced"
 
 artifacts:
 	cd $(PY_DIR) && python -m compile.aot --out-dir ../artifacts --set core

@@ -4,8 +4,13 @@
 //!   * AOT artifact (Pallas decompress-on-the-fly matmul via PJRT)
 //!   * `gather`  — legacy per-row gather through the HashPlan
 //!   * `scratch` — decompress each virtual row once, dense dot across
-//!     the batch (the batch-amortized kernel, threaded on big layers)
+//!     the batch (the batch-amortized kernel, pool-parallel on big
+//!     layers); also measured `cold-spawn`, i.e. the same partition on
+//!     freshly spawned/joined OS threads, so the PoolExec win is
+//!     recorded rather than asserted
 //!   * `bucket`  — bucket-major accumulation (paper Eq. 10, B=1 small-K)
+//!   * `inverse` — the CSR-by-bucket inverse-plan kernel (streams `w`
+//!     in order; the B=1 serving default)
 //!   * `dense`   — matmul of the materialized V (the roofline reference)
 //!
 //! Results land in `BENCH_kernel_forward.json` at the repo root.
@@ -14,17 +19,52 @@
 
 use hashednets::data::{generate, Kind, Split};
 use hashednets::nn::{Layer, LayerKind, Network};
+use hashednets::rt::pool;
 use hashednets::runtime::{Graph, Runtime};
-use hashednets::tensor::Matrix;
+use hashednets::tensor::{dot_unrolled, Matrix};
 use hashednets::util::bench::Bench;
 use hashednets::util::rng::Pcg32;
+use std::sync::Arc;
 
 const OUT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernel_forward.json");
+
+/// The scratch-row kernel with the *old* execution strategy: identical
+/// row partition, but on freshly spawned OS threads per call (the cost
+/// every parallel site used to pay before PoolExec).
+fn scratch_cold_spawn(layer: &Arc<Layer>, x: &Arc<Matrix>, threads: usize) -> Vec<f32> {
+    let (m, n) = (layer.m, layer.n);
+    let m1 = m + 1;
+    let rows_b = x.rows;
+    let rows_per = n.div_ceil(threads);
+    let handles: Vec<_> = (0..threads)
+        .map(|t| {
+            let layer = Arc::clone(layer);
+            let x = Arc::clone(x);
+            std::thread::spawn(move || {
+                let plan = layer.plan().expect("hashed layer").clone();
+                let i0 = t * rows_per;
+                let i1 = ((t + 1) * rows_per).min(n);
+                let mut scratch = vec![0.0f32; m1];
+                let mut out = vec![0.0f32; i1.saturating_sub(i0) * rows_b];
+                for (r, zrow) in out.chunks_mut(rows_b).enumerate() {
+                    plan.decompress_row_into(i0 + r, &layer.params, &mut scratch);
+                    let bias = scratch[m];
+                    for (bi, zv) in zrow.iter_mut().enumerate() {
+                        *zv = bias + dot_unrolled(x.row(bi), &scratch[..m]);
+                    }
+                }
+                out
+            })
+        })
+        .collect();
+    handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+}
 
 fn main() {
     println!("== kernel_forward: hashed kernel variants at batch 1 / 50 ==");
     let mut b = Bench::new(2, 15);
     let ds = generate(Kind::Basic, Split::Test, 50, 1);
+    pool::run(pool::max_concurrency(), |_| {}); // warm: workers spawned + parked
 
     // --- artifact path at two budgets (skipped without artifacts) -----
     if let Ok(rt) = Runtime::open(concat!(env!("CARGO_MANIFEST_DIR"), "/../artifacts")) {
@@ -57,6 +97,7 @@ fn main() {
     let mut layer = Layer::new(m, n, LayerKind::Hashed { k }, 0, hashednets::hash::DEFAULT_SEED_BASE);
     layer.init(&mut rng);
     let v = layer.virtual_matrix();
+    layer.forward_hashed_inverse(&Matrix::zeros(1, m)); // build + cache the inverse view
     for batch in [1usize, 50] {
         let x = Matrix::from_fn(batch, m, |_, _| rng.normal());
         b.items_per_iter = Some(batch as f64);
@@ -70,18 +111,39 @@ fn main() {
             std::hint::black_box(x.augment_ones().matmul_nt(&v));
         });
     }
+    let x1_big = Matrix::from_fn(1, m, |_, _| rng.normal());
+    b.items_per_iter = Some(1.0);
+    b.run("inverse b1 784->1000 K=98k", || {
+        std::hint::black_box(layer.forward_hashed_inverse(&x1_big));
+    });
 
-    // --- bucket-major regime: B=1 serving with K ≤ m+1 ----------------
+    // --- pool-warm vs cold-spawn: same partition, different substrate -
+    let threads = pool::max_concurrency();
+    let arc_layer = Arc::new(layer.clone());
+    let arc_x = Arc::new(Matrix::from_fn(50, m, |_, _| rng.normal()));
+    b.items_per_iter = Some(50.0);
+    b.run(&format!("scratch b50 pool-warm  t{threads}"), || {
+        std::hint::black_box(arc_layer.forward_hashed_scratch(&arc_x));
+    });
+    b.run(&format!("scratch b50 cold-spawn t{threads}"), || {
+        std::hint::black_box(scratch_cold_spawn(&arc_layer, &arc_x, threads));
+    });
+
+    // --- B=1 small-K regime: gather vs bucket vs inverse --------------
     let k_small = m + 1;
     let mut small = Layer::new(m, n, LayerKind::Hashed { k: k_small }, 0, hashednets::hash::DEFAULT_SEED_BASE);
     small.init(&mut rng);
     let x1 = Matrix::from_fn(1, m, |_, _| rng.normal());
+    small.forward_hashed_inverse(&x1); // build + cache
     b.items_per_iter = Some(1.0);
     b.run("gather  b1 784->1000 K=785", || {
         std::hint::black_box(small.forward_hashed_gather(&x1));
     });
     b.run("bucket  b1 784->1000 K=785", || {
         std::hint::black_box(small.forward_hashed_bucket(&x1));
+    });
+    b.run("inverse b1 784->1000 K=785", || {
+        std::hint::black_box(small.forward_hashed_inverse(&x1));
     });
 
     // --- speedup summary + JSON ---------------------------------------
@@ -91,8 +153,18 @@ fn main() {
             .find(|s| s.name.contains(needle))
             .map(|s| s.mean_ns)
     };
-    if let (Some(g), Some(s)) = (find("gather  b50"), find("scratch b50")) {
+    if let (Some(g), Some(s)) = (find("gather  b50"), find("scratch b50 784")) {
         println!("\nscratch-row speedup over legacy gather at batch 50: {:.2}x", g / s);
+    }
+    if let (Some(cold), Some(warm)) = (find("cold-spawn"), find("pool-warm")) {
+        println!("pool-warm speedup over cold spawn/join at batch 50: {:.2}x", cold / warm);
+    }
+    for ksz in ["K=98k", "K=785"] {
+        if let (Some(g), Some(i)) =
+            (find(&format!("gather  b1 784->1000 {ksz}")), find(&format!("inverse b1 784->1000 {ksz}")))
+        {
+            println!("inverse-plan speedup over gather at batch 1 ({ksz}): {:.2}x", g / i);
+        }
     }
     b.write_json(OUT).expect("write bench json");
     println!("wrote {OUT}");

@@ -1,0 +1,92 @@
+//! Pool dispatch overhead: what a fork/join costs on the parked
+//! [`hashednets::rt::PoolExec`] versus spawning and joining fresh OS
+//! threads per call — the tax every parallel kernel site used to pay
+//! on every layer invocation.
+//!
+//! Three rungs, each at the pool's lane count:
+//!
+//!   * `noop`  — empty tasks: pure dispatch/join cost
+//!   * `small` — ~16k integer ops per task: a kernel far below the
+//!     `PAR_WORK_THRESHOLD`, where dispatch overhead decides whether
+//!     threading is worth it at all
+//!   * `slice` — each task fills a disjoint 16 KiB chunk of one shared
+//!     buffer: the `chunks_mut` pattern the matmul/backward sites use
+//!
+//! Results land in `BENCH_pool_overhead.json` at the repo root.
+//!
+//!     cargo bench --bench pool_overhead   (or `make pool-bench`)
+
+use hashednets::rt::pool;
+use hashednets::util::bench::Bench;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+const OUT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_pool_overhead.json");
+
+/// ~16k integer ops of un-elidable work, keyed by the task index.
+fn small_work(t: usize) -> u64 {
+    let mut acc = t as u64;
+    for i in 0..16_384u64 {
+        acc = acc.wrapping_mul(6364136223846793005).wrapping_add(i);
+    }
+    acc
+}
+
+fn main() {
+    let lanes = pool::max_concurrency();
+    println!("== pool_overhead: PoolExec vs cold spawn/join at {lanes} lanes ==");
+    let mut b = Bench::new(5, 40);
+    pool::run(lanes, |_| {}); // warm: workers spawned + parked
+
+    // --- pure dispatch ------------------------------------------------
+    b.run(&format!("noop pool-warm x{lanes}"), || {
+        pool::run(lanes, |_| {});
+    });
+    b.run(&format!("noop cold-spawn x{lanes}"), || {
+        let handles: Vec<_> = (0..lanes).map(|_| std::thread::spawn(|| {})).collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+    });
+
+    // --- small per-task work ------------------------------------------
+    let sink = AtomicU64::new(0);
+    b.run(&format!("small pool-warm x{lanes}"), || {
+        pool::run(lanes, |t| {
+            sink.fetch_add(small_work(t), Ordering::Relaxed);
+        });
+    });
+    b.run(&format!("small cold-spawn x{lanes}"), || {
+        let handles: Vec<_> =
+            (0..lanes).map(|t| std::thread::spawn(move || small_work(t))).collect();
+        let mut total = 0u64;
+        for h in handles {
+            total = total.wrapping_add(h.join().unwrap());
+        }
+        std::hint::black_box(total);
+    });
+    std::hint::black_box(sink.load(Ordering::Relaxed));
+
+    // --- disjoint-chunk fill (the kernels' chunks_mut pattern) --------
+    let chunk = 4096usize; // 16 KiB of f32 per task
+    let mut buf = vec![0.0f32; chunk * lanes];
+    b.run(&format!("slice pool-warm x{lanes}"), || {
+        pool::run_parts(buf.chunks_mut(chunk).collect(), |t, part: &mut [f32]| {
+            for (i, v) in part.iter_mut().enumerate() {
+                *v = (t * chunk + i) as f32;
+            }
+        });
+    });
+    std::hint::black_box(&buf);
+
+    // --- summary + JSON -----------------------------------------------
+    let find = |needle: &str| b.results().iter().find(|s| s.name.contains(needle)).map(|s| s.mean_ns);
+    for rung in ["noop", "small"] {
+        if let (Some(cold), Some(warm)) =
+            (find(&format!("{rung} cold-spawn")), find(&format!("{rung} pool-warm")))
+        {
+            println!("\n{rung}: pool-warm is {:.2}x faster than cold spawn/join", cold / warm);
+        }
+    }
+    b.write_json(OUT).expect("write bench json");
+    println!("wrote {OUT}");
+}

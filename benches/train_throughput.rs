@@ -3,8 +3,12 @@
 //! `Network::train_step`, swept over 1 / 2 / 4 backward workers at the
 //! paper's minibatch of 50 against the single-thread baseline:
 //!
-//!   * `hashed bwd`  — `Layer::backward` on the hashed layer alone
-//!     (block-partial accumulation + chunked reduction)
+//!   * `hashed bwd`  — `Layer::backward` on the hashed layer alone:
+//!     Eq. 12 through the inverse plan (scatter-free, no ∂w partials)
+//!     plus the block-partial ∂a accumulation, on the shared PoolExec
+//!   * `hashed bwd scatter` — the legacy fused row loop that scatters
+//!     one random write per virtual cell (serial baseline), so the
+//!     inverse-vs-scatter win is measured, not asserted
 //!   * `hashed bwd ordered` — the fixed-order deterministic reduction,
 //!     so the cost of the reproducibility contract is measured, not
 //!     guessed
@@ -40,6 +44,11 @@ fn main() {
     hashed.init(&mut rng);
     let a = Matrix::from_fn(BATCH, m, |_, _| rng.normal());
     let delta = Matrix::from_fn(BATCH, n, |_, _| rng.normal());
+    hashednets::rt::pool::run(hashednets::rt::pool::max_concurrency(), |_| {}); // warm pool
+    {
+        let mut grad = vec![0.0f32; k];
+        hashed.backward(&a, &delta, &mut grad, &TrainOptions::default()); // build inverse view
+    }
     for threads in THREAD_SWEEP {
         let opts = TrainOptions::with_threads(threads);
         b.run(&format!("hashed bwd b{BATCH} 784->1000 K=98k t{threads}"), || {
@@ -47,6 +56,12 @@ fn main() {
             std::hint::black_box(hashed.backward(&a, &delta, &mut grad, &opts));
         });
     }
+    // the legacy Eq. 12 scatter (one random write per virtual cell),
+    // serial — the baseline the inverse-plan gradient replaces
+    b.run(&format!("hashed bwd scatter b{BATCH} 784->1000 K=98k serial"), || {
+        let mut grad = vec![0.0f32; k];
+        std::hint::black_box(hashed.backward_hashed_scatter(&a, &delta, &mut grad));
+    });
     let ordered = TrainOptions::with_threads(4).ordered();
     b.run(&format!("hashed bwd ordered b{BATCH} 784->1000 K=98k t4"), || {
         let mut grad = vec![0.0f32; k];
@@ -104,6 +119,11 @@ fn main() {
         (find("hashed bwd b50 784->1000 K=98k t4"), find("hashed bwd ordered b50"))
     {
         println!("ordered-mode overhead at 4 threads: {:.2}x", ord / fast);
+    }
+    if let (Some(scatter), Some(inv1)) =
+        (find("hashed bwd scatter b50"), find("hashed bwd b50 784->1000 K=98k t1"))
+    {
+        println!("inverse-plan speedup over legacy scatter (serial): {:.2}x", scatter / inv1);
     }
     b.write_json(OUT).expect("write bench json");
     println!("wrote {OUT}");

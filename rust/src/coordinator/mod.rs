@@ -9,9 +9,14 @@
 //! * [`metrics`] — JSONL records and paper-shaped pivot tables.
 //! * [`native`] — artifact ↔ native-engine parameter bridging for
 //!   cross-validation.
+//! * [`sizing`] — the §6 size-equivalence solvers (Rust twin of
+//!   `python/compile/sizing.py`), which let [`repro`] synthesize grid
+//!   specs and fall back to the native engine when `artifacts/` is
+//!   absent.
 
 pub mod hpo;
 pub mod metrics;
 pub mod native;
 pub mod repro;
+pub mod sizing;
 pub mod trainer;

@@ -11,11 +11,20 @@
 //! (dataset, depth, out) — then all runs execute on a worker pool; each
 //! worker owns its own PJRT runtime. Results stream to JSONL and are
 //! pivoted into markdown/CSV tables mirroring the paper's layout.
+//!
+//! **Native fallback:** when the artifact runtime is unavailable
+//! (`artifacts/` absent, or the vendored `xla` stub), the non-DK grid
+//! cells run through [`trainer::run_native`] instead — their specs are
+//! re-derived by [`super::sizing`] bit-identically to what `aot.py`
+//! would have lowered — so the paper grids run from a fresh checkout
+//! with no Python toolchain. Dark-knowledge cells need the teacher
+//! pipeline (PJRT soft targets) and are skipped with a notice.
 
 use super::metrics::{run_record, JsonlWriter, Table};
+use super::sizing;
 use super::trainer::{self, SoftTargets, TrainConfig};
 use crate::data::{generate, Kind, Split};
-use crate::model::Method;
+use crate::model::{Method, ModelSpec};
 use crate::nn::TrainOptions;
 use crate::runtime::{Graph, Hyper, ModelState, Runtime};
 use crate::tensor::Matrix;
@@ -77,6 +86,10 @@ pub struct Job {
     pub dataset: Kind,
     pub method: Method,
     pub artifact: String,
+    /// Paper layer-count nomenclature (3 or 5) — with `method`,
+    /// `compression`/`expansion` and the grid widths this is enough to
+    /// re-derive the cell's spec without a manifest (native fallback).
+    pub depth: usize,
     pub compression: f64,
     pub expansion: Option<usize>,
     pub teacher: Option<String>,
@@ -121,6 +134,7 @@ pub fn jobs_for(experiment: &str, opt: &ReproOptions) -> Result<Vec<Job>> {
                             dataset: ds,
                             method,
                             artifact: artifact_name(method.as_str(), depth, opt.hidden, out, c),
+                            depth,
                             compression: c.0 as f64 / c.1 as f64,
                             expansion: None,
                             teacher,
@@ -149,6 +163,7 @@ pub fn jobs_for(experiment: &str, opt: &ReproOptions) -> Result<Vec<Job>> {
                                 opt.exp_base,
                                 factor,
                             ),
+                            depth,
                             compression: 1.0 / factor as f64,
                             expansion: Some(factor),
                             teacher: None,
@@ -161,6 +176,7 @@ pub fn jobs_for(experiment: &str, opt: &ReproOptions) -> Result<Vec<Job>> {
                     dataset: Kind::Mnist,
                     method: Method::Nn,
                     artifact: expansion_artifact("nn", depth, opt.exp_base, 1),
+                    depth,
                     compression: 1.0,
                     expansion: Some(1),
                     teacher: None,
@@ -232,8 +248,25 @@ fn train_teachers(jobs: &[Job], opt: &ReproOptions) -> Result<TeacherMap> {
     Ok(map)
 }
 
-/// Run a job list on a worker pool; stream rows back in completion order.
+/// Run a job list; stream rows back in completion order. Uses the PJRT
+/// artifact runtime when it opens, and otherwise falls back to the
+/// native engine for every non-DK cell (see the module docs).
 pub fn run_jobs(jobs: Vec<Job>, opt: &ReproOptions) -> Result<Vec<RunRow>> {
+    match Runtime::open(&opt.artifacts_dir) {
+        Ok(_) => run_jobs_artifact(jobs, opt),
+        Err(e) => {
+            eprintln!(
+                "artifact runtime unavailable ({e:#}) — running the grid on the \
+                 native engine"
+            );
+            run_jobs_native(jobs, opt)
+        }
+    }
+}
+
+/// The artifact path: a worker pool where each worker owns its own
+/// PJRT runtime (clients are not `Send`).
+fn run_jobs_artifact(jobs: Vec<Job>, opt: &ReproOptions) -> Result<Vec<RunRow>> {
     let teachers = Arc::new(train_teachers(&jobs, opt)?);
     let total = jobs.len();
     let queue = Arc::new(Mutex::new(VecDeque::from(jobs)));
@@ -263,6 +296,54 @@ pub fn run_jobs(jobs: Vec<Job>, opt: &ReproOptions) -> Result<Vec<RunRow>> {
         }));
     }
     drop(tx);
+    let rows = collect_rows(rx, total);
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(rows)
+}
+
+/// The native fallback: non-DK cells train through
+/// [`trainer::run_native`] on specs synthesized by [`sizing`]; DK
+/// cells are skipped (their soft targets come from the PJRT teacher
+/// pipeline). Long-lived coarse workers, like the artifact path.
+fn run_jobs_native(jobs: Vec<Job>, opt: &ReproOptions) -> Result<Vec<RunRow>> {
+    let (native, skipped): (Vec<Job>, Vec<Job>) =
+        jobs.into_iter().partition(|j| !j.method.uses_soft_targets());
+    if !skipped.is_empty() {
+        eprintln!(
+            "skipping {} dark-knowledge cells (the teacher pipeline needs the \
+             artifact runtime — run `make artifacts` to include them)",
+            skipped.len()
+        );
+    }
+    let total = native.len();
+    let queue = Arc::new(Mutex::new(VecDeque::from(native)));
+    let (tx, rx) = mpsc::channel::<Result<RunRow>>();
+    let n_workers = opt.workers.clamp(1, total.max(1));
+    let mut handles = Vec::new();
+    for _ in 0..n_workers {
+        let queue = queue.clone();
+        let tx = tx.clone();
+        let opt = opt.clone();
+        handles.push(std::thread::spawn(move || loop {
+            let job = match queue.lock().unwrap().pop_front() {
+                Some(j) => j,
+                None => break,
+            };
+            let _ = tx.send(run_one_native(&job, &opt));
+        }));
+    }
+    drop(tx);
+    let rows = collect_rows(rx, total);
+    for h in handles {
+        let _ = h.join();
+    }
+    Ok(rows)
+}
+
+/// Drain worker results, logging progress/failures in completion order.
+fn collect_rows(rx: mpsc::Receiver<Result<RunRow>>, total: usize) -> Vec<RunRow> {
     let mut rows = Vec::with_capacity(total);
     for (i, res) in rx.iter().enumerate() {
         match res {
@@ -277,10 +358,74 @@ pub fn run_jobs(jobs: Vec<Job>, opt: &ReproOptions) -> Result<Vec<RunRow>> {
             Err(e) => eprintln!("[{}/{}] FAILED: {e:#}", i + 1, total),
         }
     }
-    for h in handles {
-        let _ = h.join();
+    rows
+}
+
+/// The [`ModelSpec`] a grid cell's artifact would have been lowered
+/// with, re-derived from the job parameters (no manifest needed).
+fn native_spec_for(job: &Job, opt: &ReproOptions) -> Result<ModelSpec> {
+    let out = job.dataset.n_classes();
+    let spec = match job.expansion {
+        Some(factor) => sizing::expansion_grid_spec(
+            &job.artifact,
+            job.method,
+            job.depth,
+            opt.exp_base,
+            out,
+            factor,
+        )?,
+        None => sizing::grid_spec(
+            &job.artifact,
+            job.method,
+            job.depth,
+            opt.hidden,
+            out,
+            job.compression,
+        )?,
+    };
+    Ok(spec)
+}
+
+/// One grid cell on the native engine: the same lr screen + full run
+/// protocol as [`run_one`], driven by [`trainer::run_native`].
+fn run_one_native(job: &Job, opt: &ReproOptions) -> Result<RunRow> {
+    let spec = native_spec_for(job, opt)?;
+    let base = TrainConfig {
+        artifact: job.artifact.clone(),
+        dataset: job.dataset,
+        n_train: opt.n_train,
+        n_test: opt.n_test,
+        epochs: opt.epochs,
+        hyper: default_hyper(job.method),
+        seed: opt.seed,
+        teacher: None,
+        patience: 0,
+        train: opt.train,
+    };
+    let mut best_lr = LR_SCREEN[0];
+    let mut best_val = f64::INFINITY;
+    for &lr in &LR_SCREEN {
+        let mut probe = base.clone();
+        probe.hyper.lr = lr;
+        probe.epochs = (opt.epochs / 4).clamp(2, 3);
+        let v = trainer::run_native(&spec, &probe)?.val_error;
+        if v < best_val {
+            best_val = v;
+            best_lr = lr;
+        }
     }
-    Ok(rows)
+    let mut cfg = base;
+    cfg.hyper.lr = best_lr;
+    let res = trainer::run_native(&spec, &cfg)?;
+    Ok(RunRow {
+        job: job.clone(),
+        test_error: res.test_error,
+        val_error: res.val_error,
+        stored_params: res.stored_params,
+        wall_s: res.wall_s,
+        steps_per_s: res.steps_per_s,
+        threads: res.threads,
+    })
 }
 
 /// Learning-rate candidates screened per (method × dataset) cell — the
@@ -473,6 +618,50 @@ mod tests {
     }
 
     #[test]
+    fn every_grid_cell_resolves_to_a_valid_native_spec() {
+        // the fallback path must be able to synthesize a spec for every
+        // cell of every experiment (DK cells included — they are only
+        // skipped because of the teacher pipeline, not the spec)
+        let opt = ReproOptions::default();
+        for exp in ["fig2", "fig3", "table1", "table2", "fig4"] {
+            for job in jobs_for(exp, &opt).unwrap() {
+                let spec = native_spec_for(&job, &opt)
+                    .unwrap_or_else(|e| panic!("{}: {e:#}", job.artifact));
+                spec.validate().unwrap();
+                assert_eq!(spec.name, job.artifact);
+                assert_eq!(spec.method, job.method);
+                assert_eq!(spec.n_out(), job.dataset.n_classes());
+            }
+        }
+    }
+
+    #[test]
+    fn native_fallback_trains_a_tiny_cell_end_to_end() {
+        // a shrunken grid so the test stays fast: hidden 16, 2 epochs
+        let opt = ReproOptions {
+            hidden: 16,
+            n_train: 240,
+            n_test: 120,
+            epochs: 2,
+            ..ReproOptions::default()
+        };
+        let job = Job {
+            experiment: "fig2".into(),
+            dataset: Kind::Basic,
+            method: Method::Hashnet,
+            artifact: "hashnet_3l_h16_o10_c1-4".into(),
+            depth: 3,
+            compression: 0.25,
+            expansion: None,
+            teacher: None,
+        };
+        let row = run_one_native(&job, &opt).expect("native cell");
+        assert!(row.test_error <= 1.0 && row.test_error >= 0.0);
+        assert!(row.stored_params > 0);
+        assert_eq!(row.threads, opt.train.resolved_threads());
+    }
+
+    #[test]
     fn dk_jobs_reference_teachers() {
         let opt = ReproOptions::default();
         let jobs = jobs_for("fig2", &opt).unwrap();
@@ -492,6 +681,7 @@ mod tests {
             dataset: Kind::Mnist,
             method: Method::Hashnet,
             artifact: "hashnet_3l_h100_o10_c1-8".into(),
+            depth: 3,
             compression: 0.125,
             expansion: None,
             teacher: None,

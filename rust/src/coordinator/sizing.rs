@@ -1,0 +1,284 @@
+//! Grid sizing — the Rust twin of `python/compile/sizing.py` plus the
+//! grid-cell → [`ModelSpec`] resolution of `aot.py`'s `spec_for` /
+//! `expansion_spec_for`.
+//!
+//! All methods of the paper's evaluation (§6, Baselines) are compared
+//! at an identical number of *stored* parameters; this module computes
+//! those budgets. It exists so the repro grids ([`super::repro`]) can
+//! run on the **native** engine when no HLO artifacts have been
+//! lowered: the spec a grid cell would have been lowered with is
+//! re-derived here, bit-identically to what `aot.py` writes into
+//! `manifest.json` (same float arithmetic, same Python `round`
+//! semantics — cross-checked against the Python module by the tests
+//! below).
+
+use crate::hash::DEFAULT_SEED_BASE;
+use crate::model::{Method, ModelError, ModelSpec};
+
+/// Input width of every dataset in the evaluation (28×28 images).
+pub const N_IN: usize = 784;
+
+/// The paper's minibatch — grid specs are synthesized with it.
+pub const GRID_BATCH: usize = 50;
+
+/// Python's `round`: round-half-to-even ("banker's rounding"). Budgets
+/// land exactly on .5 at several paper compressions (e.g.
+/// `785·100/8 = 9812.5`), so matching this exactly is what keeps the
+/// native grid specs identical to the lowered artifacts.
+fn py_round(x: f64) -> i64 {
+    let floor = x.floor();
+    let diff = x - floor;
+    let f = floor as i64;
+    if diff > 0.5 {
+        f + 1
+    } else if diff < 0.5 {
+        f
+    } else if f % 2 == 0 {
+        f
+    } else {
+        f + 1
+    }
+}
+
+/// Paper nomenclature: a "3-layer" net has 1 hidden layer, "5-layer"
+/// has 3 (`depth - 2` in general).
+pub fn layer_dims(depth: usize, n_in: usize, hidden: usize, n_out: usize) -> Vec<usize> {
+    let n_hidden = depth.saturating_sub(2);
+    let mut dims = Vec::with_capacity(n_hidden + 2);
+    dims.push(n_in);
+    for _ in 0..n_hidden {
+        dims.push(hidden);
+    }
+    dims.push(n_out);
+    dims
+}
+
+/// Stored parameters of a fully-connected net (weights + biases).
+pub fn dense_params(dims: &[usize]) -> usize {
+    (0..dims.len() - 1).map(|l| (dims[l] + 1) * dims[l + 1]).sum()
+}
+
+/// Per-layer HashedNet budget `K^ℓ = max(1, round(c·(n^ℓ+1)·n^{ℓ+1}))`
+/// under compression factor `c` (the bias column is hashed with the
+/// weights, §4.1). Arithmetic mirrors the Python expression
+/// `round(c * (dims[l] + 1) * dims[l + 1])` term for term.
+pub fn hashed_budgets(dims: &[usize], c: f64) -> Vec<usize> {
+    (0..dims.len() - 1)
+        .map(|l| py_round(c * ((dims[l] + 1) as f64) * (dims[l + 1] as f64)).max(1) as usize)
+        .collect()
+}
+
+/// Largest uniform hidden width whose dense net stores ≤ `budget`
+/// parameters — the paper's "Neural Network (Equivalent-Size)"
+/// baseline: hidden layers shrunk at the same rate until the stored
+/// parameter count matches the target. Closed-form seed, then a scan.
+pub fn equivalent_hidden_width(dims: &[usize], budget: usize) -> usize {
+    let (n_in, n_out) = (dims[0], dims[dims.len() - 1]);
+    let n_hidden = dims.len() - 2;
+    assert!(n_hidden >= 1, "need at least one hidden layer");
+    let count = |h: usize| dense_params(&layer_dims(n_hidden + 2, n_in, h, n_out));
+    // closed-form seed: a·h² + b·h + c0 = budget
+    let a = n_hidden.saturating_sub(1) as f64;
+    let b = ((n_in + 1) + (n_hidden - 1) + n_out) as f64;
+    let c0 = n_out as f64;
+    let budget_f = budget as f64;
+    let h_seed = if a == 0.0 {
+        (budget_f - c0) / b
+    } else {
+        let disc = b * b - 4.0 * a * (c0 - budget_f);
+        (-b + disc.max(0.0).sqrt()) / (2.0 * a)
+    };
+    let mut h = (h_seed as i64).max(1) as usize;
+    while count(h + 1) <= budget {
+        h += 1;
+    }
+    while h > 1 && count(h) > budget {
+        h -= 1;
+    }
+    h
+}
+
+/// Fig. 4 setup: storage fixed to a `base_hidden`-unit dense net, the
+/// virtual architecture inflated by `factor`. Returns
+/// `(virtual dims, per-layer K^ℓ)` where `K^ℓ` is the dense parameter
+/// count of layer ℓ at base width.
+pub fn expansion_dims(
+    depth: usize,
+    n_in: usize,
+    base_hidden: usize,
+    n_out: usize,
+    factor: usize,
+) -> (Vec<usize>, Vec<usize>) {
+    let base = layer_dims(depth, n_in, base_hidden, n_out);
+    let ks = (0..base.len() - 1).map(|l| (base[l] + 1) * base[l + 1]).collect();
+    let virt = layer_dims(depth, n_in, base_hidden * factor, n_out);
+    (virt, ks)
+}
+
+/// Resolve a compression-grid cell (Figs. 2–3, Tables 1–2) to the
+/// [`ModelSpec`] its artifact would have been lowered with — the Rust
+/// twin of `aot.spec_for`. `name` is the artifact name (the spec/bundle
+/// registry key), e.g. `hashnet_3l_h100_o10_c1-8`.
+pub fn grid_spec(
+    name: &str,
+    method: Method,
+    depth: usize,
+    hidden: usize,
+    out: usize,
+    c: f64,
+) -> Result<ModelSpec, ModelError> {
+    let full = layer_dims(depth, N_IN, hidden, out);
+    let budgets = hashed_budgets(&full, c);
+    match method {
+        Method::Nn | Method::Dk => {
+            // equivalent-size dense baseline: shrink hidden width to budget
+            let h_eq = if c == 1.0 {
+                hidden
+            } else {
+                equivalent_hidden_width(&full, budgets.iter().sum())
+            };
+            let dims = layer_dims(depth, N_IN, h_eq, out);
+            let budgets_used =
+                (0..dims.len() - 1).map(|l| (dims[l] + 1) * dims[l + 1]).collect();
+            ModelSpec::new(name, method, dims, budgets_used, DEFAULT_SEED_BASE, GRID_BATCH)
+        }
+        _ => ModelSpec::new(name, method, full, budgets, DEFAULT_SEED_BASE, GRID_BATCH),
+    }
+}
+
+/// Resolve a Fig. 4 expansion cell to its [`ModelSpec`] — the Rust twin
+/// of `aot.expansion_spec_for` (`name` ≈ `hashnet_3l_b50_o10_x4`).
+pub fn expansion_grid_spec(
+    name: &str,
+    method: Method,
+    depth: usize,
+    base_hidden: usize,
+    out: usize,
+    factor: usize,
+) -> Result<ModelSpec, ModelError> {
+    let (virt, ks) = expansion_dims(depth, N_IN, base_hidden, out, factor);
+    match method {
+        Method::Nn | Method::Dk => {
+            // the fixed-size dense reference (dashed line in Fig. 4)
+            let dims = layer_dims(depth, N_IN, base_hidden, out);
+            let budgets = (0..dims.len() - 1).map(|l| (dims[l] + 1) * dims[l + 1]).collect();
+            ModelSpec::new(name, method, dims, budgets, DEFAULT_SEED_BASE, GRID_BATCH)
+        }
+        _ => ModelSpec::new(name, method, virt, ks, DEFAULT_SEED_BASE, GRID_BATCH),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn py_round_is_half_to_even() {
+        // golden cases cross-checked against Python's round()
+        assert_eq!(py_round(9812.5), 9812);
+        assert_eq!(py_round(82.5), 82);
+        assert_eq!(py_round(126.25), 126);
+        assert_eq!(py_round(2.5), 2);
+        assert_eq!(py_round(3.5), 4);
+        assert_eq!(py_round(31.5625), 32);
+        assert_eq!(py_round(7.0), 7);
+        assert_eq!(py_round(7.4), 7);
+        assert_eq!(py_round(7.6), 8);
+    }
+
+    #[test]
+    fn layer_dims_match_paper_nomenclature() {
+        assert_eq!(layer_dims(3, 784, 100, 10), vec![784, 100, 10]);
+        assert_eq!(layer_dims(5, 784, 100, 10), vec![784, 100, 100, 100, 10]);
+        assert_eq!(dense_params(&[784, 100, 10]), 78500 + 1010);
+    }
+
+    #[test]
+    fn budgets_match_python_sizing_golden() {
+        // printed by python/compile/sizing.py for the repro grid widths
+        let d3 = layer_dims(3, 784, 100, 10);
+        let d5 = layer_dims(5, 784, 100, 10);
+        assert_eq!(hashed_budgets(&d3, 1.0), vec![78500, 1010]);
+        assert_eq!(hashed_budgets(&d3, 0.125), vec![9812, 126]); // 9812.5 → even
+        assert_eq!(hashed_budgets(&d3, 1.0 / 64.0), vec![1227, 16]);
+        assert_eq!(hashed_budgets(&d5, 0.125), vec![9812, 1262, 1262, 126]);
+        assert_eq!(hashed_budgets(&d5, 1.0 / 32.0), vec![2453, 316, 316, 32]);
+        let d2 = layer_dims(3, 784, 100, 2);
+        assert_eq!(hashed_budgets(&d2, 0.125), vec![9812, 25]);
+    }
+
+    #[test]
+    fn equivalent_width_matches_python_and_bounds_budget() {
+        let d3 = layer_dims(3, 784, 100, 10);
+        let d5 = layer_dims(5, 784, 100, 10);
+        assert_eq!(equivalent_hidden_width(&d3, 9812 + 126), 12);
+        assert_eq!(equivalent_hidden_width(&d5, 9812 + 1262 + 1262 + 126), 15);
+        assert_eq!(equivalent_hidden_width(&d3, 1227 + 16), 1);
+        // the invariant behind the baseline: count(h) ≤ budget < count(h+1)
+        for budget in [500usize, 5_000, 20_000, 79_510] {
+            let h = equivalent_hidden_width(&d3, budget);
+            let count = |h: usize| dense_params(&layer_dims(3, 784, h, 10));
+            assert!(count(h) <= budget || h == 1, "h={h} budget={budget}");
+            assert!(count(h + 1) > budget, "h={h} budget={budget}");
+        }
+    }
+
+    #[test]
+    fn expansion_dims_match_python_golden() {
+        assert_eq!(
+            expansion_dims(3, 784, 50, 10, 4),
+            (vec![784, 200, 10], vec![39250, 510])
+        );
+        assert_eq!(
+            expansion_dims(5, 784, 50, 10, 8),
+            (vec![784, 400, 400, 400, 10], vec![39250, 2550, 2550, 510])
+        );
+    }
+
+    #[test]
+    fn grid_specs_validate_for_every_method() {
+        for method in Method::ALL {
+            for depth in [3usize, 5] {
+                for c in [1.0, 0.125, 1.0 / 64.0] {
+                    let spec = grid_spec("cell", method, depth, 100, 10, c).unwrap();
+                    spec.validate().unwrap();
+                    assert_eq!(spec.n_in(), 784);
+                    assert_eq!(spec.n_out(), 10);
+                    assert_eq!(spec.batch, GRID_BATCH);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn hashnet_grid_spec_matches_manifest_convention() {
+        // the mnist 1/8 cell of the ModelSpec doc example
+        let spec = grid_spec("hashnet_3l_h100_o10_c1-8", Method::Hashnet, 3, 100, 10, 0.125)
+            .unwrap();
+        assert_eq!(spec.dims, vec![784, 100, 10]);
+        assert_eq!(spec.budgets, vec![9812, 126]);
+        assert_eq!(spec.stored_params(), 9938);
+        assert!((spec.compression() - 0.125).abs() < 1e-3);
+        // the equivalent-size dense baseline shrinks its hidden width
+        let nn = grid_spec("nn_3l_h100_o10_c1-8", Method::Nn, 3, 100, 10, 0.125).unwrap();
+        assert_eq!(nn.dims, vec![784, 12, 10]);
+        assert!(nn.stored_params() <= 9938);
+        // at compression 1 the dense baseline keeps the full width
+        let teacher = grid_spec("nn_3l_h100_o10_c1-1", Method::Nn, 3, 100, 10, 1.0).unwrap();
+        assert_eq!(teacher.dims, vec![784, 100, 10]);
+    }
+
+    #[test]
+    fn expansion_specs_fix_storage_and_inflate_virtual_dims() {
+        let h = expansion_grid_spec("hashnet_3l_b50_o10_x4", Method::Hashnet, 3, 50, 10, 4)
+            .unwrap();
+        assert_eq!(h.dims, vec![784, 200, 10]);
+        assert_eq!(h.budgets, vec![39250, 510]);
+        let h1 = expansion_grid_spec("hashnet_3l_b50_o10_x1", Method::Hashnet, 3, 50, 10, 1)
+            .unwrap();
+        // same storage at every factor — Fig. 4's premise
+        assert_eq!(h.stored_params(), h1.stored_params());
+        let nn = expansion_grid_spec("nn_3l_b50_o10_x1", Method::Nn, 3, 50, 10, 1).unwrap();
+        assert_eq!(nn.dims, vec![784, 50, 10]);
+    }
+}

@@ -29,40 +29,47 @@
 //!
 //! # Kernel-variant selection (see `nn::layers`)
 //!
-//! Three forward kernels read the plan; [`crate::nn::Layer::forward`]
+//! Four forward kernels read the plan; [`crate::nn::Layer::forward`]
 //! picks one per call:
 //!
 //! * **scratch-row** (`forward_hashed_scratch`) — decompress each
 //!   virtual row once into a scratch buffer, then run a dense unrolled
 //!   dot across the whole batch; the K-gather is amortized over B rows.
-//!   Chosen for B ≥ 2; parallelized over output-row blocks with
-//!   `std::thread::scope` when the layer is large enough.
+//!   Chosen for B ≥ 2; parallelized over output-row blocks on the
+//!   shared [`crate::rt::PoolExec`] when the layer is large enough.
+//! * **inverse** (`forward_hashed_inverse`) — walk the lazily-built
+//!   [`InversePlan`] bucket by bucket, adding `ξ(i,j)·w_k·a_j` for
+//!   every cell of bucket `k`: the stored weights stream **in order**
+//!   and the random traffic is confined to the small `z`/`a` vectors.
+//!   The B = 1 serving default.
 //! * **bucket-major** (`forward_hashed_bucket`, paper Eq. 10) —
 //!   scatter-accumulate ξ·aⱼ into a K-sized accumulator, then one dense
-//!   dot with `w`. Chosen for B = 1 when `K ≤ m+1` (streaming beats
-//!   gathering once the accumulator is smaller than the row).
+//!   dot with `w`. Kept as a bench variant for the B = 1, `K ≤ m+1`
+//!   regime it used to own.
 //! * **gather** (`forward_hashed_gather`) — the legacy per-cell gather
-//!   `w[h(i,j)]` (paper Eq. 8 evaluated literally), kept as the B = 1
-//!   large-K fallback and as the bench baseline.
+//!   `w[h(i,j)]` (paper Eq. 8 evaluated literally), the bench baseline.
 //!
-//! The backward pass reads the same plan: Eq. 11's input gradient uses
+//! The backward pass reads both views: Eq. 11's input gradient uses
 //! `decompress_row_into` (one row of Eq. 7 per output unit), and
-//! Eq. 12's weight gradient is one gather pass per row scattering
-//! `ξ(i,j) · Σ_b a_bj δ_bi` into the bucket gradient — batch-amortized
-//! and, since PR 4, parallelized over output-row blocks with
-//! per-block partials (`nn::layers` documents the reduction and its
-//! determinism contract).
+//! Eq. 12's weight gradient walks the [`InversePlan`] — one
+//! *sequential* write per bucket (`∂w_k += Σ ξ·S_{ij}` over the
+//! bucket's cells), parallel over disjoint bucket ranges with no
+//! partial buffers and a thread-count-independent result (`nn::layers`
+//! documents the kernels and the determinism contract).
 //!
 //! Plans are built eagerly at layer construction/load time and shared
 //! via `Arc<HashPlan>`, which is what lets `Layer::forward` /
 //! `Network::predict` take `&self`, many serving threads share one
 //! model, and all backward workers read one plan — without locks or
-//! clones in either direction.
+//! clones in either direction. The inverse view is built **lazily** on
+//! first use and cached behind a `OnceLock`, so a model that only ever
+//! runs the batch≥2 scratch kernel never pays for it.
 
 use super::{bucket_sign, layer_seeds};
+use std::sync::OnceLock;
 
 /// Immutable, sign-packed decompression plan for one hashed layer.
-#[derive(Clone, PartialEq)]
+#[derive(Clone)]
 pub struct HashPlan {
     /// Output rows of the virtual matrix (layer fan-out `n`).
     pub n: usize,
@@ -72,6 +79,83 @@ pub struct HashPlan {
     pub k: usize,
     /// `n * m1` packed entries, row-major: `bucket | (ξ<0) << 31`.
     packed: Vec<u32>,
+    /// Lazily-built CSR-by-bucket inverse view (see [`InversePlan`]).
+    inverse: OnceLock<InversePlan>,
+}
+
+impl PartialEq for HashPlan {
+    /// Plan identity is the mapping itself; the lazily-built inverse
+    /// cache is derived state and excluded from comparison.
+    fn eq(&self, other: &Self) -> bool {
+        self.n == other.n && self.m1 == other.m1 && self.k == other.k && self.packed == other.packed
+    }
+}
+
+/// The CSR-by-bucket **inverse** of a [`HashPlan`]: every virtual cell
+/// `(i, j)`, grouped by the bucket `h(i,j)` it maps to.
+///
+/// Unstructured hashing's run-time tax is memory incoherence — Eq. 12's
+/// weight gradient does one *random* write per cell when driven from
+/// the forward (row-major) plan. Grouping cells by bucket (the CSR-style
+/// index-grouped layout of Deep Compression, and the locality fix
+/// Structured Multi-Hashing argues for) turns that into one sequential
+/// write per bucket, and gives batch-1 forward a kernel that streams
+/// the stored weights in order.
+///
+/// Built once per plan by counting sort ([`HashPlan::inverse`]) and
+/// cached; it is an exact permutation of the forward plan's cells
+/// (asserted by property tests in `rust/tests/kernels.rs`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct InversePlan {
+    /// `k + 1` prefix offsets into `cells`: bucket `b`'s cells are
+    /// `cells[bucket_offsets[b] as usize .. bucket_offsets[b+1] as usize]`.
+    pub bucket_offsets: Vec<u32>,
+    /// Sign-packed cells grouped by bucket: bits 30..0 hold the
+    /// row-major flat index `i·m1 + j` of the virtual cell, bit 31 the
+    /// ξ sign — the same packing convention as the forward plan (so
+    /// [`HashPlan::apply_sign`] works on these entries too). Within a
+    /// bucket, cells are in ascending `(i, j)` order, which fixes the
+    /// per-bucket float summation order independently of how bucket
+    /// ranges are partitioned across threads.
+    pub cells: Vec<u32>,
+}
+
+impl InversePlan {
+    /// Cells of bucket `b` (all `(i,j)` with `h(i,j) = b`).
+    #[inline]
+    pub fn cells_of(&self, b: usize) -> &[u32] {
+        &self.cells[self.bucket_offsets[b] as usize..self.bucket_offsets[b + 1] as usize]
+    }
+
+    /// Bucket count (`k` of the owning plan).
+    pub fn n_buckets(&self) -> usize {
+        self.bucket_offsets.len() - 1
+    }
+
+    /// Inverse-view memory footprint in bytes.
+    pub fn bytes(&self) -> usize {
+        (self.cells.len() + self.bucket_offsets.len()) * std::mem::size_of::<u32>()
+    }
+
+    /// Bucket-index boundaries splitting the cell population into
+    /// `n_ranges` spans of roughly equal cell count (monotone,
+    /// `bounds[0] = 0`, `bounds[n_ranges] = k`). Used to load-balance
+    /// the gradient pass: bucket populations are hash-distributed and
+    /// uneven, so splitting by bucket *index* alone would skew work.
+    pub fn balanced_ranges(&self, n_ranges: usize) -> Vec<usize> {
+        let k = self.n_buckets();
+        let total = self.cells.len();
+        let n_ranges = n_ranges.max(1);
+        let mut bounds = Vec::with_capacity(n_ranges + 1);
+        bounds.push(0usize);
+        for t in 1..n_ranges {
+            let target = (total * t / n_ranges) as u32;
+            let b = self.bucket_offsets.partition_point(|&o| o < target);
+            bounds.push(b.min(k).max(*bounds.last().unwrap()));
+        }
+        bounds.push(k);
+        bounds
+    }
 }
 
 impl HashPlan {
@@ -96,7 +180,40 @@ impl HashPlan {
                 packed.push(b | if sg < 0.0 { Self::SIGN_BIT } else { 0 });
             }
         }
-        HashPlan { n, m1, k, packed }
+        HashPlan { n, m1, k, packed, inverse: OnceLock::new() }
+    }
+
+    /// The CSR-by-bucket inverse view, built on first use by counting
+    /// sort over the packed entries and cached for the plan's lifetime
+    /// (the plan is shared via `Arc`, so one build serves every thread
+    /// and every clone of the owning layer). Requires the flat cell
+    /// index to fit in 31 bits next to the sign — `n·(m+1) < 2³¹`,
+    /// which holds for any model whose plan fits in memory at
+    /// 4 bytes/cell.
+    pub fn inverse(&self) -> &InversePlan {
+        self.inverse.get_or_init(|| {
+            assert!(
+                (self.packed.len() as u64) < (1u64 << 31),
+                "inverse plan needs the flat cell index to fit in 31 bits \
+                 (n·m1 = {})",
+                self.packed.len()
+            );
+            let mut offsets = vec![0u32; self.k + 1];
+            for &e in &self.packed {
+                offsets[Self::bucket(e) + 1] += 1;
+            }
+            for b in 1..=self.k {
+                offsets[b] += offsets[b - 1];
+            }
+            let mut cursor = offsets.clone();
+            let mut cells = vec![0u32; self.packed.len()];
+            for (idx, &e) in self.packed.iter().enumerate() {
+                let b = Self::bucket(e);
+                cells[cursor[b] as usize] = idx as u32 | (e & Self::SIGN_BIT);
+                cursor[b] += 1;
+            }
+            InversePlan { bucket_offsets: offsets, cells }
+        })
     }
 
     /// Packed entries of virtual row `i` (length `m1`).
@@ -199,5 +316,68 @@ mod tests {
     #[should_panic(expected = "31 bits")]
     fn oversized_k_panics() {
         let _ = HashPlan::build(1, 1, 1usize << 31, 0, DEFAULT_SEED_BASE);
+    }
+
+    #[test]
+    fn inverse_is_a_permutation_of_the_forward_plan() {
+        for (n, m1, k) in [(9usize, 13usize, 17usize), (6, 5, 1), (4, 7, 100)] {
+            let plan = HashPlan::build(n, m1, k, 2, DEFAULT_SEED_BASE);
+            let inv = plan.inverse();
+            assert_eq!(inv.n_buckets(), k);
+            assert_eq!(inv.cells.len(), n * m1, "every cell appears");
+            assert_eq!(inv.bucket_offsets[0], 0);
+            assert_eq!(*inv.bucket_offsets.last().unwrap() as usize, n * m1);
+            let mut seen = vec![false; n * m1];
+            for b in 0..k {
+                let mut prev = None;
+                for &cell in inv.cells_of(b) {
+                    let idx = (cell & HashPlan::BUCKET_MASK) as usize;
+                    assert!(!seen[idx], "cell {idx} appears twice");
+                    seen[idx] = true;
+                    // ascending (i, j) within a bucket — fixes the
+                    // per-bucket summation order
+                    if let Some(p) = prev {
+                        assert!(p < idx, "bucket {b} not sorted");
+                    }
+                    prev = Some(idx);
+                    let (i, j) = (idx / m1, idx % m1);
+                    let fwd = plan.row(i)[j];
+                    assert_eq!(HashPlan::bucket(fwd), b, "bucket disagrees at ({i},{j})");
+                    assert_eq!(
+                        cell & HashPlan::SIGN_BIT,
+                        fwd & HashPlan::SIGN_BIT,
+                        "sign disagrees at ({i},{j})"
+                    );
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "every cell exactly once");
+        }
+    }
+
+    #[test]
+    fn inverse_is_cached_and_survives_clone() {
+        let plan = HashPlan::build(5, 6, 4, 1, DEFAULT_SEED_BASE);
+        let a = plan.inverse() as *const InversePlan;
+        let b = plan.inverse() as *const InversePlan;
+        assert_eq!(a, b, "OnceLock caches the build");
+        let clone = plan.clone();
+        assert_eq!(clone.inverse(), plan.inverse());
+        assert_eq!(clone, plan, "equality ignores the cache");
+    }
+
+    #[test]
+    fn balanced_ranges_are_monotone_and_cover_all_buckets() {
+        let plan = HashPlan::build(40, 21, 64, 0, DEFAULT_SEED_BASE);
+        let inv = plan.inverse();
+        for n_ranges in [1usize, 2, 3, 7, 64, 100] {
+            let bounds = inv.balanced_ranges(n_ranges);
+            assert_eq!(bounds.len(), n_ranges + 1);
+            assert_eq!(bounds[0], 0);
+            assert_eq!(*bounds.last().unwrap(), 64);
+            assert!(bounds.windows(2).all(|w| w[0] <= w[1]), "monotone: {bounds:?}");
+            // ranges partition the cells exactly
+            let total: usize = bounds.windows(2).map(|w| (w[0]..w[1]).map(|b| inv.cells_of(b).len()).sum::<usize>()).sum();
+            assert_eq!(total, 40 * 21);
+        }
     }
 }

@@ -37,6 +37,7 @@ pub mod data;
 pub mod hash;
 pub mod model;
 pub mod nn;
+pub mod rt;
 pub mod runtime;
 pub mod serve;
 pub mod tensor;

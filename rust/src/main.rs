@@ -13,7 +13,10 @@
 //!              flags apply to `repro` and `hpo`.
 //!   eval     — evaluate a bundle (--bundle m.hnb, native) or an
 //!              artifact + checkpoint (--config/--checkpoint, PJRT)
-//!   repro    — regenerate a paper experiment (fig2|fig3|table1|table2|fig4)
+//!   repro    — regenerate a paper experiment (fig2|fig3|table1|table2|fig4);
+//!              without artifacts/ the non-DK cells run on the native
+//!              engine (specs re-derived by coordinator::sizing), so the
+//!              grids work on a fresh checkout with no Python toolchain
 //!   hpo      — random-search hyperparameters for an artifact
 //!   serve    — batched inference server over bundles (--bundle a.hnb,b.hnb)
 //!              and/or manifest artifacts (--config a,b); hot-(re)load

@@ -7,8 +7,9 @@
 //! |-------------------------------------|-------|
 //! | [`Layer::forward_hashed_gather`]    | Eq. 8 — `z_i = Σ_j ξ(i,j)·w_{h(i,j)}·a_j`, one gathered read per virtual cell |
 //! | [`Layer::forward_hashed_bucket`]    | Eq. 10 — bucket-major: scatter `ξ(i,j)·a_j` into a K-sized accumulator, one streaming dot with `w` |
+//! | [`Layer::forward_hashed_inverse`]   | Eq. 10 read off the [`InversePlan`]: for each bucket `k`, add `ξ·w_k·a_j` into `z_i` per cell — `w` streams in order (the B = 1 serving default) |
 //! | [`Layer::forward_hashed_scratch`]   | Eq. 7 made batch-amortized: decompress each virtual row `V_i` once, dense dot across the batch |
-//! | hashed backward ([`Layer::backward`]) | Eqs. 11 & 12 — `∂L/∂a_j = Σ_i ξ(i,j)·w_{h(i,j)}·δ_i` and `∂L/∂w_k = Σ_{(i,j): h(i,j)=k} ξ(i,j)·a_j·δ_i` |
+//! | hashed backward ([`Layer::backward`]) | Eqs. 11 & 12 — `∂L/∂a_j = Σ_i ξ(i,j)·w_{h(i,j)}·δ_i` and `∂L/∂w_k = Σ_{(i,j): h(i,j)=k} ξ(i,j)·a_j·δ_i` (Eq. 12 walks the inverse plan: one sequential write per bucket) |
 //! | `LayerKind::Hashed { k }`           | the per-layer real-weight budget `K^ℓ` (§4.1) |
 //! | the ξ sign bit                      | §4.2's sign factor, packed into bit 31 of each [`HashPlan`] entry |
 //!
@@ -27,40 +28,47 @@
 //!
 //! # Threaded backward
 //!
-//! `Layer::backward` takes a [`TrainOptions`]: the hashed backward is
-//! parallelized over output-row *blocks*, each block accumulating into
-//! a private `(∂w, ∂a)` partial, followed by an order-preserving
-//! chunked reduction into the shared buffers; the dense backward runs
-//! its two transpose matmuls through the row-parallel
-//! [`Matrix::matmul_tn_par`] / [`Matrix::matmul_par`], which are
-//! bit-identical to their serial forms at any thread count. Ordered
-//! mode (`TrainOptions::deterministic`) fixes the block partition and
-//! reduction order independently of the thread count, so `--threads N`
-//! reproduces `--threads 1` bit for bit — see [`TrainOptions`] for the
-//! exact contract.
+//! `Layer::backward` takes a [`TrainOptions`]; everything parallel runs
+//! on the shared [`crate::rt::PoolExec`] (parked workers, no per-call
+//! spawn/join). The hashed backward splits Eq. 11 and Eq. 12:
+//!
+//! * **Eq. 12 (`∂w`)** goes through the [`InversePlan`]: first
+//!   `S = δᵀ·[a|1]` ([`Matrix::matmul_tn_aug`], bit-identical at any
+//!   thread count), then one sequential write per bucket
+//!   (`∂w_k += Σ_{cells of k} ξ·S_{ij}`), parallel over disjoint bucket
+//!   ranges — **no partial buffers**, and since each bucket's cell
+//!   order is fixed by the plan, the result is bit-identical for every
+//!   thread count in *both* reduction modes.
+//! * **Eq. 11 (`∂a`)** is parallelized over output-row *blocks*, each
+//!   block accumulating into a private partial, followed by an
+//!   order-preserving chunked reduction into the shared buffer.
+//!
+//! The dense backward runs its transpose matmuls through the
+//! row-parallel [`Matrix::matmul_tn_par`] / [`Matrix::matmul_par`],
+//! which are bit-identical to their serial forms at any thread count.
+//! Ordered mode (`TrainOptions::deterministic`) fixes the `∂a` block
+//! partition and reduction order independently of the thread count, so
+//! `--threads N` reproduces `--threads 1` bit for bit — see
+//! [`TrainOptions`] for the exact contract.
 
-use crate::hash::{hash_gaussian, hash_uniform, layer_seeds, HashPlan};
+use crate::hash::{hash_gaussian, hash_uniform, layer_seeds, plan::InversePlan, HashPlan};
 use crate::tensor::{dot_unrolled, Matrix};
 use crate::util::rng::Pcg32;
 use std::sync::Arc;
 
-/// Below this many multiply-adds a kernel stays single-threaded
-/// (thread spawn/join overhead would dominate).
+/// Below this many multiply-adds a kernel stays single-threaded (even
+/// pool dispatch costs a queue push and a wakeup).
 const PAR_WORK_THRESHOLD: usize = 1 << 21;
 
-/// Worker count for a parallel forward kernel: capped by the machine,
-/// by 8 (diminishing returns on a memory-bound kernel) and by the
-/// number of output rows.
+/// Worker count for a parallel forward kernel: the shared pool's lane
+/// count ([`crate::rt::pool::max_concurrency`], machine-capped at 8 —
+/// diminishing returns on a memory-bound kernel), capped by the number
+/// of output rows.
 fn par_threads(work: usize, rows: usize) -> usize {
     if work < PAR_WORK_THRESHOLD {
         return 1;
     }
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-        .min(8)
-        .min(rows)
-        .max(1)
+    crate::rt::pool::max_concurrency().min(rows).max(1)
 }
 
 /// Execution policy for the training path — how [`Layer::backward`]
@@ -70,10 +78,12 @@ fn par_threads(work: usize, rows: usize) -> usize {
 /// # Determinism contract
 ///
 /// * **Fast mode** (`deterministic: false`, the default): the hashed
-///   backward splits output rows into one block per worker, so results
-///   are reproducible for a *fixed* `threads` value but the float
-///   summation order — and therefore the low bits — changes with the
-///   thread count.
+///   `∂a` pass splits output rows into one block per worker, so results
+///   are reproducible for a *fixed* `threads` value but the `∂a` float
+///   summation order — and therefore its low bits — changes with the
+///   thread count. (The hashed `∂w` is bit-identical at any thread
+///   count even here: the inverse-plan pass has a fixed per-bucket
+///   summation order.)
 /// * **Ordered mode** (`deterministic: true`): rows are split into
 ///   fixed-size blocks of `block_rows` regardless of the thread count,
 ///   each block accumulates into its own partial, and partials are
@@ -137,16 +147,15 @@ impl TrainOptions {
         self
     }
 
-    /// `threads` with `0` resolved to the machine's parallelism
-    /// (capped at 8 — the backward is memory-bound past that).
+    /// `threads` with `0` resolved to the shared pool's lane count
+    /// ([`crate::rt::pool::max_concurrency`]: machine parallelism
+    /// capped at 8 — the backward is memory-bound past that — or the
+    /// `HASHEDNETS_POOL_THREADS` override).
     pub fn resolved_threads(&self) -> usize {
         if self.threads != 0 {
             return self.threads;
         }
-        std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(1)
-            .min(8)
+        crate::rt::pool::max_concurrency()
     }
 
     /// `block_rows` with `0` resolved to [`Self::AUTO_BLOCK_ROWS`].
@@ -316,9 +325,10 @@ impl Layer {
     /// Forward: `z = a·Vᵀ (+ b)`; `a` is `(B × m)` un-augmented.
     ///
     /// Hashed layers dispatch on the heuristic documented in
-    /// `hash::plan`: bucket-major for B = 1 with `K ≤ m+1`, the legacy
-    /// gather for B = 1 with large K, scratch-row (batch-amortized,
-    /// possibly multi-threaded) for B ≥ 2.
+    /// `hash::plan`: the inverse-plan kernel (streaming `w` in bucket
+    /// order) for B = 1, scratch-row (batch-amortized, pool-parallel on
+    /// big layers) for B ≥ 2. The bias column is handled implicitly —
+    /// no kernel materializes `a.augment_ones()`.
     pub fn forward(&self, a: &Matrix) -> Matrix {
         assert_eq!(a.cols, self.m);
         match self.kind {
@@ -337,38 +347,38 @@ impl Layer {
                 }
                 z
             }
-            LayerKind::Hashed { k } => {
-                if a.rows == 1 && k <= self.m + 1 {
-                    self.forward_hashed_bucket(a)
-                } else if a.rows == 1 {
-                    self.forward_hashed_gather(a)
+            LayerKind::Hashed { .. } => {
+                if a.rows == 1 {
+                    self.forward_hashed_inverse(a)
                 } else {
                     self.forward_hashed_scratch(a)
                 }
             }
             _ => {
                 let v = self.virtual_matrix();
-                a.augment_ones().matmul_nt(&v)
+                a.matmul_nt_aug(&v)
             }
         }
     }
 
     /// Legacy decompress-on-the-fly kernel (paper Eq. 8): per batch row,
     /// per virtual cell, gather `w[h(i,j)]` through the plan. One random
-    /// read per cell per batch row — the bench baseline, and the B = 1
-    /// fallback when K is too large for the bucket-major accumulator.
+    /// read per cell per batch row — kept as the bench baseline the
+    /// other kernels are measured against.
     pub fn forward_hashed_gather(&self, a: &Matrix) -> Matrix {
-        let n = self.n;
+        let (m, n) = (self.m, self.n);
         let plan = self.plan_ref();
         let params: &[f32] = &self.params;
-        let a_aug = a.augment_ones();
         let mut z = Matrix::zeros(a.rows, n);
         for b in 0..a.rows {
-            let arow = a_aug.row(b);
+            let arow = a.row(b);
             let zrow = z.row_mut(b);
             for i in 0..n {
-                let mut acc = 0.0f32;
-                for (&e, &av) in plan.row(i).iter().zip(arow) {
+                let prow = plan.row(i);
+                // bias column j = m contributes ξ·w with a_j ≡ 1
+                let eb = prow[m];
+                let mut acc = HashPlan::apply_sign(eb, params[HashPlan::bucket(eb)]);
+                for (&e, &av) in prow[..m].iter().zip(arow) {
                     acc += HashPlan::apply_sign(e, params[HashPlan::bucket(e)]) * av;
                 }
                 zrow[i] = acc;
@@ -378,49 +388,36 @@ impl Layer {
     }
 
     /// Scratch-row kernel: decompress each virtual row **once** into a
-    /// per-thread scratch buffer, then run a dense unrolled dot against
+    /// per-task scratch buffer, then run a dense unrolled dot against
     /// every batch row — the K-gather is amortized over B rows instead
     /// of repeated B times. Output rows are computed transposed
-    /// (`n × B`) so row blocks are contiguous and can be split across
-    /// a `std::thread::scope` without locks.
+    /// (`n × B`) so row blocks are contiguous and split cleanly across
+    /// [`crate::rt::PoolExec`] tasks without locks.
     pub fn forward_hashed_scratch(&self, a: &Matrix) -> Matrix {
-        let (m1, n) = (self.m + 1, self.n);
+        let (m, m1, n) = (self.m, self.m + 1, self.n);
         let plan = self.plan_ref();
         let params: &[f32] = &self.params;
-        let a_aug = a.augment_ones();
         let rows_b = a.rows;
         if rows_b == 0 {
             return Matrix::zeros(0, n);
         }
         let mut zt = Matrix::zeros(n, rows_b);
         let threads = par_threads(n * m1 * (rows_b + 1), n);
-        if threads == 1 {
-            let mut scratch = vec![0.0f32; m1];
-            for i in 0..n {
-                plan.decompress_row_into(i, params, &mut scratch);
-                let zrow = zt.row_mut(i);
-                for (b, zv) in zrow.iter_mut().enumerate() {
-                    *zv = dot_unrolled(a_aug.row(b), &scratch);
+        let rows_per = n.div_ceil(threads);
+        crate::rt::pool::run_parts(
+            zt.data.chunks_mut(rows_per * rows_b).collect(),
+            |blk, chunk: &mut [f32]| {
+                let i0 = blk * rows_per;
+                let mut scratch = vec![0.0f32; m1];
+                for (r, zrow) in chunk.chunks_mut(rows_b).enumerate() {
+                    plan.decompress_row_into(i0 + r, params, &mut scratch);
+                    let bias = scratch[m];
+                    for (b, zv) in zrow.iter_mut().enumerate() {
+                        *zv = bias + dot_unrolled(a.row(b), &scratch[..m]);
+                    }
                 }
-            }
-        } else {
-            let rows_per = (n + threads - 1) / threads;
-            let a_ref = &a_aug;
-            std::thread::scope(|s| {
-                for (blk, chunk) in zt.data.chunks_mut(rows_per * rows_b).enumerate() {
-                    let i0 = blk * rows_per;
-                    s.spawn(move || {
-                        let mut scratch = vec![0.0f32; m1];
-                        for (r, zrow) in chunk.chunks_mut(rows_b).enumerate() {
-                            plan.decompress_row_into(i0 + r, params, &mut scratch);
-                            for (b, zv) in zrow.iter_mut().enumerate() {
-                                *zv = dot_unrolled(a_ref.row(b), &scratch);
-                            }
-                        }
-                    });
-                }
-            });
-        }
+            },
+        );
         let mut z = Matrix::zeros(rows_b, n);
         for i in 0..n {
             for b in 0..rows_b {
@@ -433,26 +430,56 @@ impl Layer {
     /// Bucket-major kernel (paper Eq. 10): per output row, scatter
     /// ξ(i,j)·aⱼ into a K-sized accumulator, then one streaming dot with
     /// the stored weights — `z_i = Σ_k w_k · Σ_{j: h(i,j)=k} ξ(i,j) a_j`.
-    /// Wins for B = 1 serving when `K ≤ m+1` (the accumulator is smaller
-    /// than the row, and both passes stream).
+    /// The former B = 1 `K ≤ m+1` default, kept as a bench variant next
+    /// to [`Layer::forward_hashed_inverse`].
     pub fn forward_hashed_bucket(&self, a: &Matrix) -> Matrix {
         let LayerKind::Hashed { k } = self.kind else {
             unreachable!("bucket kernel on a non-hashed layer")
         };
-        let n = self.n;
+        let (m, n) = (self.m, self.n);
         let plan = self.plan_ref();
-        let a_aug = a.augment_ones();
         let mut z = Matrix::zeros(a.rows, n);
         let mut acc = vec![0.0f32; k];
         for b in 0..a.rows {
-            let arow = a_aug.row(b);
+            let arow = a.row(b);
             let zrow = z.row_mut(b);
             for i in 0..n {
                 acc.iter_mut().for_each(|x| *x = 0.0);
-                for (&e, &av) in plan.row(i).iter().zip(arow) {
+                let prow = plan.row(i);
+                for (&e, &av) in prow[..m].iter().zip(arow) {
                     acc[HashPlan::bucket(e)] += HashPlan::apply_sign(e, av);
                 }
+                let eb = prow[m]; // implicit bias column, a_j ≡ 1
+                acc[HashPlan::bucket(eb)] += HashPlan::apply_sign(eb, 1.0);
                 zrow[i] = dot_unrolled(&acc, &self.params);
+            }
+        }
+        z
+    }
+
+    /// Inverse-plan kernel: Eq. 10 evaluated off the CSR-by-bucket
+    /// [`InversePlan`] — for each bucket `k` (ascending), add
+    /// `ξ(i,j)·w_k·a_j` into `z_i` for every cell of the bucket. The
+    /// stored weights stream **in order** (one sequential read each)
+    /// and the per-cell random traffic is confined to the small `z`
+    /// and `a` vectors, which is what makes unstructured hashing
+    /// cache-friendly at B = 1; the inverse view is built lazily on
+    /// first call and cached on the shared plan.
+    pub fn forward_hashed_inverse(&self, a: &Matrix) -> Matrix {
+        let (m, m1, n) = (self.m, self.m + 1, self.n);
+        let plan = self.plan_ref();
+        let inv = plan.inverse();
+        let mut z = Matrix::zeros(a.rows, n);
+        for b in 0..a.rows {
+            let arow = a.row(b);
+            let zrow = z.row_mut(b);
+            for (k, &w) in self.params.iter().enumerate() {
+                for &cell in inv.cells_of(k) {
+                    let idx = (cell & HashPlan::BUCKET_MASK) as usize;
+                    let (i, j) = (idx / m1, idx % m1);
+                    let av = if j < m { arow[j] } else { 1.0 };
+                    zrow[i] += HashPlan::apply_sign(cell, w) * av;
+                }
             }
         }
         z
@@ -463,8 +490,10 @@ impl Layer {
     /// into `grad` (same layout as `params`).
     ///
     /// `opts` controls the worker count and the reduction order — see
-    /// [`TrainOptions`] for the determinism contract. The default
-    /// options reproduce the historical single-thread behavior exactly.
+    /// [`TrainOptions`] for the determinism contract (within-version:
+    /// the hashed `∂w` summation order moved to the inverse plan's
+    /// bucket order, so gradients match pre-inverse releases only to
+    /// float tolerance, not bit for bit).
     pub fn backward(
         &self,
         a: &Matrix,
@@ -495,7 +524,7 @@ impl Layer {
                 let threads = opts.par_threads(2 * delta.rows * self.n * m1, self.n);
                 let v = self.virtual_matrix();
                 let da_aug = delta.matmul_par(&v, threads);
-                let g_dense = delta.matmul_tn_par(&a.augment_ones(), threads); // (n×(m+1))
+                let g_dense = delta.matmul_tn_aug(a, threads); // (n×(m+1)), implicit bias col
                 let keep = k as f32 / (m1 * self.n) as f32;
                 let (s_mask, _) = layer_seeds(1000 + self.index as u32, self.seed_base);
                 for (idx, (g, &gd)) in grad.iter_mut().zip(&g_dense.data).enumerate() {
@@ -510,9 +539,9 @@ impl Layer {
                 let threads = opts.par_threads(delta.rows * self.n * m1, self.n);
                 let v = self.virtual_matrix();
                 let da_aug = delta.matmul_par(&v, threads);
-                // h = a_aug·Uᵀ (B×r); dW = deltaᵀ·h (n×r)
+                // h = [a|1]·Uᵀ (B×r); dW = deltaᵀ·h (n×r)
                 let u = self.lrd_fixed_u(r);
-                let h = a.augment_ones().matmul_nt(&u);
+                let h = a.matmul_nt_aug(&u);
                 let dw = delta.matmul_tn(&h); // (n×r) — r is small, stay serial
                 grad.iter_mut().zip(&dw.data).for_each(|(g, &d)| *g += d);
                 da_aug.drop_last_col()
@@ -520,24 +549,26 @@ impl Layer {
         }
     }
 
-    /// Hashed backward (paper Eqs. 11 & 12), batch-amortized over the
-    /// plan: per virtual row, decompress once (for `da`), reduce the
-    /// batch into `s_j = Σ_b δ_bi a_bj`, then a **single** gather pass
-    /// scatters `ξ(i,j)·s_j` into the weight gradient — K random writes
-    /// per row instead of K·B.
+    /// Hashed backward (paper Eqs. 11 & 12), split by gradient:
     ///
-    /// Parallel path: output rows are split into blocks; each block
-    /// accumulates into a private `(∂w, ∂a)` partial on one of the
-    /// scoped worker threads (the same `std::thread::scope` structure
-    /// as the scratch-row forward), and the partials are then reduced
-    /// into the shared buffers in ascending block order, with the
-    /// reduction itself chunked across threads by index range — which
-    /// keeps the per-element summation order independent of the thread
-    /// count. In ordered mode the block partition is fixed by
-    /// `block_rows`, so the whole backward is thread-count-invariant;
-    /// in fast mode there is one block per worker (fewer partials to
-    /// zero and reduce) and `threads = 1` skips the partials entirely,
-    /// running the historical in-place loop.
+    /// * **Eq. 12 (`∂w`)** — `S = δᵀ·[a|1]` via the bit-identical
+    ///   row-parallel [`Matrix::matmul_tn_aug`] (`S.row(i)` *is* the
+    ///   batch reduction `s_j = Σ_b δ_bi a_bj` of row `i`), then one
+    ///   **sequential** write per bucket off the [`InversePlan`]:
+    ///   `∂w_k += Σ_{(i,j) ∈ bucket k} ξ(i,j)·S_{ij}` — see
+    ///   [`inverse_weight_grad`]. No per-block partial buffers, no
+    ///   random scatter, and the result is bit-identical for every
+    ///   thread count in both reduction modes.
+    /// * **Eq. 11 (`∂a`)** — per virtual row, decompress once and
+    ///   accumulate `da_b += δ_bi·V_i`. Output rows are split into
+    ///   blocks on the shared pool, each block accumulating into a
+    ///   private `∂a` partial, then reduced in ascending block order
+    ///   with the reduction chunked by index range
+    ///   ([`reduce_block_partials`]) — which keeps the per-element
+    ///   summation order independent of the thread count. In ordered
+    ///   mode the block partition is fixed by `block_rows`, so `∂a` is
+    ///   thread-count-invariant too; in fast mode there is one block
+    ///   per lane, and `threads = 1` skips the partials entirely.
     fn backward_hashed(
         &self,
         a: &Matrix,
@@ -548,21 +579,26 @@ impl Layer {
         let (m1, n, m) = (self.m + 1, self.n, self.m);
         let plan = self.plan_ref();
         let params: &[f32] = &self.params;
-        let a_aug = a.augment_ones();
         let rows_b = a.rows;
         let mut da = Matrix::zeros(rows_b, m);
+        if rows_b == 0 {
+            return da;
+        }
         let threads = opts.par_threads(n * m1 * (rows_b + 2), n);
-        if rows_b == 0 || (threads == 1 && !opts.deterministic) {
-            // serial fast path: accumulate straight into the shared buffers
+
+        // Eq. 12 through the inverse plan (scatter-free, no partials)
+        let s = delta.matmul_tn_aug(a, threads);
+        inverse_weight_grad(plan, &s, grad, threads);
+
+        // Eq. 11: da = δ·V over decompressed rows
+        if threads == 1 && !opts.deterministic {
+            // serial fast path: accumulate straight into the shared buffer
             let mut vrow = vec![0.0f32; m1];
-            let mut srow = vec![0.0f32; m1];
-            hashed_backward_rows(
-                plan, params, &a_aug, delta, 0..n, m, grad, &mut da.data, &mut vrow, &mut srow,
-            );
+            hashed_da_rows(plan, params, delta, 0..n, m, &mut da.data, &mut vrow);
             return da;
         }
         // block partition: thread-count-independent in ordered mode,
-        // one block per worker in fast mode
+        // one block per lane in fast mode
         let block_rows = if opts.deterministic {
             opts.resolved_block_rows().min(n)
         } else {
@@ -570,55 +606,79 @@ impl Layer {
         };
         let n_blocks = n.div_ceil(block_rows);
         let threads = threads.min(n_blocks);
-        let klen = grad.len();
-        let mut partials: Vec<(Vec<f32>, Vec<f32>)> = (0..n_blocks)
-            .map(|_| (vec![0.0f32; klen], vec![0.0f32; rows_b * m]))
-            .collect();
+        let mut partials: Vec<Vec<f32>> =
+            (0..n_blocks).map(|_| vec![0.0f32; rows_b * m]).collect();
         let blocks_per = n_blocks.div_ceil(threads);
-        let (a_ref, d_ref) = (&a_aug, delta);
-        std::thread::scope(|s| {
-            for (t, pchunk) in partials.chunks_mut(blocks_per).enumerate() {
-                let blk0 = t * blocks_per;
-                s.spawn(move || {
-                    let mut vrow = vec![0.0f32; m1];
-                    let mut srow = vec![0.0f32; m1];
-                    for (bi, (pg, pda)) in pchunk.iter_mut().enumerate() {
-                        let i0 = (blk0 + bi) * block_rows;
-                        let i1 = (i0 + block_rows).min(n);
-                        hashed_backward_rows(
-                            plan, params, a_ref, d_ref, i0..i1, m, pg, pda, &mut vrow, &mut srow,
-                        );
-                    }
-                });
-            }
-        });
-        let gparts: Vec<&[f32]> = partials.iter().map(|(g, _)| g.as_slice()).collect();
-        reduce_block_partials(grad, &gparts, threads);
-        let dparts: Vec<&[f32]> = partials.iter().map(|(_, d)| d.as_slice()).collect();
+        crate::rt::pool::run_parts(
+            partials.chunks_mut(blocks_per).collect(),
+            |t, pchunk: &mut [Vec<f32>]| {
+                let mut vrow = vec![0.0f32; m1];
+                for (bi, pda) in pchunk.iter_mut().enumerate() {
+                    let i0 = (t * blocks_per + bi) * block_rows;
+                    let i1 = (i0 + block_rows).min(n);
+                    hashed_da_rows(plan, params, delta, i0..i1, m, pda, &mut vrow);
+                }
+            },
+        );
+        let dparts: Vec<&[f32]> = partials.iter().map(Vec::as_slice).collect();
         reduce_block_partials(&mut da.data, &dparts, threads);
+        da
+    }
+
+    /// Legacy Eq. 12 path — the fused row-major loop that **scatters**
+    /// `ξ(i,j)·s_j` into the bucket gradient, one random write per
+    /// virtual cell (serial). Kept as the baseline the inverse-plan
+    /// gradient is benchmarked and cross-checked against
+    /// (`benches/train_throughput.rs`, `rust/tests/kernels.rs`).
+    pub fn backward_hashed_scatter(&self, a: &Matrix, delta: &Matrix, grad: &mut [f32]) -> Matrix {
+        assert_eq!(grad.len(), self.params.len());
+        let (m1, n, m) = (self.m + 1, self.n, self.m);
+        let plan = self.plan_ref();
+        let params: &[f32] = &self.params;
+        let rows_b = a.rows;
+        let mut da = Matrix::zeros(rows_b, m);
+        let mut vrow = vec![0.0f32; m1];
+        let mut srow = vec![0.0f32; m1];
+        for i in 0..n {
+            if (0..rows_b).all(|b| delta.at(b, i) == 0.0) {
+                continue;
+            }
+            plan.decompress_row_into(i, params, &mut vrow);
+            srow.iter_mut().for_each(|x| *x = 0.0);
+            for b in 0..rows_b {
+                let d = delta.at(b, i);
+                if d == 0.0 {
+                    continue;
+                }
+                for (dv, &vv) in da.data[b * m..(b + 1) * m].iter_mut().zip(&vrow[..m]) {
+                    *dv += d * vv;
+                }
+                for (sv, &av) in srow[..m].iter_mut().zip(a.row(b)) {
+                    *sv += d * av;
+                }
+                srow[m] += d; // implicit bias column, a_j ≡ 1
+            }
+            // Eq. 12 scattered: dw_{h(i,j)} += ξ(i,j) Σ_b a_bj δ_bi
+            for (&e, &sv) in plan.row(i).iter().zip(&*srow) {
+                grad[HashPlan::bucket(e)] += HashPlan::apply_sign(e, sv);
+            }
+        }
         da
     }
 }
 
-/// Backward contribution of virtual rows `rows` (paper Eqs. 11 & 12):
-/// per row, decompress once into `vrow` (for `da += δ_i · V_i`), reduce
-/// the batch into `srow[j] = Σ_b δ_bi a_bj`, then one gather pass
-/// scatters `ξ(i,j)·srow[j]` into the bucket gradient. `grad` / `da`
-/// are either the shared output buffers (serial path) or a
-/// block-private partial (threaded path); `da` is the flattened
-/// `(B × m)` input gradient.
-#[allow(clippy::too_many_arguments)]
-fn hashed_backward_rows(
+/// Eq. 11 contribution of virtual rows `rows`: per row, decompress once
+/// into `vrow` and accumulate `da_b += δ_bi · V_i` for every batch row
+/// with a nonzero delta. `da` is either the shared flattened `(B × m)`
+/// output buffer (serial path) or a block-private partial (pool path).
+fn hashed_da_rows(
     plan: &HashPlan,
     params: &[f32],
-    a_aug: &Matrix,
     delta: &Matrix,
     rows: std::ops::Range<usize>,
     m: usize,
-    grad: &mut [f32],
     da: &mut [f32],
     vrow: &mut [f32],
-    srow: &mut [f32],
 ) {
     let rows_b = delta.rows;
     for i in rows {
@@ -626,59 +686,77 @@ fn hashed_backward_rows(
             continue;
         }
         plan.decompress_row_into(i, params, vrow);
-        srow.iter_mut().for_each(|x| *x = 0.0);
         for b in 0..rows_b {
             let d = delta.at(b, i);
             if d == 0.0 {
                 continue;
             }
-            let arow = a_aug.row(b);
             for (dv, &vv) in da[b * m..(b + 1) * m].iter_mut().zip(&vrow[..m]) {
                 *dv += d * vv;
             }
-            for (sv, &av) in srow.iter_mut().zip(arow) {
-                *sv += d * av;
-            }
-        }
-        // Eq. 12: dw_{h(i,j)} += ξ(i,j) Σ_b a_bj δ_bi
-        for (&e, &sv) in plan.row(i).iter().zip(&*srow) {
-            grad[HashPlan::bucket(e)] += HashPlan::apply_sign(e, sv);
         }
     }
 }
 
+/// Eq. 12 through the [`InversePlan`]: `∂w_k += Σ_{(i,j): h(i,j)=k}
+/// ξ(i,j)·S_{ij}` where `S = δᵀ·[a|1]` — the inverse plan's flat cell
+/// index addresses `S.data` directly, so the pass does one *sequential*
+/// write per bucket with gathered reads from `S`, instead of one random
+/// write per virtual cell.
+///
+/// Buckets are split across pool tasks by ranges of roughly equal cell
+/// count ([`InversePlan::balanced_ranges`]); ranges write **disjoint**
+/// `grad` spans, so no partial buffers or reduction are needed, and
+/// since each bucket's cell order is fixed by the plan, the result is
+/// **bit-identical for every thread count** — the weight gradient is
+/// deterministic in both reduction modes by construction.
+fn inverse_weight_grad(plan: &HashPlan, s: &Matrix, grad: &mut [f32], threads: usize) {
+    debug_assert_eq!(grad.len(), plan.k);
+    debug_assert_eq!(s.data.len(), plan.n * plan.m1);
+    let inv: &InversePlan = plan.inverse();
+    let threads = if inv.cells.len() < PAR_WORK_THRESHOLD { 1 } else { threads.max(1) };
+    let bounds = inv.balanced_ranges(threads.min(grad.len()));
+    let mut parts: Vec<(usize, &mut [f32])> = Vec::with_capacity(bounds.len() - 1);
+    let mut rest = grad;
+    let mut prev = 0usize;
+    for &b in &bounds[1..] {
+        let (head, tail) = rest.split_at_mut(b - prev);
+        parts.push((prev, head));
+        rest = tail;
+        prev = b;
+    }
+    crate::rt::pool::run_parts(parts, |_t, (k0, gpart): (usize, &mut [f32])| {
+        for (kk, g) in gpart.iter_mut().enumerate() {
+            let mut acc = 0.0f32;
+            for &cell in inv.cells_of(k0 + kk) {
+                let idx = (cell & HashPlan::BUCKET_MASK) as usize;
+                acc += HashPlan::apply_sign(cell, s.data[idx]);
+            }
+            *g += acc;
+        }
+    });
+}
+
 /// `dst[j] += Σ_blk parts[blk][j]`, always summing blocks in ascending
-/// order for every element. Large reductions are chunked across scoped
-/// threads by *index range*, never by block, so the float addition
+/// order for every element. Large reductions are chunked across pool
+/// tasks by *index range*, never by block, so the float addition
 /// order — and therefore the result, bit for bit — is independent of
 /// the thread count ("tree" step of the backward's block reduction).
 fn reduce_block_partials(dst: &mut [f32], parts: &[&[f32]], threads: usize) {
-    /// Below this many output elements per thread, spawning costs more
+    /// Below this many output elements per task, dispatch costs more
     /// than the adds.
     const CHUNK_MIN: usize = 1 << 13;
     if dst.is_empty() || parts.is_empty() {
         return;
     }
     let threads = threads.clamp(1, dst.len().div_ceil(CHUNK_MIN));
-    if threads == 1 {
+    let chunk = dst.len().div_ceil(threads);
+    crate::rt::pool::run_parts(dst.chunks_mut(chunk).collect(), |c, dchunk: &mut [f32]| {
+        let off = c * chunk;
         for part in parts {
-            for (d, &p) in dst.iter_mut().zip(*part) {
+            for (d, &p) in dchunk.iter_mut().zip(&part[off..]) {
                 *d += p;
             }
-        }
-        return;
-    }
-    let chunk = dst.len().div_ceil(threads);
-    std::thread::scope(|s| {
-        for (c, dchunk) in dst.chunks_mut(chunk).enumerate() {
-            let off = c * chunk;
-            s.spawn(move || {
-                for part in parts {
-                    for (d, &p) in dchunk.iter_mut().zip(&part[off..]) {
-                        *d += p;
-                    }
-                }
-            });
         }
     });
 }
@@ -722,11 +800,52 @@ mod tests {
                 ("gather", l.forward_hashed_gather(&a)),
                 ("scratch", l.forward_hashed_scratch(&a)),
                 ("bucket", l.forward_hashed_bucket(&a)),
+                ("inverse", l.forward_hashed_inverse(&a)),
             ] {
                 for (x, y) in z.data.iter().zip(&z_ref.data) {
                     assert!((x - y).abs() < 1e-5, "{name} b={batch}: {x} vs {y}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn scatter_and_inverse_weight_gradients_agree() {
+        // the legacy random-scatter Eq. 12 and the inverse-plan pass
+        // sum the same terms in different orders — they must agree to
+        // float tolerance on every kernel regime
+        for (m, n, k, batch) in [(12usize, 30usize, 40usize, 5usize), (8, 6, 100, 1), (20, 10, 7, 50)] {
+            let l = mk(LayerKind::Hashed { k }, m, n);
+            let mut rng = Pcg32::new(13, k as u64);
+            let a = rand_matrix(batch, m, &mut rng);
+            let co = rand_matrix(batch, n, &mut rng);
+            let mut g_inv = vec![0.0f32; k];
+            let da_inv = l.backward(&a, &co, &mut g_inv, &TrainOptions::default());
+            let mut g_sc = vec![0.0f32; k];
+            let da_sc = l.backward_hashed_scatter(&a, &co, &mut g_sc);
+            for (x, y) in g_inv.iter().zip(&g_sc).chain(da_inv.data.iter().zip(&da_sc.data)) {
+                assert!((x - y).abs() < 1e-4 * (1.0 + y.abs()), "k={k} b={batch}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_weight_gradient_is_thread_count_invariant_even_in_fast_mode() {
+        // Eq. 12 off the inverse plan has a fixed per-bucket summation
+        // order, so ∂w is bit-identical across thread counts without
+        // the ordered-reduction machinery
+        let l = mk(LayerKind::Hashed { k: 64 }, 20, 40);
+        let mut rng = Pcg32::new(17, 17);
+        let a = rand_matrix(10, 20, &mut rng);
+        let co = rand_matrix(10, 40, &mut rng);
+        let grad_with = |threads: usize| -> Vec<u32> {
+            let mut g = vec![0.0f32; l.params.len()];
+            l.backward(&a, &co, &mut g, &TrainOptions::with_threads(threads));
+            g.iter().map(|v| v.to_bits()).collect()
+        };
+        let g1 = grad_with(1);
+        for threads in [2usize, 4, 8] {
+            assert_eq!(g1, grad_with(threads), "t{threads}");
         }
     }
 

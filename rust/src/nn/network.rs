@@ -79,6 +79,19 @@ impl Network {
         self.layers.last().map(|l| l.n).unwrap_or(0)
     }
 
+    /// Pre-build every hashed layer's inverse plan (the lazily-built
+    /// CSR-by-bucket view behind the batch-1 forward kernel and the
+    /// Eq. 12 gradient). Serving engines call this at model build /
+    /// hot-load time so the first single-row request never pays the
+    /// counting-sort construction inline.
+    pub fn warm(&self) {
+        for l in &self.layers {
+            if let Some(plan) = l.plan() {
+                plan.inverse();
+            }
+        }
+    }
+
     /// Inference forward pass (no dropout).
     ///
     /// Takes `&self`: hashed layers read their shared `Arc<HashPlan>`,
@@ -318,22 +331,23 @@ mod tests {
 
     #[test]
     fn concurrent_predict_shares_one_network() {
-        // &self predict + Arc<HashPlan> lets N threads serve one model
+        // &self predict + Arc<HashPlan> lets N callers serve one model
         // with no locks and no parameter clones — results must be
-        // bit-identical to the serial path.
+        // bit-identical to the serial path. Sharded across the shared
+        // PoolExec, the same substrate the serve workers ride.
         let net = toy_net(
             vec![LayerKind::Hashed { k: 500 }, LayerKind::Hashed { k: 60 }],
             &[784, 16, 10],
         );
         let x = Matrix::from_fn(8, 784, |i, j| ((i * 31 + j) % 17) as f32 * 0.05);
         let serial = net.predict(&x);
-        let results: Vec<Matrix> = std::thread::scope(|s| {
-            let handles: Vec<_> = (0..4).map(|_| s.spawn(|| net.predict(&x))).collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        let mut results: Vec<Option<Matrix>> = (0..4).map(|_| None).collect();
+        crate::rt::pool::run_parts(results.iter_mut().collect(), |_t, slot: &mut Option<Matrix>| {
+            *slot = Some(net.predict(&x));
         });
         assert_eq!(results.len(), 4);
         for r in results {
-            assert_eq!(r.data, serial.data);
+            assert_eq!(r.expect("task ran").data, serial.data);
         }
     }
 

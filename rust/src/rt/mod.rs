@@ -1,0 +1,23 @@
+//! `rt` — the shared execution runtime.
+//!
+//! Every CPU-parallel hot path in the system (row-parallel matmuls, the
+//! hashed scratch-row forward, the hashed backward, serving predict
+//! calls) used to spawn and join fresh OS threads via
+//! `std::thread::scope` on **every** layer invocation. At the paper's
+//! layer sizes a spawn/join round trip is a measurable fraction of the
+//! kernel itself, so the tax was paid per layer per call — exactly the
+//! hidden runtime cost the paper's Eq. 8–12 analysis says hashed weight
+//! sharing should not have.
+//!
+//! [`pool::PoolExec`] replaces all of those sites with one
+//! lazily-initialized, globally shared pool of parked worker threads
+//! and a scoped `run(n_tasks, |t| …)` API: tasks are identified by
+//! index, task `t` always computes the same partition of the work
+//! regardless of which worker executes it, and `run` does not return
+//! until every task has finished — which is what preserves the existing
+//! block-partition + ordered-reduction determinism contract
+//! (`nn::TrainOptions`) on top of a dynamic scheduler.
+
+pub mod pool;
+
+pub use pool::PoolExec;

@@ -1,0 +1,427 @@
+//! `PoolExec` — a lazily-initialized, globally shared pool of parked
+//! worker threads with a scoped fork/join API.
+//!
+//! # Why not `std::thread::scope`?
+//!
+//! `thread::scope` spawns and joins real OS threads on every call. For
+//! the kernels in this crate (a few hundred microseconds of work per
+//! layer invocation) the spawn/join round trip is pure overhead paid
+//! per layer per call, on the forward, backward *and* serve paths.
+//! `PoolExec` parks its workers on a condvar once, at first use, and a
+//! [`PoolExec::run`] call costs one queue push plus a wakeup
+//! (`benches/pool_overhead.rs` measures the difference).
+//!
+//! # Execution model
+//!
+//! [`PoolExec::run`]`(n_tasks, f)` executes `f(0) … f(n_tasks - 1)`
+//! exactly once each and returns when all of them have finished. The
+//! closure may borrow from the caller's stack (the pool erases the
+//! lifetime internally and the completion barrier makes that sound —
+//! same contract as `thread::scope`). Scheduling is dynamic: the caller
+//! itself claims task indices alongside up to
+//! `min(workers, n_tasks - 1)` pool workers, so progress never depends
+//! on pool availability and nested `run` calls cannot deadlock — a
+//! nested caller simply executes its own tasks inline.
+//!
+//! # Determinism
+//!
+//! Task *identity* is the index `t`, not the executing thread: a task
+//! computes the same partition of the work no matter which worker picks
+//! it up. All determinism contracts in the crate (the ordered-reduction
+//! mode of [`crate::nn::TrainOptions`], the bit-identical row-parallel
+//! matmuls) are therefore preserved verbatim on the pool: they depend
+//! only on *which* task computes *what*, which is fixed by the caller's
+//! partition, never on scheduling order.
+//!
+//! # Sizing
+//!
+//! The global pool holds `min(available_parallelism, 8) - 1` workers
+//! (the caller is the `+1`; the kernels are memory-bound, so more than
+//! 8 lanes shows diminishing returns — the same cap the old per-site
+//! heuristics used). `HASHEDNETS_POOL_THREADS=<n>` overrides the total
+//! concurrency, which is what [`max_concurrency`] reports and what
+//! `TrainOptions::resolved_threads` / the kernel sizing heuristics in
+//! `nn::layers` consult.
+//!
+//! # Examples
+//!
+//! ```
+//! use hashednets::rt::pool;
+//! use std::sync::atomic::{AtomicU32, Ordering};
+//!
+//! // index-parallel: every task index runs exactly once
+//! let hits = AtomicU32::new(0);
+//! pool::run(16, |_t| {
+//!     hits.fetch_add(1, Ordering::Relaxed);
+//! });
+//! assert_eq!(hits.load(Ordering::Relaxed), 16);
+//!
+//! // part-parallel: task `t` takes ownership of part `t` — the usual
+//! // way to hand each task a disjoint `&mut` chunk of one output
+//! let mut out = vec![0usize; 8];
+//! pool::run_parts(out.chunks_mut(2).collect(), |t, chunk: &mut [usize]| {
+//!     for (i, v) in chunk.iter_mut().enumerate() {
+//!         *v = t * 2 + i;
+//!     }
+//! });
+//! assert_eq!(out, (0..8).collect::<Vec<_>>());
+//! assert!(pool::max_concurrency() >= 1);
+//! ```
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+/// Hard cap on pool concurrency: the kernels are memory-bound, so more
+/// lanes than this shows diminishing returns (the same cap the old
+/// per-call-site heuristics applied).
+pub const MAX_CONCURRENCY: usize = 8;
+
+/// One parallel invocation: a lifetime-erased task closure plus the
+/// claim/completion state shared between the caller and the workers.
+struct Job {
+    /// Lifetime-erased pointer to the caller's `Fn(usize)` closure.
+    ///
+    /// Validity: the closure lives on the stack frame of
+    /// [`PoolExec::run`], which does not return until `done == n_tasks`.
+    /// A task index is only claimed via `next.fetch_add`, and `task` is
+    /// only dereferenced *after* a successful claim (`t < n_tasks`) —
+    /// at which point at least that task is unfinished, so `run` is
+    /// still blocked and the closure is still alive. Once all indices
+    /// are claimed, late poppers observe `next >= n_tasks` and never
+    /// touch the pointer again.
+    task: *const (dyn Fn(usize) + Sync),
+    n_tasks: usize,
+    /// Next unclaimed task index (may grow past `n_tasks`).
+    next: AtomicUsize,
+    /// Completed-task count; `run` blocks until it reaches `n_tasks`.
+    done: Mutex<usize>,
+    done_cv: Condvar,
+    /// First panic payload from any task; `run` resumes it after the
+    /// barrier, so assert/expect messages survive the pool hop just
+    /// like they did under `thread::scope`.
+    panic: Mutex<Option<Box<dyn std::any::Any + Send + 'static>>>,
+}
+
+// SAFETY: `task` is only dereferenced under the validity rule documented
+// on the field; all other state is atomics/locks.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    /// Claim and execute task indices until none remain. Both pool
+    /// workers and the calling thread drain a job through this.
+    fn help(&self) {
+        loop {
+            let t = self.next.fetch_add(1, Ordering::Relaxed);
+            if t >= self.n_tasks {
+                return;
+            }
+            // SAFETY: task `t` is claimed but not completed, so the
+            // completion barrier in `run` has not been passed and the
+            // closure behind `task` is alive (see field docs).
+            let task = unsafe { &*self.task };
+            if let Err(payload) = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| task(t)))
+            {
+                let mut slot = self.panic.lock().unwrap();
+                if slot.is_none() {
+                    *slot = Some(payload);
+                }
+            }
+            let mut done = self.done.lock().unwrap();
+            *done += 1;
+            if *done == self.n_tasks {
+                self.done_cv.notify_all();
+            }
+        }
+    }
+}
+
+struct Shared {
+    /// Help tickets: each entry asks one worker to join the referenced
+    /// job. A worker that pops an already-drained job moves on for the
+    /// cost of one atomic read.
+    queue: Mutex<VecDeque<Arc<Job>>>,
+    work_cv: Condvar,
+}
+
+/// A pool of parked worker threads. One global instance
+/// ([`PoolExec::global`]) serves the whole process; constructing
+/// additional pools is only useful in tests.
+pub struct PoolExec {
+    shared: Arc<Shared>,
+    workers: usize,
+}
+
+impl PoolExec {
+    /// Build a pool with `workers` parked threads (callers participate,
+    /// so total concurrency is `workers + 1`).
+    fn new(workers: usize) -> PoolExec {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            work_cv: Condvar::new(),
+        });
+        for i in 0..workers {
+            let sh = Arc::clone(&shared);
+            std::thread::Builder::new()
+                .name(format!("hn-pool-{i}"))
+                .spawn(move || worker_loop(&sh))
+                .expect("spawn pool worker");
+        }
+        PoolExec { shared, workers }
+    }
+
+    /// The process-wide pool, spawned on first use (serving a model
+    /// that never crosses a parallel threshold never starts a thread).
+    pub fn global() -> &'static PoolExec {
+        static POOL: OnceLock<PoolExec> = OnceLock::new();
+        POOL.get_or_init(|| PoolExec::new(default_workers()))
+    }
+
+    /// Maximum useful parallel lanes: pool workers plus the caller.
+    /// This is the number the kernel sizing heuristics partition for.
+    pub fn max_concurrency(&self) -> usize {
+        self.workers + 1
+    }
+
+    /// Execute `f(0) … f(n_tasks - 1)`, each exactly once, and return
+    /// when all have finished. `f` may borrow from the caller's stack.
+    /// Up to `min(workers, n_tasks - 1)` pool workers help; the caller
+    /// always participates, so the call makes progress even on a busy
+    /// (or zero-worker) pool and nested calls run their tasks inline.
+    ///
+    /// If any task panicked, the first panic payload is **resumed** on
+    /// the caller after all tasks have settled (so borrowed data is
+    /// never left aliased by a still-running worker, and assert/expect
+    /// messages survive the pool hop like they did under
+    /// `thread::scope`).
+    pub fn run<F: Fn(usize) + Sync>(&self, n_tasks: usize, f: F) {
+        if n_tasks == 0 {
+            return;
+        }
+        if n_tasks == 1 || self.workers == 0 {
+            for t in 0..n_tasks {
+                f(t);
+            }
+            return;
+        }
+        let fref: &(dyn Fn(usize) + Sync) = &f;
+        // Lifetime erasure: sound because this frame outlives every
+        // dereference (see the `Job::task` field docs).
+        #[allow(clippy::useless_transmute)]
+        let task = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(fref)
+        };
+        let job = Arc::new(Job {
+            task,
+            n_tasks,
+            next: AtomicUsize::new(0),
+            done: Mutex::new(0),
+            done_cv: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        let helpers = self.workers.min(n_tasks - 1);
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for _ in 0..helpers {
+                q.push_back(Arc::clone(&job));
+            }
+        }
+        self.shared.work_cv.notify_all();
+        job.help();
+        let mut done = job.done.lock().unwrap();
+        while *done < n_tasks {
+            done = job.done_cv.wait(done).unwrap();
+        }
+        drop(done);
+        let payload = job.panic.lock().unwrap().take();
+        if let Some(p) = payload {
+            std::panic::resume_unwind(p);
+        }
+    }
+
+    /// Run one task per element of `parts`, handing task `t` ownership
+    /// of `parts[t]` — the idiom for distributing disjoint `&mut`
+    /// chunks of a single output buffer (`chunks_mut(..).collect()`).
+    pub fn run_parts<T: Send, F: Fn(usize, T) + Sync>(&self, parts: Vec<T>, f: F) {
+        match parts.len() {
+            0 => {}
+            1 => {
+                let mut it = parts.into_iter();
+                f(0, it.next().unwrap());
+            }
+            n => {
+                let slots: Vec<Mutex<Option<T>>> =
+                    parts.into_iter().map(|p| Mutex::new(Some(p))).collect();
+                self.run(n, |t| {
+                    let part = slots[t].lock().unwrap().take().expect("part claimed once");
+                    f(t, part);
+                });
+            }
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        job.help();
+    }
+}
+
+/// Worker count for the global pool: total concurrency minus the
+/// caller. `HASHEDNETS_POOL_THREADS` overrides the total.
+fn default_workers() -> usize {
+    let total = std::env::var("HASHEDNETS_POOL_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1)
+                .min(MAX_CONCURRENCY)
+        });
+    total.clamp(1, 64) - 1
+}
+
+/// [`PoolExec::run`] on the global pool.
+pub fn run<F: Fn(usize) + Sync>(n_tasks: usize, f: F) {
+    PoolExec::global().run(n_tasks, f)
+}
+
+/// [`PoolExec::run_parts`] on the global pool.
+pub fn run_parts<T: Send, F: Fn(usize, T) + Sync>(parts: Vec<T>, f: F) {
+    PoolExec::global().run_parts(parts, f)
+}
+
+/// [`PoolExec::max_concurrency`] of the global pool.
+pub fn max_concurrency() -> usize {
+    PoolExec::global().max_concurrency()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_index_runs_exactly_once() {
+        for n_tasks in [0usize, 1, 2, 3, 7, 16, 64, 257] {
+            let counts: Vec<AtomicUsize> = (0..n_tasks).map(|_| AtomicUsize::new(0)).collect();
+            run(n_tasks, |t| {
+                counts[t].fetch_add(1, Ordering::Relaxed);
+            });
+            for (t, c) in counts.iter().enumerate() {
+                assert_eq!(c.load(Ordering::Relaxed), 1, "task {t} of {n_tasks}");
+            }
+        }
+    }
+
+    #[test]
+    fn parts_are_delivered_to_matching_task_index() {
+        let mut out = vec![0usize; 40];
+        let chunk = 7; // uneven tail chunk
+        run_parts(out.chunks_mut(chunk).collect(), |t, part: &mut [usize]| {
+            for (i, v) in part.iter_mut().enumerate() {
+                *v = t * chunk + i;
+            }
+        });
+        assert_eq!(out, (0..40).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn borrows_caller_stack_and_observes_writes() {
+        let input: Vec<f32> = (0..1000).map(|i| i as f32).collect();
+        let mut out = vec![0.0f32; 1000];
+        run_parts(out.chunks_mut(128).collect(), |t, part: &mut [f32]| {
+            for (i, v) in part.iter_mut().enumerate() {
+                *v = input[t * 128 + i] * 2.0;
+            }
+        });
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, (i as f32) * 2.0);
+        }
+    }
+
+    #[test]
+    fn nested_run_completes() {
+        let total = AtomicUsize::new(0);
+        run(4, |_| {
+            run(4, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 16);
+    }
+
+    #[test]
+    fn concurrent_runs_from_many_threads() {
+        // serve workers hammer the pool concurrently; every call must
+        // still complete all of its own tasks
+        let done: Vec<std::thread::JoinHandle<usize>> = (0..6)
+            .map(|_| {
+                std::thread::spawn(|| {
+                    let mut total = 0usize;
+                    for _ in 0..50 {
+                        let c = AtomicUsize::new(0);
+                        run(8, |_| {
+                            c.fetch_add(1, Ordering::Relaxed);
+                        });
+                        total += c.load(Ordering::Relaxed);
+                    }
+                    total
+                })
+            })
+            .collect();
+        for h in done {
+            assert_eq!(h.join().unwrap(), 400);
+        }
+    }
+
+    #[test]
+    fn task_panic_propagates_to_caller_with_payload() {
+        let result = std::panic::catch_unwind(|| {
+            run(8, |t| {
+                if t == 3 {
+                    panic!("boom");
+                }
+            });
+        });
+        let payload = result.expect_err("panic must reach the caller");
+        // the original message survives the pool hop (resume_unwind)
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or_default();
+        assert_eq!(msg, "boom");
+        // pool is still usable afterwards
+        let c = AtomicUsize::new(0);
+        run(4, |_| {
+            c.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(c.load(Ordering::Relaxed), 4);
+    }
+
+    #[test]
+    fn max_concurrency_is_capped_and_positive() {
+        let c = max_concurrency();
+        assert!(c >= 1);
+        assert!(c <= 64);
+    }
+
+    #[test]
+    fn private_pool_with_zero_workers_runs_inline() {
+        let pool = PoolExec::new(0);
+        assert_eq!(pool.max_concurrency(), 1);
+        let c = AtomicUsize::new(0);
+        pool.run(5, |_| {
+            c.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(c.load(Ordering::Relaxed), 5);
+    }
+}

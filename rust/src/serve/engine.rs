@@ -102,6 +102,9 @@ impl NativeEngine {
     pub fn from_bundle(bundle: &ModelBundle) -> Result<NativeEngine> {
         let net = Network::from_bundle(bundle)
             .with_context(|| format!("building native engine for '{}'", bundle.spec.name))?;
+        // pre-build the hashed layers' inverse plans here, at (hot-)load
+        // time, so the first batch-1 request doesn't pay the build inline
+        net.warm();
         Ok(NativeEngine {
             n_in: net.n_in(),
             n_out: net.n_out(),
@@ -112,6 +115,7 @@ impl NativeEngine {
 
     /// Wrap an existing network (tests, embedding).
     pub fn from_network(net: Network, max_batch: usize) -> NativeEngine {
+        net.warm(); // see from_bundle
         NativeEngine {
             n_in: net.n_in(),
             n_out: net.n_out(),

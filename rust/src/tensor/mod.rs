@@ -96,11 +96,11 @@ impl Matrix {
     }
 
     /// [`Matrix::matmul`] split over blocks of output rows on up to
-    /// `threads` scoped threads. Each output row is produced by exactly
-    /// one thread with the same accumulation order as the serial loop,
-    /// so the result is **bit-identical** to `matmul` for every thread
-    /// count — the backward pass relies on this for its determinism
-    /// contract.
+    /// `threads` tasks of the shared [`crate::rt::PoolExec`]. Each
+    /// output row is produced by exactly one task with the same
+    /// accumulation order as the serial loop, so the result is
+    /// **bit-identical** to `matmul` for every thread count — the
+    /// backward pass relies on this for its determinism contract.
     pub fn matmul_par(&self, other: &Matrix, threads: usize) -> Matrix {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (r, k, c) = (self.rows, self.cols, other.cols);
@@ -110,25 +110,24 @@ impl Matrix {
         }
         let mut out = Matrix::zeros(r, c);
         let rows_per = r.div_ceil(threads);
-        std::thread::scope(|s| {
-            for (t, ochunk) in out.data.chunks_mut(rows_per * c).enumerate() {
+        crate::rt::pool::run_parts(
+            out.data.chunks_mut(rows_per * c).collect(),
+            |t, ochunk: &mut [f32]| {
                 let i0 = t * rows_per;
-                s.spawn(move || {
-                    for (ri, orow) in ochunk.chunks_mut(c).enumerate() {
-                        let arow = self.row(i0 + ri);
-                        for (p, &a) in arow.iter().enumerate().take(k) {
-                            if a == 0.0 {
-                                continue;
-                            }
-                            let brow = &other.data[p * c..(p + 1) * c];
-                            for (o, &b) in orow.iter_mut().zip(brow) {
-                                *o += a * b;
-                            }
+                for (ri, orow) in ochunk.chunks_mut(c).enumerate() {
+                    let arow = self.row(i0 + ri);
+                    for (p, &a) in arow.iter().enumerate().take(k) {
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let brow = &other.data[p * c..(p + 1) * c];
+                        for (o, &b) in orow.iter_mut().zip(brow) {
+                            *o += a * b;
                         }
                     }
-                });
-            }
-        });
+                }
+            },
+        );
         out
     }
 
@@ -149,7 +148,7 @@ impl Matrix {
     }
 
     /// [`Matrix::matmul_nt`] over blocks of output rows on up to
-    /// `threads` scoped threads; bit-identical to the serial version for
+    /// `threads` pool tasks; bit-identical to the serial version for
     /// every thread count (each output cell is one `dot_unrolled` call).
     pub fn matmul_nt_par(&self, other: &Matrix, threads: usize) -> Matrix {
         assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
@@ -160,19 +159,80 @@ impl Matrix {
         }
         let mut out = Matrix::zeros(r, c);
         let rows_per = r.div_ceil(threads);
-        std::thread::scope(|s| {
-            for (t, ochunk) in out.data.chunks_mut(rows_per * c).enumerate() {
+        crate::rt::pool::run_parts(
+            out.data.chunks_mut(rows_per * c).collect(),
+            |t, ochunk: &mut [f32]| {
                 let i0 = t * rows_per;
-                s.spawn(move || {
-                    for (ri, orow) in ochunk.chunks_mut(c).enumerate() {
-                        let arow = self.row(i0 + ri);
-                        for (j, ov) in orow.iter_mut().enumerate() {
-                            *ov = dot_unrolled(arow, other.row(j));
-                        }
+                for (ri, orow) in ochunk.chunks_mut(c).enumerate() {
+                    let arow = self.row(i0 + ri);
+                    for (j, ov) in orow.iter_mut().enumerate() {
+                        *ov = dot_unrolled(arow, other.row(j));
                     }
-                });
+                }
+            },
+        );
+        out
+    }
+
+    /// `self (r×m) @ [other | column of ones]ᵀ` where `other` is
+    /// `(c × (m+1))`: the dot-product forward with an **implicit bias
+    /// column** — `out[i][j] = Σ_p self[i,p]·other[j,p] + other[j,m]` —
+    /// so callers never materialize `self.augment_ones()` (a full
+    /// batch-matrix copy per layer call before this existed).
+    pub fn matmul_nt_aug(&self, other: &Matrix) -> Matrix {
+        assert_eq!(self.cols + 1, other.cols, "matmul_nt_aug shape mismatch");
+        let (r, c, m) = (self.rows, other.rows, self.cols);
+        let mut out = Matrix::zeros(r, c);
+        for i in 0..r {
+            let arow = self.row(i);
+            let orow = out.row_mut(i);
+            for (j, ov) in orow.iter_mut().enumerate() {
+                let brow = other.row(j);
+                *ov = brow[m] + dot_unrolled(arow, &brow[..m]);
             }
-        });
+        }
+        out
+    }
+
+    /// `selfᵀ (k×r) @ [other | column of ones] (k×(c+1)) -> (r×(c+1))`:
+    /// the transpose product against `other` with an implicit trailing
+    /// all-ones column. This is exactly `S = δᵀ·[a|1]` of the hashed
+    /// backward (paper Eq. 12's per-cell factor `Σ_b a_bj δ_bi`,
+    /// including the bias column `j = m`) without materializing
+    /// `other.augment_ones()`. Row-parallel over output rows on up to
+    /// `threads` pool tasks; every output element sums over `p` in
+    /// ascending order in exactly one task, so the result is
+    /// **bit-identical** to serial at any thread count.
+    pub fn matmul_tn_aug(&self, other: &Matrix, threads: usize) -> Matrix {
+        assert_eq!(self.rows, other.rows, "matmul_tn_aug shape mismatch");
+        let (k, r, c1) = (self.rows, self.cols, other.cols + 1);
+        let mut out = Matrix::zeros(r, c1);
+        if r == 0 {
+            return out;
+        }
+        let threads = threads.clamp(1, r);
+        let rows_per = r.div_ceil(threads);
+        crate::rt::pool::run_parts(
+            out.data.chunks_mut(rows_per * c1).collect(),
+            |t, ochunk: &mut [f32]| {
+                let i0 = t * rows_per;
+                for p in 0..k {
+                    let arow = self.row(p);
+                    let brow = other.row(p);
+                    for (ri, orow) in ochunk.chunks_mut(c1).enumerate() {
+                        let a = arow[i0 + ri];
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let (cols, bias) = orow.split_at_mut(c1 - 1);
+                        for (o, &b) in cols.iter_mut().zip(brow) {
+                            *o += a * b;
+                        }
+                        bias[0] += a;
+                    }
+                }
+            },
+        );
         out
     }
 
@@ -198,12 +258,12 @@ impl Matrix {
     }
 
     /// [`Matrix::matmul_tn`] over blocks of output rows (columns of
-    /// `self`) on up to `threads` scoped threads. Every output cell is
+    /// `self`) on up to `threads` pool tasks. Every output cell is
     /// `Σ_p self[p,i]·other[p,j]` summed over `p` in ascending order in
-    /// exactly one thread, so the result is **bit-identical** to the
+    /// exactly one task, so the result is **bit-identical** to the
     /// serial version for any thread count — this is what makes the
     /// dense backward (`dW = δᵀ·a`) deterministic without an ordered
-    /// reduction mode. Each thread re-streams `self` but touches only
+    /// reduction mode. Each task re-streams `self` but touches only
     /// its own output rows; `self` here is a `(B × n)` delta matrix, so
     /// the duplicated traffic is small next to the `(n × m)` output.
     pub fn matmul_tn_par(&self, other: &Matrix, threads: usize) -> Matrix {
@@ -215,26 +275,25 @@ impl Matrix {
         }
         let mut out = Matrix::zeros(r, c);
         let rows_per = r.div_ceil(threads);
-        std::thread::scope(|s| {
-            for (t, ochunk) in out.data.chunks_mut(rows_per * c).enumerate() {
+        crate::rt::pool::run_parts(
+            out.data.chunks_mut(rows_per * c).collect(),
+            |t, ochunk: &mut [f32]| {
                 let i0 = t * rows_per;
-                s.spawn(move || {
-                    for p in 0..k {
-                        let arow = self.row(p);
-                        let brow = other.row(p);
-                        for (ri, orow) in ochunk.chunks_mut(c).enumerate() {
-                            let a = arow[i0 + ri];
-                            if a == 0.0 {
-                                continue;
-                            }
-                            for (o, &b) in orow.iter_mut().zip(brow) {
-                                *o += a * b;
-                            }
+                for p in 0..k {
+                    let arow = self.row(p);
+                    let brow = other.row(p);
+                    for (ri, orow) in ochunk.chunks_mut(c).enumerate() {
+                        let a = arow[i0 + ri];
+                        if a == 0.0 {
+                            continue;
+                        }
+                        for (o, &b) in orow.iter_mut().zip(brow) {
+                            *o += a * b;
                         }
                     }
-                });
-            }
-        });
+                }
+            },
+        );
         out
     }
 
@@ -377,6 +436,46 @@ mod tests {
                 "matmul_tn t{threads}"
             );
         }
+    }
+
+    #[test]
+    fn aug_variants_match_materialized_augmentation() {
+        let mut rng = crate::util::rng::Pcg32::new(21, 21);
+        let a = Matrix::from_fn(9, 6, |_, _| rng.normal()); // batch × m
+        let v = Matrix::from_fn(5, 7, |_, _| rng.normal()); // n × (m+1)
+        let aug = a.augment_ones();
+        // forward: a·[V|b]ᵀ with implicit bias column
+        let want_nt = aug.matmul_nt(&v);
+        let got_nt = a.matmul_nt_aug(&v);
+        for (x, y) in got_nt.data.iter().zip(&want_nt.data) {
+            assert!((x - y).abs() < 1e-5 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+        // backward: δᵀ·[a|1], bit-identical across thread counts
+        let delta = Matrix::from_fn(9, 5, |_, _| rng.normal());
+        let want_tn = delta.matmul_tn(&aug);
+        let t1 = delta.matmul_tn_aug(&a, 1);
+        for (x, y) in t1.data.iter().zip(&want_tn.data) {
+            assert!((x - y).abs() < 1e-5 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+        for threads in [2usize, 3, 8] {
+            assert_eq!(
+                t1.data,
+                delta.matmul_tn_aug(&a, threads).data,
+                "matmul_tn_aug t{threads}"
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_tn_aug_handles_zero_width_and_zero_rows() {
+        let delta = Matrix::zeros(4, 0); // no output rows
+        let a = Matrix::from_fn(4, 3, |i, j| (i + j) as f32);
+        let out = delta.matmul_tn_aug(&a, 4);
+        assert_eq!((out.rows, out.cols), (0, 4));
+        let empty_batch = Matrix::zeros(0, 5);
+        let out2 = empty_batch.matmul_tn_aug(&Matrix::zeros(0, 3), 4);
+        assert_eq!((out2.rows, out2.cols), (5, 4));
+        assert!(out2.data.iter().all(|&v| v == 0.0));
     }
 
     #[test]

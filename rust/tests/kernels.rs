@@ -1,12 +1,14 @@
 //! Property-style coverage of the hashed-layer kernel variants: every
-//! kernel (legacy gather, scratch-row, bucket-major, and the dispatch
-//! heuristic in `forward`) must match the materialized virtual-matrix
-//! reference over a sweep of shapes, including the degenerate corners
-//! `k = 1`, `k ≥ n·(m+1)` and batch 1; plus a finite-difference check
-//! on the batch-amortized hashed backward. These tests need no
-//! artifacts — they run on a fresh checkout.
+//! kernel (legacy gather, scratch-row, bucket-major, the inverse-plan
+//! kernel, and the dispatch heuristic in `forward`) must match the
+//! materialized virtual-matrix reference over a sweep of shapes,
+//! including the degenerate corners `k = 1`, `k ≥ n·(m+1)` and batch 1;
+//! the inverse plan itself must be an exact permutation of the forward
+//! plan; plus a finite-difference check on the batch-amortized hashed
+//! backward. These tests need no artifacts — they run on a fresh
+//! checkout.
 
-use hashednets::hash::DEFAULT_SEED_BASE;
+use hashednets::hash::{bucket_sign, layer_seeds, HashPlan, DEFAULT_SEED_BASE};
 use hashednets::nn::{Layer, LayerKind, TrainOptions};
 use hashednets::tensor::Matrix;
 use hashednets::util::rng::Pcg32;
@@ -56,8 +58,63 @@ fn every_kernel_matches_reference_across_shapes() {
         assert_close("gather", shape, &layer.forward_hashed_gather(&a), &want);
         assert_close("scratch", shape, &layer.forward_hashed_scratch(&a), &want);
         assert_close("bucket", shape, &layer.forward_hashed_bucket(&a), &want);
+        assert_close("inverse", shape, &layer.forward_hashed_inverse(&a), &want);
         assert_close("dispatch", shape, &layer.forward(&a), &want);
     }
+}
+
+/// The inverse plan is an exact permutation of the forward plan: every
+/// virtual cell `(i, j)` appears in `cells` exactly once, under the
+/// bucket the forward plan assigns it, carrying the same ξ sign as
+/// `bucket_sign` — and the bucket ranges tile `cells` exactly.
+#[test]
+fn inverse_plan_is_an_exact_permutation_with_agreeing_signs() {
+    for (n, m1, k, layer_index) in
+        [(40usize, 31usize, 64usize, 0u32), (7, 5, 1, 1), (16, 9, 500, 2), (1, 1, 3, 3)]
+    {
+        let plan = HashPlan::build(n, m1, k, layer_index, DEFAULT_SEED_BASE);
+        let inv = plan.inverse();
+        let (s_h, s_xi) = layer_seeds(layer_index, DEFAULT_SEED_BASE);
+        assert_eq!(inv.n_buckets(), k);
+        assert_eq!(inv.cells.len(), n * m1);
+        assert_eq!(inv.bucket_offsets.len(), k + 1);
+        let mut seen = vec![false; n * m1];
+        for b in 0..k {
+            for &cell in inv.cells_of(b) {
+                let idx = (cell & HashPlan::BUCKET_MASK) as usize;
+                assert!(idx < n * m1, "cell index {idx} out of range");
+                assert!(!seen[idx], "cell {idx} appears twice");
+                seen[idx] = true;
+                let (i, j) = (idx / m1, idx % m1);
+                // bucket and sign agree with the ground-truth hash pair
+                let (want_b, want_sign) =
+                    bucket_sign(i as u32, j as u32, m1 as u32, k as u32, s_h, s_xi);
+                assert_eq!(b, want_b as usize, "bucket at ({i},{j})");
+                let applied = HashPlan::apply_sign(cell, 2.0);
+                assert_eq!(applied, 2.0 * want_sign, "sign at ({i},{j})");
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "every forward cell appears exactly once");
+    }
+}
+
+/// Decompressing through the inverse view reproduces Eq. 7: scattering
+/// `ξ·w_k` over bucket `k`'s cells rebuilds the same virtual matrix as
+/// the forward plan's row decompression.
+#[test]
+fn inverse_plan_rebuilds_the_virtual_matrix() {
+    let layer = hashed_layer(10, 8, 13, 5);
+    let v = layer.virtual_matrix(); // forward-plan decompression
+    let plan = layer.plan().expect("hashed layer has a plan");
+    let inv = plan.inverse();
+    let mut rebuilt = Matrix::zeros(v.rows, v.cols);
+    for (k, &w) in layer.params.iter().enumerate() {
+        for &cell in inv.cells_of(k) {
+            let idx = (cell & HashPlan::BUCKET_MASK) as usize;
+            rebuilt.data[idx] = HashPlan::apply_sign(cell, w);
+        }
+    }
+    assert_eq!(rebuilt.data, v.data, "bit-identical virtual matrices");
 }
 
 #[test]

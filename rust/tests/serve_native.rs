@@ -105,44 +105,36 @@ fn concurrent_clients_multi_model_match_direct_predict() {
     let server = std::thread::spawn(move || srv.run());
 
     let names = ["hash_a", "dense_b"];
-    std::thread::scope(|s| {
-        let handles: Vec<_> = (0..4)
-            .map(|c| {
-                let addr = addr.clone();
-                let fx = &fx;
-                s.spawn(move || {
-                    let mut client = Client::connect(&addr).expect("connect");
-                    for r in 0..10 {
-                        let model = names[(c + r) % 2];
-                        let pixels = input_row(c, r);
-                        let x = Matrix::from_vec(1, N_IN, pixels.clone());
-                        let want_logits = fx.net(model).predict(&x);
-                        // reference probs through the production softmax
-                        let want_probs = want_logits.softmax_rows().row(0).to_vec();
-                        let (class, probs, _lat) = client
-                            .classify_model(Some(model), &pixels)
-                            .expect("classify");
-                        assert_eq!(probs.len(), N_OUT);
-                        for (a, b) in probs.iter().zip(&want_probs) {
-                            assert!(
-                                (a - b).abs() < 1e-3,
-                                "{model} c{c} r{r}: probs {probs:?} vs {want_probs:?}"
-                            );
-                        }
-                        // only pin the class when the reference isn't a
-                        // near-tie (kernel variants may round differently)
-                        let mut sorted = want_probs.clone();
-                        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
-                        if sorted[0] - sorted[1] > 1e-3 {
-                            let want_class = want_logits.argmax_rows()[0];
-                            assert_eq!(class, want_class, "{model} c{c} r{r}");
-                        }
-                    }
-                })
-            })
-            .collect();
-        for h in handles {
-            h.join().unwrap();
+    // concurrent clients ride the shared PoolExec — the same substrate
+    // the kernels use (on a 1-lane machine this degrades to serial
+    // clients, which the stats assertions below tolerate)
+    hashednets::rt::pool::run(4, |c| {
+        let mut client = Client::connect(&addr).expect("connect");
+        for r in 0..10 {
+            let model = names[(c + r) % 2];
+            let pixels = input_row(c, r);
+            let x = Matrix::from_vec(1, N_IN, pixels.clone());
+            let want_logits = fx.net(model).predict(&x);
+            // reference probs through the production softmax
+            let want_probs = want_logits.softmax_rows().row(0).to_vec();
+            let (class, probs, _lat) = client
+                .classify_model(Some(model), &pixels)
+                .expect("classify");
+            assert_eq!(probs.len(), N_OUT);
+            for (a, b) in probs.iter().zip(&want_probs) {
+                assert!(
+                    (a - b).abs() < 1e-3,
+                    "{model} c{c} r{r}: probs {probs:?} vs {want_probs:?}"
+                );
+            }
+            // only pin the class when the reference isn't a
+            // near-tie (kernel variants may round differently)
+            let mut sorted = want_probs.clone();
+            sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+            if sorted[0] - sorted[1] > 1e-3 {
+                let want_class = want_logits.argmax_rows()[0];
+                assert_eq!(class, want_class, "{model} c{c} r{r}");
+            }
         }
     });
 
@@ -224,7 +216,10 @@ fn unknown_model_is_explicit_json_error() {
 /// disturbing the rest.
 #[test]
 fn hot_load_serves_new_bundle_while_old_connections_continue() {
-    let fx = Fixture::new("hotload");
+    // the checkers must run *while* the admin issues load/reload, so
+    // they live on dedicated threads (Arc'd fixture), not pool tasks —
+    // a pool `run` would block this thread until they finished
+    let fx = Arc::new(Fixture::new("hotload"));
     let srv = Server::bind(fx.options(2)).expect("bind");
     let addr = srv.local_addr().to_string();
     let server = std::thread::spawn(move || srv.run());
@@ -245,37 +240,37 @@ fn hot_load_serves_new_bundle_while_old_connections_continue() {
     let path_c = fx.dir.join("hash_c.hnb");
     bundle_c.save(&path_c).expect("save bundle_c");
 
-    let stop = AtomicBool::new(false);
-    std::thread::scope(|s| {
-        // Existing connections: hammer the pre-loaded models throughout
-        // the {"cmd":"load"} and verify every reply against the local
-        // reference network — any interruption fails the expect.
-        let checkers: Vec<_> = (0..2)
-            .map(|c| {
-                let addr = addr.clone();
-                let fx = &fx;
-                let stop = &stop;
-                s.spawn(move || {
-                    let mut client = Client::connect(&addr).expect("connect");
-                    let mut served = 0usize;
-                    while !stop.load(Ordering::Relaxed) {
-                        let model = if c == 0 { "hash_a" } else { "dense_b" };
-                        let pixels = input_row(c, served);
-                        let x = Matrix::from_vec(1, N_IN, pixels.clone());
-                        let want = fx.net(model).predict(&x).softmax_rows();
-                        let (_cl, probs, _) = client
-                            .classify_model(Some(model), &pixels)
-                            .expect("existing connection must stay uninterrupted");
-                        for (a, b) in probs.iter().zip(want.row(0)) {
-                            assert!((a - b).abs() < 1e-3, "{model} drifted during hot-load");
-                        }
-                        served += 1;
+    let stop = Arc::new(AtomicBool::new(false));
+    // Existing connections: hammer the pre-loaded models throughout
+    // the {"cmd":"load"} and verify every reply against the local
+    // reference network — any interruption fails the expect.
+    let checkers: Vec<std::thread::JoinHandle<usize>> = (0..2)
+        .map(|c| {
+            let addr = addr.clone();
+            let fx = Arc::clone(&fx);
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).expect("connect");
+                let mut served = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    let model = if c == 0 { "hash_a" } else { "dense_b" };
+                    let pixels = input_row(c, served);
+                    let x = Matrix::from_vec(1, N_IN, pixels.clone());
+                    let want = fx.net(model).predict(&x).softmax_rows();
+                    let (_cl, probs, _) = client
+                        .classify_model(Some(model), &pixels)
+                        .expect("existing connection must stay uninterrupted");
+                    for (a, b) in probs.iter().zip(want.row(0)) {
+                        assert!((a - b).abs() < 1e-3, "{model} drifted during hot-load");
                     }
-                    served
-                })
+                    served += 1;
+                }
+                served
             })
-            .collect();
+        })
+        .collect();
 
+    {
         let mut admin = Client::connect(&addr).expect("admin connect");
         // give the checkers time to get traffic flowing first
         std::thread::sleep(std::time::Duration::from_millis(100));
@@ -328,7 +323,7 @@ fn hot_load_serves_new_bundle_while_old_connections_continue() {
         admin.classify_model(Some("dense_b"), &input_row(2, 4)).expect("dense_b after unload");
 
         admin.shutdown().expect("shutdown");
-    });
+    }
     server.join().unwrap().expect("server run");
 }
 

@@ -129,6 +129,31 @@ fn dense_masked_lowrank_backward_thread_count_invariant() {
     }
 }
 
+/// The satellite contract for PoolExec: ordered-mode bit-identity must
+/// survive the move from per-call `thread::scope` workers to the shared
+/// pool. The pool is warmed first and the backward is run with exactly
+/// the pool's lane count, so the blocks genuinely execute on parked
+/// pool workers (not the caller-only inline path).
+#[test]
+fn ordered_mode_bit_identity_holds_on_pool_exec() {
+    let lanes = hashednets::rt::pool::max_concurrency().max(2);
+    hashednets::rt::pool::run(lanes * 2, |_| {}); // warm: workers spawned and parked
+    let layer = hashed_layer(24, 96, 300, 42);
+    let mut rng = Pcg32::new(31, 7);
+    let a = Matrix::from_fn(50, 24, |_, _| rng.normal());
+    let delta = Matrix::from_fn(50, 96, |_, _| rng.normal());
+    let ordered = |t: usize| TrainOptions { threads: t, block_rows: 8, deterministic: true };
+    let (g1, da1) = grads(&layer, &a, &delta, &ordered(1));
+    let (gp, dap) = grads(&layer, &a, &delta, &ordered(lanes));
+    assert_bits("pool ordered grad", &gp, &g1);
+    assert_bits("pool ordered da", &dap.data, &da1.data);
+    // the inverse-plan Eq. 12 pass makes ∂w thread-count-invariant even
+    // in fast mode — a determinism upgrade the pool must preserve too
+    let (gf1, _) = grads(&layer, &a, &delta, &TrainOptions::with_threads(1));
+    let (gfp, _) = grads(&layer, &a, &delta, &TrainOptions::with_threads(lanes));
+    assert_bits("pool fast-mode grad", &gfp, &gf1);
+}
+
 #[test]
 fn empty_batch_backward_is_a_noop() {
     let layer = hashed_layer(10, 8, 12, 4);

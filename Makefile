@@ -20,6 +20,11 @@
 #   make smoke      tiny end-to-end train→bundle→serve→hot-load loop on
 #                   the native stack (no artifacts needed); also runs
 #                   as the last step of `make check`.
+#   make soak       the chaos soak: concurrent clients × seeded fault
+#                   injection (errors/latency/panics) × hot-(re)load
+#                   churn, asserting every request gets exactly one
+#                   explicit reply and no worker dies. #[ignore]d so
+#                   tier-1 `make check` stays fast.
 #   make artifacts  lower the core config set to HLO artifacts (needs
 #                   the Python/JAX toolchain).
 #   make pytest     run the Python build-time test suite (also emits the
@@ -28,7 +33,7 @@
 RUST_DIR := rust
 PY_DIR   := python
 
-.PHONY: check bench serve-bench train-bench pool-bench artifacts pytest smoke clean-bench
+.PHONY: check bench serve-bench train-bench pool-bench artifacts pytest smoke soak clean-bench
 
 # docs are load-bearing: rustdoc runs with -D warnings (broken intra-doc
 # links fail the build) and the doc-examples on ModelSpec / ModelBundle /
@@ -45,6 +50,11 @@ check:
 # Needs no artifacts, no Python — deterministic on a fresh checkout.
 smoke:
 	cd $(RUST_DIR) && cargo run --release --quiet -- smoke
+
+# the chaos soak test (see rust/tests/serve_chaos.rs) — long-running,
+# run on demand and as a non-blocking CI job
+soak:
+	cd $(RUST_DIR) && cargo test --release --test serve_chaos -- --ignored --nocapture
 
 # bench binaries anchor artifacts/ and BENCH_*.json at the repo root
 # via CARGO_MANIFEST_DIR, so they are CWD-independent

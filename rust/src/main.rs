@@ -60,7 +60,7 @@ const KNOWN_HPO: &[&str] = &[
 ];
 const KNOWN_SERVE: &[&str] = &[
     "config", "bundle", "checkpoint", "artifacts", "addr", "backend", "workers",
-    "max-wait-us", "max-requests", "strict",
+    "max-wait-us", "max-requests", "max-pending", "timeout-ms", "strict",
 ];
 const KNOWN_COMPRESS: &[&str] =
     &["from", "to", "checkpoint", "artifacts", "save", "bundle", "budgets", "name", "strict"];
@@ -435,6 +435,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         workers: args.get_usize("workers", 2),
         max_wait: std::time::Duration::from_micros(args.get_u64("max-wait-us", 2000)),
         max_requests: args.get_u64("max-requests", 0),
+        max_pending: args.get_usize("max-pending", 256),
+        default_timeout: std::time::Duration::from_millis(args.get_u64("timeout-ms", 10_000).max(1)),
     })
 }
 

@@ -217,9 +217,41 @@ impl ModelBundle {
         Ok(bundle)
     }
 
-    /// Write the bundle to one file.
+    /// Write the bundle to one file, atomically: the bytes go to a
+    /// sibling temp file, are fsynced, and the temp is renamed into
+    /// place. A crash mid-save — or a concurrent `{"cmd":"load"}` /
+    /// `{"cmd":"reload"}` reading while a retrain overwrites — can
+    /// therefore only ever observe the old complete bundle or the new
+    /// complete bundle, never a torn prefix. (The checksum in
+    /// [`ModelBundle::from_bytes`] would catch a tear after the fact;
+    /// this makes the window not exist.)
     pub fn save(&self, path: &Path) -> Result<(), ModelError> {
-        std::fs::write(path, self.to_bytes())?;
+        use std::io::Write as _;
+        let file_name = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .ok_or_else(|| {
+                ModelError::Io(std::io::Error::new(
+                    std::io::ErrorKind::InvalidInput,
+                    format!("bundle path has no file name: {}", path.display()),
+                ))
+            })?;
+        // Same directory as the target so the rename cannot cross a
+        // filesystem boundary (cross-device rename is not atomic).
+        let tmp = path.with_file_name(format!(".{file_name}.tmp.{}", std::process::id()));
+        let write_and_sync = (|| {
+            let mut f = std::fs::File::create(&tmp)?;
+            f.write_all(&self.to_bytes())?;
+            // data must be durable *before* the rename publishes it,
+            // or a crash could leave a complete-looking name pointing
+            // at unwritten blocks
+            f.sync_all()?;
+            std::fs::rename(&tmp, path)
+        })();
+        if let Err(e) = write_and_sync {
+            let _ = std::fs::remove_file(&tmp);
+            return Err(ModelError::Io(e));
+        }
         Ok(())
     }
 

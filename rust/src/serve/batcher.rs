@@ -1,5 +1,5 @@
 //! Dynamic batcher: groups concurrent inference requests into one
-//! batched engine call.
+//! batched engine call — and enforces the serving resilience contract.
 //!
 //! The queue is a `Mutex<Vec<…>>` paired with a `Condvar` signaled by
 //! [`BatcherHandle::submit`]: a batch-forming thread sleeps until a
@@ -11,34 +11,119 @@
 //! be drained by **several worker threads at once** (the native engine
 //! path runs N workers × one shared model): the queue mutex serializes
 //! batch formation, and each worker runs its batch independently.
+//!
+//! ## The explicit-reply invariant
+//!
+//! Every request that enters [`BatcherHandle::submit`] receives
+//! **exactly one** explicit [`Response`], whatever happens to it:
+//!
+//! * **admission control** — the queue is bounded (`max_pending`); a
+//!   submit against a full queue is rejected in O(1) with
+//!   [`ServeError::Overloaded`] (carrying a `retry_after_ms` hint)
+//!   instead of queueing to infinity;
+//! * **deadlines** — each [`Request`] carries an absolute deadline;
+//!   [`DynamicBatcher::next_batch`] and [`DynamicBatcher::dispatch`]
+//!   expire dead requests with [`ServeError::DeadlineExceeded`] before
+//!   the model runs, so a client that already gave up never burns an
+//!   inference slot;
+//! * **fault containment** — [`DynamicBatcher::dispatch`] runs the
+//!   executor under `catch_unwind`: a panicking engine fails its batch
+//!   with an explicit [`ServeError::Engine`] reply and the calling
+//!   worker thread survives;
+//! * **close-out** — a closed queue ([`DynamicBatcher::close`], the
+//!   unload/shutdown path) rejects later submits immediately, and
+//!   [`DynamicBatcher::fail_pending`] answers whatever was queued.
 
 use crate::tensor::Matrix;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-/// One inference request: input row + reply channel.
+/// Queue bound applied by [`DynamicBatcher::new`]; use
+/// [`DynamicBatcher::bounded`] to pick one explicitly.
+pub const DEFAULT_MAX_PENDING: usize = 1024;
+
+/// One inference request: input row + reply channel + the absolute
+/// point in time after which the client stops waiting.
 pub struct Request {
     pub pixels: Vec<f32>,
     pub reply: mpsc::Sender<Response>,
+    /// Requests whose deadline has passed are expired with an explicit
+    /// [`ServeError::DeadlineExceeded`] at batch-formation/dispatch
+    /// time instead of running the model.
+    pub deadline: Instant,
+}
+
+/// Why a request could not be served. Each variant maps to a stable
+/// wire `code` (see [`ServeError::code`]) so clients can tell an
+/// overloaded server (retry with backoff) from a dead model (don't).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// Admission control: the pending queue is full. Retry after the
+    /// hinted delay.
+    Overloaded { retry_after_ms: u64 },
+    /// The request's deadline passed before the model ran.
+    DeadlineExceeded,
+    /// The model (or the whole server) is gone; the message says which.
+    Unloaded(String),
+    /// The executor failed or panicked; the message carries the cause.
+    Engine(String),
+    /// The input did not match the model (wrong pixel count).
+    BadInput(String),
+    /// The server-side wait for a reply expired (backstop distinct
+    /// from `Overloaded`/`DeadlineExceeded`; produced by the server's
+    /// receive path, never by the batcher itself).
+    Timeout,
+}
+
+impl ServeError {
+    /// Stable machine-readable discriminant, reported as `"code"` in
+    /// error replies on the wire.
+    pub fn code(&self) -> &'static str {
+        match self {
+            ServeError::Overloaded { .. } => "overloaded",
+            ServeError::DeadlineExceeded => "deadline",
+            ServeError::Unloaded(_) => "unloaded",
+            ServeError::Engine(_) => "engine",
+            ServeError::BadInput(_) => "bad_input",
+            ServeError::Timeout => "timeout",
+        }
+    }
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded { retry_after_ms } => {
+                write!(f, "overloaded: queue full, retry in {retry_after_ms} ms")
+            }
+            ServeError::DeadlineExceeded => write!(f, "deadline exceeded before inference ran"),
+            ServeError::Unloaded(msg) | ServeError::Engine(msg) | ServeError::BadInput(msg) => {
+                write!(f, "{msg}")
+            }
+            ServeError::Timeout => write!(f, "timeout: no reply within the request deadline"),
+        }
+    }
 }
 
 /// Classification reply. `error` is set (and the other fields are
-/// meaningless) when the request could not be served — executor
-/// failure or wrong input length — so clients fail fast instead of
-/// waiting out a receive timeout on a dropped sender.
+/// meaningless) when the request could not be served — see
+/// [`ServeError`] for the failure taxonomy — so clients fail fast with
+/// a typed cause instead of waiting out a receive timeout on a dropped
+/// sender.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub class: usize,
     pub probs: Vec<f32>,
     /// Time spent queued + in the model, microseconds.
     pub latency_us: u64,
-    pub error: Option<String>,
+    pub error: Option<ServeError>,
 }
 
 impl Response {
-    fn failed(error: String, latency_us: u64) -> Response {
+    fn failed(error: ServeError, latency_us: u64) -> Response {
         Response { class: 0, probs: Vec::new(), latency_us, error: Some(error) }
     }
 }
@@ -49,6 +134,12 @@ pub struct BatchStats {
     pub requests: u64,
     pub batches: u64,
     pub batch_fill_sum: u64,
+    /// Submits rejected by admission control (queue full).
+    pub rejected: u64,
+    /// Requests expired past their deadline before the model ran.
+    pub expired: u64,
+    /// Engine panics contained by [`DynamicBatcher::dispatch`].
+    pub panics: u64,
 }
 
 impl BatchStats {
@@ -66,9 +157,19 @@ impl BatchStats {
 struct BatchQueue {
     queue: Mutex<Vec<(Request, Instant)>>,
     arrived: Condvar,
+    /// Admission bound: `submit` rejects (O(1), explicit reply) once
+    /// this many requests are pending.
+    max_pending: usize,
+    /// Backoff hint attached to `Overloaded` rejections — how long a
+    /// full queue takes to turn over at least once, estimated from the
+    /// batch geometry at construction time.
+    retry_after_ms: u64,
     requests: AtomicU64,
     batches: AtomicU64,
     batch_fill_sum: AtomicU64,
+    rejected: AtomicU64,
+    expired: AtomicU64,
+    panics: AtomicU64,
     /// Set by [`DynamicBatcher::close`] once no worker will drain this
     /// queue again; [`BatcherHandle::submit`] then fails fast instead
     /// of stranding the request until its receive timeout.
@@ -95,13 +196,31 @@ pub struct DynamicBatcher {
 
 impl DynamicBatcher {
     pub fn new(max_batch: usize, max_wait: Duration) -> DynamicBatcher {
+        DynamicBatcher::bounded(max_batch, max_wait, DEFAULT_MAX_PENDING)
+    }
+
+    /// A batcher with an explicit admission bound: at most
+    /// `max_pending` requests queue; further submits are rejected
+    /// immediately with [`ServeError::Overloaded`].
+    pub fn bounded(max_batch: usize, max_wait: Duration, max_pending: usize) -> DynamicBatcher {
+        let max_pending = max_pending.max(1);
+        // How long a full queue needs to drain one turn: one flush
+        // window per batch it holds. A hint, not a promise — clamped
+        // so clients never back off absurdly long.
+        let turns = (max_pending / max_batch.max(1)) as u64 + 1;
+        let retry_after_ms = (turns * (max_wait.as_millis() as u64).max(1)).clamp(1, 1000);
         DynamicBatcher {
             shared: Arc::new(BatchQueue {
                 queue: Mutex::new(Vec::new()),
                 arrived: Condvar::new(),
+                max_pending,
+                retry_after_ms,
                 requests: AtomicU64::new(0),
                 batches: AtomicU64::new(0),
                 batch_fill_sum: AtomicU64::new(0),
+                rejected: AtomicU64::new(0),
+                expired: AtomicU64::new(0),
+                panics: AtomicU64::new(0),
                 closed: AtomicBool::new(false),
             }),
             max_batch,
@@ -127,6 +246,37 @@ impl DynamicBatcher {
             requests: self.shared.requests.load(Ordering::Relaxed),
             batches: self.shared.batches.load(Ordering::Relaxed),
             batch_fill_sum: self.shared.batch_fill_sum.load(Ordering::Relaxed),
+            rejected: self.shared.rejected.load(Ordering::Relaxed),
+            expired: self.shared.expired.load(Ordering::Relaxed),
+            panics: self.shared.panics.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Current queue depth (for health reporting).
+    pub fn pending(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    /// The admission bound this batcher enforces.
+    pub fn max_pending(&self) -> usize {
+        self.shared.max_pending
+    }
+
+    /// Answer expired requests under the queue lock and drop them from
+    /// the queue. Runs at batch-formation time so a dead request never
+    /// reaches the engine.
+    fn expire_dead(&self, q: &mut Vec<(Request, Instant)>, now: Instant) {
+        if !q.iter().any(|(r, _)| r.deadline <= now) {
+            return;
+        }
+        let (dead, live): (Vec<_>, Vec<_>) = q.drain(..).partition(|(r, _)| r.deadline <= now);
+        *q = live;
+        self.shared.expired.fetch_add(dead.len() as u64, Ordering::Relaxed);
+        for (req, t_in) in dead {
+            let _ = req.reply.send(Response::failed(
+                ServeError::DeadlineExceeded,
+                t_in.elapsed().as_micros() as u64,
+            ));
         }
     }
 
@@ -135,11 +285,14 @@ impl DynamicBatcher {
     /// after `idle_poll` with no batch formed). Blocks on the condvar
     /// between arrivals — no busy-waiting. Safe to call from several
     /// worker threads; each pending request lands in exactly one batch.
+    /// Requests past their deadline are expired (explicit
+    /// [`ServeError::DeadlineExceeded`] reply) instead of batched.
     pub fn next_batch(&self, idle_poll: Duration) -> Option<Vec<(Request, Instant)>> {
         let deadline = Instant::now() + idle_poll;
         let mut q = self.shared.queue.lock().unwrap();
         loop {
             let now = Instant::now();
+            self.expire_dead(&mut q, now);
             let oldest = q.first().map(|(_, t)| *t);
             let flush = oldest
                 .map(|t| now.duration_since(t) >= self.max_wait)
@@ -176,10 +329,25 @@ impl DynamicBatcher {
         q.drain(..).collect()
     }
 
+    /// Fail every pending request with `err` — the unload/shutdown
+    /// tail: queued clients get the typed cause (e.g.
+    /// [`ServeError::Unloaded`]) immediately. Returns how many were
+    /// answered.
+    pub fn fail_pending(&self, err: ServeError) -> usize {
+        let pending = self.drain_pending();
+        let n = pending.len();
+        for (req, t_in) in pending {
+            let _ = req
+                .reply
+                .send(Response::failed(err.clone(), t_in.elapsed().as_micros() as u64));
+        }
+        n
+    }
+
     /// Mark the queue closed: no worker will drain it again. Every
     /// later [`BatcherHandle::submit`] fails fast with an explicit
     /// error reply. Call after stopping the workers and before the
-    /// final [`DynamicBatcher::drain_pending`] pass — a submit that
+    /// final [`DynamicBatcher::fail_pending`] pass — a submit that
     /// races the close lands in the queue *before* that drain (both
     /// sides serialize on the queue mutex), so no request is stranded.
     pub fn close(&self) {
@@ -191,12 +359,32 @@ impl DynamicBatcher {
 
     /// Run one batch through `exec` and scatter responses. Every
     /// request receives a reply: a classification, or an explicit
-    /// error `Response` when its row length is wrong or the executor
-    /// fails — reply senders are never silently dropped.
+    /// error `Response` when its deadline passed, its row length is
+    /// wrong, or the executor fails *or panics* — reply senders are
+    /// never silently dropped, and a panicking engine is contained
+    /// here (the calling worker thread survives).
     pub fn dispatch<F>(&self, batch: Vec<(Request, Instant)>, n_in: usize, exec: F)
     where
         F: FnOnce(&Matrix) -> anyhow::Result<Matrix>,
     {
+        // A deadline can pass between batch formation and dispatch
+        // (e.g. the worker sat in a long engine call); drop those rows
+        // now rather than compute logits nobody is waiting for.
+        let now = Instant::now();
+        let (batch, dead): (Vec<_>, Vec<_>) =
+            batch.into_iter().partition(|(r, _)| r.deadline > now);
+        if !dead.is_empty() {
+            self.shared.expired.fetch_add(dead.len() as u64, Ordering::Relaxed);
+            for (req, t_in) in dead {
+                let _ = req.reply.send(Response::failed(
+                    ServeError::DeadlineExceeded,
+                    t_in.elapsed().as_micros() as u64,
+                ));
+            }
+        }
+        if batch.is_empty() {
+            return;
+        }
         let rows = if self.pad_batches { self.max_batch } else { batch.len() };
         let mut x = Matrix::zeros(rows, n_in);
         for (b, (req, _)) in batch.iter().enumerate() {
@@ -206,15 +394,21 @@ impl DynamicBatcher {
                 x.row_mut(b).copy_from_slice(&req.pixels);
             }
         }
-        match exec(&x) {
-            Ok(logits) => {
+        // Fault containment: an engine panic must fail this batch, not
+        // kill the worker thread that happened to run it.
+        let result = catch_unwind(AssertUnwindSafe(|| exec(&x)));
+        match result {
+            Ok(Ok(logits)) => {
                 let probs = logits.softmax_rows();
                 let classes = logits.argmax_rows();
                 for (b, (req, t_in)) in batch.into_iter().enumerate() {
                     let latency_us = t_in.elapsed().as_micros() as u64;
                     let resp = if req.pixels.len() != n_in {
                         Response::failed(
-                            format!("expected {n_in} pixels, got {}", req.pixels.len()),
+                            ServeError::BadInput(format!(
+                                "expected {n_in} pixels, got {}",
+                                req.pixels.len()
+                            )),
                             latency_us,
                         )
                     } else {
@@ -228,15 +422,36 @@ impl DynamicBatcher {
                     let _ = req.reply.send(resp);
                 }
             }
-            Err(e) => {
-                let msg = format!("inference failed: {e:#}");
+            Ok(Err(e)) => {
+                let err = ServeError::Engine(format!("inference failed: {e:#}"));
                 for (req, t_in) in batch {
                     let _ = req
                         .reply
-                        .send(Response::failed(msg.clone(), t_in.elapsed().as_micros() as u64));
+                        .send(Response::failed(err.clone(), t_in.elapsed().as_micros() as u64));
+                }
+            }
+            Err(payload) => {
+                self.shared.panics.fetch_add(1, Ordering::Relaxed);
+                let err =
+                    ServeError::Engine(format!("inference panicked: {}", panic_message(&payload)));
+                for (req, t_in) in batch {
+                    let _ = req
+                        .reply
+                        .send(Response::failed(err.clone(), t_in.elapsed().as_micros() as u64));
                 }
             }
         }
+    }
+}
+
+/// Best-effort extraction of a panic payload's message.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -247,20 +462,45 @@ pub struct BatcherHandle {
 }
 
 impl BatcherHandle {
-    /// Enqueue a request and wake a batch former; returns the receiver
-    /// for the reply. On a closed queue (model unloaded) the reply is
-    /// an immediate error — the closed check happens under the queue
-    /// mutex, so a request is either rejected here or visible to the
-    /// closer's final drain, never stranded.
+    /// [`BatcherHandle::submit_by`] with a one-minute deadline — for
+    /// call sites (tests, benches) that don't propagate client
+    /// deadlines.
     pub fn submit(&self, pixels: Vec<f32>) -> mpsc::Receiver<Response> {
+        self.submit_by(pixels, Instant::now() + Duration::from_secs(60))
+    }
+
+    /// Enqueue a request and wake a batch former; returns the receiver
+    /// for the reply. Admission is O(1) and never blocks the caller
+    /// beyond the queue mutex:
+    ///
+    /// * closed queue (model unloaded) → immediate
+    ///   [`ServeError::Unloaded`];
+    /// * full queue (`max_pending` reached) → immediate
+    ///   [`ServeError::Overloaded`] with a `retry_after_ms` hint;
+    ///
+    /// both checks happen under the queue mutex, so a request is
+    /// either rejected here or visible to the closer's final drain,
+    /// never stranded.
+    pub fn submit_by(&self, pixels: Vec<f32>, deadline: Instant) -> mpsc::Receiver<Response> {
         let (tx, rx) = mpsc::channel();
         {
             let mut q = self.shared.queue.lock().unwrap();
             if self.shared.closed.load(Ordering::Relaxed) {
-                let _ = tx.send(Response::failed("model unloaded".into(), 0));
+                let _ = tx.send(Response::failed(
+                    ServeError::Unloaded("model unloaded".into()),
+                    0,
+                ));
                 return rx;
             }
-            q.push((Request { pixels, reply: tx }, Instant::now()));
+            if q.len() >= self.shared.max_pending {
+                self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+                let _ = tx.send(Response::failed(
+                    ServeError::Overloaded { retry_after_ms: self.shared.retry_after_ms },
+                    0,
+                ));
+                return rx;
+            }
+            q.push((Request { pixels, reply: tx, deadline }, Instant::now()));
         }
         self.shared.arrived.notify_one();
         rx
@@ -355,8 +595,31 @@ mod tests {
         for rx in rxs {
             let r = rx.recv().expect("explicit error response, not a disconnect");
             let err = r.error.expect("error field set");
-            assert!(err.contains("backend exploded"), "{err}");
+            assert_eq!(err.code(), "engine");
+            assert!(err.to_string().contains("backend exploded"), "{err}");
         }
+    }
+
+    #[test]
+    fn panicking_executor_fails_batch_explicitly_and_caller_survives() {
+        let b = DynamicBatcher::new(4, Duration::from_millis(5));
+        let h = b.handle();
+        let rxs: Vec<_> = (0..2).map(|_| h.submit(vec![1.0, 2.0, 3.0])).collect();
+        let batch = b.next_batch(Duration::from_millis(200)).expect("batch");
+        // the panic is contained inside dispatch: this call returns
+        b.dispatch(batch, 3, |_| -> anyhow::Result<Matrix> { panic!("engine blew up") });
+        for rx in rxs {
+            let r = rx.recv().expect("explicit error reply despite the panic");
+            let err = r.error.expect("error field set");
+            assert_eq!(err.code(), "engine");
+            assert!(err.to_string().contains("engine blew up"), "{err}");
+        }
+        assert_eq!(b.stats().panics, 1);
+        // the batcher is still fully usable after the contained panic
+        let rx = h.submit(vec![0.0, 5.0, 0.0]);
+        let batch = b.next_batch(Duration::from_millis(200)).expect("batch after panic");
+        b.dispatch(batch, 3, echo_exec);
+        assert_eq!(rx.recv().unwrap().class, 1);
     }
 
     #[test]
@@ -368,10 +631,71 @@ mod tests {
         let batch = b.next_batch(Duration::from_millis(200)).expect("batch");
         b.dispatch(batch, 3, echo_exec);
         let bad = rx_bad.recv().unwrap();
-        assert!(bad.error.as_deref().unwrap().contains("expected 3 pixels"), "{:?}", bad.error);
+        let err = bad.error.expect("error field set");
+        assert_eq!(err.code(), "bad_input");
+        assert!(err.to_string().contains("expected 3 pixels"), "{err}");
         let ok = rx_ok.recv().unwrap();
         assert!(ok.error.is_none());
         assert_eq!(ok.class, 1); // argmax of [0, 5, 0]
+    }
+
+    #[test]
+    fn full_queue_rejects_overloaded_in_o1() {
+        // bound 2: the third submit must be rejected immediately with
+        // an explicit overloaded reply + retry hint, no worker needed
+        let b = DynamicBatcher::bounded(2, Duration::from_millis(5), 2);
+        let h = b.handle();
+        let _rx1 = h.submit(vec![1.0, 0.0, 0.0]);
+        let _rx2 = h.submit(vec![2.0, 0.0, 0.0]);
+        let t0 = Instant::now();
+        let rx3 = h.submit(vec![3.0, 0.0, 0.0]);
+        let r = rx3.recv().expect("immediate overloaded reply");
+        assert!(t0.elapsed() < Duration::from_millis(100), "not O(1): {:?}", t0.elapsed());
+        match r.error.expect("error field set") {
+            ServeError::Overloaded { retry_after_ms } => assert!(retry_after_ms >= 1),
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        assert_eq!(b.stats().rejected, 1);
+        assert_eq!(b.pending(), 2, "rejected submit must not enter the queue");
+        // draining one batch frees capacity again
+        let batch = b.next_batch(Duration::from_millis(200)).expect("batch");
+        b.dispatch(batch, 3, echo_exec);
+        let rx4 = h.submit(vec![4.0, 0.0, 0.0]);
+        let batch = b.next_batch(Duration::from_millis(200)).expect("batch");
+        b.dispatch(batch, 3, echo_exec);
+        assert!(rx4.recv().unwrap().error.is_none());
+    }
+
+    #[test]
+    fn expired_request_fails_at_batch_formation_not_in_the_model() {
+        let b = DynamicBatcher::new(4, Duration::from_millis(5));
+        let h = b.handle();
+        let rx = h.submit_by(vec![1.0, 0.0, 0.0], Instant::now() + Duration::from_millis(10));
+        std::thread::sleep(Duration::from_millis(25));
+        // the only queued request is dead: no batch forms, the client
+        // gets an explicit deadline reply instead of an inference
+        assert!(b.next_batch(Duration::from_millis(30)).is_none());
+        let r = rx.recv().expect("explicit deadline reply");
+        assert_eq!(r.error.expect("error field set"), ServeError::DeadlineExceeded);
+        assert_eq!(b.stats().expired, 1);
+        assert_eq!(b.stats().requests, 0, "expired requests never count as batched");
+    }
+
+    #[test]
+    fn dispatch_skips_requests_that_died_after_batch_formation() {
+        let b = DynamicBatcher::new(4, Duration::from_millis(5));
+        let h = b.handle();
+        let rx = h.submit_by(vec![1.0, 0.0, 0.0], Instant::now() + Duration::from_millis(20));
+        let batch = b.next_batch(Duration::from_millis(200)).expect("batch");
+        std::thread::sleep(Duration::from_millis(35));
+        let ran = std::sync::atomic::AtomicBool::new(false);
+        b.dispatch(batch, 3, |x| {
+            ran.store(true, Ordering::Relaxed);
+            echo_exec(x)
+        });
+        assert!(!ran.load(Ordering::Relaxed), "model must not run for a dead batch");
+        assert_eq!(rx.recv().unwrap().error, Some(ServeError::DeadlineExceeded));
+        assert_eq!(b.stats().expired, 1);
     }
 
     #[test]
@@ -430,16 +754,19 @@ mod tests {
         let rx_after = h.submit(vec![2.0, 0.0, 0.0]);
         let r = rx_after.recv().expect("immediate error reply");
         assert!(t0.elapsed() < Duration::from_millis(100), "not fast: {:?}", t0.elapsed());
-        assert!(r.error.as_deref().unwrap().contains("unloaded"), "{:?}", r.error);
-        let pending = b.drain_pending();
-        assert_eq!(pending.len(), 1);
-        b.dispatch(pending, 3, |_| Err(anyhow::anyhow!("closing")));
-        assert!(rx_before.recv().unwrap().error.is_some());
+        let err = r.error.expect("error field set");
+        assert_eq!(err.code(), "unloaded");
+        assert!(err.to_string().contains("unloaded"), "{err}");
+        // the close-out path answers what was already queued, typed
+        let n = b.fail_pending(ServeError::Unloaded("model 'x' unloaded".into()));
+        assert_eq!(n, 1);
+        let r = rx_before.recv().unwrap();
+        assert_eq!(r.error.as_ref().map(ServeError::code), Some("unloaded"));
     }
 
     #[test]
     fn mean_fill_math() {
-        let stats = BatchStats { requests: 6, batches: 2, batch_fill_sum: 6 };
+        let stats = BatchStats { requests: 6, batches: 2, batch_fill_sum: 6, ..Default::default() };
         assert!((stats.mean_fill(4) - 0.75).abs() < 1e-9);
     }
 }

@@ -1,0 +1,238 @@
+//! Deterministic fault injection for serving: [`ChaosEngine`] wraps
+//! any [`InferenceEngine`] and injects errors, latency spikes, and
+//! panics at configured rates from a seeded [`Pcg32`] stream.
+//!
+//! Resilience claims that are never exercised are decoration. The
+//! chaos wrapper plugs into the real serving stack through
+//! `Server::bind_with_engines` — same batcher, same workers, same wire
+//! protocol — so the soak test (`rust/tests/serve_chaos.rs`) drives
+//! genuine overload/fault traffic through the exact code paths
+//! production requests take, and the seed makes a failing run
+//! reproducible instead of a flake.
+//!
+//! Fault draw order per `predict` call is fixed (latency, then
+//! panic/error) so a given `(seed, call index)` always yields the same
+//! fault — two runs with the same seed inject identically.
+
+use super::engine::InferenceEngine;
+use crate::tensor::Matrix;
+use crate::util::rng::Pcg32;
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Fault rates for a [`ChaosEngine`]. All rates are probabilities in
+/// `[0, 1]` drawn independently per `predict` call; `panic_rate` is
+/// checked before `error_rate`, so with both set a call panics with
+/// probability `panic_rate` and errors with probability `error_rate`
+/// (disjoint draws from one uniform sample).
+#[derive(Debug, Clone)]
+pub struct ChaosConfig {
+    /// Seed for the deterministic fault stream.
+    pub seed: u64,
+    /// Probability a call returns `Err("chaos: injected error")`.
+    pub error_rate: f64,
+    /// Probability a call panics (exercises `catch_unwind` containment).
+    pub panic_rate: f64,
+    /// Probability a call sleeps `latency` before proceeding.
+    pub latency_rate: f64,
+    /// The injected latency spike.
+    pub latency: Duration,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> ChaosConfig {
+        ChaosConfig {
+            seed: 0xC4A05,
+            error_rate: 0.0,
+            panic_rate: 0.0,
+            latency_rate: 0.0,
+            latency: Duration::from_millis(5),
+        }
+    }
+}
+
+/// Counters of what the chaos layer actually injected — the soak test
+/// asserts these are non-zero, proving the run exercised the faults it
+/// claims to survive.
+#[derive(Debug, Default, Clone)]
+pub struct ChaosStats {
+    pub calls: u64,
+    pub errors_injected: u64,
+    pub panics_injected: u64,
+    pub spikes_injected: u64,
+}
+
+/// An [`InferenceEngine`] decorator that misbehaves on schedule.
+///
+/// Shape metadata delegates to the inner engine, so the server batches
+/// and validates exactly as it would for the real model; only
+/// `predict` is intercepted.
+pub struct ChaosEngine {
+    inner: Arc<dyn InferenceEngine + Send + Sync>,
+    cfg: ChaosConfig,
+    rng: Mutex<Pcg32>,
+    calls: AtomicU64,
+    errors_injected: AtomicU64,
+    panics_injected: AtomicU64,
+    spikes_injected: AtomicU64,
+}
+
+impl ChaosEngine {
+    pub fn new(inner: Arc<dyn InferenceEngine + Send + Sync>, cfg: ChaosConfig) -> ChaosEngine {
+        let rng = Mutex::new(Pcg32::new(cfg.seed, 0xFA17));
+        ChaosEngine {
+            inner,
+            cfg,
+            rng,
+            calls: AtomicU64::new(0),
+            errors_injected: AtomicU64::new(0),
+            panics_injected: AtomicU64::new(0),
+            spikes_injected: AtomicU64::new(0),
+        }
+    }
+
+    /// What has been injected so far.
+    pub fn stats(&self) -> ChaosStats {
+        ChaosStats {
+            calls: self.calls.load(Ordering::Relaxed),
+            errors_injected: self.errors_injected.load(Ordering::Relaxed),
+            panics_injected: self.panics_injected.load(Ordering::Relaxed),
+            spikes_injected: self.spikes_injected.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl InferenceEngine for ChaosEngine {
+    fn predict(&self, x: &Matrix) -> Result<Matrix> {
+        self.calls.fetch_add(1, Ordering::Relaxed);
+        // Draw both samples inside one short lock scope and release it
+        // before sleeping or panicking — a poisoned rng mutex would
+        // turn one injected panic into a permanently broken engine,
+        // which is the chaos layer causing the very failure mode the
+        // stack is meant to contain.
+        let (spike, fault) = {
+            let mut rng = self.rng.lock().unwrap();
+            (rng.next_f64(), rng.next_f64())
+        };
+        if spike < self.cfg.latency_rate {
+            self.spikes_injected.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(self.cfg.latency);
+        }
+        if fault < self.cfg.panic_rate {
+            self.panics_injected.fetch_add(1, Ordering::Relaxed);
+            panic!("chaos: injected panic (seed {})", self.cfg.seed);
+        }
+        if fault < self.cfg.panic_rate + self.cfg.error_rate {
+            self.errors_injected.fetch_add(1, Ordering::Relaxed);
+            return Err(anyhow!("chaos: injected error (seed {})", self.cfg.seed));
+        }
+        self.inner.predict(x)
+    }
+
+    fn n_in(&self) -> usize {
+        self.inner.n_in()
+    }
+
+    fn n_out(&self) -> usize {
+        self.inner.n_out()
+    }
+
+    fn max_batch(&self) -> usize {
+        self.inner.max_batch()
+    }
+
+    fn name(&self) -> &'static str {
+        "chaos"
+    }
+
+    fn fixed_batch(&self) -> bool {
+        self.inner.fixed_batch()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::engine::NativeEngine;
+    use crate::nn::{LayerKind, Network};
+
+    fn tiny_engine() -> Arc<dyn InferenceEngine + Send + Sync> {
+        let mut net = Network::from_dims(
+            &[6, 5, 3],
+            vec![LayerKind::Hashed { k: 12 }, LayerKind::Dense],
+            crate::hash::DEFAULT_SEED_BASE,
+        );
+        net.init(&mut Pcg32::new(9, 9));
+        Arc::new(NativeEngine::from_network(net, 8))
+    }
+
+    fn outcome_trace(chaos: &ChaosEngine, x: &Matrix, n: usize) -> Vec<&'static str> {
+        (0..n)
+            .map(|_| {
+                match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| chaos.predict(x))) {
+                    Ok(Ok(_)) => "ok",
+                    Ok(Err(_)) => "err",
+                    Err(_) => "panic",
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn zero_rates_are_passthrough() {
+        let inner = tiny_engine();
+        let x = Matrix::from_fn(2, 6, |i, j| (i + j) as f32 * 0.1);
+        let want = inner.predict(&x).unwrap();
+        let chaos = ChaosEngine::new(inner, ChaosConfig::default());
+        assert_eq!(chaos.n_in(), 6);
+        assert_eq!(chaos.n_out(), 3);
+        assert_eq!(chaos.max_batch(), 8);
+        assert_eq!(chaos.name(), "chaos");
+        let got = chaos.predict(&x).unwrap();
+        assert_eq!(got.data, want.data);
+        let s = chaos.stats();
+        assert_eq!(s.calls, 1);
+        assert_eq!(s.errors_injected + s.panics_injected + s.spikes_injected, 0);
+    }
+
+    #[test]
+    fn same_seed_injects_identical_fault_sequence() {
+        let cfg = ChaosConfig {
+            seed: 42,
+            error_rate: 0.3,
+            panic_rate: 0.2,
+            latency_rate: 0.0,
+            ..ChaosConfig::default()
+        };
+        let x = Matrix::zeros(1, 6);
+        let a = outcome_trace(&ChaosEngine::new(tiny_engine(), cfg.clone()), &x, 50);
+        let b = outcome_trace(&ChaosEngine::new(tiny_engine(), cfg), &x, 50);
+        assert_eq!(a, b, "same seed must inject the same faults");
+        assert!(a.contains(&"ok") && a.contains(&"err") && a.contains(&"panic"), "{a:?}");
+    }
+
+    #[test]
+    fn injected_panic_is_containable_and_engine_stays_usable() {
+        let cfg = ChaosConfig { seed: 7, panic_rate: 1.0, ..ChaosConfig::default() };
+        let chaos = ChaosEngine::new(tiny_engine(), cfg);
+        let x = Matrix::zeros(1, 6);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| chaos.predict(&x)));
+        assert!(caught.is_err(), "panic_rate 1.0 must panic");
+        // the rng lock was released before the panic: the engine is
+        // not poisoned and keeps injecting deterministically
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| chaos.predict(&x)));
+        assert!(caught.is_err());
+        assert_eq!(chaos.stats().panics_injected, 2);
+    }
+
+    #[test]
+    fn error_rate_one_always_errors_explicitly() {
+        let cfg = ChaosConfig { seed: 3, error_rate: 1.0, ..ChaosConfig::default() };
+        let chaos = ChaosEngine::new(tiny_engine(), cfg);
+        let e = chaos.predict(&Matrix::zeros(1, 6)).unwrap_err();
+        assert!(e.to_string().contains("chaos: injected error"), "{e}");
+        assert_eq!(chaos.stats().errors_injected, 1);
+    }
+}

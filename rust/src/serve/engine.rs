@@ -209,6 +209,13 @@ impl InferenceEngine for RuntimeEngine {
 
 /// Drain `batcher` through `engine` until `stop` is set — the body of
 /// every serving worker thread, shared by all backends.
+///
+/// Fault containment is two layers deep: `dispatch` itself catches a
+/// panicking `predict` and fails that batch with an explicit reply,
+/// and this loop additionally catches anything that escapes an
+/// iteration (e.g. an engine whose *metadata* methods panic), so a
+/// worker thread never dies while `stop` is unset — it logs, backs off
+/// a beat, and keeps draining.
 pub fn worker_loop(
     engine: &dyn InferenceEngine,
     batcher: &super::batcher::DynamicBatcher,
@@ -216,8 +223,15 @@ pub fn worker_loop(
 ) {
     let n_in = engine.n_in();
     while !stop.load(Ordering::Relaxed) {
-        if let Some(batch) = batcher.next_batch(Duration::from_millis(20)) {
-            batcher.dispatch(batch, n_in, |x| engine.predict(x));
+        let iteration = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            if let Some(batch) = batcher.next_batch(Duration::from_millis(20)) {
+                batcher.dispatch(batch, n_in, |x| engine.predict(x));
+            }
+        }));
+        if iteration.is_err() {
+            eprintln!("serve: worker iteration panicked for engine '{}'; worker continues", engine.name());
+            // avoid a hot spin if the panic source is persistent
+            std::thread::sleep(Duration::from_millis(1));
         }
     }
 }
@@ -348,6 +362,52 @@ mod tests {
             assert_eq!(Backend::parse(b.name()), Some(b));
         }
         assert_eq!(Backend::parse("gpu"), None);
+    }
+
+    /// Panics on every `predict` — the engine a chaos monkey would ship.
+    struct PanicEngine;
+
+    impl InferenceEngine for PanicEngine {
+        fn predict(&self, _x: &Matrix) -> Result<Matrix> {
+            panic!("injected engine panic");
+        }
+        fn n_in(&self) -> usize {
+            6
+        }
+        fn n_out(&self) -> usize {
+            3
+        }
+        fn max_batch(&self) -> usize {
+            4
+        }
+        fn name(&self) -> &'static str {
+            "panic"
+        }
+    }
+
+    #[test]
+    fn worker_survives_panicking_engine() {
+        // the resilience contract: a panicking predict fails its batch
+        // with an explicit error reply and the same worker keeps
+        // serving — it must answer a *second* request after the panic.
+        let batcher = super::super::batcher::DynamicBatcher::new(4, Duration::from_millis(1));
+        let handle = batcher.handle();
+        let stop = Arc::new(AtomicBool::new(false));
+        let worker = {
+            let b = batcher.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || worker_loop(&PanicEngine, &b, &stop))
+        };
+        for attempt in 0..2 {
+            let rx = handle.submit(vec![0.1; 6]);
+            let r = rx.recv_timeout(Duration::from_secs(5)).expect("explicit reply, not a hang");
+            let err = r.error.expect("error field set");
+            assert_eq!(err.code(), "engine", "attempt {attempt}");
+            assert!(err.to_string().contains("injected engine panic"), "attempt {attempt}: {err}");
+        }
+        assert_eq!(batcher.stats().panics, 2);
+        stop.store(true, Ordering::Relaxed);
+        worker.join().unwrap(); // worker thread itself never panicked out
     }
 
     #[test]

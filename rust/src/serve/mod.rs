@@ -28,10 +28,19 @@
 //! total server memory per model is the *compressed* parameter count,
 //! which is the paper's point.
 
+//!
+//! Resilience (PR 6): admission control (bounded queues, explicit
+//! `overloaded` rejection), per-request deadlines (expired before the
+//! model runs), panic containment in dispatch/worker loops, and a
+//! seeded [`chaos::ChaosEngine`] fault injector that the soak test
+//! drives through the real server. See `ARCHITECTURE.md` §Resilience.
+
 pub mod batcher;
+pub mod chaos;
 pub mod engine;
 pub mod server;
 
-pub use batcher::{BatchStats, DynamicBatcher, Request, Response};
+pub use batcher::{BatchStats, DynamicBatcher, Request, Response, ServeError};
+pub use chaos::{ChaosConfig, ChaosEngine, ChaosStats};
 pub use engine::{Backend, InferenceEngine, ModelConfig, NativeEngine, RuntimeEngine};
 pub use server::{serve, Client, ServeOptions, Server};

@@ -3,7 +3,12 @@
 //! Protocol (one JSON object per line):
 //!   request:  {"pixels": [f32; n_in]}              → classify (default model)
 //!             {"model": "name", "pixels": [...]}   → classify a named model
+//!               optional "timeout_ms"              → per-request deadline
+//!                                                    (default --timeout-ms)
 //!             {"cmd": "stats"}                     → server + per-model counters
+//!             {"cmd": "health"}                    → liveness: live workers,
+//!                                                    queue depth, resilience
+//!                                                    counters per model
 //!             {"cmd": "models"}                    → per-model metadata (spec,
 //!                                                    storage, bundle version)
 //!             {"cmd": "load", "path": "m.hnb"}     → hot-load a model bundle
@@ -13,8 +18,11 @@
 //!                                                    its source file(s)
 //!             {"cmd": "shutdown"}                  → stop accepting
 //!   response: {"class": u, "probs": [...], "latency_us": u, "model": "name"}
-//!             {"error": "..."}                     → bad request, wrong pixel
-//!                                                    count, or engine failure
+//!             {"error": "...", "code": "..."}      → typed failure; codes:
+//!                 "overloaded" (queue full; carries "retry_after_ms"),
+//!                 "deadline" (expired before inference), "timeout" (reply
+//!                 never arrived), "engine" (failure/panic, contained),
+//!                 "bad_input", "unloaded", "unknown_model"
 //!
 //! One process serves **multiple named models** through a mutable
 //! engine registry: each model gets its own [`DynamicBatcher`] plus
@@ -30,21 +38,22 @@
 //! callers can bind port 0 and read [`Server::local_addr`] before the
 //! accept loop starts; [`serve`] is the one-call wrapper.
 
-use super::batcher::DynamicBatcher;
+use super::batcher::{DynamicBatcher, ServeError};
 use super::engine::{
     error_loop, worker_loop, Backend, InferenceEngine, ModelConfig, NativeEngine, RuntimeEngine,
 };
 use crate::model::{ModelBundle, ModelSpec};
 use crate::runtime::{ArtifactSpec, Manifest, Runtime};
 use crate::util::json::{num, obj, Json};
+use crate::util::rng::Pcg32;
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -65,6 +74,14 @@ pub struct ServeOptions {
     /// Stop after serving this many classify requests (0 = run forever).
     /// Used by tests and the examples.
     pub max_requests: u64,
+    /// Admission bound per model: at most this many requests queue in a
+    /// model's batcher; further submits are rejected immediately with an
+    /// explicit `overloaded` reply (`--max-pending`).
+    pub max_pending: usize,
+    /// Default per-request deadline, used when a classify request
+    /// carries no `"timeout_ms"` field (`--timeout-ms`). Replaces the
+    /// old hardcoded 10 s receive timeout.
+    pub default_timeout: Duration,
 }
 
 impl Default for ServeOptions {
@@ -77,6 +94,8 @@ impl Default for ServeOptions {
             workers: 2,
             max_wait: Duration::from_millis(2),
             max_requests: 0,
+            max_pending: 256,
+            default_timeout: Duration::from_secs(10),
         }
     }
 }
@@ -130,6 +149,11 @@ struct ModelHandle {
     batcher: DynamicBatcher,
     served: AtomicU64,
     errors: AtomicU64,
+    /// Worker threads currently running (each decrements on exit);
+    /// `{"cmd":"health"}` compares it against `workers` to surface a
+    /// permanently-dead worker. The containment in `worker_loop` means
+    /// this should only drop below `workers` once `stop` is set.
+    live: Arc<AtomicUsize>,
     /// Per-model stop flag — this model's worker threads watch it; set
     /// by unload / hot-swap / server shutdown.
     stop: Arc<AtomicBool>,
@@ -188,6 +212,8 @@ struct ServeCtx {
     backend: Backend,
     default_workers: usize,
     max_wait: Duration,
+    max_pending: usize,
+    default_timeout: Duration,
 }
 
 /// Stop a handle's workers, join them, and fail whatever was queued —
@@ -200,17 +226,14 @@ fn retire(handle: &ModelHandle) {
         let _ = j.join();
     }
     // Close the queue so every later submit fails fast, then fail the
-    // requests that were already queued. The closed check and this
-    // drain serialize on the queue mutex, so a submit racing the
-    // unload is either rejected immediately or caught here — never
-    // stranded until its receive timeout.
+    // requests that were already queued with the typed cause. The
+    // closed check and this drain serialize on the queue mutex, so a
+    // submit racing the unload is either rejected immediately or
+    // caught here — never stranded until its receive timeout.
     handle.batcher.close();
-    let pending = handle.batcher.drain_pending();
-    if !pending.is_empty() {
-        handle.batcher.dispatch(pending, handle.n_in, |_| {
-            Err(anyhow!("model '{}' unloaded", handle.name))
-        });
-    }
+    handle
+        .batcher
+        .fail_pending(ServeError::Unloaded(format!("model '{}' unloaded", handle.name)));
 }
 
 impl ServeCtx {
@@ -241,6 +264,7 @@ impl ServeCtx {
             eng,
             workers,
             self.max_wait,
+            self.max_pending,
             ModelSource::Bundle(path.to_path_buf()),
             Some(spec),
             Some(version),
@@ -291,6 +315,7 @@ impl ServeCtx {
                 eng,
                 self.default_workers,
                 self.max_wait,
+                self.max_pending,
                 source,
                 Some(model_spec),
                 None,
@@ -306,8 +331,10 @@ impl ServeCtx {
         checkpoint: Option<&Path>,
         source: ModelSource,
     ) -> Arc<ModelHandle> {
-        let batcher = DynamicBatcher::new(spec.batch.max(1), self.max_wait).padded();
+        let batcher =
+            DynamicBatcher::bounded(spec.batch.max(1), self.max_wait, self.max_pending).padded();
         let stop = Arc::new(AtomicBool::new(false));
+        let live = Arc::new(AtomicUsize::new(1)); // counted before the thread starts
         let handle = Arc::new(ModelHandle {
             name: spec.name.clone(),
             backend: "runtime",
@@ -318,6 +345,7 @@ impl ServeCtx {
             batcher: batcher.clone(),
             served: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            live: live.clone(),
             stop: stop.clone(),
             joins: Mutex::new(Vec::new()),
             source,
@@ -337,6 +365,7 @@ impl ServeCtx {
                     error_loop(&msg, n_in, &batcher, &stop);
                 }
             }
+            live.fetch_sub(1, Ordering::Relaxed);
         });
         handle.joins.lock().unwrap().push(join);
         handle
@@ -400,6 +429,8 @@ impl Server {
             backend: opt.backend,
             default_workers: opt.workers,
             max_wait: opt.max_wait,
+            max_pending: opt.max_pending,
+            default_timeout: opt.default_timeout,
         });
 
         let mut first_custom: Option<String> = None;
@@ -413,6 +444,7 @@ impl Server {
                     eng,
                     ctx.default_workers,
                     ctx.max_wait,
+                    ctx.max_pending,
                     ModelSource::Injected,
                     None,
                     None,
@@ -517,10 +549,7 @@ impl Server {
         }
         while !conns.is_empty() {
             for h in ctx.registry.snapshot() {
-                let pending = h.batcher.drain_pending();
-                if !pending.is_empty() {
-                    h.batcher.dispatch(pending, h.n_in, |_| Err(anyhow!("server shutting down")));
-                }
+                h.batcher.fail_pending(ServeError::Unloaded("server shutting down".into()));
             }
             let mut i = 0;
             while i < conns.len() {
@@ -565,16 +594,18 @@ fn spawn_engine_workers(
     eng: Arc<dyn InferenceEngine + Send + Sync>,
     n_workers: usize,
     max_wait: Duration,
+    max_pending: usize,
     source: ModelSource,
     spec: Option<ModelSpec>,
     bundle_version: Option<u32>,
 ) -> Arc<ModelHandle> {
     let n_workers = n_workers.max(1);
-    let mut batcher = DynamicBatcher::new(eng.max_batch(), max_wait);
+    let mut batcher = DynamicBatcher::bounded(eng.max_batch(), max_wait, max_pending);
     if eng.fixed_batch() {
         batcher = batcher.padded();
     }
     let stop = Arc::new(AtomicBool::new(false));
+    let live = Arc::new(AtomicUsize::new(0));
     let handle = Arc::new(ModelHandle {
         name,
         backend: eng.name(),
@@ -585,6 +616,7 @@ fn spawn_engine_workers(
         batcher: batcher.clone(),
         served: AtomicU64::new(0),
         errors: AtomicU64::new(0),
+        live: live.clone(),
         stop: stop.clone(),
         joins: Mutex::new(Vec::new()),
         source,
@@ -596,7 +628,14 @@ fn spawn_engine_workers(
         let eng = eng.clone();
         let b = batcher.clone();
         let stop = stop.clone();
-        joins.push(std::thread::spawn(move || worker_loop(&*eng, &b, &stop)));
+        // count the worker live *before* its thread starts so a health
+        // probe racing the spawn never sees a half-started model as dead
+        live.fetch_add(1, Ordering::Relaxed);
+        let live = live.clone();
+        joins.push(std::thread::spawn(move || {
+            worker_loop(&*eng, &b, &stop);
+            live.fetch_sub(1, Ordering::Relaxed);
+        }));
     }
     drop(joins);
     handle
@@ -666,6 +705,7 @@ fn handle_request(req: &Json, ctx: &ServeCtx) -> Json {
                 obj(vec![("ok", Json::Bool(true))])
             }
             "stats" => stats_json(ctx),
+            "health" => health_json(ctx),
             "models" => models_json(ctx),
             "load" => cmd_load(req, ctx),
             "unload" => cmd_unload(req, ctx),
@@ -679,44 +719,65 @@ fn handle_request(req: &Json, ctx: &ServeCtx) -> Json {
     let default_name = ctx.registry.default_name();
     let model_name = req.get("model").and_then(Json::as_str).unwrap_or(&default_name);
     let Some(handle) = ctx.registry.get(model_name) else {
-        return obj(vec![(
-            "error",
-            Json::Str(format!("unknown model '{model_name}'")),
-        )]);
+        return obj(vec![
+            ("error", Json::Str(format!("unknown model '{model_name}'"))),
+            ("code", Json::Str("unknown_model".into())),
+        ]);
     };
     let pixels: Vec<f32> = pixels.iter().filter_map(|v| v.as_f64()).map(|v| v as f32).collect();
     // Validate here, not in the batcher: a truncated input must fail
     // loudly instead of being zero-padded into a wrong classification.
     if pixels.len() != handle.n_in {
         handle.errors.fetch_add(1, Ordering::Relaxed);
-        return obj(vec![
-            (
-                "error",
-                Json::Str(format!(
-                    "model '{}' expects {} pixels, got {}",
-                    handle.name,
-                    handle.n_in,
-                    pixels.len()
-                )),
-            ),
-            ("model", Json::Str(handle.name.clone())),
-        ]);
+        return error_reply(
+            &ServeError::BadInput(format!(
+                "model '{}' expects {} pixels, got {}",
+                handle.name,
+                handle.n_in,
+                pixels.len()
+            )),
+            Some(&handle.name),
+        );
     }
     if handle.stop.load(Ordering::Relaxed) {
-        return obj(vec![(
-            "error",
-            Json::Str(format!("model '{}' unloaded", handle.name)),
-        )]);
+        return error_reply(
+            &ServeError::Unloaded(format!("model '{}' unloaded", handle.name)),
+            Some(&handle.name),
+        );
     }
-    let rx = handle.batcher.handle().submit(pixels);
-    match rx.recv_timeout(Duration::from_secs(10)) {
+    // Per-request deadline: the optional "timeout_ms" field overrides
+    // the server default. The same deadline drives both the batcher
+    // (expire instead of running the model for a client that gave up)
+    // and this thread's wait for the reply — no more hardcoded 10 s.
+    let timeout = match req.get("timeout_ms") {
+        None => ctx.default_timeout,
+        Some(v) => match v.as_f64() {
+            Some(ms) if ms.is_finite() && ms >= 1.0 => Duration::from_millis(ms as u64),
+            _ => {
+                handle.errors.fetch_add(1, Ordering::Relaxed);
+                return error_reply(
+                    &ServeError::BadInput("timeout_ms must be a number >= 1".into()),
+                    Some(&handle.name),
+                );
+            }
+        },
+    };
+    let deadline = Instant::now() + timeout;
+    let rx = handle.batcher.handle().submit_by(pixels, deadline);
+    // Small grace past the deadline: the batcher answers expired
+    // requests itself (code "deadline"); this receive timeout is only
+    // the backstop for a reply that never arrives at all, and must not
+    // race the batcher's own expiry pass.
+    match rx.recv_timeout(timeout + Duration::from_millis(250)) {
         Ok(resp) => {
             if let Some(err) = resp.error {
-                handle.errors.fetch_add(1, Ordering::Relaxed);
-                obj(vec![
-                    ("error", Json::Str(err)),
-                    ("model", Json::Str(handle.name.clone())),
-                ])
+                // overload rejections and deadline expiries have their
+                // own batcher counters; `errors` tracks genuine
+                // failures (engine faults, bad input, unload races)
+                if !matches!(err, ServeError::Overloaded { .. } | ServeError::DeadlineExceeded) {
+                    handle.errors.fetch_add(1, Ordering::Relaxed);
+                }
+                error_reply(&err, Some(&handle.name))
             } else {
                 handle.served.fetch_add(1, Ordering::Relaxed);
                 // the global counter (and the max_requests stop trigger)
@@ -739,9 +800,26 @@ fn handle_request(req: &Json, ctx: &ServeCtx) -> Json {
         }
         Err(_) => {
             handle.errors.fetch_add(1, Ordering::Relaxed);
-            obj(vec![("error", Json::Str("model timeout".into()))])
+            error_reply(&ServeError::Timeout, Some(&handle.name))
         }
     }
+}
+
+/// A typed error as a wire reply: human-readable `error`, stable
+/// machine-readable `code`, and — for overload rejections — the
+/// `retry_after_ms` backoff hint the client's retry loop reads.
+fn error_reply(err: &ServeError, model: Option<&str>) -> Json {
+    let mut pairs = vec![
+        ("error", Json::Str(err.to_string())),
+        ("code", Json::Str(err.code().to_string())),
+    ];
+    if let ServeError::Overloaded { retry_after_ms } = err {
+        pairs.push(("retry_after_ms", num(*retry_after_ms as f64)));
+    }
+    if let Some(m) = model {
+        pairs.push(("model", Json::Str(m.to_string())));
+    }
+    obj(pairs)
 }
 
 /// `{"cmd":"load","path":…}`: hot-load a bundle into the running
@@ -833,16 +911,25 @@ fn cmd_reload(ctx: &ServeCtx) -> Json {
     ])
 }
 
-/// `{"cmd":"stats"}` reply: total successful classifications plus
-/// per-model backend, worker count, served/error counters and batch
-/// fill (top-level `served` == sum of per-model `served`).
+/// `{"cmd":"stats"}` reply: aggregate counters plus per-model backend,
+/// worker count, served/error/rejected/expired counters and batch
+/// fill. Each top-level aggregate equals the sum over the per-model
+/// entries of the currently-registered models (asserted by the stats
+/// test); `served` is the global counter that also drives
+/// `max_requests`.
 fn stats_json(ctx: &ServeCtx) -> Json {
+    let mut errors = 0u64;
+    let mut rejected = 0u64;
+    let mut expired = 0u64;
     let per: Vec<(String, Json)> = ctx
         .registry
         .snapshot()
         .into_iter()
         .map(|h| {
             let s = h.batcher.stats();
+            errors += h.errors.load(Ordering::Relaxed);
+            rejected += s.rejected;
+            expired += s.expired;
             (
                 h.name.clone(),
                 obj(vec![
@@ -850,6 +937,9 @@ fn stats_json(ctx: &ServeCtx) -> Json {
                     ("workers", num(h.workers as f64)),
                     ("served", num(h.served.load(Ordering::Relaxed) as f64)),
                     ("errors", num(h.errors.load(Ordering::Relaxed) as f64)),
+                    ("rejected", num(s.rejected as f64)),
+                    ("expired", num(s.expired as f64)),
+                    ("panics_contained", num(s.panics as f64)),
                     ("batches", num(s.batches as f64)),
                     ("mean_fill", num(s.mean_fill(h.max_batch))),
                 ]),
@@ -858,10 +948,49 @@ fn stats_json(ctx: &ServeCtx) -> Json {
         .collect();
     obj(vec![
         ("served", num(ctx.served.load(Ordering::Relaxed) as f64)),
+        ("errors", num(errors as f64)),
+        ("rejected", num(rejected as f64)),
+        ("expired", num(expired as f64)),
         (
             "models",
             Json::Obj(per.into_iter().collect()),
         ),
+    ])
+}
+
+/// `{"cmd":"health"}` reply: liveness-oriented view — per model, the
+/// configured vs live worker count, current queue depth against its
+/// bound, and the resilience counters. Top-level `ok` is true iff
+/// every registered model still has at least one live worker.
+fn health_json(ctx: &ServeCtx) -> Json {
+    let mut all_live = true;
+    let per: Vec<(String, Json)> = ctx
+        .registry
+        .snapshot()
+        .into_iter()
+        .map(|h| {
+            let s = h.batcher.stats();
+            let live = h.live.load(Ordering::Relaxed);
+            all_live &= live > 0;
+            (
+                h.name.clone(),
+                obj(vec![
+                    ("workers", num(h.workers as f64)),
+                    ("live_workers", num(live as f64)),
+                    ("queue_depth", num(h.batcher.pending() as f64)),
+                    ("max_pending", num(h.batcher.max_pending() as f64)),
+                    ("served", num(h.served.load(Ordering::Relaxed) as f64)),
+                    ("errors", num(h.errors.load(Ordering::Relaxed) as f64)),
+                    ("rejected", num(s.rejected as f64)),
+                    ("expired", num(s.expired as f64)),
+                    ("panics_contained", num(s.panics as f64)),
+                ]),
+            )
+        })
+        .collect();
+    obj(vec![
+        ("ok", Json::Bool(all_live)),
+        ("models", Json::Obj(per.into_iter().collect())),
     ])
 }
 
@@ -904,13 +1033,31 @@ fn models_json(ctx: &ServeCtx) -> Json {
 pub struct Client {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    /// Jitter source for [`Client::classify_retry`] backoff, seeded
+    /// from the connection's ephemeral port so concurrent clients
+    /// don't retry in lockstep (which would re-create the very
+    /// overload spike they are backing off from).
+    rng: Pcg32,
 }
 
 impl Client {
     pub fn connect(addr: &str) -> Result<Client> {
         let stream = TcpStream::connect(addr)?;
         stream.set_nodelay(true).ok();
-        Ok(Client { writer: stream.try_clone()?, reader: BufReader::new(stream) })
+        let seed = stream.local_addr().map(|a| a.port() as u64).unwrap_or(1);
+        Ok(Client {
+            writer: stream.try_clone()?,
+            reader: BufReader::new(stream),
+            rng: Pcg32::new(seed, 0xB0FF),
+        })
+    }
+
+    /// Bound how long [`Client::read_reply`] blocks on the socket
+    /// (None = forever). Soak tests set this so a lost reply surfaces
+    /// as a transport error instead of a hung test.
+    pub fn set_read_timeout(&mut self, timeout: Option<Duration>) -> Result<()> {
+        self.reader.get_ref().set_read_timeout(timeout)?;
+        Ok(())
     }
 
     /// Classify against the server's default model.
@@ -924,13 +1071,7 @@ impl Client {
         model: Option<&str>,
         pixels: &[f32],
     ) -> Result<(usize, Vec<f32>, u64)> {
-        let arr = Json::Arr(pixels.iter().map(|&p| num(p as f64)).collect());
-        let mut pairs = vec![("pixels", arr)];
-        if let Some(m) = model {
-            pairs.push(("model", Json::Str(m.to_string())));
-        }
-        writeln!(self.writer, "{}", obj(pairs).to_string())?;
-        let v = self.read_reply()?;
+        let v = self.classify_raw(model, pixels, None)?;
         if let Some(err) = v.get("error").and_then(Json::as_str) {
             return Err(anyhow!("server error: {err}"));
         }
@@ -944,6 +1085,72 @@ impl Client {
                 .collect(),
             v.req_f64("latency_us").map_err(|e| anyhow!(e))? as u64,
         ))
+    }
+
+    /// One classify round trip returning the raw reply object —
+    /// `Err` only on transport/parse failure, so callers (the soak
+    /// test's exactly-one-explicit-reply tally) can distinguish
+    /// a served `"class"` from each typed `"code"`.
+    pub fn classify_raw(
+        &mut self,
+        model: Option<&str>,
+        pixels: &[f32],
+        timeout_ms: Option<u64>,
+    ) -> Result<Json> {
+        let arr = Json::Arr(pixels.iter().map(|&p| num(p as f64)).collect());
+        let mut pairs = vec![("pixels", arr)];
+        if let Some(m) = model {
+            pairs.push(("model", Json::Str(m.to_string())));
+        }
+        if let Some(ms) = timeout_ms {
+            pairs.push(("timeout_ms", num(ms as f64)));
+        }
+        writeln!(self.writer, "{}", obj(pairs).to_string())?;
+        self.read_reply()
+    }
+
+    /// [`Client::classify_raw`] with jittered exponential backoff on
+    /// `"overloaded"` rejections: waits a uniform-random slice of the
+    /// current window (full jitter), doubling the window each attempt
+    /// starting from the server's `retry_after_ms` hint, capped at 1 s.
+    /// Any other reply — success or typed error — returns immediately;
+    /// retrying a deadline or engine failure would just double charge
+    /// the model. Returns the last reply after `max_attempts`.
+    pub fn classify_retry(
+        &mut self,
+        model: Option<&str>,
+        pixels: &[f32],
+        timeout_ms: Option<u64>,
+        max_attempts: u32,
+    ) -> Result<Json> {
+        let mut attempt = 0u32;
+        loop {
+            let v = self.classify_raw(model, pixels, timeout_ms)?;
+            attempt += 1;
+            let overloaded =
+                v.get("code").and_then(Json::as_str).map(|c| c == "overloaded").unwrap_or(false);
+            if !overloaded || attempt >= max_attempts {
+                return Ok(v);
+            }
+            let hint = v
+                .get("retry_after_ms")
+                .and_then(Json::as_f64)
+                .map(|ms| ms.max(1.0) as u64)
+                .unwrap_or(10);
+            let window = hint.saturating_mul(1u64 << (attempt - 1).min(10)).clamp(1, 1000);
+            let jittered = 1 + (self.rng.next_f64() * window as f64) as u64;
+            std::thread::sleep(Duration::from_millis(jittered));
+        }
+    }
+
+    /// Fetch the `{"cmd":"health"}` liveness report.
+    pub fn health(&mut self) -> Result<Json> {
+        writeln!(
+            self.writer,
+            "{}",
+            obj(vec![("cmd", Json::Str("health".into()))]).to_string()
+        )?;
+        self.read_reply()
     }
 
     /// Send one admin command object and return the parsed reply

@@ -119,6 +119,70 @@ fn wrong_shape_params_are_rejected_on_load() {
 }
 
 #[test]
+fn interrupted_write_artifacts_fail_load_with_typed_error() {
+    // Simulate every prefix a non-atomic writer could have left behind
+    // after a crash: each must fail `load` with a typed ModelError,
+    // never parse into a garbage model. (With the atomic save these
+    // on-disk states can no longer occur at the published path; this
+    // pins down the defense in depth for files that predate it or
+    // arrived over a lossy channel.)
+    let spec = spec_for(Method::Hashnet);
+    let bytes = trained_net(&spec, 7).to_bundle(&spec).unwrap().to_bytes();
+    let path = tmp("interrupted");
+    for frac in [1usize, 4, 10, 19] {
+        let cut = bytes.len() * frac / 20;
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        let err = ModelBundle::load(&path).expect_err("torn prefix must fail load");
+        assert!(
+            matches!(
+                err,
+                ModelError::Truncated(_) | ModelError::BadChecksum { .. } | ModelError::BadMagic
+            ),
+            "cut at {cut}/{}: unexpected {err:?}",
+            bytes.len()
+        );
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn atomic_save_replaces_in_place_and_leaves_no_temp_files() {
+    let dir = std::env::temp_dir().join(format!("hn_bundle_atomic_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("model.hnb");
+
+    // first save, then overwrite with a differently-initialized net:
+    // the readable file must always be one complete, valid bundle
+    let spec = spec_for(Method::Hashnet);
+    trained_net(&spec, 8).to_bundle(&spec).unwrap().save(&path).expect("first save");
+    let first = ModelBundle::load(&path).expect("first load");
+    trained_net(&spec, 9).to_bundle(&spec).unwrap().save(&path).expect("overwrite save");
+    let second = ModelBundle::load(&path).expect("load after overwrite");
+    assert_eq!(first.spec, second.spec);
+    assert_ne!(first.params, second.params, "overwrite must publish the new parameters");
+
+    // the temp file must not survive a successful save
+    let leftovers: Vec<_> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n != "model.hnb")
+        .collect();
+    assert!(leftovers.is_empty(), "stray files after save: {leftovers:?}");
+
+    // a directory target (no file name to derive a temp from) is a
+    // typed error, not a panic
+    let err = trained_net(&spec, 8)
+        .to_bundle(&spec)
+        .unwrap()
+        .save(std::path::Path::new("/"))
+        .expect_err("saving to '/' must fail");
+    assert!(matches!(err, ModelError::Io(_)), "{err:?}");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
 fn garbage_magic_is_not_a_bundle() {
     let err = ModelBundle::from_bytes(b"HNCKxxxxxxxxxxxxxxxx").expect_err("wrong magic");
     assert!(matches!(err, ModelError::BadMagic), "{err:?}");

@@ -161,6 +161,21 @@ fn concurrent_clients_multi_model_match_direct_predict() {
         total += m.req_f64("served").unwrap();
     }
     assert_eq!(total as u64, 41);
+    // counter consistency: each top-level aggregate equals the sum of
+    // the per-model counters
+    assert_eq!(stats.req_f64("served").unwrap() as u64, 41, "top-level == sum per-model");
+    assert_eq!(stats.req_f64("errors").unwrap(), 0.0);
+    assert_eq!(stats.req_f64("rejected").unwrap(), 0.0);
+    assert_eq!(stats.req_f64("expired").unwrap(), 0.0);
+
+    // health: all workers live, queues drained
+    let health = client.health().expect("health");
+    assert_eq!(health.get("ok").and_then(|v| v.as_bool()), Some(true));
+    for name in names {
+        let h = health.get("models").and_then(|ms| ms.get(name)).expect("health entry");
+        assert_eq!(h.req_f64("live_workers").unwrap() as usize, 2, "{name}");
+        assert_eq!(h.req_f64("queue_depth").unwrap(), 0.0, "{name}");
+    }
 
     client.shutdown().expect("shutdown");
     server.join().unwrap().expect("server run");
@@ -186,6 +201,8 @@ fn wrong_pixel_count_is_explicit_json_error() {
     let stats = client.stats().expect("stats");
     let m = stats.get("models").and_then(|ms| ms.get("hash_a")).expect("hash_a stats");
     assert_eq!(m.req_f64("errors").unwrap(), 1.0);
+    // the per-model error rolls up into the top-level aggregate
+    assert_eq!(stats.req_f64("errors").unwrap(), 1.0);
 
     client.shutdown().expect("shutdown");
     server.join().unwrap().expect("server run");
@@ -389,6 +406,141 @@ fn executor_failure_reaches_client_as_json_error() {
     assert_eq!(m.req_f64("served").unwrap(), 0.0);
 
     client.shutdown().expect("shutdown");
+    server.join().unwrap().expect("server run");
+}
+
+/// An engine that blocks in `predict` until its gate opens — lets a
+/// test pin requests in flight / in queue at a chosen moment.
+struct GatedEngine {
+    gate: Arc<AtomicBool>,
+}
+
+impl InferenceEngine for GatedEngine {
+    fn predict(&self, x: &Matrix) -> anyhow::Result<Matrix> {
+        let t0 = std::time::Instant::now();
+        while !self.gate.load(Ordering::Relaxed) {
+            if t0.elapsed() > std::time::Duration::from_secs(10) {
+                anyhow::bail!("gate never opened");
+            }
+            std::thread::sleep(std::time::Duration::from_millis(2));
+        }
+        Ok(Matrix::zeros(x.rows, N_OUT))
+    }
+
+    fn n_in(&self) -> usize {
+        N_IN
+    }
+
+    fn n_out(&self) -> usize {
+        N_OUT
+    }
+
+    fn max_batch(&self) -> usize {
+        1 // one request per dispatch, so the rest stay visibly queued
+    }
+
+    fn name(&self) -> &'static str {
+        "gated"
+    }
+}
+
+/// The unload-vs-inflight race: a model unloaded while requests are
+/// queued must answer **every one** of them explicitly — served, or a
+/// typed `unloaded` error — within the deadline. The retire/close/
+/// drain dance in `server.rs` claims this; here it runs under real
+/// concurrency: one worker pinned mid-predict, five requests queued,
+/// unload racing the release.
+#[test]
+fn unload_with_inflight_requests_answers_every_one_explicitly() {
+    let gate = Arc::new(AtomicBool::new(false));
+    let opts = ServeOptions {
+        artifacts_dir: std::env::temp_dir().join("hn_serve_no_artifacts"),
+        models: Vec::new(),
+        addr: "127.0.0.1:0".into(),
+        backend: Backend::Native,
+        workers: 1,
+        ..Default::default()
+    };
+    let engines: Vec<(String, Arc<dyn InferenceEngine + Send + Sync>)> =
+        vec![("victim".to_string(), Arc::new(GatedEngine { gate: Arc::clone(&gate) }))];
+    let srv = Server::bind_with_engines(opts, engines).expect("bind");
+    let addr = srv.local_addr().to_string();
+    let server = std::thread::spawn(move || srv.run());
+
+    // 6 concurrent requests: the worker pins the first mid-predict
+    // (gate closed), the rest queue behind it.
+    const N_REQS: usize = 6;
+    let clients: Vec<std::thread::JoinHandle<hashednets::util::json::Json>> = (0..N_REQS)
+        .map(|c| {
+            let addr = addr.clone();
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).expect("connect");
+                client
+                    .set_read_timeout(Some(std::time::Duration::from_secs(15)))
+                    .expect("read timeout");
+                client
+                    .classify_raw(Some("victim"), &input_row(c, 0), Some(8_000))
+                    .expect("every request must get an explicit reply, not a hang")
+            })
+        })
+        .collect();
+
+    // wait (via health) until the requests are demonstrably queued
+    let mut admin = Client::connect(&addr).expect("admin connect");
+    let t0 = std::time::Instant::now();
+    loop {
+        let health = admin.health().expect("health");
+        let depth = health
+            .get("models")
+            .and_then(|ms| ms.get("victim"))
+            .map(|h| h.req_f64("queue_depth").unwrap())
+            .unwrap_or(0.0);
+        if depth >= (N_REQS - 2) as f64 {
+            break; // one in flight, the rest pending
+        }
+        assert!(t0.elapsed() < std::time::Duration::from_secs(10), "requests never queued");
+        std::thread::sleep(std::time::Duration::from_millis(5));
+    }
+
+    // unload races the gate: retire() blocks joining the pinned worker
+    // until the gate opens, then must fail every queued request fast
+    let unloader = {
+        let addr = addr.clone();
+        std::thread::spawn(move || {
+            let mut admin2 = Client::connect(&addr).expect("unloader connect");
+            admin2.unload_model("victim").expect("unload")
+        })
+    };
+    std::thread::sleep(std::time::Duration::from_millis(150));
+    gate.store(true, Ordering::Relaxed);
+    unloader.join().expect("unloader thread").req_str("model").map(drop).expect("unload ok");
+
+    // exactly one explicit outcome per request: served (the in-flight
+    // one, plus any batch the worker grabbed before observing stop) or
+    // a typed "unloaded" error — and the retire path must produce at
+    // least one of the latter for the provably-queued requests
+    let mut served = 0usize;
+    let mut unloaded = 0usize;
+    for handle in clients {
+        let reply = handle.join().expect("client thread");
+        if reply.get("class").is_some() {
+            served += 1;
+        } else {
+            let code = reply.get("code").and_then(|c| c.as_str()).unwrap_or("").to_string();
+            assert_eq!(code, "unloaded", "unexpected reply {reply:?}");
+            unloaded += 1;
+        }
+    }
+    assert_eq!(served + unloaded, N_REQS);
+    assert!(unloaded >= 1, "retire must fail the queued requests explicitly");
+
+    // the model is gone; the server is otherwise healthy
+    let reply = admin
+        .classify_raw(Some("victim"), &input_row(0, 1), Some(1_000))
+        .expect("transport ok");
+    assert_eq!(reply.get("code").and_then(|c| c.as_str()), Some("unknown_model"));
+
+    admin.shutdown().expect("shutdown");
     server.join().unwrap().expect("server run");
 }
 

@@ -17,6 +17,16 @@
 #   make pool-bench run only the PoolExec dispatch-overhead comparison
 #                   (parked pool vs cold spawn/join) and collect
 #                   BENCH_pool_overhead.json.
+#   make serve-scale-bench  connection-scale sweep of the event-loop
+#                   front end (100/1k/10k concurrent connections ×
+#                   JSON vs binary framing) → BENCH_serve_scale.json.
+#                   HN_SERVE_SCALE_CONNS / HN_SERVE_SCALE_REQS shrink
+#                   it for CI smoke.
+#   make bench-diff compare freshly produced BENCH_*.json against the
+#                   committed baselines in benches/baselines/ with
+#                   per-metric tolerance bands (see
+#                   python/tools/bench_diff.py; non-blocking advisory
+#                   unless --strict).
 #   make smoke      tiny end-to-end train→bundle→serve→hot-load loop on
 #                   the native stack (no artifacts needed); also runs
 #                   as the last step of `make check`.
@@ -33,7 +43,7 @@
 RUST_DIR := rust
 PY_DIR   := python
 
-.PHONY: check bench serve-bench train-bench pool-bench artifacts pytest smoke soak clean-bench
+.PHONY: check bench serve-bench train-bench pool-bench serve-scale-bench bench-diff artifacts pytest smoke soak clean-bench
 
 # docs are load-bearing: rustdoc runs with -D warnings (broken intra-doc
 # links fail the build) and the doc-examples on ModelSpec / ModelBundle /
@@ -77,6 +87,16 @@ pool-bench:
 	cd $(RUST_DIR) && cargo bench --bench pool_overhead
 	@echo "== pool overhead report =="
 	@ls -l BENCH_pool_overhead.json 2>/dev/null || echo "no BENCH_pool_overhead.json produced"
+
+serve-scale-bench:
+	cd $(RUST_DIR) && cargo bench --bench serve_scale
+	@echo "== serve scale report =="
+	@ls -l BENCH_serve_scale.json 2>/dev/null || echo "no BENCH_serve_scale.json produced"
+
+# compare fresh BENCH_*.json against benches/baselines/ — advisory by
+# default (machines differ); BENCH_DIFF_FLAGS="--strict" gates on it
+bench-diff:
+	cd $(PY_DIR) && python -m tools.bench_diff --fresh .. --baselines ../benches/baselines $(BENCH_DIFF_FLAGS)
 
 artifacts:
 	cd $(PY_DIR) && python -m compile.aot --out-dir ../artifacts --set core

@@ -1,0 +1,374 @@
+//! Connection-scale bench for the event-loop front end: one load
+//! generator sweeps 100 / 1 000 / 10 000 concurrent connections, each
+//! cell measured twice — JSON lines vs the length-prefixed binary
+//! frame protocol — against one in-process server. Records p50/p99
+//! latency and throughput per (connections × protocol) cell into
+//! `BENCH_serve_scale.json`.
+//!
+//!     cargo bench --bench serve_scale      (or `make serve-scale-bench`)
+//!
+//! The generator is closed-loop (one in-flight request per
+//! connection) and single-threaded over the same readiness reactor the
+//! server uses, so both endpoints exercise the nonblocking path. Both
+//! endpoints live in one process: ~2 fds per connection, so the 10k
+//! cell needs a raised `RLIMIT_NOFILE`; the achieved limit is recorded
+//! and any clamped sweep is reported, never silently truncated.
+//!
+//! Env knobs (CI smoke uses small values):
+//!   HN_SERVE_SCALE_CONNS  comma list, default "100,1000,10000"
+//!   HN_SERVE_SCALE_REQS   total requests per cell,
+//!                         default max(2*conns, 2000) capped at 20000
+
+use hashednets::serve::frame::{self, FrameReply};
+use hashednets::serve::poll::{
+    raise_nofile_limit, set_nonblocking, Interest, Poller, PollerKind,
+};
+use hashednets::serve::{Backend, Client, ModelConfig, ServeOptions, Server};
+use hashednets::util::json::{num, obj, Json};
+use std::io::{ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::os::unix::io::AsRawFd;
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+const OUT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve_scale.json");
+const ARTIFACT: &str = "hashnet_3l_h100_o10_c1-8";
+const N_IN: usize = 784;
+/// Per-cell wall-clock budget; a cell that exceeds it is recorded as
+/// truncated (with however many requests completed) instead of hanging.
+const CELL_BUDGET: Duration = Duration::from_secs(180);
+
+/// Minimal manifest for the paper's 784-100-10 HashNet at 1/8
+/// compression — the native backend never touches the HLO files.
+fn synth_manifest_dir() -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("hn_serve_scale_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("create temp manifest dir");
+    let manifest = format!(
+        r#"{{
+  "n_in": 784,
+  "artifacts": [{{
+    "name": "{ARTIFACT}", "method": "hashnet",
+    "dims": [784, 100, 10], "budgets": [9812, 126], "batch": 32,
+    "seed_base": 2654435769, "uses_soft_targets": false,
+    "compression": 0.125, "virtual_params": 79510, "stored_params": 9938,
+    "params": [
+      {{"name": "w0", "shape": [9812], "init_std": 0.0504}},
+      {{"name": "w1", "shape": [126], "init_std": 0.1405}}
+    ],
+    "graphs": {{"train": "absent.train.hlo.txt", "predict": "absent.predict.hlo.txt"}}
+  }}]
+}}"#
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).expect("write manifest");
+    dir
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum Wire {
+    Json,
+    Binary,
+}
+
+impl Wire {
+    fn name(self) -> &'static str {
+        match self {
+            Wire::Json => "json",
+            Wire::Binary => "binary",
+        }
+    }
+}
+
+/// One load-generator connection: closed loop, one in-flight request.
+struct LoadConn {
+    stream: TcpStream,
+    inbuf: Vec<u8>,
+    outbuf: Vec<u8>,
+    outpos: usize,
+    sent_at: Instant,
+    done: bool,
+}
+
+struct CellResult {
+    connections: usize,
+    completed: usize,
+    errors: usize,
+    wall_s: f64,
+    p50_us: f64,
+    p99_us: f64,
+    truncated: bool,
+}
+
+/// Run one (connections × protocol) cell against `addr`.
+fn run_cell(addr: &str, wire: Wire, conns: usize, total_reqs: usize, pixels: &[f32]) -> CellResult {
+    let json_line = {
+        let arr: Vec<String> = pixels.iter().map(|p| format!("{p}")).collect();
+        format!("{{\"pixels\": [{}]}}\n", arr.join(", "))
+    };
+    let mut frame_buf = Vec::new();
+    frame::encode_request(&mut frame_buf, 1, "", 0, pixels);
+
+    let mut poller = Poller::new(PollerKind::Auto).expect("client poller");
+    let mut slots: Vec<LoadConn> = Vec::with_capacity(conns);
+    for i in 0..conns {
+        let stream = TcpStream::connect(addr).unwrap_or_else(|e| {
+            panic!("connect #{i}/{conns}: {e} (raise the fd limit?)")
+        });
+        stream.set_nodelay(true).ok();
+        set_nonblocking(&stream).expect("nonblocking");
+        poller.register(stream.as_raw_fd(), i, Interest::READ).expect("register");
+        slots.push(LoadConn {
+            stream,
+            inbuf: Vec::new(),
+            outbuf: Vec::new(),
+            outpos: 0,
+            sent_at: Instant::now(),
+            done: false,
+        });
+    }
+
+    let payload: &[u8] = match wire {
+        Wire::Json => json_line.as_bytes(),
+        Wire::Binary => &frame_buf,
+    };
+    let mut remaining_sends = total_reqs.saturating_sub(conns);
+    let mut completed = 0usize;
+    let mut errors = 0usize;
+    let mut latencies_us: Vec<f64> = Vec::with_capacity(total_reqs);
+    let t0 = Instant::now();
+
+    // prime every connection with its first request
+    for c in slots.iter_mut() {
+        c.outbuf.extend_from_slice(payload);
+        c.sent_at = Instant::now();
+    }
+    let mut events = Vec::new();
+    let mut truncated = false;
+    while completed + errors < total_reqs {
+        if t0.elapsed() > CELL_BUDGET {
+            truncated = true;
+            break;
+        }
+        if slots.iter().all(|c| c.done) {
+            // dead connections took their unsent requests with them
+            truncated = true;
+            break;
+        }
+        // writes first: nonblocking, loopback buffers almost never fill
+        for (i, c) in slots.iter_mut().enumerate() {
+            if c.done || c.outpos >= c.outbuf.len() {
+                continue;
+            }
+            loop {
+                match c.stream.write(&c.outbuf[c.outpos..]) {
+                    Ok(0) => {
+                        c.done = true;
+                        errors += 1;
+                        break;
+                    }
+                    Ok(n) => {
+                        c.outpos += n;
+                        if c.outpos >= c.outbuf.len() {
+                            c.outbuf.clear();
+                            c.outpos = 0;
+                            break;
+                        }
+                    }
+                    Err(ref e) if e.kind() == ErrorKind::WouldBlock => {
+                        let _ = poller.modify(c.stream.as_raw_fd(), i, Interest::BOTH);
+                        break;
+                    }
+                    Err(ref e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        c.done = true;
+                        errors += 1;
+                        break;
+                    }
+                }
+            }
+        }
+        poller.wait(&mut events, Some(Duration::from_millis(100))).expect("wait");
+        for ev in events.iter().copied() {
+            let c = &mut slots[ev.token];
+            if c.done {
+                continue;
+            }
+            if ev.writable {
+                let _ = poller.modify(c.stream.as_raw_fd(), ev.token, Interest::READ);
+            }
+            if !ev.readable {
+                continue;
+            }
+            let mut chunk = [0u8; 8192];
+            loop {
+                match c.stream.read(&mut chunk) {
+                    Ok(0) => {
+                        c.done = true;
+                        errors += 1;
+                        break;
+                    }
+                    Ok(n) => {
+                        c.inbuf.extend_from_slice(&chunk[..n]);
+                        if n < chunk.len() {
+                            break;
+                        }
+                    }
+                    Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+                    Err(ref e) if e.kind() == ErrorKind::Interrupted => continue,
+                    Err(_) => {
+                        c.done = true;
+                        errors += 1;
+                        break;
+                    }
+                }
+            }
+            // one reply completes one closed-loop request
+            loop {
+                let consumed = match wire {
+                    Wire::Json => c
+                        .inbuf
+                        .iter()
+                        .position(|&b| b == b'\n')
+                        .map(|pos| {
+                            (pos + 1, c.inbuf[..pos].windows(7).any(|w| w == b"\"class\""))
+                        }),
+                    Wire::Binary => frame::decode_reply(&c.inbuf)
+                        .expect("reply frame")
+                        .map(|(reply, used)| (used, matches!(reply, FrameReply::Ok { .. }))),
+                };
+                let Some((used, ok)) = consumed else { break };
+                c.inbuf.drain(..used);
+                if ok {
+                    latencies_us.push(c.sent_at.elapsed().as_secs_f64() * 1e6);
+                    completed += 1;
+                } else {
+                    errors += 1;
+                }
+                if remaining_sends > 0 && !c.done {
+                    remaining_sends -= 1;
+                    c.outbuf.extend_from_slice(payload);
+                    c.sent_at = Instant::now();
+                } else {
+                    c.done = true;
+                }
+            }
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    for c in slots.iter() {
+        let _ = poller.deregister(c.stream.as_raw_fd());
+    }
+    drop(slots);
+
+    latencies_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| -> f64 {
+        if latencies_us.is_empty() {
+            return 0.0;
+        }
+        let idx = ((latencies_us.len() as f64 * p) as usize).min(latencies_us.len() - 1);
+        latencies_us[idx]
+    };
+    CellResult {
+        connections: conns,
+        completed,
+        errors,
+        wall_s,
+        p50_us: pct(0.50),
+        p99_us: pct(0.99),
+        truncated,
+    }
+}
+
+fn env_usize_list(key: &str, default: &[usize]) -> Vec<usize> {
+    match std::env::var(key) {
+        Ok(v) => v
+            .split(',')
+            .filter_map(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n > 0)
+            .collect(),
+        Err(_) => default.to_vec(),
+    }
+}
+
+fn main() {
+    let requested = env_usize_list("HN_SERVE_SCALE_CONNS", &[100, 1000, 10_000]);
+    let max_conns = requested.iter().copied().max().unwrap_or(100);
+    // both endpoints in this process: ~2 fds per connection + headroom
+    let want = (2 * max_conns as u64) + 256;
+    let achieved = raise_nofile_limit(want);
+    println!("== serve_scale (nofile limit: {achieved}, want {want}) ==");
+
+    let dir = synth_manifest_dir();
+    let srv = Server::bind(ServeOptions {
+        artifacts_dir: dir.clone(),
+        models: vec![ModelConfig::new(ARTIFACT)],
+        addr: "127.0.0.1:0".into(),
+        backend: Backend::Native,
+        workers: 4,
+        max_wait: Duration::from_micros(500),
+        // admission sized for the sweep: this bench measures front-end
+        // wire cost, not overload rejection (serve_chaos covers that)
+        max_pending: (2 * max_conns).max(1024),
+        ..Default::default()
+    })
+    .expect("bind server");
+    let addr = srv.local_addr().to_string();
+    let server = std::thread::spawn(move || srv.run());
+
+    let pixels: Vec<f32> = (0..N_IN).map(|i| (i % 255) as f32 / 255.0).collect();
+    let mut cells: Vec<Json> = Vec::new();
+    for &req_conns in &requested {
+        // never silently clamp: derate to the fd limit and say so
+        let fd_cap = ((achieved.saturating_sub(64)) / 2) as usize;
+        let conns = req_conns.min(fd_cap);
+        if conns < req_conns {
+            println!("!! {req_conns} connections derated to {conns} (fd limit {achieved})");
+        }
+        let total_reqs = std::env::var("HN_SERVE_SCALE_REQS")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or_else(|| (2 * conns).clamp(2000, 20_000))
+            .max(conns);
+        for wire in [Wire::Json, Wire::Binary] {
+            let r = run_cell(&addr, wire, conns, total_reqs, &pixels);
+            let rps = if r.wall_s > 0.0 { r.completed as f64 / r.wall_s } else { 0.0 };
+            println!(
+                "{:<7} c{:<6} {:>8.0} req/s   p50 {:>8.0} µs   p99 {:>8.0} µs   ({} ok / {} err{})",
+                wire.name(),
+                r.connections,
+                rps,
+                r.p50_us,
+                r.p99_us,
+                r.completed,
+                r.errors,
+                if r.truncated { ", TRUNCATED" } else { "" },
+            );
+            cells.push(obj(vec![
+                ("name", Json::Str(format!("{} c{}", wire.name(), r.connections))),
+                ("protocol", Json::Str(wire.name().to_string())),
+                ("connections", num(r.connections as f64)),
+                ("requested_connections", num(req_conns as f64)),
+                ("requests", num(r.completed as f64)),
+                ("errors", num(r.errors as f64)),
+                ("wall_s", num(r.wall_s)),
+                ("p50_us", num(r.p50_us)),
+                ("p99_us", num(r.p99_us)),
+                ("throughput_rps", num(rps)),
+                ("truncated", Json::Bool(r.truncated)),
+            ]));
+        }
+    }
+
+    let mut c = Client::connect(&addr).expect("connect for shutdown");
+    c.shutdown().expect("shutdown");
+    server.join().unwrap().expect("server run");
+    std::fs::remove_dir_all(&dir).ok();
+
+    let doc = obj(vec![
+        ("bench", Json::Str("serve_scale".into())),
+        ("nofile_limit", num(achieved as f64)),
+        ("pixels_per_request", num(N_IN as f64)),
+        ("cases", Json::Arr(cells)),
+    ]);
+    std::fs::write(OUT, doc.to_string()).expect("write bench json");
+    println!("wrote {OUT}");
+}

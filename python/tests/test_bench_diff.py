@@ -1,0 +1,200 @@
+"""Unit tests for tools.bench_diff (`make bench-diff`).
+
+Covers both report schemas the repo produces (the util::bench flat
+array and the serve_scale object-with-cases), the tolerance-band
+direction logic (latency up = bad, throughput down = bad), advisory
+vs --strict exit codes, and graceful handling of missing baselines.
+"""
+
+import json
+
+import pytest
+
+from tools.bench_diff import Diff, load_cases, main, metric_kind
+
+
+def write_json(path, doc):
+    path.write_text(json.dumps(doc))
+
+
+def array_report(mean_ns, throughput):
+    return [
+        {
+            "name": "kernel_forward b50",
+            "iters": 100,
+            "mean_ns": mean_ns,
+            "stddev_ns": 10.0,
+            "p50_ns": mean_ns,
+            "p95_ns": mean_ns * 1.2,
+            "throughput": throughput,
+        }
+    ]
+
+
+def scale_report(p99_us, rps):
+    return {
+        "bench": "serve_scale",
+        "nofile_limit": 65536,
+        "pixels_per_request": 784,
+        "cases": [
+            {
+                "name": "binary c100",
+                "protocol": "binary",
+                "connections": 100,
+                "requests": 2000,
+                "errors": 0,
+                "p50_us": 500.0,
+                "p99_us": p99_us,
+                "throughput_rps": rps,
+                "truncated": False,
+            }
+        ],
+    }
+
+
+class TestMetricKind:
+    def test_latency_suffixes(self):
+        for key in ("mean_ns", "p50_ns", "p99_us", "wall_s", "stddev_ns"):
+            assert metric_kind(key) == "latency"
+
+    def test_throughput_markers(self):
+        for key in ("throughput", "throughput_rps", "rows_rps"):
+            assert metric_kind(key) == "throughput"
+
+    def test_everything_else_is_info(self):
+        for key in ("iters", "connections", "requests", "errors"):
+            assert metric_kind(key) == "info"
+
+
+class TestLoadCases:
+    def test_flat_array_schema(self, tmp_path):
+        p = tmp_path / "BENCH_kernel_forward.json"
+        write_json(p, array_report(1000.0, 5.0e4))
+        cases, meta = load_cases(str(p))
+        assert meta == {}
+        assert cases["kernel_forward b50"]["mean_ns"] == 1000.0
+        assert cases["kernel_forward b50"]["throughput"] == 5.0e4
+
+    def test_object_schema_with_cases(self, tmp_path):
+        p = tmp_path / "BENCH_serve_scale.json"
+        write_json(p, scale_report(2000.0, 8000.0))
+        cases, meta = load_cases(str(p))
+        # top-level numeric metadata captured; strings ("bench") are not
+        assert meta["pixels_per_request"] == 784
+        assert "bench" not in meta
+        c = cases["binary c100"]
+        assert c["p99_us"] == 2000.0
+        # booleans must not be coerced into metrics
+        assert "truncated" not in c
+
+    def test_non_json_container_rejected(self, tmp_path):
+        p = tmp_path / "BENCH_bad.json"
+        p.write_text('"just a string"')
+        with pytest.raises(ValueError):
+            load_cases(str(p))
+
+
+class TestToleranceDirections:
+    def test_within_band_is_not_a_regression(self):
+        d = Diff(tolerance=0.35)
+        d.compare_metric("a", "mean_ns", 1000.0, 1200.0)  # +20%
+        d.compare_metric("a", "throughput", 100.0, 80.0)  # -20%
+        assert d.regressions == []
+
+    def test_latency_increase_past_band_regresses(self):
+        d = Diff(tolerance=0.35)
+        d.compare_metric("a", "p99_us", 1000.0, 1500.0)  # +50%
+        assert len(d.regressions) == 1
+
+    def test_latency_improvement_never_regresses(self):
+        d = Diff(tolerance=0.35)
+        d.compare_metric("a", "p99_us", 1000.0, 100.0)  # -90%: good
+        assert d.regressions == []
+
+    def test_throughput_drop_past_band_regresses(self):
+        d = Diff(tolerance=0.35)
+        d.compare_metric("a", "throughput_rps", 1000.0, 500.0)  # -50%
+        assert len(d.regressions) == 1
+
+    def test_throughput_gain_never_regresses(self):
+        d = Diff(tolerance=0.35)
+        d.compare_metric("a", "throughput_rps", 1000.0, 9000.0)
+        assert d.regressions == []
+
+    def test_info_metrics_never_gate(self):
+        d = Diff(tolerance=0.35)
+        d.compare_metric("a", "iters", 100.0, 5.0)
+        d.compare_metric("a", "errors", 0.0, 50.0)
+        assert d.regressions == []
+
+    def test_zero_baseline_does_not_divide(self):
+        d = Diff(tolerance=0.35)
+        d.compare_metric("a", "p99_us", 0.0, 1000.0)
+        assert d.regressions == []
+
+
+class TestMainCli:
+    def run(self, fresh_dir, base_dir, *extra):
+        return main(
+            ["--fresh", str(fresh_dir), "--baselines", str(base_dir), *extra]
+        )
+
+    def test_no_fresh_reports_is_exit_zero(self, tmp_path, capsys):
+        fresh, base = tmp_path / "fresh", tmp_path / "base"
+        fresh.mkdir(), base.mkdir()
+        assert self.run(fresh, base) == 0
+        assert "no fresh BENCH_" in capsys.readouterr().out
+
+    def test_missing_baseline_is_skipped_not_failed(self, tmp_path, capsys):
+        fresh, base = tmp_path / "fresh", tmp_path / "base"
+        fresh.mkdir(), base.mkdir()
+        write_json(fresh / "BENCH_x.json", array_report(1000.0, 100.0))
+        assert self.run(fresh, base, "--strict") == 0
+        assert "no committed baseline" in capsys.readouterr().out
+
+    def test_matching_reports_pass_strict(self, tmp_path, capsys):
+        fresh, base = tmp_path / "fresh", tmp_path / "base"
+        fresh.mkdir(), base.mkdir()
+        write_json(base / "BENCH_x.json", array_report(1000.0, 100.0))
+        write_json(fresh / "BENCH_x.json", array_report(1100.0, 95.0))
+        assert self.run(fresh, base, "--strict") == 0
+        assert "0 regression(s)" in capsys.readouterr().out
+
+    def test_regression_is_advisory_without_strict(self, tmp_path, capsys):
+        fresh, base = tmp_path / "fresh", tmp_path / "base"
+        fresh.mkdir(), base.mkdir()
+        write_json(base / "BENCH_x.json", array_report(1000.0, 100.0))
+        write_json(fresh / "BENCH_x.json", array_report(5000.0, 100.0))
+        assert self.run(fresh, base) == 0
+        assert "REGRESSION" in capsys.readouterr().out
+
+    def test_regression_fails_under_strict(self, tmp_path):
+        fresh, base = tmp_path / "fresh", tmp_path / "base"
+        fresh.mkdir(), base.mkdir()
+        write_json(base / "BENCH_x.json", array_report(1000.0, 100.0))
+        write_json(fresh / "BENCH_x.json", array_report(5000.0, 100.0))
+        assert self.run(fresh, base, "--strict") == 1
+
+    def test_serve_scale_schema_end_to_end(self, tmp_path):
+        fresh, base = tmp_path / "fresh", tmp_path / "base"
+        fresh.mkdir(), base.mkdir()
+        write_json(base / "BENCH_serve_scale.json", scale_report(2000.0, 8000.0))
+        # p99 doubles AND throughput halves — both directions flagged
+        write_json(fresh / "BENCH_serve_scale.json", scale_report(4000.0, 4000.0))
+        assert self.run(fresh, base, "--strict") == 1
+
+    def test_unreadable_fresh_report_is_skipped(self, tmp_path, capsys):
+        fresh, base = tmp_path / "fresh", tmp_path / "base"
+        fresh.mkdir(), base.mkdir()
+        write_json(base / "BENCH_x.json", array_report(1000.0, 100.0))
+        (fresh / "BENCH_x.json").write_text("{not json")
+        assert self.run(fresh, base, "--strict") == 0
+        assert "skipped" in capsys.readouterr().out
+
+    def test_wider_tolerance_absorbs_regression(self, tmp_path):
+        fresh, base = tmp_path / "fresh", tmp_path / "base"
+        fresh.mkdir(), base.mkdir()
+        write_json(base / "BENCH_x.json", array_report(1000.0, 100.0))
+        write_json(fresh / "BENCH_x.json", array_report(1500.0, 100.0))
+        assert self.run(fresh, base, "--strict") == 1
+        assert self.run(fresh, base, "--strict", "--tolerance", "0.6") == 0

@@ -1,0 +1,6 @@
+"""Repo tooling that is neither the compile path nor the test suite.
+
+Currently: ``bench_diff`` — compare fresh ``BENCH_*.json`` bench
+reports against the committed baselines in ``benches/baselines/`` with
+per-metric tolerance bands (``make bench-diff``).
+"""

@@ -1,0 +1,208 @@
+"""Compare fresh ``BENCH_*.json`` bench reports against committed
+baselines with per-metric tolerance bands (ROADMAP item: track the
+perf trajectory across PRs instead of eyeballing JSON).
+
+Usage (normally via ``make bench-diff``)::
+
+    python -m tools.bench_diff --fresh <repo-root> --baselines benches/baselines
+    python -m tools.bench_diff ... --strict          # exit 1 on regression
+    python -m tools.bench_diff ... --tolerance 0.5   # override the band
+
+Two report schemas exist in this repo and both are handled:
+
+* the ``util::bench`` array schema — a JSON array of cases, each with
+  ``name`` plus numeric metrics (``mean_ns``/``p50_ns``/…/``throughput``);
+* the ``serve_scale`` object schema — a top-level object whose
+  ``cases`` array carries ``name`` + numeric metrics, plus top-level
+  numeric metadata (which is compared too, at an exact-match band of
+  "informational only").
+
+Cases are matched by their ``name`` field; metrics are compared
+relatively: latency-like metrics (``*_ns``/``*_us``/``*_ms``/``*_s``,
+``mean``/``p50``/``p95``/``p99``) regress when the fresh value is
+*higher* than baseline × (1 + tol); throughput-like metrics
+(``throughput*``, ``*_rps``) regress when the fresh value is *lower*
+than baseline × (1 - tol). Everything else (iters, counts, flags) is
+reported when it drifts but never gates.
+
+Benches are inherently machine-relative, so the default band is wide
+(35 %) and the exit code is 0 unless ``--strict`` is passed. A fresh
+report with no committed baseline (or vice versa) is reported and
+skipped — never an error — so the tool works before any baseline has
+been recorded.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+DEFAULT_TOLERANCE = 0.35
+
+#: metric-name suffixes treated as "lower is better"
+_LATENCY_KEYS = ("_ns", "_us", "_ms", "_s")
+_LATENCY_NAMES = ("mean", "p50", "p95", "p99", "stddev", "wall")
+#: metric-name markers treated as "higher is better"
+_THROUGHPUT_MARKERS = ("throughput", "_rps", "req_s")
+
+
+def metric_kind(key: str) -> str:
+    """Classify a metric name: 'latency', 'throughput', or 'info'."""
+    k = key.lower()
+    if any(m in k for m in _THROUGHPUT_MARKERS):
+        return "throughput"
+    if k.endswith(_LATENCY_KEYS) or any(k.startswith(n) for n in _LATENCY_NAMES):
+        return "latency"
+    return "info"
+
+
+def load_cases(path: str):
+    """Load one report as ``(cases, meta)``.
+
+    ``cases`` maps case name → {metric: number}; ``meta`` holds
+    top-level numeric fields of object-schema reports.
+    """
+    with open(path) as f:
+        doc = json.load(f)
+    if isinstance(doc, list):
+        raw_cases, meta = doc, {}
+    elif isinstance(doc, dict):
+        raw_cases = doc.get("cases", [])
+        meta = {
+            k: v
+            for k, v in doc.items()
+            if isinstance(v, (int, float)) and not isinstance(v, bool)
+        }
+    else:
+        raise ValueError(f"{path}: expected a JSON array or object")
+    cases = {}
+    for i, case in enumerate(raw_cases):
+        if not isinstance(case, dict):
+            continue
+        name = str(case.get("name", f"case[{i}]"))
+        cases[name] = {
+            k: float(v)
+            for k, v in case.items()
+            if isinstance(v, (int, float)) and not isinstance(v, bool)
+        }
+    return cases, meta
+
+
+class Diff:
+    """Accumulates comparisons; knows whether anything regressed."""
+
+    def __init__(self, tolerance: float):
+        self.tolerance = tolerance
+        self.lines: list[str] = []
+        self.regressions: list[str] = []
+
+    def compare_metric(self, ctx: str, key: str, base: float, fresh: float) -> None:
+        kind = metric_kind(key)
+        if base == 0.0:
+            # can't form a ratio; report drift only
+            if fresh != base:
+                self.lines.append(f"  ~ {ctx}.{key}: {base:g} -> {fresh:g} (no ratio)")
+            return
+        rel = (fresh - base) / abs(base)
+        marker, regressed = "  ", False
+        if kind == "latency" and rel > self.tolerance:
+            marker, regressed = "✗ ", True
+        elif kind == "throughput" and rel < -self.tolerance:
+            marker, regressed = "✗ ", True
+        elif kind != "info" and abs(rel) > self.tolerance:
+            marker = "✓ "  # outside the band in the *good* direction
+        if marker != "  " or kind == "info" and abs(rel) > self.tolerance:
+            self.lines.append(
+                f"  {marker}{ctx}.{key}: {base:g} -> {fresh:g} ({rel:+.1%})"
+            )
+        if regressed:
+            self.regressions.append(f"{ctx}.{key}: {base:g} -> {fresh:g} ({rel:+.1%})")
+
+    def compare_report(self, name: str, base_path: str, fresh_path: str) -> None:
+        base_cases, base_meta = load_cases(base_path)
+        fresh_cases, fresh_meta = load_cases(fresh_path)
+        self.lines.append(f"{name}:")
+        for key in sorted(set(base_meta) & set(fresh_meta)):
+            self.compare_metric(name, key, base_meta[key], fresh_meta[key])
+        for case in sorted(set(base_cases) | set(fresh_cases)):
+            if case not in fresh_cases:
+                self.lines.append(f"  ~ {name}[{case}]: in baseline only (case removed?)")
+                continue
+            if case not in base_cases:
+                self.lines.append(f"  ~ {name}[{case}]: new case (no baseline)")
+                continue
+            b, f = base_cases[case], fresh_cases[case]
+            for key in sorted(set(b) & set(f)):
+                self.compare_metric(f"{name}[{case}]", key, b[key], f[key])
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="bench_diff",
+        description="diff fresh BENCH_*.json against committed baselines",
+    )
+    ap.add_argument("--fresh", default=".", help="directory holding fresh BENCH_*.json")
+    ap.add_argument(
+        "--baselines",
+        default="benches/baselines",
+        help="directory holding committed baseline BENCH_*.json",
+    )
+    ap.add_argument(
+        "--tolerance",
+        type=float,
+        default=DEFAULT_TOLERANCE,
+        help=f"relative tolerance band (default {DEFAULT_TOLERANCE})",
+    )
+    ap.add_argument(
+        "--strict",
+        action="store_true",
+        help="exit 1 when any metric regresses past the band",
+    )
+    args = ap.parse_args(argv)
+
+    fresh = {
+        os.path.basename(p): p
+        for p in glob.glob(os.path.join(args.fresh, "BENCH_*.json"))
+    }
+    base = {
+        os.path.basename(p): p
+        for p in glob.glob(os.path.join(args.baselines, "BENCH_*.json"))
+    }
+
+    if not fresh:
+        print(f"no fresh BENCH_*.json under {args.fresh} — run `make bench` first")
+        return 0
+    diff = Diff(args.tolerance)
+    compared = 0
+    for name in sorted(set(fresh) | set(base)):
+        if name not in base:
+            print(f"{name}: fresh report has no committed baseline (skipped) — "
+                  f"record one under {args.baselines}/ to start tracking it")
+            continue
+        if name not in fresh:
+            print(f"{name}: baseline exists but no fresh report produced (skipped)")
+            continue
+        try:
+            diff.compare_report(name, base[name], fresh[name])
+            compared += 1
+        except (ValueError, json.JSONDecodeError) as e:
+            print(f"{name}: unreadable ({e}); skipped")
+
+    for line in diff.lines:
+        print(line)
+    print(
+        f"compared {compared} report(s) at ±{args.tolerance:.0%}: "
+        f"{len(diff.regressions)} regression(s)"
+    )
+    for r in diff.regressions:
+        print(f"  REGRESSION {r}")
+    if diff.regressions and args.strict:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -38,7 +38,7 @@ use hashednets::data::{generate, Kind, Split};
 use hashednets::model::{Method, ModelBundle, ModelSpec, BUNDLE_VERSION};
 use hashednets::nn::{Network, TrainOptions};
 use hashednets::runtime::{Graph, Hyper, Manifest, ModelState, Runtime};
-use hashednets::serve::{serve, Backend, Client, ModelConfig, ServeOptions, Server};
+use hashednets::serve::{serve, Backend, Client, ModelConfig, PollerKind, ServeOptions, Server};
 use hashednets::util::args::Args;
 use std::path::{Path, PathBuf};
 
@@ -60,7 +60,7 @@ const KNOWN_HPO: &[&str] = &[
 ];
 const KNOWN_SERVE: &[&str] = &[
     "config", "bundle", "checkpoint", "artifacts", "addr", "backend", "workers",
-    "max-wait-us", "max-requests", "max-pending", "timeout-ms", "strict",
+    "max-wait-us", "max-requests", "max-pending", "timeout-ms", "poller", "strict",
 ];
 const KNOWN_COMPRESS: &[&str] =
     &["from", "to", "checkpoint", "artifacts", "save", "bundle", "budgets", "name", "strict"];
@@ -427,6 +427,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let backend_name = args.get_or("backend", "auto");
     let backend = Backend::parse(backend_name)
         .ok_or_else(|| anyhow!("--backend must be native|runtime|auto, got '{backend_name}'"))?;
+    let poller = PollerKind::parse(args.get_or("poller", "auto"))?;
     serve(ServeOptions {
         artifacts_dir: artifacts_dir(args),
         models,
@@ -437,6 +438,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         max_requests: args.get_u64("max-requests", 0),
         max_pending: args.get_usize("max-pending", 256),
         default_timeout: std::time::Duration::from_millis(args.get_u64("timeout-ms", 10_000).max(1)),
+        poller,
     })
 }
 

@@ -45,15 +45,49 @@ use std::time::{Duration, Instant};
 /// [`DynamicBatcher::bounded`] to pick one explicitly.
 pub const DEFAULT_MAX_PENDING: usize = 1024;
 
-/// One inference request: input row + reply channel + the absolute
+/// One inference request: input row + reply sink + the absolute
 /// point in time after which the client stops waiting.
 pub struct Request {
     pub pixels: Vec<f32>,
-    pub reply: mpsc::Sender<Response>,
+    pub reply: ReplySender,
     /// Requests whose deadline has passed are expired with an explicit
     /// [`ServeError::DeadlineExceeded`] at batch-formation/dispatch
     /// time instead of running the model.
     pub deadline: Instant,
+}
+
+/// Where a [`Response`] goes. Blocking callers (tests, benches, the
+/// thread-per-request paths) receive on an mpsc channel; the event-loop
+/// front end registers a completion hook that enqueues the reply on the
+/// reactor's completion queue and wakes it. Either way the explicit-
+/// reply invariant is the same: `send` consumes the sender, so each
+/// request gets exactly one reply.
+pub enum ReplySender {
+    Channel(mpsc::Sender<Response>),
+    /// Invoked exactly once — possibly inline on the submitting thread
+    /// when admission control rejects the request, so hooks must be
+    /// cheap and non-blocking.
+    Hook(Box<dyn FnOnce(Response) + Send>),
+}
+
+impl ReplySender {
+    /// Wrap a completion hook (see [`ReplySender::Hook`]).
+    pub fn hook(f: impl FnOnce(Response) + Send + 'static) -> ReplySender {
+        ReplySender::Hook(Box::new(f))
+    }
+
+    /// Deliver the reply. Returns the response back when the channel's
+    /// receiver is gone (the client stopped waiting) — callers uniformly
+    /// ignore that, matching mpsc semantics.
+    pub fn send(self, resp: Response) -> Result<(), Response> {
+        match self {
+            ReplySender::Channel(tx) => tx.send(resp).map_err(|e| e.0),
+            ReplySender::Hook(f) => {
+                f(resp);
+                Ok(())
+            }
+        }
+    }
 }
 
 /// Why a request could not be served. Each variant maps to a stable
@@ -483,27 +517,39 @@ impl BatcherHandle {
     /// never stranded.
     pub fn submit_by(&self, pixels: Vec<f32>, deadline: Instant) -> mpsc::Receiver<Response> {
         let (tx, rx) = mpsc::channel();
+        self.submit_with(pixels, deadline, ReplySender::Channel(tx));
+        rx
+    }
+
+    /// [`BatcherHandle::submit_by`] with an explicit reply sink — the
+    /// event-loop front end passes a [`ReplySender::Hook`] here so a
+    /// worker's reply lands on the reactor's completion queue instead
+    /// of an mpsc channel. Admission control is identical: a closed or
+    /// full queue answers through `reply` immediately (inline, on the
+    /// calling thread).
+    pub fn submit_with(&self, pixels: Vec<f32>, deadline: Instant, reply: ReplySender) {
         {
             let mut q = self.shared.queue.lock().unwrap();
             if self.shared.closed.load(Ordering::Relaxed) {
-                let _ = tx.send(Response::failed(
+                drop(q);
+                let _ = reply.send(Response::failed(
                     ServeError::Unloaded("model unloaded".into()),
                     0,
                 ));
-                return rx;
+                return;
             }
             if q.len() >= self.shared.max_pending {
                 self.shared.rejected.fetch_add(1, Ordering::Relaxed);
-                let _ = tx.send(Response::failed(
+                drop(q);
+                let _ = reply.send(Response::failed(
                     ServeError::Overloaded { retry_after_ms: self.shared.retry_after_ms },
                     0,
                 ));
-                return rx;
+                return;
             }
-            q.push((Request { pixels, reply: tx, deadline }, Instant::now()));
+            q.push((Request { pixels, reply, deadline }, Instant::now()));
         }
         self.shared.arrived.notify_one();
-        rx
     }
 }
 

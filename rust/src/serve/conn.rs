@@ -1,0 +1,888 @@
+//! Event-loop connection layer: per-connection state machines driven by
+//! a readiness reactor ([`super::poll`]), replacing the old
+//! thread-per-connection front end.
+//!
+//! One thread owns every connection. The flow per request:
+//!
+//! 1. a readable socket is drained into the connection's input buffer;
+//! 2. messages are parsed — the first byte picks the protocol
+//!    ([`frame::MAGIC`] → binary frame, anything else → JSON line);
+//! 3. classify requests are validated and submitted to the owning
+//!    model's **existing** bounded [`DynamicBatcher`] admission path
+//!    ([`BatcherHandle::submit_with`]) with a [`ReplySender::Hook`] that
+//!    enqueues the worker's reply on the reactor's completion queue and
+//!    wakes the loop — so admission control, deadlines and panic
+//!    containment from the resilience layer carry over unchanged;
+//! 4. completions are matched back to their connection by
+//!    `(token, generation, sequence)` — a reply for a connection that
+//!    died (or a slot that was reused) is dropped, never misdelivered;
+//! 5. replies are serialized **in request order** per connection
+//!    (pipelined clients see FIFO semantics, like the old sequential
+//!    loop) and flushed; a full socket registers write interest and
+//!    resumes on writability.
+//!
+//! Cheap admin commands (`stats`/`health`/`models`/`shutdown`) run
+//! inline on the loop; mutating ones (`load`/`unload`/`reload`) run on
+//! a short-lived thread so engine builds and worker joins never stall
+//! live traffic, completing through the same queue.
+//!
+//! A lost reply is bounded by a per-request backstop timer
+//! (deadline + 250 ms grace, a timer heap instead of the old blocking
+//! `recv_timeout`), answering with the same `"timeout"` code.
+//!
+//! [`DynamicBatcher`]: super::batcher::DynamicBatcher
+//! [`BatcherHandle::submit_with`]: super::batcher::BatcherHandle::submit_with
+//! [`ReplySender::Hook`]: super::batcher::ReplySender::Hook
+
+use super::batcher::{ReplySender, Response, ServeError};
+use super::frame;
+use super::poll::{Event, Interest, Poller, PollerKind, WakeHandle, Waker};
+use super::server::{
+    cmd_load, cmd_reload, cmd_unload, error_reply, health_json, models_json, print_model_summary,
+    retire, stats_json, ModelHandle, ServeCtx,
+};
+use crate::util::json::{num, obj, Json};
+use anyhow::Result;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::Ordering;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+const TOKEN_LISTENER: usize = usize::MAX;
+const TOKEN_WAKER: usize = usize::MAX - 1;
+/// Idle poll tick: bounds how stale a stop-flag / `max_requests` check
+/// can get (the old accept loop polled at a similar cadence).
+const TICK: Duration = Duration::from_millis(250);
+/// Grace past a request's deadline before the lost-reply backstop
+/// fires — matches the old `recv_timeout(timeout + 250ms)`.
+const REPLY_GRACE: Duration = Duration::from_millis(250);
+/// Cap on bytes buffered while waiting for one message to complete.
+const MAX_MSG: usize = 16 << 20;
+/// Per-connection cap on in-flight requests; parsing (and, via
+/// level-triggered readiness, reading) pauses until completions drain.
+const MAX_INFLIGHT: usize = 1024;
+/// Bound on the shutdown drain (completions normally arrive in
+/// milliseconds once every model is retired).
+const SHUTDOWN_DRAIN: Duration = Duration::from_secs(5);
+
+/// Backstop timer entries: (due, token, generation, sequence).
+type Timers = BinaryHeap<Reverse<(Instant, usize, u64, u64)>>;
+
+/// Wire protocol of one pending request.
+enum Proto {
+    Json,
+    Binary { req_id: u32 },
+}
+
+/// What a completed request serializes to.
+enum Outcome {
+    /// A classify result (success or typed [`ServeError`]).
+    Resp(Response),
+    /// A ready JSON object (admin results, parse errors).
+    Reply(Json),
+    /// Binary-protocol inline errors whose codes have no [`ServeError`]
+    /// variant (`unknown_model`, `bad_frame`).
+    BinErr { code: u8, message: String },
+}
+
+/// One in-flight request on a connection, in FIFO (request) order.
+struct Pending {
+    seq: u64,
+    proto: Proto,
+    /// Set for batcher-routed requests and counted inline errors; drives
+    /// the per-model served/errors accounting at completion time.
+    handle: Option<Arc<ModelHandle>>,
+    model_name: String,
+    /// `None` until the batcher/admin completion (or backstop) lands.
+    outcome: Option<Outcome>,
+}
+
+/// A completion crossing from a worker/admin thread to the reactor.
+enum DonePayload {
+    Resp(Response),
+    Reply(Json),
+}
+
+struct Done {
+    token: usize,
+    gen: u64,
+    seq: u64,
+    payload: DonePayload,
+}
+
+/// Reactor-wide context threaded through the connection handlers.
+struct Shared<'a> {
+    ctx: &'a Arc<ServeCtx>,
+    done_tx: &'a mpsc::Sender<Done>,
+    wake: &'a WakeHandle,
+    timers: &'a mut Timers,
+}
+
+struct Conn {
+    stream: TcpStream,
+    token: usize,
+    gen: u64,
+    inbuf: Vec<u8>,
+    outbuf: Vec<u8>,
+    outpos: usize,
+    pending: VecDeque<Pending>,
+    next_seq: u64,
+    /// Peer EOF, transport error, or an unrecoverable frame error: no
+    /// more reads; queued replies still flush, then the slot is freed.
+    closing: bool,
+    registered_write: bool,
+    /// Set once a closing connection is removed from the poller — a
+    /// closed socket is permanently "readable" under level-triggered
+    /// readiness, so leaving it registered would spin the loop while
+    /// its in-flight requests drain.
+    deregistered: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, token: usize, gen: u64) -> Conn {
+        Conn {
+            stream,
+            token,
+            gen,
+            inbuf: Vec::new(),
+            outbuf: Vec::new(),
+            outpos: 0,
+            pending: VecDeque::new(),
+            next_seq: 0,
+            closing: false,
+            registered_write: false,
+            deregistered: false,
+        }
+    }
+
+    fn alloc_seq(&mut self) -> u64 {
+        let s = self.next_seq;
+        self.next_seq += 1;
+        s
+    }
+
+    /// Queue an already-decided reply (inline validation errors, admin
+    /// results computed on the loop), applying counter accounting.
+    fn push_inline(
+        &mut self,
+        ctx: &ServeCtx,
+        proto: Proto,
+        handle: Option<Arc<ModelHandle>>,
+        model_name: String,
+        outcome: Outcome,
+    ) {
+        account(ctx, handle.as_deref(), &outcome);
+        let seq = self.alloc_seq();
+        self.pending.push_back(Pending { seq, proto, handle, model_name, outcome: Some(outcome) });
+    }
+
+    /// Drain the socket and parse/submit what arrived. Honors the
+    /// in-flight cap: with `MAX_INFLIGHT` outstanding requests the read
+    /// loop pauses, and level-triggered readiness resumes it once
+    /// completions drain the queue.
+    fn handle_readable(&mut self, sh: &mut Shared<'_>) {
+        if self.closing {
+            return;
+        }
+        let mut chunk = [0u8; 16384];
+        loop {
+            if self.pending.len() >= MAX_INFLIGHT || self.inbuf.len() > MAX_MSG {
+                break;
+            }
+            match self.stream.read(&mut chunk) {
+                Ok(0) => {
+                    self.closing = true;
+                    break;
+                }
+                Ok(n) => {
+                    self.inbuf.extend_from_slice(&chunk[..n]);
+                    self.parse_available(sh);
+                }
+                Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    self.closing = true;
+                    break;
+                }
+            }
+        }
+        self.parse_available(sh);
+    }
+
+    /// Parse complete messages off the input buffer, protocol-detected
+    /// per message from its first byte.
+    fn parse_available(&mut self, sh: &mut Shared<'_>) {
+        loop {
+            if self.closing || self.inbuf.is_empty() || self.pending.len() >= MAX_INFLIGHT {
+                return;
+            }
+            if frame::is_binary(self.inbuf[0]) {
+                match frame::decode_request(&self.inbuf) {
+                    Ok(Some((req, used))) => {
+                        self.inbuf.drain(..used);
+                        self.dispatch_binary(sh, req);
+                    }
+                    Ok(None) => {
+                        if self.inbuf.len() > MAX_MSG {
+                            self.fail_frame(sh, "bad frame: exceeds the message size cap");
+                        }
+                        return;
+                    }
+                    Err(e) => {
+                        self.fail_frame(sh, &e.to_string());
+                        return;
+                    }
+                }
+            } else {
+                let Some(pos) = self.inbuf.iter().position(|&b| b == b'\n') else {
+                    if self.inbuf.len() > MAX_MSG {
+                        self.push_inline(
+                            sh.ctx,
+                            Proto::Json,
+                            None,
+                            String::new(),
+                            Outcome::Reply(obj(vec![(
+                                "error",
+                                Json::Str("line exceeds the message size cap".into()),
+                            )])),
+                        );
+                        self.closing = true;
+                    }
+                    return;
+                };
+                let line: Vec<u8> = self.inbuf.drain(..=pos).collect();
+                let line = trim_ascii(&line[..line.len() - 1]);
+                if line.is_empty() {
+                    continue;
+                }
+                match Json::parse_bytes(line) {
+                    Ok(req) => self.dispatch_json(sh, req),
+                    Err(e) => self.push_inline(
+                        sh.ctx,
+                        Proto::Json,
+                        None,
+                        String::new(),
+                        Outcome::Reply(obj(vec![(
+                            "error",
+                            Json::Str(format!("bad json: {e}")),
+                        )])),
+                    ),
+                }
+            }
+        }
+    }
+
+    /// A malformed binary frame: the stream cannot be resynced, so
+    /// answer with an `ERR_BAD_FRAME` frame and close after flushing.
+    fn fail_frame(&mut self, sh: &mut Shared<'_>, msg: &str) {
+        self.push_inline(
+            sh.ctx,
+            Proto::Binary { req_id: 0 },
+            None,
+            String::new(),
+            Outcome::BinErr { code: frame::ERR_BAD_FRAME, message: msg.to_string() },
+        );
+        self.closing = true;
+    }
+
+    /// One parsed JSON request — admin dispatch or classify.
+    fn dispatch_json(&mut self, sh: &mut Shared<'_>, req: Json) {
+        if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
+            let reply = match cmd {
+                "shutdown" => {
+                    sh.ctx.stop.store(true, Ordering::Relaxed);
+                    obj(vec![("ok", Json::Bool(true))])
+                }
+                "stats" => stats_json(sh.ctx),
+                "health" => health_json(sh.ctx),
+                "models" => models_json(sh.ctx),
+                "load" | "unload" | "reload" => {
+                    self.spawn_admin(sh, cmd.to_string(), req);
+                    return;
+                }
+                other => obj(vec![("error", Json::Str(format!("unknown cmd {other}")))]),
+            };
+            self.push_inline(sh.ctx, Proto::Json, None, String::new(), Outcome::Reply(reply));
+            return;
+        }
+        let Some(pixels) = req.get("pixels").and_then(Json::as_arr) else {
+            self.push_inline(
+                sh.ctx,
+                Proto::Json,
+                None,
+                String::new(),
+                Outcome::Reply(obj(vec![("error", Json::Str("need pixels or cmd".into()))])),
+            );
+            return;
+        };
+        let default_name = sh.ctx.registry.default_name();
+        let model_name =
+            req.get("model").and_then(Json::as_str).unwrap_or(&default_name).to_string();
+        let Some(handle) = sh.ctx.registry.get(&model_name) else {
+            self.push_inline(
+                sh.ctx,
+                Proto::Json,
+                None,
+                String::new(),
+                Outcome::Reply(obj(vec![
+                    ("error", Json::Str(format!("unknown model '{model_name}'"))),
+                    ("code", Json::Str("unknown_model".into())),
+                ])),
+            );
+            return;
+        };
+        let pixels: Vec<f32> =
+            pixels.iter().filter_map(|v| v.as_f64()).map(|v| v as f32).collect();
+        // Per-request deadline: "timeout_ms" overrides the server
+        // default; invalid values fail loudly as bad_input.
+        let timeout = match req.get("timeout_ms") {
+            None => sh.ctx.default_timeout,
+            Some(v) => match v.as_f64() {
+                Some(ms) if ms.is_finite() && ms >= 1.0 => Duration::from_millis(ms as u64),
+                _ => {
+                    self.push_inline(
+                        sh.ctx,
+                        Proto::Json,
+                        Some(handle.clone()),
+                        model_name,
+                        Outcome::Resp(failed(ServeError::BadInput(
+                            "timeout_ms must be a number >= 1".into(),
+                        ))),
+                    );
+                    return;
+                }
+            },
+        };
+        self.classify(sh, Proto::Json, handle, model_name, pixels, timeout);
+    }
+
+    /// One decoded binary classify frame.
+    fn dispatch_binary(&mut self, sh: &mut Shared<'_>, req: frame::FrameRequest) {
+        let proto = Proto::Binary { req_id: req.req_id };
+        let model_name = if req.model.is_empty() {
+            sh.ctx.registry.default_name()
+        } else {
+            req.model
+        };
+        let Some(handle) = sh.ctx.registry.get(&model_name) else {
+            self.push_inline(
+                sh.ctx,
+                proto,
+                None,
+                String::new(),
+                Outcome::BinErr {
+                    code: frame::ERR_UNKNOWN_MODEL,
+                    message: format!("unknown model '{model_name}'"),
+                },
+            );
+            return;
+        };
+        let timeout = if req.timeout_ms == 0 {
+            sh.ctx.default_timeout
+        } else {
+            Duration::from_millis(req.timeout_ms as u64)
+        };
+        self.classify(sh, proto, handle, model_name, req.pixels, timeout);
+    }
+
+    /// Protocol-independent classify tail: validation mirrors the old
+    /// per-thread `handle_request` exactly (same error taxonomy, same
+    /// counter accounting), then the request enters the model's bounded
+    /// admission path with a reactor-completion hook.
+    fn classify(
+        &mut self,
+        sh: &mut Shared<'_>,
+        proto: Proto,
+        handle: Arc<ModelHandle>,
+        model_name: String,
+        pixels: Vec<f32>,
+        timeout: Duration,
+    ) {
+        // Validate here, not in the batcher: a truncated input must fail
+        // loudly instead of being zero-padded into a wrong classification.
+        if pixels.len() != handle.n_in {
+            let err = ServeError::BadInput(format!(
+                "model '{}' expects {} pixels, got {}",
+                handle.name,
+                handle.n_in,
+                pixels.len()
+            ));
+            self.push_inline(sh.ctx, proto, Some(handle), model_name, Outcome::Resp(failed(err)));
+            return;
+        }
+        if handle.stop.load(Ordering::Relaxed) {
+            // a handle caught mid-unload: typed reply, not an error count
+            // (matches the old early-return before the reply wait)
+            let err = ServeError::Unloaded(format!("model '{}' unloaded", handle.name));
+            self.push_inline(sh.ctx, proto, None, model_name, Outcome::Resp(failed(err)));
+            return;
+        }
+        let deadline = Instant::now() + timeout;
+        let seq = self.alloc_seq();
+        let sink = ReplySender::hook({
+            let tx = sh.done_tx.clone();
+            let wake = sh.wake.clone();
+            let (token, gen) = (self.token, self.gen);
+            move |resp| {
+                let _ = tx.send(Done { token, gen, seq, payload: DonePayload::Resp(resp) });
+                wake.wake();
+            }
+        });
+        // Lost-reply backstop (the old recv_timeout's grace window):
+        // if nothing lands by deadline + grace, the timer pass answers
+        // with the typed "timeout" code.
+        sh.timers.push(Reverse((deadline + REPLY_GRACE, self.token, self.gen, seq)));
+        self.pending.push_back(Pending {
+            seq,
+            proto,
+            handle: Some(handle.clone()),
+            model_name,
+            outcome: None,
+        });
+        handle.batcher.handle().submit_with(pixels, deadline, sink);
+    }
+
+    /// Run a mutating admin command (`load`/`unload`/`reload`) on a
+    /// short-lived thread: engine builds and worker joins must not stall
+    /// the loop. The result arrives through the completion queue like
+    /// any other reply, keeping per-connection FIFO order.
+    fn spawn_admin(&mut self, sh: &mut Shared<'_>, cmd: String, req: Json) {
+        let seq = self.alloc_seq();
+        self.pending.push_back(Pending {
+            seq,
+            proto: Proto::Json,
+            handle: None,
+            model_name: String::new(),
+            outcome: None,
+        });
+        let ctx = sh.ctx.clone();
+        let tx = sh.done_tx.clone();
+        let wake = sh.wake.clone();
+        let (token, gen) = (self.token, self.gen);
+        std::thread::spawn(move || {
+            let reply = catch_unwind(AssertUnwindSafe(|| match cmd.as_str() {
+                "load" => cmd_load(&req, &ctx),
+                "unload" => cmd_unload(&req, &ctx),
+                _ => cmd_reload(&ctx),
+            }))
+            .unwrap_or_else(|_| {
+                obj(vec![("error", Json::Str(format!("cmd {cmd} panicked (contained)")))])
+            });
+            let _ = tx.send(Done { token, gen, seq, payload: DonePayload::Reply(reply) });
+            wake.wake();
+        });
+    }
+
+    /// Serialize the completed FIFO prefix and push bytes to the socket.
+    /// Returns false once the connection is finished (closing, fully
+    /// drained and flushed) and should be destroyed.
+    fn flush(&mut self, poller: &mut Poller) -> bool {
+        while let Some(front) = self.pending.front() {
+            if front.outcome.is_none() {
+                break;
+            }
+            let p = self.pending.pop_front().unwrap();
+            serialize_reply(p, &mut self.outbuf);
+        }
+        while self.outpos < self.outbuf.len() {
+            match self.stream.write(&self.outbuf[self.outpos..]) {
+                Ok(0) => {
+                    self.closing = true;
+                    self.outbuf.clear();
+                    self.outpos = 0;
+                    break;
+                }
+                Ok(n) => self.outpos += n,
+                Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(ref e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(_) => {
+                    // peer is gone; drop the bytes but keep the entry
+                    // accounting that already happened
+                    self.closing = true;
+                    self.outbuf.clear();
+                    self.outpos = 0;
+                    break;
+                }
+            }
+        }
+        if self.outpos >= self.outbuf.len() {
+            self.outbuf.clear();
+            self.outpos = 0;
+        }
+        if self.closing {
+            // Completions arrive via the waker and each loop pass
+            // re-flushes, so remaining replies still drain without
+            // readiness events from this socket.
+            if !self.deregistered {
+                let _ = poller.deregister(self.stream.as_raw_fd());
+                self.deregistered = true;
+                self.registered_write = false;
+            }
+        } else {
+            let want_write = self.outpos < self.outbuf.len();
+            if want_write != self.registered_write {
+                let interest = if want_write { Interest::BOTH } else { Interest::READ };
+                if poller.modify(self.stream.as_raw_fd(), self.token, interest).is_ok() {
+                    self.registered_write = want_write;
+                }
+            }
+        }
+        // keep a draining connection alive until every in-flight request
+        // completed (counters!) and its replies are flushed or dropped
+        !(self.closing && self.pending.is_empty() && self.outbuf.is_empty())
+    }
+}
+
+/// `Response::failed` equivalent (that constructor is private to the
+/// batcher): a typed error reply with no payload.
+fn failed(error: ServeError) -> Response {
+    Response { class: 0, probs: Vec::new(), latency_us: 0, error: Some(error) }
+}
+
+/// Strip ASCII whitespace from both ends (stable-toolchain-friendly
+/// stand-in for `[u8]::trim_ascii`).
+fn trim_ascii(mut b: &[u8]) -> &[u8] {
+    while let Some((first, rest)) = b.split_first() {
+        if first.is_ascii_whitespace() {
+            b = rest;
+        } else {
+            break;
+        }
+    }
+    while let Some((last, rest)) = b.split_last() {
+        if last.is_ascii_whitespace() {
+            b = rest;
+        } else {
+            break;
+        }
+    }
+    b
+}
+
+/// Apply the served/errors accounting for a completed request — the
+/// same rules as the old per-thread reply wait: successes bump the
+/// per-model and global served counters (the latter drives
+/// `max_requests`); failures bump `errors` except overload rejections
+/// and deadline expiries, which have their own batcher counters.
+fn account(ctx: &ServeCtx, handle: Option<&ModelHandle>, outcome: &Outcome) {
+    let (Some(h), Outcome::Resp(resp)) = (handle, outcome) else {
+        return;
+    };
+    match &resp.error {
+        None => {
+            h.served.fetch_add(1, Ordering::Relaxed);
+            let n = ctx.served.fetch_add(1, Ordering::Relaxed) + 1;
+            if ctx.max_requests > 0 && n >= ctx.max_requests {
+                ctx.stop.store(true, Ordering::Relaxed);
+            }
+        }
+        Some(ServeError::Overloaded { .. }) | Some(ServeError::DeadlineExceeded) => {}
+        Some(_) => {
+            h.errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Serialize one completed request to its protocol's wire form.
+fn serialize_reply(p: Pending, out: &mut Vec<u8>) {
+    let outcome = p.outcome.expect("serialized only when complete");
+    match p.proto {
+        Proto::Json => {
+            let json = match outcome {
+                Outcome::Reply(j) => j,
+                Outcome::Resp(resp) => match resp.error {
+                    Some(err) => error_reply(&err, Some(&p.model_name)),
+                    None => obj(vec![
+                        ("class", num(resp.class as f64)),
+                        ("probs", Json::Arr(resp.probs.iter().map(|&x| num(x as f64)).collect())),
+                        ("latency_us", num(resp.latency_us as f64)),
+                        ("model", Json::Str(p.model_name)),
+                    ]),
+                },
+                Outcome::BinErr { message, .. } => {
+                    obj(vec![("error", Json::Str(message))])
+                }
+            };
+            out.extend_from_slice(json.to_string().as_bytes());
+            out.push(b'\n');
+        }
+        Proto::Binary { req_id } => match outcome {
+            Outcome::Resp(resp) => {
+                let latency = resp.latency_us.min(u32::MAX as u64) as u32;
+                match &resp.error {
+                    None => frame::encode_reply_ok(
+                        out,
+                        req_id,
+                        resp.class as u32,
+                        latency,
+                        &resp.probs,
+                    ),
+                    Some(err) => {
+                        let retry = match err {
+                            ServeError::Overloaded { retry_after_ms } => {
+                                (*retry_after_ms).min(u32::MAX as u64) as u32
+                            }
+                            _ => 0,
+                        };
+                        frame::encode_reply_err(
+                            out,
+                            req_id,
+                            frame::code_to_num(err.code()),
+                            retry,
+                            latency,
+                            &err.to_string(),
+                        );
+                    }
+                }
+            }
+            Outcome::BinErr { code, message } => {
+                frame::encode_reply_err(out, req_id, code, 0, 0, &message)
+            }
+            Outcome::Reply(j) => {
+                // admin over the binary protocol isn't defined; surface
+                // the JSON result as a frame error payload defensively
+                frame::encode_reply_err(out, req_id, frame::ERR_BAD_FRAME, 0, 0, &j.to_string())
+            }
+        },
+    }
+}
+
+/// Route one completion to its connection. Generation and outcome
+/// checks drop late or misrouted completions (a backstop already fired,
+/// the connection died, the slot was reused) instead of misdelivering.
+fn apply_done(ctx: &ServeCtx, conns: &mut [Option<Conn>], d: Done) {
+    let Some(conn) = conns.get_mut(d.token).and_then(Option::as_mut) else {
+        return;
+    };
+    if conn.gen != d.gen {
+        return;
+    }
+    let Some(p) = conn.pending.iter_mut().find(|p| p.seq == d.seq) else {
+        return;
+    };
+    if p.outcome.is_some() {
+        return; // the timeout backstop answered first; drop the late reply
+    }
+    let outcome = match d.payload {
+        DonePayload::Resp(resp) => Outcome::Resp(resp),
+        DonePayload::Reply(j) => Outcome::Reply(j),
+    };
+    account(ctx, p.handle.as_deref(), &outcome);
+    p.outcome = Some(outcome);
+}
+
+/// Fire due backstop timers: any request still unanswered past its
+/// deadline + grace gets the typed `"timeout"` reply (and an error
+/// count), exactly like the old blocking receive's `Err` arm.
+fn fire_timers(ctx: &ServeCtx, conns: &mut [Option<Conn>], timers: &mut Timers, now: Instant) {
+    while let Some(&Reverse((due, token, gen, seq))) = timers.peek() {
+        if due > now {
+            break;
+        }
+        timers.pop();
+        let Some(conn) = conns.get_mut(token).and_then(Option::as_mut) else {
+            continue;
+        };
+        if conn.gen != gen {
+            continue;
+        }
+        let Some(p) = conn.pending.iter_mut().find(|p| p.seq == seq) else {
+            continue;
+        };
+        if p.outcome.is_some() {
+            continue;
+        }
+        let outcome = Outcome::Resp(failed(ServeError::Timeout));
+        account(ctx, p.handle.as_deref(), &outcome);
+        p.outcome = Some(outcome);
+    }
+}
+
+/// The reactor: owns the listener, every connection, the completion
+/// queue and the backstop timers. Returns once `ctx.stop` is observed
+/// (shutdown command, `max_requests`, or an external trigger), after
+/// retiring every model and answering/flushing everything in flight.
+pub(crate) fn run_event_loop(
+    listener: TcpListener,
+    ctx: Arc<ServeCtx>,
+    kind: PollerKind,
+) -> Result<()> {
+    let mut poller = Poller::new(kind)?;
+    let waker = Waker::new()?;
+    let wake = waker.handle();
+    let (done_tx, done_rx) = mpsc::channel::<Done>();
+    poller.register(listener.as_raw_fd(), TOKEN_LISTENER, Interest::READ)?;
+    poller.register(waker.fd(), TOKEN_WAKER, Interest::READ)?;
+    let mut conns: Vec<Option<Conn>> = Vec::new();
+    let mut free: Vec<usize> = Vec::new();
+    let mut next_gen: u64 = 1;
+    let mut timers: Timers = BinaryHeap::new();
+    let mut events: Vec<Event> = Vec::new();
+    println!(
+        "serving [{}] on {} ({} event loop)",
+        ctx.registry.names().join(", "),
+        listener.local_addr()?,
+        poller.backend_name()
+    );
+
+    let mut result: Result<()> = Ok(());
+    while !ctx.stop.load(Ordering::Relaxed) {
+        let now = Instant::now();
+        let timeout = timers
+            .peek()
+            .map(|&Reverse((t, ..))| t.saturating_duration_since(now).min(TICK))
+            .unwrap_or(TICK);
+        if let Err(e) = poller.wait(&mut events, Some(timeout)) {
+            result = Err(e.into());
+            break;
+        }
+        for ev in events.iter().copied() {
+            match ev.token {
+                TOKEN_WAKER => waker.drain(),
+                TOKEN_LISTENER => accept_ready(
+                    &listener,
+                    &mut poller,
+                    &mut conns,
+                    &mut free,
+                    &mut next_gen,
+                ),
+                token => {
+                    if ev.readable {
+                        if let Some(conn) = conns.get_mut(token).and_then(Option::as_mut) {
+                            let mut sh = Shared {
+                                ctx: &ctx,
+                                done_tx: &done_tx,
+                                wake: &wake,
+                                timers: &mut timers,
+                            };
+                            conn.handle_readable(&mut sh);
+                        }
+                    }
+                    // writability is handled by the flush pass below
+                }
+            }
+        }
+        while let Ok(d) = done_rx.try_recv() {
+            apply_done(&ctx, &mut conns, d);
+        }
+        fire_timers(&ctx, &mut conns, &mut timers, Instant::now());
+        flush_all(&mut poller, &mut conns, &mut free);
+        if ctx.max_requests > 0 && ctx.served.load(Ordering::Relaxed) >= ctx.max_requests {
+            ctx.stop.store(true, Ordering::Relaxed);
+        }
+    }
+
+    // ---- shutdown: answer everything, flush everything, then return ----
+    ctx.stop.store(true, Ordering::Relaxed);
+    let _ = poller.deregister(listener.as_raw_fd());
+    // Retire every model: stops + joins workers, and the close() +
+    // fail_pending() pair answers whatever was queued — each reply
+    // arrives through the completion queue like any other.
+    for h in ctx.registry.snapshot() {
+        retire(&h);
+    }
+    let drain_deadline = Instant::now() + SHUTDOWN_DRAIN;
+    loop {
+        while let Ok(d) = done_rx.try_recv() {
+            apply_done(&ctx, &mut conns, d);
+        }
+        let unresolved = conns
+            .iter()
+            .flatten()
+            .any(|c| c.pending.iter().any(|p| p.outcome.is_none()));
+        if !unresolved {
+            break;
+        }
+        if Instant::now() >= drain_deadline {
+            // nothing should reach this: every batcher path answers.
+            // Fail the stragglers explicitly rather than hang.
+            for conn in conns.iter_mut().flatten() {
+                for p in conn.pending.iter_mut().filter(|p| p.outcome.is_none()) {
+                    let outcome = Outcome::Resp(failed(ServeError::Timeout));
+                    account(&ctx, p.handle.as_deref(), &outcome);
+                    p.outcome = Some(outcome);
+                }
+            }
+            break;
+        }
+        if let Ok(d) = done_rx.recv_timeout(Duration::from_millis(20)) {
+            apply_done(&ctx, &mut conns, d);
+        }
+    }
+    // Bounded final flush: serialize + write every queued reply (the
+    // shutdown "ok" among them) before the sockets drop.
+    let flush_deadline = Instant::now() + Duration::from_secs(2);
+    loop {
+        flush_all(&mut poller, &mut conns, &mut free);
+        let dirty = conns
+            .iter()
+            .flatten()
+            .any(|c| !c.outbuf.is_empty() || !c.pending.is_empty());
+        if !dirty || Instant::now() >= flush_deadline {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    for conn in conns.iter_mut().filter(|c| c.is_some()) {
+        let c = conn.take().unwrap();
+        let _ = poller.deregister(c.stream.as_raw_fd());
+    }
+    print_model_summary(&ctx);
+    result
+}
+
+/// Accept until the listener would block. Transient failures (EMFILE
+/// under a connection flood, a connection reset before accept) skip the
+/// round instead of killing the server.
+fn accept_ready(
+    listener: &TcpListener,
+    poller: &mut Poller,
+    conns: &mut Vec<Option<Conn>>,
+    free: &mut Vec<usize>,
+    next_gen: &mut u64,
+) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                stream.set_nodelay(true).ok();
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                let token = free.pop().unwrap_or_else(|| {
+                    conns.push(None);
+                    conns.len() - 1
+                });
+                let gen = *next_gen;
+                *next_gen += 1;
+                if poller.register(stream.as_raw_fd(), token, Interest::READ).is_err() {
+                    free.push(token);
+                    continue;
+                }
+                conns[token] = Some(Conn::new(stream, token, gen));
+            }
+            Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
+            Err(ref e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(_) => break,
+        }
+    }
+}
+
+/// Flush every connection; destroy the ones that finished draining.
+fn flush_all(poller: &mut Poller, conns: &mut [Option<Conn>], free: &mut Vec<usize>) {
+    for slot in conns.iter_mut() {
+        let keep = match slot.as_mut() {
+            Some(conn) => conn.flush(poller),
+            None => continue,
+        };
+        if !keep {
+            let conn = slot.take().unwrap();
+            let _ = poller.deregister(conn.stream.as_raw_fd());
+            free.push(conn.token);
+        }
+    }
+}

@@ -1,0 +1,538 @@
+//! Length-prefixed binary wire protocol for the serve front end.
+//!
+//! JSON (one object per line) remains the compatibility protocol; this
+//! module adds a binary framing that removes the two hot-path costs the
+//! JSON path pays per request — float *text* parsing on the way in and
+//! float formatting on the way out. Pixels and probabilities travel as
+//! raw little-endian `f32`, so encode/decode is a bounds check plus a
+//! `memcpy`, and a decoded request performs exactly two heap
+//! allocations (the pixel vec + the model-name string) versus the
+//! per-token `Json` tree the text path builds (asserted structurally in
+//! `rust/tests/serve_wire.rs`, measured in `benches/serve_scale.rs`).
+//!
+//! The first byte of every frame is [`MAGIC`] = `0x95` — a UTF-8
+//! continuation byte that can never begin a JSON object — so the server
+//! auto-detects the protocol per message on one port ([`is_binary`]).
+//!
+//! ## Frame layout (all integers little-endian)
+//!
+//! Request (classify), 16-byte header:
+//!
+//! | off | len | field                                        |
+//! |-----|-----|----------------------------------------------|
+//! | 0   | 1   | magic `0x95`                                 |
+//! | 1   | 1   | opcode: `0x01` classify                      |
+//! | 2   | 1   | model-name length `m` (0 = default model)    |
+//! | 3   | 1   | reserved (0)                                 |
+//! | 4   | 4   | `req_id` (u32, echoed verbatim in the reply) |
+//! | 8   | 4   | `timeout_ms` (u32, 0 = server default)       |
+//! | 12  | 4   | pixel count `n` (u32)                        |
+//! | 16  | m   | model name (UTF-8)                           |
+//! | 16+m| 4n  | pixels (`f32` LE)                            |
+//!
+//! Reply, 20-byte header:
+//!
+//! | off | len | field                                                  |
+//! |-----|-----|--------------------------------------------------------|
+//! | 0   | 1   | magic `0x95`                                           |
+//! | 1   | 1   | opcode: `0x81` ok, `0x82` error                        |
+//! | 2   | 1   | error code (see below; 0 on ok)                        |
+//! | 3   | 1   | reserved (0)                                           |
+//! | 4   | 4   | `req_id` (u32)                                         |
+//! | 8   | 4   | `latency_us` (u32, saturated)                          |
+//! | 12  | 4   | ok: class index · error: `retry_after_ms` hint         |
+//! | 16  | 4   | payload count `n` (u32): probs on ok, msg bytes on err |
+//! | 20  | …   | ok: `n × f32` LE probs · error: `n` bytes UTF-8 message|
+//!
+//! Error codes mirror the JSON `"code"` strings one-to-one
+//! ([`code_to_num`] / [`num_to_code`]), so both protocols expose the
+//! identical failure taxonomy: 1 `overloaded`, 2 `deadline`,
+//! 3 `timeout`, 4 `engine`, 5 `bad_input`, 6 `unloaded`,
+//! 7 `unknown_model`, 8 `bad_frame` (malformed/unsupported frame —
+//! binary-only, the analogue of the JSON `"bad json"` reply).
+
+use anyhow::{anyhow, Result};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+/// First byte of every binary frame. `0x95` is a UTF-8 continuation
+/// byte: no JSON line (or any UTF-8 text) can start with it.
+pub const MAGIC: u8 = 0x95;
+
+/// Request opcode: classify.
+pub const OP_CLASSIFY: u8 = 0x01;
+/// Reply opcode: successful classification.
+pub const OP_REPLY_OK: u8 = 0x81;
+/// Reply opcode: typed error.
+pub const OP_REPLY_ERR: u8 = 0x82;
+
+/// Numeric error codes (wire) ↔ the JSON `"code"` strings.
+pub const ERR_OVERLOADED: u8 = 1;
+pub const ERR_DEADLINE: u8 = 2;
+pub const ERR_TIMEOUT: u8 = 3;
+pub const ERR_ENGINE: u8 = 4;
+pub const ERR_BAD_INPUT: u8 = 5;
+pub const ERR_UNLOADED: u8 = 6;
+pub const ERR_UNKNOWN_MODEL: u8 = 7;
+pub const ERR_BAD_FRAME: u8 = 8;
+
+const REQ_HEADER: usize = 16;
+const REPLY_HEADER: usize = 20;
+
+/// Hard caps against hostile headers: a length field beyond these fails
+/// the frame instead of asking the allocator for gigabytes.
+pub const MAX_PIXELS: usize = 1 << 20;
+/// Probs/message payload cap on replies (defensive client-side bound).
+pub const MAX_REPLY_ITEMS: usize = 1 << 20;
+
+/// Does a message starting with `first_byte` use the binary protocol?
+pub fn is_binary(first_byte: u8) -> bool {
+    first_byte == MAGIC
+}
+
+/// JSON `"code"` string → wire byte.
+pub fn code_to_num(code: &str) -> u8 {
+    match code {
+        "overloaded" => ERR_OVERLOADED,
+        "deadline" => ERR_DEADLINE,
+        "timeout" => ERR_TIMEOUT,
+        "engine" => ERR_ENGINE,
+        "bad_input" => ERR_BAD_INPUT,
+        "unloaded" => ERR_UNLOADED,
+        "unknown_model" => ERR_UNKNOWN_MODEL,
+        "bad_frame" => ERR_BAD_FRAME,
+        _ => 0,
+    }
+}
+
+/// Wire byte → JSON `"code"` string (`"unknown"` for unassigned bytes).
+pub fn num_to_code(num: u8) -> &'static str {
+    match num {
+        ERR_OVERLOADED => "overloaded",
+        ERR_DEADLINE => "deadline",
+        ERR_TIMEOUT => "timeout",
+        ERR_ENGINE => "engine",
+        ERR_BAD_INPUT => "bad_input",
+        ERR_UNLOADED => "unloaded",
+        ERR_UNKNOWN_MODEL => "unknown_model",
+        ERR_BAD_FRAME => "bad_frame",
+        _ => "unknown",
+    }
+}
+
+/// A decoded classify request.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrameRequest {
+    pub req_id: u32,
+    /// Empty = route to the server's default model.
+    pub model: String,
+    /// 0 = use the server's default deadline.
+    pub timeout_ms: u32,
+    pub pixels: Vec<f32>,
+}
+
+/// A decoded reply frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FrameReply {
+    Ok { req_id: u32, class: u32, latency_us: u32, probs: Vec<f32> },
+    Err { req_id: u32, code: u8, retry_after_ms: u32, message: String },
+}
+
+/// Malformed frame: the connection cannot resync after this, so the
+/// server answers with an `ERR_BAD_FRAME` frame and closes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FrameError(pub String);
+
+impl std::fmt::Display for FrameError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "bad frame: {}", self.0)
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+fn u32_at(b: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+/// Append one classify request frame to `buf` (which is not cleared, so
+/// callers can pack several frames per write).
+pub fn encode_request(
+    buf: &mut Vec<u8>,
+    req_id: u32,
+    model: &str,
+    timeout_ms: u32,
+    pixels: &[f32],
+) {
+    assert!(model.len() <= u8::MAX as usize, "model name too long for the wire");
+    buf.reserve(REQ_HEADER + model.len() + 4 * pixels.len());
+    buf.push(MAGIC);
+    buf.push(OP_CLASSIFY);
+    buf.push(model.len() as u8);
+    buf.push(0);
+    buf.extend_from_slice(&req_id.to_le_bytes());
+    buf.extend_from_slice(&timeout_ms.to_le_bytes());
+    buf.extend_from_slice(&(pixels.len() as u32).to_le_bytes());
+    buf.extend_from_slice(model.as_bytes());
+    for p in pixels {
+        buf.extend_from_slice(&p.to_le_bytes());
+    }
+}
+
+/// Try to decode one request frame from the front of `buf`.
+///
+/// * `Ok(None)` — the frame is still incomplete; read more bytes.
+/// * `Ok(Some((req, consumed)))` — one frame decoded; drop `consumed`
+///   bytes from the front.
+/// * `Err(_)` — the bytes can never become a valid frame.
+pub fn decode_request(buf: &[u8]) -> Result<Option<(FrameRequest, usize)>, FrameError> {
+    if buf.is_empty() {
+        return Ok(None);
+    }
+    if buf[0] != MAGIC {
+        return Err(FrameError(format!("bad magic 0x{:02x}", buf[0])));
+    }
+    if buf.len() >= 2 && buf[1] != OP_CLASSIFY {
+        return Err(FrameError(format!("unsupported request opcode 0x{:02x}", buf[1])));
+    }
+    if buf.len() < REQ_HEADER {
+        return Ok(None);
+    }
+    let model_len = buf[2] as usize;
+    let n = u32_at(buf, 12) as usize;
+    if n > MAX_PIXELS {
+        return Err(FrameError(format!("pixel count {n} exceeds cap {MAX_PIXELS}")));
+    }
+    let total = REQ_HEADER + model_len + 4 * n;
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let model = std::str::from_utf8(&buf[REQ_HEADER..REQ_HEADER + model_len])
+        .map_err(|_| FrameError("model name is not UTF-8".into()))?
+        .to_string();
+    let mut pixels = Vec::with_capacity(n);
+    let base = REQ_HEADER + model_len;
+    for i in 0..n {
+        let off = base + 4 * i;
+        pixels.push(f32::from_le_bytes([buf[off], buf[off + 1], buf[off + 2], buf[off + 3]]));
+    }
+    Ok(Some((
+        FrameRequest { req_id: u32_at(buf, 4), model, timeout_ms: u32_at(buf, 8), pixels },
+        total,
+    )))
+}
+
+/// Append one success reply frame to `buf`.
+pub fn encode_reply_ok(
+    buf: &mut Vec<u8>,
+    req_id: u32,
+    class: u32,
+    latency_us: u32,
+    probs: &[f32],
+) {
+    buf.reserve(REPLY_HEADER + 4 * probs.len());
+    buf.push(MAGIC);
+    buf.push(OP_REPLY_OK);
+    buf.push(0);
+    buf.push(0);
+    buf.extend_from_slice(&req_id.to_le_bytes());
+    buf.extend_from_slice(&latency_us.to_le_bytes());
+    buf.extend_from_slice(&class.to_le_bytes());
+    buf.extend_from_slice(&(probs.len() as u32).to_le_bytes());
+    for p in probs {
+        buf.extend_from_slice(&p.to_le_bytes());
+    }
+}
+
+/// Append one error reply frame to `buf`.
+pub fn encode_reply_err(
+    buf: &mut Vec<u8>,
+    req_id: u32,
+    code: u8,
+    retry_after_ms: u32,
+    latency_us: u32,
+    message: &str,
+) {
+    let msg = message.as_bytes();
+    let msg = &msg[..msg.len().min(u16::MAX as usize)];
+    buf.reserve(REPLY_HEADER + msg.len());
+    buf.push(MAGIC);
+    buf.push(OP_REPLY_ERR);
+    buf.push(code);
+    buf.push(0);
+    buf.extend_from_slice(&req_id.to_le_bytes());
+    buf.extend_from_slice(&latency_us.to_le_bytes());
+    buf.extend_from_slice(&retry_after_ms.to_le_bytes());
+    buf.extend_from_slice(&(msg.len() as u32).to_le_bytes());
+    buf.extend_from_slice(msg);
+}
+
+/// Try to decode one reply frame from the front of `buf`; same contract
+/// as [`decode_request`].
+pub fn decode_reply(buf: &[u8]) -> Result<Option<(FrameReply, usize)>, FrameError> {
+    if buf.is_empty() {
+        return Ok(None);
+    }
+    if buf[0] != MAGIC {
+        return Err(FrameError(format!("bad magic 0x{:02x}", buf[0])));
+    }
+    if buf.len() >= 2 && buf[1] != OP_REPLY_OK && buf[1] != OP_REPLY_ERR {
+        return Err(FrameError(format!("unsupported reply opcode 0x{:02x}", buf[1])));
+    }
+    if buf.len() < REPLY_HEADER {
+        return Ok(None);
+    }
+    let op = buf[1];
+    let n = u32_at(buf, 16) as usize;
+    if n > MAX_REPLY_ITEMS {
+        return Err(FrameError(format!("payload count {n} exceeds cap {MAX_REPLY_ITEMS}")));
+    }
+    let req_id = u32_at(buf, 4);
+    let latency_us = u32_at(buf, 8);
+    let aux = u32_at(buf, 12);
+    if op == OP_REPLY_OK {
+        let total = REPLY_HEADER + 4 * n;
+        if buf.len() < total {
+            return Ok(None);
+        }
+        let mut probs = Vec::with_capacity(n);
+        for i in 0..n {
+            let off = REPLY_HEADER + 4 * i;
+            probs.push(f32::from_le_bytes([
+                buf[off],
+                buf[off + 1],
+                buf[off + 2],
+                buf[off + 3],
+            ]));
+        }
+        Ok(Some((FrameReply::Ok { req_id, class: aux, latency_us, probs }, total)))
+    } else {
+        let total = REPLY_HEADER + n;
+        if buf.len() < total {
+            return Ok(None);
+        }
+        let message = String::from_utf8_lossy(&buf[REPLY_HEADER..total]).into_owned();
+        Ok(Some((
+            FrameReply::Err { req_id, code: buf[2], retry_after_ms: aux, message },
+            total,
+        )))
+    }
+}
+
+/// Minimal blocking client speaking the binary protocol — the
+/// counterpart of [`crate::serve::Client`] for tests and the
+/// connection-scale bench.
+pub struct FrameClient {
+    stream: TcpStream,
+    inbuf: Vec<u8>,
+    outbuf: Vec<u8>,
+    next_id: u32,
+}
+
+impl FrameClient {
+    pub fn connect(addr: &str) -> Result<FrameClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true).ok();
+        Ok(FrameClient { stream, inbuf: Vec::new(), outbuf: Vec::new(), next_id: 1 })
+    }
+
+    /// Bound how long [`FrameClient::read_reply`] blocks (None = forever).
+    pub fn set_read_timeout(&mut self, timeout: Option<std::time::Duration>) -> Result<()> {
+        self.stream.set_read_timeout(timeout)?;
+        Ok(())
+    }
+
+    /// One classify round trip against the default model.
+    pub fn classify(&mut self, pixels: &[f32]) -> Result<FrameReply> {
+        self.classify_model("", pixels, 0)
+    }
+
+    /// One classify round trip: empty `model` = server default,
+    /// `timeout_ms` 0 = server default deadline. Returns the decoded
+    /// reply frame — a typed error frame is an `Ok(FrameReply::Err …)`,
+    /// not an `Err`, mirroring `Client::classify_raw`.
+    pub fn classify_model(
+        &mut self,
+        model: &str,
+        pixels: &[f32],
+        timeout_ms: u32,
+    ) -> Result<FrameReply> {
+        let id = self.next_id;
+        self.next_id = self.next_id.wrapping_add(1);
+        self.outbuf.clear();
+        encode_request(&mut self.outbuf, id, model, timeout_ms, pixels);
+        self.stream.write_all(&self.outbuf)?;
+        let reply = self.read_reply()?;
+        let got = match &reply {
+            FrameReply::Ok { req_id, .. } | FrameReply::Err { req_id, .. } => *req_id,
+        };
+        if got != id {
+            return Err(anyhow!("reply req_id {got} does not match request {id}"));
+        }
+        Ok(reply)
+    }
+
+    /// Read one reply frame (blocking).
+    pub fn read_reply(&mut self) -> Result<FrameReply> {
+        let mut chunk = [0u8; 4096];
+        loop {
+            match decode_reply(&self.inbuf).map_err(|e| anyhow!("{e}"))? {
+                Some((reply, consumed)) => {
+                    self.inbuf.drain(..consumed);
+                    return Ok(reply);
+                }
+                None => {
+                    let n = self.stream.read(&mut chunk)?;
+                    if n == 0 {
+                        return Err(anyhow!("server closed the connection"));
+                    }
+                    self.inbuf.extend_from_slice(&chunk[..n]);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req_roundtrip(req_id: u32, model: &str, timeout_ms: u32, pixels: &[f32]) {
+        let mut buf = Vec::new();
+        encode_request(&mut buf, req_id, model, timeout_ms, pixels);
+        let (decoded, consumed) = decode_request(&buf).unwrap().expect("complete frame");
+        assert_eq!(consumed, buf.len());
+        assert_eq!(decoded.req_id, req_id);
+        assert_eq!(decoded.model, model);
+        assert_eq!(decoded.timeout_ms, timeout_ms);
+        assert_eq!(decoded.pixels, pixels);
+    }
+
+    #[test]
+    fn request_roundtrip_property() {
+        // deterministic pseudo-random sweep over sizes, ids and payloads
+        let mut rng = crate::util::rng::Pcg32::new(0xF4A3, 17);
+        for case in 0..200 {
+            let n = (rng.next_u32() % 300) as usize;
+            let model_len = (rng.next_u32() % 20) as usize;
+            let model: String = (0..model_len).map(|i| (b'a' + (i as u8 % 26)) as char).collect();
+            let pixels: Vec<f32> = (0..n)
+                .map(|_| f32::from_bits(rng.next_u32()))
+                .map(|f| if f.is_nan() { 0.5 } else { f }) // NaN != NaN breaks eq
+                .collect();
+            let _ = case;
+            req_roundtrip(rng.next_u32(), &model, rng.next_u32() % 100_000, &pixels);
+        }
+        // NaN/Inf payload bits survive bit-exactly even when eq can't see it
+        let mut buf = Vec::new();
+        encode_request(&mut buf, 7, "m", 0, &[f32::NAN, f32::INFINITY, -0.0]);
+        let (d, _) = decode_request(&buf).unwrap().unwrap();
+        assert_eq!(d.pixels[0].to_bits(), f32::NAN.to_bits());
+        assert_eq!(d.pixels[1], f32::INFINITY);
+        assert_eq!(d.pixels[2].to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn reply_roundtrip_both_kinds() {
+        let mut buf = Vec::new();
+        encode_reply_ok(&mut buf, 42, 3, 1234, &[0.1, 0.2, 0.7]);
+        let (r, consumed) = decode_reply(&buf).unwrap().unwrap();
+        assert_eq!(consumed, buf.len());
+        assert_eq!(
+            r,
+            FrameReply::Ok { req_id: 42, class: 3, latency_us: 1234, probs: vec![0.1, 0.2, 0.7] }
+        );
+        buf.clear();
+        encode_reply_err(&mut buf, 43, ERR_OVERLOADED, 25, 9, "queue full");
+        let (r, consumed) = decode_reply(&buf).unwrap().unwrap();
+        assert_eq!(consumed, buf.len());
+        assert_eq!(
+            r,
+            FrameReply::Err {
+                req_id: 43,
+                code: ERR_OVERLOADED,
+                retry_after_ms: 25,
+                message: "queue full".into()
+            }
+        );
+    }
+
+    #[test]
+    fn truncated_frames_ask_for_more_bytes_at_every_prefix() {
+        let mut buf = Vec::new();
+        encode_request(&mut buf, 9, "digits", 250, &[1.0, 2.0, 3.0]);
+        for cut in 0..buf.len() {
+            match decode_request(&buf[..cut]) {
+                Ok(None) => {}
+                other => panic!("prefix {cut}/{} must be incomplete, got {other:?}", buf.len()),
+            }
+        }
+        let mut buf = Vec::new();
+        encode_reply_ok(&mut buf, 9, 0, 1, &[0.5, 0.5]);
+        for cut in 0..buf.len() {
+            assert_eq!(decode_reply(&buf[..cut]), Ok(None), "reply prefix {cut}");
+        }
+    }
+
+    #[test]
+    fn pipelined_frames_decode_one_at_a_time() {
+        let mut buf = Vec::new();
+        encode_request(&mut buf, 1, "", 0, &[1.0]);
+        encode_request(&mut buf, 2, "other", 5, &[2.0, 3.0]);
+        let (first, used) = decode_request(&buf).unwrap().unwrap();
+        assert_eq!(first.req_id, 1);
+        let (second, used2) = decode_request(&buf[used..]).unwrap().unwrap();
+        assert_eq!(second.req_id, 2);
+        assert_eq!(second.model, "other");
+        assert_eq!(used + used2, buf.len());
+    }
+
+    #[test]
+    fn malformed_frames_fail_without_panicking() {
+        // wrong magic
+        assert!(decode_request(b"{\"pixels\":[]}").is_err());
+        // unknown opcode
+        assert!(decode_request(&[MAGIC, 0x7f]).is_err());
+        assert!(decode_reply(&[MAGIC, 0x01]).is_err());
+        // hostile pixel count: must reject, not try to allocate 4 GiB
+        let mut buf = vec![MAGIC, OP_CLASSIFY, 0, 0];
+        buf.extend_from_slice(&1u32.to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        assert!(decode_request(&buf).is_err());
+        // non-UTF-8 model name
+        let mut buf = Vec::new();
+        encode_request(&mut buf, 1, "ab", 0, &[]);
+        buf[REQ_HEADER] = 0xff;
+        buf[REQ_HEADER + 1] = 0xfe;
+        assert!(decode_request(&buf).is_err());
+    }
+
+    #[test]
+    fn error_code_mapping_is_a_bijection_over_known_codes() {
+        for code in [
+            "overloaded",
+            "deadline",
+            "timeout",
+            "engine",
+            "bad_input",
+            "unloaded",
+            "unknown_model",
+            "bad_frame",
+        ] {
+            let n = code_to_num(code);
+            assert_ne!(n, 0, "{code} must have a wire byte");
+            assert_eq!(num_to_code(n), code);
+        }
+        assert_eq!(num_to_code(0), "unknown");
+        assert_eq!(code_to_num("nonsense"), 0);
+    }
+
+    #[test]
+    fn magic_byte_cannot_start_utf8_text() {
+        // 0x95 is a continuation byte: no valid UTF-8 string starts with
+        // it, so JSON lines and binary frames are unambiguous.
+        assert!(std::str::from_utf8(&[MAGIC]).is_err());
+        assert!(std::str::from_utf8(&[MAGIC, b'{']).is_err());
+    }
+}

@@ -15,32 +15,49 @@
 //!   one `predict` call, scatters replies. Shareable by several worker
 //!   threads, which is how one native model serves N workers without
 //!   locks around the parameters.
-//! * [`server`] — a std-net TCP front end speaking newline-delimited
-//!   JSON (`{"model": "...", "pixels": [...]}` → `{"class": c, ...}`),
-//!   routing per-request to a **mutable** engine registry so one
-//!   process serves multiple named models and can hot-(re)load them at
-//!   runtime: `{"cmd":"load","path":"m.hnb"}` swaps a freshly trained
-//!   bundle in without a restart, `unload`/`reload`/`models` manage
-//!   the rest (tokio is not vendored offline; blocking I/O + threads
-//!   serve the same purpose).
+//! * [`server`] — the TCP front end: model registry, admin commands,
+//!   and the blocking [`server::Client`]. Connections are driven by
+//!   one event-loop thread (`serve/conn.rs`, private) over a readiness
+//!   reactor ([`poll`]: raw `poll(2)`/epoll bindings, no new crates);
+//!   per-connection state machines parse requests and feed each
+//!   model's bounded batcher, so 10k idle connections cost buffers,
+//!   not threads (tokio is not vendored offline; the reactor plays
+//!   its role).
+//! * Two wire protocols share the port, auto-detected per message
+//!   from the first byte: newline-delimited JSON
+//!   (`{"model": "...", "pixels": [...]}` → `{"class": c, ...}`) and
+//!   the length-prefixed binary frame format in [`frame`] (magic
+//!   `0x95` + opcode + model name + raw little-endian f32 pixels) —
+//!   same request semantics, same error taxonomy, a fraction of the
+//!   parse/allocation work per request.
+//!   The registry is **mutable**, so one process serves multiple named
+//!   models and hot-(re)loads them at runtime: `{"cmd":"load"}` swaps
+//!   a freshly trained bundle in without a restart;
+//!   `unload`/`reload`/`models` manage the rest.
 //!
 //! The model is one self-describing [`crate::model::ModelBundle`] —
 //! total server memory per model is the *compressed* parameter count,
 //! which is the paper's point.
-
 //!
 //! Resilience (PR 6): admission control (bounded queues, explicit
 //! `overloaded` rejection), per-request deadlines (expired before the
 //! model runs), panic containment in dispatch/worker loops, and a
 //! seeded [`chaos::ChaosEngine`] fault injector that the soak test
-//! drives through the real server. See `ARCHITECTURE.md` §Resilience.
+//! drives through the real server. The event loop (PR 7) submits
+//! through the same bounded admission path, so all of it carries over
+//! unchanged. See `ARCHITECTURE.md` §Resilience and §Event loop.
 
 pub mod batcher;
 pub mod chaos;
+mod conn;
 pub mod engine;
+pub mod frame;
+pub mod poll;
 pub mod server;
 
-pub use batcher::{BatchStats, DynamicBatcher, Request, Response, ServeError};
+pub use batcher::{BatchStats, DynamicBatcher, ReplySender, Request, Response, ServeError};
 pub use chaos::{ChaosConfig, ChaosEngine, ChaosStats};
 pub use engine::{Backend, InferenceEngine, ModelConfig, NativeEngine, RuntimeEngine};
+pub use frame::{FrameClient, FrameReply, FrameRequest};
+pub use poll::PollerKind;
 pub use server::{serve, Client, ServeOptions, Server};

@@ -1,0 +1,615 @@
+//! Readiness reactor primitives: direct `extern "C"` bindings to
+//! `poll(2)` and (on Linux) `epoll(7)`, in the same vendored-stub
+//! spirit as the rest of the workspace — no new crate dependencies.
+//!
+//! The serve front-end (`serve/conn.rs`) is a single-threaded
+//! event loop: every listener/connection registers its fd here with a
+//! `usize` token, [`Poller::wait`] parks until readiness or timeout, and
+//! the loop dispatches on the returned [`Event`]s. Worker threads wake
+//! the loop through [`Waker`] (a nonblocking socketpair — the classic
+//! self-pipe trick) when they finish a reply.
+//!
+//! Two backends share one API:
+//!
+//! * [`PollerKind::Poll`] — portable `poll(2)` over a dense pollfd vec.
+//!   O(n) per wait, fine up to a few thousand fds, works everywhere.
+//! * [`PollerKind::Epoll`] — Linux `epoll` with O(ready) waits; this is
+//!   what the 10k-connection cell of `benches/serve_scale.rs` exercises.
+//!
+//! [`PollerKind::Auto`] picks epoll on Linux, poll elsewhere.
+
+use std::io;
+use std::net::TcpStream;
+use std::os::unix::io::{AsRawFd, RawFd};
+use std::os::unix::net::UnixStream;
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// raw syscall surface (the only unsafe in the serve layer)
+// ---------------------------------------------------------------------------
+
+#[repr(C)]
+#[derive(Clone, Copy)]
+struct PollFd {
+    fd: i32,
+    events: i16,
+    revents: i16,
+}
+
+const POLLIN: i16 = 0x001;
+const POLLOUT: i16 = 0x004;
+const POLLERR: i16 = 0x008;
+const POLLHUP: i16 = 0x010;
+
+// Linux passes epoll_event packed on x86-64 (kernel ABI quirk); other
+// architectures use natural alignment.
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+#[repr(C, packed)]
+#[derive(Clone, Copy)]
+struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+#[cfg(all(target_os = "linux", not(target_arch = "x86_64")))]
+#[repr(C)]
+#[derive(Clone, Copy)]
+struct EpollEvent {
+    events: u32,
+    data: u64,
+}
+
+#[cfg(target_os = "linux")]
+const EPOLLIN: u32 = 0x001;
+#[cfg(target_os = "linux")]
+const EPOLLOUT: u32 = 0x004;
+#[cfg(target_os = "linux")]
+const EPOLLERR: u32 = 0x008;
+#[cfg(target_os = "linux")]
+const EPOLLHUP: u32 = 0x010;
+#[cfg(target_os = "linux")]
+const EPOLL_CTL_ADD: i32 = 1;
+#[cfg(target_os = "linux")]
+const EPOLL_CTL_DEL: i32 = 2;
+#[cfg(target_os = "linux")]
+const EPOLL_CTL_MOD: i32 = 3;
+#[cfg(target_os = "linux")]
+const EPOLL_CLOEXEC: i32 = 0o2000000;
+
+#[repr(C)]
+#[derive(Clone, Copy)]
+struct RLimit {
+    cur: u64,
+    max: u64,
+}
+
+#[cfg(target_os = "linux")]
+const RLIMIT_NOFILE: i32 = 7;
+#[cfg(not(target_os = "linux"))]
+const RLIMIT_NOFILE: i32 = 8;
+
+extern "C" {
+    fn poll(fds: *mut PollFd, nfds: u64, timeout_ms: i32) -> i32;
+    fn close(fd: i32) -> i32;
+    fn getrlimit(resource: i32, rlim: *mut RLimit) -> i32;
+    fn setrlimit(resource: i32, rlim: *const RLimit) -> i32;
+    #[cfg(target_os = "linux")]
+    fn epoll_create1(flags: i32) -> i32;
+    #[cfg(target_os = "linux")]
+    fn epoll_ctl(epfd: i32, op: i32, fd: i32, event: *mut EpollEvent) -> i32;
+    #[cfg(target_os = "linux")]
+    fn epoll_wait(epfd: i32, events: *mut EpollEvent, maxevents: i32, timeout_ms: i32) -> i32;
+}
+
+fn timeout_to_ms(timeout: Option<Duration>) -> i32 {
+    match timeout {
+        None => -1,
+        Some(d) => {
+            let ms = d.as_millis().min(i32::MAX as u128) as i32;
+            // round sub-millisecond waits up so a 100µs deadline does not
+            // degenerate into a busy loop
+            if ms == 0 && !d.is_zero() {
+                1
+            } else {
+                ms
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// public API
+// ---------------------------------------------------------------------------
+
+/// Which readiness backend to use. Parsed from `--poller`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PollerKind {
+    /// epoll on Linux, `poll(2)` elsewhere.
+    Auto,
+    /// Linux `epoll(7)`; errors at construction on other platforms.
+    Epoll,
+    /// Portable `poll(2)`.
+    Poll,
+}
+
+impl PollerKind {
+    pub fn parse(s: &str) -> anyhow::Result<PollerKind> {
+        match s {
+            "auto" => Ok(PollerKind::Auto),
+            "epoll" => Ok(PollerKind::Epoll),
+            "poll" => Ok(PollerKind::Poll),
+            other => anyhow::bail!("unknown poller '{other}' (expected auto|epoll|poll)"),
+        }
+    }
+
+    fn resolve(self) -> PollerKind {
+        match self {
+            PollerKind::Auto => {
+                if cfg!(target_os = "linux") {
+                    PollerKind::Epoll
+                } else {
+                    PollerKind::Poll
+                }
+            }
+            k => k,
+        }
+    }
+}
+
+/// Interest set for a registered fd.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Interest {
+    pub readable: bool,
+    pub writable: bool,
+}
+
+impl Interest {
+    pub const READ: Interest = Interest { readable: true, writable: false };
+    pub const WRITE: Interest = Interest { readable: false, writable: true };
+    pub const BOTH: Interest = Interest { readable: true, writable: true };
+}
+
+/// One readiness notification: the registered token plus what happened.
+/// `readable`/`writable` fold HUP/ERR in, so the owner always observes
+/// the condition by performing the I/O (read returns 0 / write errors).
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub token: usize,
+    pub readable: bool,
+    pub writable: bool,
+}
+
+enum Backend {
+    Poll {
+        fds: Vec<PollFd>,
+        tokens: Vec<usize>,
+    },
+    #[cfg(target_os = "linux")]
+    Epoll {
+        epfd: RawFd,
+        buf: Vec<EpollEvent>,
+        registered: usize,
+    },
+}
+
+/// A readiness reactor over raw fds. Single-threaded: not `Sync`, owned
+/// by the event loop. Worker threads interact only through [`Waker`].
+pub struct Poller {
+    backend: Backend,
+}
+
+impl Poller {
+    pub fn new(kind: PollerKind) -> io::Result<Poller> {
+        match kind.resolve() {
+            PollerKind::Poll => Ok(Poller {
+                backend: Backend::Poll { fds: Vec::new(), tokens: Vec::new() },
+            }),
+            #[cfg(target_os = "linux")]
+            PollerKind::Epoll => {
+                let epfd = unsafe { epoll_create1(EPOLL_CLOEXEC) };
+                if epfd < 0 {
+                    return Err(io::Error::last_os_error());
+                }
+                Ok(Poller {
+                    backend: Backend::Epoll {
+                        epfd,
+                        buf: vec![EpollEvent { events: 0, data: 0 }; 1024],
+                        registered: 0,
+                    },
+                })
+            }
+            #[cfg(not(target_os = "linux"))]
+            PollerKind::Epoll => Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                "epoll poller is only available on linux",
+            )),
+            PollerKind::Auto => unreachable!("resolve() removed Auto"),
+        }
+    }
+
+    /// Name of the resolved backend ("epoll" or "poll"), for logs/stats.
+    pub fn backend_name(&self) -> &'static str {
+        match self.backend {
+            Backend::Poll { .. } => "poll",
+            #[cfg(target_os = "linux")]
+            Backend::Epoll { .. } => "epoll",
+        }
+    }
+
+    pub fn register(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+        match &mut self.backend {
+            Backend::Poll { fds, tokens } => {
+                debug_assert!(!fds.iter().any(|p| p.fd == fd), "fd registered twice");
+                fds.push(PollFd { fd, events: events_for(interest), revents: 0 });
+                tokens.push(token);
+                Ok(())
+            }
+            #[cfg(target_os = "linux")]
+            Backend::Epoll { epfd, registered, .. } => {
+                let mut ev = EpollEvent { events: epoll_events_for(interest), data: token as u64 };
+                let rc = unsafe { epoll_ctl(*epfd, EPOLL_CTL_ADD, fd, &mut ev) };
+                if rc < 0 {
+                    return Err(io::Error::last_os_error());
+                }
+                *registered += 1;
+                Ok(())
+            }
+        }
+    }
+
+    /// Update the interest set (and token) of an already-registered fd.
+    pub fn modify(&mut self, fd: RawFd, token: usize, interest: Interest) -> io::Result<()> {
+        match &mut self.backend {
+            Backend::Poll { fds, tokens } => {
+                for (p, t) in fds.iter_mut().zip(tokens.iter_mut()) {
+                    if p.fd == fd {
+                        p.events = events_for(interest);
+                        *t = token;
+                        return Ok(());
+                    }
+                }
+                Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered"))
+            }
+            #[cfg(target_os = "linux")]
+            Backend::Epoll { epfd, .. } => {
+                let mut ev = EpollEvent { events: epoll_events_for(interest), data: token as u64 };
+                let rc = unsafe { epoll_ctl(*epfd, EPOLL_CTL_MOD, fd, &mut ev) };
+                if rc < 0 {
+                    return Err(io::Error::last_os_error());
+                }
+                Ok(())
+            }
+        }
+    }
+
+    pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        match &mut self.backend {
+            Backend::Poll { fds, tokens } => {
+                if let Some(i) = fds.iter().position(|p| p.fd == fd) {
+                    fds.swap_remove(i);
+                    tokens.swap_remove(i);
+                    Ok(())
+                } else {
+                    Err(io::Error::new(io::ErrorKind::NotFound, "fd not registered"))
+                }
+            }
+            #[cfg(target_os = "linux")]
+            Backend::Epoll { epfd, registered, .. } => {
+                // pre-2.6.9 kernels demand a non-null event even for DEL
+                let mut ev = EpollEvent { events: 0, data: 0 };
+                let rc = unsafe { epoll_ctl(*epfd, EPOLL_CTL_DEL, fd, &mut ev) };
+                if rc < 0 {
+                    return Err(io::Error::last_os_error());
+                }
+                *registered = registered.saturating_sub(1);
+                Ok(())
+            }
+        }
+    }
+
+    /// Block until at least one registered fd is ready or `timeout`
+    /// elapses, appending readiness to `out`. Returns the number of
+    /// events delivered; 0 means timeout. EINTR is treated as timeout.
+    pub fn wait(&mut self, out: &mut Vec<Event>, timeout: Option<Duration>) -> io::Result<usize> {
+        out.clear();
+        let ms = timeout_to_ms(timeout);
+        match &mut self.backend {
+            Backend::Poll { fds, tokens } => {
+                if fds.is_empty() {
+                    if ms > 0 {
+                        std::thread::sleep(Duration::from_millis(ms as u64));
+                    }
+                    return Ok(0);
+                }
+                let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as u64, ms) };
+                if rc < 0 {
+                    let err = io::Error::last_os_error();
+                    if err.kind() == io::ErrorKind::Interrupted {
+                        return Ok(0);
+                    }
+                    return Err(err);
+                }
+                for (p, &t) in fds.iter().zip(tokens.iter()) {
+                    if p.revents != 0 {
+                        out.push(Event {
+                            token: t,
+                            readable: p.revents & (POLLIN | POLLHUP | POLLERR) != 0,
+                            writable: p.revents & (POLLOUT | POLLERR) != 0,
+                        });
+                    }
+                }
+                Ok(out.len())
+            }
+            #[cfg(target_os = "linux")]
+            Backend::Epoll { epfd, buf, registered } => {
+                if *registered == 0 {
+                    if ms > 0 {
+                        std::thread::sleep(Duration::from_millis(ms as u64));
+                    }
+                    return Ok(0);
+                }
+                let rc =
+                    unsafe { epoll_wait(*epfd, buf.as_mut_ptr(), buf.len() as i32, ms) };
+                if rc < 0 {
+                    let err = io::Error::last_os_error();
+                    if err.kind() == io::ErrorKind::Interrupted {
+                        return Ok(0);
+                    }
+                    return Err(err);
+                }
+                for ev in buf.iter().take(rc as usize) {
+                    let events = ev.events;
+                    let data = ev.data;
+                    out.push(Event {
+                        token: data as usize,
+                        readable: events & (EPOLLIN | EPOLLHUP | EPOLLERR) != 0,
+                        writable: events & (EPOLLOUT | EPOLLERR) != 0,
+                    });
+                }
+                Ok(out.len())
+            }
+        }
+    }
+}
+
+impl Drop for Poller {
+    fn drop(&mut self) {
+        #[cfg(target_os = "linux")]
+        if let Backend::Epoll { epfd, .. } = self.backend {
+            unsafe {
+                close(epfd);
+            }
+        }
+        // the poll backend owns no fds; suppress unused warning elsewhere
+        let _ = close as unsafe extern "C" fn(i32) -> i32;
+    }
+}
+
+fn events_for(interest: Interest) -> i16 {
+    let mut e = 0;
+    if interest.readable {
+        e |= POLLIN;
+    }
+    if interest.writable {
+        e |= POLLOUT;
+    }
+    e
+}
+
+#[cfg(target_os = "linux")]
+fn epoll_events_for(interest: Interest) -> u32 {
+    let mut e = 0;
+    if interest.readable {
+        e |= EPOLLIN;
+    }
+    if interest.writable {
+        e |= EPOLLOUT;
+    }
+    e
+}
+
+// ---------------------------------------------------------------------------
+// waker: cross-thread wakeup for the event loop
+// ---------------------------------------------------------------------------
+
+/// Wakes a [`Poller`] from another thread. One end of a nonblocking
+/// socketpair lives in the event loop (registered readable under a
+/// well-known token); worker threads hold the clonable [`WakeHandle`]
+/// and write a single byte to interrupt `wait`.
+pub struct Waker {
+    read_half: UnixStream,
+    write_half: UnixStream,
+}
+
+/// Cheap clonable handle for worker threads; see [`Waker`].
+#[derive(Clone)]
+pub struct WakeHandle {
+    write_half: std::sync::Arc<UnixStream>,
+}
+
+impl Waker {
+    pub fn new() -> io::Result<Waker> {
+        let (read_half, write_half) = UnixStream::pair()?;
+        read_half.set_nonblocking(true)?;
+        write_half.set_nonblocking(true)?;
+        Ok(Waker { read_half, write_half })
+    }
+
+    pub fn fd(&self) -> RawFd {
+        self.read_half.as_raw_fd()
+    }
+
+    pub fn handle(&self) -> WakeHandle {
+        WakeHandle {
+            write_half: std::sync::Arc::new(
+                self.write_half.try_clone().expect("clone waker socket"),
+            ),
+        }
+    }
+
+    /// Drain every pending wake byte; call once per loop iteration when
+    /// the waker token fires. Never blocks (the fd is nonblocking).
+    pub fn drain(&self) {
+        use std::io::Read;
+        let mut buf = [0u8; 64];
+        loop {
+            match (&self.read_half).read(&mut buf) {
+                Ok(0) => break,
+                Ok(_) => continue,
+                Err(ref e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(_) => break, // WouldBlock: fully drained
+            }
+        }
+    }
+}
+
+impl WakeHandle {
+    /// Signal the event loop. A full pipe means a wake is already
+    /// pending, which is just as good — the error is ignored on purpose.
+    pub fn wake(&self) {
+        use std::io::Write;
+        let _ = (&*self.write_half).write(&[1u8]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// fd-limit helper for the connection-scale bench
+// ---------------------------------------------------------------------------
+
+/// Best-effort raise of `RLIMIT_NOFILE` to at least `want` fds, returning
+/// the resulting soft limit. The 10k-connection bench cell needs ~2 fds
+/// per loopback connection plus slack; default soft limits (often 1024)
+/// would otherwise silently cap the sweep — callers record the returned
+/// value so a clamped run is visible in `BENCH_serve_scale.json`.
+pub fn raise_nofile_limit(want: u64) -> u64 {
+    let mut lim = RLimit { cur: 0, max: 0 };
+    let rc = unsafe { getrlimit(RLIMIT_NOFILE, &mut lim) };
+    if rc != 0 {
+        return 0;
+    }
+    if lim.cur >= want {
+        return lim.cur;
+    }
+    let target = want.min(lim.max);
+    let new = RLimit { cur: target, max: lim.max };
+    let rc = unsafe { setrlimit(RLIMIT_NOFILE, &new) };
+    if rc != 0 {
+        return lim.cur;
+    }
+    target
+}
+
+/// Put a `TcpStream` into nonblocking mode, mapping the error into the
+/// reactor's io::Result vocabulary. Small helper shared by listener
+/// accept paths and the bench load generator.
+pub fn set_nonblocking(stream: &TcpStream) -> io::Result<()> {
+    stream.set_nonblocking(true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::time::Instant;
+
+    fn kinds() -> Vec<PollerKind> {
+        let mut v = vec![PollerKind::Poll];
+        if cfg!(target_os = "linux") {
+            v.push(PollerKind::Epoll);
+        }
+        v
+    }
+
+    #[test]
+    fn wait_times_out_with_no_ready_fds() {
+        for kind in kinds() {
+            let mut p = Poller::new(kind).unwrap();
+            // register a quiescent socket so epoll has something to watch
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let a = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+            a.set_nonblocking(true).unwrap();
+            let (_srv, _) = listener.accept().unwrap();
+            p.register(a.as_raw_fd(), 7, Interest::READ).unwrap();
+            let mut events = Vec::new();
+            let t0 = Instant::now();
+            let n = p.wait(&mut events, Some(Duration::from_millis(30))).unwrap();
+            assert_eq!(n, 0, "{:?}: no data should mean timeout", kind);
+            assert!(t0.elapsed() >= Duration::from_millis(25), "{:?} returned early", kind);
+        }
+    }
+
+    #[test]
+    fn readable_event_carries_token() {
+        for kind in kinds() {
+            let mut p = Poller::new(kind).unwrap();
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let a = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+            let (mut srv, _) = listener.accept().unwrap();
+            a.set_nonblocking(true).unwrap();
+            p.register(a.as_raw_fd(), 42, Interest::READ).unwrap();
+            srv.write_all(b"x").unwrap();
+            let mut events = Vec::new();
+            let n = p.wait(&mut events, Some(Duration::from_secs(2))).unwrap();
+            assert_eq!(n, 1, "{:?}", kind);
+            assert_eq!(events[0].token, 42);
+            assert!(events[0].readable);
+            let mut buf = [0u8; 8];
+            assert_eq!((&a).read(&mut buf).unwrap(), 1);
+        }
+    }
+
+    #[test]
+    fn modify_switches_interest_and_token() {
+        for kind in kinds() {
+            let mut p = Poller::new(kind).unwrap();
+            let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+            let a = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+            let (_srv, _) = listener.accept().unwrap();
+            a.set_nonblocking(true).unwrap();
+            // a fresh socket with empty send buffer is immediately writable
+            p.register(a.as_raw_fd(), 1, Interest::READ).unwrap();
+            let mut events = Vec::new();
+            let n = p.wait(&mut events, Some(Duration::from_millis(20))).unwrap();
+            assert_eq!(n, 0, "{:?}: read interest only, nothing to read", kind);
+            p.modify(a.as_raw_fd(), 9, Interest::WRITE).unwrap();
+            let n = p.wait(&mut events, Some(Duration::from_secs(2))).unwrap();
+            assert_eq!(n, 1, "{:?}", kind);
+            assert_eq!(events[0].token, 9);
+            assert!(events[0].writable);
+            p.deregister(a.as_raw_fd()).unwrap();
+            let n = p.wait(&mut events, Some(Duration::from_millis(20))).unwrap();
+            assert_eq!(n, 0, "{:?}: deregistered fd must not fire", kind);
+        }
+    }
+
+    #[test]
+    fn waker_interrupts_wait_and_drains() {
+        for kind in kinds() {
+            let mut p = Poller::new(kind).unwrap();
+            let waker = Waker::new().unwrap();
+            p.register(waker.fd(), usize::MAX, Interest::READ).unwrap();
+            let handle = waker.handle();
+            let t = std::thread::spawn(move || {
+                std::thread::sleep(Duration::from_millis(30));
+                handle.wake();
+                handle.wake(); // coalesced wakes are fine
+            });
+            let mut events = Vec::new();
+            let n = p.wait(&mut events, Some(Duration::from_secs(5))).unwrap();
+            assert_eq!(n, 1, "{:?}", kind);
+            assert_eq!(events[0].token, usize::MAX);
+            waker.drain();
+            t.join().unwrap();
+            // drained: next wait times out instead of spinning on the stale byte
+            let n = p.wait(&mut events, Some(Duration::from_millis(20))).unwrap();
+            assert_eq!(n, 0, "{:?}: waker byte not drained", kind);
+        }
+    }
+
+    #[test]
+    fn raise_nofile_reports_a_usable_limit() {
+        let got = raise_nofile_limit(256);
+        assert!(got >= 256 || got > 0, "could not query RLIMIT_NOFILE");
+    }
+}

@@ -1,6 +1,15 @@
-//! TCP front end: newline-delimited JSON over std::net.
+//! TCP front end: model registry, admin commands, and the blocking
+//! [`Client`]. The connection layer itself is the event loop in
+//! `serve/conn.rs`: one reactor thread ([`super::poll`]) drives every
+//! connection, feeding classify requests into each model's bounded
+//! [`DynamicBatcher`] admission path.
 //!
-//! Protocol (one JSON object per line):
+//! Two wire protocols share the port, auto-detected per message from
+//! the first byte: newline-delimited JSON (below), and the
+//! length-prefixed binary frame format in [`super::frame`] (first byte
+//! [`frame::MAGIC`](super::frame::MAGIC), which can never start JSON).
+//!
+//! JSON protocol (one object per line):
 //!   request:  {"pixels": [f32; n_in]}              → classify (default model)
 //!             {"model": "name", "pixels": [...]}   → classify a named model
 //!               optional "timeout_ms"              → per-request deadline
@@ -39,9 +48,11 @@
 //! accept loop starts; [`serve`] is the one-call wrapper.
 
 use super::batcher::{DynamicBatcher, ServeError};
+use super::conn::run_event_loop;
 use super::engine::{
     error_loop, worker_loop, Backend, InferenceEngine, ModelConfig, NativeEngine, RuntimeEngine,
 };
+use super::poll::PollerKind;
 use crate::model::{ModelBundle, ModelSpec};
 use crate::runtime::{ArtifactSpec, Manifest, Runtime};
 use crate::util::json::{num, obj, Json};
@@ -53,7 +64,7 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Server configuration.
 #[derive(Debug, Clone)]
@@ -82,6 +93,9 @@ pub struct ServeOptions {
     /// carries no `"timeout_ms"` field (`--timeout-ms`). Replaces the
     /// old hardcoded 10 s receive timeout.
     pub default_timeout: Duration,
+    /// Readiness backend for the connection event loop (`--poller`):
+    /// `Auto` picks epoll on Linux, portable `poll(2)` elsewhere.
+    pub poller: PollerKind,
 }
 
 impl Default for ServeOptions {
@@ -96,6 +110,7 @@ impl Default for ServeOptions {
             max_requests: 0,
             max_pending: 256,
             default_timeout: Duration::from_secs(10),
+            poller: PollerKind::Auto,
         }
     }
 }
@@ -136,19 +151,19 @@ impl ModelSource {
 }
 
 /// One served model: its batcher (shared with the worker threads),
-/// request counters, worker lifecycle, and provenance. Connection
-/// threads hold an `Arc` per request, so a handle displaced from the
-/// registry stays fully functional until its last request drains.
-struct ModelHandle {
-    name: String,
+/// request counters, worker lifecycle, and provenance. The event loop
+/// holds an `Arc` per in-flight request, so a handle displaced from
+/// the registry stays fully functional until its last request drains.
+pub(crate) struct ModelHandle {
+    pub(crate) name: String,
     backend: &'static str,
     workers: usize,
-    n_in: usize,
+    pub(crate) n_in: usize,
     n_out: usize,
     max_batch: usize,
-    batcher: DynamicBatcher,
-    served: AtomicU64,
-    errors: AtomicU64,
+    pub(crate) batcher: DynamicBatcher,
+    pub(crate) served: AtomicU64,
+    pub(crate) errors: AtomicU64,
     /// Worker threads currently running (each decrements on exit);
     /// `{"cmd":"health"}` compares it against `workers` to surface a
     /// permanently-dead worker. The containment in `worker_loop` means
@@ -156,7 +171,7 @@ struct ModelHandle {
     live: Arc<AtomicUsize>,
     /// Per-model stop flag — this model's worker threads watch it; set
     /// by unload / hot-swap / server shutdown.
-    stop: Arc<AtomicBool>,
+    pub(crate) stop: Arc<AtomicBool>,
     joins: Mutex<Vec<std::thread::JoinHandle<()>>>,
     source: ModelSource,
     /// Model identity, when known (absent for injected engines).
@@ -165,22 +180,23 @@ struct ModelHandle {
     bundle_version: Option<u32>,
 }
 
-/// Mutable model registry shared by all connection threads.
-struct Registry {
+/// Mutable model registry shared by the event loop, admin threads and
+/// the batcher completion hooks.
+pub(crate) struct Registry {
     models: RwLock<BTreeMap<String, Arc<ModelHandle>>>,
     default_model: RwLock<String>,
 }
 
 impl Registry {
-    fn get(&self, name: &str) -> Option<Arc<ModelHandle>> {
+    pub(crate) fn get(&self, name: &str) -> Option<Arc<ModelHandle>> {
         self.models.read().unwrap().get(name).cloned()
     }
 
-    fn snapshot(&self) -> Vec<Arc<ModelHandle>> {
+    pub(crate) fn snapshot(&self) -> Vec<Arc<ModelHandle>> {
         self.models.read().unwrap().values().cloned().collect()
     }
 
-    fn names(&self) -> Vec<String> {
+    pub(crate) fn names(&self) -> Vec<String> {
         self.models.read().unwrap().keys().cloned().collect()
     }
 
@@ -193,7 +209,7 @@ impl Registry {
         self.models.write().unwrap().remove(name)
     }
 
-    fn default_name(&self) -> String {
+    pub(crate) fn default_name(&self) -> String {
         self.default_model.read().unwrap().clone()
     }
 
@@ -202,24 +218,25 @@ impl Registry {
     }
 }
 
-/// Everything a connection thread needs, shared behind one `Arc`.
-struct ServeCtx {
-    registry: Registry,
-    stop: AtomicBool,
-    served: AtomicU64,
-    max_requests: u64,
+/// Everything the event loop and admin threads need, shared behind one
+/// `Arc`.
+pub(crate) struct ServeCtx {
+    pub(crate) registry: Registry,
+    pub(crate) stop: AtomicBool,
+    pub(crate) served: AtomicU64,
+    pub(crate) max_requests: u64,
     artifacts_dir: PathBuf,
     backend: Backend,
     default_workers: usize,
     max_wait: Duration,
     max_pending: usize,
-    default_timeout: Duration,
+    pub(crate) default_timeout: Duration,
 }
 
 /// Stop a handle's workers, join them, and fail whatever was queued —
 /// the tail end of unload, hot-swap and shutdown. Never called with a
 /// registry lock held.
-fn retire(handle: &ModelHandle) {
+pub(crate) fn retire(handle: &ModelHandle) {
     handle.stop.store(true, Ordering::Relaxed);
     let joins: Vec<_> = handle.joins.lock().unwrap().drain(..).collect();
     for j in joins {
@@ -393,6 +410,7 @@ pub struct Server {
     listener: TcpListener,
     local: SocketAddr,
     ctx: Arc<ServeCtx>,
+    poller: PollerKind,
 }
 
 impl Server {
@@ -416,6 +434,7 @@ impl Server {
         let listener = TcpListener::bind(&opt.addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
+        let poller = opt.poller;
 
         let ctx = Arc::new(ServeCtx {
             registry: Registry {
@@ -484,7 +503,7 @@ impl Server {
             .or(first_custom)
             .ok_or_else(|| anyhow!("no models configured"))?;
         ctx.registry.set_default(&default);
-        Ok(Server { listener, local, ctx })
+        Ok(Server { listener, local, ctx, poller })
     }
 
     /// The bound address — pass port 0 to `ServeOptions::addr` and read
@@ -493,90 +512,29 @@ impl Server {
         self.local
     }
 
-    /// Accept loop; returns once shut down (via `{"cmd":"shutdown"}` or
-    /// `max_requests`). Finished connection threads are reaped every
-    /// iteration so a long-running server holds one handle per *live*
-    /// connection, not per connection ever accepted.
+    /// Enter the connection event loop (`serve/conn.rs`); returns once
+    /// shut down (via `{"cmd":"shutdown"}` or `max_requests`), after
+    /// retiring every model and answering everything in flight.
     pub fn run(self) -> Result<()> {
-        let ctx = self.ctx;
+        run_event_loop(self.listener, self.ctx, self.poller)
+    }
+}
+
+/// The end-of-run per-model summary (printed by the event loop once
+/// everything has drained).
+pub(crate) fn print_model_summary(ctx: &ServeCtx) {
+    for h in ctx.registry.snapshot() {
+        let s = h.batcher.stats();
         println!(
-            "serving [{}] on {}",
-            ctx.registry.names().join(", "),
-            self.local
+            "{} [{} x{}]: {} served / {} errors in {} batches (mean fill {:.0}%)",
+            h.name,
+            h.backend,
+            h.workers,
+            h.served.load(Ordering::Relaxed),
+            h.errors.load(Ordering::Relaxed),
+            s.batches,
+            100.0 * s.mean_fill(h.max_batch)
         );
-        let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
-        let mut result = Ok(());
-        while !ctx.stop.load(Ordering::Relaxed) {
-            match self.listener.accept() {
-                Ok((stream, _)) => {
-                    let ctx = ctx.clone();
-                    conns.push(std::thread::spawn(move || {
-                        let _ = handle_conn(stream, &ctx);
-                    }));
-                }
-                Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                    std::thread::sleep(Duration::from_millis(2));
-                    if ctx.max_requests > 0
-                        && ctx.served.load(Ordering::Relaxed) >= ctx.max_requests
-                    {
-                        ctx.stop.store(true, Ordering::Relaxed);
-                    }
-                }
-                // fall through to the shutdown sequence below so worker
-                // and connection threads are never leaked
-                Err(e) => {
-                    result = Err(e.into());
-                    break;
-                }
-            }
-            let mut i = 0;
-            while i < conns.len() {
-                if conns[i].is_finished() {
-                    let _ = conns.swap_remove(i).join();
-                } else {
-                    i += 1;
-                }
-            }
-        }
-        // Shutdown: retire every model (stops + joins its workers,
-        // fails queued requests fast), then keep failing stragglers
-        // until every connection thread has exited — a request can
-        // still slip into a queue after a drain pass, so drain and
-        // reap in a loop.
-        ctx.stop.store(true, Ordering::Relaxed);
-        for h in ctx.registry.snapshot() {
-            retire(&h);
-        }
-        while !conns.is_empty() {
-            for h in ctx.registry.snapshot() {
-                h.batcher.fail_pending(ServeError::Unloaded("server shutting down".into()));
-            }
-            let mut i = 0;
-            while i < conns.len() {
-                if conns[i].is_finished() {
-                    let _ = conns.swap_remove(i).join();
-                } else {
-                    i += 1;
-                }
-            }
-            if !conns.is_empty() {
-                std::thread::sleep(Duration::from_millis(5));
-            }
-        }
-        for h in ctx.registry.snapshot() {
-            let s = h.batcher.stats();
-            println!(
-                "{} [{} x{}]: {} served / {} errors in {} batches (mean fill {:.0}%)",
-                h.name,
-                h.backend,
-                h.workers,
-                h.served.load(Ordering::Relaxed),
-                h.errors.load(Ordering::Relaxed),
-                s.batches,
-                100.0 * s.mean_fill(h.max_batch)
-            );
-        }
-        result
     }
 }
 
@@ -654,161 +612,10 @@ fn probe_runtime(dir: &Path, spec: &ArtifactSpec) -> Option<String> {
     None
 }
 
-fn handle_conn(stream: TcpStream, ctx: &ServeCtx) -> Result<()> {
-    stream.set_nodelay(true).ok();
-    // Bounded reads so an idle connection re-checks the stop flag a few
-    // times a second — otherwise a silent client would block this
-    // thread in read() forever and stall the server's shutdown.
-    stream.set_read_timeout(Some(Duration::from_millis(250))).ok();
-    let mut writer = stream.try_clone()?;
-    let mut reader = BufReader::new(stream);
-    let mut line = String::new();
-    loop {
-        match reader.read_line(&mut line) {
-            Ok(0) => break, // EOF: client disconnected
-            Ok(_) => {
-                if !line.trim().is_empty() {
-                    let reply = match Json::parse(&line) {
-                        Ok(req) => handle_request(&req, ctx),
-                        Err(e) => obj(vec![("error", Json::Str(format!("bad json: {e}")))]),
-                    };
-                    writeln!(writer, "{}", reply.to_string())?;
-                }
-                line.clear();
-                if ctx.stop.load(Ordering::Relaxed) {
-                    break;
-                }
-            }
-            // read timeout: partially-read bytes stay appended to `line`
-            // (read_line's documented behavior), so a slow writer still
-            // gets its whole line on a later pass
-            Err(e)
-                if e.kind() == std::io::ErrorKind::WouldBlock
-                    || e.kind() == std::io::ErrorKind::TimedOut =>
-            {
-                if ctx.stop.load(Ordering::Relaxed) {
-                    break;
-                }
-            }
-            Err(e) => return Err(e.into()),
-        }
-    }
-    Ok(())
-}
-
-/// One parsed request → one JSON reply.
-fn handle_request(req: &Json, ctx: &ServeCtx) -> Json {
-    if let Some(cmd) = req.get("cmd").and_then(Json::as_str) {
-        return match cmd {
-            "shutdown" => {
-                ctx.stop.store(true, Ordering::Relaxed);
-                obj(vec![("ok", Json::Bool(true))])
-            }
-            "stats" => stats_json(ctx),
-            "health" => health_json(ctx),
-            "models" => models_json(ctx),
-            "load" => cmd_load(req, ctx),
-            "unload" => cmd_unload(req, ctx),
-            "reload" => cmd_reload(ctx),
-            other => obj(vec![("error", Json::Str(format!("unknown cmd {other}")))]),
-        };
-    }
-    let Some(pixels) = req.get("pixels").and_then(Json::as_arr) else {
-        return obj(vec![("error", Json::Str("need pixels or cmd".into()))]);
-    };
-    let default_name = ctx.registry.default_name();
-    let model_name = req.get("model").and_then(Json::as_str).unwrap_or(&default_name);
-    let Some(handle) = ctx.registry.get(model_name) else {
-        return obj(vec![
-            ("error", Json::Str(format!("unknown model '{model_name}'"))),
-            ("code", Json::Str("unknown_model".into())),
-        ]);
-    };
-    let pixels: Vec<f32> = pixels.iter().filter_map(|v| v.as_f64()).map(|v| v as f32).collect();
-    // Validate here, not in the batcher: a truncated input must fail
-    // loudly instead of being zero-padded into a wrong classification.
-    if pixels.len() != handle.n_in {
-        handle.errors.fetch_add(1, Ordering::Relaxed);
-        return error_reply(
-            &ServeError::BadInput(format!(
-                "model '{}' expects {} pixels, got {}",
-                handle.name,
-                handle.n_in,
-                pixels.len()
-            )),
-            Some(&handle.name),
-        );
-    }
-    if handle.stop.load(Ordering::Relaxed) {
-        return error_reply(
-            &ServeError::Unloaded(format!("model '{}' unloaded", handle.name)),
-            Some(&handle.name),
-        );
-    }
-    // Per-request deadline: the optional "timeout_ms" field overrides
-    // the server default. The same deadline drives both the batcher
-    // (expire instead of running the model for a client that gave up)
-    // and this thread's wait for the reply — no more hardcoded 10 s.
-    let timeout = match req.get("timeout_ms") {
-        None => ctx.default_timeout,
-        Some(v) => match v.as_f64() {
-            Some(ms) if ms.is_finite() && ms >= 1.0 => Duration::from_millis(ms as u64),
-            _ => {
-                handle.errors.fetch_add(1, Ordering::Relaxed);
-                return error_reply(
-                    &ServeError::BadInput("timeout_ms must be a number >= 1".into()),
-                    Some(&handle.name),
-                );
-            }
-        },
-    };
-    let deadline = Instant::now() + timeout;
-    let rx = handle.batcher.handle().submit_by(pixels, deadline);
-    // Small grace past the deadline: the batcher answers expired
-    // requests itself (code "deadline"); this receive timeout is only
-    // the backstop for a reply that never arrives at all, and must not
-    // race the batcher's own expiry pass.
-    match rx.recv_timeout(timeout + Duration::from_millis(250)) {
-        Ok(resp) => {
-            if let Some(err) = resp.error {
-                // overload rejections and deadline expiries have their
-                // own batcher counters; `errors` tracks genuine
-                // failures (engine faults, bad input, unload races)
-                if !matches!(err, ServeError::Overloaded { .. } | ServeError::DeadlineExceeded) {
-                    handle.errors.fetch_add(1, Ordering::Relaxed);
-                }
-                error_reply(&err, Some(&handle.name))
-            } else {
-                handle.served.fetch_add(1, Ordering::Relaxed);
-                // the global counter (and the max_requests stop trigger)
-                // tracks successful classifications only, matching the
-                // per-model counters
-                let n = ctx.served.fetch_add(1, Ordering::Relaxed) + 1;
-                if ctx.max_requests > 0 && n >= ctx.max_requests {
-                    ctx.stop.store(true, Ordering::Relaxed);
-                }
-                obj(vec![
-                    ("class", num(resp.class as f64)),
-                    (
-                        "probs",
-                        Json::Arr(resp.probs.iter().map(|&p| num(p as f64)).collect()),
-                    ),
-                    ("latency_us", num(resp.latency_us as f64)),
-                    ("model", Json::Str(handle.name.clone())),
-                ])
-            }
-        }
-        Err(_) => {
-            handle.errors.fetch_add(1, Ordering::Relaxed);
-            error_reply(&ServeError::Timeout, Some(&handle.name))
-        }
-    }
-}
-
 /// A typed error as a wire reply: human-readable `error`, stable
 /// machine-readable `code`, and — for overload rejections — the
 /// `retry_after_ms` backoff hint the client's retry loop reads.
-fn error_reply(err: &ServeError, model: Option<&str>) -> Json {
+pub(crate) fn error_reply(err: &ServeError, model: Option<&str>) -> Json {
     let mut pairs = vec![
         ("error", Json::Str(err.to_string())),
         ("code", Json::Str(err.code().to_string())),
@@ -826,7 +633,7 @@ fn error_reply(err: &ServeError, model: Option<&str>) -> Json {
 /// registry. An existing model of the same name is swapped out — its
 /// in-flight requests drain on the displaced handle, new requests hit
 /// the fresh engine — and every other model is untouched.
-fn cmd_load(req: &Json, ctx: &ServeCtx) -> Json {
+pub(crate) fn cmd_load(req: &Json, ctx: &ServeCtx) -> Json {
     let Some(path) = req.get("path").and_then(Json::as_str) else {
         return obj(vec![("error", Json::Str("load needs a bundle \"path\"".into()))]);
     };
@@ -860,7 +667,7 @@ fn cmd_load(req: &Json, ctx: &ServeCtx) -> Json {
 
 /// `{"cmd":"unload","model":…}`: remove a model. Its queued requests
 /// get explicit errors; other models keep serving.
-fn cmd_unload(req: &Json, ctx: &ServeCtx) -> Json {
+pub(crate) fn cmd_unload(req: &Json, ctx: &ServeCtx) -> Json {
     let Some(name) = req.get("model").and_then(Json::as_str) else {
         return obj(vec![("error", Json::Str("unload needs a \"model\" name".into()))]);
     };
@@ -885,7 +692,7 @@ fn cmd_unload(req: &Json, ctx: &ServeCtx) -> Json {
 /// swapping each in atomically. Injected engines (no file source) are
 /// skipped; per-model failures are reported without disturbing the
 /// running handle.
-fn cmd_reload(ctx: &ServeCtx) -> Json {
+pub(crate) fn cmd_reload(ctx: &ServeCtx) -> Json {
     let mut reloaded = Vec::new();
     let mut skipped = Vec::new();
     let mut errors = Vec::new();
@@ -917,7 +724,7 @@ fn cmd_reload(ctx: &ServeCtx) -> Json {
 /// entries of the currently-registered models (asserted by the stats
 /// test); `served` is the global counter that also drives
 /// `max_requests`.
-fn stats_json(ctx: &ServeCtx) -> Json {
+pub(crate) fn stats_json(ctx: &ServeCtx) -> Json {
     let mut errors = 0u64;
     let mut rejected = 0u64;
     let mut expired = 0u64;
@@ -962,7 +769,7 @@ fn stats_json(ctx: &ServeCtx) -> Json {
 /// configured vs live worker count, current queue depth against its
 /// bound, and the resilience counters. Top-level `ok` is true iff
 /// every registered model still has at least one live worker.
-fn health_json(ctx: &ServeCtx) -> Json {
+pub(crate) fn health_json(ctx: &ServeCtx) -> Json {
     let mut all_live = true;
     let per: Vec<(String, Json)> = ctx
         .registry
@@ -997,7 +804,7 @@ fn health_json(ctx: &ServeCtx) -> Json {
 /// `{"cmd":"models"}` reply: the registry's metadata — spec identity,
 /// storage accounting, compression, bundle version and source per
 /// model, plus the current default.
-fn models_json(ctx: &ServeCtx) -> Json {
+pub(crate) fn models_json(ctx: &ServeCtx) -> Json {
     let per: Vec<(String, Json)> = ctx
         .registry
         .snapshot()
@@ -1207,7 +1014,10 @@ impl Client {
             obj(vec![("cmd", Json::Str("shutdown".into()))]).to_string()
         )?;
         let mut line = String::new();
-        let _ = self.reader.read_line(&mut line);
+        // Propagate a failed acknowledgement read: the old version
+        // swallowed it, so a server that died mid-shutdown (or a
+        // half-closed socket) looked like a clean stop to callers.
+        self.reader.read_line(&mut line)?;
         Ok(())
     }
 

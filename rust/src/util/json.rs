@@ -18,9 +18,16 @@ pub enum Json {
     Obj(BTreeMap<String, Json>),
 }
 
+/// Nesting bound for the recursive-descent parser. Without it, hostile
+/// input like ten thousand `[`s drives unbounded recursion into a stack
+/// overflow — an *abort*, not a catchable panic — and the parser sits
+/// on a socket trust boundary. 128 levels is far beyond anything the
+/// manifests or the wire protocol produce.
+pub const MAX_DEPTH: usize = 128;
+
 impl Json {
     pub fn parse(s: &str) -> Result<Json, String> {
-        let mut p = Parser { b: s.as_bytes(), i: 0 };
+        let mut p = Parser { b: s.as_bytes(), i: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -28,6 +35,13 @@ impl Json {
             return Err(format!("trailing data at byte {}", p.i));
         }
         Ok(v)
+    }
+
+    /// Parse raw socket bytes: UTF-8 is validated here (with a readable
+    /// error) instead of trusting the transport to deliver text.
+    pub fn parse_bytes(b: &[u8]) -> Result<Json, String> {
+        let s = std::str::from_utf8(b).map_err(|e| format!("invalid utf-8: {e}"))?;
+        Json::parse(s)
     }
 
     // -- typed accessors -------------------------------------------------
@@ -162,6 +176,8 @@ fn write_escaped(s: &str, out: &mut String) {
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
+    /// Current container nesting, bounded by [`MAX_DEPTH`].
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -187,8 +203,15 @@ impl<'a> Parser<'a> {
     fn value(&mut self) -> Result<Json, String> {
         self.skip_ws();
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(c @ (b'{' | b'[')) => {
+                if self.depth >= MAX_DEPTH {
+                    return Err(format!("nesting deeper than {MAX_DEPTH} at byte {}", self.i));
+                }
+                self.depth += 1;
+                let v = if c == b'{' { self.object() } else { self.array() };
+                self.depth -= 1;
+                v
+            }
             Some(b'"') => Ok(Json::Str(self.string()?)),
             Some(b't') => self.lit("true", Json::Bool(true)),
             Some(b'f') => self.lit("false", Json::Bool(false)),
@@ -293,10 +316,12 @@ impl<'a> Parser<'a> {
                     self.i += 1;
                 }
                 Some(_) => {
-                    // consume one UTF-8 scalar
+                    // consume one UTF-8 scalar; clamp the advance so a
+                    // multi-byte lead truncated at end-of-input errors
+                    // instead of slicing past the buffer
                     let start = self.i;
                     let len = utf8_len(self.b[self.i]);
-                    self.i += len;
+                    self.i = (self.i + len).min(self.b.len());
                     let chunk = std::str::from_utf8(&self.b[start..self.i])
                         .map_err(|_| "invalid utf8")?;
                     out.push_str(chunk);
@@ -385,5 +410,74 @@ mod tests {
     fn integers_stay_integral_in_output() {
         assert_eq!(Json::Num(50.0).to_string(), "50");
         assert_eq!(Json::Num(0.5).to_string(), "0.5");
+    }
+
+    // -- trust-boundary properties: the parser reads raw socket input,
+    // so malformed bytes must produce Err, never a panic or an abort --
+
+    #[test]
+    fn every_truncation_of_valid_input_errors_without_panic() {
+        let full = r#"{"a":[1,2.5,{"b":"cA\n"}],"d":-1.5e3,"e":[true,null,false]}"#;
+        for cut in 0..full.len() {
+            // prefixes are all ASCII-safe cut points; each must return
+            // (not panic) — almost all are Err, none are checked for
+            // a specific message
+            let _ = Json::parse(&full[..cut]);
+        }
+        assert!(Json::parse("").is_err());
+        assert!(Json::parse(r#"{"a""#).is_err());
+        assert!(Json::parse(r#""caf\"#).is_err());
+        assert!(Json::parse(r#""\u00"#).is_err());
+    }
+
+    #[test]
+    fn deeply_nested_input_errors_instead_of_overflowing_the_stack() {
+        // 100k open brackets would previously recurse ~200k frames deep
+        // and abort the process on stack overflow; now it's a plain Err
+        let deep = "[".repeat(100_000);
+        assert!(Json::parse(&deep).unwrap_err().contains("nesting"));
+        let deep_obj = "{\"k\":".repeat(50_000) + "1" + &"}".repeat(50_000);
+        assert!(Json::parse(&deep_obj).unwrap_err().contains("nesting"));
+        // well inside the bound still parses fine
+        let ok = format!("{}1{}", "[".repeat(MAX_DEPTH - 1), "]".repeat(MAX_DEPTH - 1));
+        assert!(Json::parse(&ok).is_ok());
+        // one past the bound is the first rejection
+        let edge = format!("{}1{}", "[".repeat(MAX_DEPTH + 1), "]".repeat(MAX_DEPTH + 1));
+        assert!(Json::parse(&edge).unwrap_err().contains("nesting"));
+    }
+
+    #[test]
+    fn nan_and_inf_literals_are_rejected_not_parsed() {
+        // JSON has no NaN/Infinity tokens; a client must send null or a
+        // string instead, and the parser must refuse cleanly
+        for s in [
+            "NaN",
+            "nan",
+            "Infinity",
+            "-Infinity",
+            "inf",
+            "[NaN]",
+            r#"{"x":Infinity}"#,
+            "-",
+            "1e",
+            "--5",
+        ] {
+            assert!(Json::parse(s).is_err(), "{s:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn arbitrary_bytes_never_panic_the_parser() {
+        let mut rng = crate::util::rng::Pcg32::new(0x15A1, 3);
+        for _ in 0..500 {
+            let n = (rng.next_u32() % 64) as usize;
+            let bytes: Vec<u8> = (0..n).map(|_| (rng.next_u32() & 0xff) as u8).collect();
+            let _ = Json::parse_bytes(&bytes); // Err or Ok, never a panic
+            let _ = Json::parse(&String::from_utf8_lossy(&bytes));
+        }
+        assert!(Json::parse_bytes(&[0xff, 0x90, b'"']).unwrap_err().contains("utf-8"));
+        // a truncated multi-byte sequence at end of input
+        assert!(Json::parse_bytes(b"\"caf\xc3").is_err());
+        assert_eq!(Json::parse_bytes(b"{\"a\":1}").unwrap().req_f64("a").unwrap(), 1.0);
     }
 }

@@ -1,0 +1,482 @@
+//! Wire-protocol acceptance for the event-loop front end: the binary
+//! frame format and JSON must be interchangeable on one port (same
+//! semantics, same error taxonomy), binary must do strictly less
+//! per-request allocation work than JSON (asserted structurally here,
+//! measured in `benches/serve_scale.rs`), and protocol violations must
+//! produce typed errors, not hangs or misrouted replies.
+
+use hashednets::serve::frame::{self, FrameReply};
+use hashednets::serve::{
+    Backend, Client, FrameClient, InferenceEngine, ServeOptions, Server,
+};
+use hashednets::tensor::Matrix;
+use hashednets::util::json::Json;
+use hashednets::util::rng::Pcg32;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+// ---- counting allocator: the structural "binary < JSON" assertion ----
+
+/// Counts heap allocations per thread. Const-initialized `Cell<usize>`
+/// TLS has no destructor and no lazy init, so the allocator never
+/// recurses into itself and never touches torn-down TLS.
+struct CountingAlloc;
+
+thread_local! {
+    static ALLOCS: Cell<usize> = const { Cell::new(0) };
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.alloc(l)
+    }
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.with(|c| c.set(c.get() + 1));
+        System.realloc(p, l, new_size)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn allocs() -> usize {
+    ALLOCS.with(|c| c.get())
+}
+
+// ---- server scaffolding (same idiom as serve_chaos.rs) ----
+
+const N_IN: usize = 8;
+const N_OUT: usize = 3;
+
+fn tiny_native(seed: u64) -> Arc<dyn InferenceEngine + Send + Sync> {
+    use hashednets::nn::{LayerKind, Network};
+    let mut net = Network::from_dims(
+        &[N_IN, 6, N_OUT],
+        vec![LayerKind::Hashed { k: 16 }, LayerKind::Dense],
+        hashednets::hash::DEFAULT_SEED_BASE,
+    );
+    net.init(&mut Pcg32::new(seed, 5));
+    Arc::new(hashednets::serve::NativeEngine::from_network(net, 4))
+}
+
+fn base_options() -> ServeOptions {
+    ServeOptions {
+        artifacts_dir: std::env::temp_dir().join("hn_serve_wire_no_artifacts"),
+        models: Vec::new(),
+        addr: "127.0.0.1:0".into(),
+        backend: Backend::Native,
+        workers: 2,
+        ..Default::default()
+    }
+}
+
+fn bind_with(
+    opts: ServeOptions,
+    engines: Vec<(String, Arc<dyn InferenceEngine + Send + Sync>)>,
+) -> (std::thread::JoinHandle<anyhow::Result<()>>, String) {
+    let srv = Server::bind_with_engines(opts, engines).expect("bind");
+    let addr = srv.local_addr().to_string();
+    (std::thread::spawn(move || srv.run()), addr)
+}
+
+fn input_row(req: usize) -> Vec<f32> {
+    (0..N_IN).map(|j| ((req * 13 + j * 5) % 19) as f32 * 0.13 - 1.1).collect()
+}
+
+/// An engine that blocks in `predict` until its gate opens — pins the
+/// worker so overload and deadline paths trigger deterministically.
+struct GatedEngine {
+    gate: Arc<AtomicBool>,
+}
+
+impl InferenceEngine for GatedEngine {
+    fn predict(&self, x: &Matrix) -> anyhow::Result<Matrix> {
+        let t0 = Instant::now();
+        while !self.gate.load(Ordering::Relaxed) {
+            if t0.elapsed() > Duration::from_secs(10) {
+                anyhow::bail!("gate never opened");
+            }
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        Ok(Matrix::zeros(x.rows, N_OUT))
+    }
+    fn n_in(&self) -> usize {
+        N_IN
+    }
+    fn n_out(&self) -> usize {
+        N_OUT
+    }
+    fn max_batch(&self) -> usize {
+        1
+    }
+    fn name(&self) -> &'static str {
+        "gated"
+    }
+}
+
+fn queue_depth(admin: &mut Client, model: &str) -> f64 {
+    admin
+        .health()
+        .expect("health")
+        .get("models")
+        .and_then(|ms| ms.get(model))
+        .map(|h| h.req_f64("queue_depth").unwrap())
+        .unwrap_or(0.0)
+}
+
+// ---- round trips ----
+
+/// The two protocols must agree end to end: same class, same probs
+/// (modulo the JSON f64 text round trip), against the same live model.
+#[test]
+fn binary_and_json_replies_agree_through_the_real_server() {
+    let (server, addr) = bind_with(base_options(), vec![("m".into(), tiny_native(7))]);
+    let mut json = Client::connect(&addr).expect("json connect");
+    let mut bin = FrameClient::connect(&addr).expect("bin connect");
+    for req in 0..20 {
+        let pixels = input_row(req);
+        let (jclass, jprobs, _) = json.classify(&pixels).expect("json classify");
+        match bin.classify(&pixels).expect("bin classify") {
+            FrameReply::Ok { class, probs, latency_us, .. } => {
+                assert_eq!(class as usize, jclass, "class parity at req {req}");
+                assert_eq!(probs.len(), jprobs.len());
+                for (b, j) in probs.iter().zip(&jprobs) {
+                    assert!((b - j).abs() < 1e-5, "probs parity: {b} vs {j}");
+                }
+                let _ = latency_us; // measured server-side; may round to 0 µs
+            }
+            other => panic!("expected Ok frame, got {other:?}"),
+        }
+    }
+    json.shutdown().expect("shutdown");
+    server.join().unwrap().expect("server run");
+}
+
+/// Protocol detection is per message, not per connection: one socket
+/// can interleave JSON lines and binary frames and each request gets
+/// its reply in its own protocol, in order.
+#[test]
+fn one_connection_interleaves_json_and_binary_messages() {
+    let (server, addr) = bind_with(base_options(), vec![("m".into(), tiny_native(9))]);
+    let mut stream = TcpStream::connect(&addr).expect("connect");
+    stream.set_nodelay(true).ok();
+
+    // JSON request first
+    let pixels = input_row(1);
+    let arr: Vec<String> = pixels.iter().map(|p| format!("{p}")).collect();
+    let line = format!("{{\"pixels\": [{}]}}\n", arr.join(", "));
+    stream.write_all(line.as_bytes()).expect("write json");
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let nl = loop {
+        if let Some(pos) = buf.iter().position(|&b| b == b'\n') {
+            break pos;
+        }
+        let n = stream.read(&mut chunk).expect("read");
+        assert!(n > 0, "server closed early");
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let reply = Json::parse(std::str::from_utf8(&buf[..nl]).unwrap()).expect("json reply");
+    let jclass = reply.req_f64("class").expect("class") as u32;
+    buf.drain(..=nl);
+
+    // then a binary frame on the same socket
+    let mut req = Vec::new();
+    frame::encode_request(&mut req, 42, "", 0, &pixels);
+    stream.write_all(&req).expect("write frame");
+    let frame_reply = loop {
+        match frame::decode_reply(&buf).expect("decode") {
+            Some((reply, used)) => {
+                buf.drain(..used);
+                break reply;
+            }
+            None => {
+                let n = stream.read(&mut chunk).expect("read");
+                assert!(n > 0, "server closed early");
+                buf.extend_from_slice(&chunk[..n]);
+            }
+        }
+    };
+    match frame_reply {
+        FrameReply::Ok { req_id, class, .. } => {
+            assert_eq!(req_id, 42);
+            assert_eq!(class, jclass, "same input, same class, both protocols");
+        }
+        other => panic!("expected Ok frame, got {other:?}"),
+    }
+
+    let mut admin = Client::connect(&addr).expect("admin");
+    admin.shutdown().expect("shutdown");
+    server.join().unwrap().expect("server run");
+}
+
+// ---- error-code parity ----
+
+/// `bad_input` and `unknown_model` must carry the same code over both
+/// protocols (numeric codes map through `frame::num_to_code`).
+#[test]
+fn validation_error_codes_match_across_protocols() {
+    let (server, addr) = bind_with(base_options(), vec![("m".into(), tiny_native(3))]);
+    let mut json = Client::connect(&addr).expect("json");
+    let mut bin = FrameClient::connect(&addr).expect("bin");
+
+    // wrong pixel count
+    let v = json.classify_raw(None, &[1.0, 2.0], None).expect("raw");
+    assert_eq!(v.get("code").and_then(Json::as_str), Some("bad_input"));
+    match bin.classify(&[1.0, 2.0]).expect("bin") {
+        FrameReply::Err { code, message, .. } => {
+            assert_eq!(frame::num_to_code(code), "bad_input");
+            assert!(message.contains("expects"), "diagnostic message: {message}");
+        }
+        other => panic!("expected Err frame, got {other:?}"),
+    }
+
+    // unknown model
+    let v = json.classify_raw(Some("nope"), &input_row(0), None).expect("raw");
+    assert_eq!(v.get("code").and_then(Json::as_str), Some("unknown_model"));
+    match bin.classify_model("nope", &input_row(0), 0).expect("bin") {
+        FrameReply::Err { code, message, .. } => {
+            assert_eq!(frame::num_to_code(code), "unknown_model");
+            assert!(message.contains("nope"));
+        }
+        other => panic!("expected Err frame, got {other:?}"),
+    }
+
+    // error counters accrued identically (one bad_input per protocol;
+    // unknown_model is uncounted on both paths)
+    let stats = json.stats().expect("stats");
+    let errs = stats
+        .get("models")
+        .and_then(|m| m.get("m"))
+        .and_then(|m| m.get("errors"))
+        .and_then(Json::as_f64)
+        .unwrap();
+    assert_eq!(errs, 2.0, "one counted bad_input per protocol");
+
+    json.shutdown().expect("shutdown");
+    server.join().unwrap().expect("server run");
+}
+
+/// Overload rejection (with a retry hint) and deadline expiry must
+/// surface identically over both protocols. The two queue slots are
+/// filled by the deadline-parity requests themselves: while they wait
+/// behind the pinned worker the queue is full (→ overload checks),
+/// and once the gate opens their lapsed deadlines expire (→ deadline
+/// checks).
+#[test]
+fn overload_and_deadline_codes_match_across_protocols() {
+    let gate = Arc::new(AtomicBool::new(false));
+    let engine = Arc::new(GatedEngine { gate: gate.clone() });
+    let opts = ServeOptions { workers: 1, max_pending: 2, ..base_options() };
+    let (server, addr) = bind_with(opts, vec![("gated".into(), engine)]);
+    let mut admin = Client::connect(&addr).expect("admin");
+    let pixels = input_row(0);
+
+    // Pin the single worker with a request on a throwaway connection.
+    let mut pin_conn = TcpStream::connect(&addr).expect("pin conn");
+    let arr: Vec<String> = pixels.iter().map(|p| format!("{p}")).collect();
+    let line = format!("{{\"pixels\": [{}]}}\n", arr.join(", "));
+    pin_conn.write_all(line.as_bytes()).unwrap();
+    let t0 = Instant::now();
+    while queue_depth(&mut admin, "gated") > 0.0 {
+        assert!(t0.elapsed() < Duration::from_secs(5), "worker never picked up");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // Fill both queue slots with the deadline-parity requests (40 ms
+    // budgets that will lapse while the worker stays pinned).
+    let jh = {
+        let addr = addr.clone();
+        let pixels = pixels.clone();
+        std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).expect("json deadline conn");
+            c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+            c.classify_raw(None, &pixels, Some(40)).expect("raw")
+        })
+    };
+    let bh = {
+        let addr = addr.clone();
+        let pixels = pixels.clone();
+        std::thread::spawn(move || {
+            let mut c = FrameClient::connect(&addr).expect("bin deadline conn");
+            c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+            c.classify_model("", &pixels, 40).expect("bin")
+        })
+    };
+    let t0 = Instant::now();
+    while queue_depth(&mut admin, "gated") < 2.0 {
+        assert!(t0.elapsed() < Duration::from_secs(5), "queue never filled");
+        std::thread::sleep(Duration::from_millis(5));
+    }
+
+    // Queue full → both protocols get an immediate overload rejection.
+    let mut json = Client::connect(&addr).expect("json");
+    json.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let v = json.classify_raw(None, &pixels, None).expect("raw");
+    assert_eq!(v.get("code").and_then(Json::as_str), Some("overloaded"));
+    assert!(v.get("retry_after_ms").and_then(Json::as_f64).unwrap_or(-1.0) >= 0.0);
+
+    let mut bin = FrameClient::connect(&addr).expect("bin");
+    bin.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    match bin.classify(&pixels).expect("bin") {
+        FrameReply::Err { code, .. } => {
+            assert_eq!(frame::num_to_code(code), "overloaded");
+        }
+        other => panic!("expected overloaded frame, got {other:?}"),
+    }
+
+    // Let the queued requests' deadlines lapse, then release the
+    // worker: its next batch-formation pass expires both with the
+    // typed deadline code.
+    std::thread::sleep(Duration::from_millis(150));
+    gate.store(true, Ordering::Relaxed);
+
+    let v = jh.join().expect("json deadline thread");
+    assert_eq!(
+        v.get("code").and_then(Json::as_str),
+        Some("deadline"),
+        "json deadline reply: {v:?}"
+    );
+    match bh.join().expect("bin deadline thread") {
+        FrameReply::Err { code, .. } => assert_eq!(frame::num_to_code(code), "deadline"),
+        other => panic!("expected deadline frame, got {other:?}"),
+    }
+    drop(pin_conn); // the pin reply, if unread, dies with the socket
+
+    admin.shutdown().expect("shutdown");
+    server.join().unwrap().expect("server run");
+}
+
+// ---- protocol violations ----
+
+/// A malformed frame cannot be resynced: the server answers with one
+/// typed `bad_frame` error frame and closes the connection.
+#[test]
+fn malformed_frame_gets_bad_frame_reply_then_close() {
+    let (server, addr) = bind_with(base_options(), vec![("m".into(), tiny_native(5))]);
+    let mut stream = TcpStream::connect(&addr).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(5))).ok();
+    // valid magic, unsupported opcode
+    stream.write_all(&[frame::MAGIC, 0x7f, 0, 0]).expect("write");
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 1024];
+    let reply = loop {
+        match frame::decode_reply(&buf).expect("decode") {
+            Some((r, used)) => {
+                buf.drain(..used);
+                break r;
+            }
+            None => {
+                let n = stream.read(&mut chunk).expect("read");
+                assert!(n > 0, "closed before replying");
+                buf.extend_from_slice(&chunk[..n]);
+            }
+        }
+    };
+    match reply {
+        FrameReply::Err { code, .. } => assert_eq!(frame::num_to_code(code), "bad_frame"),
+        other => panic!("expected bad_frame, got {other:?}"),
+    }
+    // ... and then EOF
+    let n = stream.read(&mut chunk).expect("read after error");
+    assert_eq!(n, 0, "connection stays open after an unresyncable frame");
+
+    let mut admin = Client::connect(&addr).expect("admin");
+    admin.shutdown().expect("shutdown");
+    server.join().unwrap().expect("server run");
+}
+
+/// Pipelined frames (many requests written before any reply is read)
+/// come back in request order with matching ids.
+#[test]
+fn pipelined_binary_requests_are_answered_in_order() {
+    let (server, addr) = bind_with(base_options(), vec![("m".into(), tiny_native(13))]);
+    let mut stream = TcpStream::connect(&addr).expect("connect");
+    stream.set_nodelay(true).ok();
+    let mut out = Vec::new();
+    for id in 0..32u32 {
+        frame::encode_request(&mut out, id, "", 0, &input_row(id as usize));
+    }
+    stream.write_all(&out).expect("write burst");
+    let mut buf = Vec::new();
+    let mut chunk = [0u8; 4096];
+    let mut next_id = 0u32;
+    while next_id < 32 {
+        match frame::decode_reply(&buf).expect("decode") {
+            Some((FrameReply::Ok { req_id, .. }, used)) => {
+                assert_eq!(req_id, next_id, "FIFO reply order");
+                next_id += 1;
+                buf.drain(..used);
+            }
+            Some((other, _)) => panic!("unexpected error frame: {other:?}"),
+            None => {
+                let n = stream.read(&mut chunk).expect("read");
+                assert!(n > 0, "server closed mid-burst");
+                buf.extend_from_slice(&chunk[..n]);
+            }
+        }
+    }
+    let mut admin = Client::connect(&addr).expect("admin");
+    admin.shutdown().expect("shutdown");
+    server.join().unwrap().expect("server run");
+}
+
+// ---- the structural allocation claim ----
+
+/// Decoding a binary classify request must allocate strictly less —
+/// by an order of magnitude — than parsing the equivalent JSON text.
+/// This is the structural half of the "binary does less work per
+/// request" acceptance criterion; `benches/serve_scale.rs` measures
+/// the wall-clock half.
+#[test]
+fn binary_decode_allocates_order_of_magnitude_less_than_json_parse() {
+    let pixels: Vec<f32> = (0..784).map(|i| (i % 255) as f32 / 255.0).collect();
+
+    // binary: one frame decode
+    let mut buf = Vec::new();
+    frame::encode_request(&mut buf, 1, "mnist", 0, &pixels);
+    let before = allocs();
+    let decoded = frame::decode_request(&buf).unwrap().expect("complete");
+    let bin_allocs = allocs() - before;
+    assert_eq!(decoded.0.pixels.len(), 784);
+
+    // JSON: parse + the pixel extraction the server does per request
+    let arr: Vec<String> = pixels.iter().map(|p| format!("{p}")).collect();
+    let line = format!("{{\"model\": \"mnist\", \"pixels\": [{}]}}", arr.join(", "));
+    let before = allocs();
+    let parsed = Json::parse(&line).expect("parse");
+    let extracted: Vec<f32> = parsed
+        .get("pixels")
+        .and_then(Json::as_arr)
+        .expect("pixels")
+        .iter()
+        .filter_map(|v| v.as_f64())
+        .map(|v| v as f32)
+        .collect();
+    let json_allocs = allocs() - before;
+    assert_eq!(extracted.len(), 784);
+
+    assert!(
+        bin_allocs * 10 <= json_allocs,
+        "binary decode should allocate ≥10x less: binary={bin_allocs} json={json_allocs}"
+    );
+    // and the reply path: raw f32 frame vs JSON float formatting
+    let probs: Vec<f32> = (0..10).map(|i| i as f32 / 10.0).collect();
+    let mut reply_buf = Vec::with_capacity(256);
+    let before = allocs();
+    frame::encode_reply_ok(&mut reply_buf, 1, 3, 250, &probs);
+    let bin_reply_allocs = allocs() - before;
+    assert!(
+        bin_reply_allocs <= 1,
+        "encoding into a pre-sized buffer should not allocate (got {bin_reply_allocs})"
+    );
+}

@@ -22,6 +22,11 @@
 #                   JSON vs binary framing) → BENCH_serve_scale.json.
 #                   HN_SERVE_SCALE_CONNS / HN_SERVE_SCALE_REQS shrink
 #                   it for CI smoke.
+#   make embed-bench  sparse embedding-bag sweep (≥1M virtual rows at
+#                   bag sizes 10/50/200 vs the dense-table roofline at
+#                   compression 1/8–1/64) → BENCH_embed_bag.json.
+#                   HN_EMBED_BENCH_ROWS / HN_EMBED_BENCH_NBAGS shrink
+#                   it for CI smoke.
 #   make bench-diff compare freshly produced BENCH_*.json against the
 #                   committed baselines in benches/baselines/ with
 #                   per-metric tolerance bands (see
@@ -43,7 +48,7 @@
 RUST_DIR := rust
 PY_DIR   := python
 
-.PHONY: check bench serve-bench train-bench pool-bench serve-scale-bench bench-diff artifacts pytest smoke soak clean-bench
+.PHONY: check bench serve-bench train-bench pool-bench serve-scale-bench embed-bench bench-diff artifacts pytest smoke soak clean-bench
 
 # docs are load-bearing: rustdoc runs with -D warnings (broken intra-doc
 # links fail the build) and the doc-examples on ModelSpec / ModelBundle /
@@ -92,6 +97,11 @@ serve-scale-bench:
 	cd $(RUST_DIR) && cargo bench --bench serve_scale
 	@echo "== serve scale report =="
 	@ls -l BENCH_serve_scale.json 2>/dev/null || echo "no BENCH_serve_scale.json produced"
+
+embed-bench:
+	cd $(RUST_DIR) && cargo bench --bench embed_bag
+	@echo "== embed bag report =="
+	@ls -l BENCH_embed_bag.json 2>/dev/null || echo "no BENCH_embed_bag.json produced"
 
 # compare fresh BENCH_*.json against benches/baselines/ — advisory by
 # default (machines differ); BENCH_DIFF_FLAGS="--strict" gates on it

@@ -1,0 +1,154 @@
+//! Embedding-bag bench: sparse bag lookups over a million-row *virtual*
+//! table that is never materialized — resident parameter memory is
+//! bounded by K (the hashed bucket count), not by `rows × dim`.
+//!
+//! Two grids land in `BENCH_embed_bag.json` at the repo root:
+//!
+//!   * the virtual-table sweep — hashed forward at ≥1M virtual rows,
+//!     bag sizes 10/50/200, compression 1/8 and 1/64 (plus one Eq. 12
+//!     backward case per compression)
+//!   * the roofline grid — at a row count small enough to materialize
+//!     (default 100k), the same bag reduction through a dense
+//!     `rows × dim` table vs the hashed path, so the price of
+//!     hash-on-the-fly lookup is recorded rather than guessed
+//!
+//! Env knobs (CI smoke uses small values):
+//!   HN_EMBED_BENCH_ROWS       virtual rows, default 1000000
+//!   HN_EMBED_BENCH_ROOF_ROWS  roofline rows (dense table is
+//!                             materialized!), default min(rows, 100000)
+//!   HN_EMBED_BENCH_NBAGS      bags per request, default 64
+//!
+//!     cargo bench --bench embed_bag        # or: make embed-bench
+
+use hashednets::hash::DEFAULT_SEED_BASE;
+use hashednets::model::BagMode;
+use hashednets::nn::{EmbedBag, TrainOptions};
+use hashednets::tensor::Matrix;
+use hashednets::util::bench::Bench;
+use hashednets::util::rng::Pcg32;
+
+const OUT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_embed_bag.json");
+
+const DIM: usize = 32;
+const BAG_SIZES: [usize; 3] = [10, 50, 200];
+const COMPRESSIONS: [usize; 2] = [8, 64];
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// `n_bags` bags of exactly `bag` random ids each, CSR layout.
+fn fixed_bags(rng: &mut Pcg32, nc: usize, n_bags: usize, bag: usize) -> (Vec<u32>, Vec<u32>) {
+    let mut indices = Vec::with_capacity(n_bags * bag);
+    let mut offsets = Vec::with_capacity(n_bags);
+    for _ in 0..n_bags {
+        offsets.push(indices.len() as u32);
+        for _ in 0..bag {
+            indices.push(rng.next_u32() % nc as u32);
+        }
+    }
+    (indices, offsets)
+}
+
+/// The roofline: the same sum-mode bag reduction through a fully
+/// materialized `rows × dim` table (plain row indexing, no hashing).
+fn dense_forward(table: &[f32], dim: usize, indices: &[u32], offsets: &[u32]) -> Vec<f32> {
+    let n_bags = offsets.len();
+    let mut out = vec![0.0f32; n_bags * dim];
+    for b in 0..n_bags {
+        let start = offsets[b] as usize;
+        let end = offsets.get(b + 1).map(|&o| o as usize).unwrap_or(indices.len());
+        let zrow = &mut out[b * dim..(b + 1) * dim];
+        for &idx in &indices[start..end] {
+            let row = &table[idx as usize * dim..(idx as usize + 1) * dim];
+            for (o, &v) in zrow.iter_mut().zip(row) {
+                *o += v;
+            }
+        }
+    }
+    out
+}
+
+fn mb(cells: usize) -> f64 {
+    cells as f64 * 4.0 / (1024.0 * 1024.0)
+}
+
+fn main() {
+    let rows = env_usize("HN_EMBED_BENCH_ROWS", 1_000_000);
+    let roof_rows = rows.min(env_usize("HN_EMBED_BENCH_ROOF_ROWS", 100_000));
+    let n_bags = env_usize("HN_EMBED_BENCH_NBAGS", 64);
+    println!("== embed_bag: {rows} virtual rows x {DIM} dim, {n_bags} bags/request ==");
+    let mut b = Bench::new(2, 12);
+    let mut rng = Pcg32::new(0xE23A, 5);
+
+    // --- virtual-table sweep: memory bounded by K, never by rows*dim --
+    for c in COMPRESSIONS {
+        let k = (rows * DIM / c).max(1);
+        let mut bag = EmbedBag::new(rows, DIM, k, BagMode::Sum, DEFAULT_SEED_BASE);
+        bag.init(&mut rng);
+        // the acceptance claim, asserted not narrated: resident
+        // parameter memory is exactly K floats
+        assert_eq!(bag.w.len(), k);
+        println!(
+            "resident {:.1} MB (K={k}) for a {:.1} MB virtual table ({rows}x{DIM}, 1/{c})",
+            mb(k),
+            mb(rows * DIM)
+        );
+        for bag_size in BAG_SIZES {
+            let (indices, offsets) = fixed_bags(&mut rng, rows, n_bags, bag_size);
+            b.items_per_iter = Some((n_bags * bag_size) as f64);
+            b.run(&format!("hashed fwd rows={rows} 1/{c} bag={bag_size}"), || {
+                std::hint::black_box(bag.forward(&indices, &offsets));
+            });
+        }
+        // one Eq. 12 backward case per compression (bag=50, ordered off)
+        let (indices, offsets) = fixed_bags(&mut rng, rows, n_bags, 50);
+        let delta = Matrix::from_fn(n_bags, DIM, |i, j| ((i * 13 + j) % 7) as f32 * 0.1 - 0.3);
+        let opts = TrainOptions::default();
+        let mut grad = vec![0.0f32; k];
+        b.items_per_iter = Some((n_bags * 50) as f64);
+        b.run(&format!("hashed bwd rows={rows} 1/{c} bag=50"), || {
+            grad.iter_mut().for_each(|g| *g = 0.0);
+            bag.backward(&indices, &offsets, &delta, &mut grad, &opts);
+            std::hint::black_box(&grad);
+        });
+    }
+
+    // --- roofline grid: dense table vs hashed at materializable size --
+    println!("\n-- roofline at {roof_rows} rows (dense table {:.1} MB) --", mb(roof_rows * DIM));
+    let mut roof_rng = Pcg32::new(0x500F, 9);
+    let mut table = vec![0.0f32; roof_rows * DIM];
+    for v in &mut table {
+        *v = roof_rng.next_f32() - 0.5;
+    }
+    for bag_size in BAG_SIZES {
+        let (indices, offsets) = fixed_bags(&mut rng, roof_rows, n_bags, bag_size);
+        b.items_per_iter = Some((n_bags * bag_size) as f64);
+        b.run(&format!("dense  fwd rows={roof_rows} bag={bag_size} (roofline)"), || {
+            std::hint::black_box(dense_forward(&table, DIM, &indices, &offsets));
+        });
+        for c in COMPRESSIONS {
+            let k = (roof_rows * DIM / c).max(1);
+            let mut hb = EmbedBag::new(roof_rows, DIM, k, BagMode::Sum, DEFAULT_SEED_BASE);
+            hb.init(&mut rng);
+            b.run(&format!("hashed fwd rows={roof_rows} 1/{c} bag={bag_size} (roof)"), || {
+                std::hint::black_box(hb.forward(&indices, &offsets));
+            });
+        }
+    }
+
+    // --- summary + JSON -----------------------------------------------
+    let find = |needle: &str| {
+        b.results().iter().find(|s| s.name.contains(needle)).map(|s| s.mean_ns)
+    };
+    for c in COMPRESSIONS {
+        if let (Some(d), Some(h)) = (
+            find(&format!("dense  fwd rows={roof_rows} bag=50")),
+            find(&format!("hashed fwd rows={roof_rows} 1/{c} bag=50 (roof)")),
+        ) {
+            println!("hash-on-the-fly cost vs dense roofline at bag=50 (1/{c}): {:.2}x", h / d);
+        }
+    }
+    b.write_json(OUT).expect("write bench json");
+    println!("wrote {OUT}");
+}

@@ -52,6 +52,27 @@ def scale_report(p99_us, rps):
     }
 
 
+def embed_report(mean_ns, throughput):
+    """A BENCH_embed_bag.json shard: the util::bench flat array with the
+    embed-bag case names (hashed sweep + dense roofline)."""
+    return [
+        {
+            "name": name,
+            "iters": 12,
+            "mean_ns": mean_ns,
+            "stddev_ns": 5.0,
+            "p50_ns": mean_ns,
+            "p95_ns": mean_ns * 1.1,
+            "throughput": throughput,
+        }
+        for name in (
+            "hashed fwd rows=1000000 1/8 bag=50",
+            "hashed bwd rows=1000000 1/64 bag=50",
+            "dense  fwd rows=100000 bag=50 (roofline)",
+        )
+    ]
+
+
 class TestMetricKind:
     def test_latency_suffixes(self):
         for key in ("mean_ns", "p50_ns", "p99_us", "wall_s", "stddev_ns"):
@@ -86,6 +107,19 @@ class TestLoadCases:
         assert c["p99_us"] == 2000.0
         # booleans must not be coerced into metrics
         assert "truncated" not in c
+
+    def test_embed_bag_schema(self, tmp_path):
+        p = tmp_path / "BENCH_embed_bag.json"
+        write_json(p, embed_report(2000.0, 1.6e6))
+        cases, meta = load_cases(str(p))
+        assert meta == {}
+        assert len(cases) == 3
+        hashed = cases["hashed fwd rows=1000000 1/8 bag=50"]
+        # the gating keys carry the right direction semantics
+        assert metric_kind("mean_ns") == "latency"
+        assert metric_kind("throughput") == "throughput"
+        assert hashed["throughput"] == 1.6e6
+        assert cases["dense  fwd rows=100000 bag=50 (roofline)"]["mean_ns"] == 2000.0
 
     def test_non_json_container_rejected(self, tmp_path):
         p = tmp_path / "BENCH_bad.json"
@@ -182,6 +216,17 @@ class TestMainCli:
         # p99 doubles AND throughput halves — both directions flagged
         write_json(fresh / "BENCH_serve_scale.json", scale_report(4000.0, 4000.0))
         assert self.run(fresh, base, "--strict") == 1
+
+    def test_embed_bag_lookup_throughput_drop_gates_strict(self, tmp_path):
+        fresh, base = tmp_path / "fresh", tmp_path / "base"
+        fresh.mkdir(), base.mkdir()
+        write_json(base / "BENCH_embed_bag.json", embed_report(2000.0, 1.6e6))
+        # lookups/sec halves across the sweep — a real regression
+        write_json(fresh / "BENCH_embed_bag.json", embed_report(4000.0, 0.8e6))
+        assert self.run(fresh, base, "--strict") == 1
+        # within-band wobble passes
+        write_json(fresh / "BENCH_embed_bag.json", embed_report(2200.0, 1.5e6))
+        assert self.run(fresh, base, "--strict") == 0
 
     def test_unreadable_fresh_report_is_skipped(self, tmp_path, capsys):
         fresh, base = tmp_path / "fresh", tmp_path / "base"

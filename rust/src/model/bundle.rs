@@ -36,7 +36,7 @@
 
 use super::{ModelError, ModelSpec};
 use crate::hash::xxh32_bytes;
-use crate::nn::{LayerKind, Network};
+use crate::nn::{EmbedBag, LayerKind, Network};
 use std::path::Path;
 
 /// Current bundle format version. Readers accept any version `<=` this
@@ -267,6 +267,11 @@ impl Network {
     /// call [`Network::init`] to He-initialize, or load a bundle).
     pub fn from_spec(spec: &ModelSpec) -> Result<Network, ModelError> {
         spec.validate()?;
+        if spec.embedding_shape().is_some() {
+            return Err(ModelError::InvalidSpec(
+                "hashed_embedding specs are served by nn::EmbedBag, not Network".into(),
+            ));
+        }
         Ok(Network::from_dims(&spec.dims, spec.layer_kinds(), spec.seed_base))
     }
 
@@ -298,6 +303,12 @@ impl Network {
     /// this network (wrong dims or layer kinds).
     pub fn to_bundle(&self, spec: &ModelSpec) -> Result<ModelBundle, ModelError> {
         spec.validate()?;
+        if spec.embedding_shape().is_some() {
+            return Err(ModelError::ShapeMismatch(format!(
+                "spec '{}' describes a hashed_embedding, not a feed-forward network",
+                spec.name
+            )));
+        }
         let mut dims: Vec<usize> = vec![self.n_in()];
         dims.extend(self.layers.iter().map(|l| l.n));
         if dims != spec.dims {
@@ -329,10 +340,49 @@ impl Network {
     }
 }
 
+impl EmbedBag {
+    /// Reconstruct the embedding table a bundle stores: identity from
+    /// the spec, bucket array copied bit-exactly from the single tensor.
+    pub fn from_bundle(bundle: &ModelBundle) -> Result<EmbedBag, ModelError> {
+        bundle.check_shapes()?;
+        let w = bundle.params.first().cloned().ok_or_else(|| {
+            ModelError::ShapeMismatch("embedding bundle carries no tensor".into())
+        })?;
+        EmbedBag::from_spec(&bundle.spec, w)
+    }
+
+    /// Package the bucket array under `spec` — the inverse of
+    /// [`EmbedBag::from_bundle`]. Fails when the spec does not describe
+    /// this table.
+    pub fn to_bundle(&self, spec: &ModelSpec) -> Result<ModelBundle, ModelError> {
+        spec.validate()?;
+        let Some((nc, dim, k, mode)) = spec.embedding_shape() else {
+            return Err(ModelError::ShapeMismatch(format!(
+                "spec '{}' does not describe a hashed_embedding",
+                spec.name
+            )));
+        };
+        if (nc, dim, k, mode, spec.seed_base)
+            != (self.num_categories, self.dim, self.k(), self.mode, self.seed_base)
+        {
+            return Err(ModelError::ShapeMismatch(format!(
+                "embedding table ({}x{}, k={}, {}, seed {:#010x}) does not match spec '{}'",
+                self.num_categories,
+                self.dim,
+                self.k(),
+                self.mode.as_str(),
+                self.seed_base,
+                spec.name
+            )));
+        }
+        ModelBundle::new(spec.clone(), vec![self.w.clone()])
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::Method;
+    use crate::model::{BagMode, Method};
     use crate::util::rng::Pcg32;
 
     fn spec(method: Method) -> ModelSpec {
@@ -382,6 +432,31 @@ mod tests {
             net.to_bundle(&other),
             Err(ModelError::ShapeMismatch(_))
         ));
+    }
+
+    #[test]
+    fn embedding_bundle_roundtrip_bit_exact() {
+        let s = ModelSpec::embedding("bag", 1_000, 8, 64, BagMode::Mean, 0x9E37_79B9, 4).unwrap();
+        let mut bag = EmbedBag::new(1_000, 8, 64, BagMode::Mean, 0x9E37_79B9);
+        bag.init(&mut Pcg32::new(3, 3));
+        let bundle = bag.to_bundle(&s).unwrap();
+        assert_eq!(bundle.n_params(), 64); // K buckets only, never nc*dim
+        let back = ModelBundle::from_bytes(&bundle.to_bytes()).unwrap();
+        let served = EmbedBag::from_bundle(&back).unwrap();
+        assert_eq!(served.w, bag.w);
+        assert_eq!(served.mode, BagMode::Mean);
+        // the feed-forward loader refuses the same bundle with a typed
+        // error instead of tripping the from_dims assert
+        assert!(matches!(
+            Network::from_bundle(&back),
+            Err(ModelError::InvalidSpec(_))
+        ));
+        // and the embedding loader refuses feed-forward bundles
+        let dense = spec(Method::Hashnet);
+        let mut net = Network::from_spec(&dense).unwrap();
+        net.init(&mut Pcg32::new(1, 1));
+        let nb = net.to_bundle(&dense).unwrap();
+        assert!(EmbedBag::from_bundle(&nb).is_err());
     }
 
     #[test]

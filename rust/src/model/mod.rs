@@ -34,7 +34,7 @@ pub mod bundle;
 pub mod spec;
 
 pub use bundle::{ModelBundle, BUNDLE_VERSION};
-pub use spec::{Method, ModelSpec};
+pub use spec::{BagMode, Method, ModelSpec};
 
 use std::fmt;
 
@@ -67,7 +67,7 @@ impl fmt::Display for ModelError {
             ModelError::Io(e) => write!(f, "model i/o: {e}"),
             ModelError::UnknownMethod(m) => write!(
                 f,
-                "unknown method '{m}' (expected one of hashnet, hashnet_dk, nn, dk, rer, lrd)"
+                "unknown method '{m}' (expected one of hashnet, hashnet_dk, nn, dk, rer, lrd, hashed_embedding)"
             ),
             ModelError::InvalidSpec(why) => write!(f, "invalid model spec: {why}"),
             ModelError::BadMagic => write!(f, "not a model bundle (bad magic)"),

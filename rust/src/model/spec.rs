@@ -5,9 +5,39 @@ use super::ModelError;
 use crate::nn::LayerKind;
 use crate::util::json::{num, obj, Json};
 
+/// How a hashed embedding bag reduces the rows of one bag.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BagMode {
+    /// `z = Σ_r V_r` over the bag's rows.
+    Sum,
+    /// `z = (Σ_r V_r) / |bag|`; an empty bag is the zero vector.
+    Mean,
+}
+
+impl BagMode {
+    pub fn parse(s: &str) -> Result<BagMode, ModelError> {
+        match s {
+            "sum" => Ok(BagMode::Sum),
+            "mean" => Ok(BagMode::Mean),
+            other => Err(ModelError::InvalidSpec(format!(
+                "unknown bag mode '{other}' (expected sum or mean)"
+            ))),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            BagMode::Sum => "sum",
+            BagMode::Mean => "mean",
+        }
+    }
+}
+
 /// The model family — the paper's HashedNet variants plus the four
-/// baselines of §6. Replaces the stringly-typed `"hashnet" | "nn" | …`
-/// matches that used to be duplicated across the coordinator.
+/// baselines of §6, and the hashed embedding bag (the sparse-lookup
+/// workload of ROADMAP item 3). Replaces the stringly-typed
+/// `"hashnet" | "nn" | …` matches that used to be duplicated across
+/// the coordinator.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Method {
     /// HashedNet (paper Eq. 7): `K` real weights per layer, hash-shared.
@@ -22,6 +52,21 @@ pub enum Method {
     Rer,
     /// Low-Rank Decomposition (Denil et al.): learned `W`, fixed `U`.
     Lrd,
+    /// Hashed embedding bag: a `num_categories × dim` virtual lookup
+    /// table backed by `k` real weights via the Eq. 7 hash mapping.
+    /// The virtual table is **never materialized** — rows decompress
+    /// lazily per lookup, so `num_categories` can be millions while
+    /// resident memory stays `O(k)`.
+    HashedEmbedding {
+        /// Virtual row count (categorical vocabulary size).
+        num_categories: usize,
+        /// Embedding width (columns of the virtual table).
+        dim: usize,
+        /// Real-weight budget `K` (the only stored tensor).
+        k: usize,
+        /// Bag reduction: sum or mean.
+        mode: BagMode,
+    },
 }
 
 impl Method {
@@ -37,6 +82,11 @@ impl Method {
 
     /// Fallible parse of the wire/manifest name. The one place in the
     /// system where a method string is interpreted.
+    ///
+    /// `"hashed_embedding"` is *not* parseable here: its variant carries
+    /// shape fields (`num_categories`, `dim`, `k`, `mode`) that a bare
+    /// name cannot supply — [`ModelSpec::from_json`] derives them from
+    /// the spec's `dims`/`budgets`/`mode` instead.
     pub fn parse(s: &str) -> Result<Method, ModelError> {
         match s {
             "hashnet" => Ok(Method::Hashnet),
@@ -49,7 +99,8 @@ impl Method {
         }
     }
 
-    /// The canonical name (inverse of [`Method::parse`]).
+    /// The canonical name (inverse of [`Method::parse`] for the
+    /// field-free methods).
     pub fn as_str(&self) -> &'static str {
         match self {
             Method::Hashnet => "hashnet",
@@ -58,6 +109,7 @@ impl Method {
             Method::Dk => "dk",
             Method::Rer => "rer",
             Method::Lrd => "lrd",
+            Method::HashedEmbedding { .. } => "hashed_embedding",
         }
     }
 
@@ -69,6 +121,11 @@ impl Method {
     /// The layer structure this method uses for a `(m → n)` layer with
     /// stored budget `budget` — the single source of the mapping that
     /// `coordinator::native` used to hard-code (and `panic!` on).
+    ///
+    /// Panics for [`Method::HashedEmbedding`]: embedding specs have no
+    /// dense-activation layers ([`ModelSpec::layer_kinds`] is empty for
+    /// them), and building a `LayerKind::Hashed` here would eagerly
+    /// materialize a per-cell `HashPlan` over the virtual table.
     pub fn layer_kind(&self, n: usize, budget: usize) -> LayerKind {
         match self {
             Method::Hashnet | Method::HashnetDk => LayerKind::Hashed { k: budget },
@@ -77,6 +134,9 @@ impl Method {
             Method::Lrd => {
                 let r = (budget as f64 / n as f64).round().max(1.0) as usize;
                 LayerKind::LowRank { r }
+            }
+            Method::HashedEmbedding { .. } => {
+                panic!("hashed_embedding has no per-layer kind (use nn::EmbedBag)")
             }
         }
     }
@@ -157,10 +217,58 @@ impl ModelSpec {
         Ok(spec)
     }
 
+    /// Convenience constructor for a hashed embedding-bag spec with
+    /// consistent `dims = [num_categories, dim]` / `budgets = [k]`.
+    pub fn embedding(
+        name: impl Into<String>,
+        num_categories: usize,
+        dim: usize,
+        k: usize,
+        mode: BagMode,
+        seed_base: u32,
+        batch: usize,
+    ) -> Result<ModelSpec, ModelError> {
+        ModelSpec::new(
+            name,
+            Method::HashedEmbedding { num_categories, dim, k, mode },
+            vec![num_categories, dim],
+            vec![k],
+            seed_base,
+            batch,
+        )
+    }
+
+    /// The embedding shape `(num_categories, dim, k, mode)` when this
+    /// spec is a [`Method::HashedEmbedding`]; `None` otherwise.
+    pub fn embedding_shape(&self) -> Option<(usize, usize, usize, BagMode)> {
+        match self.method {
+            Method::HashedEmbedding { num_categories, dim, k, mode } => {
+                Some((num_categories, dim, k, mode))
+            }
+            _ => None,
+        }
+    }
+
     /// Check the structural invariants.
     pub fn validate(&self) -> Result<(), ModelError> {
         if self.name.is_empty() {
             return Err(ModelError::InvalidSpec("empty name".into()));
+        }
+        if let Method::HashedEmbedding { num_categories, dim, k, .. } = self.method {
+            // the variant's shape fields and the generic dims/budgets
+            // describe the same table — reject silent disagreement
+            if self.dims != [num_categories, dim] {
+                return Err(ModelError::InvalidSpec(format!(
+                    "embedding dims {:?} must equal [num_categories, dim] = [{num_categories}, {dim}]",
+                    self.dims
+                )));
+            }
+            if self.budgets != [k] {
+                return Err(ModelError::InvalidSpec(format!(
+                    "embedding budgets {:?} must equal [k] = [{k}]",
+                    self.budgets
+                )));
+            }
         }
         if self.dims.len() < 2 {
             return Err(ModelError::InvalidSpec(format!(
@@ -203,8 +311,14 @@ impl ModelSpec {
         *self.dims.last().unwrap()
     }
 
-    /// The per-layer [`LayerKind`]s this spec builds.
+    /// The per-layer [`LayerKind`]s this spec builds. Empty for
+    /// embedding specs: an embedding bag is a lookup table, not a stack
+    /// of activation layers, and building a `LayerKind::Hashed` for it
+    /// would materialize a per-cell plan over the virtual table.
     pub fn layer_kinds(&self) -> Vec<LayerKind> {
+        if matches!(self.method, Method::HashedEmbedding { .. }) {
+            return Vec::new();
+        }
         (0..self.n_layers())
             .map(|l| self.method.layer_kind(self.dims[l + 1], self.budgets[l]))
             .collect()
@@ -212,8 +326,12 @@ impl ModelSpec {
 
     /// Lengths of the parameter tensors in bundle order — the artifact
     /// layout: dense layers contribute `[W (n·m), b (n)]` as two
-    /// tensors, every other kind one tensor.
+    /// tensors, every other kind one tensor. An embedding spec stores
+    /// exactly one tensor: the bucket array `w` of length `k`.
     pub fn param_layout(&self) -> Vec<usize> {
+        if let Some((_, _, k, _)) = self.embedding_shape() {
+            return vec![k];
+        }
         let mut out = Vec::new();
         for (l, kind) in self.layer_kinds().into_iter().enumerate() {
             let (m, n) = (self.dims[l], self.dims[l + 1]);
@@ -233,6 +351,9 @@ impl ModelSpec {
     /// Logical stored-parameter count (RER counts kept edges, not the
     /// dense mask buffer — matching `nn::Layer::n_stored`).
     pub fn stored_params(&self) -> usize {
+        if let Some((_, _, k, _)) = self.embedding_shape() {
+            return k;
+        }
         self.layer_kinds()
             .into_iter()
             .enumerate()
@@ -248,8 +369,13 @@ impl ModelSpec {
     }
 
     /// Virtual (decompressed) parameter count: `n·(m+1)` per
-    /// non-dense layer (bias column folded in), `n·m + n` for dense.
+    /// non-dense layer (bias column folded in), `n·m + n` for dense,
+    /// `num_categories · dim` for an embedding table (no bias column —
+    /// lookups have no activation input).
     pub fn virtual_params(&self) -> usize {
+        if let Some((nc, dim, _, _)) = self.embedding_shape() {
+            return nc * dim;
+        }
         (0..self.n_layers())
             .map(|l| {
                 let (m, n) = (self.dims[l], self.dims[l + 1]);
@@ -266,7 +392,7 @@ impl ModelSpec {
     // -- JSON round trip -------------------------------------------------
 
     pub fn to_json(&self) -> Json {
-        obj(vec![
+        let mut pairs = vec![
             ("name", Json::Str(self.name.clone())),
             ("method", Json::Str(self.method.as_str().to_string())),
             ("dims", Json::Arr(self.dims.iter().map(|&d| num(d as f64)).collect())),
@@ -276,7 +402,11 @@ impl ModelSpec {
             ),
             ("seed_base", num(self.seed_base as f64)),
             ("batch", num(self.batch as f64)),
-        ])
+        ];
+        if let Some((_, _, _, mode)) = self.embedding_shape() {
+            pairs.push(("mode", Json::Str(mode.as_str().to_string())));
+        }
+        obj(pairs)
     }
 
     pub fn from_json(v: &Json) -> Result<ModelSpec, ModelError> {
@@ -289,11 +419,32 @@ impl ModelSpec {
             }
             Ok(vals)
         };
+        let method_str = v.req_str("method").map_err(inv)?;
+        let dims = usize_arr("dims")?;
+        let budgets = usize_arr("budgets")?;
+        let method = if method_str == "hashed_embedding" {
+            // the variant's shape fields derive from dims/budgets; the
+            // optional "mode" key defaults to sum
+            if dims.len() != 2 || budgets.len() != 1 {
+                return Err(ModelError::InvalidSpec(format!(
+                    "hashed_embedding needs dims=[num_categories, dim], budgets=[k]; got dims {dims:?}, budgets {budgets:?}"
+                )));
+            }
+            let mode = match v.get("mode") {
+                Some(m) => BagMode::parse(
+                    m.as_str().ok_or_else(|| ModelError::InvalidSpec("'mode' must be a string".into()))?,
+                )?,
+                None => BagMode::Sum,
+            };
+            Method::HashedEmbedding { num_categories: dims[0], dim: dims[1], k: budgets[0], mode }
+        } else {
+            Method::parse(method_str)?
+        };
         ModelSpec::new(
             v.req_str("name").map_err(inv)?.to_string(),
-            Method::parse(v.req_str("method").map_err(inv)?)?,
-            usize_arr("dims")?,
-            usize_arr("budgets")?,
+            method,
+            dims,
+            budgets,
             v.req_f64("seed_base").map_err(inv)? as u32,
             v.req_f64("batch").map_err(inv)? as usize,
         )
@@ -369,6 +520,39 @@ mod tests {
         let l = ModelSpec::new("l", Method::Lrd, vec![8, 6, 3], vec![12, 6], 1, 4).unwrap();
         // r = round(12/6) = 2 → 6*2 = 12; r = round(6/3) = 2 → 3*2 = 6
         assert_eq!(l.param_layout(), vec![12, 6]);
+    }
+
+    #[test]
+    fn embedding_spec_roundtrip_and_accounting() {
+        let e = ModelSpec::embedding("emb", 1_000_000, 64, 8_000_000, BagMode::Mean, 7, 32)
+            .unwrap();
+        assert_eq!(e.param_layout(), vec![8_000_000]);
+        assert_eq!(e.stored_params(), 8_000_000);
+        assert_eq!(e.virtual_params(), 64_000_000);
+        assert!((e.compression() - 0.125).abs() < 1e-9);
+        assert!(e.layer_kinds().is_empty());
+        assert_eq!(e.embedding_shape(), Some((1_000_000, 64, 8_000_000, BagMode::Mean)));
+        let back = ModelSpec::from_json_str(&e.to_json_string()).unwrap();
+        assert_eq!(back, e);
+        assert!(back.to_json_string().contains("\"mode\":\"mean\""));
+        // "mode" omitted → sum
+        let no_mode = r#"{"name":"e","method":"hashed_embedding","dims":[100,8],"budgets":[25],"seed_base":1,"batch":4}"#;
+        let s = ModelSpec::from_json_str(no_mode).unwrap();
+        assert_eq!(s.embedding_shape(), Some((100, 8, 25, BagMode::Sum)));
+    }
+
+    #[test]
+    fn embedding_spec_rejects_inconsistent_shapes() {
+        // variant fields must agree with dims/budgets
+        let m = Method::HashedEmbedding { num_categories: 10, dim: 4, k: 5, mode: BagMode::Sum };
+        assert!(ModelSpec::new("e", m, vec![10, 5], vec![5], 1, 4).is_err());
+        assert!(ModelSpec::new("e", m, vec![10, 4], vec![6], 1, 4).is_err());
+        assert!(ModelSpec::new("e", m, vec![10, 4], vec![5], 1, 4).is_ok());
+        // three dims can't be an embedding table
+        let bad = r#"{"name":"e","method":"hashed_embedding","dims":[10,4,2],"budgets":[5,3],"seed_base":1,"batch":4}"#;
+        assert!(ModelSpec::from_json_str(bad).is_err());
+        let bad_mode = r#"{"name":"e","method":"hashed_embedding","dims":[10,4],"budgets":[5],"seed_base":1,"batch":4,"mode":"max"}"#;
+        assert!(ModelSpec::from_json_str(bad_mode).is_err());
     }
 
     #[test]

@@ -1,0 +1,624 @@
+//! Hashed embedding bags: the paper's Eq. 7 weight sharing applied to a
+//! lookup table whose virtual size can exceed RAM.
+//!
+//! A [`EmbedBag`] is a virtual `num_categories × dim` table `V` backed
+//! by `k` real weights: `V[r][c] = ξ(r,c) · w[h(r,c)]` with the same
+//! `xxh32` bucket/sign mapping every hashed layer uses
+//! ([`crate::hash::bucket_sign`]). The crucial difference from
+//! [`super::Layer`]'s `LayerKind::Hashed` is **when** the mapping is
+//! evaluated: a hashed layer builds a per-cell [`crate::hash::HashPlan`]
+//! eagerly (4 bytes per virtual cell — fine at 785×1000, fatal at
+//! 1M×64), while an embedding bag hashes `(row, col)` lazily per
+//! requested row. The bucket array `w` plus `(num_categories, dim, k,
+//! seed)` is the *only* representation; the virtual table is never
+//! allocated, so resident memory is `O(k)` however large
+//! `num_categories` grows (ROADMAP item 3).
+//!
+//! # Mapping to the paper
+//!
+//! | code | paper |
+//! |------|-------|
+//! | [`EmbedBag::forward`] | Eq. 8 specialized to one-hot bags: `z_c = Σ_{r ∈ bag} ξ(r,c)·w_{h(r,c)}` — the activation `a_j` is the bag's multiset indicator |
+//! | [`EmbedBag::backward`] | Eq. 12 over the *touched* cells only: `∂w_b = Σ_{(r,c): h(r,c)=b} ξ(r,c)·δ_c`, accumulated sequentially per bucket off a per-batch mini inverse map |
+//! | `k` | the real-weight budget `K` (§4.1) |
+//!
+//! Structured Multi-Hashing (Eban et al.) motivates the kernel shape:
+//! the per-row inner loop runs contiguously over `dim` (`c = 0..dim`,
+//! one hash + one multiply-add per column, output row contiguous), so
+//! the gather stays vectorizable instead of striding the bucket array.
+//!
+//! # Bags
+//!
+//! Requests arrive CSR-style as `indices` + `offsets` (the
+//! `EmbeddingBag` convention): bag `i` is
+//! `indices[offsets[i] .. offsets[i+1]]`, the last bag ending at
+//! `indices.len()`. An empty bag reduces to the zero vector in both
+//! modes.
+//!
+//! # Determinism
+//!
+//! Forward: each bag is produced by exactly one pool task and its
+//! summation order is the request's index order, so results are
+//! bit-identical at any thread count. Backward: the mini inverse map
+//! fixes each bucket's cell order to the batch scan order, buckets are
+//! accumulated sequentially within disjoint bucket ranges
+//! ([`crate::rt::pool::run_parts`] over `split_at_mut` spans), so `∂w`
+//! is bit-identical at any thread count in *both* reduction modes —
+//! the same contract as `nn::layers::inverse_weight_grad`.
+
+use crate::hash::{bucket_sign, layer_seeds};
+use crate::model::{BagMode, ModelError, ModelSpec};
+use crate::tensor::Matrix;
+
+use super::TrainOptions;
+
+/// Below this many hash+multiply-add cells a call stays single-threaded
+/// (same spawn-amortization bar as `nn::layers`).
+const PAR_WORK_THRESHOLD: usize = 1 << 21;
+
+/// A hashed embedding bag: `k` stored weights standing in for a
+/// `num_categories × dim` virtual table. See the module docs.
+#[derive(Debug, Clone)]
+pub struct EmbedBag {
+    pub num_categories: usize,
+    pub dim: usize,
+    pub mode: BagMode,
+    pub seed_base: u32,
+    /// Bucket hash seed (`h` of §4.2, layer index 0).
+    seed_h: u32,
+    /// Sign hash seed (`ξ` of §4.2).
+    seed_xi: u32,
+    /// The stored bucket array — the entire model (`len == k`).
+    pub w: Vec<f32>,
+}
+
+impl EmbedBag {
+    /// Build with zeroed weights.
+    pub fn new(num_categories: usize, dim: usize, k: usize, mode: BagMode, seed_base: u32) -> EmbedBag {
+        assert!(num_categories > 0 && dim > 0 && k > 0, "zero embedding shape");
+        assert!(
+            num_categories.checked_mul(dim).is_some_and(|c| c <= u32::MAX as usize),
+            "virtual table exceeds the u32 cell-key space"
+        );
+        let (seed_h, seed_xi) = layer_seeds(0, seed_base);
+        EmbedBag { num_categories, dim, mode, seed_base, seed_h, seed_xi, w: vec![0.0; k] }
+    }
+
+    /// He-style init matching `Layer::init`'s hashed arm (fan-in = dim).
+    pub fn init(&mut self, rng: &mut crate::util::rng::Pcg32) {
+        let std = (2.0 / self.dim as f32).sqrt();
+        rng.fill_normal(&mut self.w, std);
+    }
+
+    /// Build from a spec + its single parameter tensor (bundle load).
+    pub fn from_spec(spec: &ModelSpec, w: Vec<f32>) -> Result<EmbedBag, ModelError> {
+        let Some((nc, dim, k, mode)) = spec.embedding_shape() else {
+            return Err(ModelError::InvalidSpec(format!(
+                "method '{}' is not an embedding spec",
+                spec.method.as_str()
+            )));
+        };
+        if w.len() != k {
+            return Err(ModelError::ShapeMismatch(format!(
+                "embedding weights: expected {k} values, got {}",
+                w.len()
+            )));
+        }
+        let mut e = EmbedBag::new(nc, dim, k, mode, spec.seed_base);
+        e.w = w;
+        Ok(e)
+    }
+
+    pub fn k(&self) -> usize {
+        self.w.len()
+    }
+
+    /// The bucket/sign mapping of virtual cell `(row, col)` — lazy
+    /// twin of `HashPlan`'s packed entry, computed per lookup.
+    #[inline]
+    pub fn cell(&self, row: usize, col: usize) -> (usize, f32) {
+        let (b, sign) =
+            bucket_sign(row as u32, col as u32, self.dim as u32, self.w.len() as u32, self.seed_h, self.seed_xi);
+        (b as usize, sign)
+    }
+
+    /// Decompress virtual row `row` into `out` (`len == dim`):
+    /// `out[c] = ξ(row,c)·w[h(row,c)]`. The contiguous-over-`dim`
+    /// primitive both forward and backward are built on.
+    #[inline]
+    pub fn decompress_row_into(&self, row: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.dim);
+        for (c, o) in out.iter_mut().enumerate() {
+            let (b, sign) = self.cell(row, c);
+            *o = sign * self.w[b];
+        }
+    }
+
+    /// Validate a CSR `indices`/`offsets` request against this table.
+    /// Returns the bag count, or a human-readable reason (`bad_input`
+    /// at the wire) — the same checks every entry path applies, so
+    /// JSON and binary requests fail identically.
+    pub fn validate_bags(&self, indices: &[u32], offsets: &[u32]) -> Result<usize, String> {
+        validate_bags(indices, offsets, self.num_categories)
+    }
+
+    /// Forward bag lookup (Eq. 8 over one-hot bags): returns a
+    /// `(n_bags × dim)` matrix, bag `i` reduced over
+    /// `indices[offsets[i]..offsets[i+1]]`. Bags are split across pool
+    /// tasks when the total work clears the spawn-amortization bar;
+    /// each bag is computed by exactly one task in request order, so
+    /// the result is bit-identical at any thread count.
+    pub fn forward(&self, indices: &[u32], offsets: &[u32]) -> Matrix {
+        let n_bags = offsets.len();
+        let dim = self.dim;
+        let mut z = Matrix::zeros(n_bags, dim);
+        if n_bags == 0 {
+            return z;
+        }
+        let work = indices.len() * dim;
+        let threads = if work < PAR_WORK_THRESHOLD {
+            1
+        } else {
+            crate::rt::pool::max_concurrency().min(n_bags).max(1)
+        };
+        let bags_per = n_bags.div_ceil(threads);
+        crate::rt::pool::run_parts(
+            z.data.chunks_mut(bags_per * dim).collect(),
+            |t, chunk: &mut [f32]| {
+                let bag0 = t * bags_per;
+                for (bi, zrow) in chunk.chunks_mut(dim).enumerate() {
+                    self.forward_bag_into(indices, offsets, bag0 + bi, zrow);
+                }
+            },
+        );
+        z
+    }
+
+    /// One bag's gather-reduce into `zrow` (`len == dim`). The inner
+    /// loop is contiguous over `dim` per row — one hash + one fused
+    /// multiply-add per column.
+    fn forward_bag_into(&self, indices: &[u32], offsets: &[u32], bag: usize, zrow: &mut [f32]) {
+        let (start, end) = bag_bounds(indices.len(), offsets, bag);
+        for &r in &indices[start..end] {
+            let r = r as usize;
+            for (c, z) in zrow.iter_mut().enumerate() {
+                let (b, sign) = self.cell(r, c);
+                *z += sign * self.w[b];
+            }
+        }
+        if self.mode == BagMode::Mean && end > start {
+            let inv = 1.0 / (end - start) as f32;
+            zrow.iter_mut().for_each(|z| *z *= inv);
+        }
+    }
+
+    /// Backward (Eq. 12 restricted to the batch's touched cells):
+    /// accumulates `∂L/∂w` into `grad` given `delta` (`n_bags × dim`,
+    /// `∂L/∂z`). There is no input gradient — bag indices are discrete.
+    ///
+    /// A per-batch **mini inverse map** is built by counting sort over
+    /// only the `total_indices × dim` cells this batch touches (the
+    /// full-table `InversePlan` would be `num_categories × dim` and is
+    /// exactly what this type exists to avoid). Buckets are then
+    /// accumulated **sequentially** per bucket, parallel over disjoint
+    /// bucket ranges balanced by cell count — no partial buffers, no
+    /// scatter, and `∂w` is bit-identical at any thread count in both
+    /// reduction modes. `opts` only sizes the worker count.
+    pub fn backward(
+        &self,
+        indices: &[u32],
+        offsets: &[u32],
+        delta: &Matrix,
+        grad: &mut [f32],
+        opts: &TrainOptions,
+    ) {
+        let k = self.w.len();
+        assert_eq!(grad.len(), k);
+        let dim = self.dim;
+        let n_bags = offsets.len();
+        assert_eq!((delta.rows, delta.cols), (n_bags, dim), "delta shape");
+        let n_cells = indices.len() * dim;
+        if n_cells == 0 {
+            return;
+        }
+
+        // Pass 1 — hash every touched cell once and record its bucket
+        // and signed contribution ξ(r,c)·δ_{bag,c} (mean mode folds the
+        // 1/|bag| into the contribution). Disjoint per-index spans, so
+        // this pass parallelizes freely.
+        let mut buckets = vec![0u32; n_cells];
+        let mut contrib = vec![0.0f32; n_cells];
+        // per flat index position: which bag it belongs to + its scale
+        let mut pos_bag: Vec<(u32, f32)> = Vec::with_capacity(indices.len());
+        for bag in 0..n_bags {
+            let (start, end) = bag_bounds(indices.len(), offsets, bag);
+            let scale = match self.mode {
+                BagMode::Sum => 1.0,
+                BagMode::Mean if end > start => 1.0 / (end - start) as f32,
+                BagMode::Mean => 0.0,
+            };
+            for _ in start..end {
+                pos_bag.push((bag as u32, scale));
+            }
+        }
+        debug_assert_eq!(pos_bag.len(), indices.len());
+        let threads = if n_cells < PAR_WORK_THRESHOLD {
+            1
+        } else {
+            opts.resolved_threads().min(indices.len()).max(1)
+        };
+        let per = indices.len().div_ceil(threads);
+        let bucket_parts: Vec<(usize, &mut [u32], &mut [f32])> = buckets
+            .chunks_mut(per * dim)
+            .zip(contrib.chunks_mut(per * dim))
+            .enumerate()
+            .map(|(t, (bc, cc))| (t * per, bc, cc))
+            .collect();
+        crate::rt::pool::run_parts(
+            bucket_parts,
+            |_t, (p0, bchunk, cchunk): (usize, &mut [u32], &mut [f32])| {
+                for (pi, (brow, crow)) in
+                    bchunk.chunks_mut(dim).zip(cchunk.chunks_mut(dim)).enumerate()
+                {
+                    let p = p0 + pi;
+                    let r = indices[p] as usize;
+                    let (bag, scale) = pos_bag[p];
+                    let drow = delta.row(bag as usize);
+                    for c in 0..dim {
+                        let (b, sign) = self.cell(r, c);
+                        brow[c] = b as u32;
+                        crow[c] = sign * scale * drow[c];
+                    }
+                }
+            },
+        );
+
+        // Pass 2 — counting sort into a mini CSR by bucket: counts →
+        // prefix starts → cell placement in scan order (sequential so
+        // every bucket's cell order is the batch scan order, which is
+        // what makes the reduction order thread-count-independent).
+        let mut counts = vec![0u32; k];
+        for &b in &buckets {
+            counts[b as usize] += 1;
+        }
+        let mut starts = vec![0u32; k + 1];
+        for b in 0..k {
+            starts[b + 1] = starts[b] + counts[b];
+        }
+        let mut cursor = starts[..k].to_vec();
+        let mut sorted = vec![0.0f32; n_cells];
+        for (p, &b) in buckets.iter().enumerate() {
+            let slot = cursor[b as usize];
+            sorted[slot as usize] = contrib[p];
+            cursor[b as usize] = slot + 1;
+        }
+
+        // Pass 3 — Eq. 12: one sequential accumulation per bucket,
+        // parallel over bucket ranges of roughly equal cell count
+        // writing disjoint grad spans.
+        let bounds = balanced_bucket_ranges(&starts, threads.min(k));
+        let mut parts: Vec<(usize, &mut [f32])> = Vec::with_capacity(bounds.len() - 1);
+        let mut rest = grad;
+        let mut prev = 0usize;
+        for &b in &bounds[1..] {
+            let (head, tail) = rest.split_at_mut(b - prev);
+            parts.push((prev, head));
+            rest = tail;
+            prev = b;
+        }
+        crate::rt::pool::run_parts(parts, |_t, (k0, gpart): (usize, &mut [f32])| {
+            for (kk, g) in gpart.iter_mut().enumerate() {
+                let b = k0 + kk;
+                let (s, e) = (starts[b] as usize, starts[b + 1] as usize);
+                if s == e {
+                    continue;
+                }
+                let mut acc = 0.0f32;
+                for &v in &sorted[s..e] {
+                    acc += v;
+                }
+                *g += acc;
+            }
+        });
+    }
+
+    /// One SGD step on a batch of bags against dense targets
+    /// (`n_bags × dim`), squared-error loss `½‖z − y‖²`. Returns the
+    /// batch loss. The demo training loop `hashednets train` drives for
+    /// embedding specs — the full cross-entropy stack stays with
+    /// `Network`.
+    pub fn sgd_step(
+        &mut self,
+        indices: &[u32],
+        offsets: &[u32],
+        targets: &Matrix,
+        lr: f32,
+        opts: &TrainOptions,
+    ) -> f32 {
+        let z = self.forward(indices, offsets);
+        assert_eq!((z.rows, z.cols), (targets.rows, targets.cols));
+        let mut delta = z;
+        let mut loss = 0.0f32;
+        for (d, &y) in delta.data.iter_mut().zip(&targets.data) {
+            *d -= y;
+            loss += 0.5 * *d * *d;
+        }
+        let mut grad = vec![0.0f32; self.w.len()];
+        self.backward(indices, offsets, &delta, &mut grad, opts);
+        for (w, g) in self.w.iter_mut().zip(&grad) {
+            *w -= lr * g;
+        }
+        loss / (targets.rows.max(1) as f32)
+    }
+}
+
+/// Bag `bag`'s index span: `offsets[bag] .. offsets[bag+1]` (the last
+/// bag ends at `n_indices`). Callers validate monotonicity first.
+#[inline]
+fn bag_bounds(n_indices: usize, offsets: &[u32], bag: usize) -> (usize, usize) {
+    let start = offsets[bag] as usize;
+    let end = offsets.get(bag + 1).map(|&o| o as usize).unwrap_or(n_indices);
+    (start, end)
+}
+
+/// Structural + range validation of a CSR bag request, shared by every
+/// entry path (JSON, binary, CLI) so the failure taxonomy is identical:
+/// offsets must start at 0, be monotone non-decreasing and stay within
+/// `indices`; every index must be `< num_categories`.
+pub fn validate_bags(indices: &[u32], offsets: &[u32], num_categories: usize) -> Result<usize, String> {
+    if offsets.is_empty() {
+        return Err("offsets must contain at least one bag start".into());
+    }
+    if offsets[0] != 0 {
+        return Err(format!("offsets must start at 0, got {}", offsets[0]));
+    }
+    let mut prev = 0u32;
+    for &o in offsets {
+        if o < prev {
+            return Err(format!("offsets must be non-decreasing ({prev} then {o})"));
+        }
+        prev = o;
+    }
+    if prev as usize > indices.len() {
+        return Err(format!(
+            "offset {prev} exceeds {} indices",
+            indices.len()
+        ));
+    }
+    if let Some(&bad) = indices.iter().find(|&&i| i as usize >= num_categories) {
+        return Err(format!("index {bad} out of range (num_categories = {num_categories})"));
+    }
+    Ok(offsets.len())
+}
+
+/// Split buckets `0..k` into `parts` contiguous ranges of roughly equal
+/// cell count, given the CSR `starts` array (`len == k+1`). Returns the
+/// range boundaries (`parts+1` entries, first 0, last `k`) — the mini
+/// twin of `InversePlan::balanced_ranges`.
+fn balanced_bucket_ranges(starts: &[u32], parts: usize) -> Vec<usize> {
+    let k = starts.len() - 1;
+    let parts = parts.clamp(1, k.max(1));
+    let total = starts[k] as usize;
+    let mut bounds = Vec::with_capacity(parts + 1);
+    bounds.push(0);
+    let per = total.div_ceil(parts).max(1);
+    let mut next_target = per;
+    for b in 0..k {
+        if bounds.len() == parts {
+            break;
+        }
+        if starts[b + 1] as usize >= next_target && b + 1 < k {
+            bounds.push(b + 1);
+            next_target = (bounds.len()) * per;
+        }
+    }
+    while bounds.len() < parts {
+        bounds.push(k);
+    }
+    bounds.push(k);
+    // ensure monotone (degenerate distributions can stall the cursor)
+    for i in 1..bounds.len() {
+        if bounds[i] < bounds[i - 1] {
+            bounds[i] = bounds[i - 1];
+        }
+    }
+    bounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn bag(nc: usize, dim: usize, k: usize, mode: BagMode) -> EmbedBag {
+        let mut e = EmbedBag::new(nc, dim, k, mode, crate::hash::DEFAULT_SEED_BASE);
+        let mut rng = Pcg32::new(41, 41);
+        e.init(&mut rng);
+        e
+    }
+
+    /// Reference: materialize the virtual table (small shapes only).
+    fn dense_table(e: &EmbedBag) -> Matrix {
+        let mut t = Matrix::zeros(e.num_categories, e.dim);
+        for r in 0..e.num_categories {
+            e.decompress_row_into(r, t.row_mut(r));
+        }
+        t
+    }
+
+    #[test]
+    fn forward_matches_materialized_table_bit_exact() {
+        for mode in [BagMode::Sum, BagMode::Mean] {
+            let e = bag(100, 16, 37, mode);
+            let t = dense_table(&e);
+            let indices: Vec<u32> = vec![3, 99, 0, 7, 7, 42, 13];
+            let offsets: Vec<u32> = vec![0, 3, 3, 5]; // bag 1 empty, last bag len 2 (+tail)
+            let z = e.forward(&indices, &offsets);
+            assert_eq!((z.rows, z.cols), (4, 16));
+            for b in 0..4 {
+                let (s, en) = bag_bounds(indices.len(), &offsets, b);
+                let mut want = vec![0.0f32; 16];
+                for &r in &indices[s..en] {
+                    for (w, &v) in want.iter_mut().zip(t.row(r as usize)) {
+                        *w += v;
+                    }
+                }
+                if mode == BagMode::Mean && en > s {
+                    want.iter_mut().for_each(|w| *w /= (en - s) as f32);
+                }
+                assert_eq!(
+                    z.row(b).iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    want.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                    "bag {b} mode {mode:?}"
+                );
+            }
+            // empty bag is exactly zero
+            assert!(z.row(1).iter().all(|&v| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn forward_is_thread_count_invariant() {
+        // force the parallel path with a large-enough workload and
+        // compare against the serial answer computed bag by bag
+        let e = bag(10_000, 64, 257, BagMode::Sum);
+        let mut rng = Pcg32::new(5, 5);
+        let n_bags = 600usize;
+        let mut indices = Vec::new();
+        let mut offsets = Vec::with_capacity(n_bags);
+        for _ in 0..n_bags {
+            offsets.push(indices.len() as u32);
+            for _ in 0..(rng.next_u32() % 120) {
+                indices.push(rng.next_u32() % 10_000);
+            }
+        }
+        let par = e.forward(&indices, &offsets);
+        let mut serial = Matrix::zeros(n_bags, 64);
+        for b in 0..n_bags {
+            e.forward_bag_into(&indices, &offsets, b, serial.row_mut(b));
+        }
+        assert_eq!(
+            par.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            serial.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn backward_matches_finite_difference() {
+        for mode in [BagMode::Sum, BagMode::Mean] {
+            let mut e = bag(50, 6, 23, mode);
+            let indices: Vec<u32> = vec![1, 4, 4, 49, 0, 17];
+            let offsets: Vec<u32> = vec![0, 2, 2, 4];
+            let mut rng = Pcg32::new(3, 3);
+            let co = Matrix::from_fn(4, 6, |_, _| rng.normal());
+            let loss = |e: &EmbedBag| -> f32 {
+                e.forward(&indices, &offsets)
+                    .data
+                    .iter()
+                    .zip(&co.data)
+                    .map(|(z, c)| z * c)
+                    .sum()
+            };
+            let mut grad = vec![0.0f32; e.k()];
+            e.backward(&indices, &offsets, &co, &mut grad, &TrainOptions::default());
+            let eps = 1e-2f32;
+            for p in 0..e.k() {
+                let orig = e.w[p];
+                e.w[p] = orig + eps;
+                let lp = loss(&e);
+                e.w[p] = orig - eps;
+                let lm = loss(&e);
+                e.w[p] = orig;
+                let fd = (lp - lm) / (2.0 * eps);
+                assert!(
+                    (fd - grad[p]).abs() < 2e-2 * (1.0 + fd.abs()),
+                    "mode {mode:?} param {p}: fd {fd} vs ad {}",
+                    grad[p]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn backward_is_bit_identical_across_thread_counts() {
+        // big enough to clear PAR_WORK_THRESHOLD so the pool actually
+        // engages; ∂w must match threads=1 bit for bit in both modes
+        let e = bag(100_000, 64, 1024, BagMode::Sum);
+        let mut rng = Pcg32::new(77, 7);
+        let n_bags = 400usize;
+        let mut indices = Vec::new();
+        let mut offsets = Vec::with_capacity(n_bags);
+        for _ in 0..n_bags {
+            offsets.push(indices.len() as u32);
+            for _ in 0..(10 + rng.next_u32() % 150) {
+                indices.push(rng.next_u32() % 100_000);
+            }
+        }
+        let delta = Matrix::from_fn(n_bags, 64, |_, _| rng.normal());
+        let grad_with = |opts: TrainOptions| -> Vec<u32> {
+            let mut g = vec![0.0f32; e.k()];
+            e.backward(&indices, &offsets, &delta, &mut g, &opts);
+            g.iter().map(|v| v.to_bits()).collect()
+        };
+        let g1 = grad_with(TrainOptions::with_threads(1));
+        for t in [2usize, 4, 8] {
+            assert_eq!(g1, grad_with(TrainOptions::with_threads(t)), "fast t{t}");
+            assert_eq!(g1, grad_with(TrainOptions::with_threads(t).ordered()), "ordered t{t}");
+        }
+    }
+
+    #[test]
+    fn validate_bags_catches_malformed_requests() {
+        assert!(validate_bags(&[1, 2], &[], 10).is_err()); // no bags
+        assert!(validate_bags(&[1, 2], &[1, 2], 10).is_err()); // must start at 0
+        assert!(validate_bags(&[1, 2], &[0, 2, 1], 10).is_err()); // decreasing
+        assert!(validate_bags(&[1, 2], &[0, 3], 10).is_err()); // past the end
+        assert!(validate_bags(&[1, 10], &[0, 1], 10).is_err()); // index out of range
+        assert_eq!(validate_bags(&[1, 2], &[0, 2], 10), Ok(2));
+        assert_eq!(validate_bags(&[], &[0, 0, 0], 10), Ok(3)); // all-empty bags
+    }
+
+    #[test]
+    fn sgd_step_reduces_loss() {
+        let mut e = bag(200, 8, 31, BagMode::Mean);
+        let mut rng = Pcg32::new(9, 1);
+        let indices: Vec<u32> = (0..60).map(|_| rng.next_u32() % 200).collect();
+        let offsets: Vec<u32> = (0..12).map(|b| (b * 5) as u32).collect();
+        let targets = Matrix::from_fn(12, 8, |_, _| rng.normal());
+        let opts = TrainOptions::default();
+        let l0 = e.sgd_step(&indices, &offsets, &targets, 0.05, &opts);
+        let mut l = l0;
+        for _ in 0..50 {
+            l = e.sgd_step(&indices, &offsets, &targets, 0.05, &opts);
+        }
+        assert!(l < 0.5 * l0, "loss did not drop: {l0} -> {l}");
+    }
+
+    #[test]
+    fn balanced_ranges_cover_all_buckets() {
+        // uniform counts
+        let starts: Vec<u32> = (0..=16u32).map(|b| b * 4).collect();
+        for parts in [1usize, 2, 3, 5, 16, 40] {
+            let bounds = balanced_bucket_ranges(&starts, parts);
+            assert_eq!(*bounds.first().unwrap(), 0);
+            assert_eq!(*bounds.last().unwrap(), 16);
+            for w in bounds.windows(2) {
+                assert!(w[0] <= w[1]);
+            }
+        }
+        // heavily skewed: everything in bucket 0
+        let skew: Vec<u32> = (0..=8u32).map(|b| if b == 0 { 0 } else { 100 }).collect();
+        let bounds = balanced_bucket_ranges(&skew, 4);
+        assert_eq!(*bounds.last().unwrap(), 8);
+    }
+
+    #[test]
+    fn resident_memory_is_bounded_by_k_not_the_virtual_table() {
+        // 1M × 64 virtual cells (256 MB as f32) backed by 4096 weights;
+        // construction + a lookup must not allocate the table
+        let e = EmbedBag::new(1_000_000, 64, 4096, BagMode::Sum, 1);
+        assert_eq!(e.k(), 4096);
+        let z = e.forward(&[999_999, 0, 123_456], &[0, 3]);
+        assert_eq!((z.rows, z.cols), (1, 64));
+    }
+}

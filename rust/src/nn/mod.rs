@@ -17,8 +17,10 @@
 //! cross-entropy (optionally blended with dark-knowledge soft targets),
 //! and updates are SGD with momentum.
 
+pub mod embed;
 pub mod layers;
 pub mod network;
 
+pub use embed::EmbedBag;
 pub use layers::{Layer, LayerKind, TrainOptions};
 pub use network::{DkTargets, Network, TrainHyper};

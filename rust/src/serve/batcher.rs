@@ -45,10 +45,36 @@ use std::time::{Duration, Instant};
 /// [`DynamicBatcher::bounded`] to pick one explicitly.
 pub const DEFAULT_MAX_PENDING: usize = 1024;
 
-/// One inference request: input row + reply sink + the absolute
+/// What a request carries: the system's two first-class data shapes.
+///
+/// * `Dense` — one `n_in`-wide f32 row (the classify path).
+/// * `Sparse` — a CSR bag request (`indices` + `offsets`, the
+///   `EmbeddingBag` convention) for hashed embedding models. Batching
+///   cost is the *index* count, not the request count, so
+///   [`DynamicBatcher::next_batch`] charges sparse requests against the
+///   total-indices budget ([`DynamicBatcher::with_index_budget`]).
+pub enum Payload {
+    Dense(Vec<f32>),
+    Sparse { indices: Vec<u32>, offsets: Vec<u32> },
+}
+
+impl Payload {
+    /// What this request costs against the batch's index budget. A
+    /// dense row costs 1 (budgeting degenerates to row count); a bag
+    /// request costs its index count (min 1 so empty-bag requests
+    /// still occupy a slot).
+    fn index_cost(&self) -> usize {
+        match self {
+            Payload::Dense(_) => 1,
+            Payload::Sparse { indices, .. } => indices.len().max(1),
+        }
+    }
+}
+
+/// One inference request: input payload + reply sink + the absolute
 /// point in time after which the client stops waiting.
 pub struct Request {
-    pub pixels: Vec<f32>,
+    pub payload: Payload,
     pub reply: ReplySender,
     /// Requests whose deadline has passed are expired with an explicit
     /// [`ServeError::DeadlineExceeded`] at batch-formation/dispatch
@@ -226,6 +252,12 @@ pub struct DynamicBatcher {
     /// (the PJRT artifacts). The native engine takes any row count, so
     /// it skips the padding and the wasted rows.
     pad_batches: bool,
+    /// Total-indices budget per batch for sparse payloads (dense rows
+    /// cost 1 each, so dense batching is unchanged). A batch closes
+    /// when the *next* request would push the summed
+    /// [`Payload::index_cost`] past this — but always admits at least
+    /// one request, so an oversized bag still runs alone.
+    max_indices: usize,
 }
 
 impl DynamicBatcher {
@@ -260,12 +292,20 @@ impl DynamicBatcher {
             max_batch,
             max_wait,
             pad_batches: false,
+            max_indices: usize::MAX,
         }
     }
 
     /// Switch on fixed-shape padding (see `pad_batches`).
     pub fn padded(mut self) -> DynamicBatcher {
         self.pad_batches = true;
+        self
+    }
+
+    /// Cap the summed [`Payload::index_cost`] per batch — sparse
+    /// batching by total index count rather than request count.
+    pub fn with_index_budget(mut self, max_indices: usize) -> DynamicBatcher {
+        self.max_indices = max_indices.max(1);
         self
     }
 
@@ -331,8 +371,26 @@ impl DynamicBatcher {
             let flush = oldest
                 .map(|t| now.duration_since(t) >= self.max_wait)
                 .unwrap_or(false);
-            if q.len() >= self.max_batch || flush {
-                let take = q.len().min(self.max_batch);
+            // How many leading requests fit this batch: bounded by
+            // max_batch and by the total-indices budget (dense rows
+            // cost 1, so the dense path reduces to `min(max_batch)`).
+            let mut take = 0usize;
+            let mut cost = 0usize;
+            for (r, _) in q.iter() {
+                if take >= self.max_batch {
+                    break;
+                }
+                let c = r.payload.index_cost();
+                if take > 0 && cost + c > self.max_indices {
+                    break;
+                }
+                cost += c;
+                take += 1;
+            }
+            // form a batch as soon as one is *full* (either bound hit
+            // while more requests wait) or the oldest request's flush
+            // deadline passed
+            if (take > 0 && (take < q.len() || take == self.max_batch)) || (flush && take > 0) {
                 let batch: Vec<_> = q.drain(..take).collect();
                 self.shared.requests.fetch_add(batch.len() as u64, Ordering::Relaxed);
                 self.shared.batches.fetch_add(1, Ordering::Relaxed);
@@ -422,10 +480,13 @@ impl DynamicBatcher {
         let rows = if self.pad_batches { self.max_batch } else { batch.len() };
         let mut x = Matrix::zeros(rows, n_in);
         for (b, (req, _)) in batch.iter().enumerate() {
-            // wrong-length rows stay zero and get an error reply after
-            // exec — never a silently zero-padded classification
-            if req.pixels.len() == n_in {
-                x.row_mut(b).copy_from_slice(&req.pixels);
+            // wrong-length or wrong-shape rows stay zero and get an
+            // error reply after exec — never a silently zero-padded
+            // classification
+            if let Payload::Dense(pixels) = &req.payload {
+                if pixels.len() == n_in {
+                    x.row_mut(b).copy_from_slice(pixels);
+                }
             }
         }
         // Fault containment: an engine panic must fail this batch, not
@@ -437,20 +498,130 @@ impl DynamicBatcher {
                 let classes = logits.argmax_rows();
                 for (b, (req, t_in)) in batch.into_iter().enumerate() {
                     let latency_us = t_in.elapsed().as_micros() as u64;
-                    let resp = if req.pixels.len() != n_in {
-                        Response::failed(
+                    let resp = match &req.payload {
+                        Payload::Sparse { .. } => Response::failed(
+                            ServeError::BadInput(
+                                "sparse request sent to a dense model".into(),
+                            ),
+                            latency_us,
+                        ),
+                        Payload::Dense(pixels) if pixels.len() != n_in => Response::failed(
                             ServeError::BadInput(format!(
                                 "expected {n_in} pixels, got {}",
-                                req.pixels.len()
+                                pixels.len()
                             )),
                             latency_us,
-                        )
-                    } else {
-                        Response {
+                        ),
+                        Payload::Dense(_) => Response {
                             class: classes[b],
                             probs: probs.row(b).to_vec(),
                             latency_us,
                             error: None,
+                        },
+                    };
+                    let _ = req.reply.send(resp);
+                }
+            }
+            Ok(Err(e)) => {
+                let err = ServeError::Engine(format!("inference failed: {e:#}"));
+                for (req, t_in) in batch {
+                    let _ = req
+                        .reply
+                        .send(Response::failed(err.clone(), t_in.elapsed().as_micros() as u64));
+                }
+            }
+            Err(payload) => {
+                self.shared.panics.fetch_add(1, Ordering::Relaxed);
+                let err =
+                    ServeError::Engine(format!("inference panicked: {}", panic_message(&payload)));
+                for (req, t_in) in batch {
+                    let _ = req
+                        .reply
+                        .send(Response::failed(err.clone(), t_in.elapsed().as_micros() as u64));
+                }
+            }
+        }
+    }
+
+    /// Sparse twin of [`DynamicBatcher::dispatch`]: concatenate every
+    /// request's bags into one CSR pair (each request's offsets shifted
+    /// by the running index count), run `exec` once over the combined
+    /// batch, and scatter each request its own rows back.
+    ///
+    /// The engine returns `(total_bags × dim)` values; request `i`'s
+    /// reply carries its bag count as `class` and its bag vectors
+    /// flattened row-major as `probs` (no softmax — embedding outputs
+    /// are vectors, not logits). The explicit-reply and panic-
+    /// containment contracts are identical to the dense path; a dense
+    /// payload in a sparse batch gets a per-request
+    /// [`ServeError::BadInput`] without poisoning its batchmates.
+    pub fn dispatch_sparse<F>(&self, batch: Vec<(Request, Instant)>, exec: F)
+    where
+        F: FnOnce(&[u32], &[u32]) -> anyhow::Result<Matrix>,
+    {
+        let now = Instant::now();
+        let (batch, dead): (Vec<_>, Vec<_>) =
+            batch.into_iter().partition(|(r, _)| r.deadline > now);
+        if !dead.is_empty() {
+            self.shared.expired.fetch_add(dead.len() as u64, Ordering::Relaxed);
+            for (req, t_in) in dead {
+                let _ = req.reply.send(Response::failed(
+                    ServeError::DeadlineExceeded,
+                    t_in.elapsed().as_micros() as u64,
+                ));
+            }
+        }
+        if batch.is_empty() {
+            return;
+        }
+        // Concatenate: per request either Some((first_bag, n_bags)) —
+        // its row span in the combined output — or None (bad payload).
+        let mut all_indices: Vec<u32> = Vec::new();
+        let mut all_offsets: Vec<u32> = Vec::new();
+        let mut spans: Vec<Option<(usize, usize)>> = Vec::with_capacity(batch.len());
+        for (req, _) in &batch {
+            match &req.payload {
+                Payload::Sparse { indices, offsets } if !offsets.is_empty() => {
+                    let base = all_indices.len() as u32;
+                    spans.push(Some((all_offsets.len(), offsets.len())));
+                    all_offsets.extend(offsets.iter().map(|&o| base + o));
+                    all_indices.extend_from_slice(indices);
+                }
+                _ => spans.push(None),
+            }
+        }
+        if all_offsets.is_empty() {
+            // nothing valid to run: answer everyone without an engine call
+            for (req, t_in) in batch {
+                let _ = req.reply.send(Response::failed(
+                    ServeError::BadInput("expected a sparse indices/offsets request".into()),
+                    t_in.elapsed().as_micros() as u64,
+                ));
+            }
+            return;
+        }
+        let result = catch_unwind(AssertUnwindSafe(|| exec(&all_indices, &all_offsets)));
+        match result {
+            Ok(Ok(values)) => {
+                let dim = values.cols;
+                for ((req, t_in), span) in batch.into_iter().zip(spans) {
+                    let latency_us = t_in.elapsed().as_micros() as u64;
+                    let resp = match span {
+                        None => Response::failed(
+                            ServeError::BadInput(
+                                "expected a sparse indices/offsets request".into(),
+                            ),
+                            latency_us,
+                        ),
+                        Some((first, n_bags)) => {
+                            let lo = first * dim;
+                            let hi = lo + n_bags * dim;
+                            Response {
+                                class: n_bags,
+                                probs: values.data[lo..hi].to_vec(),
+                                latency_us,
+                                error: None,
+                            }
                         }
                     };
                     let _ = req.reply.send(resp);
@@ -528,6 +699,35 @@ impl BatcherHandle {
     /// full queue answers through `reply` immediately (inline, on the
     /// calling thread).
     pub fn submit_with(&self, pixels: Vec<f32>, deadline: Instant, reply: ReplySender) {
+        self.submit_payload(Payload::Dense(pixels), deadline, reply);
+    }
+
+    /// Blocking sparse submit with a one-minute deadline (tests,
+    /// benches, CLI eval).
+    pub fn submit_sparse(&self, indices: Vec<u32>, offsets: Vec<u32>) -> mpsc::Receiver<Response> {
+        let (tx, rx) = mpsc::channel();
+        self.submit_sparse_with(
+            indices,
+            offsets,
+            Instant::now() + Duration::from_secs(60),
+            ReplySender::Channel(tx),
+        );
+        rx
+    }
+
+    /// Sparse twin of [`BatcherHandle::submit_with`]: enqueue a CSR bag
+    /// request. Admission control is shared with the dense path.
+    pub fn submit_sparse_with(
+        &self,
+        indices: Vec<u32>,
+        offsets: Vec<u32>,
+        deadline: Instant,
+        reply: ReplySender,
+    ) {
+        self.submit_payload(Payload::Sparse { indices, offsets }, deadline, reply);
+    }
+
+    fn submit_payload(&self, payload: Payload, deadline: Instant, reply: ReplySender) {
         {
             let mut q = self.shared.queue.lock().unwrap();
             if self.shared.closed.load(Ordering::Relaxed) {
@@ -547,7 +747,7 @@ impl BatcherHandle {
                 ));
                 return;
             }
-            q.push((Request { pixels, reply, deadline }, Instant::now()));
+            q.push((Request { payload, reply, deadline }, Instant::now()));
         }
         self.shared.arrived.notify_one();
     }
@@ -814,5 +1014,106 @@ mod tests {
     fn mean_fill_math() {
         let stats = BatchStats { requests: 6, batches: 2, batch_fill_sum: 6, ..Default::default() };
         assert!((stats.mean_fill(4) - 0.75).abs() < 1e-9);
+    }
+
+    /// Sparse echo: value of bag b, col c = sum of the bag's indices
+    /// (so scatter correctness is visible per request).
+    fn sparse_echo(indices: &[u32], offsets: &[u32]) -> anyhow::Result<Matrix> {
+        let dim = 2usize;
+        let mut m = Matrix::zeros(offsets.len(), dim);
+        for b in 0..offsets.len() {
+            let s = offsets[b] as usize;
+            let e = offsets.get(b + 1).map(|&o| o as usize).unwrap_or(indices.len());
+            let sum: u32 = indices[s..e].iter().sum();
+            for c in 0..dim {
+                m.row_mut(b)[c] = sum as f32 + c as f32;
+            }
+        }
+        Ok(m)
+    }
+
+    #[test]
+    fn sparse_dispatch_concatenates_and_scatters_per_request() {
+        let b = DynamicBatcher::new(4, Duration::from_millis(5));
+        let h = b.handle();
+        // req A: 2 bags {1,2},{3}; req B: 1 bag {10,10}
+        let rx_a = h.submit_sparse(vec![1, 2, 3], vec![0, 2]);
+        let rx_b = h.submit_sparse(vec![10, 10], vec![0]);
+        let batch = b.next_batch(Duration::from_millis(200)).expect("batch");
+        assert_eq!(batch.len(), 2);
+        b.dispatch_sparse(batch, sparse_echo);
+        let a = rx_a.recv().unwrap();
+        assert!(a.error.is_none(), "{:?}", a.error);
+        assert_eq!(a.class, 2); // bag count
+        assert_eq!(a.probs, vec![3.0, 4.0, 3.0, 4.0]); // bags {1,2} and {3}
+        let bb = rx_b.recv().unwrap();
+        assert_eq!(bb.class, 1);
+        assert_eq!(bb.probs, vec![20.0, 21.0]);
+    }
+
+    #[test]
+    fn index_budget_closes_batches_by_total_indices() {
+        // budget 5: req of 4 indices + req of 3 cannot share a batch
+        let b = DynamicBatcher::new(16, Duration::from_millis(100)).with_index_budget(5);
+        let h = b.handle();
+        let _r1 = h.submit_sparse(vec![1, 2, 3, 4], vec![0]);
+        let _r2 = h.submit_sparse(vec![5, 6, 7], vec![0]);
+        // the budget overflow must close the first batch *immediately*,
+        // well before the 100 ms flush window
+        let t0 = Instant::now();
+        let batch = b.next_batch(Duration::from_millis(500)).expect("first batch");
+        assert_eq!(batch.len(), 1, "budget must split the requests");
+        assert!(t0.elapsed() < Duration::from_millis(90), "split batch must not wait for flush");
+        b.dispatch_sparse(batch, sparse_echo);
+        let batch2 = b.next_batch(Duration::from_millis(500)).expect("second batch");
+        assert_eq!(batch2.len(), 1);
+        b.dispatch_sparse(batch2, sparse_echo);
+        // an oversized single request still runs alone
+        let _r3 = h.submit_sparse((0..40).collect(), vec![0]);
+        let batch3 = b.next_batch(Duration::from_millis(500)).expect("oversized");
+        assert_eq!(batch3.len(), 1);
+        b.dispatch_sparse(batch3, sparse_echo);
+    }
+
+    #[test]
+    fn mixed_payload_kinds_fail_individually_not_batchwide() {
+        let b = DynamicBatcher::new(4, Duration::from_millis(5));
+        let h = b.handle();
+        // dense request into a sparse dispatch: per-request bad_input,
+        // the sparse batchmate still gets served
+        let rx_dense = h.submit(vec![1.0, 2.0]);
+        let rx_sparse = h.submit_sparse(vec![7], vec![0]);
+        let batch = b.next_batch(Duration::from_millis(200)).expect("batch");
+        b.dispatch_sparse(batch, sparse_echo);
+        let d = rx_dense.recv().unwrap();
+        assert_eq!(d.error.as_ref().map(ServeError::code), Some("bad_input"));
+        let s = rx_sparse.recv().unwrap();
+        assert!(s.error.is_none());
+        assert_eq!(s.probs, vec![7.0, 8.0]);
+        // and the converse: sparse request into a dense dispatch
+        let rx_sparse2 = h.submit_sparse(vec![1], vec![0]);
+        let rx_dense2 = h.submit(vec![0.0, 5.0, 0.0]);
+        let batch = b.next_batch(Duration::from_millis(200)).expect("batch");
+        b.dispatch(batch, 3, echo_exec);
+        let s2 = rx_sparse2.recv().unwrap();
+        assert_eq!(s2.error.as_ref().map(ServeError::code), Some("bad_input"));
+        let d2 = rx_dense2.recv().unwrap();
+        assert!(d2.error.is_none());
+        assert_eq!(d2.class, 1);
+    }
+
+    #[test]
+    fn sparse_empty_bags_round_trip() {
+        // a request of all-empty bags costs 1 budget unit and yields
+        // zero vectors (engine-dependent — sparse_echo sums to 0)
+        let b = DynamicBatcher::new(4, Duration::from_millis(5));
+        let h = b.handle();
+        let rx = h.submit_sparse(vec![], vec![0, 0, 0]);
+        let batch = b.next_batch(Duration::from_millis(200)).expect("batch");
+        b.dispatch_sparse(batch, sparse_echo);
+        let r = rx.recv().unwrap();
+        assert!(r.error.is_none());
+        assert_eq!(r.class, 3);
+        assert_eq!(r.probs, vec![0.0, 1.0, 0.0, 1.0, 0.0, 1.0]);
     }
 }

@@ -18,8 +18,17 @@
 //!    died (or a slot that was reused) is dropped, never misdelivered;
 //! 5. replies are serialized **in request order** per connection
 //!    (pipelined clients see FIFO semantics, like the old sequential
-//!    loop) and flushed; a full socket registers write interest and
-//!    resumes on writability.
+//!    loop) and flushed with vectored writes ([`WriteQueue`]): a binary
+//!    reply's header and payload are queued as separate buffers and
+//!    leave in one `writev(2)` instead of being copied together first;
+//!    a full socket registers write interest and resumes on
+//!    writability.
+//!
+//! Both dense (`pixels`) and sparse (`indices`/`offsets` embedding-bag)
+//! classify requests flow through the same pending/completion machinery;
+//! the request shape is validated here against the model's kind before
+//! admission, so a dense request to a sparse model (and vice versa)
+//! fails as `bad_input` on either wire protocol.
 //!
 //! Cheap admin commands (`stats`/`health`/`models`/`shutdown`) run
 //! inline on the loop; mutating ones (`load`/`unload`/`reload`) run on
@@ -41,11 +50,12 @@ use super::server::{
     cmd_load, cmd_reload, cmd_unload, error_reply, health_json, models_json, print_model_summary,
     retire, stats_json, ModelHandle, ServeCtx,
 };
+use crate::nn::embed::validate_bags;
 use crate::util::json::{num, obj, Json};
 use anyhow::Result;
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
-use std::io::{ErrorKind, Read, Write};
+use std::io::{ErrorKind, IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::io::AsRawFd;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -98,6 +108,10 @@ struct Pending {
     /// the per-model served/errors accounting at completion time.
     handle: Option<Arc<ModelHandle>>,
     model_name: String,
+    /// Sparse embedding-bag request: a JSON success serializes as
+    /// `"bags"`/`"values"` instead of `"class"`/`"probs"` (the binary
+    /// reply frame is shared — `class` carries the bag count).
+    sparse: bool,
     /// `None` until the batcher/admin completion (or backstop) lands.
     outcome: Option<Outcome>,
 }
@@ -123,13 +137,70 @@ struct Shared<'a> {
     timers: &'a mut Timers,
 }
 
+/// Outgoing reply bytes as a queue of owned buffers flushed with
+/// vectored writes — a reply's header and payload stay separate
+/// (pushed back-to-back) and leave in one `writev(2)` syscall, instead
+/// of being copied into a single flat buffer first. `pos` tracks the
+/// partially-written prefix of the front buffer, so a short write
+/// resumes exactly where the kernel stopped.
+struct WriteQueue {
+    bufs: VecDeque<Vec<u8>>,
+    pos: usize,
+}
+
+impl WriteQueue {
+    fn new() -> WriteQueue {
+        WriteQueue { bufs: VecDeque::new(), pos: 0 }
+    }
+
+    fn push(&mut self, buf: Vec<u8>) {
+        if !buf.is_empty() {
+            self.bufs.push_back(buf);
+        }
+    }
+
+    fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
+    }
+
+    fn clear(&mut self) {
+        self.bufs.clear();
+        self.pos = 0;
+    }
+
+    /// Consume `n` written bytes from the front of the queue.
+    fn advance(&mut self, mut n: usize) {
+        while n > 0 {
+            let left = self.bufs[0].len() - self.pos;
+            if n < left {
+                self.pos += n;
+                return;
+            }
+            n -= left;
+            self.bufs.pop_front();
+            self.pos = 0;
+        }
+    }
+
+    /// One vectored write of everything queued; returns the byte count
+    /// the sink accepted (0 only for a closed sink, per `Write`). I/O
+    /// errors (including `WouldBlock`) pass through untouched.
+    fn write_once(&mut self, sink: &mut impl Write) -> std::io::Result<usize> {
+        let slices: Vec<IoSlice<'_>> = std::iter::once(IoSlice::new(&self.bufs[0][self.pos..]))
+            .chain(self.bufs.iter().skip(1).map(|b| IoSlice::new(b)))
+            .collect();
+        let n = sink.write_vectored(&slices)?;
+        self.advance(n);
+        Ok(n)
+    }
+}
+
 struct Conn {
     stream: TcpStream,
     token: usize,
     gen: u64,
     inbuf: Vec<u8>,
-    outbuf: Vec<u8>,
-    outpos: usize,
+    outq: WriteQueue,
     pending: VecDeque<Pending>,
     next_seq: u64,
     /// Peer EOF, transport error, or an unrecoverable frame error: no
@@ -150,8 +221,7 @@ impl Conn {
             token,
             gen,
             inbuf: Vec::new(),
-            outbuf: Vec::new(),
-            outpos: 0,
+            outq: WriteQueue::new(),
             pending: VecDeque::new(),
             next_seq: 0,
             closing: false,
@@ -178,7 +248,14 @@ impl Conn {
     ) {
         account(ctx, handle.as_deref(), &outcome);
         let seq = self.alloc_seq();
-        self.pending.push_back(Pending { seq, proto, handle, model_name, outcome: Some(outcome) });
+        self.pending.push_back(Pending {
+            seq,
+            proto,
+            handle,
+            model_name,
+            sparse: false,
+            outcome: Some(outcome),
+        });
     }
 
     /// Drain the socket and parse/submit what arrived. Honors the
@@ -310,16 +387,20 @@ impl Conn {
             self.push_inline(sh.ctx, Proto::Json, None, String::new(), Outcome::Reply(reply));
             return;
         }
-        let Some(pixels) = req.get("pixels").and_then(Json::as_arr) else {
+        let sparse = req.get("indices").is_some() || req.get("offsets").is_some();
+        if !sparse && req.get("pixels").and_then(Json::as_arr).is_none() {
             self.push_inline(
                 sh.ctx,
                 Proto::Json,
                 None,
                 String::new(),
-                Outcome::Reply(obj(vec![("error", Json::Str("need pixels or cmd".into()))])),
+                Outcome::Reply(obj(vec![(
+                    "error",
+                    Json::Str("need pixels, indices/offsets, or cmd".into()),
+                )])),
             );
             return;
-        };
+        }
         let default_name = sh.ctx.registry.default_name();
         let model_name =
             req.get("model").and_then(Json::as_str).unwrap_or(&default_name).to_string();
@@ -336,28 +417,52 @@ impl Conn {
             );
             return;
         };
-        let pixels: Vec<f32> =
-            pixels.iter().filter_map(|v| v.as_f64()).map(|v| v as f32).collect();
         // Per-request deadline: "timeout_ms" overrides the server
         // default; invalid values fail loudly as bad_input.
-        let timeout = match req.get("timeout_ms") {
-            None => sh.ctx.default_timeout,
-            Some(v) => match v.as_f64() {
-                Some(ms) if ms.is_finite() && ms >= 1.0 => Duration::from_millis(ms as u64),
-                _ => {
-                    self.push_inline(
-                        sh.ctx,
-                        Proto::Json,
-                        Some(handle.clone()),
-                        model_name,
-                        Outcome::Resp(failed(ServeError::BadInput(
-                            "timeout_ms must be a number >= 1".into(),
-                        ))),
-                    );
-                    return;
-                }
-            },
+        let timeout = match json_timeout(&req, sh.ctx.default_timeout) {
+            Ok(t) => t,
+            Err(err) => {
+                self.push_inline(
+                    sh.ctx,
+                    Proto::Json,
+                    Some(handle),
+                    model_name,
+                    Outcome::Resp(failed(err)),
+                );
+                return;
+            }
         };
+        if sparse {
+            // A sparse bag lookup: both arrays must be present and hold
+            // in-range integer ids — silently dropping a malformed id
+            // (as the dense path does for non-number pixels) would
+            // shift every bag boundary after it.
+            let ids = req.get("indices").and_then(Json::as_arr).and_then(parse_u32s);
+            let offs = req.get("offsets").and_then(Json::as_arr).and_then(parse_u32s);
+            let (Some(indices), Some(offsets)) = (ids, offs) else {
+                let err = ServeError::BadInput(
+                    "a sparse request needs \"indices\" and \"offsets\" arrays of u32".into(),
+                );
+                self.push_inline(
+                    sh.ctx,
+                    Proto::Json,
+                    Some(handle),
+                    model_name,
+                    Outcome::Resp(failed(err)),
+                );
+                return;
+            };
+            self.classify_sparse(sh, Proto::Json, handle, model_name, indices, offsets, timeout);
+            return;
+        }
+        let pixels: Vec<f32> = req
+            .get("pixels")
+            .and_then(Json::as_arr)
+            .expect("checked above")
+            .iter()
+            .filter_map(|v| v.as_f64())
+            .map(|v| v as f32)
+            .collect();
         self.classify(sh, Proto::Json, handle, model_name, pixels, timeout);
     }
 
@@ -387,7 +492,14 @@ impl Conn {
         } else {
             Duration::from_millis(req.timeout_ms as u64)
         };
-        self.classify(sh, proto, handle, model_name, req.pixels, timeout);
+        match req.payload {
+            frame::FramePayload::Dense(pixels) => {
+                self.classify(sh, proto, handle, model_name, pixels, timeout)
+            }
+            frame::FramePayload::Sparse { indices, offsets } => {
+                self.classify_sparse(sh, proto, handle, model_name, indices, offsets, timeout)
+            }
+        }
     }
 
     /// Protocol-independent classify tail: validation mirrors the old
@@ -403,8 +515,17 @@ impl Conn {
         pixels: Vec<f32>,
         timeout: Duration,
     ) {
+        count_proto(&handle, &proto);
         // Validate here, not in the batcher: a truncated input must fail
         // loudly instead of being zero-padded into a wrong classification.
+        if handle.sparse {
+            let err = ServeError::BadInput(format!(
+                "model '{}' expects sparse indices/offsets, not dense pixels",
+                handle.name
+            ));
+            self.push_inline(sh.ctx, proto, Some(handle), model_name, Outcome::Resp(failed(err)));
+            return;
+        }
         if pixels.len() != handle.n_in {
             let err = ServeError::BadInput(format!(
                 "model '{}' expects {} pixels, got {}",
@@ -423,16 +544,64 @@ impl Conn {
             return;
         }
         let deadline = Instant::now() + timeout;
+        let seq = self.submit_pending(sh, proto, handle.clone(), model_name, deadline, false);
+        let sink = self.reactor_sink(sh, seq);
+        handle.batcher.handle().submit_with(pixels, deadline, sink);
+    }
+
+    /// Sparse twin of [`Conn::classify`]: an embedding-bag lookup.
+    /// Bag structure and index range are validated here with the same
+    /// [`validate_bags`] the engine uses, so JSON and binary requests
+    /// fail identically (`bad_input`) before touching the batcher.
+    #[allow(clippy::too_many_arguments)]
+    fn classify_sparse(
+        &mut self,
+        sh: &mut Shared<'_>,
+        proto: Proto,
+        handle: Arc<ModelHandle>,
+        model_name: String,
+        indices: Vec<u32>,
+        offsets: Vec<u32>,
+        timeout: Duration,
+    ) {
+        count_proto(&handle, &proto);
+        if !handle.sparse {
+            let err = ServeError::BadInput(format!(
+                "model '{}' expects {} pixels, not sparse indices/offsets",
+                handle.name, handle.n_in
+            ));
+            self.push_inline(sh.ctx, proto, Some(handle), model_name, Outcome::Resp(failed(err)));
+            return;
+        }
+        if let Err(why) = validate_bags(&indices, &offsets, handle.n_in) {
+            let err = ServeError::BadInput(format!("bad bag request: {why}"));
+            self.push_inline(sh.ctx, proto, Some(handle), model_name, Outcome::Resp(failed(err)));
+            return;
+        }
+        if handle.stop.load(Ordering::Relaxed) {
+            let err = ServeError::Unloaded(format!("model '{}' unloaded", handle.name));
+            self.push_inline(sh.ctx, proto, None, model_name, Outcome::Resp(failed(err)));
+            return;
+        }
+        let deadline = Instant::now() + timeout;
+        let seq = self.submit_pending(sh, proto, handle.clone(), model_name, deadline, true);
+        let sink = self.reactor_sink(sh, seq);
+        handle.batcher.handle().submit_sparse_with(indices, offsets, deadline, sink);
+    }
+
+    /// Shared admission tail for both request shapes: allocate the
+    /// sequence number, arm the lost-reply backstop timer, and queue
+    /// the pending slot. Returns the sequence for the reply sink.
+    fn submit_pending(
+        &mut self,
+        sh: &mut Shared<'_>,
+        proto: Proto,
+        handle: Arc<ModelHandle>,
+        model_name: String,
+        deadline: Instant,
+        sparse: bool,
+    ) -> u64 {
         let seq = self.alloc_seq();
-        let sink = ReplySender::hook({
-            let tx = sh.done_tx.clone();
-            let wake = sh.wake.clone();
-            let (token, gen) = (self.token, self.gen);
-            move |resp| {
-                let _ = tx.send(Done { token, gen, seq, payload: DonePayload::Resp(resp) });
-                wake.wake();
-            }
-        });
         // Lost-reply backstop (the old recv_timeout's grace window):
         // if nothing lands by deadline + grace, the timer pass answers
         // with the typed "timeout" code.
@@ -440,11 +609,26 @@ impl Conn {
         self.pending.push_back(Pending {
             seq,
             proto,
-            handle: Some(handle.clone()),
+            handle: Some(handle),
             model_name,
+            sparse,
             outcome: None,
         });
-        handle.batcher.handle().submit_with(pixels, deadline, sink);
+        seq
+    }
+
+    /// A [`ReplySender`] that lands the worker's reply on the reactor's
+    /// completion queue and wakes the loop.
+    fn reactor_sink(&self, sh: &Shared<'_>, seq: u64) -> ReplySender {
+        ReplySender::hook({
+            let tx = sh.done_tx.clone();
+            let wake = sh.wake.clone();
+            let (token, gen) = (self.token, self.gen);
+            move |resp| {
+                let _ = tx.send(Done { token, gen, seq, payload: DonePayload::Resp(resp) });
+                wake.wake();
+            }
+        })
     }
 
     /// Run a mutating admin command (`load`/`unload`/`reload`) on a
@@ -458,6 +642,7 @@ impl Conn {
             proto: Proto::Json,
             handle: None,
             model_name: String::new(),
+            sparse: false,
             outcome: None,
         });
         let ctx = sh.ctx.clone();
@@ -487,32 +672,26 @@ impl Conn {
                 break;
             }
             let p = self.pending.pop_front().unwrap();
-            serialize_reply(p, &mut self.outbuf);
+            serialize_reply(p, &mut self.outq);
         }
-        while self.outpos < self.outbuf.len() {
-            match self.stream.write(&self.outbuf[self.outpos..]) {
+        while !self.outq.is_empty() {
+            match self.outq.write_once(&mut self.stream) {
                 Ok(0) => {
                     self.closing = true;
-                    self.outbuf.clear();
-                    self.outpos = 0;
+                    self.outq.clear();
                     break;
                 }
-                Ok(n) => self.outpos += n,
+                Ok(_) => {}
                 Err(ref e) if e.kind() == ErrorKind::WouldBlock => break,
                 Err(ref e) if e.kind() == ErrorKind::Interrupted => continue,
                 Err(_) => {
                     // peer is gone; drop the bytes but keep the entry
                     // accounting that already happened
                     self.closing = true;
-                    self.outbuf.clear();
-                    self.outpos = 0;
+                    self.outq.clear();
                     break;
                 }
             }
-        }
-        if self.outpos >= self.outbuf.len() {
-            self.outbuf.clear();
-            self.outpos = 0;
         }
         if self.closing {
             // Completions arrive via the waker and each loop pass
@@ -524,7 +703,7 @@ impl Conn {
                 self.registered_write = false;
             }
         } else {
-            let want_write = self.outpos < self.outbuf.len();
+            let want_write = !self.outq.is_empty();
             if want_write != self.registered_write {
                 let interest = if want_write { Interest::BOTH } else { Interest::READ };
                 if poller.modify(self.stream.as_raw_fd(), self.token, interest).is_ok() {
@@ -534,7 +713,7 @@ impl Conn {
         }
         // keep a draining connection alive until every in-flight request
         // completed (counters!) and its replies are flushed or dropped
-        !(self.closing && self.pending.is_empty() && self.outbuf.is_empty())
+        !(self.closing && self.pending.is_empty() && self.outq.is_empty())
     }
 }
 
@@ -542,6 +721,41 @@ impl Conn {
 /// batcher): a typed error reply with no payload.
 fn failed(error: ServeError) -> Response {
     Response { class: 0, probs: Vec::new(), latency_us: 0, error: Some(error) }
+}
+
+/// Per-model wire-protocol counters (`{"cmd":"stats"}` breakdown):
+/// every classify attempt routed to a resolved model counts under the
+/// protocol it arrived on, including ones that fail validation.
+fn count_proto(handle: &ModelHandle, proto: &Proto) {
+    match proto {
+        Proto::Json => handle.reqs_json.fetch_add(1, Ordering::Relaxed),
+        Proto::Binary { .. } => handle.reqs_binary.fetch_add(1, Ordering::Relaxed),
+    };
+}
+
+/// Resolve a JSON request's `"timeout_ms"` against the server default;
+/// invalid values fail loudly as `bad_input`.
+fn json_timeout(req: &Json, default: Duration) -> Result<Duration, ServeError> {
+    match req.get("timeout_ms") {
+        None => Ok(default),
+        Some(v) => match v.as_f64() {
+            Some(ms) if ms.is_finite() && ms >= 1.0 => Ok(Duration::from_millis(ms as u64)),
+            _ => Err(ServeError::BadInput("timeout_ms must be a number >= 1".into())),
+        },
+    }
+}
+
+/// Parse a JSON array as u32 ids; `None` on any entry that is not a
+/// non-negative integer in range.
+fn parse_u32s(vals: &[Json]) -> Option<Vec<u32>> {
+    vals.iter()
+        .map(|v| match v.as_f64() {
+            Some(x) if x.is_finite() && (0.0..=u32::MAX as f64).contains(&x) && x.fract() == 0.0 => {
+                Some(x as u32)
+            }
+            _ => None,
+        })
+        .collect()
 }
 
 /// Strip ASCII whitespace from both ends (stable-toolchain-friendly
@@ -588,8 +802,11 @@ fn account(ctx: &ServeCtx, handle: Option<&ModelHandle>, outcome: &Outcome) {
     }
 }
 
-/// Serialize one completed request to its protocol's wire form.
-fn serialize_reply(p: Pending, out: &mut Vec<u8>) {
+/// Serialize one completed request to its protocol's wire form. Each
+/// reply lands on the connection's [`WriteQueue`]; a binary success
+/// queues its header and payload as two buffers so they flush in a
+/// single vectored write.
+fn serialize_reply(p: Pending, out: &mut WriteQueue) {
     let outcome = p.outcome.expect("serialized only when complete");
     match p.proto {
         Proto::Json => {
@@ -597,6 +814,15 @@ fn serialize_reply(p: Pending, out: &mut Vec<u8>) {
                 Outcome::Reply(j) => j,
                 Outcome::Resp(resp) => match resp.error {
                     Some(err) => error_reply(&err, Some(&p.model_name)),
+                    // Sparse bag replies rename the fields: `class`
+                    // carries the bag count and the payload is b×dim
+                    // bag vectors, not class probabilities.
+                    None if p.sparse => obj(vec![
+                        ("bags", num(resp.class as f64)),
+                        ("values", Json::Arr(resp.probs.iter().map(|&x| num(x as f64)).collect())),
+                        ("latency_us", num(resp.latency_us as f64)),
+                        ("model", Json::Str(p.model_name)),
+                    ]),
                     None => obj(vec![
                         ("class", num(resp.class as f64)),
                         ("probs", Json::Arr(resp.probs.iter().map(|&x| num(x as f64)).collect())),
@@ -608,20 +834,30 @@ fn serialize_reply(p: Pending, out: &mut Vec<u8>) {
                     obj(vec![("error", Json::Str(message))])
                 }
             };
-            out.extend_from_slice(json.to_string().as_bytes());
-            out.push(b'\n');
+            let mut line = json.to_string().into_bytes();
+            line.push(b'\n');
+            out.push(line);
         }
         Proto::Binary { req_id } => match outcome {
             Outcome::Resp(resp) => {
                 let latency = resp.latency_us.min(u32::MAX as u64) as u32;
                 match &resp.error {
-                    None => frame::encode_reply_ok(
-                        out,
-                        req_id,
-                        resp.class as u32,
-                        latency,
-                        &resp.probs,
-                    ),
+                    None => {
+                        let mut header = Vec::new();
+                        frame::encode_reply_ok_header(
+                            &mut header,
+                            req_id,
+                            resp.class as u32,
+                            latency,
+                            resp.probs.len() as u32,
+                        );
+                        let mut payload = Vec::with_capacity(4 * resp.probs.len());
+                        for v in &resp.probs {
+                            payload.extend_from_slice(&v.to_le_bytes());
+                        }
+                        out.push(header);
+                        out.push(payload);
+                    }
                     Some(err) => {
                         let retry = match err {
                             ServeError::Overloaded { retry_after_ms } => {
@@ -629,24 +865,30 @@ fn serialize_reply(p: Pending, out: &mut Vec<u8>) {
                             }
                             _ => 0,
                         };
+                        let mut buf = Vec::new();
                         frame::encode_reply_err(
-                            out,
+                            &mut buf,
                             req_id,
                             frame::code_to_num(err.code()),
                             retry,
                             latency,
                             &err.to_string(),
                         );
+                        out.push(buf);
                     }
                 }
             }
             Outcome::BinErr { code, message } => {
-                frame::encode_reply_err(out, req_id, code, 0, 0, &message)
+                let mut buf = Vec::new();
+                frame::encode_reply_err(&mut buf, req_id, code, 0, 0, &message);
+                out.push(buf);
             }
             Outcome::Reply(j) => {
                 // admin over the binary protocol isn't defined; surface
                 // the JSON result as a frame error payload defensively
-                frame::encode_reply_err(out, req_id, frame::ERR_BAD_FRAME, 0, 0, &j.to_string())
+                let mut buf = Vec::new();
+                frame::encode_reply_err(&mut buf, req_id, frame::ERR_BAD_FRAME, 0, 0, &j.to_string());
+                out.push(buf);
             }
         },
     }
@@ -822,7 +1064,7 @@ pub(crate) fn run_event_loop(
         let dirty = conns
             .iter()
             .flatten()
-            .any(|c| !c.outbuf.is_empty() || !c.pending.is_empty());
+            .any(|c| !c.outq.is_empty() || !c.pending.is_empty());
         if !dirty || Instant::now() >= flush_deadline {
             break;
         }
@@ -884,5 +1126,101 @@ fn flush_all(poller: &mut Poller, conns: &mut [Option<Conn>], free: &mut Vec<usi
             let _ = poller.deregister(conn.stream.as_raw_fd());
             free.push(conn.token);
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::WriteQueue;
+    use std::io::{self, Write};
+
+    /// A sink that accepts at most `cap` bytes per call — models a
+    /// socket whose send buffer keeps filling up, forcing the queue to
+    /// resume partial writes mid-buffer and across buffer boundaries.
+    struct Trickle {
+        cap: usize,
+        data: Vec<u8>,
+        calls: usize,
+    }
+
+    impl Write for Trickle {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.calls += 1;
+            let n = buf.len().min(self.cap);
+            self.data.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+
+        fn write_vectored(&mut self, bufs: &[io::IoSlice<'_>]) -> io::Result<usize> {
+            self.calls += 1;
+            let mut left = self.cap;
+            let mut n = 0;
+            for b in bufs {
+                let take = b.len().min(left);
+                self.data.extend_from_slice(&b[..take]);
+                n += take;
+                left -= take;
+                if left == 0 {
+                    break;
+                }
+            }
+            Ok(n)
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn write_queue_resumes_partial_writes_in_order() {
+        let mut q = WriteQueue::new();
+        q.push(vec![1, 2, 3, 4, 5]);
+        q.push(Vec::new()); // empty buffers are skipped, not queued
+        q.push(vec![6, 7, 8]);
+        q.push(vec![9]);
+        // cap 2 stops mid-buffer (inside the 5-byte buffer) and on
+        // buffer boundaries; every resume must pick up exactly where
+        // the previous short write ended.
+        let mut sink = Trickle { cap: 2, data: Vec::new(), calls: 0 };
+        let mut rounds = 0;
+        while !q.is_empty() {
+            q.write_once(&mut sink).unwrap();
+            rounds += 1;
+            assert!(rounds < 32, "queue failed to drain");
+        }
+        assert_eq!(sink.data, vec![1, 2, 3, 4, 5, 6, 7, 8, 9]);
+        assert!(sink.calls >= 5, "9 bytes at <=2/call takes >=5 calls");
+    }
+
+    #[test]
+    fn write_queue_header_and_payload_leave_in_one_vectored_write() {
+        let mut q = WriteQueue::new();
+        q.push(vec![0xAA; 20]); // reply header
+        q.push(vec![0xBB; 40]); // reply payload
+        let mut sink = Trickle { cap: 1024, data: Vec::new(), calls: 0 };
+        q.write_once(&mut sink).unwrap();
+        assert!(q.is_empty());
+        assert_eq!(sink.calls, 1, "both buffers must go in one writev");
+        assert_eq!(sink.data.len(), 60);
+        assert_eq!(&sink.data[..20], &[0xAA; 20][..]);
+        assert_eq!(&sink.data[20..], &[0xBB; 40][..]);
+    }
+
+    #[test]
+    fn write_queue_partial_write_straddles_the_header_payload_boundary() {
+        let mut q = WriteQueue::new();
+        q.push(vec![1; 20]);
+        q.push(vec![2; 40]);
+        // first write takes the header plus 10 payload bytes; the next
+        // resumes 10 bytes into the second buffer
+        let mut sink = Trickle { cap: 30, data: Vec::new(), calls: 0 };
+        q.write_once(&mut sink).unwrap();
+        assert!(!q.is_empty());
+        q.write_once(&mut sink).unwrap();
+        assert!(q.is_empty());
+        let mut want = vec![1u8; 20];
+        want.extend(vec![2u8; 40]);
+        assert_eq!(sink.data, want);
     }
 }

@@ -22,7 +22,7 @@
 //! offline `xla` stub is linked or the HLO files are absent).
 
 use crate::model::ModelBundle;
-use crate::nn::Network;
+use crate::nn::{EmbedBag, Network};
 use crate::runtime::{Graph, ModelState, Runtime};
 use crate::tensor::Matrix;
 use anyhow::{anyhow, Context, Result};
@@ -79,15 +79,42 @@ pub trait InferenceEngine {
     fn fixed_batch(&self) -> bool {
         false
     }
+    /// True when this engine consumes CSR bag requests
+    /// (`indices` + `offsets`) instead of dense rows; the worker then
+    /// drains the batcher through
+    /// [`super::batcher::DynamicBatcher::dispatch_sparse`] and
+    /// [`InferenceEngine::predict_sparse`]. For sparse engines,
+    /// [`InferenceEngine::n_in`] is the valid index range
+    /// (`num_categories`) and [`InferenceEngine::n_out`] the embedding
+    /// width.
+    fn sparse_input(&self) -> bool {
+        false
+    }
+    /// Bag lookup: `(indices, offsets)` → `(n_bags × n_out)` values.
+    /// Only meaningful when [`InferenceEngine::sparse_input`] is true.
+    fn predict_sparse(&self, _indices: &[u32], _offsets: &[u32]) -> Result<Matrix> {
+        Err(anyhow!("engine '{}' does not serve sparse requests", self.name()))
+    }
 }
 
-/// The native in-process engine: one shared [`Network`].
+/// What a [`NativeEngine`] wraps: the repo's two first-class model
+/// shapes. Both are immutable once constructed and `Send + Sync`, so
+/// either serves any number of worker threads.
+enum NativeModel {
+    /// Feed-forward classifier (dense rows in, logits out).
+    Net(Arc<Network>),
+    /// Hashed embedding table (CSR bags in, bag vectors out).
+    Embed(Arc<EmbedBag>),
+}
+
+/// The native in-process engine: one shared [`Network`] or
+/// [`EmbedBag`].
 ///
-/// `Network::predict` takes `&self` and hashed layers share immutable
-/// `Arc<HashPlan>`s, so one `NativeEngine` serves any number of worker
+/// `Network::predict`/`EmbedBag::forward` take `&self` and share only
+/// immutable state, so one `NativeEngine` serves any number of worker
 /// threads concurrently.
 pub struct NativeEngine {
-    net: Arc<Network>,
+    model: NativeModel,
     n_in: usize,
     n_out: usize,
     max_batch: usize,
@@ -97,9 +124,17 @@ impl NativeEngine {
     /// Build from a self-describing [`ModelBundle`] — the one
     /// construction path the server uses, whether the bundle came from
     /// a file (`{"cmd":"load"}`, `--bundle`) or from converting a
-    /// manifest artifact + checkpoint. Shape validation happened when
-    /// the bundle was built/loaded, so this cannot panic on bad params.
+    /// manifest artifact + checkpoint. The bundle's spec picks the
+    /// model shape: a `hashed_embedding` spec builds a sparse
+    /// [`EmbedBag`] engine, everything else a dense [`Network`] engine.
+    /// Shape validation happened when the bundle was built/loaded, so
+    /// this cannot panic on bad params.
     pub fn from_bundle(bundle: &ModelBundle) -> Result<NativeEngine> {
+        if bundle.spec.embedding_shape().is_some() {
+            let bag = EmbedBag::from_bundle(bundle)
+                .with_context(|| format!("building embedding engine for '{}'", bundle.spec.name))?;
+            return Ok(NativeEngine::from_embed_bag(bag, bundle.spec.batch.max(1)));
+        }
         let net = Network::from_bundle(bundle)
             .with_context(|| format!("building native engine for '{}'", bundle.spec.name))?;
         // pre-build the hashed layers' inverse plans here, at (hot-)load
@@ -109,33 +144,60 @@ impl NativeEngine {
             n_in: net.n_in(),
             n_out: net.n_out(),
             max_batch: bundle.spec.batch.max(1),
-            net: Arc::new(net),
+            model: NativeModel::Net(Arc::new(net)),
         })
     }
 
-    /// Wrap an existing network (tests, embedding).
+    /// Wrap an existing network (tests).
     pub fn from_network(net: Network, max_batch: usize) -> NativeEngine {
         net.warm(); // see from_bundle
         NativeEngine {
             n_in: net.n_in(),
             n_out: net.n_out(),
             max_batch: max_batch.max(1),
-            net: Arc::new(net),
+            model: NativeModel::Net(Arc::new(net)),
         }
     }
 
-    /// The shared model (e.g. for asserting server replies in tests).
-    pub fn network(&self) -> &Arc<Network> {
-        &self.net
+    /// Wrap an existing embedding table. `n_in` reports the valid
+    /// index range (`num_categories`) so the front end can range-check
+    /// indices before admission; `n_out` reports the embedding width.
+    pub fn from_embed_bag(bag: EmbedBag, max_batch: usize) -> NativeEngine {
+        NativeEngine {
+            n_in: bag.num_categories,
+            n_out: bag.dim,
+            max_batch: max_batch.max(1),
+            model: NativeModel::Embed(Arc::new(bag)),
+        }
+    }
+
+    /// The shared network (e.g. for asserting server replies in
+    /// tests); None for embedding engines.
+    pub fn network(&self) -> Option<&Arc<Network>> {
+        match &self.model {
+            NativeModel::Net(net) => Some(net),
+            NativeModel::Embed(_) => None,
+        }
+    }
+
+    /// The shared embedding table; None for feed-forward engines.
+    pub fn embed_bag(&self) -> Option<&Arc<EmbedBag>> {
+        match &self.model {
+            NativeModel::Embed(bag) => Some(bag),
+            NativeModel::Net(_) => None,
+        }
     }
 }
 
 impl InferenceEngine for NativeEngine {
     fn predict(&self, x: &Matrix) -> Result<Matrix> {
+        let NativeModel::Net(net) = &self.model else {
+            return Err(anyhow!("embedding model expects sparse indices/offsets requests"));
+        };
         if x.cols != self.n_in {
             return Err(anyhow!("expected {} input cols, got {}", self.n_in, x.cols));
         }
-        Ok(self.net.predict(x))
+        Ok(net.predict(x))
     }
 
     fn n_in(&self) -> usize {
@@ -152,6 +214,21 @@ impl InferenceEngine for NativeEngine {
 
     fn name(&self) -> &'static str {
         "native"
+    }
+
+    fn sparse_input(&self) -> bool {
+        matches!(self.model, NativeModel::Embed(_))
+    }
+
+    fn predict_sparse(&self, indices: &[u32], offsets: &[u32]) -> Result<Matrix> {
+        let NativeModel::Embed(bag) = &self.model else {
+            return Err(anyhow!("dense model expects pixel-row requests"));
+        };
+        // the front end validates per request before admission; this
+        // re-check guards direct/CLI callers with a typed error rather
+        // than an out-of-bounds panic inside the kernel
+        bag.validate_bags(indices, offsets).map_err(|why| anyhow!("bad bag request: {why}"))?;
+        Ok(bag.forward(indices, offsets))
     }
 }
 
@@ -222,10 +299,15 @@ pub fn worker_loop(
     stop: &AtomicBool,
 ) {
     let n_in = engine.n_in();
+    let sparse = engine.sparse_input();
     while !stop.load(Ordering::Relaxed) {
         let iteration = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             if let Some(batch) = batcher.next_batch(Duration::from_millis(20)) {
-                batcher.dispatch(batch, n_in, |x| engine.predict(x));
+                if sparse {
+                    batcher.dispatch_sparse(batch, |i, o| engine.predict_sparse(i, o));
+                } else {
+                    batcher.dispatch(batch, n_in, |x| engine.predict(x));
+                }
             }
         }));
         if iteration.is_err() {
@@ -347,6 +429,51 @@ mod tests {
         let eng = NativeEngine::from_bundle(&bundle).unwrap();
         assert_eq!(eng.max_batch(), 8);
         assert_eq!(eng.predict(&x).unwrap().data, want.data);
+    }
+
+    #[test]
+    fn embedding_engine_serves_sparse_and_rejects_dense() {
+        let mut bag = EmbedBag::new(1_000, 8, 64, crate::model::BagMode::Sum, 7);
+        bag.init(&mut Pcg32::new(2, 2));
+        let want = bag.forward(&[1, 2, 999], &[0, 2]);
+        let eng = NativeEngine::from_embed_bag(bag, 16);
+        assert!(eng.sparse_input());
+        assert_eq!(eng.n_in(), 1_000); // index range, for front-end checks
+        assert_eq!(eng.n_out(), 8);
+        let got = eng.predict_sparse(&[1, 2, 999], &[0, 2]).unwrap();
+        assert_eq!(got.data, want.data);
+        // dense rows are a typed error, not a panic
+        assert!(eng.predict(&Matrix::zeros(1, 1_000)).is_err());
+        // out-of-range index is a typed error from the engine re-check
+        assert!(eng.predict_sparse(&[1_000], &[0]).is_err());
+        // and the dense engine rejects sparse
+        let dense = NativeEngine::from_network(tiny_net(), 8);
+        assert!(!dense.sparse_input());
+        assert!(dense.predict_sparse(&[0], &[0]).is_err());
+    }
+
+    #[test]
+    fn worker_loop_serves_sparse_batches() {
+        let mut bag = EmbedBag::new(100, 4, 32, crate::model::BagMode::Sum, 7);
+        bag.init(&mut Pcg32::new(3, 3));
+        let want = bag.forward(&[5, 6], &[0]);
+        let eng = NativeEngine::from_embed_bag(bag, 16);
+        let batcher =
+            super::super::batcher::DynamicBatcher::new(16, Duration::from_millis(1));
+        let handle = batcher.handle();
+        let stop = Arc::new(AtomicBool::new(false));
+        let worker = {
+            let b = batcher.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || worker_loop(&eng, &b, &stop))
+        };
+        let rx = handle.submit_sparse(vec![5, 6], vec![0]);
+        let r = rx.recv_timeout(Duration::from_secs(5)).expect("reply");
+        assert!(r.error.is_none(), "{:?}", r.error);
+        assert_eq!(r.class, 1); // bag count
+        assert_eq!(r.probs, want.data);
+        stop.store(true, Ordering::Relaxed);
+        worker.join().unwrap();
     }
 
     #[test]

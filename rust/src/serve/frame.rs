@@ -30,6 +30,26 @@
 //! | 16  | m   | model name (UTF-8)                           |
 //! | 16+m| 4n  | pixels (`f32` LE)                            |
 //!
+//! Sparse request (embedding-bag lookup), 20-byte header:
+//!
+//! | off    | len | field                                        |
+//! |--------|-----|----------------------------------------------|
+//! | 0      | 1   | magic `0x95`                                 |
+//! | 1      | 1   | opcode: `0x02` classify-sparse               |
+//! | 2      | 1   | model-name length `m` (0 = default model)    |
+//! | 3      | 1   | reserved (0)                                 |
+//! | 4      | 4   | `req_id` (u32, echoed verbatim in the reply) |
+//! | 8      | 4   | `timeout_ms` (u32, 0 = server default)       |
+//! | 12     | 4   | bag count `b` (u32, CSR offsets)             |
+//! | 16     | 4   | index count `n` (u32)                        |
+//! | 20     | m   | model name (UTF-8)                           |
+//! | 20+m   | 4b  | offsets (`u32` LE, first must be 0)          |
+//! | 20+m+4b| 4n  | indices (`u32` LE)                           |
+//!
+//! The sparse reply reuses the ok frame below with `class` carrying the
+//! bag count and the payload carrying `b × dim` bag values row-major —
+//! byte-identical framing, so one reply decoder serves both shapes.
+//!
 //! Reply, 20-byte header:
 //!
 //! | off | len | field                                                  |
@@ -59,8 +79,10 @@ use std::net::TcpStream;
 /// byte: no JSON line (or any UTF-8 text) can start with it.
 pub const MAGIC: u8 = 0x95;
 
-/// Request opcode: classify.
+/// Request opcode: classify (dense f32 row).
 pub const OP_CLASSIFY: u8 = 0x01;
+/// Request opcode: sparse embedding-bag lookup (u32 CSR payload).
+pub const OP_CLASSIFY_SPARSE: u8 = 0x02;
 /// Reply opcode: successful classification.
 pub const OP_REPLY_OK: u8 = 0x81;
 /// Reply opcode: typed error.
@@ -77,11 +99,16 @@ pub const ERR_UNKNOWN_MODEL: u8 = 7;
 pub const ERR_BAD_FRAME: u8 = 8;
 
 const REQ_HEADER: usize = 16;
+const SPARSE_REQ_HEADER: usize = 20;
 const REPLY_HEADER: usize = 20;
 
 /// Hard caps against hostile headers: a length field beyond these fails
 /// the frame instead of asking the allocator for gigabytes.
 pub const MAX_PIXELS: usize = 1 << 20;
+/// Index cap per sparse request frame.
+pub const MAX_INDICES: usize = 1 << 20;
+/// Bag cap per sparse request frame.
+pub const MAX_BAGS: usize = 1 << 20;
 /// Probs/message payload cap on replies (defensive client-side bound).
 pub const MAX_REPLY_ITEMS: usize = 1 << 20;
 
@@ -120,6 +147,16 @@ pub fn num_to_code(num: u8) -> &'static str {
     }
 }
 
+/// What a request frame carries — the wire twin of
+/// [`super::batcher::Payload`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum FramePayload {
+    /// [`OP_CLASSIFY`]: one dense f32 row.
+    Dense(Vec<f32>),
+    /// [`OP_CLASSIFY_SPARSE`]: a CSR bag request.
+    Sparse { indices: Vec<u32>, offsets: Vec<u32> },
+}
+
 /// A decoded classify request.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FrameRequest {
@@ -128,7 +165,7 @@ pub struct FrameRequest {
     pub model: String,
     /// 0 = use the server's default deadline.
     pub timeout_ms: u32,
-    pub pixels: Vec<f32>,
+    pub payload: FramePayload,
 }
 
 /// A decoded reply frame.
@@ -179,6 +216,36 @@ pub fn encode_request(
     }
 }
 
+/// Append one sparse classify request frame (embedding-bag lookup) to
+/// `buf`. `offsets` is the CSR bag-start array (first entry 0), the
+/// same convention [`crate::nn::EmbedBag::forward`] consumes.
+pub fn encode_sparse_request(
+    buf: &mut Vec<u8>,
+    req_id: u32,
+    model: &str,
+    timeout_ms: u32,
+    indices: &[u32],
+    offsets: &[u32],
+) {
+    assert!(model.len() <= u8::MAX as usize, "model name too long for the wire");
+    buf.reserve(SPARSE_REQ_HEADER + model.len() + 4 * (indices.len() + offsets.len()));
+    buf.push(MAGIC);
+    buf.push(OP_CLASSIFY_SPARSE);
+    buf.push(model.len() as u8);
+    buf.push(0);
+    buf.extend_from_slice(&req_id.to_le_bytes());
+    buf.extend_from_slice(&timeout_ms.to_le_bytes());
+    buf.extend_from_slice(&(offsets.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&(indices.len() as u32).to_le_bytes());
+    buf.extend_from_slice(model.as_bytes());
+    for o in offsets {
+        buf.extend_from_slice(&o.to_le_bytes());
+    }
+    for i in indices {
+        buf.extend_from_slice(&i.to_le_bytes());
+    }
+}
+
 /// Try to decode one request frame from the front of `buf`.
 ///
 /// * `Ok(None)` — the frame is still incomplete; read more bytes.
@@ -192,8 +259,11 @@ pub fn decode_request(buf: &[u8]) -> Result<Option<(FrameRequest, usize)>, Frame
     if buf[0] != MAGIC {
         return Err(FrameError(format!("bad magic 0x{:02x}", buf[0])));
     }
-    if buf.len() >= 2 && buf[1] != OP_CLASSIFY {
+    if buf.len() >= 2 && buf[1] != OP_CLASSIFY && buf[1] != OP_CLASSIFY_SPARSE {
         return Err(FrameError(format!("unsupported request opcode 0x{:02x}", buf[1])));
+    }
+    if buf.len() >= 2 && buf[1] == OP_CLASSIFY_SPARSE {
+        return decode_sparse_request(buf);
     }
     if buf.len() < REQ_HEADER {
         return Ok(None);
@@ -217,7 +287,55 @@ pub fn decode_request(buf: &[u8]) -> Result<Option<(FrameRequest, usize)>, Frame
         pixels.push(f32::from_le_bytes([buf[off], buf[off + 1], buf[off + 2], buf[off + 3]]));
     }
     Ok(Some((
-        FrameRequest { req_id: u32_at(buf, 4), model, timeout_ms: u32_at(buf, 8), pixels },
+        FrameRequest {
+            req_id: u32_at(buf, 4),
+            model,
+            timeout_ms: u32_at(buf, 8),
+            payload: FramePayload::Dense(pixels),
+        },
+        total,
+    )))
+}
+
+/// [`decode_request`]'s sparse arm (`buf[1] == OP_CLASSIFY_SPARSE`,
+/// already checked). Same `Ok(None)`/`Err` contract.
+fn decode_sparse_request(buf: &[u8]) -> Result<Option<(FrameRequest, usize)>, FrameError> {
+    if buf.len() < SPARSE_REQ_HEADER {
+        return Ok(None);
+    }
+    let model_len = buf[2] as usize;
+    let n_bags = u32_at(buf, 12) as usize;
+    let n_indices = u32_at(buf, 16) as usize;
+    if n_bags > MAX_BAGS {
+        return Err(FrameError(format!("bag count {n_bags} exceeds cap {MAX_BAGS}")));
+    }
+    if n_indices > MAX_INDICES {
+        return Err(FrameError(format!("index count {n_indices} exceeds cap {MAX_INDICES}")));
+    }
+    let total = SPARSE_REQ_HEADER + model_len + 4 * (n_bags + n_indices);
+    if buf.len() < total {
+        return Ok(None);
+    }
+    let model = std::str::from_utf8(&buf[SPARSE_REQ_HEADER..SPARSE_REQ_HEADER + model_len])
+        .map_err(|_| FrameError("model name is not UTF-8".into()))?
+        .to_string();
+    let obase = SPARSE_REQ_HEADER + model_len;
+    let mut offsets = Vec::with_capacity(n_bags);
+    for i in 0..n_bags {
+        offsets.push(u32_at(buf, obase + 4 * i));
+    }
+    let ibase = obase + 4 * n_bags;
+    let mut indices = Vec::with_capacity(n_indices);
+    for i in 0..n_indices {
+        indices.push(u32_at(buf, ibase + 4 * i));
+    }
+    Ok(Some((
+        FrameRequest {
+            req_id: u32_at(buf, 4),
+            model,
+            timeout_ms: u32_at(buf, 8),
+            payload: FramePayload::Sparse { indices, offsets },
+        },
         total,
     )))
 }
@@ -231,6 +349,24 @@ pub fn encode_reply_ok(
     probs: &[f32],
 ) {
     buf.reserve(REPLY_HEADER + 4 * probs.len());
+    encode_reply_ok_header(buf, req_id, class, latency_us, probs.len() as u32);
+    for p in probs {
+        buf.extend_from_slice(&p.to_le_bytes());
+    }
+}
+
+/// Append just the 20-byte success header, declaring `n_items` payload
+/// values that the caller supplies separately. This is the vectored
+/// write path in `serve/conn.rs`: the header and the payload buffers
+/// flush in one `writev(2)` instead of being copied together first.
+pub fn encode_reply_ok_header(
+    buf: &mut Vec<u8>,
+    req_id: u32,
+    class: u32,
+    latency_us: u32,
+    n_items: u32,
+) {
+    buf.reserve(REPLY_HEADER);
     buf.push(MAGIC);
     buf.push(OP_REPLY_OK);
     buf.push(0);
@@ -238,10 +374,7 @@ pub fn encode_reply_ok(
     buf.extend_from_slice(&req_id.to_le_bytes());
     buf.extend_from_slice(&latency_us.to_le_bytes());
     buf.extend_from_slice(&class.to_le_bytes());
-    buf.extend_from_slice(&(probs.len() as u32).to_le_bytes());
-    for p in probs {
-        buf.extend_from_slice(&p.to_le_bytes());
-    }
+    buf.extend_from_slice(&n_items.to_le_bytes());
 }
 
 /// Append one error reply frame to `buf`.
@@ -361,6 +494,27 @@ impl FrameClient {
         self.next_id = self.next_id.wrapping_add(1);
         self.outbuf.clear();
         encode_request(&mut self.outbuf, id, model, timeout_ms, pixels);
+        self.round_trip(id)
+    }
+
+    /// One sparse bag-lookup round trip (embedding models). On success
+    /// the reply's `class` is the bag count and `probs` the flattened
+    /// `bags × dim` values.
+    pub fn classify_sparse(
+        &mut self,
+        model: &str,
+        indices: &[u32],
+        offsets: &[u32],
+        timeout_ms: u32,
+    ) -> Result<FrameReply> {
+        let id = self.next_id;
+        self.next_id = self.next_id.wrapping_add(1);
+        self.outbuf.clear();
+        encode_sparse_request(&mut self.outbuf, id, model, timeout_ms, indices, offsets);
+        self.round_trip(id)
+    }
+
+    fn round_trip(&mut self, id: u32) -> Result<FrameReply> {
         self.stream.write_all(&self.outbuf)?;
         let reply = self.read_reply()?;
         let got = match &reply {
@@ -405,7 +559,20 @@ mod tests {
         assert_eq!(decoded.req_id, req_id);
         assert_eq!(decoded.model, model);
         assert_eq!(decoded.timeout_ms, timeout_ms);
-        assert_eq!(decoded.pixels, pixels);
+        assert_eq!(decoded.payload, FramePayload::Dense(pixels.to_vec()));
+    }
+
+    fn sparse_roundtrip(req_id: u32, model: &str, indices: &[u32], offsets: &[u32]) {
+        let mut buf = Vec::new();
+        encode_sparse_request(&mut buf, req_id, model, 7, indices, offsets);
+        let (decoded, consumed) = decode_request(&buf).unwrap().expect("complete frame");
+        assert_eq!(consumed, buf.len());
+        assert_eq!(decoded.req_id, req_id);
+        assert_eq!(decoded.model, model);
+        assert_eq!(
+            decoded.payload,
+            FramePayload::Sparse { indices: indices.to_vec(), offsets: offsets.to_vec() }
+        );
     }
 
     #[test]
@@ -427,9 +594,34 @@ mod tests {
         let mut buf = Vec::new();
         encode_request(&mut buf, 7, "m", 0, &[f32::NAN, f32::INFINITY, -0.0]);
         let (d, _) = decode_request(&buf).unwrap().unwrap();
-        assert_eq!(d.pixels[0].to_bits(), f32::NAN.to_bits());
-        assert_eq!(d.pixels[1], f32::INFINITY);
-        assert_eq!(d.pixels[2].to_bits(), (-0.0f32).to_bits());
+        let FramePayload::Dense(pixels) = d.payload else { panic!("dense frame") };
+        assert_eq!(pixels[0].to_bits(), f32::NAN.to_bits());
+        assert_eq!(pixels[1], f32::INFINITY);
+        assert_eq!(pixels[2].to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn sparse_request_roundtrip_property() {
+        let mut rng = crate::util::rng::Pcg32::new(0xBA6, 23);
+        for _ in 0..200 {
+            let n_bags = (rng.next_u32() % 20) as usize;
+            let per = (rng.next_u32() % 8) as usize;
+            let mut offsets = Vec::with_capacity(n_bags);
+            let mut indices = Vec::new();
+            for _ in 0..n_bags {
+                offsets.push(indices.len() as u32);
+                for _ in 0..per {
+                    indices.push(rng.next_u32());
+                }
+            }
+            let model_len = (rng.next_u32() % 20) as usize;
+            let model: String = (0..model_len).map(|i| (b'a' + (i as u8 % 26)) as char).collect();
+            sparse_roundtrip(rng.next_u32(), &model, &indices, &offsets);
+        }
+        // degenerate shapes round-trip too
+        sparse_roundtrip(1, "", &[], &[]); // zero-length payload
+        sparse_roundtrip(2, "m", &[], &[0, 0, 0]); // all-empty bags
+        sparse_roundtrip(3, "m", &[9, 9, 9], &[0]); // one bag, all indices
     }
 
     #[test]
@@ -468,9 +660,77 @@ mod tests {
             }
         }
         let mut buf = Vec::new();
+        encode_sparse_request(&mut buf, 9, "bags", 250, &[1, 2, 3], &[0, 2]);
+        for cut in 0..buf.len() {
+            match decode_request(&buf[..cut]) {
+                Ok(None) => {}
+                other => panic!("sparse prefix {cut}/{} must be incomplete, got {other:?}", buf.len()),
+            }
+        }
+        let mut buf = Vec::new();
         encode_reply_ok(&mut buf, 9, 0, 1, &[0.5, 0.5]);
         for cut in 0..buf.len() {
             assert_eq!(decode_reply(&buf[..cut]), Ok(None), "reply prefix {cut}");
+        }
+        let mut buf = Vec::new();
+        encode_reply_err(&mut buf, 9, ERR_BAD_INPUT, 0, 1, "nope");
+        for cut in 0..buf.len() {
+            assert_eq!(decode_reply(&buf[..cut]), Ok(None), "err-reply prefix {cut}");
+        }
+    }
+
+    /// Satellite property test: headers with hostile declared lengths,
+    /// zero-length payloads, and arbitrary byte soup must always come
+    /// back as `Ok(None)` (incomplete), `Ok(Some(..))` (valid), or
+    /// `Err` (unrecoverable) — never a panic, never a huge allocation.
+    #[test]
+    fn header_parsing_never_panics_property() {
+        // (1) oversized declared lengths on every length field
+        for (bag_cnt, idx_cnt) in
+            [(u32::MAX, 0u32), (0, u32::MAX), ((MAX_BAGS + 1) as u32, 0), (0, (MAX_INDICES + 1) as u32)]
+        {
+            let mut buf = vec![MAGIC, OP_CLASSIFY_SPARSE, 0, 0];
+            buf.extend_from_slice(&1u32.to_le_bytes()); // req_id
+            buf.extend_from_slice(&0u32.to_le_bytes()); // timeout
+            buf.extend_from_slice(&bag_cnt.to_le_bytes());
+            buf.extend_from_slice(&idx_cnt.to_le_bytes());
+            assert!(decode_request(&buf).is_err(), "bags {bag_cnt} indices {idx_cnt}");
+        }
+        let mut buf = vec![MAGIC, OP_REPLY_OK, 0, 0];
+        buf.extend_from_slice(&[0u8; 12]);
+        buf.extend_from_slice(&u32::MAX.to_le_bytes()); // payload count
+        assert!(decode_reply(&buf).is_err());
+
+        // (2) zero-length payloads are valid complete frames
+        let mut buf = Vec::new();
+        encode_request(&mut buf, 1, "", 0, &[]);
+        let (req, used) = decode_request(&buf).unwrap().expect("empty dense frame");
+        assert_eq!(used, buf.len());
+        assert_eq!(req.payload, FramePayload::Dense(vec![]));
+        let mut buf = Vec::new();
+        encode_reply_ok(&mut buf, 1, 0, 0, &[]);
+        assert!(decode_reply(&buf).unwrap().is_some());
+        let mut buf = Vec::new();
+        encode_reply_err(&mut buf, 1, ERR_ENGINE, 0, 0, "");
+        assert!(decode_reply(&buf).unwrap().is_some());
+
+        // (3) deterministic fuzz: random bytes through both decoders —
+        // the contract is "no panic", whatever the outcome enum says
+        let mut rng = crate::util::rng::Pcg32::new(0xFEED, 3);
+        for round in 0..2_000 {
+            let len = (rng.next_u32() % 64) as usize;
+            let mut bytes: Vec<u8> = (0..len).map(|_| (rng.next_u32() & 0xff) as u8).collect();
+            // bias half the rounds toward plausible frames so the deep
+            // paths get exercised, not just the magic check
+            if round % 2 == 0 && !bytes.is_empty() {
+                bytes[0] = MAGIC;
+                if bytes.len() > 1 {
+                    bytes[1] = [OP_CLASSIFY, OP_CLASSIFY_SPARSE, OP_REPLY_OK, OP_REPLY_ERR]
+                        [(rng.next_u32() % 4) as usize];
+                }
+            }
+            let _ = decode_request(&bytes);
+            let _ = decode_reply(&bytes);
         }
     }
 

@@ -14,6 +14,11 @@
 //!             {"model": "name", "pixels": [...]}   → classify a named model
 //!               optional "timeout_ms"              → per-request deadline
 //!                                                    (default --timeout-ms)
+//!             {"indices": [u32], "offsets": [u32]} → sparse embedding-bag
+//!                                                    lookup (hashed_embedding
+//!                                                    models); replies with
+//!                                                    {"bags": b, "values":
+//!                                                    [f32; b*dim], ...}
 //!             {"cmd": "stats"}                     → server + per-model counters
 //!             {"cmd": "health"}                    → liveness: live workers,
 //!                                                    queue depth, resilience
@@ -164,6 +169,15 @@ pub(crate) struct ModelHandle {
     pub(crate) batcher: DynamicBatcher,
     pub(crate) served: AtomicU64,
     pub(crate) errors: AtomicU64,
+    /// Classify requests received per wire protocol (JSON lines vs
+    /// binary frames) — the `{"cmd":"stats"}` per-model breakdown.
+    /// Counted at dispatch, so validation failures are included.
+    pub(crate) reqs_json: AtomicU64,
+    pub(crate) reqs_binary: AtomicU64,
+    /// The engine takes sparse `indices`/`offsets` bag requests instead
+    /// of dense pixel rows (hashed embedding-bag models); `n_in` is its
+    /// category-id range, not a pixel count.
+    pub(crate) sparse: bool,
     /// Worker threads currently running (each decrements on exit);
     /// `{"cmd":"health"}` compares it against `workers` to surface a
     /// permanently-dead worker. The containment in `worker_loop` means
@@ -362,6 +376,9 @@ impl ServeCtx {
             batcher: batcher.clone(),
             served: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            reqs_json: AtomicU64::new(0),
+            reqs_binary: AtomicU64::new(0),
+            sparse: false,
             live: live.clone(),
             stop: stop.clone(),
             joins: Mutex::new(Vec::new()),
@@ -574,6 +591,9 @@ fn spawn_engine_workers(
         batcher: batcher.clone(),
         served: AtomicU64::new(0),
         errors: AtomicU64::new(0),
+        reqs_json: AtomicU64::new(0),
+        reqs_binary: AtomicU64::new(0),
+        sparse: eng.sparse_input(),
         live: live.clone(),
         stop: stop.clone(),
         joins: Mutex::new(Vec::new()),
@@ -744,6 +764,8 @@ pub(crate) fn stats_json(ctx: &ServeCtx) -> Json {
                     ("workers", num(h.workers as f64)),
                     ("served", num(h.served.load(Ordering::Relaxed) as f64)),
                     ("errors", num(h.errors.load(Ordering::Relaxed) as f64)),
+                    ("json_requests", num(h.reqs_json.load(Ordering::Relaxed) as f64)),
+                    ("binary_requests", num(h.reqs_binary.load(Ordering::Relaxed) as f64)),
                     ("rejected", num(s.rejected as f64)),
                     ("expired", num(s.expired as f64)),
                     ("panics_contained", num(s.panics as f64)),
@@ -906,6 +928,31 @@ impl Client {
     ) -> Result<Json> {
         let arr = Json::Arr(pixels.iter().map(|&p| num(p as f64)).collect());
         let mut pairs = vec![("pixels", arr)];
+        if let Some(m) = model {
+            pairs.push(("model", Json::Str(m.to_string())));
+        }
+        if let Some(ms) = timeout_ms {
+            pairs.push(("timeout_ms", num(ms as f64)));
+        }
+        writeln!(self.writer, "{}", obj(pairs).to_string())?;
+        self.read_reply()
+    }
+
+    /// One sparse (embedding-bag) classify round trip: sends
+    /// `{"indices": [...], "offsets": [...]}` and returns the raw
+    /// reply — `"bags"`/`"values"` on success, a typed `"code"` on
+    /// failure. `Err` only on transport/parse problems.
+    pub fn classify_sparse_raw(
+        &mut self,
+        model: Option<&str>,
+        indices: &[u32],
+        offsets: &[u32],
+        timeout_ms: Option<u64>,
+    ) -> Result<Json> {
+        let mut pairs = vec![
+            ("indices", Json::Arr(indices.iter().map(|&i| num(i as f64)).collect())),
+            ("offsets", Json::Arr(offsets.iter().map(|&o| num(o as f64)).collect())),
+        ];
         if let Some(m) = model {
             pairs.push(("model", Json::Str(m.to_string())));
         }

@@ -1,0 +1,249 @@
+//! Acceptance tests for the hashed embedding-bag subsystem (ISSUE 8):
+//! (a) the hashed bag forward must match a materialized reference table
+//! bit-exactly, (b) the Eq. 12-style backward must be bit-identical
+//! across thread counts in ordered mode, and (c) JSON and binary
+//! sparse requests must return identical results through the real
+//! server — including empty bags (zero vectors) and out-of-range
+//! indices (`bad_input` on both protocols).
+
+use hashednets::hash::DEFAULT_SEED_BASE;
+use hashednets::model::BagMode;
+use hashednets::nn::{EmbedBag, TrainOptions};
+use hashednets::serve::frame::{self, FrameReply};
+use hashednets::serve::{
+    Backend, Client, FrameClient, InferenceEngine, NativeEngine, ServeOptions, Server,
+};
+use hashednets::tensor::Matrix;
+use hashednets::util::json::Json;
+use hashednets::util::rng::Pcg32;
+use std::sync::Arc;
+
+fn make_bag(nc: usize, dim: usize, k: usize, mode: BagMode, seed: u64) -> EmbedBag {
+    let mut bag = EmbedBag::new(nc, dim, k, mode, DEFAULT_SEED_BASE);
+    bag.init(&mut Pcg32::new(seed, 11));
+    bag
+}
+
+/// Random CSR bags: `n` bags of 1..=max_len ids over the category range.
+fn random_bags(rng: &mut Pcg32, nc: usize, n: usize, max_len: usize) -> (Vec<u32>, Vec<u32>) {
+    let mut indices = Vec::new();
+    let mut offsets = Vec::with_capacity(n);
+    for _ in 0..n {
+        offsets.push(indices.len() as u32);
+        let len = 1 + (rng.next_u32() as usize) % max_len;
+        for _ in 0..len {
+            indices.push(rng.next_u32() % nc as u32);
+        }
+    }
+    (indices, offsets)
+}
+
+/// Reference reduction over a fully materialized `nc × dim` table,
+/// accumulating in the same (bag-order, then column) order as the
+/// hashed path so f32 equality can be exact.
+fn reference_forward(bag: &EmbedBag, indices: &[u32], offsets: &[u32]) -> Vec<f32> {
+    let mut table = vec![0.0f32; bag.num_categories * bag.dim];
+    for row in 0..bag.num_categories {
+        bag.decompress_row_into(row, &mut table[row * bag.dim..(row + 1) * bag.dim]);
+    }
+    let n_bags = offsets.len();
+    let mut out = vec![0.0f32; n_bags * bag.dim];
+    for b in 0..n_bags {
+        let start = offsets[b] as usize;
+        let end = offsets.get(b + 1).map(|&o| o as usize).unwrap_or(indices.len());
+        for &idx in &indices[start..end] {
+            let row = &table[idx as usize * bag.dim..(idx as usize + 1) * bag.dim];
+            for (o, &v) in out[b * bag.dim..(b + 1) * bag.dim].iter_mut().zip(row) {
+                *o += v;
+            }
+        }
+        if bag.mode == BagMode::Mean && end > start {
+            let inv = 1.0 / (end - start) as f32;
+            for o in &mut out[b * bag.dim..(b + 1) * bag.dim] {
+                *o *= inv;
+            }
+        }
+    }
+    out
+}
+
+// ---- (a) forward vs materialized table ----
+
+#[test]
+fn forward_matches_materialized_table_bit_exact_in_both_modes() {
+    for mode in [BagMode::Sum, BagMode::Mean] {
+        let bag = make_bag(200, 8, 64, mode, 3);
+        let mut rng = Pcg32::new(17, 5);
+        let (indices, offsets) = random_bags(&mut rng, 200, 40, 6);
+        let z = bag.forward(&indices, &offsets);
+        let want = reference_forward(&bag, &indices, &offsets);
+        assert_eq!(z.data.len(), want.len());
+        for (i, (got, want)) in z.data.iter().zip(&want).enumerate() {
+            assert_eq!(
+                got.to_bits(),
+                want.to_bits(),
+                "{mode:?} value {i}: {got} vs {want}"
+            );
+        }
+    }
+}
+
+// ---- (b) backward determinism across thread counts ----
+
+#[test]
+fn sum_backward_is_bit_identical_across_thread_counts_in_ordered_mode() {
+    let bag = make_bag(5000, 16, 512, BagMode::Sum, 9);
+    let mut rng = Pcg32::new(23, 7);
+    let (indices, offsets) = random_bags(&mut rng, 5000, 64, 10);
+    let delta = Matrix::from_fn(offsets.len(), 16, |i, j| {
+        ((i * 31 + j * 7) % 13) as f32 * 0.17 - 1.0
+    });
+    let grad_at = |threads: usize| {
+        let opts = TrainOptions::with_threads(threads).ordered();
+        let mut grad = vec![0.0f32; bag.k()];
+        bag.backward(&indices, &offsets, &delta, &mut grad, &opts);
+        grad
+    };
+    let base = grad_at(1);
+    assert!(base.iter().any(|&g| g != 0.0), "gradient must be nonzero");
+    for threads in [2, 3, 8] {
+        let got = grad_at(threads);
+        for (b, (x, y)) in base.iter().zip(&got).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "bucket {b} differs at {threads} threads: {x} vs {y}"
+            );
+        }
+    }
+}
+
+// ---- (c) both wire protocols through the real server ----
+
+fn serve_embedding() -> (std::thread::JoinHandle<anyhow::Result<()>>, String, EmbedBag) {
+    // A million-row virtual table (1M × 16 = 16M virtual cells) served
+    // from 4096 resident buckets — the table is never materialized.
+    let bag = make_bag(1_000_000, 16, 4096, BagMode::Sum, 7);
+    let engine: Arc<dyn InferenceEngine + Send + Sync> = {
+        let mut served = EmbedBag::new(1_000_000, 16, 4096, BagMode::Sum, DEFAULT_SEED_BASE);
+        served.w = bag.w.clone();
+        Arc::new(NativeEngine::from_embed_bag(served, 8))
+    };
+    let opts = ServeOptions {
+        artifacts_dir: std::env::temp_dir().join("hn_embed_bag_no_artifacts"),
+        models: Vec::new(),
+        addr: "127.0.0.1:0".into(),
+        backend: Backend::Native,
+        workers: 2,
+        ..Default::default()
+    };
+    let srv = Server::bind_with_engines(opts, vec![("embed".into(), engine)]).expect("bind");
+    let addr = srv.local_addr().to_string();
+    (std::thread::spawn(move || srv.run()), addr, bag)
+}
+
+fn json_values(v: &Json) -> Vec<f32> {
+    v.get("values")
+        .and_then(Json::as_arr)
+        .expect("values array")
+        .iter()
+        .map(|x| x.as_f64().expect("number") as f32)
+        .collect()
+}
+
+#[test]
+fn json_and_binary_sparse_requests_agree_through_the_real_server() {
+    let (server, addr, bag) = serve_embedding();
+    let mut json = Client::connect(&addr).expect("json connect");
+    let mut bin = FrameClient::connect(&addr).expect("bin connect");
+
+    let mut rng = Pcg32::new(41, 13);
+    let (indices, offsets) = random_bags(&mut rng, 1_000_000, 12, 8);
+    let want = bag.forward(&indices, &offsets);
+
+    // JSON sparse round trip: the f32 → text → f32 trip is bit-exact.
+    let v = json.classify_sparse_raw(None, &indices, &offsets, None).expect("json sparse");
+    assert_eq!(
+        v.get("bags").and_then(Json::as_f64),
+        Some(offsets.len() as f64),
+        "reply: {v:?}"
+    );
+    let jvals = json_values(&v);
+    assert_eq!(jvals.len(), want.data.len());
+    for (i, (got, want)) in jvals.iter().zip(&want.data).enumerate() {
+        assert_eq!(got.to_bits(), want.to_bits(), "json value {i}");
+    }
+
+    // Binary sparse round trip: same reply through the frame protocol.
+    match bin.classify_sparse("", &indices, &offsets, 0).expect("bin sparse") {
+        FrameReply::Ok { class, probs, .. } => {
+            assert_eq!(class as usize, offsets.len(), "class carries the bag count");
+            assert_eq!(probs.len(), want.data.len());
+            for (i, (got, want)) in probs.iter().zip(&want.data).enumerate() {
+                assert_eq!(got.to_bits(), want.to_bits(), "binary value {i}");
+            }
+        }
+        other => panic!("expected Ok frame, got {other:?}"),
+    }
+
+    json.shutdown().expect("shutdown");
+    server.join().unwrap().expect("server run");
+}
+
+#[test]
+fn empty_bags_return_zero_vectors_on_both_protocols() {
+    let (server, addr, _bag) = serve_embedding();
+    let mut json = Client::connect(&addr).expect("json connect");
+    let mut bin = FrameClient::connect(&addr).expect("bin connect");
+
+    // Three empty bags: indices is empty, every offset is 0.
+    let offsets = vec![0u32, 0, 0];
+    let v = json.classify_sparse_raw(None, &[], &offsets, None).expect("json sparse");
+    assert_eq!(v.get("bags").and_then(Json::as_f64), Some(3.0), "reply: {v:?}");
+    let jvals = json_values(&v);
+    assert_eq!(jvals.len(), 3 * 16);
+    assert!(jvals.iter().all(|&x| x == 0.0), "empty bags must be zero vectors");
+
+    match bin.classify_sparse("", &[], &offsets, 0).expect("bin sparse") {
+        FrameReply::Ok { class, probs, .. } => {
+            assert_eq!(class, 3);
+            assert_eq!(probs.len(), 3 * 16);
+            assert!(probs.iter().all(|&x| x == 0.0));
+        }
+        other => panic!("expected Ok frame, got {other:?}"),
+    }
+
+    json.shutdown().expect("shutdown");
+    server.join().unwrap().expect("server run");
+}
+
+#[test]
+fn out_of_range_index_is_bad_input_on_both_protocols() {
+    let (server, addr, _bag) = serve_embedding();
+    let mut json = Client::connect(&addr).expect("json connect");
+    let mut bin = FrameClient::connect(&addr).expect("bin connect");
+
+    // index == num_categories is one past the last valid id
+    let indices = vec![1_000_000u32];
+    let offsets = vec![0u32];
+    let v = json.classify_sparse_raw(None, &indices, &offsets, None).expect("json sparse");
+    assert_eq!(
+        v.get("code").and_then(Json::as_str),
+        Some("bad_input"),
+        "reply: {v:?}"
+    );
+    match bin.classify_sparse("", &indices, &offsets, 0).expect("bin sparse") {
+        FrameReply::Err { code, message, .. } => {
+            assert_eq!(frame::num_to_code(code), "bad_input");
+            assert!(message.contains("out of range"), "diagnostic: {message}");
+        }
+        other => panic!("expected Err frame, got {other:?}"),
+    }
+
+    // a dense pixel request against the sparse model is bad_input too
+    let v = json.classify_raw(None, &[0.5; 16], None).expect("dense raw");
+    assert_eq!(v.get("code").and_then(Json::as_str), Some("bad_input"), "reply: {v:?}");
+
+    json.shutdown().expect("shutdown");
+    server.join().unwrap().expect("server run");
+}

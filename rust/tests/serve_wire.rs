@@ -266,6 +266,37 @@ fn validation_error_codes_match_across_protocols() {
     server.join().unwrap().expect("server run");
 }
 
+/// `{"cmd":"stats"}` breaks classify counts down per wire protocol and
+/// per model; validation failures still count toward the protocol they
+/// arrived on.
+#[test]
+fn stats_counts_requests_per_protocol() {
+    let (server, addr) = bind_with(base_options(), vec![("m".into(), tiny_native(11))]);
+    let mut json = Client::connect(&addr).expect("json");
+    let mut bin = FrameClient::connect(&addr).expect("bin");
+    for req in 0..3 {
+        json.classify(&input_row(req)).expect("json classify");
+    }
+    for req in 0..2 {
+        match bin.classify(&input_row(req)).expect("bin classify") {
+            FrameReply::Ok { .. } => {}
+            other => panic!("expected Ok frame, got {other:?}"),
+        }
+    }
+    // a validation failure (wrong pixel count) still counts as a JSON
+    // request against the model it resolved to
+    let v = json.classify_raw(None, &[1.0], None).expect("raw");
+    assert_eq!(v.get("code").and_then(Json::as_str), Some("bad_input"));
+
+    let stats = json.stats().expect("stats");
+    let m = stats.get("models").and_then(|ms| ms.get("m")).expect("per-model stats");
+    assert_eq!(m.get("json_requests").and_then(Json::as_f64), Some(4.0));
+    assert_eq!(m.get("binary_requests").and_then(Json::as_f64), Some(2.0));
+
+    json.shutdown().expect("shutdown");
+    server.join().unwrap().expect("server run");
+}
+
 /// Overload rejection (with a retry hint) and deadline expiry must
 /// surface identically over both protocols. The two queue slots are
 /// filled by the deadline-parity requests themselves: while they wait
@@ -447,7 +478,10 @@ fn binary_decode_allocates_order_of_magnitude_less_than_json_parse() {
     let before = allocs();
     let decoded = frame::decode_request(&buf).unwrap().expect("complete");
     let bin_allocs = allocs() - before;
-    assert_eq!(decoded.0.pixels.len(), 784);
+    let frame::FramePayload::Dense(decoded_pixels) = &decoded.0.payload else {
+        panic!("expected a dense payload");
+    };
+    assert_eq!(decoded_pixels.len(), 784);
 
     // JSON: parse + the pixel extraction the server does per request
     let arr: Vec<String> = pixels.iter().map(|p| format!("{p}")).collect();

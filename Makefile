@@ -27,6 +27,10 @@
 #                   compression 1/8–1/64) → BENCH_embed_bag.json.
 #                   HN_EMBED_BENCH_ROWS / HN_EMBED_BENCH_NBAGS shrink
 #                   it for CI smoke.
+#   make bundle-bench  HNMB v1 read-copy vs v2 mmap load-latency and
+#                   resident-bytes sweep at 1/10/50/200 resident models
+#                   (plus int8 dequantize-on-load) → BENCH_bundle_load.json.
+#                   HN_BUNDLE_BENCH_MODELS shrinks it for CI smoke.
 #   make bench-diff compare freshly produced BENCH_*.json against the
 #                   committed baselines in benches/baselines/ with
 #                   per-metric tolerance bands (see
@@ -48,7 +52,7 @@
 RUST_DIR := rust
 PY_DIR   := python
 
-.PHONY: check bench serve-bench train-bench pool-bench serve-scale-bench embed-bench bench-diff artifacts pytest smoke soak clean-bench
+.PHONY: check bench serve-bench train-bench pool-bench serve-scale-bench embed-bench bundle-bench bench-diff artifacts pytest smoke soak clean-bench
 
 # docs are load-bearing: rustdoc runs with -D warnings (broken intra-doc
 # links fail the build) and the doc-examples on ModelSpec / ModelBundle /
@@ -102,6 +106,11 @@ embed-bench:
 	cd $(RUST_DIR) && cargo bench --bench embed_bag
 	@echo "== embed bag report =="
 	@ls -l BENCH_embed_bag.json 2>/dev/null || echo "no BENCH_embed_bag.json produced"
+
+bundle-bench:
+	cd $(RUST_DIR) && cargo bench --bench bundle_load
+	@echo "== bundle load report =="
+	@ls -l BENCH_bundle_load.json 2>/dev/null || echo "no BENCH_bundle_load.json produced"
 
 # compare fresh BENCH_*.json against benches/baselines/ — advisory by
 # default (machines differ); BENCH_DIFF_FLAGS="--strict" gates on it

@@ -1,0 +1,184 @@
+//! Bundle load bench: HNMB v1 read-parse-copy vs HNMB v2 mmap.
+//!
+//! The serve registry keeps every resident model's parameters alive for
+//! the life of the process, so *load latency* and *resident heap bytes*
+//! are the costs that scale with fleet size. Three load paths over the
+//! same trained hashnet ([784,100,10], budgets [9812,126] — the paper's
+//! MNIST 1/8 shape):
+//!
+//!   * `v1-copy`       — `ModelBundle::load` + `Network::from_bundle`:
+//!                       read the file, checksum, copy every tensor onto
+//!                       the heap (the only path before v2)
+//!   * `v2-mmap`       — `BundleMap::open` + `Network::from_bundle_map`:
+//!                       map the file, checksum once, borrow f32 tensors
+//!                       in place (heap cost ≈ the dense layers only)
+//!   * `v2-int8-deq`   — same mmap open over an int8-quantized bundle;
+//!                       tensors dequantize onto the heap at load, the
+//!                       file on disk stays ~4x smaller
+//!
+//! Each case loads N models back-to-back and keeps them resident, for N
+//! in `HN_BUNDLE_BENCH_MODELS` (default `1,10,50,200`; CI smoke shrinks
+//! it). `BENCH_bundle_load.json` lands at the repo root with per-case
+//! `mean_ns`/`p50_ns`/`p95_ns` plus `heap_param_bytes` (owned f32 heap
+//! across all resident models) and `mapped_file_bytes` (bytes served
+//! straight from the page cache).
+//!
+//! The v2-int8 acceptance claim is asserted here, not narrated: the
+//! int8 file must be ≥3.5x smaller than the v1 f32 file.
+//!
+//!     cargo bench --bench bundle_load      # or: make bundle-bench
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use hashednets::model::{BundleMap, Method, ModelBundle, ModelSpec, QuantSpec};
+use hashednets::nn::Network;
+use hashednets::util::bench::Bench;
+use hashednets::util::json::{num, obj, Json};
+use hashednets::util::rng::Pcg32;
+
+const OUT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_bundle_load.json");
+
+const DIMS: [usize; 3] = [784, 100, 10];
+const BUDGETS: [usize; 2] = [9812, 126];
+
+fn model_counts() -> Vec<usize> {
+    let raw = std::env::var("HN_BUNDLE_BENCH_MODELS").unwrap_or_else(|_| "1,10,50,200".into());
+    let counts: Vec<usize> = raw.split(',').filter_map(|t| t.trim().parse().ok()).collect();
+    if counts.is_empty() {
+        vec![1, 10, 50, 200]
+    } else {
+        counts
+    }
+}
+
+/// Owned f32 parameter bytes across all resident models — mmap-borrowed
+/// stores cost file cache, not heap, and are excluded here.
+fn heap_param_bytes(nets: &[Network]) -> usize {
+    nets.iter()
+        .flat_map(|n| n.layers.iter())
+        .filter(|l| !l.params.is_mapped())
+        .map(|l| l.params.len() * 4)
+        .sum()
+}
+
+fn main() {
+    let counts = model_counts();
+    let dir = std::env::temp_dir().join(format!("hn_bundle_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("bench temp dir");
+
+    // One trained-shape hashnet, deterministically initialized, written
+    // out three ways: legacy v1, v2 f32, v2 int8.
+    let spec = ModelSpec::new(
+        "bench_hashnet",
+        Method::Hashnet,
+        DIMS.to_vec(),
+        BUDGETS.to_vec(),
+        0x9E37_79B9,
+        16,
+    )
+    .expect("bench spec");
+    let mut net = Network::from_spec(&spec).expect("skeleton");
+    net.init(&mut Pcg32::new(0xB0DE, 7));
+    let bundle = net.to_bundle(&spec).expect("to_bundle");
+
+    let v1_path = dir.join("model_v1.hnb");
+    let v2_path = dir.join("model_v2.hnb");
+    let int8_path = dir.join("model_int8.hnb");
+    std::fs::write(&v1_path, bundle.to_bytes_v1().expect("v1 bytes")).expect("write v1");
+    bundle.save(&v2_path).expect("save v2");
+    bundle.quantize(QuantSpec::Int8).expect("int8").save(&int8_path).expect("save int8");
+
+    let fsize = |p: &PathBuf| std::fs::metadata(p).expect("stat").len() as usize;
+    let (v1_bytes, v2_bytes, int8_bytes) = (fsize(&v1_path), fsize(&v2_path), fsize(&int8_path));
+    let ratio = v1_bytes as f64 / int8_bytes as f64;
+    println!(
+        "== bundle_load: v1 {v1_bytes} B, v2 f32 {v2_bytes} B, v2 int8 {int8_bytes} B \
+         ({ratio:.2}x vs v1) =="
+    );
+    // the acceptance claim, asserted not narrated
+    assert!(ratio >= 3.5, "int8 bundle only {ratio:.2}x smaller than v1 (need >=3.5x)");
+
+    let mut b = Bench::new(1, 5);
+    let mut cells: Vec<Json> = Vec::new();
+    for &m in &counts {
+        // -- v1: read + checksum + copy every tensor onto the heap ------
+        let mut nets: Vec<Network> = Vec::new();
+        b.items_per_iter = Some(m as f64);
+        let s = b.run(&format!("v1-copy models={m}"), || {
+            nets.clear();
+            for _ in 0..m {
+                let bundle = ModelBundle::load(&v1_path).expect("load v1");
+                nets.push(Network::from_bundle(&bundle).expect("from_bundle"));
+            }
+        });
+        cells.push(obj(vec![
+            ("name", Json::Str(s.name.clone())),
+            ("models", num(m as f64)),
+            ("mean_ns", num(s.mean_ns)),
+            ("p50_ns", num(s.p50_ns)),
+            ("p95_ns", num(s.p95_ns)),
+            ("throughput", s.throughput.map(num).unwrap_or(Json::Null)),
+            ("heap_param_bytes", num(heap_param_bytes(&nets) as f64)),
+            ("mapped_file_bytes", num(0.0)),
+        ]));
+
+        // -- v2 f32: mmap + checksum, hashed tensors borrowed in place --
+        let s = b.run(&format!("v2-mmap models={m}"), || {
+            nets.clear();
+            for _ in 0..m {
+                let map = Arc::new(BundleMap::open(&v2_path).expect("open v2"));
+                nets.push(Network::from_bundle_map(&map).expect("from_bundle_map"));
+            }
+        });
+        let mapped = nets
+            .iter()
+            .flat_map(|n| n.layers.iter())
+            .filter(|l| l.params.is_mapped())
+            .count();
+        cells.push(obj(vec![
+            ("name", Json::Str(s.name.clone())),
+            ("models", num(m as f64)),
+            ("mean_ns", num(s.mean_ns)),
+            ("p50_ns", num(s.p50_ns)),
+            ("p95_ns", num(s.p95_ns)),
+            ("throughput", s.throughput.map(num).unwrap_or(Json::Null)),
+            ("heap_param_bytes", num(heap_param_bytes(&nets) as f64)),
+            ("mapped_file_bytes", num((v2_bytes * m) as f64)),
+        ]));
+        if m == counts[0] {
+            println!("   ({mapped} of {} layer stores borrow from the mapping)", nets.len() * 2);
+        }
+
+        // -- v2 int8: mmap + checksum, dequantize-on-load ---------------
+        let s = b.run(&format!("v2-int8-deq models={m}"), || {
+            nets.clear();
+            for _ in 0..m {
+                let map = Arc::new(BundleMap::open(&int8_path).expect("open int8"));
+                nets.push(Network::from_bundle_map(&map).expect("from_bundle_map int8"));
+            }
+        });
+        cells.push(obj(vec![
+            ("name", Json::Str(s.name.clone())),
+            ("models", num(m as f64)),
+            ("mean_ns", num(s.mean_ns)),
+            ("p50_ns", num(s.p50_ns)),
+            ("p95_ns", num(s.p95_ns)),
+            ("throughput", s.throughput.map(num).unwrap_or(Json::Null)),
+            ("heap_param_bytes", num(heap_param_bytes(&nets) as f64)),
+            ("mapped_file_bytes", num((int8_bytes * m) as f64)),
+        ]));
+    }
+
+    let doc = obj(vec![
+        ("bench", Json::Str("bundle_load".into())),
+        ("v1_file_bytes", num(v1_bytes as f64)),
+        ("v2_file_bytes", num(v2_bytes as f64)),
+        ("v2_int8_file_bytes", num(int8_bytes as f64)),
+        ("int8_size_ratio", num(ratio)),
+        ("cases", Json::Arr(cells)),
+    ]);
+    std::fs::write(OUT, doc.to_string()).expect("write bench json");
+    println!("wrote {OUT}");
+    std::fs::remove_dir_all(&dir).ok();
+}

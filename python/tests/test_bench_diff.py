@@ -52,6 +52,35 @@ def scale_report(p99_us, rps):
     }
 
 
+def bundle_report(mean_ns, throughput, *, v1_bytes=400_000, int8_bytes=102_000):
+    """A BENCH_bundle_load.json shard: object schema with numeric file
+    sizes at top level and one case per (load path, resident count)."""
+    return {
+        "bench": "bundle_load",
+        "v1_file_bytes": v1_bytes,
+        "v2_file_bytes": v1_bytes + 160,
+        "v2_int8_file_bytes": int8_bytes,
+        "int8_size_ratio": v1_bytes / int8_bytes,
+        "cases": [
+            {
+                "name": name,
+                "models": 10,
+                "mean_ns": mean_ns,
+                "p50_ns": mean_ns,
+                "p95_ns": mean_ns * 1.3,
+                "throughput": throughput,
+                "heap_param_bytes": heap,
+                "mapped_file_bytes": mapped,
+            }
+            for name, heap, mapped in (
+                ("v1 copy m=10", 4_000_000, 0),
+                ("v2 mmap m=10", 0, 4_000_000),
+                ("v2 int8 dequant m=10", 4_000_000, 0),
+            )
+        ],
+    }
+
+
 def embed_report(mean_ns, throughput):
     """A BENCH_embed_bag.json shard: the util::bench flat array with the
     embed-bag case names (hashed sweep + dense roofline)."""
@@ -120,6 +149,23 @@ class TestLoadCases:
         assert metric_kind("throughput") == "throughput"
         assert hashed["throughput"] == 1.6e6
         assert cases["dense  fwd rows=100000 bag=50 (roofline)"]["mean_ns"] == 2000.0
+
+    def test_bundle_load_schema(self, tmp_path):
+        p = tmp_path / "BENCH_bundle_load.json"
+        write_json(p, bundle_report(50_000.0, 200_000.0))
+        cases, meta = load_cases(str(p))
+        # file sizes ride as numeric metadata; "bench" (a string) does not
+        assert meta["v1_file_bytes"] == 400_000
+        assert meta["int8_size_ratio"] == pytest.approx(400_000 / 102_000)
+        assert "bench" not in meta
+        assert len(cases) == 3
+        mmap_case = cases["v2 mmap m=10"]
+        assert mmap_case["mean_ns"] == 50_000.0
+        assert mmap_case["heap_param_bytes"] == 0
+        # byte counts are informational — they must never gate
+        assert metric_kind("heap_param_bytes") == "info"
+        assert metric_kind("mapped_file_bytes") == "info"
+        assert metric_kind("v2_int8_file_bytes") == "info"
 
     def test_non_json_container_rejected(self, tmp_path):
         p = tmp_path / "BENCH_bad.json"
@@ -226,6 +272,20 @@ class TestMainCli:
         assert self.run(fresh, base, "--strict") == 1
         # within-band wobble passes
         write_json(fresh / "BENCH_embed_bag.json", embed_report(2200.0, 1.5e6))
+        assert self.run(fresh, base, "--strict") == 0
+
+    def test_bundle_load_latency_regression_gates_strict(self, tmp_path):
+        fresh, base = tmp_path / "fresh", tmp_path / "base"
+        fresh.mkdir(), base.mkdir()
+        write_json(base / "BENCH_bundle_load.json", bundle_report(50_000.0, 200_000.0))
+        # mmap load latency doubles — a real regression
+        write_json(fresh / "BENCH_bundle_load.json", bundle_report(100_000.0, 100_000.0))
+        assert self.run(fresh, base, "--strict") == 1
+        # file sizes shifting alone (info metrics) must not gate
+        write_json(
+            fresh / "BENCH_bundle_load.json",
+            bundle_report(52_000.0, 195_000.0, v1_bytes=800_000, int8_bytes=204_000),
+        )
         assert self.run(fresh, base, "--strict") == 0
 
     def test_unreadable_fresh_report_is_skipped(self, tmp_path, capsys):

@@ -1,0 +1,80 @@
+"""Generate the committed HNMB **v1** golden fixtures under
+``rust/tests/data/`` — from Python, independently of the Rust writer.
+
+The point of a golden file is to pin the *format*, not the writer: if
+the fixture were produced by ``ModelBundle::to_bytes_v1`` it would
+silently track any Rust serialization bug. Instead this script builds
+the v1 byte layout by hand (and a legacy ``HNCK`` checkpoint with the
+same tensors) using the Python xxh32 reference implementation that the
+Rust hash tests already cross-check against.
+
+Layout written (v1, as documented in ``rust/src/model/bundle.rs``)::
+
+    "HNMB" | version=1 u32 LE | spec_len u32 LE | spec JSON |
+    n_tens u32 LE | per tensor: len u32 LE + len x f32 LE |
+    xxh32(all preceding bytes, seed 0x4D42) u32 LE
+
+    "HNCK" | n_tens u32 LE | per tensor: len u32 LE + len x f32 LE
+
+Model: hashnet, dims [6,5,4], budgets [10,8] — tensor ``t`` element
+``i`` holds ``((t*31 + i*7) % 13) * 0.125 - 0.75`` (eighths: exactly
+representable in f32, so the fixture is bit-stable across platforms).
+
+Usage::
+
+    cd python && python -m tools.make_golden_bundle
+"""
+
+from __future__ import annotations
+
+import os
+import struct
+
+from compile.hashing import xxh32
+
+CHECKSUM_SEED = 0x4D42  # "MB"
+
+SPEC_JSON = (
+    '{"name":"golden_v1","method":"hashnet","dims":[6,5,4],'
+    '"budgets":[10,8],"seed_base":2654435769,"batch":4}'
+)
+TENSOR_LENS = [10, 8]  # hashnet: one K-budget tensor per layer
+
+
+def tensor_values(t: int, n: int) -> list[float]:
+    return [((t * 31 + i * 7) % 13) * 0.125 - 0.75 for i in range(n)]
+
+
+def v1_bundle_bytes() -> bytes:
+    body = b"HNMB"
+    body += struct.pack("<I", 1)
+    body += struct.pack("<I", len(SPEC_JSON))
+    body += SPEC_JSON.encode()
+    body += struct.pack("<I", len(TENSOR_LENS))
+    for t, n in enumerate(TENSOR_LENS):
+        body += struct.pack("<I", n)
+        body += struct.pack(f"<{n}f", *tensor_values(t, n))
+    return body + struct.pack("<I", xxh32(body, CHECKSUM_SEED))
+
+
+def hnck_bytes() -> bytes:
+    body = b"HNCK"
+    body += struct.pack("<I", len(TENSOR_LENS))
+    for t, n in enumerate(TENSOR_LENS):
+        body += struct.pack("<I", n)
+        body += struct.pack(f"<{n}f", *tensor_values(t, n))
+    return body
+
+
+def main() -> None:
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "tests", "data")
+    os.makedirs(out_dir, exist_ok=True)
+    for name, data in [("golden_v1.hnb", v1_bundle_bytes()), ("golden_v1.ckpt", hnck_bytes())]:
+        path = os.path.join(out_dir, name)
+        with open(path, "wb") as f:
+            f.write(data)
+        print(f"wrote {os.path.normpath(path)} ({len(data)} B)")
+
+
+if __name__ == "__main__":
+    main()

@@ -79,7 +79,7 @@ pub fn compress_network(
         net.layers.iter().zip(hashed.layers.iter_mut()).enumerate()
     {
         let vb = dense_with_bias(dense_layer);
-        hashed_layer.params = compress_dense(&vb, budgets[l], l as u32, seed_base);
+        hashed_layer.params = compress_dense(&vb, budgets[l], l as u32, seed_base).into();
     }
     hashed.to_bundle(&spec)
 }
@@ -160,7 +160,7 @@ pub fn hashed_layer_from_dense(
 ) -> Layer {
     let (n, m1) = (dense.rows, dense.cols);
     let mut layer = Layer::new(m1 - 1, n, LayerKind::Hashed { k }, layer_index, seed_base);
-    layer.params = compress_dense(dense, k, layer_index as u32, seed_base);
+    layer.params = compress_dense(dense, k, layer_index as u32, seed_base).into();
     layer
 }
 

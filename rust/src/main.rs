@@ -12,7 +12,9 @@
 //!              tunes the ordered-mode block height. The same three
 //!              flags apply to `repro` and `hpo`.
 //!   eval     — evaluate a bundle (--bundle m.hnb, native) or an
-//!              artifact + checkpoint (--config/--checkpoint, PJRT)
+//!              artifact + checkpoint (--config/--checkpoint, PJRT);
+//!              `--frontier` prints the size/accuracy table across
+//!              quantization codecs (f32, int8, codebook K)
 //!   repro    — regenerate a paper experiment (fig2|fig3|table1|table2|fig4);
 //!              without artifacts/ the non-DK cells run on the native
 //!              engine (specs re-derived by coordinator::sizing), so the
@@ -23,7 +25,9 @@
 //!              models at runtime via {"cmd":"load"|"unload"|"reload"}
 //!   compress — dense → HashedNet in one call (compress_network):
 //!              --bundle dense.hnb --budgets k0,k1 (or the manifest pair
-//!              --from nn_… --to hashnet_… --checkpoint ck)
+//!              --from nn_… --to hashnet_… --checkpoint ck); add
+//!              `--quantize int8|codebook[K]` to re-encode the saved
+//!              tensors with a v2 quantization codec
 //!   list     — manifest artifacts + *.hnb bundles with method, storage,
 //!              compression ratio and bundle version
 //!   selftest — artifact ↔ native engine cross-validation
@@ -35,7 +39,7 @@
 use anyhow::{anyhow, Result};
 use hashednets::coordinator::{hpo, repro, trainer};
 use hashednets::data::{generate, Kind, Split};
-use hashednets::model::{BagMode, Method, ModelBundle, ModelSpec, BUNDLE_VERSION};
+use hashednets::model::{BagMode, Method, ModelBundle, ModelSpec, QuantSpec, BUNDLE_VERSION};
 use hashednets::nn::{EmbedBag, Network, TrainOptions};
 use hashednets::runtime::{Graph, Hyper, Manifest, ModelState, Runtime};
 use hashednets::serve::{serve, Backend, Client, ModelConfig, PollerKind, ServeOptions, Server};
@@ -49,8 +53,10 @@ const KNOWN_TRAIN: &[&str] = &[
     "budgets", "compression", "name", "seed-base", "batch", "spec-json", "threads",
     "block-rows", "reduction", "bag-mode", "strict",
 ];
-const KNOWN_EVAL: &[&str] =
-    &["config", "artifacts", "checkpoint", "bundle", "dataset", "n-test", "seed", "strict"];
+const KNOWN_EVAL: &[&str] = &[
+    "config", "artifacts", "checkpoint", "bundle", "dataset", "n-test", "seed", "frontier",
+    "strict",
+];
 const KNOWN_REPRO: &[&str] = &[
     "experiment", "artifacts", "results", "hidden", "exp-base", "n-train", "n-test", "epochs",
     "teacher-epochs", "workers", "seed", "scale", "threads", "block-rows", "reduction", "strict",
@@ -63,8 +69,10 @@ const KNOWN_SERVE: &[&str] = &[
     "config", "bundle", "checkpoint", "artifacts", "addr", "backend", "workers",
     "max-wait-us", "max-requests", "max-pending", "timeout-ms", "poller", "strict",
 ];
-const KNOWN_COMPRESS: &[&str] =
-    &["from", "to", "checkpoint", "artifacts", "save", "bundle", "budgets", "name", "strict"];
+const KNOWN_COMPRESS: &[&str] = &[
+    "from", "to", "checkpoint", "artifacts", "save", "bundle", "budgets", "name", "quantize",
+    "strict",
+];
 const KNOWN_LIST: &[&str] = &["artifacts", "strict"];
 const KNOWN_SELFTEST: &[&str] = &["config", "artifacts", "strict"];
 const KNOWN_SMOKE: &[&str] = &["dir", "keep", "strict"];
@@ -267,12 +275,41 @@ fn synth_bags(rng: &mut Pcg32, num_categories: usize, n: usize) -> (Vec<u32>, Ve
 
 fn save_bundle(bundle: &ModelBundle, out: &str) -> Result<()> {
     bundle.save(Path::new(out))?;
-    println!(
-        "model bundle -> {out} ({} stored params, {} B payload, format v{BUNDLE_VERSION})",
-        bundle.n_params(),
-        bundle.param_bytes()
-    );
+    if bundle.is_quantized() {
+        println!(
+            "model bundle -> {out} ({} stored params, {} B encoded / {} B as f32, format v{})",
+            bundle.n_params(),
+            bundle.encoded_param_bytes(),
+            bundle.param_bytes(),
+            bundle.version
+        );
+    } else {
+        println!(
+            "model bundle -> {out} ({} stored params, {} B payload, format v{})",
+            bundle.n_params(),
+            bundle.param_bytes(),
+            bundle.version
+        );
+    }
     Ok(())
+}
+
+/// `--quantize f32|int8|codebook[K]`: re-encode every tensor with the
+/// requested codec before saving. Returns the bundle unchanged when the
+/// flag is absent. The quantized bundle carries dequantized `params`, so
+/// anything downstream (reports, eval) sees exactly what a loader will.
+fn apply_quantize(args: &Args, bundle: ModelBundle) -> Result<ModelBundle> {
+    let Some(q) = args.get("quantize") else { return Ok(bundle) };
+    let spec = QuantSpec::parse(q)?;
+    let quantized = bundle.quantize(spec)?;
+    println!(
+        "quantize {}: {} B -> {} B ({:.2}x payload)",
+        spec.name(),
+        bundle.param_bytes(),
+        quantized.encoded_param_bytes(),
+        bundle.param_bytes() as f64 / quantized.encoded_param_bytes().max(1) as f64
+    );
+    Ok(quantized)
 }
 
 fn cmd_train(args: &Args) -> Result<()> {
@@ -465,6 +502,9 @@ fn cmd_eval(args: &Args) -> Result<()> {
                 ds.images.cols
             ));
         }
+        if args.has_flag("frontier") {
+            return eval_frontier(&bundle, &net, &ds);
+        }
         let err = net.error_rate(&ds.images, &ds.labels);
         println!(
             "{} (bundle v{}) on {}: test error {:.2}% [native engine]",
@@ -483,6 +523,54 @@ fn cmd_eval(args: &Args) -> Result<()> {
                       args.get_u64("seed", 0x5EED));
     let err = trainer::evaluate(&rt, artifact, &state, &ds)?;
     println!("{artifact} on {}: test error {:.2}%", ds.kind.name(), err * 100.0);
+    Ok(())
+}
+
+/// `eval --bundle m.hnb --frontier`: the size/accuracy frontier across
+/// quantization codecs — the Table 2 analogue for bundle storage. Each
+/// codec re-encodes the same trained weights; the evaluated network is
+/// rebuilt from the *decoded* tensors, so the reported error is exactly
+/// what a loader of that saved file would see.
+fn eval_frontier(
+    bundle: &ModelBundle,
+    f32_net: &Network,
+    ds: &hashednets::data::Dataset,
+) -> Result<()> {
+    let base_pred = f32_net.predict(&ds.images).argmax_rows();
+    let base_bytes = bundle.quantize(QuantSpec::F32)?.to_bytes().len();
+    println!(
+        "{} quantization frontier on {} ({} rows):",
+        bundle.spec.name,
+        ds.kind.name(),
+        ds.labels.len()
+    );
+    println!(
+        "{:<12} {:>12} {:>7} {:>12} {:>12}",
+        "codec", "file bytes", "ratio", "test error", "agree(f32)"
+    );
+    for spec in [
+        QuantSpec::F32,
+        QuantSpec::Int8,
+        QuantSpec::Codebook(256),
+        QuantSpec::Codebook(64),
+        QuantSpec::Codebook(16),
+    ] {
+        let q = bundle.quantize(spec)?;
+        let bytes = q.to_bytes().len();
+        let net = Network::from_bundle(&q)?;
+        let err = net.error_rate(&ds.images, &ds.labels);
+        let pred = net.predict(&ds.images).argmax_rows();
+        let agree = pred.iter().zip(&base_pred).filter(|(a, b)| a == b).count() as f64
+            / base_pred.len().max(1) as f64;
+        println!(
+            "{:<12} {:>12} {:>6.2}x {:>11.2}% {:>11.1}%",
+            spec.name(),
+            bytes,
+            base_bytes as f64 / bytes.max(1) as f64,
+            err * 100.0,
+            agree * 100.0
+        );
+    }
     Ok(())
 }
 
@@ -618,7 +706,7 @@ fn cmd_compress(args: &Args) -> Result<()> {
         {
             println!("layer {l}: -> {} weights, recon error {err:.3}", budgets[l]);
         }
-        return save_bundle(&hashed, out);
+        return save_bundle(&apply_quantize(args, hashed)?, out);
     }
 
     // Manifest pair path (compat): dims + budgets come from the target
@@ -656,7 +744,7 @@ fn cmd_compress(args: &Args) -> Result<()> {
     {
         println!("layer {l}: -> {} weights, recon error {err:.3}", hspec.budgets[l]);
     }
-    save_bundle(&hashed, out)
+    save_bundle(&apply_quantize(args, hashed)?, out)
 }
 
 fn cmd_list(args: &Args) -> Result<()> {

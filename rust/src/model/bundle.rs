@@ -3,17 +3,41 @@
 //! ([`Network::from_spec`] / [`Network::from_bundle`] /
 //! [`Network::to_bundle`]).
 //!
-//! ## File format (version 1)
+//! ## File format
+//!
+//! Version 2 (current writer) is section-tabled, alignment-padded and
+//! per-tensor quantizable, so the payload can be `mmap`ed and served
+//! in place (see [`crate::model::map::BundleMap`]):
 //!
 //! ```text
-//! magic    4 B   "HNMB"
-//! version  4 B   u32 LE (currently 1)
-//! spec_len 4 B   u32 LE
-//! spec     …     ModelSpec as UTF-8 JSON (deterministic key order)
-//! n_tens   4 B   u32 LE
-//! tensors  …     per tensor: u32 LE length + length × f32 LE
-//! checksum 4 B   u32 LE — xxh32 over every preceding byte
+//! magic     4 B   "HNMB"
+//! version   4 B   u32 LE (2)
+//! spec_len  4 B   u32 LE
+//! spec      …     ModelSpec as UTF-8 JSON (deterministic key order)
+//! n_tens    4 B   u32 LE
+//! sections  …     n_tens × 16 B: codec u32 | n_elems u32 |
+//!                 offset u32 (absolute, 64-byte aligned) | enc_len u32
+//! payloads  …     zero-padded to each section's offset; per codec:
+//!                   f32 (0):      n_elems × f32 LE
+//!                   int8 (1):     min f32 | scale f32 | n_elems × u8
+//!                   codebook (2): table_len u32 | table_len × f32 |
+//!                                 n_elems × u8
+//! checksum  4 B   u32 LE — xxh32 over every preceding byte
 //! ```
+//!
+//! Version 1 (still read, written by [`ModelBundle::to_bytes_v1`] for
+//! compat tooling) is the original dense layout: `n_tens`, then per
+//! tensor `u32 LE length + length × f32 LE`, same trailing checksum.
+//! Checksum coverage is unchanged across versions: every byte before
+//! the trailing word, same seed.
+//!
+//! The reader enforces *canonical packing* for v2: section `i`'s offset
+//! must equal the previous payload's end rounded up to
+//! [`SECTION_ALIGN`]. A file with reordered, overlapping or misaligned
+//! sections is rejected with [`ModelError::BadSection`] — there is
+//! exactly one valid byte serialization per bundle, which is what makes
+//! `save → load → save` byte-exact and keeps the mmap'd borrow path
+//! honest about alignment.
 //!
 //! Tensors use the artifact layout ([`ModelSpec::param_layout`]): dense
 //! layers store `[W, b]` as two tensors, everything else one tensor —
@@ -25,15 +49,23 @@
 //! virtual matrices — and for a hashed layer the single tensor is
 //! exactly the `K^ℓ` bucket values `w` of Eq. 7. Nothing about the
 //! `n × (m+1)` virtual matrix is stored; `HNMB` file size therefore
-//! scales with the *compressed* parameter count, which is the paper's
-//! deployment claim realized as a file format.
+//! scales with the *compressed* parameter count, and the v2 codecs
+//! (`int8`, k-means `codebook` — Deep Compression's weight-sharing
+//! stage) stack a further ~4× on those stored values.
 //!
 //! [`ModelBundle::load`] is the trust boundary: it verifies magic,
-//! version, structure, checksum, spec validity and tensor shapes, and
-//! reports each failure as a distinct [`ModelError`]. `save` writes the
-//! struct as-is (fields are public so tests can construct corrupt
-//! bundles deliberately).
+//! version, structure (section table, alignment, codec tags, code
+//! ranges), checksum, spec validity and tensor shapes, and reports each
+//! failure as a distinct [`ModelError`]. Every length is bounded by the
+//! actual file size *before* any allocation, so a hostile header can
+//! produce an error but never an OOM. `save` writes the struct as-is
+//! (fields are public so tests can construct corrupt bundles
+//! deliberately).
 
+use super::quant::{
+    decode_int8, quantize_tensor, Encoding, QuantSpec, CODEC_CODEBOOK, CODEC_F32, CODEC_INT8,
+    MAX_CODEBOOK,
+};
 use super::{ModelError, ModelSpec};
 use crate::hash::xxh32_bytes;
 use crate::nn::{EmbedBag, LayerKind, Network};
@@ -41,10 +73,20 @@ use std::path::Path;
 
 /// Current bundle format version. Readers accept any version `<=` this
 /// and reject newer files with [`ModelError::FutureVersion`].
-pub const BUNDLE_VERSION: u32 = 1;
+pub const BUNDLE_VERSION: u32 = 2;
 
-const MAGIC: &[u8; 4] = b"HNMB";
-const CHECKSUM_SEED: u32 = 0x4D42;
+/// Payload alignment of v2 sections: every tensor payload starts on a
+/// 64-byte boundary (cache line; a multiple of `align_of::<f32>()`), so
+/// an mmap'd f32 section can be borrowed in place as `&[f32]`.
+pub const SECTION_ALIGN: usize = 64;
+
+pub(crate) const MAGIC: &[u8; 4] = b"HNMB";
+pub(crate) const CHECKSUM_SEED: u32 = 0x4D42;
+
+/// Round `pos` up to the next [`SECTION_ALIGN`] boundary.
+fn align_up(pos: usize) -> Option<usize> {
+    pos.checked_add(SECTION_ALIGN - 1).map(|p| p & !(SECTION_ALIGN - 1))
+}
 
 /// One complete, self-describing model: spec + parameter tensors.
 ///
@@ -65,7 +107,7 @@ const CHECKSUM_SEED: u32 = 0x4D42;
 /// net.init(&mut Pcg32::new(1, 1));
 ///
 /// let bundle = net.to_bundle(&spec).unwrap();
-/// let bytes = bundle.to_bytes(); // "HNMB" | version | spec JSON | tensors | xxh32
+/// let bytes = bundle.to_bytes(); // "HNMB" | v2 | spec | sections | payloads | xxh32
 /// assert_eq!(&bytes[..4], b"HNMB");
 /// // a hashed layer ships only its K bucket values (Eq. 7): 14 and 7 here
 /// assert_eq!(bundle.n_params(), 21);
@@ -77,24 +119,52 @@ const CHECKSUM_SEED: u32 = 0x4D42;
 #[derive(Debug, Clone)]
 pub struct ModelBundle {
     pub spec: ModelSpec,
-    /// Parameter tensors in [`ModelSpec::param_layout`] order.
+    /// Parameter tensors in [`ModelSpec::param_layout`] order — always
+    /// the *decoded* (dequantized) values, which is what predictions
+    /// use.
     pub params: Vec<Vec<f32>>,
+    /// Per-tensor storage codec (parallel to `params`). For the lossy
+    /// codecs the stored codes are authoritative on save, so a
+    /// `save → load → save` round trip is byte-exact.
+    pub encodings: Vec<Encoding>,
     /// Format version this bundle was read as (== [`BUNDLE_VERSION`]
     /// for freshly built bundles).
     pub version: u32,
 }
 
+/// One entry of a parsed (v1 or v2) bundle: where a tensor's encoded
+/// payload lives. `n_elems` is the decoded f32 count; `offset` is
+/// absolute in the file.
+pub(crate) struct RawSection {
+    pub codec: u32,
+    pub n_elems: usize,
+    pub offset: usize,
+    pub enc_len: usize,
+}
+
+/// A structurally validated bundle: header fields plus the section
+/// table, with the checksum verified and the spec parsed — everything
+/// except decoding the payloads. [`crate::model::map::BundleMap`] keeps
+/// exactly this and borrows payloads lazily.
+pub(crate) struct RawBundle {
+    pub version: u32,
+    pub spec: ModelSpec,
+    pub sections: Vec<RawSection>,
+}
+
 impl ModelBundle {
-    /// Build a bundle, validating that `params` matches the spec's
-    /// layout.
+    /// Build an (unquantized) bundle, validating that `params` matches
+    /// the spec's layout.
     pub fn new(spec: ModelSpec, params: Vec<Vec<f32>>) -> Result<ModelBundle, ModelError> {
         spec.validate()?;
-        let b = ModelBundle { spec, params, version: BUNDLE_VERSION };
+        let encodings = vec![Encoding::F32; params.len()];
+        let b = ModelBundle { spec, params, encodings, version: BUNDLE_VERSION };
         b.check_shapes()?;
         Ok(b)
     }
 
-    /// Verify the tensors against the spec's layout.
+    /// Verify the tensors against the spec's layout, and the encodings
+    /// against the tensors.
     pub fn check_shapes(&self) -> Result<(), ModelError> {
         let expect = self.spec.param_layout();
         let got: Vec<usize> = self.params.iter().map(Vec::len).collect();
@@ -104,26 +174,139 @@ impl ModelBundle {
                 self.spec.name, self.spec.method, self.spec.dims, expect, got
             )));
         }
+        if self.encodings.len() != self.params.len() {
+            return Err(ModelError::ShapeMismatch(format!(
+                "bundle has {} tensors but {} encodings",
+                self.params.len(),
+                self.encodings.len()
+            )));
+        }
+        for (i, (p, e)) in self.params.iter().zip(&self.encodings).enumerate() {
+            if let Some(n) = e.code_len() {
+                if n != p.len() {
+                    return Err(ModelError::ShapeMismatch(format!(
+                        "tensor {i}: {} decoded values but {n} {} codes",
+                        p.len(),
+                        e.codec_name()
+                    )));
+                }
+            }
+        }
         Ok(())
     }
 
-    /// Total stored f32 count across tensors.
+    /// Re-encode every tensor with `spec`, replacing `params` with the
+    /// dequantized values — so anything predicting from this bundle
+    /// (eval, serve) sees exactly the precision the file will carry.
+    pub fn quantize(&self, spec: QuantSpec) -> Result<ModelBundle, ModelError> {
+        self.check_shapes()?;
+        let mut params = Vec::with_capacity(self.params.len());
+        let mut encodings = Vec::with_capacity(self.params.len());
+        for p in &self.params {
+            let (e, decoded) = quantize_tensor(p, spec);
+            params.push(decoded);
+            encodings.push(e);
+        }
+        Ok(ModelBundle { spec: self.spec.clone(), params, encodings, version: BUNDLE_VERSION })
+    }
+
+    /// Total stored f32 count across tensors (logical, pre-codec).
     pub fn n_params(&self) -> usize {
         self.params.iter().map(Vec::len).sum()
     }
 
-    /// On-disk payload size of the parameters alone.
+    /// Logical f32 payload size of the parameters alone.
     pub fn param_bytes(&self) -> usize {
         4 * self.n_params()
     }
 
+    /// Encoded payload size under the current codecs (excluding header,
+    /// section table, padding and checksum) — the number the
+    /// accuracy/size frontier reports.
+    pub fn encoded_param_bytes(&self) -> usize {
+        self.params
+            .iter()
+            .zip(&self.encodings)
+            .map(|(p, e)| e.encoded_len(e.code_len().unwrap_or(p.len())))
+            .sum()
+    }
+
+    /// `true` if any tensor uses a lossy codec.
+    pub fn is_quantized(&self) -> bool {
+        self.encodings.iter().any(|e| !matches!(e, Encoding::F32))
+    }
+
     // -- serialization ---------------------------------------------------
 
+    /// Serialize as format v2 (the only version the writer produces).
     pub fn to_bytes(&self) -> Vec<u8> {
+        let spec_json = self.spec.to_json_string();
+        let n = self.params.len();
+        // plan the canonical section layout first
+        let header_end = 12 + spec_json.len() + 4 + 16 * n;
+        let mut entries = Vec::with_capacity(n);
+        let mut pos = header_end;
+        for (p, enc) in self.params.iter().zip(&self.encodings) {
+            let n_elems = enc.code_len().unwrap_or(p.len());
+            let enc_len = enc.encoded_len(n_elems);
+            pos = align_up(pos).expect("bundle exceeds usize");
+            entries.push((enc.codec_tag(), n_elems, pos, enc_len));
+            pos += enc_len;
+        }
+        let mut out = Vec::with_capacity(pos + 4);
+        out.extend_from_slice(MAGIC);
+        out.extend_from_slice(&BUNDLE_VERSION.to_le_bytes());
+        out.extend_from_slice(&(spec_json.len() as u32).to_le_bytes());
+        out.extend_from_slice(spec_json.as_bytes());
+        out.extend_from_slice(&(n as u32).to_le_bytes());
+        for &(codec, n_elems, offset, enc_len) in &entries {
+            out.extend_from_slice(&codec.to_le_bytes());
+            out.extend_from_slice(&(n_elems as u32).to_le_bytes());
+            out.extend_from_slice(&(offset as u32).to_le_bytes());
+            out.extend_from_slice(&(enc_len as u32).to_le_bytes());
+        }
+        for ((p, enc), &(_, _, offset, _)) in
+            self.params.iter().zip(&self.encodings).zip(&entries)
+        {
+            out.resize(offset, 0); // zero padding up to the aligned offset
+            match enc {
+                Encoding::F32 => {
+                    for v in p {
+                        out.extend_from_slice(&v.to_le_bytes());
+                    }
+                }
+                Encoding::Int8 { min, scale, codes } => {
+                    out.extend_from_slice(&min.to_le_bytes());
+                    out.extend_from_slice(&scale.to_le_bytes());
+                    out.extend_from_slice(codes);
+                }
+                Encoding::Codebook { table, codes } => {
+                    out.extend_from_slice(&(table.len() as u32).to_le_bytes());
+                    for t in table {
+                        out.extend_from_slice(&t.to_le_bytes());
+                    }
+                    out.extend_from_slice(codes);
+                }
+            }
+        }
+        let sum = xxh32_bytes(&out, CHECKSUM_SEED);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Serialize as legacy format v1 (dense length-prefixed tensors, no
+    /// section table). Only f32 bundles have a v1 representation; kept
+    /// for compat tooling, golden fixtures and the v1-vs-v2 load bench.
+    pub fn to_bytes_v1(&self) -> Result<Vec<u8>, ModelError> {
+        if self.is_quantized() {
+            return Err(ModelError::InvalidSpec(
+                "format v1 cannot carry quantized tensors (re-encode as f32 first)".into(),
+            ));
+        }
         let spec_json = self.spec.to_json_string();
         let mut out = Vec::with_capacity(24 + spec_json.len() + self.param_bytes());
         out.extend_from_slice(MAGIC);
-        out.extend_from_slice(&BUNDLE_VERSION.to_le_bytes());
+        out.extend_from_slice(&1u32.to_le_bytes());
         out.extend_from_slice(&(spec_json.len() as u32).to_le_bytes());
         out.extend_from_slice(spec_json.as_bytes());
         out.extend_from_slice(&(self.params.len() as u32).to_le_bytes());
@@ -135,96 +318,33 @@ impl ModelBundle {
         }
         let sum = xxh32_bytes(&out, CHECKSUM_SEED);
         out.extend_from_slice(&sum.to_le_bytes());
-        out
+        Ok(out)
     }
 
     pub fn from_bytes(bytes: &[u8]) -> Result<ModelBundle, ModelError> {
-        let read_u32 = |off: usize, what: &'static str| -> Result<u32, ModelError> {
-            bytes
-                .get(off..off + 4)
-                .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
-                .ok_or(ModelError::Truncated(what))
-        };
-        if bytes.len() < 4 {
-            return Err(ModelError::Truncated("magic"));
+        let raw = parse(bytes)?;
+        let mut params = Vec::with_capacity(raw.sections.len());
+        let mut encodings = Vec::with_capacity(raw.sections.len());
+        for s in &raw.sections {
+            let (p, e) = decode_section(bytes, s);
+            params.push(p);
+            encodings.push(e);
         }
-        if &bytes[..4] != MAGIC {
-            return Err(ModelError::BadMagic);
-        }
-        let version = read_u32(4, "version")?;
-        if version > BUNDLE_VERSION {
-            return Err(ModelError::FutureVersion { found: version, supported: BUNDLE_VERSION });
-        }
-        let spec_len = read_u32(8, "spec length")? as usize;
-        // everything below the trailing checksum word is the body
-        let body_end = bytes
-            .len()
-            .checked_sub(4)
-            .filter(|&e| e >= 12)
-            .ok_or(ModelError::Truncated("checksum"))?;
-        let mut off = 12;
-        if off + spec_len > body_end {
-            return Err(ModelError::Truncated("spec json"));
-        }
-        let spec_bytes = &bytes[off..off + spec_len];
-        off += spec_len;
-        if off + 4 > body_end {
-            return Err(ModelError::Truncated("tensor count"));
-        }
-        let n_tensors = read_u32(off, "tensor count")? as usize;
-        off += 4;
-        // every tensor needs at least its 4-byte length word, so a
-        // count beyond this is lying — reject before trusting it with
-        // an allocation
-        if n_tensors > (body_end - off) / 4 {
-            return Err(ModelError::Truncated("tensor count"));
-        }
-        let mut params = Vec::with_capacity(n_tensors);
-        for _ in 0..n_tensors {
-            if off + 4 > body_end {
-                return Err(ModelError::Truncated("tensor length"));
-            }
-            let len = read_u32(off, "tensor length")? as usize;
-            off += 4;
-            let byte_len = len.checked_mul(4).ok_or(ModelError::Truncated("tensor data"))?;
-            if off + byte_len > body_end {
-                return Err(ModelError::Truncated("tensor data"));
-            }
-            let mut v = Vec::with_capacity(len);
-            for i in 0..len {
-                let at = off + 4 * i;
-                v.push(f32::from_le_bytes(bytes[at..at + 4].try_into().unwrap()));
-            }
-            off += byte_len;
-            params.push(v);
-        }
-        if off != body_end {
-            return Err(ModelError::InvalidSpec(format!(
-                "{} trailing bytes after tensors",
-                body_end - off
-            )));
-        }
-        let stored = read_u32(body_end, "checksum")?;
-        let computed = xxh32_bytes(&bytes[..body_end], CHECKSUM_SEED);
-        if stored != computed {
-            return Err(ModelError::BadChecksum { stored, computed });
-        }
-        let spec_text = std::str::from_utf8(spec_bytes)
-            .map_err(|_| ModelError::InvalidSpec("spec json is not utf-8".into()))?;
-        let spec = ModelSpec::from_json_str(spec_text)?;
-        let bundle = ModelBundle { spec, params, version };
+        let bundle = ModelBundle { spec: raw.spec, params, encodings, version: raw.version };
         bundle.check_shapes()?;
         Ok(bundle)
     }
 
-    /// Write the bundle to one file, atomically: the bytes go to a
-    /// sibling temp file, are fsynced, and the temp is renamed into
-    /// place. A crash mid-save — or a concurrent `{"cmd":"load"}` /
-    /// `{"cmd":"reload"}` reading while a retrain overwrites — can
-    /// therefore only ever observe the old complete bundle or the new
-    /// complete bundle, never a torn prefix. (The checksum in
-    /// [`ModelBundle::from_bytes`] would catch a tear after the fact;
-    /// this makes the window not exist.)
+    /// Write the bundle to one file, atomically and durably: the bytes
+    /// go to a sibling temp file, are fsynced, the temp is renamed into
+    /// place, and the parent directory is fsynced so the rename itself
+    /// survives a crash. A crash mid-save — or a concurrent
+    /// `{"cmd":"load"}` / `{"cmd":"reload"}` reading while a retrain
+    /// overwrites — can therefore only ever observe the old complete
+    /// bundle or the new complete bundle, never a torn prefix, and a
+    /// completed save cannot be rolled back by a power cut. (The
+    /// checksum in [`ModelBundle::from_bytes`] would catch a tear after
+    /// the fact; this makes the window not exist.)
     pub fn save(&self, path: &Path) -> Result<(), ModelError> {
         use std::io::Write as _;
         let file_name = path
@@ -239,14 +359,26 @@ impl ModelBundle {
         // Same directory as the target so the rename cannot cross a
         // filesystem boundary (cross-device rename is not atomic).
         let tmp = path.with_file_name(format!(".{file_name}.tmp.{}", std::process::id()));
-        let write_and_sync = (|| {
+        let write_and_sync = (|| -> std::io::Result<()> {
             let mut f = std::fs::File::create(&tmp)?;
             f.write_all(&self.to_bytes())?;
             // data must be durable *before* the rename publishes it,
             // or a crash could leave a complete-looking name pointing
             // at unwritten blocks
             f.sync_all()?;
-            std::fs::rename(&tmp, path)
+            std::fs::rename(&tmp, path)?;
+            // the rename lives in the directory, not the file: without
+            // this fsync a crash can resurrect the old name (or, for a
+            // first save, lose the file entirely) after `save` returned
+            #[cfg(unix)]
+            {
+                let dir = match path.parent() {
+                    Some(d) if !d.as_os_str().is_empty() => d,
+                    _ => Path::new("."),
+                };
+                std::fs::File::open(dir)?.sync_all()?;
+            }
+            Ok(())
         })();
         if let Err(e) = write_and_sync {
             let _ = std::fs::remove_file(&tmp);
@@ -259,6 +391,219 @@ impl ModelBundle {
     pub fn load(path: &Path) -> Result<ModelBundle, ModelError> {
         let bytes = std::fs::read(path)?;
         ModelBundle::from_bytes(&bytes)
+    }
+}
+
+/// Structural + checksum + spec validation shared by
+/// [`ModelBundle::from_bytes`] and the mmap'd
+/// [`crate::model::map::BundleMap`]: returns the section table without
+/// decoding any payload. Validation order matches the original v1
+/// reader — structure first (so a hostile length can never reach an
+/// allocation), then checksum, then spec parse; shape checks against
+/// the spec happen in the callers.
+pub(crate) fn parse(bytes: &[u8]) -> Result<RawBundle, ModelError> {
+    let read_u32 = |off: usize, what: &'static str| -> Result<u32, ModelError> {
+        bytes
+            .get(off..off + 4)
+            .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+            .ok_or(ModelError::Truncated(what))
+    };
+    if bytes.len() < 4 {
+        return Err(ModelError::Truncated("magic"));
+    }
+    if &bytes[..4] != MAGIC {
+        return Err(ModelError::BadMagic);
+    }
+    let version = read_u32(4, "version")?;
+    // version 0 never existed — report it the same way as a version
+    // from the future: a number this reader has no layout for
+    if version == 0 || version > BUNDLE_VERSION {
+        return Err(ModelError::FutureVersion { found: version, supported: BUNDLE_VERSION });
+    }
+    let spec_len = read_u32(8, "spec length")? as usize;
+    // everything below the trailing checksum word is the body
+    let body_end = bytes
+        .len()
+        .checked_sub(4)
+        .filter(|&e| e >= 12)
+        .ok_or(ModelError::Truncated("checksum"))?;
+    let mut off = 12;
+    if spec_len > body_end - off {
+        return Err(ModelError::Truncated("spec json"));
+    }
+    let spec_bytes = &bytes[off..off + spec_len];
+    off += spec_len;
+    if off + 4 > body_end {
+        return Err(ModelError::Truncated("tensor count"));
+    }
+    let n_tensors = read_u32(off, "tensor count")? as usize;
+    off += 4;
+    let sections = if version == 1 {
+        parse_v1_sections(bytes, off, n_tensors, body_end)?
+    } else {
+        parse_v2_sections(bytes, off, n_tensors, body_end)?
+    };
+    let stored = read_u32(body_end, "checksum")?;
+    let computed = xxh32_bytes(&bytes[..body_end], CHECKSUM_SEED);
+    if stored != computed {
+        return Err(ModelError::BadChecksum { stored, computed });
+    }
+    let spec_text = std::str::from_utf8(spec_bytes)
+        .map_err(|_| ModelError::InvalidSpec("spec json is not utf-8".into()))?;
+    let spec = ModelSpec::from_json_str(spec_text)?;
+    Ok(RawBundle { version, spec, sections })
+}
+
+/// v1 body: length-prefixed f32 tensors, back to back.
+fn parse_v1_sections(
+    bytes: &[u8],
+    mut off: usize,
+    n_tensors: usize,
+    body_end: usize,
+) -> Result<Vec<RawSection>, ModelError> {
+    // every tensor needs at least its 4-byte length word, so a count
+    // beyond this is lying — reject before trusting it with an
+    // allocation
+    if n_tensors > (body_end - off) / 4 {
+        return Err(ModelError::Truncated("tensor count"));
+    }
+    let mut sections = Vec::with_capacity(n_tensors);
+    for _ in 0..n_tensors {
+        if off + 4 > body_end {
+            return Err(ModelError::Truncated("tensor length"));
+        }
+        let len = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+        off += 4;
+        let byte_len = len.checked_mul(4).ok_or(ModelError::Truncated("tensor data"))?;
+        if byte_len > body_end - off {
+            return Err(ModelError::Truncated("tensor data"));
+        }
+        sections.push(RawSection { codec: CODEC_F32, n_elems: len, offset: off, enc_len: byte_len });
+        off += byte_len;
+    }
+    if off != body_end {
+        return Err(ModelError::InvalidSpec(format!(
+            "{} trailing bytes after tensors",
+            body_end - off
+        )));
+    }
+    Ok(sections)
+}
+
+/// v2 body: fixed-size section table, then canonically packed,
+/// 64-byte-aligned payloads. Everything a hostile header could inflate
+/// (`n_tens`, `n_elems`, `enc_len`, `offset`, codebook `table_len`) is
+/// checked against the real file length here, before any allocation.
+fn parse_v2_sections(
+    bytes: &[u8],
+    table_start: usize,
+    n_tensors: usize,
+    body_end: usize,
+) -> Result<Vec<RawSection>, ModelError> {
+    let bad = |i: usize, why: String| ModelError::BadSection(format!("tensor {i}: {why}"));
+    // each section occupies 16 table bytes — an n_tens beyond that is
+    // lying about the file it lives in
+    if n_tensors > (body_end - table_start) / 16 {
+        return Err(ModelError::Truncated("section table"));
+    }
+    let mut sections = Vec::with_capacity(n_tensors);
+    for i in 0..n_tensors {
+        let e = table_start + 16 * i;
+        let word = |j: usize| u32::from_le_bytes(bytes[e + 4 * j..e + 4 * j + 4].try_into().unwrap());
+        let (codec, n_elems, offset, enc_len) =
+            (word(0), word(1) as usize, word(2) as usize, word(3) as usize);
+        if codec > CODEC_CODEBOOK {
+            return Err(bad(i, format!("unknown codec tag {codec}")));
+        }
+        sections.push(RawSection { codec, n_elems, offset, enc_len });
+    }
+    let mut pos = table_start + 16 * n_tensors;
+    for (i, s) in sections.iter().enumerate() {
+        let expected = align_up(pos).ok_or_else(|| bad(i, "offset overflow".into()))?;
+        if s.offset != expected {
+            return Err(bad(
+                i,
+                format!(
+                    "payload offset {} is not the canonical {SECTION_ALIGN}-byte-aligned {expected}",
+                    s.offset
+                ),
+            ));
+        }
+        let end = s.offset.checked_add(s.enc_len).ok_or_else(|| bad(i, "length overflow".into()))?;
+        if end > body_end {
+            return Err(ModelError::Truncated("tensor data"));
+        }
+        // enc_len ↔ n_elems consistency pins every decode allocation to
+        // at most the real payload length
+        let want = match s.codec {
+            CODEC_F32 => s.n_elems.checked_mul(4),
+            CODEC_INT8 => s.n_elems.checked_add(8),
+            _ => {
+                if s.enc_len < 4 {
+                    return Err(bad(i, "codebook payload shorter than its table length".into()));
+                }
+                let tl =
+                    u32::from_le_bytes(bytes[s.offset..s.offset + 4].try_into().unwrap()) as usize;
+                if tl == 0 || tl > MAX_CODEBOOK {
+                    return Err(bad(i, format!("codebook table length {tl} (valid: 1..={MAX_CODEBOOK})")));
+                }
+                let codes_at = s.offset + 4 + 4 * tl;
+                let want = (4 + 4 * tl).checked_add(s.n_elems);
+                if want == Some(s.enc_len) {
+                    // every index must point inside the table
+                    if let Some(p) = bytes[codes_at..end].iter().position(|&c| c as usize >= tl) {
+                        return Err(bad(
+                            i,
+                            format!(
+                                "code {} at element {p} indexes past the {tl}-entry table",
+                                bytes[codes_at + p]
+                            ),
+                        ));
+                    }
+                }
+                want
+            }
+        };
+        if want != Some(s.enc_len) {
+            return Err(bad(
+                i,
+                format!("encoded length {} does not match {} elements", s.enc_len, s.n_elems),
+            ));
+        }
+        pos = end;
+    }
+    if pos != body_end {
+        return Err(ModelError::InvalidSpec(format!(
+            "{} trailing bytes after tensors",
+            body_end - pos
+        )));
+    }
+    Ok(sections)
+}
+
+/// Decode one validated section into (dequantized values, encoding).
+/// Infallible by construction: [`parse`] already bounded every length
+/// and index against the real bytes.
+pub(crate) fn decode_section(bytes: &[u8], s: &RawSection) -> (Vec<f32>, Encoding) {
+    let p = &bytes[s.offset..s.offset + s.enc_len];
+    let f32_at = |b: &[u8], at: usize| f32::from_le_bytes(b[at..at + 4].try_into().unwrap());
+    match s.codec {
+        CODEC_INT8 => {
+            let (min, scale) = (f32_at(p, 0), f32_at(p, 4));
+            let codes = p[8..].to_vec();
+            (decode_int8(min, scale, &codes), Encoding::Int8 { min, scale, codes })
+        }
+        CODEC_CODEBOOK => {
+            let tl = u32::from_le_bytes(p[0..4].try_into().unwrap()) as usize;
+            let table: Vec<f32> = (0..tl).map(|i| f32_at(p, 4 + 4 * i)).collect();
+            let codes = p[4 + 4 * tl..].to_vec();
+            let decoded = codes.iter().map(|&c| table[c as usize]).collect();
+            (decoded, Encoding::Codebook { table, codes })
+        }
+        _ => {
+            let v = (0..s.n_elems).map(|i| f32_at(p, 4 * i)).collect();
+            (v, Encoding::F32)
+        }
     }
 }
 
@@ -276,7 +621,9 @@ impl Network {
     }
 
     /// Reconstruct the full model a bundle stores: skeleton from the
-    /// spec, parameters copied bit-exactly from the tensors.
+    /// spec, parameters copied bit-exactly from the (decoded) tensors.
+    /// For the zero-copy variant see
+    /// [`Network::from_bundle_map`](crate::model::map::BundleMap).
     pub fn from_bundle(bundle: &ModelBundle) -> Result<Network, ModelError> {
         bundle.check_shapes()?;
         let mut net = Network::from_spec(&bundle.spec)?;
@@ -333,7 +680,7 @@ impl Network {
                     params.push(layer.params[..nm].to_vec());
                     params.push(layer.params[nm..].to_vec());
                 }
-                _ => params.push(layer.params.clone()),
+                _ => params.push(layer.params.to_vec()),
             }
         }
         ModelBundle::new(spec.clone(), params)
@@ -342,7 +689,8 @@ impl Network {
 
 impl EmbedBag {
     /// Reconstruct the embedding table a bundle stores: identity from
-    /// the spec, bucket array copied bit-exactly from the single tensor.
+    /// the spec, bucket array copied bit-exactly from the single
+    /// (decoded) tensor.
     pub fn from_bundle(bundle: &ModelBundle) -> Result<EmbedBag, ModelError> {
         bundle.check_shapes()?;
         let w = bundle.params.first().cloned().ok_or_else(|| {
@@ -375,7 +723,7 @@ impl EmbedBag {
                 spec.name
             )));
         }
-        ModelBundle::new(spec.clone(), vec![self.w.clone()])
+        ModelBundle::new(spec.clone(), vec![self.w.to_vec()])
     }
 }
 
@@ -398,6 +746,51 @@ mod tests {
         assert_eq!(back.spec, bundle.spec);
         assert_eq!(back.params, bundle.params);
         assert_eq!(back.version, BUNDLE_VERSION);
+    }
+
+    #[test]
+    fn v2_sections_are_aligned_and_canonical() {
+        let mut net = Network::from_spec(&spec(Method::Nn)).unwrap();
+        net.init(&mut Pcg32::new(9, 9));
+        let bytes = net.to_bundle(&spec(Method::Nn)).unwrap().to_bytes();
+        let raw = parse(&bytes).unwrap();
+        assert_eq!(raw.version, BUNDLE_VERSION);
+        assert_eq!(raw.sections.len(), 4); // [W0, b0, W1, b1]
+        for s in &raw.sections {
+            assert_eq!(s.offset % SECTION_ALIGN, 0, "payloads start 64-byte aligned");
+        }
+    }
+
+    #[test]
+    fn quantized_roundtrip_is_byte_exact_and_smaller() {
+        let mut net = Network::from_spec(&spec(Method::Hashnet)).unwrap();
+        net.init(&mut Pcg32::new(5, 5));
+        let f32_bundle = net.to_bundle(&spec(Method::Hashnet)).unwrap();
+        for q in [QuantSpec::Int8, QuantSpec::Codebook(8)] {
+            let qb = f32_bundle.quantize(q).unwrap();
+            assert!(qb.is_quantized());
+            assert!(qb.encoded_param_bytes() < f32_bundle.encoded_param_bytes());
+            let bytes = qb.to_bytes();
+            let back = ModelBundle::from_bytes(&bytes).unwrap();
+            assert_eq!(back.params, qb.params, "{q:?} decode must match");
+            assert_eq!(back.encodings, qb.encodings);
+            assert_eq!(back.to_bytes(), bytes, "save→load→save byte-exact for {q:?}");
+        }
+    }
+
+    #[test]
+    fn v1_writer_reads_back_as_v1() {
+        let mut net = Network::from_spec(&spec(Method::Hashnet)).unwrap();
+        net.init(&mut Pcg32::new(5, 5));
+        let bundle = net.to_bundle(&spec(Method::Hashnet)).unwrap();
+        let v1 = bundle.to_bytes_v1().unwrap();
+        let back = ModelBundle::from_bytes(&v1).unwrap();
+        assert_eq!(back.version, 1);
+        assert_eq!(back.params, bundle.params);
+        // and the v1 writer round-trips its own bytes exactly
+        assert_eq!(back.to_bytes_v1().unwrap(), v1);
+        // quantized bundles have no v1 representation
+        assert!(bundle.quantize(QuantSpec::Int8).unwrap().to_bytes_v1().is_err());
     }
 
     #[test]
@@ -466,6 +859,28 @@ mod tests {
         assert!(matches!(
             ModelBundle::new(s, vec![vec![0.0; 13], vec![0.0; 7]]),
             Err(ModelError::ShapeMismatch(_))
+        ));
+    }
+
+    #[test]
+    fn misaligned_section_offset_is_a_typed_error() {
+        let mut net = Network::from_spec(&spec(Method::Hashnet)).unwrap();
+        net.init(&mut Pcg32::new(2, 2));
+        let mut bytes = net.to_bundle(&spec(Method::Hashnet)).unwrap().to_bytes();
+        // the first section's offset field lives at
+        // 12 + spec_len + 4 (count) + 8 (codec, n_elems)
+        let spec_len =
+            u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        let off_field = 12 + spec_len + 4 + 8;
+        let old = u32::from_le_bytes(bytes[off_field..off_field + 4].try_into().unwrap());
+        bytes[off_field..off_field + 4].copy_from_slice(&(old + 1).to_le_bytes());
+        // refresh the checksum so the structural check is what trips
+        let body_end = bytes.len() - 4;
+        let sum = xxh32_bytes(&bytes[..body_end], CHECKSUM_SEED);
+        bytes[body_end..].copy_from_slice(&sum.to_le_bytes());
+        assert!(matches!(
+            ModelBundle::from_bytes(&bytes),
+            Err(ModelError::BadSection(_))
         ));
     }
 }

@@ -19,7 +19,12 @@
 //!   the spec as JSON, the parameter tensors, and a checksum. This is
 //!   what `train` saves, what `serve` loads (including hot-loading into
 //!   a running server via `{"cmd":"load"}`), and what `compress`
-//!   produces from a dense network.
+//!   produces from a dense network. Format v2 adds per-tensor
+//!   quantization ([`quant`]: int8, k-means codebook) and a 64-byte
+//!   aligned section table.
+//! * [`BundleMap`] — the zero-copy load path: an mmap'd, validated
+//!   bundle whose f32 tensors serve in place ([`ParamStore`] borrows
+//!   them without copying); quantized tensors dequantize on load.
 //! * [`ModelError`] — typed failures: unknown method, invalid spec,
 //!   truncation, checksum mismatch, future format version, parameter
 //!   shape mismatch.
@@ -31,9 +36,13 @@
 //! types (`ArtifactSpec::to_model_spec`, `ModelState::to_bundle`).
 
 pub mod bundle;
+pub mod map;
+pub mod quant;
 pub mod spec;
 
-pub use bundle::{ModelBundle, BUNDLE_VERSION};
+pub use bundle::{ModelBundle, BUNDLE_VERSION, SECTION_ALIGN};
+pub use map::{BundleMap, ParamStore};
+pub use quant::{Encoding, QuantSpec};
 pub use spec::{BagMode, Method, ModelSpec};
 
 use std::fmt;
@@ -57,6 +66,10 @@ pub enum ModelError {
     Truncated(&'static str),
     /// The stored checksum does not match the recomputed one.
     BadChecksum { stored: u32, computed: u32 },
+    /// A v2 section-table entry is structurally invalid: unknown codec
+    /// tag, non-canonical/misaligned offset, inconsistent encoded
+    /// length, or an out-of-range codebook index.
+    BadSection(String),
     /// Parameter tensors do not match the spec's layer layout.
     ShapeMismatch(String),
 }
@@ -80,6 +93,7 @@ impl fmt::Display for ModelError {
                 f,
                 "bundle checksum mismatch (stored {stored:#010x}, computed {computed:#010x}) — file corrupt"
             ),
+            ModelError::BadSection(why) => write!(f, "invalid bundle section: {why}"),
             ModelError::ShapeMismatch(why) => write!(f, "parameter shape mismatch: {why}"),
         }
     }

@@ -1,0 +1,386 @@
+//! Per-tensor quantization codecs for HNMB v2 bundles.
+//!
+//! The paper stops at f32 bucket values; Deep Compression (Han et al.,
+//! see PAPERS.md) shows that quantizing the *shared* weights stacks
+//! another 4–8× on top of hash compression. This module provides the
+//! three codecs a v2 bundle section can carry:
+//!
+//! * **f32** (tag 0) — passthrough, `n × f32 LE`. The only codec the
+//!   zero-copy serve path can borrow in place.
+//! * **int8** (tag 1) — affine per-tensor quantization: `min: f32`,
+//!   `scale: f32`, then `n × u8` codes. `v̂ = min + code · scale`,
+//!   `scale = (max − min)/255`, so the absolute round-trip error is
+//!   bounded by `scale/2`.
+//! * **codebook** (tag 2) — 1-D k-means shared-value table (≤ 256
+//!   entries, Deep Compression's weight-sharing stage): `table_len:
+//!   u32`, `table_len × f32`, then `n × u8` indices. Exact whenever the
+//!   tensor holds ≤ 256 distinct values — which a K-bucket HashedNet
+//!   layer often does after aggressive compression.
+//!
+//! An [`Encoding`] stores the codec *and* the encoded codes; the
+//! decoded values always live in `ModelBundle::params`. Keeping the
+//! codes (rather than re-encoding on save) is what makes
+//! `save → load → save` byte-exact for every codec: no float-rounding
+//! round trip can perturb the stored bytes.
+
+use super::ModelError;
+
+/// Section-table codec tags (the on-disk `codec` field of a v2 bundle).
+pub const CODEC_F32: u32 = 0;
+pub const CODEC_INT8: u32 = 1;
+pub const CODEC_CODEBOOK: u32 = 2;
+
+/// Hard cap on codebook entries: indices must fit one byte.
+pub const MAX_CODEBOOK: usize = 256;
+
+/// Lloyd iterations for the 1-D k-means fit. Deterministic (quantile
+/// init, no RNG), so the same tensor always yields the same table.
+const KMEANS_ITERS: usize = 25;
+
+/// How one tensor is stored on disk. The dequantized values live in
+/// `ModelBundle::params`; this carries the codec parameters and (for
+/// the lossy codecs) the authoritative encoded codes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Encoding {
+    /// Plain `f32` payload — serialized from the decoded params.
+    F32,
+    /// Affine int8: `v̂ = min + code · scale`.
+    Int8 { min: f32, scale: f32, codes: Vec<u8> },
+    /// Shared-value table (sorted, deduplicated) + one index per value.
+    Codebook { table: Vec<f32>, codes: Vec<u8> },
+}
+
+impl Encoding {
+    /// The on-disk codec tag.
+    pub fn codec_tag(&self) -> u32 {
+        match self {
+            Encoding::F32 => CODEC_F32,
+            Encoding::Int8 { .. } => CODEC_INT8,
+            Encoding::Codebook { .. } => CODEC_CODEBOOK,
+        }
+    }
+
+    /// Human-readable codec name (CLI tables, `list` output).
+    pub fn codec_name(&self) -> &'static str {
+        match self {
+            Encoding::F32 => "f32",
+            Encoding::Int8 { .. } => "int8",
+            Encoding::Codebook { .. } => "codebook",
+        }
+    }
+
+    /// Encoded payload length in bytes for a tensor of `n_elems`
+    /// logical f32 values.
+    pub fn encoded_len(&self, n_elems: usize) -> usize {
+        match self {
+            Encoding::F32 => 4 * n_elems,
+            Encoding::Int8 { .. } => 8 + n_elems,
+            Encoding::Codebook { table, .. } => 4 + 4 * table.len() + n_elems,
+        }
+    }
+
+    /// Number of logical elements the stored codes describe (== the
+    /// decoded tensor length; for `F32` the data lives in `params`, so
+    /// there is nothing to report here).
+    pub fn code_len(&self) -> Option<usize> {
+        match self {
+            Encoding::F32 => None,
+            Encoding::Int8 { codes, .. } | Encoding::Codebook { codes, .. } => Some(codes.len()),
+        }
+    }
+
+    /// Dequantize the stored codes. `None` for `F32` (decoded values
+    /// are the payload itself).
+    pub fn decode(&self) -> Option<Vec<f32>> {
+        match self {
+            Encoding::F32 => None,
+            Encoding::Int8 { min, scale, codes } => Some(decode_int8(*min, *scale, codes)),
+            Encoding::Codebook { table, codes } => Some(decode_codebook(table, codes)),
+        }
+    }
+}
+
+/// The user-facing quantization request (`--quantize int8|codebook{K}`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantSpec {
+    F32,
+    Int8,
+    /// k-means with at most `K` table entries (1..=256).
+    Codebook(usize),
+}
+
+impl QuantSpec {
+    /// Parse a CLI codec string: `f32`, `int8`, `codebook` (= 256
+    /// entries) or `codebook{K}` e.g. `codebook64`.
+    pub fn parse(s: &str) -> Result<QuantSpec, ModelError> {
+        match s {
+            "f32" => return Ok(QuantSpec::F32),
+            "int8" => return Ok(QuantSpec::Int8),
+            "codebook" => return Ok(QuantSpec::Codebook(MAX_CODEBOOK)),
+            _ => {}
+        }
+        if let Some(k) = s.strip_prefix("codebook") {
+            let k: usize = k.parse().map_err(|_| {
+                ModelError::InvalidSpec(format!("bad codebook size in --quantize {s}"))
+            })?;
+            if k == 0 || k > MAX_CODEBOOK {
+                return Err(ModelError::InvalidSpec(format!(
+                    "codebook size must be 1..={MAX_CODEBOOK}, got {k}"
+                )));
+            }
+            return Ok(QuantSpec::Codebook(k));
+        }
+        Err(ModelError::InvalidSpec(format!(
+            "unknown codec '{s}' (expected f32, int8 or codebook{{K}})"
+        )))
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            QuantSpec::F32 => "f32".into(),
+            QuantSpec::Int8 => "int8".into(),
+            QuantSpec::Codebook(k) => format!("codebook{k}"),
+        }
+    }
+}
+
+/// Quantize one tensor: returns the encoding and the dequantized
+/// values (what predictions will actually use — "quantization-aware"
+/// by construction).
+pub fn quantize_tensor(v: &[f32], spec: QuantSpec) -> (Encoding, Vec<f32>) {
+    match spec {
+        QuantSpec::F32 => (Encoding::F32, v.to_vec()),
+        QuantSpec::Int8 => {
+            let (min, scale, codes) = encode_int8(v);
+            let decoded = decode_int8(min, scale, &codes);
+            (Encoding::Int8 { min, scale, codes }, decoded)
+        }
+        QuantSpec::Codebook(k) => {
+            let table = fit_codebook(v, k);
+            let codes = encode_codebook(&table, v);
+            let decoded = decode_codebook(&table, &codes);
+            (Encoding::Codebook { table, codes }, decoded)
+        }
+    }
+}
+
+/// Affine int8 encode: `scale = (max − min)/255`, codes round to the
+/// nearest step. Degenerate tensors (constant, empty, or no finite
+/// values) get `scale = 0` and all-zero codes, which decode back to
+/// `min` exactly.
+pub fn encode_int8(v: &[f32]) -> (f32, f32, Vec<u8>) {
+    let mut min = f32::INFINITY;
+    let mut max = f32::NEG_INFINITY;
+    for &x in v {
+        if x.is_finite() {
+            min = min.min(x);
+            max = max.max(x);
+        }
+    }
+    if !min.is_finite() || !max.is_finite() {
+        return (0.0, 0.0, vec![0; v.len()]);
+    }
+    let scale = (max - min) / 255.0;
+    let codes = if scale > 0.0 {
+        // NaN/inf inputs fall out as saturating casts (0 or 255), never
+        // a panic
+        v.iter().map(|&x| (((x - min) / scale).round()).clamp(0.0, 255.0) as u8).collect()
+    } else {
+        vec![0; v.len()]
+    };
+    (min, scale, codes)
+}
+
+pub fn decode_int8(min: f32, scale: f32, codes: &[u8]) -> Vec<f32> {
+    codes.iter().map(|&q| min + q as f32 * scale).collect()
+}
+
+/// Deterministic 1-D k-means: quantile init over the sorted values,
+/// fixed Lloyd iterations, then sort + exact-dedup. When the tensor has
+/// ≤ `k` distinct values the table is exactly those values, so the
+/// codec is lossless in that regime.
+pub fn fit_codebook(v: &[f32], k: usize) -> Vec<f32> {
+    let k = k.clamp(1, MAX_CODEBOOK);
+    let mut sorted: Vec<f32> = v.iter().copied().filter(|x| x.is_finite()).collect();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    sorted.dedup();
+    if sorted.is_empty() {
+        return vec![0.0];
+    }
+    if sorted.len() <= k {
+        return sorted;
+    }
+    // quantile init: spread the k centroids over the value range
+    let mut centroids: Vec<f32> =
+        (0..k).map(|i| sorted[i * (sorted.len() - 1) / (k - 1).max(1)]).collect();
+    centroids.dedup();
+    // weights: Lloyd's must see duplicates, so run over the raw finite
+    // values, not the deduped support
+    let mut values: Vec<f32> = v.iter().copied().filter(|x| x.is_finite()).collect();
+    values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    for _ in 0..KMEANS_ITERS {
+        // assignment boundaries are the midpoints between consecutive
+        // centroids (centroids stay sorted through the iteration)
+        let mut sums = vec![0.0f64; centroids.len()];
+        let mut counts = vec![0usize; centroids.len()];
+        let mut c = 0;
+        for &x in &values {
+            while c + 1 < centroids.len() && (centroids[c] + centroids[c + 1]) / 2.0 < x {
+                c += 1;
+            }
+            sums[c] += x as f64;
+            counts[c] += 1;
+        }
+        let mut moved = false;
+        for i in 0..centroids.len() {
+            if counts[i] > 0 {
+                let m = (sums[i] / counts[i] as f64) as f32;
+                if m != centroids[i] {
+                    centroids[i] = m;
+                    moved = true;
+                }
+            }
+        }
+        centroids.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if !moved {
+            break;
+        }
+    }
+    centroids.dedup();
+    centroids
+}
+
+/// Index of the nearest table entry (table sorted ascending, deduped).
+/// Ties break toward the lower entry; non-finite values map to entry 0.
+/// Exact table entries always map to themselves, which is what makes
+/// `encode(decode(codes)) == codes`.
+fn nearest(table: &[f32], v: f32) -> u8 {
+    let i = table.partition_point(|&t| t < v);
+    if i == 0 {
+        return 0;
+    }
+    if i >= table.len() {
+        return (table.len() - 1) as u8;
+    }
+    if v - table[i - 1] <= table[i] - v {
+        (i - 1) as u8
+    } else {
+        i as u8
+    }
+}
+
+pub fn encode_codebook(table: &[f32], v: &[f32]) -> Vec<u8> {
+    v.iter().map(|&x| nearest(table, x)).collect()
+}
+
+pub fn decode_codebook(table: &[f32], codes: &[u8]) -> Vec<f32> {
+    // table never empty (fit_codebook returns ≥1 entry; the bundle
+    // parser rejects table_len == 0), and the parser/encoder bound
+    // every code < table_len ≤ 256 — but index defensively anyway
+    codes.iter().map(|&c| table.get(c as usize).copied().unwrap_or(0.0)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn random_values(n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Pcg32::new(seed, 0x9A17);
+        let mut v = vec![0.0f32; n];
+        rng.fill_normal(&mut v, 0.5);
+        v
+    }
+
+    #[test]
+    fn int8_roundtrip_error_bounded_by_half_step() {
+        let v = random_values(4096, 11);
+        let (min, scale, codes) = encode_int8(&v);
+        let back = decode_int8(min, scale, &codes);
+        assert!(scale > 0.0);
+        for (a, b) in v.iter().zip(&back) {
+            // the satellite bound: max abs error ≤ scale/2 (tiny fp
+            // slack for the decode arithmetic itself)
+            assert!(
+                (a - b).abs() as f64 <= scale as f64 * 0.5 * (1.0 + 1e-5) + 1e-12,
+                "|{a} - {b}| > scale/2 = {}",
+                scale / 2.0
+            );
+        }
+    }
+
+    #[test]
+    fn int8_degenerate_constant_tensor_is_exact() {
+        let v = vec![0.25f32; 17];
+        let (min, scale, codes) = encode_int8(&v);
+        assert_eq!((min, scale), (0.25, 0.0));
+        assert!(codes.iter().all(|&c| c == 0));
+        assert_eq!(decode_int8(min, scale, &codes), v);
+    }
+
+    #[test]
+    fn codebook_exact_when_distinct_fits() {
+        // 200 distinct values, each repeated — fits a 256-entry table
+        let mut v = Vec::new();
+        for i in 0..200 {
+            let x = (i as f32) * 0.125 - 12.5;
+            v.extend_from_slice(&[x, x, x]);
+        }
+        let table = fit_codebook(&v, 256);
+        assert_eq!(table.len(), 200);
+        let codes = encode_codebook(&table, &v);
+        assert_eq!(decode_codebook(&table, &codes), v, "≤256 distinct values must be lossless");
+    }
+
+    #[test]
+    fn codebook_reencode_is_idempotent() {
+        let v = random_values(2048, 23);
+        let table = fit_codebook(&v, 64);
+        assert!(table.len() <= 64 && !table.is_empty());
+        assert!(table.windows(2).all(|w| w[0] < w[1]), "table sorted + deduped");
+        let codes = encode_codebook(&table, &v);
+        let decoded = decode_codebook(&table, &codes);
+        // decoded values are exact table entries: re-encoding them
+        // reproduces the codes bit-for-bit (the save→load→save anchor)
+        assert_eq!(encode_codebook(&table, &decoded), codes);
+    }
+
+    #[test]
+    fn quantize_tensor_decoded_matches_encoding() {
+        let v = random_values(512, 31);
+        for spec in [QuantSpec::F32, QuantSpec::Int8, QuantSpec::Codebook(32)] {
+            let (enc, decoded) = quantize_tensor(&v, spec);
+            assert_eq!(decoded.len(), v.len());
+            match enc.decode() {
+                None => assert_eq!(decoded, v),
+                Some(d) => assert_eq!(d, decoded),
+            }
+        }
+    }
+
+    #[test]
+    fn quant_spec_parses_cli_forms() {
+        assert_eq!(QuantSpec::parse("int8").unwrap(), QuantSpec::Int8);
+        assert_eq!(QuantSpec::parse("codebook").unwrap(), QuantSpec::Codebook(256));
+        assert_eq!(QuantSpec::parse("codebook16").unwrap(), QuantSpec::Codebook(16));
+        assert!(QuantSpec::parse("codebook0").is_err());
+        assert!(QuantSpec::parse("codebook999").is_err());
+        assert!(QuantSpec::parse("int4").is_err());
+    }
+
+    #[test]
+    fn hostile_inputs_never_panic() {
+        let weird = vec![f32::NAN, f32::INFINITY, f32::NEG_INFINITY, 1.0, -1.0];
+        let (min, scale, codes) = encode_int8(&weird);
+        assert_eq!(codes.len(), weird.len());
+        let _ = decode_int8(min, scale, &codes);
+        let table = fit_codebook(&weird, 8);
+        let codes = encode_codebook(&table, &weird);
+        let _ = decode_codebook(&table, &codes);
+        let all_nan = vec![f32::NAN; 4];
+        let (_, s, c) = encode_int8(&all_nan);
+        assert_eq!((s, c.len()), (0.0, 4));
+        assert_eq!(fit_codebook(&all_nan, 4), vec![0.0]);
+        assert_eq!(fit_codebook(&[], 4), vec![0.0]);
+    }
+}

@@ -47,7 +47,7 @@
 //! the same contract as `nn::layers::inverse_weight_grad`.
 
 use crate::hash::{bucket_sign, layer_seeds};
-use crate::model::{BagMode, ModelError, ModelSpec};
+use crate::model::{BagMode, ModelError, ModelSpec, ParamStore};
 use crate::tensor::Matrix;
 
 use super::TrainOptions;
@@ -68,20 +68,34 @@ pub struct EmbedBag {
     seed_h: u32,
     /// Sign hash seed (`ξ` of §4.2).
     seed_xi: u32,
-    /// The stored bucket array — the entire model (`len == k`).
-    pub w: Vec<f32>,
+    /// The stored bucket array — the entire model (`len == k`). A
+    /// [`ParamStore`] so a served bag can borrow the buckets straight
+    /// out of an mmap'd bundle; training writes copy-on-write.
+    pub w: ParamStore,
 }
 
 impl EmbedBag {
     /// Build with zeroed weights.
     pub fn new(num_categories: usize, dim: usize, k: usize, mode: BagMode, seed_base: u32) -> EmbedBag {
-        assert!(num_categories > 0 && dim > 0 && k > 0, "zero embedding shape");
+        Self::build(num_categories, dim, mode, seed_base, vec![0.0; k].into())
+    }
+
+    /// The one real constructor: every path (zeroed, owned tensor,
+    /// mapped tensor) funnels through the same shape assertions.
+    fn build(
+        num_categories: usize,
+        dim: usize,
+        mode: BagMode,
+        seed_base: u32,
+        w: ParamStore,
+    ) -> EmbedBag {
+        assert!(num_categories > 0 && dim > 0 && !w.is_empty(), "zero embedding shape");
         assert!(
             num_categories.checked_mul(dim).is_some_and(|c| c <= u32::MAX as usize),
             "virtual table exceeds the u32 cell-key space"
         );
         let (seed_h, seed_xi) = layer_seeds(0, seed_base);
-        EmbedBag { num_categories, dim, mode, seed_base, seed_h, seed_xi, w: vec![0.0; k] }
+        EmbedBag { num_categories, dim, mode, seed_base, seed_h, seed_xi, w }
     }
 
     /// He-style init matching `Layer::init`'s hashed arm (fan-in = dim).
@@ -92,6 +106,13 @@ impl EmbedBag {
 
     /// Build from a spec + its single parameter tensor (bundle load).
     pub fn from_spec(spec: &ModelSpec, w: Vec<f32>) -> Result<EmbedBag, ModelError> {
+        Self::from_store(spec, w.into())
+    }
+
+    /// [`EmbedBag::from_spec`] generalized over the buffer's home:
+    /// accepts a mapped store, so the zero-copy load path
+    /// (`EmbedBag::from_bundle_map`) never materializes the buckets.
+    pub fn from_store(spec: &ModelSpec, w: ParamStore) -> Result<EmbedBag, ModelError> {
         let Some((nc, dim, k, mode)) = spec.embedding_shape() else {
             return Err(ModelError::InvalidSpec(format!(
                 "method '{}' is not an embedding spec",
@@ -104,9 +125,7 @@ impl EmbedBag {
                 w.len()
             )));
         }
-        let mut e = EmbedBag::new(nc, dim, k, mode, spec.seed_base);
-        e.w = w;
-        Ok(e)
+        Ok(EmbedBag::build(nc, dim, mode, spec.seed_base, w))
     }
 
     pub fn k(&self) -> usize {

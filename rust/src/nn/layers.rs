@@ -13,8 +13,9 @@
 //! | `LayerKind::Hashed { k }`           | the per-layer real-weight budget `K^ℓ` (§4.1) |
 //! | the ξ sign bit                      | §4.2's sign factor, packed into bit 31 of each [`HashPlan`] entry |
 //!
-//! Each layer owns its stored parameters as a flat `Vec<f32>` whose
-//! layout matches the corresponding artifact parameter in
+//! Each layer owns its stored parameters as a flat
+//! [`ParamStore`] (owned floats, or a zero-copy borrow of an mmap'd
+//! bundle) whose layout matches the corresponding artifact parameter in
 //! `artifacts/manifest.json`, so parameters can be moved between the
 //! native engine and the PJRT runtime freely.
 //!
@@ -52,6 +53,7 @@
 //! [`TrainOptions`] for the exact contract.
 
 use crate::hash::{hash_gaussian, hash_uniform, layer_seeds, plan::InversePlan, HashPlan};
+use crate::model::ParamStore;
 use crate::tensor::{dot_unrolled, Matrix};
 use crate::util::rng::Pcg32;
 use std::sync::Arc;
@@ -206,7 +208,9 @@ pub struct Layer {
     /// Stored parameters, artifact layout:
     /// Dense: `[W (n*m), b (n)]`; Hashed: `[w (k)]`;
     /// Masked: `[Wm (n*(m+1))]`; LowRank: `[Wl (n*r)]`.
-    pub params: Vec<f32>,
+    /// A [`ParamStore`] so a served model can borrow these straight out
+    /// of an mmap'd bundle; training writes copy-on-write.
+    pub params: ParamStore,
     /// Sign-packed decompression plan (hashed layers only), built
     /// eagerly and shared immutably across threads/clones.
     plan: Option<Arc<HashPlan>>,
@@ -226,7 +230,7 @@ impl Layer {
             }
             _ => None,
         };
-        Layer { m, n, kind, index, seed_base, params: vec![0.0; n_params], plan }
+        Layer { m, n, kind, index, seed_base, params: vec![0.0; n_params].into(), plan }
     }
 
     /// He-style init matching `model.py`'s `ParamSpec.init_std`.
@@ -316,7 +320,7 @@ impl Layer {
             LayerKind::LowRank { r } => {
                 // V (n×(m+1)) = W (n×r) · U (r×(m+1)), U fixed
                 let u = self.lrd_fixed_u(r);
-                let w = Matrix::from_vec(n, r, self.params.clone());
+                let w = Matrix::from_vec(n, r, self.params.to_vec());
                 w.matmul(&u)
             }
         }

@@ -21,7 +21,7 @@
 //! runtime, fall back to native when artifact loading fails — e.g. the
 //! offline `xla` stub is linked or the HLO files are absent).
 
-use crate::model::ModelBundle;
+use crate::model::{BundleMap, ModelBundle};
 use crate::nn::{EmbedBag, Network};
 use crate::runtime::{Graph, ModelState, Runtime};
 use crate::tensor::Matrix;
@@ -144,6 +144,28 @@ impl NativeEngine {
             n_in: net.n_in(),
             n_out: net.n_out(),
             max_batch: bundle.spec.batch.max(1),
+            model: NativeModel::Net(Arc::new(net)),
+        })
+    }
+
+    /// [`NativeEngine::from_bundle`] over an mmap'd bundle: f32 tensors
+    /// are served straight out of the page cache (no heap copy),
+    /// quantized tensors dequantize once at load. This is the
+    /// `{"cmd":"load"}` hot-swap path.
+    pub fn from_bundle_map(map: &Arc<BundleMap>) -> Result<NativeEngine> {
+        let (name, batch) = (map.spec().name.clone(), map.spec().batch.max(1));
+        if map.spec().embedding_shape().is_some() {
+            let bag = EmbedBag::from_bundle_map(map)
+                .with_context(|| format!("building embedding engine for '{name}'"))?;
+            return Ok(NativeEngine::from_embed_bag(bag, batch));
+        }
+        let net = Network::from_bundle_map(map)
+            .with_context(|| format!("building native engine for '{name}'"))?;
+        net.warm(); // see from_bundle
+        Ok(NativeEngine {
+            n_in: net.n_in(),
+            n_out: net.n_out(),
+            max_batch: batch,
             model: NativeModel::Net(Arc::new(net)),
         })
     }

@@ -58,7 +58,7 @@ use super::engine::{
     error_loop, worker_loop, Backend, InferenceEngine, ModelConfig, NativeEngine, RuntimeEngine,
 };
 use super::poll::PollerKind;
-use crate::model::{ModelBundle, ModelSpec};
+use crate::model::{BundleMap, ModelSpec};
 use crate::runtime::{ArtifactSpec, Manifest, Runtime};
 use crate::util::json::{num, obj, Json};
 use crate::util::rng::Pcg32;
@@ -276,20 +276,25 @@ impl ServeCtx {
         }
     }
 
-    /// Native engine from a bundle file.
+    /// Native engine from a bundle file, loaded mmap+checksum instead
+    /// of read-parse-copy: [`BundleMap::open`] runs the same validation
+    /// as `ModelBundle::load`, then f32 tensors serve in place from the
+    /// mapping (quantized tensors dequantize once here).
     fn open_bundle(
         &self,
         path: &Path,
         name_override: Option<&str>,
         workers: usize,
     ) -> Result<Arc<ModelHandle>> {
-        let bundle = ModelBundle::load(path)
-            .map_err(|e| anyhow!("loading bundle {}: {e}", path.display()))?;
-        let name = name_override.unwrap_or(&bundle.spec.name).to_string();
-        let spec = bundle.spec.clone();
-        let version = bundle.version;
+        let map = Arc::new(
+            BundleMap::open(path)
+                .map_err(|e| anyhow!("loading bundle {}: {e}", path.display()))?,
+        );
+        let name = name_override.unwrap_or(&map.spec().name).to_string();
+        let spec = map.spec().clone();
+        let version = map.version();
         let eng: Arc<dyn InferenceEngine + Send + Sync> =
-            Arc::new(NativeEngine::from_bundle(&bundle)?);
+            Arc::new(NativeEngine::from_bundle_map(&map)?);
         Ok(spawn_engine_workers(
             name,
             eng,

@@ -183,6 +183,36 @@ fn atomic_save_replaces_in_place_and_leaves_no_temp_files() {
 }
 
 #[test]
+fn save_syncs_the_parent_directory_for_nested_and_relative_targets() {
+    // The crash-durability contract: after `save` returns, both the
+    // file *and its directory entry* are fsynced — a power cut right
+    // after the call must not resurrect the old file or lose the new
+    // one. The syscall sequence can't be observed portably from a unit
+    // test, so this pins the two path shapes the directory-fsync code
+    // must handle: a nested directory (Some(parent)) and a bare
+    // filename whose parent() is the empty string (the "." fallback).
+    let spec = spec_for(Method::Hashnet);
+    let bundle = trained_net(&spec, 11).to_bundle(&spec).unwrap();
+
+    // nested directory, created fresh so the new entry is unsynced
+    let dir = std::env::temp_dir()
+        .join(format!("hn_bundle_fsync_{}", std::process::id()))
+        .join("deeper");
+    std::fs::create_dir_all(&dir).unwrap();
+    let nested = dir.join("model.hnb");
+    bundle.save(&nested).expect("save into nested dir");
+    assert_eq!(ModelBundle::load(&nested).expect("load back").params, bundle.params);
+    std::fs::remove_dir_all(dir.parent().unwrap()).ok();
+
+    // bare relative filename: parent() is Some("") — save must fsync
+    // the cwd, not error trying to open an empty path
+    let rel = std::path::Path::new("hn_bundle_relative_fsync.hnb");
+    bundle.save(rel).expect("save to bare relative path");
+    assert_eq!(ModelBundle::load(rel).expect("load back").params, bundle.params);
+    std::fs::remove_file(rel).ok();
+}
+
+#[test]
 fn garbage_magic_is_not_a_bundle() {
     let err = ModelBundle::from_bytes(b"HNCKxxxxxxxxxxxxxxxx").expect_err("wrong magic");
     assert!(matches!(err, ModelError::BadMagic), "{err:?}");

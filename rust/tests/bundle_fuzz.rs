@@ -1,0 +1,338 @@
+//! Bundle-format torture tests: a seeded mutation corpus over valid v1
+//! and v2 bundles for every [`Method`] × codec.
+//!
+//! The properties, per ISSUE acceptance:
+//!
+//! * `ModelBundle::from_bytes` / `::load` / `BundleMap::open` return a
+//!   typed [`ModelError`] on every corrupted mutant — they never panic
+//!   and never allocate beyond the actual file size (every length field
+//!   is bounds-checked against the buffer before any allocation, so an
+//!   oversize header errors instead of OOMing).
+//! * `save → load → save` is **byte-exact** for every method × codec:
+//!   v2 enforces canonical packing (exactly one valid serialization per
+//!   bundle), and lossy codecs persist their authoritative codes rather
+//!   than re-encoding floats.
+//! * the v2 int8 bundle is ≥3.5× smaller than its v1 f32 equivalent at
+//!   the paper's MNIST 1/8 shape, with argmax (indeed bit-equal)
+//!   predictions on an eval grid.
+
+use hashednets::hash::xxh32_bytes;
+use hashednets::model::{
+    BagMode, BundleMap, Method, ModelBundle, ModelError, ModelSpec, QuantSpec,
+};
+use hashednets::nn::{EmbedBag, Network};
+use hashednets::tensor::Matrix;
+use hashednets::util::rng::Pcg32;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+
+/// The trailing-word checksum seed — a pinned format constant ("MB"),
+/// duplicated here on purpose so a silent change in the writer shows up
+/// as a golden-format break, not a self-consistent refactor.
+const CHECKSUM_SEED: u32 = 0x4D42;
+
+const CODECS: [QuantSpec; 3] = [QuantSpec::F32, QuantSpec::Int8, QuantSpec::Codebook(16)];
+
+fn spec_for(method: Method) -> ModelSpec {
+    ModelSpec::new(
+        format!("fz_{method}"),
+        method,
+        vec![9, 7, 4],
+        vec![21, 14],
+        hashednets::hash::DEFAULT_SEED_BASE,
+        5,
+    )
+    .expect("valid spec")
+}
+
+/// Every valid serialized bundle the mutators chew on: all six methods
+/// × three codecs as v2, the f32 ones as v1 too, plus one quantized
+/// embedding-bag bundle.
+fn corpus() -> Vec<(String, Vec<u8>)> {
+    let mut out = Vec::new();
+    for method in Method::ALL {
+        let spec = spec_for(method);
+        let mut net = Network::from_spec(&spec).expect("from_spec");
+        net.init(&mut Pcg32::new(0xF1_22, 7));
+        let bundle = net.to_bundle(&spec).expect("to_bundle");
+        out.push((format!("{method}/v1"), bundle.to_bytes_v1().expect("v1 writer")));
+        for codec in CODECS {
+            let q = bundle.quantize(codec).expect("quantize");
+            out.push((format!("{method}/v2/{}", codec.name()), q.to_bytes()));
+        }
+    }
+    let espec = ModelSpec::embedding("fz_embed", 50, 8, 32, BagMode::Sum, 0x9E37_79B9, 4)
+        .expect("embedding spec");
+    let mut bag = EmbedBag::new(50, 8, 32, BagMode::Sum, 0x9E37_79B9);
+    bag.init(&mut Pcg32::new(3, 9));
+    let ebundle = bag.to_bundle(&espec).expect("embed to_bundle");
+    out.push(("embed/v2/int8".into(), ebundle.quantize(QuantSpec::Int8).unwrap().to_bytes()));
+    out
+}
+
+fn fix_checksum(bytes: &mut [u8]) {
+    let n = bytes.len();
+    let sum = xxh32_bytes(&bytes[..n - 4], CHECKSUM_SEED);
+    bytes[n - 4..].copy_from_slice(&sum.to_le_bytes());
+}
+
+fn spec_len(bytes: &[u8]) -> usize {
+    u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize
+}
+
+fn is_v2(bytes: &[u8]) -> bool {
+    u32::from_le_bytes(bytes[4..8].try_into().unwrap()) == 2
+}
+
+/// Parse a mutant, asserting it cannot panic. Returns the typed result.
+fn parse_mutant(tag: &str, mutant: &[u8]) -> Result<ModelBundle, ModelError> {
+    catch_unwind(AssertUnwindSafe(|| ModelBundle::from_bytes(mutant)))
+        .unwrap_or_else(|_| panic!("{tag}: ModelBundle::from_bytes PANICKED on corrupt input"))
+}
+
+#[test]
+fn truncations_at_every_depth_are_typed_errors() {
+    for (name, bytes) in corpus() {
+        let mut rng = Pcg32::new(0x7_2C, 1);
+        let mut cuts: Vec<usize> =
+            (0..12).map(|_| rng.next_u32() as usize % bytes.len()).collect();
+        // structured depths: mid-magic, mid-header, mid-spec, mid-table,
+        // last payload byte, missing checksum tail
+        cuts.extend([2, 6, 10, 14 + spec_len(&bytes) / 2, bytes.len() - 1, bytes.len() - 4]);
+        for cut in cuts {
+            let err = parse_mutant(&name, &bytes[..cut])
+                .expect_err("a strict prefix of a valid bundle must never load");
+            assert!(
+                matches!(
+                    err,
+                    ModelError::Truncated(_)
+                        | ModelError::BadChecksum { .. }
+                        | ModelError::BadMagic
+                        | ModelError::BadSection(_)
+                ),
+                "{name} cut at {cut}/{}: unexpected {err:?}",
+                bytes.len()
+            );
+        }
+    }
+}
+
+#[test]
+fn bit_flips_without_checksum_repair_never_load_and_never_panic() {
+    for (name, bytes) in corpus() {
+        let mut rng = Pcg32::new(0xF11_B, 2);
+        for _ in 0..40 {
+            let at = rng.next_u32() as usize % bytes.len();
+            let bit = rng.next_u32() % 8;
+            let mut mutant = bytes.clone();
+            mutant[at] ^= 1 << bit;
+            let err = parse_mutant(&name, &mutant).expect_err(
+                "any single flipped bit must fail magic, version, structure or checksum",
+            );
+            // every failure is a typed ModelError; which one depends on
+            // where the flip landed — Io is the only impossible variant
+            assert!(
+                !matches!(err, ModelError::Io(_)),
+                "{name} flip at {at}.{bit}: {err:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn bit_flips_with_repaired_checksum_never_panic() {
+    // With the checksum made consistent again, deeper validation layers
+    // (section table, codec tags, spec JSON, shape checks) take over.
+    // Some mutants legitimately load (e.g. a flipped payload bit is
+    // just different weights) — the property is typed-or-valid, not
+    // always-rejected.
+    for (name, bytes) in corpus() {
+        let mut rng = Pcg32::new(0x0DD_B175, 3);
+        for _ in 0..40 {
+            let at = rng.next_u32() as usize % (bytes.len() - 4);
+            let bit = rng.next_u32() % 8;
+            let mut mutant = bytes.clone();
+            mutant[at] ^= 1 << bit;
+            fix_checksum(&mut mutant);
+            if let Ok(b) = parse_mutant(&name, &mutant) {
+                // anything that loads must be internally consistent
+                b.check_shapes().expect("loaded mutants must pass shape checks");
+            }
+        }
+    }
+}
+
+#[test]
+fn oversize_length_fields_error_without_allocating() {
+    for (name, bytes) in corpus() {
+        // spec_len lies: u32::MAX, just past the file, exactly the file
+        for lie in [u32::MAX, bytes.len() as u32, bytes.len() as u32 + 1] {
+            let mut mutant = bytes.clone();
+            mutant[8..12].copy_from_slice(&lie.to_le_bytes());
+            fix_checksum(&mut mutant);
+            parse_mutant(&name, &mutant).expect_err("oversize spec_len must fail");
+        }
+        // tensor count lies — the classic OOM-allocation vector
+        let at = 12 + spec_len(&bytes);
+        for lie in [u32::MAX, 0x00FF_FFFF] {
+            let mut mutant = bytes.clone();
+            mutant[at..at + 4].copy_from_slice(&lie.to_le_bytes());
+            fix_checksum(&mut mutant);
+            parse_mutant(&name, &mutant)
+                .expect_err("a tensor count larger than the file could hold must fail");
+        }
+        // v2 only: per-section enc_len lies
+        if is_v2(&bytes) {
+            let entry = 16 + spec_len(&bytes); // first section entry
+            for (field, lie) in [(3usize, u32::MAX), (3, 0), (1, u32::MAX)] {
+                let at = entry + 4 * field;
+                let mut mutant = bytes.clone();
+                mutant[at..at + 4].copy_from_slice(&lie.to_le_bytes());
+                fix_checksum(&mut mutant);
+                parse_mutant(&name, &mutant)
+                    .expect_err("lying n_elems/enc_len section fields must fail");
+            }
+        }
+    }
+}
+
+#[test]
+fn misaligned_or_reordered_section_offsets_are_rejected() {
+    for (name, bytes) in corpus().into_iter().filter(|(_, b)| is_v2(b)) {
+        let entry = 16 + spec_len(&bytes);
+        let off_at = entry + 8; // offset field of section 0
+        let real = u32::from_le_bytes(bytes[off_at..off_at + 4].try_into().unwrap());
+        // +1 (misaligned), +64 (aligned but overlapping the next
+        // section's slot), -64 (aligned but inside the header)
+        for lie in [real + 1, real + 64, real.saturating_sub(64)] {
+            let mut mutant = bytes.clone();
+            mutant[off_at..off_at + 4].copy_from_slice(&lie.to_le_bytes());
+            fix_checksum(&mut mutant);
+            let err = parse_mutant(&name, &mutant)
+                .expect_err("non-canonical section offsets must fail");
+            assert!(
+                matches!(err, ModelError::BadSection(_) | ModelError::Truncated(_)),
+                "{name} offset {real}->{lie}: unexpected {err:?}"
+            );
+        }
+    }
+}
+
+#[test]
+fn file_loaders_reject_what_the_byte_parser_rejects() {
+    // ModelBundle::load and BundleMap::open share parse() with
+    // from_bytes — spot-check the file-shaped trust boundary agrees,
+    // including the mmap path.
+    let path: PathBuf =
+        std::env::temp_dir().join(format!("hn_fuzz_{}.hnb", std::process::id()));
+    let mutators: [fn(&[u8]) -> Vec<u8>; 3] = [
+        |b| b[..b.len() * 2 / 3].to_vec(), // truncated
+        |b| {
+            let mut m = b.to_vec();
+            m[b.len() / 2] ^= 0x40; // flipped bit, stale checksum
+            m
+        },
+        |b| {
+            let mut m = b.to_vec();
+            m[8..12].copy_from_slice(&u32::MAX.to_le_bytes()); // hostile spec_len
+            m
+        },
+    ];
+    for (name, bytes) in corpus() {
+        for mutate in mutators {
+            let mutant = mutate(&bytes);
+            std::fs::write(&path, &mutant).unwrap();
+            let parse_err = ModelBundle::from_bytes(&mutant).expect_err("mutant parses?");
+            let load_err = ModelBundle::load(&path).expect_err("load must agree with from_bytes");
+            assert_eq!(
+                std::mem::discriminant(&parse_err),
+                std::mem::discriminant(&load_err),
+                "{name}: load ({load_err:?}) and from_bytes ({parse_err:?}) disagree"
+            );
+            let map_err = catch_unwind(|| BundleMap::open(&path))
+                .unwrap_or_else(|_| panic!("{name}: BundleMap::open PANICKED"))
+                .expect_err("BundleMap::open must reject what from_bytes rejects");
+            assert_eq!(
+                std::mem::discriminant(&parse_err),
+                std::mem::discriminant(&map_err),
+                "{name}: BundleMap::open ({map_err:?}) and from_bytes ({parse_err:?}) disagree"
+            );
+        }
+    }
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn save_load_save_is_byte_exact_for_every_method_and_codec() {
+    for (name, bytes) in corpus() {
+        let loaded = ModelBundle::from_bytes(&bytes).expect("corpus entries are valid");
+        if loaded.version == 1 {
+            // v1 fixtures re-save through the legacy writer
+            assert_eq!(
+                loaded.to_bytes_v1().expect("f32 stays v1-expressible"),
+                bytes,
+                "{name}: v1 round trip must be byte-exact"
+            );
+        } else {
+            assert_eq!(loaded.to_bytes(), bytes, "{name}: v2 round trip must be byte-exact");
+        }
+        // and once more through the struct (save→load→save)
+        let again = ModelBundle::from_bytes(&loaded.to_bytes()).unwrap();
+        assert_eq!(again.to_bytes(), loaded.to_bytes(), "{name}: second trip drifted");
+    }
+}
+
+/// ISSUE acceptance: at the paper's MNIST 1/8 shape ([784,100,10],
+/// budgets [9812,126]) the int8 v2 bundle is ≥3.5× smaller than the v1
+/// f32 file, and predictions match f32 on an eval grid. The weights are
+/// placed on the int8 reconstruction grid (`k/128` for k in 0..=255,
+/// with 0 and 255 present in every tensor), making the dequantized
+/// values — and therefore every argmax — *bit*-equal, so the parity
+/// assertion is deterministic rather than margin-dependent.
+#[test]
+fn int8_bundle_meets_size_and_argmax_acceptance() {
+    let spec = ModelSpec::new(
+        "accept_1_8",
+        Method::Hashnet,
+        vec![784, 100, 10],
+        vec![9812, 126],
+        0x9E37_79B9,
+        16,
+    )
+    .unwrap();
+    let mut net = Network::from_spec(&spec).unwrap();
+    const STEP: f32 = 1.0 / 128.0; // max = 255/128; scale = max/255 = STEP exactly
+    for (l, layer) in net.layers.iter_mut().enumerate() {
+        for (i, w) in layer.params.iter_mut().enumerate() {
+            let code = match i {
+                0 => 0,
+                1 => 255,
+                _ => (i * 37 + l * 91) % 256,
+            };
+            *w = code as f32 * STEP;
+        }
+    }
+    let bundle = net.to_bundle(&spec).unwrap();
+    let v1 = bundle.to_bytes_v1().unwrap();
+    let int8 = bundle.quantize(QuantSpec::Int8).unwrap();
+    let v2 = int8.to_bytes();
+    let ratio = v1.len() as f64 / v2.len() as f64;
+    assert!(
+        ratio >= 3.5,
+        "int8 bundle must be ≥3.5x smaller than v1 f32: {} B vs {} B ({ratio:.2}x)",
+        v2.len(),
+        v1.len()
+    );
+
+    let x = Matrix::from_fn(64, 784, |i, j| ((i * 31 + j * 7) % 97) as f32 / 96.0);
+    let want = net.predict(&x);
+    let qnet = Network::from_bundle(&ModelBundle::from_bytes(&v2).unwrap()).unwrap();
+    let got = qnet.predict(&x);
+    assert_eq!(
+        got.argmax_rows(),
+        want.argmax_rows(),
+        "int8 argmax must match f32 on the eval grid"
+    );
+    // stronger: on the reconstruction grid the round trip is bit-exact
+    assert_eq!(got.data, want.data, "grid-valued weights must dequantize bit-exactly");
+}

@@ -1,0 +1,143 @@
+//! Golden-fixture compatibility: the committed HNMB **v1** bundle (and
+//! its legacy `HNCK` twin) under `tests/data/` were written by an
+//! independent Python byte-layout implementation
+//! (`python/tools/make_golden_bundle.py`), never by the Rust writer —
+//! so these tests pin the *format*, not the serializer. A v2-era
+//! reader must keep loading them bit-equal-predicting forever.
+//!
+//! Fixture model: hashnet dims [6,5,4], budgets [10,8], tensor `t`
+//! element `i` = `((t*31 + i*7) % 13) * 0.125 - 0.75` (eighths — exact
+//! in f32, so "bit-equal" is well-defined across platforms).
+
+use hashednets::model::{BundleMap, Method, ModelBundle, ModelSpec, BUNDLE_VERSION};
+use hashednets::nn::Network;
+use hashednets::runtime::{ArtifactSpec, ModelState, ParamInfo};
+use hashednets::tensor::Matrix;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+const GOLDEN_V1: &[u8] = include_bytes!("data/golden_v1.hnb");
+const GOLDEN_CKPT: &[u8] = include_bytes!("data/golden_v1.ckpt");
+
+fn golden_spec() -> ModelSpec {
+    ModelSpec::new("golden_v1", Method::Hashnet, vec![6, 5, 4], vec![10, 8], 0x9E37_79B9, 4)
+        .expect("golden spec")
+}
+
+/// The fixture's parameter formula, reproduced independently of any
+/// file parsing.
+fn golden_params() -> Vec<Vec<f32>> {
+    [10usize, 8]
+        .iter()
+        .enumerate()
+        .map(|(t, &n)| {
+            (0..n).map(|i| ((t * 31 + i * 7) % 13) as f32 * 0.125 - 0.75).collect()
+        })
+        .collect()
+}
+
+/// The hand-built reference network every load path must match.
+fn golden_net() -> Network {
+    let spec = golden_spec();
+    let mut net = Network::from_spec(&spec).expect("skeleton");
+    for (layer, p) in net.layers.iter_mut().zip(golden_params()) {
+        layer.params[..].copy_from_slice(&p);
+    }
+    net
+}
+
+fn eval_grid() -> Matrix {
+    Matrix::from_fn(7, 6, |i, j| ((i * 5 + j * 3) % 11) as f32 * 0.2 - 1.0)
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("hn_golden_{tag}_{}.bin", std::process::id()))
+}
+
+#[test]
+fn golden_v1_loads_and_predicts_bit_equal() {
+    let bundle = ModelBundle::from_bytes(GOLDEN_V1).expect("golden v1 must stay loadable");
+    assert_eq!(bundle.version, 1, "fixture is format v1");
+    assert_eq!(bundle.spec, golden_spec(), "spec JSON round-trip");
+    assert_eq!(bundle.params, golden_params(), "tensor values bit-exact");
+
+    let x = eval_grid();
+    let want = golden_net().predict(&x);
+    let got = Network::from_bundle(&bundle).expect("from_bundle").predict(&x);
+    assert_eq!(got.data, want.data, "v1 golden predictions must be bit-identical");
+}
+
+#[test]
+fn golden_v1_through_the_mmap_path_is_bit_equal_too() {
+    let path = tmp("map");
+    std::fs::write(&path, GOLDEN_V1).unwrap();
+    let map = Arc::new(BundleMap::open(&path).expect("BundleMap must accept v1"));
+    assert_eq!(map.version(), 1);
+    let net = Network::from_bundle_map(&map).expect("from_bundle_map");
+    let x = eval_grid();
+    assert_eq!(net.predict(&x).data, golden_net().predict(&x).data);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn golden_v1_resaves_as_v2_without_changing_the_model() {
+    // migration path: load the v1 fixture, save with the v2 writer,
+    // load again — same spec, same tensors, version bumped
+    let v1 = ModelBundle::from_bytes(GOLDEN_V1).unwrap();
+    let v2 = ModelBundle::from_bytes(&v1.to_bytes()).expect("re-read own v2 bytes");
+    assert_eq!(v2.version, BUNDLE_VERSION);
+    assert_eq!(v2.spec, v1.spec);
+    assert_eq!(v2.params, v1.params);
+    // and the legacy writer reproduces a v1-readable file with the
+    // same tensors (spec JSON may re-serialize, bytes need not match)
+    let v1_again = ModelBundle::from_bytes(&v1.to_bytes_v1().expect("v1 writer")).unwrap();
+    assert_eq!(v1_again.version, 1);
+    assert_eq!(v1_again.params, v1.params);
+}
+
+#[test]
+fn load_any_accepts_both_golden_formats() {
+    let hnb = tmp("any_hnb");
+    let ckpt = tmp("any_ckpt");
+    std::fs::write(&hnb, GOLDEN_V1).unwrap();
+    std::fs::write(&ckpt, GOLDEN_CKPT).unwrap();
+    let from_bundle = ModelState::load_any(&hnb).expect("load_any .hnb");
+    let from_ckpt = ModelState::load_any(&ckpt).expect("load_any HNCK");
+    assert_eq!(from_bundle.params, golden_params());
+    assert_eq!(from_ckpt.params, golden_params(), "legacy HNCK checkpoints must keep working");
+    std::fs::remove_file(&hnb).ok();
+    std::fs::remove_file(&ckpt).ok();
+}
+
+#[test]
+fn resolve_bundle_accepts_the_legacy_checkpoint() {
+    // the artifact path (serve --config + --checkpoint) resolves params
+    // through ArtifactSpec::resolve_bundle — HNCK must still flow
+    let art = ArtifactSpec {
+        name: "golden_v1".into(),
+        method: Method::Hashnet,
+        dims: vec![6, 5, 4],
+        budgets: vec![10, 8],
+        batch: 4,
+        seed_base: 0x9E37_79B9,
+        uses_soft_targets: false,
+        params: vec![
+            ParamInfo { name: "w0".into(), shape: vec![10], init_std: 0.5 },
+            ParamInfo { name: "w1".into(), shape: vec![8], init_std: 0.5 },
+        ],
+        stored_params: 18,
+        virtual_params: 59, // 5*(6+1) + 4*(5+1)
+        graphs: ("fwd".into(), "bwd".into()),
+        compression: 18.0 / 59.0,
+        expansion: None,
+        hidden_equivalent: None,
+    };
+    let ckpt = tmp("resolve");
+    std::fs::write(&ckpt, GOLDEN_CKPT).unwrap();
+    let bundle = art.resolve_bundle(Some(ckpt.as_path()), 0x5EED).expect("resolve_bundle");
+    assert_eq!(bundle.params, golden_params());
+    let x = eval_grid();
+    let got = Network::from_bundle(&bundle).unwrap().predict(&x);
+    assert_eq!(got.data, golden_net().predict(&x).data);
+    std::fs::remove_file(&ckpt).ok();
+}

@@ -5,7 +5,7 @@
 //! explicit JSON errors for bad input and failing executors.
 
 use hashednets::coordinator::native;
-use hashednets::model::{Method, ModelSpec, BUNDLE_VERSION};
+use hashednets::model::{Method, ModelSpec, QuantSpec, BUNDLE_VERSION};
 use hashednets::nn::Network;
 use hashednets::runtime::Manifest;
 use hashednets::serve::{
@@ -341,6 +341,130 @@ fn hot_load_serves_new_bundle_while_old_connections_continue() {
 
         admin.shutdown().expect("shutdown");
     }
+    server.join().unwrap().expect("server run");
+}
+
+/// Hot-**swap** with a *quantized* v2 bundle while traffic is in
+/// flight: `{"cmd":"load"}` replaces the serving `hash_a` with an int8
+/// bundle of the same name (mmap + checksum + dequantize-once on the
+/// server side). Every request issued across the swap must get exactly
+/// one explicit reply — a classification, or the typed `unloaded` drain
+/// error for requests already queued on the displaced handle — and
+/// post-swap replies must match the quantized network bit-for-bit at
+/// the softmax tolerance.
+#[test]
+fn hot_swap_to_quantized_bundle_drains_inflight_with_one_reply_each() {
+    let fx = Arc::new(Fixture::new("hotquant"));
+    let srv = Server::bind(fx.options(2)).expect("bind");
+    let addr = srv.local_addr().to_string();
+    let server = std::thread::spawn(move || srv.run());
+
+    // Same name, same shape, fresh weights — then int8-quantized. The
+    // reference network is built from the *quantized* bundle, so the
+    // expectation includes the dequantization error by construction.
+    let spec_q = ModelSpec::new(
+        "hash_a",
+        Method::Hashnet,
+        vec![N_IN, 8, N_OUT],
+        vec![40, 9],
+        hashednets::hash::DEFAULT_SEED_BASE,
+        4,
+    )
+    .expect("spec_q");
+    let mut qsrc = Network::from_spec(&spec_q).expect("net_q");
+    qsrc.init(&mut Pcg32::new(0xA11CE, 3));
+    let qbundle = qsrc
+        .to_bundle(&spec_q)
+        .expect("bundle_q")
+        .quantize(QuantSpec::Int8)
+        .expect("int8 quantize");
+    assert!(qbundle.is_quantized());
+    let qnet = Network::from_bundle(&qbundle).expect("dequantized reference");
+    let path_q = fx.dir.join("hash_a_int8.hnb");
+    qbundle.save(&path_q).expect("save quantized bundle");
+
+    // Checkers hammer hash_a straight through the swap. Mid-swap a
+    // reply may come from the old weights, the new weights, or be the
+    // typed drain error — but it must always be exactly ONE reply per
+    // request (classify_raw panics on transport error or timeout).
+    let stop = Arc::new(AtomicBool::new(false));
+    let checkers: Vec<std::thread::JoinHandle<(usize, usize)>> = (0..2)
+        .map(|c| {
+            let addr = addr.clone();
+            let stop = Arc::clone(&stop);
+            std::thread::spawn(move || {
+                let mut client = Client::connect(&addr).expect("connect");
+                client
+                    .set_read_timeout(Some(std::time::Duration::from_secs(15)))
+                    .expect("read timeout");
+                let (mut answered, mut drained) = (0usize, 0usize);
+                while !stop.load(Ordering::Relaxed) {
+                    let reply = client
+                        .classify_raw(Some("hash_a"), &input_row(c, answered + drained), Some(8_000))
+                        .expect("exactly one reply per request, never a hang");
+                    if reply.get("class").is_some() {
+                        answered += 1;
+                    } else {
+                        // only the documented drain error is acceptable
+                        let code =
+                            reply.get("code").and_then(|v| v.as_str()).unwrap_or("").to_string();
+                        assert_eq!(code, "unloaded", "unexpected reply {reply:?}");
+                        drained += 1;
+                    }
+                }
+                (answered, drained)
+            })
+        })
+        .collect();
+
+    let mut admin = Client::connect(&addr).expect("admin connect");
+    // let traffic build up, then swap under load
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    let reply = admin.load_model(path_q.to_str().unwrap()).expect("hot-swap load");
+    assert_eq!(reply.req_str("model").unwrap(), "hash_a");
+    assert_eq!(reply.get("swapped").and_then(|v| v.as_bool()), Some(true));
+
+    // post-swap: replies come from the quantized weights
+    for r in 0..5 {
+        let pixels = input_row(7, r);
+        let x = Matrix::from_vec(1, N_IN, pixels.clone());
+        let want = qnet.predict(&x).softmax_rows();
+        let (_cl, probs, _) = admin
+            .classify_model(Some("hash_a"), &pixels)
+            .expect("quantized model classify");
+        for (a, b) in probs.iter().zip(want.row(0)) {
+            assert!((a - b).abs() < 1e-3, "post-swap reply is not the quantized model");
+        }
+    }
+    // registry metadata reflects the v2 quantized bundle
+    let models = admin.models().expect("models cmd");
+    let mc = models.get("models").and_then(|m| m.get("hash_a")).expect("hash_a listed");
+    assert_eq!(mc.req_f64("bundle_version").unwrap() as u32, BUNDLE_VERSION);
+
+    // keep traffic flowing on the new engine a moment, then tally
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    stop.store(true, Ordering::Relaxed);
+    let (mut answered, mut drained) = (0usize, 0usize);
+    for handle in checkers {
+        let (a, d) = handle.join().expect("checker thread");
+        answered += a;
+        drained += d;
+    }
+    assert!(answered >= 10, "checkers only got {answered} classifications");
+    // drained may be 0 (fast swap) — but whatever was displaced must
+    // have been answered, which the per-request expect already proved
+    let _ = drained;
+
+    // the other model was untouched throughout
+    let pixels = input_row(5, 5);
+    let x = Matrix::from_vec(1, N_IN, pixels.clone());
+    let want = fx.net("dense_b").predict(&x).softmax_rows();
+    let (_cl, probs, _) = admin.classify_model(Some("dense_b"), &pixels).expect("dense_b");
+    for (a, b) in probs.iter().zip(want.row(0)) {
+        assert!((a - b).abs() < 1e-3, "dense_b drifted during the quantized swap");
+    }
+
+    admin.shutdown().expect("shutdown");
     server.join().unwrap().expect("server run");
 }
 

@@ -31,6 +31,12 @@
 #                   resident-bytes sweep at 1/10/50/200 resident models
 #                   (plus int8 dequantize-on-load) → BENCH_bundle_load.json.
 #                   HN_BUNDLE_BENCH_MODELS shrinks it for CI smoke.
+#   make kernel-bench  hashed forward-kernel grid (gather / scratch /
+#                   tiled TilePlan / bucket / inverse vs the dense
+#                   roofline, plus the dot8 SIMD-vs-scalar primitive)
+#                   at batch 1/50 → BENCH_kernel_forward.json.
+#                   HN_KERNEL_BENCH_DIMS / HN_KERNEL_BENCH_ITERS shrink
+#                   it for CI smoke.
 #   make bench-diff compare freshly produced BENCH_*.json against the
 #                   committed baselines in benches/baselines/ with
 #                   per-metric tolerance bands (see
@@ -52,7 +58,7 @@
 RUST_DIR := rust
 PY_DIR   := python
 
-.PHONY: check bench serve-bench train-bench pool-bench serve-scale-bench embed-bench bundle-bench bench-diff artifacts pytest smoke soak clean-bench
+.PHONY: check bench serve-bench train-bench pool-bench serve-scale-bench embed-bench bundle-bench kernel-bench bench-diff artifacts pytest smoke soak clean-bench
 
 # docs are load-bearing: rustdoc runs with -D warnings (broken intra-doc
 # links fail the build) and the doc-examples on ModelSpec / ModelBundle /
@@ -111,6 +117,11 @@ bundle-bench:
 	cd $(RUST_DIR) && cargo bench --bench bundle_load
 	@echo "== bundle load report =="
 	@ls -l BENCH_bundle_load.json 2>/dev/null || echo "no BENCH_bundle_load.json produced"
+
+kernel-bench:
+	cd $(RUST_DIR) && cargo bench --bench kernel_forward
+	@echo "== kernel forward report =="
+	@ls -l BENCH_kernel_forward.json 2>/dev/null || echo "no BENCH_kernel_forward.json produced"
 
 # compare fresh BENCH_*.json against benches/baselines/ — advisory by
 # default (machines differ); BENCH_DIFF_FLAGS="--strict" gates on it

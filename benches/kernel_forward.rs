@@ -3,17 +3,26 @@
 //!
 //!   * AOT artifact (Pallas decompress-on-the-fly matmul via PJRT)
 //!   * `gather`  — legacy per-row gather through the HashPlan
-//!   * `scratch` — decompress each virtual row once, dense dot across
-//!     the batch (the batch-amortized kernel, pool-parallel on big
-//!     layers); also measured `cold-spawn`, i.e. the same partition on
-//!     freshly spawned/joined OS threads, so the PoolExec win is
+//!   * `scratch` — decompress each virtual row once, SIMD dense dot
+//!     across the batch (the batch-amortized kernel, pool-parallel on
+//!     big layers); also measured `cold-spawn`, i.e. the same partition
+//!     on freshly spawned/joined OS threads, so the PoolExec win is
 //!     recorded rather than asserted
+//!   * `tiled`   — block-structured TilePlan kernel (`hashed_tile`):
+//!     tile runs decompress contiguously, padded-activation f32x8 dots
 //!   * `bucket`  — bucket-major accumulation (paper Eq. 10, B=1 small-K)
 //!   * `inverse` — the CSR-by-bucket inverse-plan kernel (streams `w`
 //!     in order; the B=1 serving default)
 //!   * `dense`   — matmul of the materialized V (the roofline reference)
+//!   * `dot8`    — the explicit-SIMD dot primitive, dispatched vs the
+//!     bit-identical scalar twin, at the layer's padded row width
 //!
-//! Results land in `BENCH_kernel_forward.json` at the repo root.
+//! Results land in `BENCH_kernel_forward.json` at the repo root as an
+//! object: `{"avx2": 0|1, "m": …, "n": …, "k": …, "cases": […]}` —
+//! forward cases carry a `gflops` field (2·B·n·(m+1) flops per call)
+//! so `tools/bench_diff.py` can gate on compute throughput, not just
+//! latency. `HN_KERNEL_BENCH_DIMS=MxN` (e.g. `96x64`) shrinks the
+//! layer for CI smoke runs; `HN_KERNEL_BENCH_ITERS` caps samples.
 //!
 //!     cargo bench --bench kernel_forward
 
@@ -21,12 +30,34 @@ use hashednets::data::{generate, Kind, Split};
 use hashednets::nn::{Layer, LayerKind, Network};
 use hashednets::rt::pool;
 use hashednets::runtime::{Graph, Runtime};
-use hashednets::tensor::{dot_unrolled, Matrix};
+use hashednets::tensor::{dot_unrolled, simd, Matrix};
 use hashednets::util::bench::Bench;
+use hashednets::util::json::{num, obj, Json};
 use hashednets::util::rng::Pcg32;
 use std::sync::Arc;
 
 const OUT: &str = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_kernel_forward.json");
+
+/// `MxN` layer shape override for smoke runs (`HN_KERNEL_BENCH_DIMS`).
+fn bench_dims() -> (usize, usize) {
+    match std::env::var("HN_KERNEL_BENCH_DIMS") {
+        Ok(v) => {
+            let parse = |s: &str| s.trim().parse::<usize>().ok().filter(|&d| d > 0);
+            match v.split_once('x').and_then(|(a, b)| parse(a).zip(parse(b))) {
+                Some(dims) => dims,
+                None => {
+                    eprintln!("ignoring malformed HN_KERNEL_BENCH_DIMS='{v}' (want MxN)");
+                    (784, 1000)
+                }
+            }
+        }
+        Err(_) => (784, 1000),
+    }
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
 
 /// The scratch-row kernel with the *old* execution strategy: identical
 /// row partition, but on freshly spawned OS threads per call (the cost
@@ -61,8 +92,12 @@ fn scratch_cold_spawn(layer: &Arc<Layer>, x: &Arc<Matrix>, threads: usize) -> Ve
 }
 
 fn main() {
-    println!("== kernel_forward: hashed kernel variants at batch 1 / 50 ==");
-    let mut b = Bench::new(2, 15);
+    let avx2 = simd::avx2();
+    println!(
+        "== kernel_forward: hashed kernel variants at batch 1 / 50 (avx2: {}) ==",
+        if avx2 { "yes" } else { "no (scalar dispatch)" }
+    );
+    let mut b = Bench::new(2, env_usize("HN_KERNEL_BENCH_ITERS", 15));
     let ds = generate(Kind::Basic, Split::Test, 50, 1);
     pool::run(pool::max_concurrency(), |_| {}); // warm: workers spawned + parked
 
@@ -91,30 +126,64 @@ fn main() {
     }
 
     // --- kernel grid at the paper width (K = virtual/8 ≈ 98k) ---------
-    let (m, n) = (784usize, 1000usize);
-    let k = (m + 1) * n / 8;
+    let (m, n) = bench_dims();
+    let shape = format!("{m}->{n}");
+    let k = ((m + 1) * n / 8).max(64);
+    let kk = format!("K={}k", (k as f64 / 1000.0).round() as usize);
     let mut rng = Pcg32::new(3, 3);
     let mut layer = Layer::new(m, n, LayerKind::Hashed { k }, 0, hashednets::hash::DEFAULT_SEED_BASE);
     layer.init(&mut rng);
     let v = layer.virtual_matrix();
     layer.forward_hashed_inverse(&Matrix::zeros(1, m)); // build + cache the inverse view
+    // same budget, block-structured: vector rows and square tiles
+    let tiled: Vec<(String, Layer)> = [(1usize, 8usize), (8, 8)]
+        .iter()
+        .map(|&tile| {
+            let mut l = Layer::new(
+                m,
+                n,
+                LayerKind::HashedTile { k, tile },
+                0,
+                hashednets::hash::DEFAULT_SEED_BASE,
+            );
+            l.init(&mut rng);
+            (format!("{}x{}", tile.0, tile.1), l)
+        })
+        .collect();
     for batch in [1usize, 50] {
         let x = Matrix::from_fn(batch, m, |_, _| rng.normal());
         b.items_per_iter = Some(batch as f64);
-        b.run(&format!("gather  b{batch} 784->1000 K=98k"), || {
+        b.run(&format!("gather  b{batch} {shape} {kk}"), || {
             std::hint::black_box(layer.forward_hashed_gather(&x));
         });
-        b.run(&format!("scratch b{batch} 784->1000 K=98k"), || {
+        b.run(&format!("scratch b{batch} {shape} {kk}"), || {
             std::hint::black_box(layer.forward_hashed_scratch(&x));
         });
-        b.run(&format!("dense   b{batch} 784->1000 (roofline)"), || {
+        for (tag, tl) in &tiled {
+            b.run(&format!("tiled{tag} b{batch} {shape} {kk}"), || {
+                std::hint::black_box(tl.forward_hashed_tiled(&x));
+            });
+        }
+        b.run(&format!("dense   b{batch} {shape} (roofline)"), || {
             std::hint::black_box(x.augment_ones().matmul_nt(&v));
         });
     }
     let x1_big = Matrix::from_fn(1, m, |_, _| rng.normal());
     b.items_per_iter = Some(1.0);
-    b.run("inverse b1 784->1000 K=98k", || {
+    b.run(&format!("inverse b1 {shape} {kk}"), || {
         std::hint::black_box(layer.forward_hashed_inverse(&x1_big));
+    });
+
+    // --- the SIMD primitive itself: dispatched vs scalar twin ---------
+    let row_w = m + 1;
+    let pa: Vec<f32> = (0..row_w).map(|_| rng.normal()).collect();
+    let pb: Vec<f32> = (0..row_w).map(|_| rng.normal()).collect();
+    b.items_per_iter = None;
+    b.run(&format!("dot8 dispatch m{row_w}"), || {
+        std::hint::black_box(simd::dot8(&pa, &pb));
+    });
+    b.run(&format!("dot8 scalar   m{row_w}"), || {
+        std::hint::black_box(simd::dot8_scalar(&pa, &pb));
     });
 
     // --- pool-warm vs cold-spawn: same partition, different substrate -
@@ -136,13 +205,13 @@ fn main() {
     let x1 = Matrix::from_fn(1, m, |_, _| rng.normal());
     small.forward_hashed_inverse(&x1); // build + cache
     b.items_per_iter = Some(1.0);
-    b.run("gather  b1 784->1000 K=785", || {
+    b.run(&format!("gather  b1 {shape} K={k_small}"), || {
         std::hint::black_box(small.forward_hashed_gather(&x1));
     });
-    b.run("bucket  b1 784->1000 K=785", || {
+    b.run(&format!("bucket  b1 {shape} K={k_small}"), || {
         std::hint::black_box(small.forward_hashed_bucket(&x1));
     });
-    b.run("inverse b1 784->1000 K=785", || {
+    b.run(&format!("inverse b1 {shape} K={k_small}"), || {
         std::hint::black_box(small.forward_hashed_inverse(&x1));
     });
 
@@ -153,19 +222,66 @@ fn main() {
             .find(|s| s.name.contains(needle))
             .map(|s| s.mean_ns)
     };
-    if let (Some(g), Some(s)) = (find("gather  b50"), find("scratch b50 784")) {
+    if let (Some(g), Some(s)) = (find("gather  b50"), find(&format!("scratch b50 {shape}"))) {
         println!("\nscratch-row speedup over legacy gather at batch 50: {:.2}x", g / s);
+    }
+    for batch in [1usize, 50] {
+        if let (Some(s), Some(t)) = (
+            find(&format!("scratch b{batch} {shape}")),
+            find(&format!("tiled1x8 b{batch}")),
+        ) {
+            println!("tiled1x8 speedup over per-cell scratch at batch {batch}: {:.2}x", s / t);
+        }
+    }
+    if let (Some(i), Some(t)) = (find("inverse b1"), find("tiled1x8 b1")) {
+        println!("tiled1x8 vs inverse-plan at batch 1: {:.2}x", i / t);
     }
     if let (Some(cold), Some(warm)) = (find("cold-spawn"), find("pool-warm")) {
         println!("pool-warm speedup over cold spawn/join at batch 50: {:.2}x", cold / warm);
     }
-    for ksz in ["K=98k", "K=785"] {
+    let ks_small = format!("K={k_small}");
+    for ksz in [kk.as_str(), ks_small.as_str()] {
         if let (Some(g), Some(i)) =
-            (find(&format!("gather  b1 784->1000 {ksz}")), find(&format!("inverse b1 784->1000 {ksz}")))
+            (find(&format!("gather  b1 {shape} {ksz}")), find(&format!("inverse b1 {shape} {ksz}")))
         {
             println!("inverse-plan speedup over gather at batch 1 ({ksz}): {:.2}x", g / i);
         }
     }
-    b.write_json(OUT).expect("write bench json");
+
+    // Object schema: top-level run metadata + per-case metrics. Forward
+    // cases get gflops (2·B·n·(m+1) flops per call) so throughput is
+    // comparable across machines that shift latency uniformly.
+    let cases = Json::Arr(
+        b.results()
+            .iter()
+            .map(|s| {
+                let mut fields = vec![
+                    ("name", Json::Str(s.name.clone())),
+                    ("iters", num(s.iters as f64)),
+                    ("mean_ns", num(s.mean_ns)),
+                    ("stddev_ns", num(s.stddev_ns)),
+                    ("p50_ns", num(s.p50_ns)),
+                    ("p95_ns", num(s.p95_ns)),
+                    ("throughput", s.throughput.map(num).unwrap_or(Json::Null)),
+                ];
+                // only the single-layer kernel-grid rows, where the
+                // dense-equivalent flop count is well defined
+                if let Some(tp) = s.throughput.filter(|_| s.name.contains(&shape)) {
+                    let items = tp * (s.mean_ns / 1e9);
+                    let flops = items * 2.0 * (n as f64) * ((m + 1) as f64);
+                    fields.push(("gflops", num(flops / s.mean_ns)));
+                }
+                obj(fields)
+            })
+            .collect(),
+    );
+    let doc = obj(vec![
+        ("avx2", num(if avx2 { 1.0 } else { 0.0 })),
+        ("m", num(m as f64)),
+        ("n", num(n as f64)),
+        ("k", num(k as f64)),
+        ("cases", cases),
+    ]);
+    std::fs::write(OUT, doc.to_string()).expect("write bench json");
     println!("wrote {OUT}");
 }

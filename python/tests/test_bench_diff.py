@@ -102,13 +102,47 @@ def embed_report(mean_ns, throughput):
     ]
 
 
+def kernel_report(mean_ns, gflops, *, avx2=1):
+    """A BENCH_kernel_forward.json shard: object schema with run
+    metadata (avx2 dispatch flag, layer shape) and the tiled/SIMD
+    kernel-grid cases carrying a ``gflops`` compute-throughput metric."""
+    return {
+        "avx2": avx2,
+        "m": 784,
+        "n": 1000,
+        "k": 98125,
+        "cases": [
+            {
+                "name": name,
+                "iters": 15,
+                "mean_ns": mean_ns,
+                "stddev_ns": 8.0,
+                "p50_ns": mean_ns,
+                "p95_ns": mean_ns * 1.15,
+                "throughput": 50.0 / (mean_ns / 1e9),
+                "gflops": gflops,
+            }
+            for name in (
+                "scratch b50 784->1000 K=98k",
+                "tiled1x8 b50 784->1000 K=98k",
+                "tiled8x8 b50 784->1000 K=98k",
+            )
+        ]
+        + [
+            # the SIMD primitive rows carry latency only
+            {"name": "dot8 dispatch m785", "iters": 15, "mean_ns": 300.0},
+            {"name": "dot8 scalar   m785", "iters": 15, "mean_ns": 700.0},
+        ],
+    }
+
+
 class TestMetricKind:
     def test_latency_suffixes(self):
         for key in ("mean_ns", "p50_ns", "p99_us", "wall_s", "stddev_ns"):
             assert metric_kind(key) == "latency"
 
     def test_throughput_markers(self):
-        for key in ("throughput", "throughput_rps", "rows_rps"):
+        for key in ("throughput", "throughput_rps", "rows_rps", "gflops"):
             assert metric_kind(key) == "throughput"
 
     def test_everything_else_is_info(self):
@@ -166,6 +200,19 @@ class TestLoadCases:
         assert metric_kind("heap_param_bytes") == "info"
         assert metric_kind("mapped_file_bytes") == "info"
         assert metric_kind("v2_int8_file_bytes") == "info"
+
+    def test_kernel_forward_schema(self, tmp_path):
+        p = tmp_path / "BENCH_kernel_forward.json"
+        write_json(p, kernel_report(1_000_000.0, 80.0))
+        cases, meta = load_cases(str(p))
+        # the dispatch flag and layer shape ride as numeric metadata
+        assert meta["avx2"] == 1
+        assert meta["m"] == 784 and meta["n"] == 1000 and meta["k"] == 98125
+        tiled = cases["tiled1x8 b50 784->1000 K=98k"]
+        assert tiled["gflops"] == 80.0
+        assert metric_kind("gflops") == "throughput"
+        # the dot8 primitive rows carry latency metrics only
+        assert "gflops" not in cases["dot8 dispatch m785"]
 
     def test_non_json_container_rejected(self, tmp_path):
         p = tmp_path / "BENCH_bad.json"
@@ -285,6 +332,21 @@ class TestMainCli:
         write_json(
             fresh / "BENCH_bundle_load.json",
             bundle_report(52_000.0, 195_000.0, v1_bytes=800_000, int8_bytes=204_000),
+        )
+        assert self.run(fresh, base, "--strict") == 0
+
+    def test_kernel_gflops_drop_gates_strict(self, tmp_path):
+        fresh, base = tmp_path / "fresh", tmp_path / "base"
+        fresh.mkdir(), base.mkdir()
+        write_json(base / "BENCH_kernel_forward.json", kernel_report(1_000_000.0, 80.0))
+        # compute throughput halves (e.g. the avx2 path stopped being
+        # taken) — a real regression even if someone also shrank mean_ns
+        write_json(fresh / "BENCH_kernel_forward.json", kernel_report(1_000_000.0, 40.0))
+        assert self.run(fresh, base, "--strict") == 1
+        # within-band wobble passes, avx2 flag drift alone never gates
+        write_json(
+            fresh / "BENCH_kernel_forward.json",
+            kernel_report(1_100_000.0, 75.0, avx2=0),
         )
         assert self.run(fresh, base, "--strict") == 0
 

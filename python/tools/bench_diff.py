@@ -12,10 +12,12 @@ Two report schemas exist in this repo and both are handled:
 
 * the ``util::bench`` array schema — a JSON array of cases, each with
   ``name`` plus numeric metrics (``mean_ns``/``p50_ns``/…/``throughput``);
-* the ``serve_scale`` object schema — a top-level object whose
-  ``cases`` array carries ``name`` + numeric metrics, plus top-level
-  numeric metadata (which is compared too, at an exact-match band of
-  "informational only").
+* the ``serve_scale``/``kernel_forward`` object schema — a top-level
+  object whose ``cases`` array carries ``name`` + numeric metrics, plus
+  top-level numeric metadata (which is compared too, at an exact-match
+  band of "informational only"). ``kernel_forward`` records ``avx2``
+  0/1 and the layer shape as metadata, and a per-case ``gflops``
+  compute-throughput metric for the kernel-grid rows.
 
 Cases are matched by their ``name`` field; metrics are compared
 relatively: latency-like metrics (``*_ns``/``*_us``/``*_ms``/``*_s``,
@@ -46,7 +48,7 @@ DEFAULT_TOLERANCE = 0.35
 _LATENCY_KEYS = ("_ns", "_us", "_ms", "_s")
 _LATENCY_NAMES = ("mean", "p50", "p95", "p99", "stddev", "wall")
 #: metric-name markers treated as "higher is better"
-_THROUGHPUT_MARKERS = ("throughput", "_rps", "req_s")
+_THROUGHPUT_MARKERS = ("throughput", "_rps", "req_s", "gflops")
 
 
 def metric_kind(key: str) -> str:

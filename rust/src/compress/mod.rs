@@ -25,10 +25,36 @@
 //!   compression, `hashednets train --threads N` fine-tunes the result
 //!   with the threaded backward (Eqs. 11–12).
 
-use crate::hash::{bucket_sign, layer_seeds};
+use crate::hash::{bucket_sign, layer_seeds, HashPlan, TilePlan};
 use crate::model::{Method, ModelBundle, ModelError, ModelSpec};
 use crate::nn::{Layer, LayerKind, Network};
 use crate::tensor::Matrix;
+
+/// Shared validation for the dense → compressed pipelines: the source
+/// must be fully dense with one budget per layer.
+fn check_dense_source(net: &Network, budgets: &[usize]) -> Result<(), ModelError> {
+    if net.layers.is_empty() {
+        return Err(ModelError::InvalidSpec("network has no layers".into()));
+    }
+    if let Some((l, kind)) = net
+        .layers
+        .iter()
+        .enumerate()
+        .find_map(|(l, lay)| (lay.kind != LayerKind::Dense).then(|| (l, lay.kind.clone())))
+    {
+        return Err(ModelError::InvalidSpec(format!(
+            "layer {l} is {kind:?}; compression takes a fully dense network"
+        )));
+    }
+    if budgets.len() != net.layers.len() {
+        return Err(ModelError::InvalidSpec(format!(
+            "{} budgets for {} layers",
+            budgets.len(),
+            net.layers.len()
+        )));
+    }
+    Ok(())
+}
 
 /// Compress a trained **dense** network into a HashedNet bundle in one
 /// call: every layer's `(n × (m+1))` weight+bias matrix is
@@ -43,26 +69,7 @@ pub fn compress_network(
     budgets: &[usize],
     name: impl Into<String>,
 ) -> Result<ModelBundle, ModelError> {
-    if net.layers.is_empty() {
-        return Err(ModelError::InvalidSpec("network has no layers".into()));
-    }
-    if let Some((l, kind)) = net
-        .layers
-        .iter()
-        .enumerate()
-        .find_map(|(l, lay)| (lay.kind != LayerKind::Dense).then(|| (l, lay.kind.clone())))
-    {
-        return Err(ModelError::InvalidSpec(format!(
-            "layer {l} is {kind:?}; compress_network takes a fully dense network"
-        )));
-    }
-    if budgets.len() != net.layers.len() {
-        return Err(ModelError::InvalidSpec(format!(
-            "{} budgets for {} layers",
-            budgets.len(),
-            net.layers.len()
-        )));
-    }
+    check_dense_source(net, budgets)?;
     let seed_base = net.layers[0].seed_base;
     let mut dims: Vec<usize> = vec![net.n_in()];
     dims.extend(net.layers.iter().map(|l| l.n));
@@ -82,6 +89,39 @@ pub fn compress_network(
         hashed_layer.params = compress_dense(&vb, budgets[l], l as u32, seed_base).into();
     }
     hashed.to_bundle(&spec)
+}
+
+/// [`compress_network`]'s block-structured twin: project every dense
+/// layer onto the tile-run parameterization of
+/// [`Method::HashedTile`] (see [`compress_dense_tiled`]) and package
+/// the result as a `hashed_tile` bundle that the SIMD kernels serve.
+pub fn compress_network_tiled(
+    net: &Network,
+    budgets: &[usize],
+    tile: (usize, usize),
+    name: impl Into<String>,
+) -> Result<ModelBundle, ModelError> {
+    check_dense_source(net, budgets)?;
+    let seed_base = net.layers[0].seed_base;
+    let mut dims: Vec<usize> = vec![net.n_in()];
+    dims.extend(net.layers.iter().map(|l| l.n));
+    let spec = ModelSpec::new(
+        name,
+        Method::HashedTile { tile },
+        dims,
+        budgets.to_vec(),
+        seed_base,
+        50,
+    )?;
+    let mut tiled = Network::from_spec(&spec)?;
+    for (l, (dense_layer, tiled_layer)) in
+        net.layers.iter().zip(tiled.layers.iter_mut()).enumerate()
+    {
+        let vb = dense_with_bias(dense_layer);
+        tiled_layer.params =
+            compress_dense_tiled(&vb, budgets[l], tile, l as u32, seed_base).into();
+    }
+    tiled.to_bundle(&spec)
 }
 
 /// A dense layer's `(n × (m+1))` weight matrix with the bias folded in
@@ -116,6 +156,17 @@ pub fn reconstruction_report(net: &Network, hashed: &ModelBundle) -> Result<Vec<
         return Err(ModelError::InvalidSpec(format!("layer {l} is not dense")));
     }
     let seed_base = hashed.spec.seed_base;
+    if let Method::HashedTile { tile } = hashed.spec.method {
+        return Ok(net
+            .layers
+            .iter()
+            .zip(&hashed.params)
+            .enumerate()
+            .map(|(l, (layer, w))| {
+                reconstruction_error_tiled_of(&dense_with_bias(layer), w, tile, l as u32, seed_base)
+            })
+            .collect());
+    }
     Ok(net
         .layers
         .iter()
@@ -149,6 +200,67 @@ pub fn compress_dense(dense: &Matrix, k: usize, layer_index: u32, seed_base: u32
         .zip(&counts)
         .map(|(&s, &c)| if c == 0 { 0.0 } else { (s / c as f64) as f32 })
         .collect()
+}
+
+/// [`compress_dense`]'s block-structured twin: the least-squares
+/// projection onto the [`TilePlan`] parameterization. Each stored
+/// weight takes the ξ-weighted mean over every virtual cell that maps
+/// to it — cells of the tile offset it serves, across all (possibly
+/// overlapping) runs that cover it — which minimizes `‖V − V̂‖²_F`
+/// given the tile mapping, exactly as the per-cell version does for
+/// Eq. 7's.
+pub fn compress_dense_tiled(
+    dense: &Matrix,
+    k: usize,
+    tile: (usize, usize),
+    layer_index: u32,
+    seed_base: u32,
+) -> Vec<f32> {
+    let (n, m1) = (dense.rows, dense.cols);
+    let plan = TilePlan::build(n, m1, k, tile, layer_index, seed_base);
+    let (th, tw) = tile;
+    let mut sums = vec![0.0f64; k];
+    let mut counts = vec![0u32; k];
+    for i in 0..n {
+        for j in 0..m1 {
+            let e = plan.tile_entry(i / th, j / tw);
+            let idx = TilePlan::base(e) + (i % th) * tw + (j % tw);
+            let sg = if e & HashPlan::SIGN_BIT != 0 { -1.0 } else { 1.0 };
+            sums[idx] += (sg * dense.at(i, j)) as f64;
+            counts[idx] += 1;
+        }
+    }
+    sums.iter()
+        .zip(&counts)
+        .map(|(&s, &c)| if c == 0 { 0.0 } else { (s / c as f64) as f32 })
+        .collect()
+}
+
+/// Relative Frobenius reconstruction error of already-computed tiled
+/// bucket values `w` against `dense` — the tiled counterpart of
+/// [`reconstruction_error_of`].
+pub fn reconstruction_error_tiled_of(
+    dense: &Matrix,
+    w: &[f32],
+    tile: (usize, usize),
+    layer_index: u32,
+    seed_base: u32,
+) -> f64 {
+    let (n, m1) = (dense.rows, dense.cols);
+    let plan = TilePlan::build(n, m1, w.len(), tile, layer_index, seed_base);
+    let mut vrow = vec![0.0f32; m1];
+    let mut num = 0.0f64;
+    let mut den = 0.0f64;
+    for i in 0..n {
+        plan.decompress_row_into(i, w, &mut vrow);
+        for j in 0..m1 {
+            let v = dense.at(i, j) as f64;
+            let d = v - vrow[j] as f64;
+            num += d * d;
+            den += v * v;
+        }
+    }
+    (num / den.max(1e-30)).sqrt()
 }
 
 /// Build a hashed layer whose virtual matrix approximates `dense`.
@@ -279,6 +391,47 @@ mod tests {
         }
         let want = compress_dense(&vb, 30, 0, crate::hash::DEFAULT_SEED_BASE);
         assert_eq!(net.layers[0].params, want);
+    }
+
+    #[test]
+    fn compress_network_tiled_roundtrip_and_report() {
+        let mut rng = Pcg32::new(9, 1);
+        let mut dense = Network::from_dims(
+            &[10, 8, 4],
+            vec![LayerKind::Dense, LayerKind::Dense],
+            crate::hash::DEFAULT_SEED_BASE,
+        );
+        dense.init(&mut rng);
+        let tile = (1usize, 8usize);
+        let bundle = compress_network_tiled(&dense, &[30, 12], tile, "toy_tiled").unwrap();
+        assert_eq!(bundle.spec.method, Method::HashedTile { tile });
+        assert_eq!(bundle.spec.stored_params(), 42);
+        // round-trips through the bundle into a serving-ready network
+        let net = Network::from_bundle(&bundle).unwrap();
+        let l0 = &dense.layers[0];
+        let want =
+            compress_dense_tiled(&dense_with_bias(l0), 30, tile, 0, crate::hash::DEFAULT_SEED_BASE);
+        assert_eq!(net.layers[0].params, want);
+        // the tiled diagnostic runs and reports a sane relative error
+        let report = reconstruction_report(&dense, &bundle).unwrap();
+        assert_eq!(report.len(), 2);
+        assert!(report.iter().all(|&e| e.is_finite() && e >= 0.0 && e < 2.0), "{report:?}");
+        // tile area larger than a budget is rejected by spec validation
+        assert!(compress_network_tiled(&dense, &[30, 12], (8, 8), "bad").is_err());
+    }
+
+    #[test]
+    fn tiled_reconstruction_error_decreases_with_k() {
+        let mut rng = Pcg32::new(12, 1);
+        let dense = Matrix::from_fn(20, 21, |_, _| rng.normal());
+        let seed = crate::hash::DEFAULT_SEED_BASE;
+        let err = |k: usize| {
+            let w = compress_dense_tiled(&dense, k, (1, 8), 0, seed);
+            reconstruction_error_tiled_of(&dense, &w, (1, 8), 0, seed)
+        };
+        let e8 = err(420 / 8);
+        let e1 = err(4200);
+        assert!(e1 < e8, "{e1} vs {e8}");
     }
 
     #[test]

@@ -6,6 +6,9 @@
 //! * `table1` — all 8 datasets at compression 1/8, 3- & 5-layer
 //! * `table2` — same at 1/64
 //! * `fig4` — fixed storage, virtual expansion ×{1..16}, MNIST
+//! * `tile_sweep` — accuracy vs. tile shape for the block-structured
+//!   `hashed_tile` method against the per-cell `hashnet` baseline at
+//!   the same budget (extension; not a paper figure)
 //!
 //! Teachers (dense compression-1 nets) are trained first — once per
 //! (dataset, depth, out) — then all runs execute on a worker pool; each
@@ -38,6 +41,9 @@ pub const METHODS: [Method; 6] = Method::ALL;
 pub const COMPRESSIONS: [(u32, u32); 7] =
     [(1, 1), (1, 2), (1, 4), (1, 8), (1, 16), (1, 32), (1, 64)];
 pub const EXPANSIONS: [usize; 5] = [1, 2, 4, 8, 16];
+/// Tile shapes swept by the `tile_sweep` experiment — 1×8 (vector rows)
+/// through 8×8 (square blocks), all SIMD-width-aligned.
+pub const TILE_SWEEP: [(usize, usize); 4] = [(1, 8), (2, 8), (4, 8), (8, 8)];
 
 /// Scale knobs for the whole grid (defaults match the CPU testbed;
 /// `--scale paper` in the CLI raises them to the paper's sizes).
@@ -183,7 +189,33 @@ pub fn jobs_for(experiment: &str, opt: &ReproOptions) -> Result<Vec<Job>> {
                 });
             }
         }
-        other => return Err(anyhow!("unknown experiment '{other}' (fig2|fig3|table1|table2|fig4)")),
+        "tile_sweep" => {
+            // structured-hashing extension: same MNIST 3-layer 1/8 cell,
+            // per-cell hashing vs. every SIMD-aligned tile shape
+            let out = Kind::Mnist.n_classes();
+            let c = (1u32, 8u32);
+            let mut push = |method: Method, tag: &str| {
+                jobs.push(Job {
+                    experiment: "tile_sweep".into(),
+                    dataset: Kind::Mnist,
+                    method,
+                    artifact: artifact_name(tag, 3, opt.hidden, out, c),
+                    depth: 3,
+                    compression: c.0 as f64 / c.1 as f64,
+                    expansion: None,
+                    teacher: None,
+                });
+            };
+            push(Method::Hashnet, "hashnet");
+            for tile in TILE_SWEEP {
+                push(Method::HashedTile { tile }, &format!("tile{}x{}", tile.0, tile.1));
+            }
+        }
+        other => {
+            return Err(anyhow!(
+                "unknown experiment '{other}' (fig2|fig3|table1|table2|fig4|tile_sweep)"
+            ))
+        }
     }
     Ok(jobs)
 }
@@ -524,6 +556,8 @@ pub fn pivot_tables(experiment: &str, rows: &[RunRow]) -> Vec<Table> {
             Method::Dk => "DK",
             Method::Hashnet => "HashNet",
             Method::HashnetDk => "HashNetDK",
+            Method::HashedEmbedding { .. } => "HashedEmbedding",
+            Method::HashedTile { .. } => "HashedTile",
         }
     };
     match experiment {
@@ -584,6 +618,29 @@ pub fn pivot_tables(experiment: &str, rows: &[RunRow]) -> Vec<Table> {
             }
             tables
         }
+        "tile_sweep" => {
+            // one variant per column (per-cell baseline, then the tile
+            // shapes), one row per compression level in the sweep
+            let label = |m: Method| -> String {
+                match m {
+                    Method::HashedTile { tile } => format!("{}x{}", tile.0, tile.1),
+                    other => pretty(other).to_string(),
+                }
+            };
+            let mut cols: Vec<String> = vec!["HashNet".into()];
+            cols.extend(TILE_SWEEP.iter().map(|t| format!("{}x{}", t.0, t.1)));
+            let cols_ref: Vec<&str> = cols.iter().map(String::as_str).collect();
+            let mut t = Table::new(
+                "tile_sweep test error (%) vs tile shape, MNIST 3-layer",
+                "compression",
+                &cols_ref,
+            );
+            for r in rows {
+                t.set_err(&format!("{:.5}", r.job.compression), &label(r.job.method), r.test_error);
+            }
+            t.bold_row_minima();
+            vec![t]
+        }
         _ => Vec::new(),
     }
 }
@@ -600,6 +657,8 @@ mod tests {
         assert_eq!(jobs_for("table1", &opt).unwrap().len(), 8 * 2 * 6);
         assert_eq!(jobs_for("table2", &opt).unwrap().len(), 8 * 2 * 6);
         assert_eq!(jobs_for("fig4", &opt).unwrap().len(), 2 * (5 * 3 + 1));
+        // hashnet baseline + one job per swept tile shape
+        assert_eq!(jobs_for("tile_sweep", &opt).unwrap().len(), 1 + TILE_SWEEP.len());
         assert!(jobs_for("nope", &opt).is_err());
     }
 
@@ -623,7 +682,7 @@ mod tests {
         // cell of every experiment (DK cells included — they are only
         // skipped because of the teacher pipeline, not the spec)
         let opt = ReproOptions::default();
-        for exp in ["fig2", "fig3", "table1", "table2", "fig4"] {
+        for exp in ["fig2", "fig3", "table1", "table2", "fig4", "tile_sweep"] {
             for job in jobs_for(exp, &opt).unwrap() {
                 let spec = native_spec_for(&job, &opt)
                     .unwrap_or_else(|e| panic!("{}: {e:#}", job.artifact));
@@ -698,5 +757,40 @@ mod tests {
         let tables = pivot_tables("fig2", &rows);
         assert_eq!(tables.len(), 2);
         assert!(tables[0].to_csv().contains("0.12500,,,,,1.45,"));
+    }
+
+    #[test]
+    fn pivot_tile_sweep_labels_tiles() {
+        let mk = |method: Method, artifact: &str, err: f64| RunRow {
+            job: Job {
+                experiment: "tile_sweep".into(),
+                dataset: Kind::Mnist,
+                method,
+                artifact: artifact.into(),
+                depth: 3,
+                compression: 0.125,
+                expansion: None,
+                teacher: None,
+            },
+            test_error: err,
+            val_error: err,
+            stored_params: 9938,
+            wall_s: 1.0,
+            steps_per_s: 10.0,
+            threads: 1,
+        };
+        let rows = vec![
+            mk(Method::Hashnet, "hashnet_3l_h100_o10_c1-8", 0.02),
+            mk(
+                Method::HashedTile { tile: (8, 8) },
+                "tile8x8_3l_h100_o10_c1-8",
+                0.03,
+            ),
+        ];
+        let tables = pivot_tables("tile_sweep", &rows);
+        assert_eq!(tables.len(), 1);
+        let csv = tables[0].to_csv();
+        assert!(csv.contains("HashNet") && csv.contains("8x8"), "{csv}");
+        assert!(csv.contains("0.12500,2.00"), "{csv}");
     }
 }

@@ -261,6 +261,198 @@ impl std::fmt::Debug for HashPlan {
     }
 }
 
+/// Block-structured hashing plan (`Method::HashedTile`): the virtual
+/// matrix is carved into a grid of `th × tw` **tiles**, and the hash
+/// maps each *tile* — not each cell — to a contiguous *run* of
+/// `th · tw` stored weights, with one ξ sign for the whole tile.
+///
+/// Per-cell hashing (Eq. 8) defeats vectorization by construction:
+/// every virtual cell gathers a random bucket. Structured Multi-Hashing
+/// (Eban et al.) and Functional Hashing (Shi et al.) observe that
+/// hashing *blocks* preserves the compression behaviour (runs still
+/// collide pseudo-randomly across tiles) while making the inner loop
+/// contiguous. Concretely, cell `(i, j)` of the virtual matrix maps to
+///
+/// ```text
+///   V[i][j] = ξ(tr, tc) · w[ base(tr, tc) + (i mod th)·tw + (j mod tw) ]
+///   where (tr, tc) = (i / th, j / tw)
+/// ```
+///
+/// so a decompressed virtual row is `tiles_c` *contiguous* `tw`-length
+/// copies from the stored weights — an 8-wide SIMD load when
+/// `tw` is a multiple of [`crate::tensor::simd::LANES`] — instead of
+/// `m+1` random gathers. Runs from different tiles overlap arbitrarily
+/// (bases are hashed into `[0, k − th·tw]`), which is exactly the
+/// weight-sharing collision structure of the per-cell scheme at tile
+/// granularity.
+///
+/// # Memory layout
+///
+/// One packed `u32` per **tile**, row-major over the tile grid:
+/// bits 30..0 hold the run base, bit 31 the tile's ξ sign (same
+/// convention as [`HashPlan`], so [`HashPlan::apply_sign`] works on
+/// these entries). Edge tiles whose cells fall outside `n × m1` are
+/// still full runs; out-of-range cells are simply never read by the
+/// row-level accessors. At 4 bytes per `th·tw` cells the plan is
+/// `th·tw ×` smaller than the per-cell plan.
+///
+/// Requires `k ≥ th·tw` (a run must fit) — enforced here and in
+/// `ModelSpec::validate`.
+#[derive(Clone)]
+pub struct TilePlan {
+    /// Output rows of the virtual matrix (layer fan-out `n`).
+    pub n: usize,
+    /// Columns of the virtual matrix (`m + 1`, bias column included).
+    pub m1: usize,
+    /// Number of real (stored) weights the runs index into.
+    pub k: usize,
+    /// Tile shape `(th, tw)` in virtual cells.
+    pub tile: (usize, usize),
+    /// Tile-grid rows (`ceil(n / th)`).
+    tiles_r: usize,
+    /// Tile-grid columns (`ceil(m1 / tw)`).
+    tiles_c: usize,
+    /// `tiles_r * tiles_c` packed entries, row-major over the grid:
+    /// `run_base | (ξ<0) << 31`.
+    packed: Vec<u32>,
+}
+
+impl PartialEq for TilePlan {
+    fn eq(&self, other: &Self) -> bool {
+        self.n == other.n
+            && self.m1 == other.m1
+            && self.k == other.k
+            && self.tile == other.tile
+            && self.packed == other.packed
+    }
+}
+
+impl TilePlan {
+    /// Build the plan for layer `layer_index` of a network seeded with
+    /// `seed_base`. Deterministic: tile `(tr, tc)` hashes through the
+    /// same `bucket_sign` primitive as the per-cell plan, with the tile
+    /// grid standing in for the cell grid and the base drawn from
+    /// `[0, k − th·tw]` so every run fits.
+    pub fn build(
+        n: usize,
+        m1: usize,
+        k: usize,
+        tile: (usize, usize),
+        layer_index: u32,
+        seed_base: u32,
+    ) -> TilePlan {
+        let (th, tw) = tile;
+        assert!(th >= 1 && tw >= 1, "tile dims must be at least 1×1 (got {th}×{tw})");
+        let run = th * tw;
+        assert!(
+            k >= run,
+            "bucket budget k = {k} must be at least the tile area {th}×{tw} = {run}"
+        );
+        assert!(
+            (k as u64) < (1u64 << 31),
+            "run base must fit in 31 bits to leave room for the sign (k = {k})"
+        );
+        let tiles_r = n.div_ceil(th);
+        let tiles_c = m1.div_ceil(tw);
+        let n_bases = (k - run + 1) as u32;
+        let (s_h, s_xi) = layer_seeds(layer_index, seed_base);
+        let mut packed = Vec::with_capacity(tiles_r * tiles_c);
+        for tr in 0..tiles_r as u32 {
+            for tc in 0..tiles_c as u32 {
+                let (base, sg) = bucket_sign(tr, tc, tiles_c as u32, n_bases, s_h, s_xi);
+                packed.push(base | if sg < 0.0 { HashPlan::SIGN_BIT } else { 0 });
+            }
+        }
+        TilePlan { n, m1, k, tile, tiles_r, tiles_c, packed }
+    }
+
+    /// Tile grid shape `(tiles_r, tiles_c)`.
+    #[inline]
+    pub fn tiles(&self) -> (usize, usize) {
+        (self.tiles_r, self.tiles_c)
+    }
+
+    /// Stored weights per tile (`th · tw`).
+    #[inline]
+    pub fn run_len(&self) -> usize {
+        self.tile.0 * self.tile.1
+    }
+
+    /// Width of a tile-padded virtual row (`tiles_c · tw ≥ m1`). The
+    /// SIMD kernels decompress rows at this width so the inner loop has
+    /// no edge branches; callers pad activations with zeros to match.
+    #[inline]
+    pub fn padded_width(&self) -> usize {
+        self.tiles_c * self.tile.1
+    }
+
+    /// Packed entry of tile `(tr, tc)`.
+    #[inline(always)]
+    pub fn tile_entry(&self, tr: usize, tc: usize) -> u32 {
+        self.packed[tr * self.tiles_c + tc]
+    }
+
+    /// Packed entries of tile-row `tr` (length `tiles_c`).
+    #[inline]
+    pub fn row_tiles(&self, tr: usize) -> &[u32] {
+        &self.packed[tr * self.tiles_c..(tr + 1) * self.tiles_c]
+    }
+
+    /// Run base of a packed entry.
+    #[inline(always)]
+    pub fn base(entry: u32) -> usize {
+        (entry & HashPlan::BUCKET_MASK) as usize
+    }
+
+    /// Decompress virtual row `i` at padded width into `out`
+    /// (`out.len() == padded_width()`): `tiles_c` contiguous sign-applied
+    /// `tw`-length copies out of the stored weights. Columns `≥ m1` get
+    /// the (well-defined) hashed values of the edge tiles' out-of-range
+    /// cells; pairing with zero-padded activations makes them inert.
+    #[inline]
+    pub fn decompress_padded_row_into(&self, i: usize, params: &[f32], out: &mut [f32]) {
+        let (th, tw) = self.tile;
+        debug_assert_eq!(out.len(), self.padded_width());
+        let in_tile = (i % th) * tw;
+        for (chunk, &e) in out.chunks_exact_mut(tw).zip(self.row_tiles(i / th)) {
+            let run = &params[Self::base(e) + in_tile..Self::base(e) + in_tile + tw];
+            for (o, &w) in chunk.iter_mut().zip(run) {
+                *o = HashPlan::apply_sign(e, w);
+            }
+        }
+    }
+
+    /// Decompress virtual row `i` into `out` (`out.len() == m1`) — the
+    /// Eq. 7 view at true width, used by `virtual_matrix` and the
+    /// per-cell reference tests.
+    pub fn decompress_row_into(&self, i: usize, params: &[f32], out: &mut [f32]) {
+        let (th, tw) = self.tile;
+        let in_tile = (i % th) * tw;
+        for (j, o) in out.iter_mut().enumerate() {
+            let e = self.tile_entry(i / th, j / tw);
+            *o = HashPlan::apply_sign(e, params[Self::base(e) + in_tile + j % tw]);
+        }
+    }
+
+    /// Plan memory footprint in bytes (4 per tile).
+    pub fn bytes(&self) -> usize {
+        self.packed.len() * std::mem::size_of::<u32>()
+    }
+}
+
+impl std::fmt::Debug for TilePlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TilePlan")
+            .field("n", &self.n)
+            .field("m1", &self.m1)
+            .field("k", &self.k)
+            .field("tile", &self.tile)
+            .field("tiles", &(self.tiles_r, self.tiles_c))
+            .field("bytes", &self.bytes())
+            .finish()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -379,5 +571,85 @@ mod tests {
             let total: usize = bounds.windows(2).map(|w| (w[0]..w[1]).map(|b| inv.cells_of(b).len()).sum::<usize>()).sum();
             assert_eq!(total, 40 * 21);
         }
+    }
+
+    #[test]
+    fn tile_packing_matches_bucket_sign_over_the_grid() {
+        let (n, m1, k) = (9usize, 13usize, 100usize);
+        let tile = (8usize, 8usize);
+        let plan = TilePlan::build(n, m1, k, tile, 3, DEFAULT_SEED_BASE);
+        let (tiles_r, tiles_c) = plan.tiles();
+        assert_eq!((tiles_r, tiles_c), (2, 2), "ceil(9/8) × ceil(13/8)");
+        let (s_h, s_xi) = layer_seeds(3, DEFAULT_SEED_BASE);
+        let n_bases = (k - 64 + 1) as u32;
+        for tr in 0..tiles_r {
+            for tc in 0..tiles_c {
+                let e = plan.tile_entry(tr, tc);
+                let (b, sg) =
+                    bucket_sign(tr as u32, tc as u32, tiles_c as u32, n_bases, s_h, s_xi);
+                assert_eq!(TilePlan::base(e), b as usize, "base at ({tr},{tc})");
+                assert!(TilePlan::base(e) + plan.run_len() <= k, "run fits at ({tr},{tc})");
+                assert_eq!(HashPlan::apply_sign(e, 2.5), 2.5 * sg, "sign at ({tr},{tc})");
+            }
+        }
+    }
+
+    #[test]
+    fn tile_decompress_row_matches_per_cell_formula() {
+        // Odd (non-multiple) dims exercise the edge tiles.
+        for tile in [(1usize, 8usize), (8, 8), (2, 4)] {
+            let (n, m1, k) = (9usize, 13usize, 77usize);
+            let plan = TilePlan::build(n, m1, k, tile, 1, DEFAULT_SEED_BASE);
+            let params: Vec<f32> = (0..k).map(|i| 0.25 + i as f32).collect();
+            let (th, tw) = tile;
+            let mut out = vec![0.0f32; m1];
+            for i in 0..n {
+                plan.decompress_row_into(i, &params, &mut out);
+                for j in 0..m1 {
+                    let e = plan.tile_entry(i / th, j / tw);
+                    let off = TilePlan::base(e) + (i % th) * tw + (j % tw);
+                    let want = params[off]
+                        * if e & HashPlan::SIGN_BIT != 0 { -1.0 } else { 1.0 };
+                    assert_eq!(out[j], want, "tile {tile:?} cell ({i},{j})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_padded_row_agrees_with_true_width_prefix() {
+        let (n, m1, k) = (5usize, 11usize, 40usize);
+        let plan = TilePlan::build(n, m1, k, (1, 8), 0, DEFAULT_SEED_BASE);
+        assert_eq!(plan.padded_width(), 16);
+        let params: Vec<f32> = (0..k).map(|i| (i as f32 - 7.0) * 0.5).collect();
+        let mut padded = vec![0.0f32; plan.padded_width()];
+        let mut narrow = vec![0.0f32; m1];
+        for i in 0..n {
+            plan.decompress_padded_row_into(i, &params, &mut padded);
+            plan.decompress_row_into(i, &params, &mut narrow);
+            assert_eq!(&padded[..m1], &narrow[..], "row {i} prefix");
+        }
+    }
+
+    #[test]
+    fn tile_plan_is_four_bytes_per_tile() {
+        let plan = TilePlan::build(16, 24, 70, (8, 8), 0, DEFAULT_SEED_BASE);
+        assert_eq!(plan.bytes(), 4 * 2 * 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "tile area")]
+    fn tile_budget_smaller_than_run_panics() {
+        let _ = TilePlan::build(8, 8, 63, (8, 8), 0, DEFAULT_SEED_BASE);
+    }
+
+    #[test]
+    fn tile_plans_differ_across_layers_and_seeds() {
+        let a = TilePlan::build(16, 16, 100, (1, 8), 0, DEFAULT_SEED_BASE);
+        let b = TilePlan::build(16, 16, 100, (1, 8), 1, DEFAULT_SEED_BASE);
+        let c = TilePlan::build(16, 16, 100, (1, 8), 0, DEFAULT_SEED_BASE ^ 0xABCD);
+        assert_ne!(a, b, "layer index changes the mapping");
+        assert_ne!(a, c, "seed base changes the mapping");
+        assert_eq!(a, TilePlan::build(16, 16, 100, (1, 8), 0, DEFAULT_SEED_BASE), "deterministic");
     }
 }

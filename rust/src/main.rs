@@ -15,7 +15,8 @@
 //!              artifact + checkpoint (--config/--checkpoint, PJRT);
 //!              `--frontier` prints the size/accuracy table across
 //!              quantization codecs (f32, int8, codebook K)
-//!   repro    — regenerate a paper experiment (fig2|fig3|table1|table2|fig4);
+//!   repro    — regenerate a paper experiment (fig2|fig3|table1|table2|fig4,
+//!              plus the tile_sweep accuracy-vs-tile-size extension);
 //!              without artifacts/ the non-DK cells run on the native
 //!              engine (specs re-derived by coordinator::sizing), so the
 //!              grids work on a fresh checkout with no Python toolchain
@@ -25,7 +26,9 @@
 //!              models at runtime via {"cmd":"load"|"unload"|"reload"}
 //!   compress — dense → HashedNet in one call (compress_network):
 //!              --bundle dense.hnb --budgets k0,k1 (or the manifest pair
-//!              --from nn_… --to hashnet_… --checkpoint ck); add
+//!              --from nn_… --to hashnet_… --checkpoint ck);
+//!              `--method hashed_tile [--tile THxTW]` targets the
+//!              block-structured representation instead; add
 //!              `--quantize int8|codebook[K]` to re-encode the saved
 //!              tensors with a v2 quantization codec
 //!   list     — manifest artifacts + *.hnb bundles with method, storage,
@@ -51,7 +54,7 @@ const KNOWN_TRAIN: &[&str] = &[
     "config", "artifacts", "dataset", "n-train", "n-test", "epochs", "lr", "momentum",
     "keep-prob", "lam", "temp", "seed", "teacher", "patience", "save", "method", "dims",
     "budgets", "compression", "name", "seed-base", "batch", "spec-json", "threads",
-    "block-rows", "reduction", "bag-mode", "strict",
+    "block-rows", "reduction", "bag-mode", "tile", "strict",
 ];
 const KNOWN_EVAL: &[&str] = &[
     "config", "artifacts", "checkpoint", "bundle", "dataset", "n-test", "seed", "frontier",
@@ -71,7 +74,7 @@ const KNOWN_SERVE: &[&str] = &[
 ];
 const KNOWN_COMPRESS: &[&str] = &[
     "from", "to", "checkpoint", "artifacts", "save", "bundle", "budgets", "name", "quantize",
-    "strict",
+    "method", "tile", "strict",
 ];
 const KNOWN_LIST: &[&str] = &["artifacts", "strict"];
 const KNOWN_SELFTEST: &[&str] = &["config", "artifacts", "strict"];
@@ -176,6 +179,9 @@ fn spec_from_args(args: &Args) -> Result<ModelSpec> {
     if method_name == "hashed_embedding" {
         return embedding_spec_from_args(args);
     }
+    if method_name == "hashed_tile" {
+        return tile_spec_from_args(args);
+    }
     let method = Method::parse(method_name)?;
     let dims = parse_usize_list(args.get("dims").ok_or_else(|| {
         anyhow!("--dims 784,100,10 required (or --config <artifact> / --spec-json)")
@@ -253,6 +259,49 @@ fn embedding_spec_from_args(args: &Args) -> Result<ModelSpec> {
         dim,
         k,
         mode,
+        args.get_u64("seed-base", hashednets::hash::DEFAULT_SEED_BASE as u64) as u32,
+        args.get_usize("batch", 50),
+    )?)
+}
+
+/// `--method hashed_tile --dims … [--tile THxTW]`: block-structured
+/// hashing. Identical sizing rules to the per-cell methods, except each
+/// default budget is clamped up to the tile area so the spec validates
+/// at extreme compression ratios.
+fn tile_spec_from_args(args: &Args) -> Result<ModelSpec> {
+    let tile = Method::parse_tile(args.get_or("tile", "1x8"))?;
+    let dims = parse_usize_list(args.get("dims").ok_or_else(|| {
+        anyhow!("--dims 784,100,10 required (or --config <artifact> / --spec-json)")
+    })?)?;
+    if dims.len() < 2 {
+        return Err(anyhow!("--dims needs at least input and output widths"));
+    }
+    let budgets = match args.get("budgets") {
+        Some(b) => parse_usize_list(b)?,
+        None => {
+            let c = args.get_f32("compression", 0.125) as f64;
+            (0..dims.len() - 1)
+                .map(|l| {
+                    let (m, n) = (dims[l], dims[l + 1]);
+                    ((c * (n * (m + 1)) as f64).round() as usize).max(tile.0 * tile.1)
+                })
+                .collect()
+        }
+    };
+    let name = match args.get("name") {
+        Some(n) => n.to_string(),
+        None => format!(
+            "hashed_tile{}x{}_{}",
+            tile.0,
+            tile.1,
+            dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join("x")
+        ),
+    };
+    Ok(ModelSpec::new(
+        name,
+        Method::HashedTile { tile },
+        dims,
+        budgets,
         args.get_u64("seed-base", hashednets::hash::DEFAULT_SEED_BASE as u64) as u32,
         args.get_usize("batch", 50),
     )?)
@@ -577,7 +626,7 @@ fn eval_frontier(
 fn cmd_repro(args: &Args) -> Result<()> {
     let experiment = args
         .get("experiment")
-        .ok_or_else(|| anyhow!("--experiment fig2|fig3|table1|table2|fig4 required"))?;
+        .ok_or_else(|| anyhow!("--experiment fig2|fig3|table1|table2|fig4|tile_sweep required"))?;
     let mut opt = repro::ReproOptions {
         artifacts_dir: artifacts_dir(args),
         results_dir: args.get_or("results", "results").into(),
@@ -698,8 +747,25 @@ fn cmd_compress(args: &Args) -> Result<()> {
             ));
         }
         let dnet = Network::from_bundle(&bundle)?;
-        let name = args.get_or("name", "hashnet_compressed").to_string();
-        let hashed = hashednets::compress::compress_network(&dnet, &budgets, name)?;
+        // `--method hashed_tile [--tile THxTW]` switches the target
+        // representation from per-cell buckets to tile runs.
+        let target = args.get_or("method", "hashnet");
+        let hashed = match target {
+            "hashnet" => {
+                let name = args.get_or("name", "hashnet_compressed").to_string();
+                hashednets::compress::compress_network(&dnet, &budgets, name)?
+            }
+            "hashed_tile" => {
+                let tile = Method::parse_tile(args.get_or("tile", "1x8"))?;
+                let name = args.get_or("name", "hashed_tile_compressed").to_string();
+                hashednets::compress::compress_network_tiled(&dnet, &budgets, tile, name)?
+            }
+            other => {
+                return Err(anyhow!(
+                    "--method must be hashnet|hashed_tile for compression, got '{other}'"
+                ))
+            }
+        };
         for (l, err) in hashednets::compress::reconstruction_report(&dnet, &hashed)?
             .iter()
             .enumerate()

@@ -80,7 +80,7 @@ impl fmt::Display for ModelError {
             ModelError::Io(e) => write!(f, "model i/o: {e}"),
             ModelError::UnknownMethod(m) => write!(
                 f,
-                "unknown method '{m}' (expected one of hashnet, hashnet_dk, nn, dk, rer, lrd, hashed_embedding)"
+                "unknown method '{m}' (expected one of hashnet, hashnet_dk, nn, dk, rer, lrd, hashed_embedding, hashed_tile)"
             ),
             ModelError::InvalidSpec(why) => write!(f, "invalid model spec: {why}"),
             ModelError::BadMagic => write!(f, "not a model bundle (bad magic)"),

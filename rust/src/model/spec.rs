@@ -67,6 +67,18 @@ pub enum Method {
         /// Bag reduction: sum or mean.
         mode: BagMode,
     },
+    /// Block-structured HashedNet (Structured Multi-Hashing / Functional
+    /// Hashing direction): `tile.0 × tile.1` tiles of the virtual matrix
+    /// hash to contiguous runs of the stored weights with one ξ sign per
+    /// tile ([`crate::hash::TilePlan`]), so the forward/backward kernels
+    /// run contiguous 8-lane SIMD loops instead of per-cell gathers.
+    /// Same per-layer budget semantics as [`Method::Hashnet`].
+    HashedTile {
+        /// Tile shape `(rows, cols)` in virtual cells; `cols` should be
+        /// a multiple of the SIMD width (8) for the vector kernels to
+        /// run full-width.
+        tile: (usize, usize),
+    },
 }
 
 impl Method {
@@ -83,10 +95,11 @@ impl Method {
     /// Fallible parse of the wire/manifest name. The one place in the
     /// system where a method string is interpreted.
     ///
-    /// `"hashed_embedding"` is *not* parseable here: its variant carries
-    /// shape fields (`num_categories`, `dim`, `k`, `mode`) that a bare
-    /// name cannot supply — [`ModelSpec::from_json`] derives them from
-    /// the spec's `dims`/`budgets`/`mode` instead.
+    /// `"hashed_embedding"` and `"hashed_tile"` are *not* parseable
+    /// here: their variants carry shape fields (`num_categories`/`dim`/
+    /// `k`/`mode`, resp. `tile`) that a bare name cannot supply —
+    /// [`ModelSpec::from_json`] derives them from the spec's
+    /// `dims`/`budgets`/`mode`/`tile` keys instead.
     pub fn parse(s: &str) -> Result<Method, ModelError> {
         match s {
             "hashnet" => Ok(Method::Hashnet),
@@ -110,7 +123,25 @@ impl Method {
             Method::Rer => "rer",
             Method::Lrd => "lrd",
             Method::HashedEmbedding { .. } => "hashed_embedding",
+            Method::HashedTile { .. } => "hashed_tile",
         }
+    }
+
+    /// Parse a `"THxTW"` tile-shape string (e.g. `"1x8"`, `"8x8"`) —
+    /// shared by [`ModelSpec::from_json`] and the CLI's `--tile` flag.
+    pub fn parse_tile(s: &str) -> Result<(usize, usize), ModelError> {
+        let bad = || {
+            ModelError::InvalidSpec(format!(
+                "bad tile '{s}' (expected ROWSxCOLS, e.g. 1x8 or 8x8)"
+            ))
+        };
+        let (th, tw) = s.split_once('x').ok_or_else(bad)?;
+        let th: usize = th.trim().parse().map_err(|_| bad())?;
+        let tw: usize = tw.trim().parse().map_err(|_| bad())?;
+        if th == 0 || tw == 0 {
+            return Err(bad());
+        }
+        Ok((th, tw))
     }
 
     /// Whether training this method consumes teacher soft targets.
@@ -129,6 +160,7 @@ impl Method {
     pub fn layer_kind(&self, n: usize, budget: usize) -> LayerKind {
         match self {
             Method::Hashnet | Method::HashnetDk => LayerKind::Hashed { k: budget },
+            Method::HashedTile { tile } => LayerKind::HashedTile { k: budget, tile: *tile },
             Method::Nn | Method::Dk => LayerKind::Dense,
             Method::Rer => LayerKind::Masked { k: budget },
             Method::Lrd => {
@@ -270,6 +302,18 @@ impl ModelSpec {
                 )));
             }
         }
+        if let Method::HashedTile { tile: (th, tw) } = self.method {
+            if th == 0 || tw == 0 {
+                return Err(ModelError::InvalidSpec(format!("zero tile dim in {th}x{tw}")));
+            }
+            // every run must fit inside its layer's budget
+            if let Some(&b) = self.budgets.iter().find(|&&b| b < th * tw) {
+                return Err(ModelError::InvalidSpec(format!(
+                    "budget {b} is smaller than the tile area {th}x{tw} = {}",
+                    th * tw
+                )));
+            }
+        }
         if self.dims.len() < 2 {
             return Err(ModelError::InvalidSpec(format!(
                 "need at least 2 dims (input, output), got {:?}",
@@ -340,7 +384,7 @@ impl ModelSpec {
                     out.push(n * m);
                     out.push(n);
                 }
-                LayerKind::Hashed { k } => out.push(k),
+                LayerKind::Hashed { k } | LayerKind::HashedTile { k, .. } => out.push(k),
                 LayerKind::Masked { .. } => out.push(n * (m + 1)),
                 LayerKind::LowRank { r } => out.push(n * r),
             }
@@ -361,7 +405,9 @@ impl ModelSpec {
                 let (m, n) = (self.dims[l], self.dims[l + 1]);
                 match kind {
                     LayerKind::Dense => n * m + n,
-                    LayerKind::Hashed { k } | LayerKind::Masked { k } => k,
+                    LayerKind::Hashed { k }
+                    | LayerKind::HashedTile { k, .. }
+                    | LayerKind::Masked { k } => k,
                     LayerKind::LowRank { r } => n * r,
                 }
             })
@@ -406,6 +452,9 @@ impl ModelSpec {
         if let Some((_, _, _, mode)) = self.embedding_shape() {
             pairs.push(("mode", Json::Str(mode.as_str().to_string())));
         }
+        if let Method::HashedTile { tile: (th, tw) } = self.method {
+            pairs.push(("tile", Json::Str(format!("{th}x{tw}"))));
+        }
         obj(pairs)
     }
 
@@ -437,6 +486,18 @@ impl ModelSpec {
                 None => BagMode::Sum,
             };
             Method::HashedEmbedding { num_categories: dims[0], dim: dims[1], k: budgets[0], mode }
+        } else if method_str == "hashed_tile" {
+            // the tile shape changes the weight mapping entirely, so —
+            // unlike the embedding's defaultable "mode" — it is required
+            let tile_str = v
+                .get("tile")
+                .and_then(Json::as_str)
+                .ok_or_else(|| {
+                    ModelError::InvalidSpec(
+                        "hashed_tile needs a string 'tile' key (e.g. \"8x8\")".into(),
+                    )
+                })?;
+            Method::HashedTile { tile: Method::parse_tile(tile_str)? }
         } else {
             Method::parse(method_str)?
         };
@@ -553,6 +614,70 @@ mod tests {
         assert!(ModelSpec::from_json_str(bad).is_err());
         let bad_mode = r#"{"name":"e","method":"hashed_embedding","dims":[10,4],"budgets":[5],"seed_base":1,"batch":4,"mode":"max"}"#;
         assert!(ModelSpec::from_json_str(bad_mode).is_err());
+    }
+
+    #[test]
+    fn tile_spec_roundtrip_and_accounting() {
+        let t = ModelSpec::new(
+            "tile",
+            Method::HashedTile { tile: (8, 8) },
+            vec![8, 6, 3],
+            vec![80, 70],
+            0x9E37_79B9,
+            4,
+        )
+        .unwrap();
+        assert_eq!(t.param_layout(), vec![80, 70]);
+        assert_eq!(t.stored_params(), 150);
+        assert_eq!(t.virtual_params(), 6 * 9 + 3 * 7);
+        let back = ModelSpec::from_json_str(&t.to_json_string()).unwrap();
+        assert_eq!(back, t);
+        assert!(t.to_json_string().contains("\"tile\":\"8x8\""));
+        assert_eq!(
+            t.layer_kinds(),
+            vec![
+                LayerKind::HashedTile { k: 80, tile: (8, 8) },
+                LayerKind::HashedTile { k: 70, tile: (8, 8) },
+            ]
+        );
+    }
+
+    #[test]
+    fn tile_spec_validation_and_parsing() {
+        // budget below tile area
+        assert!(ModelSpec::new(
+            "t",
+            Method::HashedTile { tile: (8, 8) },
+            vec![8, 6, 3],
+            vec![80, 63],
+            1,
+            4
+        )
+        .is_err());
+        // zero tile dim
+        assert!(ModelSpec::new(
+            "t",
+            Method::HashedTile { tile: (0, 8) },
+            vec![8, 6, 3],
+            vec![80, 70],
+            1,
+            4
+        )
+        .is_err());
+        // tile key is required in JSON
+        let no_tile = r#"{"name":"t","method":"hashed_tile","dims":[8,3],"budgets":[70],"seed_base":1,"batch":4}"#;
+        assert!(ModelSpec::from_json_str(no_tile).is_err());
+        // tile-string parser
+        assert_eq!(Method::parse_tile("1x8").unwrap(), (1, 8));
+        assert_eq!(Method::parse_tile("8x8").unwrap(), (8, 8));
+        assert!(Method::parse_tile("8").is_err());
+        assert!(Method::parse_tile("0x8").is_err());
+        assert!(Method::parse_tile("axb").is_err());
+        // bare name is not parseable (needs the tile field)
+        assert!(matches!(
+            Method::parse("hashed_tile"),
+            Err(ModelError::UnknownMethod(_))
+        ));
     }
 
     #[test]

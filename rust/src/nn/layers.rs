@@ -10,8 +10,11 @@
 //! | [`Layer::forward_hashed_inverse`]   | Eq. 10 read off the [`InversePlan`]: for each bucket `k`, add `ξ·w_k·a_j` into `z_i` per cell — `w` streams in order (the B = 1 serving default) |
 //! | [`Layer::forward_hashed_scratch`]   | Eq. 7 made batch-amortized: decompress each virtual row `V_i` once, dense dot across the batch |
 //! | hashed backward ([`Layer::backward`]) | Eqs. 11 & 12 — `∂L/∂a_j = Σ_i ξ(i,j)·w_{h(i,j)}·δ_i` and `∂L/∂w_k = Σ_{(i,j): h(i,j)=k} ξ(i,j)·a_j·δ_i` (Eq. 12 walks the inverse plan: one sequential write per bucket) |
+//! | [`Layer::forward_hashed_tiled`]     | Eq. 7 at tile granularity (the Structured Multi-Hashing direction): contiguous tile runs + full-width 8-lane SIMD dot over `[a|1|0…]` |
+//! | tiled backward ([`Layer::backward`]) | Eqs. 11 & 12 over tile runs: `∂a` via [`crate::tensor::simd::axpy8`] rows, `∂w` via sequential per-tile run writes ([`tiled_weight_grad`]) |
 //! | `LayerKind::Hashed { k }`           | the per-layer real-weight budget `K^ℓ` (§4.1) |
-//! | the ξ sign bit                      | §4.2's sign factor, packed into bit 31 of each [`HashPlan`] entry |
+//! | `LayerKind::HashedTile { k, tile }` | same budget `K^ℓ`, hash domain coarsened from cells to `th×tw` tiles ([`TilePlan`]) |
+//! | the ξ sign bit                      | §4.2's sign factor, packed into bit 31 of each [`HashPlan`] / [`TilePlan`] entry |
 //!
 //! Each layer owns its stored parameters as a flat
 //! [`ParamStore`] (owned floats, or a zero-copy borrow of an mmap'd
@@ -52,9 +55,9 @@
 //! `--threads N` reproduces `--threads 1` bit for bit — see
 //! [`TrainOptions`] for the exact contract.
 
-use crate::hash::{hash_gaussian, hash_uniform, layer_seeds, plan::InversePlan, HashPlan};
+use crate::hash::{hash_gaussian, hash_uniform, layer_seeds, plan::InversePlan, HashPlan, TilePlan};
 use crate::model::ParamStore;
-use crate::tensor::{dot_unrolled, Matrix};
+use crate::tensor::{dot_unrolled, simd, Matrix};
 use crate::util::rng::Pcg32;
 use std::sync::Arc;
 
@@ -190,6 +193,11 @@ pub enum LayerKind {
     /// HashedNets: `K` real weights, virtual `V (n×(m+1))` decompressed
     /// via `V_ij = ξ(i,j) · w_{h(i,j)}` (paper Eq. 7).
     Hashed { k: usize },
+    /// Block-structured HashedNets: `tile.0 × tile.1` tiles of `V` map
+    /// to contiguous runs of the `K` stored weights with one ξ sign per
+    /// tile ([`TilePlan`]) — Eq. 7 at tile granularity, with SIMD-width
+    /// contiguous inner loops instead of per-cell gathers.
+    HashedTile { k: usize, tile: (usize, usize) },
     /// Random Edge Removal: dense-but-masked `(n×(m+1))`, hash mask.
     Masked { k: usize },
     /// Low-Rank Decomposition: learned output-side `W (n×r)`, fixed
@@ -214,13 +222,17 @@ pub struct Layer {
     /// Sign-packed decompression plan (hashed layers only), built
     /// eagerly and shared immutably across threads/clones.
     plan: Option<Arc<HashPlan>>,
+    /// Tile-run decompression plan (hashed-tile layers only), likewise
+    /// eager and `Arc`-shared. Nothing in it is lazy — there is no
+    /// inverse view to warm.
+    tile_plan: Option<Arc<TilePlan>>,
 }
 
 impl Layer {
     pub fn new(m: usize, n: usize, kind: LayerKind, index: usize, seed_base: u32) -> Layer {
         let n_params = match kind {
             LayerKind::Dense => n * m + n,
-            LayerKind::Hashed { k } => k,
+            LayerKind::Hashed { k } | LayerKind::HashedTile { k, .. } => k,
             LayerKind::Masked { .. } => n * (m + 1),
             LayerKind::LowRank { r } => n * r,
         };
@@ -230,7 +242,13 @@ impl Layer {
             }
             _ => None,
         };
-        Layer { m, n, kind, index, seed_base, params: vec![0.0; n_params].into(), plan }
+        let tile_plan = match kind {
+            LayerKind::HashedTile { k, tile } => {
+                Some(Arc::new(TilePlan::build(n, m + 1, k, tile, index as u32, seed_base)))
+            }
+            _ => None,
+        };
+        Layer { m, n, kind, index, seed_base, params: vec![0.0; n_params].into(), plan, tile_plan }
     }
 
     /// He-style init matching `model.py`'s `ParamSpec.init_std`.
@@ -243,7 +261,7 @@ impl Layer {
                 rng.fill_normal(&mut self.params[..nm], std);
                 self.params[nm..].iter_mut().for_each(|b| *b = 0.0);
             }
-            LayerKind::Hashed { .. } => {
+            LayerKind::Hashed { .. } | LayerKind::HashedTile { .. } => {
                 let std = (2.0 / (m + 1) as f32).sqrt();
                 rng.fill_normal(&mut self.params, std);
             }
@@ -271,8 +289,17 @@ impl Layer {
         self.plan.as_ref()
     }
 
+    /// The shared tile-run plan (hashed-tile layers only).
+    pub fn tile_plan(&self) -> Option<&Arc<TilePlan>> {
+        self.tile_plan.as_ref()
+    }
+
     fn plan_ref(&self) -> &HashPlan {
         self.plan.as_deref().expect("hashed layer without a HashPlan")
+    }
+
+    fn tile_plan_ref(&self) -> &TilePlan {
+        self.tile_plan.as_deref().expect("hashed-tile layer without a TilePlan")
     }
 
     /// LRD's fixed random input projection `U (r × (m+1))`,
@@ -301,6 +328,14 @@ impl Layer {
             }
             LayerKind::Hashed { .. } => {
                 let plan = self.plan_ref();
+                let mut v = Matrix::zeros(n, m1);
+                for i in 0..n {
+                    plan.decompress_row_into(i, &self.params, v.row_mut(i));
+                }
+                v
+            }
+            LayerKind::HashedTile { .. } => {
+                let plan = self.tile_plan_ref();
                 let mut v = Matrix::zeros(n, m1);
                 for i in 0..n {
                     plan.decompress_row_into(i, &self.params, v.row_mut(i));
@@ -358,6 +393,9 @@ impl Layer {
                     self.forward_hashed_scratch(a)
                 }
             }
+            // tile runs decompress contiguously, so one kernel serves
+            // every batch size — no B = 1 special case needed
+            LayerKind::HashedTile { .. } => self.forward_hashed_tiled(a),
             _ => {
                 let v = self.virtual_matrix();
                 a.matmul_nt_aug(&v)
@@ -417,7 +455,56 @@ impl Layer {
                     plan.decompress_row_into(i0 + r, params, &mut scratch);
                     let bias = scratch[m];
                     for (b, zv) in zrow.iter_mut().enumerate() {
-                        *zv = bias + dot_unrolled(a.row(b), &scratch[..m]);
+                        *zv = bias + simd::dot8(a.row(b), &scratch[..m]);
+                    }
+                }
+            },
+        );
+        let mut z = Matrix::zeros(rows_b, n);
+        for i in 0..n {
+            for b in 0..rows_b {
+                *z.at_mut(b, i) = zt.at(i, b);
+            }
+        }
+        z
+    }
+
+    /// Tiled SIMD kernel (`LayerKind::HashedTile`): decompress each
+    /// virtual row as `tiles_c` **contiguous** `tw`-length runs at the
+    /// tile-padded width, then one full-width [`simd::dot8`] against
+    /// tile-padded activations `[a | 1 | 0…]` per batch row — no
+    /// per-cell gathers, no edge branches, no separate bias add (the
+    /// implicit bias column rides in the padding). Output rows are
+    /// computed transposed (`n × B`) and split across pool tasks exactly
+    /// like [`Layer::forward_hashed_scratch`]. The zero tail of the
+    /// padded activations makes the out-of-range columns of edge tiles
+    /// numerically inert.
+    pub fn forward_hashed_tiled(&self, a: &Matrix) -> Matrix {
+        let (m, n) = (self.m, self.n);
+        let plan = self.tile_plan_ref();
+        let params: &[f32] = &self.params;
+        let rows_b = a.rows;
+        if rows_b == 0 {
+            return Matrix::zeros(0, n);
+        }
+        let mp = plan.padded_width();
+        let mut a_pad = Matrix::zeros(rows_b, mp);
+        for b in 0..rows_b {
+            a_pad.row_mut(b)[..m].copy_from_slice(a.row(b));
+            a_pad.row_mut(b)[m] = 1.0;
+        }
+        let mut zt = Matrix::zeros(n, rows_b);
+        let threads = par_threads(n * mp * (rows_b + 1), n);
+        let rows_per = n.div_ceil(threads);
+        crate::rt::pool::run_parts(
+            zt.data.chunks_mut(rows_per * rows_b).collect(),
+            |blk, chunk: &mut [f32]| {
+                let i0 = blk * rows_per;
+                let mut scratch = vec![0.0f32; mp];
+                for (r, zrow) in chunk.chunks_mut(rows_b).enumerate() {
+                    plan.decompress_padded_row_into(i0 + r, params, &mut scratch);
+                    for (b, zv) in zrow.iter_mut().enumerate() {
+                        *zv = simd::dot8(a_pad.row(b), &scratch);
                     }
                 }
             },
@@ -523,6 +610,7 @@ impl Layer {
                 delta.matmul_par(&w, threads)
             }
             LayerKind::Hashed { .. } => self.backward_hashed(a, delta, grad, opts),
+            LayerKind::HashedTile { .. } => self.backward_tiled(a, delta, grad, opts),
             LayerKind::Masked { k } => {
                 let m1 = self.m + 1;
                 let threads = opts.par_threads(2 * delta.rows * self.n * m1, self.n);
@@ -621,6 +709,74 @@ impl Layer {
                     let i0 = (t * blocks_per + bi) * block_rows;
                     let i1 = (i0 + block_rows).min(n);
                     hashed_da_rows(plan, params, delta, i0..i1, m, pda, &mut vrow);
+                }
+            },
+        );
+        let dparts: Vec<&[f32]> = partials.iter().map(Vec::as_slice).collect();
+        reduce_block_partials(&mut da.data, &dparts, threads);
+        da
+    }
+
+    /// Tiled backward (Eqs. 11 & 12 at tile granularity):
+    ///
+    /// * **Eq. 12 (`∂w`)** — `S = δᵀ·[a|1]` via the bit-identical
+    ///   row-parallel [`Matrix::matmul_tn_aug`], then a fixed-order tile
+    ///   walk adding `ξ_t·S_{ij}` into each tile's **contiguous** run of
+    ///   `grad` ([`tiled_weight_grad`]) — sequential writes, no per-cell
+    ///   scatter. Runs *overlap* across tiles (unlike the per-cell
+    ///   inverse plan's disjoint bucket ranges), so the parallel path
+    ///   accumulates tile-row-block partials and reduces them in
+    ///   ascending block order; in ordered mode the block partition is
+    ///   fixed by `block_rows`, making `∂w` thread-count-invariant.
+    /// * **Eq. 11 (`∂a`)** — same block/partial/ordered-reduction
+    ///   structure as [`Layer::backward_hashed`]'s `∂a` pass, with
+    ///   padded tile-run decompression and [`simd::axpy8`] row
+    ///   accumulation ([`tiled_da_rows`]).
+    fn backward_tiled(
+        &self,
+        a: &Matrix,
+        delta: &Matrix,
+        grad: &mut [f32],
+        opts: &TrainOptions,
+    ) -> Matrix {
+        let (m1, n, m) = (self.m + 1, self.n, self.m);
+        let plan = self.tile_plan_ref();
+        let params: &[f32] = &self.params;
+        let rows_b = a.rows;
+        let mut da = Matrix::zeros(rows_b, m);
+        if rows_b == 0 {
+            return da;
+        }
+        let threads = opts.par_threads(n * m1 * (rows_b + 2), n);
+
+        // Eq. 12 over tile runs
+        let s = delta.matmul_tn_aug(a, threads);
+        tiled_weight_grad(plan, &s, grad, threads, opts);
+
+        // Eq. 11: da = δ·V over padded decompressed rows
+        if threads == 1 && !opts.deterministic {
+            let mut vrow = vec![0.0f32; plan.padded_width()];
+            tiled_da_rows(plan, params, delta, 0..n, m, &mut da.data, &mut vrow);
+            return da;
+        }
+        let block_rows = if opts.deterministic {
+            opts.resolved_block_rows().min(n)
+        } else {
+            n.div_ceil(threads)
+        };
+        let n_blocks = n.div_ceil(block_rows);
+        let threads = threads.min(n_blocks);
+        let mut partials: Vec<Vec<f32>> =
+            (0..n_blocks).map(|_| vec![0.0f32; rows_b * m]).collect();
+        let blocks_per = n_blocks.div_ceil(threads);
+        crate::rt::pool::run_parts(
+            partials.chunks_mut(blocks_per).collect(),
+            |t, pchunk: &mut [Vec<f32>]| {
+                let mut vrow = vec![0.0f32; plan.padded_width()];
+                for (bi, pda) in pchunk.iter_mut().enumerate() {
+                    let i0 = (t * blocks_per + bi) * block_rows;
+                    let i1 = (i0 + block_rows).min(n);
+                    tiled_da_rows(plan, params, delta, i0..i1, m, pda, &mut vrow);
                 }
             },
         );
@@ -739,6 +895,115 @@ fn inverse_weight_grad(plan: &HashPlan, s: &Matrix, grad: &mut [f32], threads: u
             *g += acc;
         }
     });
+}
+
+/// Eq. 11 contribution of virtual rows `rows` for a tiled layer: per
+/// row, decompress once at padded width (contiguous tile runs) and
+/// accumulate `da_b += δ_bi · V_i[..m]` via [`simd::axpy8`] for every
+/// batch row with a nonzero delta. The twin of [`hashed_da_rows`].
+fn tiled_da_rows(
+    plan: &TilePlan,
+    params: &[f32],
+    delta: &Matrix,
+    rows: std::ops::Range<usize>,
+    m: usize,
+    da: &mut [f32],
+    vrow: &mut [f32],
+) {
+    let rows_b = delta.rows;
+    for i in rows {
+        if (0..rows_b).all(|b| delta.at(b, i) == 0.0) {
+            continue;
+        }
+        plan.decompress_padded_row_into(i, params, vrow);
+        for b in 0..rows_b {
+            let d = delta.at(b, i);
+            if d == 0.0 {
+                continue;
+            }
+            simd::axpy8(&mut da[b * m..(b + 1) * m], &vrow[..m], d);
+        }
+    }
+}
+
+/// Eq. 12 contribution of tile-rows `trs`: for every tile, add
+/// `ξ_t·S_{ij}` into the tile's contiguous run of `grad` — sequential
+/// writes into a `th·tw` span per tile, walking tiles in fixed
+/// row-major grid order (which pins the summation order for a given
+/// block partition).
+fn tiled_grad_tile_rows(
+    plan: &TilePlan,
+    s: &Matrix,
+    trs: std::ops::Range<usize>,
+    grad: &mut [f32],
+) {
+    let (th, tw) = plan.tile;
+    let (_, tiles_c) = plan.tiles();
+    let (n, m1) = (plan.n, plan.m1);
+    for tr in trs {
+        let i0 = tr * th;
+        let i1 = (i0 + th).min(n);
+        for tc in 0..tiles_c {
+            let e = plan.tile_entry(tr, tc);
+            let base = TilePlan::base(e);
+            let j0 = tc * tw;
+            let j1 = (j0 + tw).min(m1);
+            for i in i0..i1 {
+                let run = base + (i - i0) * tw;
+                let srow = &s.data[i * m1 + j0..i * m1 + j1];
+                for (o, &sv) in srow.iter().enumerate() {
+                    grad[run + o] += HashPlan::apply_sign(e, sv);
+                }
+            }
+        }
+    }
+}
+
+/// Eq. 12 for a tiled layer: `∂w[base_t + off] += ξ_t · S_{ij}` over
+/// every tile, where `S = δᵀ·[a|1]`. Tile runs **overlap** across
+/// tiles, so (unlike [`inverse_weight_grad`]'s disjoint bucket ranges)
+/// the parallel path cannot split `grad` itself: tile-rows are split
+/// into blocks, each block accumulates into a private `k`-length
+/// partial, and partials reduce in ascending block order
+/// ([`reduce_block_partials`]). In ordered mode the block partition is
+/// fixed by `block_rows` (converted to tile-rows), so `∂w` is
+/// bit-identical at any thread count; in fast mode there is one block
+/// per lane and `threads = 1` scatters straight into `grad`.
+fn tiled_weight_grad(
+    plan: &TilePlan,
+    s: &Matrix,
+    grad: &mut [f32],
+    threads: usize,
+    opts: &TrainOptions,
+) {
+    debug_assert_eq!(grad.len(), plan.k);
+    debug_assert_eq!(s.data.len(), plan.n * plan.m1);
+    let (tiles_r, _) = plan.tiles();
+    if threads == 1 && !opts.deterministic {
+        tiled_grad_tile_rows(plan, s, 0..tiles_r, grad);
+        return;
+    }
+    let block_tr = if opts.deterministic {
+        opts.resolved_block_rows().div_ceil(plan.tile.0).max(1).min(tiles_r)
+    } else {
+        tiles_r.div_ceil(threads)
+    };
+    let n_blocks = tiles_r.div_ceil(block_tr);
+    let threads = threads.min(n_blocks).max(1);
+    let mut partials: Vec<Vec<f32>> = (0..n_blocks).map(|_| vec![0.0f32; plan.k]).collect();
+    let blocks_per = n_blocks.div_ceil(threads);
+    crate::rt::pool::run_parts(
+        partials.chunks_mut(blocks_per).collect(),
+        |t, pchunk: &mut [Vec<f32>]| {
+            for (bi, pg) in pchunk.iter_mut().enumerate() {
+                let t0 = (t * blocks_per + bi) * block_tr;
+                let t1 = (t0 + block_tr).min(tiles_r);
+                tiled_grad_tile_rows(plan, s, t0..t1, pg);
+            }
+        },
+    );
+    let parts: Vec<&[f32]> = partials.iter().map(Vec::as_slice).collect();
+    reduce_block_partials(grad, &parts, threads);
 }
 
 /// `dst[j] += Σ_blk parts[blk][j]`, always summing blocks in ascending
@@ -915,6 +1180,105 @@ mod tests {
     #[test]
     fn gradients_masked() {
         finite_diff_check(mk(LayerKind::Masked { k: 20 }, 7, 5));
+    }
+
+    #[test]
+    fn gradients_tiled() {
+        finite_diff_check(mk(LayerKind::HashedTile { k: 11, tile: (1, 8) }, 7, 5));
+        finite_diff_check(mk(LayerKind::HashedTile { k: 70, tile: (8, 8) }, 7, 5));
+    }
+
+    #[test]
+    fn tiled_forward_matches_virtual_matrix() {
+        // odd dims → partial edge tiles on both axes
+        for (tile, m, n) in [((1usize, 8usize), 10usize, 6usize), ((8, 8), 13, 9), ((2, 4), 7, 5)] {
+            let l = mk(LayerKind::HashedTile { k: 90, tile }, m, n);
+            let mut rng = Pcg32::new(1, tile.0 as u64);
+            for batch in [1usize, 4] {
+                let a = rand_matrix(batch, m, &mut rng);
+                let z_fast = l.forward(&a);
+                let z_ref = a.augment_ones().matmul_nt(&l.virtual_matrix());
+                for (x, y) in z_fast.data.iter().zip(&z_ref.data) {
+                    assert!((x - y).abs() < 1e-4 * (1.0 + y.abs()), "{tile:?} b={batch}: {x} vs {y}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tiled_input_gradient_matches_fd() {
+        let layer = mk(LayerKind::HashedTile { k: 16, tile: (1, 8) }, 6, 4);
+        let mut rng = Pcg32::new(3, 3);
+        let mut a = rand_matrix(2, 6, &mut rng);
+        let co = rand_matrix(2, 4, &mut rng);
+        let mut grad = vec![0.0f32; layer.params.len()];
+        let da = layer.backward(&a.clone(), &co, &mut grad, &TrainOptions::default());
+        let eps = 1e-2f32;
+        for probe in [(0usize, 0usize), (1, 3), (0, 5)] {
+            let orig = a.at(probe.0, probe.1);
+            *a.at_mut(probe.0, probe.1) = orig + eps;
+            let zp: f32 = layer.forward(&a).data.iter().zip(&co.data).map(|(z, c)| z * c).sum();
+            *a.at_mut(probe.0, probe.1) = orig - eps;
+            let zm: f32 = layer.forward(&a).data.iter().zip(&co.data).map(|(z, c)| z * c).sum();
+            *a.at_mut(probe.0, probe.1) = orig;
+            let fd = (zp - zm) / (2.0 * eps);
+            let ad = da.at(probe.0, probe.1);
+            assert!((fd - ad).abs() < 2e-2 * (1.0 + fd.abs()), "{fd} vs {ad}");
+        }
+    }
+
+    #[test]
+    fn tiled_backward_modes_agree() {
+        let l = mk(LayerKind::HashedTile { k: 80, tile: (8, 8) }, 12, 30);
+        let mut rng = Pcg32::new(11, 11);
+        let a = rand_matrix(5, 12, &mut rng);
+        let co = rand_matrix(5, 30, &mut rng);
+        let run = |opts: &TrainOptions| {
+            let mut g = vec![0.0f32; l.params.len()];
+            let da = l.backward(&a, &co, &mut g, opts);
+            (g, da)
+        };
+        // fast mode: threaded within float tolerance of serial
+        let (g1, da1) = run(&TrainOptions::default());
+        let (g4, da4) = run(&TrainOptions::with_threads(4));
+        for (x, y) in g1.iter().zip(&g4).chain(da1.data.iter().zip(&da4.data)) {
+            assert!((x - y).abs() < 1e-4 * (1.0 + y.abs()), "{x} vs {y}");
+        }
+        // ordered mode: ∂w and ∂a bit-identical across thread counts
+        let ordered = |t: usize| TrainOptions { threads: t, block_rows: 8, deterministic: true };
+        let (go1, dao1) = run(&ordered(1));
+        for t in [2usize, 4, 8] {
+            let (got, daot) = run(&ordered(t));
+            assert_eq!(
+                go1.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                got.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "∂w t{t}"
+            );
+            assert_eq!(
+                dao1.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                daot.data.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "∂a t{t}"
+            );
+        }
+    }
+
+    #[test]
+    fn tiled_weight_sharing_shares_runs() {
+        // k = 8 with 1×8 tiles → at most 8 distinct |values| in V
+        let l = mk(LayerKind::HashedTile { k: 8, tile: (1, 8) }, 8, 8);
+        let v = l.virtual_matrix();
+        let mut mags: Vec<u32> = v.data.iter().map(|x| x.abs().to_bits()).collect();
+        mags.sort_unstable();
+        mags.dedup();
+        assert!(mags.len() <= 8, "found {} distinct magnitudes", mags.len());
+    }
+
+    #[test]
+    fn tile_plan_is_shared_across_clones() {
+        let l = mk(LayerKind::HashedTile { k: 10, tile: (1, 8) }, 6, 4);
+        let l2 = l.clone();
+        assert!(Arc::ptr_eq(l.tile_plan().unwrap(), l2.tile_plan().unwrap()));
+        assert!(l.plan().is_none(), "tiled layers carry no per-cell plan");
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! Host-side f32 tensors: a small row-major matrix type with the ops the
 //! native engine and the coordinator need (no ndarray offline).
 
+pub mod simd;
+
 /// Dot product over 4 independent accumulators: breaks the FP-add
 /// dependency chain that serializes a single-accumulator loop, so the
 /// CPU can keep several fused multiply-adds in flight. Shared by

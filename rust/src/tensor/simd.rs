@@ -1,0 +1,265 @@
+//! Explicit 8-lane SIMD kernels with a **bit-identical** scalar twin.
+//!
+//! The hashed hot loops (scratch-row forward, tiled forward/backward,
+//! Eq. 11's input gradient) reduce to two primitives over contiguous
+//! f32 slices: a dot product and an `axpy` (`dst += c · src`). This
+//! module provides both with
+//!
+//! * a hand-written AVX2 path (`std::arch` intrinsics, runtime-detected
+//!   via `is_x86_feature_detected!` — no compile-time `-C target-cpu`
+//!   requirement and **no new crates**), and
+//! * a scalar fallback that performs the *same* floating-point
+//!   operations in the *same* order, so the two paths return
+//!   bit-identical results on every input.
+//!
+//! Bit-identity is a hard requirement, not a nicety: ordered training
+//! (`TrainOptions::deterministic`) promises thread-count-invariant
+//! results, and that promise must extend across machines with and
+//! without AVX2. Two consequences shape the code:
+//!
+//! 1. **No FMA.** `_mm256_fmadd_ps` fuses the multiply-add with a single
+//!    rounding, which scalar `a * b + c` (two roundings) cannot
+//!    reproduce. The vector path therefore uses explicit
+//!    `_mm256_add_ps(_mm256_mul_ps(..))` — same two roundings as the
+//!    scalar twin.
+//! 2. **Lane-structured accumulation.** [`dot8`] keeps 8 independent
+//!    accumulators (lane `l` sums `a[8c+l]·b[8c+l]`) and combines them
+//!    with a fixed reduction tree `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`
+//!    plus a serial tail. The scalar twin mirrors that structure
+//!    exactly instead of summing left-to-right — which is also why it
+//!    is *fast* scalar code: 8 accumulators break the FP-add dependency
+//!    chain just like `dot_unrolled`'s 4 do.
+
+/// SIMD width in f32 lanes (AVX2 = 256 bits = 8 × f32). Tile widths in
+/// `hash::TilePlan` are chosen as multiples of this.
+pub const LANES: usize = 8;
+
+/// Runtime AVX2 capability, detected once and cached.
+#[inline]
+pub fn avx2() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        use std::sync::atomic::{AtomicU8, Ordering};
+        // 0 = unknown, 1 = absent, 2 = present.
+        static STATE: AtomicU8 = AtomicU8::new(0);
+        match STATE.load(Ordering::Relaxed) {
+            2 => true,
+            1 => false,
+            _ => {
+                let yes = std::arch::is_x86_feature_detected!("avx2");
+                STATE.store(if yes { 2 } else { 1 }, Ordering::Relaxed);
+                yes
+            }
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Combine 8 lane accumulators + serial tail with the fixed reduction
+/// tree shared by both dispatch paths.
+#[inline(always)]
+fn combine(lanes: [f32; LANES], tail: f32) -> f32 {
+    ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+        + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]))
+        + tail
+}
+
+/// 8-lane dot product, scalar path. Lane `l` accumulates
+/// `Σ_c a[8c+l]·b[8c+l]`; lanes combine via [`combine`]. Bit-identical
+/// to the AVX2 path by construction.
+pub fn dot8_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let mut lanes = [0.0f32; LANES];
+    let chunks = n / LANES;
+    for c in 0..chunks {
+        let base = c * LANES;
+        for (l, acc) in lanes.iter_mut().enumerate() {
+            *acc += a[base + l] * b[base + l];
+        }
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * LANES..n {
+        tail += a[i] * b[i];
+    }
+    combine(lanes, tail)
+}
+
+/// 8-lane dot product, AVX2 path. One 256-bit accumulator holds the 8
+/// lanes; multiply and add are separate instructions (two roundings, no
+/// FMA) so each lane performs exactly the scalar twin's operation
+/// sequence.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot8_avx2(a: &[f32], b: &[f32]) -> f32 {
+    use std::arch::x86_64::*;
+    let n = a.len().min(b.len());
+    let chunks = n / LANES;
+    let mut acc = _mm256_setzero_ps();
+    for c in 0..chunks {
+        let pa = _mm256_loadu_ps(a.as_ptr().add(c * LANES));
+        let pb = _mm256_loadu_ps(b.as_ptr().add(c * LANES));
+        acc = _mm256_add_ps(acc, _mm256_mul_ps(pa, pb));
+    }
+    let mut lanes = [0.0f32; LANES];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), acc);
+    let mut tail = 0.0f32;
+    for i in chunks * LANES..n {
+        tail += a[i] * b[i];
+    }
+    combine(lanes, tail)
+}
+
+/// Dot product over the common prefix of `a` and `b`, dispatched to
+/// AVX2 when available, with a bit-identical scalar fallback.
+#[inline]
+pub fn dot8(a: &[f32], b: &[f32]) -> f32 {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            // SAFETY: guarded by runtime AVX2 detection.
+            return unsafe { dot8_avx2(a, b) };
+        }
+    }
+    dot8_scalar(a, b)
+}
+
+/// `dst[i] += c · src[i]` over the common prefix, scalar path. Purely
+/// element-wise (no cross-lane reduction), so SIMD/scalar bit-identity
+/// only needs matching per-element rounding: mul then add.
+pub fn axpy8_scalar(dst: &mut [f32], src: &[f32], c: f32) {
+    let n = dst.len().min(src.len());
+    for i in 0..n {
+        dst[i] += c * src[i];
+    }
+}
+
+/// `dst[i] += c · src[i]`, AVX2 path (broadcast `c`, mul then add — no
+/// FMA, same two roundings per element as the scalar twin).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy8_avx2(dst: &mut [f32], src: &[f32], c: f32) {
+    use std::arch::x86_64::*;
+    let n = dst.len().min(src.len());
+    let chunks = n / LANES;
+    let cv = _mm256_set1_ps(c);
+    for ch in 0..chunks {
+        let base = ch * LANES;
+        let d = _mm256_loadu_ps(dst.as_ptr().add(base));
+        let s = _mm256_loadu_ps(src.as_ptr().add(base));
+        _mm256_storeu_ps(dst.as_mut_ptr().add(base), _mm256_add_ps(d, _mm256_mul_ps(cv, s)));
+    }
+    for i in chunks * LANES..n {
+        dst[i] += c * src[i];
+    }
+}
+
+/// `dst[i] += c · src[i]` over the common prefix, dispatched to AVX2
+/// when available, with a bit-identical scalar fallback.
+#[inline]
+pub fn axpy8(dst: &mut [f32], src: &[f32], c: f32) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx2() {
+            // SAFETY: guarded by runtime AVX2 detection.
+            return unsafe { axpy8_avx2(dst, src, c) };
+        }
+    }
+    axpy8_scalar(dst, src, c)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic pseudo-random f32s spanning magnitudes, signs, and
+    /// exact zeros — the inputs most likely to expose reassociation.
+    fn noise(len: usize, seed: u32) -> Vec<f32> {
+        let mut x = seed.wrapping_mul(2654435761).wrapping_add(1);
+        (0..len)
+            .map(|i| {
+                x ^= x << 13;
+                x ^= x >> 17;
+                x ^= x << 5;
+                if i % 11 == 0 {
+                    0.0
+                } else {
+                    let mag = ((x >> 8) as f32 / (1u32 << 24) as f32) - 0.5;
+                    mag * (1.0 + (i % 7) as f32 * 100.0)
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn dot8_paths_bit_identical_across_lengths() {
+        for len in 0..40 {
+            let a = noise(len, 1 + len as u32);
+            let b = noise(len, 1000 + len as u32);
+            let fast = dot8(&a, &b);
+            let slow = dot8_scalar(&a, &b);
+            assert_eq!(fast.to_bits(), slow.to_bits(), "len {len}: {fast} vs {slow}");
+        }
+        // Long vectors where accumulator state diverges if order differs.
+        for len in [256usize, 1000, 4096 + 5] {
+            let a = noise(len, 7);
+            let b = noise(len, 9);
+            assert_eq!(dot8(&a, &b).to_bits(), dot8_scalar(&a, &b).to_bits(), "len {len}");
+        }
+    }
+
+    #[test]
+    fn axpy8_paths_bit_identical_across_lengths() {
+        for len in [0usize, 1, 7, 8, 9, 15, 16, 17, 63, 100, 1000] {
+            let src = noise(len, 3 + len as u32);
+            let mut fast = noise(len, 5 + len as u32);
+            let mut slow = fast.clone();
+            axpy8(&mut fast, &src, -1.75);
+            axpy8_scalar(&mut slow, &src, -1.75);
+            let same = fast.iter().zip(&slow).all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(same, "len {len}");
+        }
+    }
+
+    #[test]
+    fn dot8_matches_reference_within_tolerance() {
+        // Against a plain f64 reference: the lane-structured sum is a
+        // reassociation of the same products, so it should be close.
+        let a = noise(333, 11);
+        let b = noise(333, 13);
+        let want: f64 = a.iter().zip(&b).map(|(&x, &y)| x as f64 * y as f64).sum();
+        let got = dot8(&a, &b) as f64;
+        assert!((got - want).abs() <= 1e-3 * (1.0 + want.abs()), "{got} vs {want}");
+    }
+
+    #[test]
+    fn dot8_scalar_lane_structure_is_as_documented() {
+        // 16 elements, lane l of chunk c contributes a[8c+l]*b[8c+l]:
+        // hand-evaluate the documented reduction tree.
+        let a: Vec<f32> = (0..19).map(|i| (i as f32 + 1.0) * 0.5).collect();
+        let b: Vec<f32> = (0..19).map(|i| (i as f32 - 9.0) * 0.25).collect();
+        let mut lanes = [0.0f32; LANES];
+        for c in 0..2 {
+            for l in 0..LANES {
+                lanes[l] += a[c * LANES + l] * b[c * LANES + l];
+            }
+        }
+        let mut tail = 0.0f32;
+        for i in 16..19 {
+            tail += a[i] * b[i];
+        }
+        let want = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+            + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]))
+            + tail;
+        assert_eq!(dot8_scalar(&a, &b).to_bits(), want.to_bits());
+    }
+
+    #[test]
+    fn axpy8_accumulates_in_place() {
+        let mut dst = vec![1.0f32, 2.0, 3.0];
+        axpy8(&mut dst, &[10.0, 20.0, 30.0], 0.5);
+        assert_eq!(dst, vec![6.0, 12.0, 18.0]);
+    }
+}

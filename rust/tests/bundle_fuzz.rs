@@ -162,6 +162,40 @@ fn bit_flips_with_repaired_checksum_never_panic() {
     }
 }
 
+/// Forward-compat: a structurally valid bundle whose spec names a
+/// method this build doesn't know (e.g. written by a newer build) must
+/// fail with the typed [`ModelError::UnknownMethod`] naming the
+/// offending string — not a panic, not an untyped spec error. Every
+/// corpus entry is patched in place: the spec JSON's `"method"` value
+/// gets its first letter bumped (`hashnet` → `iashnet`, `nn` → `on`,
+/// …), the checksum is repaired so the deeper spec layer is what
+/// rejects it.
+#[test]
+fn unknown_method_strings_fail_with_typed_unknown_method() {
+    let needle = b"\"method\":\"";
+    for (name, bytes) in corpus() {
+        // spec JSON lives at [12, 12 + spec_len) in both v1 and v2
+        let spec_end = 12 + spec_len(&bytes);
+        let at = bytes[12..spec_end]
+            .windows(needle.len())
+            .position(|w| w == needle)
+            .unwrap_or_else(|| panic!("{name}: spec JSON must carry a method field"))
+            + 12
+            + needle.len();
+        let end = at + bytes[at..spec_end].iter().position(|&b| b == b'"').unwrap();
+        let mut mutant = bytes.clone();
+        mutant[at] += 1; // same-length, guaranteed-unknown method name
+        fix_checksum(&mut mutant);
+        let want = std::str::from_utf8(&mutant[at..end]).unwrap().to_string();
+        match parse_mutant(&name, &mutant) {
+            Err(ModelError::UnknownMethod(s)) => {
+                assert_eq!(s, want, "{name}: error must name the unknown method")
+            }
+            other => panic!("{name}: expected UnknownMethod({want:?}), got {other:?}"),
+        }
+    }
+}
+
 #[test]
 fn oversize_length_fields_error_without_allocating() {
     for (name, bytes) in corpus() {

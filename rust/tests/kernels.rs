@@ -5,12 +5,17 @@
 //! including the degenerate corners `k = 1`, `k ≥ n·(m+1)` and batch 1;
 //! the inverse plan itself must be an exact permutation of the forward
 //! plan; plus a finite-difference check on the batch-amortized hashed
-//! backward. These tests need no artifacts — they run on a fresh
-//! checkout.
+//! backward. The tiled (`hashed_tile`) kernels are held to a stronger
+//! bar: forward and backward must **bit-agree** with a per-cell
+//! materialization of the virtual matrix driven through the
+//! lane-structured scalar SIMD twins, across tile shapes × odd virtual
+//! dims — which simultaneously proves the avx2 and scalar dispatch
+//! paths identical. These tests need no artifacts — they run on a
+//! fresh checkout.
 
-use hashednets::hash::{bucket_sign, layer_seeds, HashPlan, DEFAULT_SEED_BASE};
+use hashednets::hash::{bucket_sign, layer_seeds, HashPlan, TilePlan, DEFAULT_SEED_BASE};
 use hashednets::nn::{Layer, LayerKind, TrainOptions};
-use hashednets::tensor::Matrix;
+use hashednets::tensor::{simd, Matrix};
 use hashednets::util::rng::Pcg32;
 
 fn hashed_layer(m: usize, n: usize, k: usize, seed: u64) -> Layer {
@@ -162,6 +167,148 @@ fn hashed_backward_matches_finite_difference() {
         let da_ref = co.matmul(&v).drop_last_col();
         for (x, y) in da.data.iter().zip(&da_ref.data) {
             assert!((x - y).abs() < 1e-4 * (1.0 + y.abs()), "da {x} vs {y}");
+        }
+    }
+}
+
+fn tiled_layer(m: usize, n: usize, k: usize, tile: (usize, usize), seed: u64) -> Layer {
+    let mut layer = Layer::new(m, n, LayerKind::HashedTile { k, tile }, 0, DEFAULT_SEED_BASE);
+    let mut rng = Pcg32::new(seed, seed ^ 0x715E);
+    layer.init(&mut rng);
+    layer
+}
+
+/// Materialize one tile-padded virtual row straight from the documented
+/// cell mapping `V[i][j] = ξ(tr,tc) · w[base + (i mod th)·tw + (j mod tw)]`
+/// — per cell, independent of `TilePlan::decompress_padded_row_into`'s
+/// run-copy implementation.
+fn materialized_padded_row(plan: &TilePlan, params: &[f32], i: usize) -> Vec<f32> {
+    let (th, tw) = plan.tile;
+    let mut v = vec![0.0f32; plan.padded_width()];
+    let tr = i / th;
+    for (j, out) in v.iter_mut().enumerate() {
+        let e = plan.tile_entry(tr, j / tw);
+        *out = HashPlan::apply_sign(e, params[TilePlan::base(e) + (i % th) * tw + (j % tw)]);
+    }
+    v
+}
+
+/// Tile-padded activations exactly as the tiled kernel builds them:
+/// `[a | 1 | 0…]` at the plan's padded width.
+fn padded_activations(a: &Matrix, padded_width: usize) -> Vec<Vec<f32>> {
+    (0..a.rows)
+        .map(|b| {
+            let mut row = vec![0.0f32; padded_width];
+            row[..a.cols].copy_from_slice(a.row(b));
+            row[a.cols] = 1.0;
+            row
+        })
+        .collect()
+}
+
+/// Tile shapes × odd virtual dims (partial edge tiles on both axes) ×
+/// batch sizes used by every tiled bit-agreement test below.
+const TILED_SHAPES: &[((usize, usize), usize, usize, usize, usize)] = &[
+    ((1, 8), 7, 5, 11, 1),
+    ((1, 8), 13, 9, 40, 3),
+    ((8, 8), 13, 9, 70, 4),
+    ((8, 8), 9, 17, 64, 2),
+    ((2, 4), 11, 7, 23, 5),
+];
+
+/// The tiled forward must reproduce, bit for bit, a per-cell
+/// materialization of each padded virtual row driven through the
+/// lane-structured scalar dot — on avx2 hardware this simultaneously
+/// proves the vector dispatch path bit-identical to the scalar twin.
+#[test]
+fn tiled_forward_bit_agrees_with_per_cell_materialization() {
+    for &(tile, m, n, k, batch) in TILED_SHAPES {
+        let layer = tiled_layer(m, n, k, tile, (m * 37 + n * 5 + k) as u64);
+        let plan = layer.tile_plan().expect("tiled layer has a tile plan");
+        let mut rng = Pcg32::new(batch as u64 + 2, k as u64);
+        let a = Matrix::from_fn(batch, m, |_, _| rng.normal());
+        let a_pad = padded_activations(&a, plan.padded_width());
+        let got = layer.forward_hashed_tiled(&a);
+        let via_dispatch = layer.forward(&a);
+        for i in 0..n {
+            let vrow = materialized_padded_row(plan, &layer.params, i);
+            for (b, pad_row) in a_pad.iter().enumerate() {
+                let want = simd::dot8_scalar(pad_row, &vrow);
+                // dispatched and scalar dots agree exactly...
+                assert_eq!(
+                    simd::dot8(pad_row, &vrow).to_bits(),
+                    want.to_bits(),
+                    "dot8 dispatch diverges from scalar at tile {tile:?} row {i}"
+                );
+                // ...and so does the whole kernel
+                assert_eq!(
+                    got.at(b, i).to_bits(),
+                    want.to_bits(),
+                    "tile {tile:?} (m,n,k,b)=({m},{n},{k},{batch}) z[{b}][{i}]"
+                );
+                assert_eq!(via_dispatch.at(b, i).to_bits(), want.to_bits());
+            }
+        }
+    }
+}
+
+/// Single-threaded tiled backward must bit-agree with a per-cell
+/// reference: ∂w from the same Eq. 12 pre-reduction `S = δᵀ·[a|1]`
+/// scattered in the kernel's fixed row-major tile walk, ∂a from serial
+/// scalar-twin axpy rows over per-cell materialized virtual rows.
+#[test]
+fn tiled_backward_bit_agrees_with_per_cell_reference() {
+    for &(tile, m, n, k, batch) in TILED_SHAPES {
+        let layer = tiled_layer(m, n, k, tile, (m * 13 + n + k * 3) as u64);
+        let plan = layer.tile_plan().expect("tiled layer has a tile plan");
+        let mut rng = Pcg32::new(batch as u64 + 9, m as u64);
+        let a = Matrix::from_fn(batch, m, |_, _| rng.normal());
+        let delta = Matrix::from_fn(batch, n, |_, _| rng.normal());
+        let mut grad = vec![0.0f32; k];
+        let da = layer.backward(&a, &delta, &mut grad, &TrainOptions::default());
+
+        let (th, tw) = tile;
+        let m1 = m + 1;
+        let (tiles_r, tiles_c) = plan.tiles();
+        let s = delta.matmul_tn_aug(&a, 1);
+        let mut grad_ref = vec![0.0f32; k];
+        for tr in 0..tiles_r {
+            for tc in 0..tiles_c {
+                let e = plan.tile_entry(tr, tc);
+                let base = TilePlan::base(e);
+                let (j0, j1) = (tc * tw, (tc * tw + tw).min(m1));
+                for i in tr * th..(tr * th + th).min(n) {
+                    let run = base + (i - tr * th) * tw;
+                    for (o, j) in (j0..j1).enumerate() {
+                        grad_ref[run + o] += HashPlan::apply_sign(e, s.at(i, j));
+                    }
+                }
+            }
+        }
+        for (p, (g, r)) in grad.iter().zip(&grad_ref).enumerate() {
+            assert_eq!(
+                g.to_bits(),
+                r.to_bits(),
+                "tile {tile:?} (m,n,k,b)=({m},{n},{k},{batch}) grad[{p}]: {g} vs {r}"
+            );
+        }
+
+        let mut da_ref = Matrix::zeros(batch, m);
+        for i in 0..n {
+            let vrow = materialized_padded_row(plan, &layer.params, i);
+            for b in 0..batch {
+                let d = delta.at(b, i);
+                if d != 0.0 {
+                    simd::axpy8_scalar(da_ref.row_mut(b), &vrow[..m], d);
+                }
+            }
+        }
+        for (idx, (g, r)) in da.data.iter().zip(&da_ref.data).enumerate() {
+            assert_eq!(
+                g.to_bits(),
+                r.to_bits(),
+                "tile {tile:?} (m,n,k,b)=({m},{n},{k},{batch}) da[{idx}]: {g} vs {r}"
+            );
         }
     }
 }

@@ -154,6 +154,79 @@ fn ordered_mode_bit_identity_holds_on_pool_exec() {
     assert_bits("pool fast-mode grad", &gfp, &gf1);
 }
 
+/// The tiled (`hashed_tile`) backward in ordered mode: both ∂w and ∂a
+/// bit-identical across thread counts. Unlike the per-cell path (whose
+/// inverse-plan Eq. 12 is invariant even in fast mode), tile runs
+/// overlap arbitrarily in the stored vector, so ∂w invariance is an
+/// ordered-mode contract — exactly what this asserts.
+#[test]
+fn tiled_ordered_mode_bit_identical_across_thread_counts() {
+    for &(tile, k) in &[((1usize, 8usize), 200usize), ((8, 8), 120)] {
+        for batch in [1usize, 50] {
+            let mut layer = Layer::new(
+                30,
+                40,
+                LayerKind::HashedTile { k, tile },
+                0,
+                hashednets::hash::DEFAULT_SEED_BASE,
+            );
+            layer.init(&mut Pcg32::new((k + batch) as u64, 0x717E));
+            let mut rng = Pcg32::new(batch as u64 + 5, k as u64);
+            let a = Matrix::from_fn(batch, 30, |_, _| rng.normal());
+            let delta = Matrix::from_fn(batch, 40, |_, _| rng.normal());
+            let ordered =
+                |t: usize| TrainOptions { threads: t, block_rows: 8, deterministic: true };
+            let (g1, da1) = grads(&layer, &a, &delta, &ordered(1));
+            for threads in [2usize, 4, 8] {
+                let (gt, dat) = grads(&layer, &a, &delta, &ordered(threads));
+                assert_bits(&format!("tiled{tile:?} grad b={batch} t={threads}"), &gt, &g1);
+                assert_bits(&format!("tiled{tile:?} da b={batch} t={threads}"), &dat.data, &da1.data);
+            }
+            // ordered is the same math as the serial fast path
+            let (gf, _) = grads(&layer, &a, &delta, &TrainOptions::default());
+            assert_close(&format!("tiled{tile:?} ordered-vs-serial b={batch}"), &g1, &gf);
+        }
+    }
+}
+
+/// Acceptance: `Method::HashedTile` round-trips spec → native train →
+/// bundle, with ordered-mode training byte-identical between
+/// `--threads 1` and `--threads 4`.
+#[test]
+fn tiled_ordered_run_native_bundles_are_byte_identical() {
+    let spec = ModelSpec::new(
+        "det_hashed_tile",
+        Method::HashedTile { tile: (1, 8) },
+        vec![784, 12, 10],
+        vec![400, 50],
+        hashednets::hash::DEFAULT_SEED_BASE,
+        50,
+    )
+    .unwrap();
+    let bundle_bytes = |threads: usize| -> Vec<u8> {
+        let cfg = TrainConfig {
+            artifact: spec.name.clone(),
+            dataset: Kind::Basic,
+            n_train: 300,
+            n_test: 200,
+            epochs: 2,
+            seed: 13,
+            train: TrainOptions { threads, block_rows: 4, deterministic: true },
+            ..Default::default()
+        };
+        let res = trainer::run_native(&spec, &cfg).unwrap();
+        assert_eq!(res.threads, threads);
+        assert_eq!(res.stored_params, 450);
+        res.bundle().unwrap().to_bytes()
+    };
+    let b1 = bundle_bytes(1);
+    let b4 = bundle_bytes(4);
+    assert_eq!(b1, b4, "ordered-mode tiled bundles must be byte-identical");
+    // and the bytes reload into the same spec
+    let reloaded = hashednets::model::ModelBundle::from_bytes(&b1).unwrap();
+    assert_eq!(reloaded.spec.method, Method::HashedTile { tile: (1, 8) });
+}
+
 #[test]
 fn empty_batch_backward_is_a_noop() {
     let layer = hashed_layer(10, 8, 12, 4);
